@@ -1,0 +1,103 @@
+//! Decentralized serving under load: open-loop Poisson arrivals, a
+//! multi-replica deployment behind the request router, continuous
+//! batching within each replica — the serving-system view of DSD
+//! (per-request speedup is the benches' job; this example shows fleet
+//! behavior: queueing, utilization, p95).
+//!
+//! Run: `cargo run --release --example decentralized_serving -- \
+//!         [--replicas 2] [--rate 40] [--requests 12] [--policy dsd]`
+
+use std::rc::Rc;
+
+use dsd::config::DeployConfig;
+use dsd::coordinator::{Coordinator, RoutePolicy, Router};
+use dsd::metrics::RunReport;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+use dsd::workload::{dataset, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_env(&["replicas", "rate", "requests", "policy", "nodes", "link_ms", "dataset"])?;
+    let replicas = args.usize_or("replicas", 2)?;
+    let rate = args.f64_or("rate", 40.0)?;
+    let n_requests = args.usize_or("requests", 12)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 15.0)?;
+    let ds = args.str_or("dataset", "gsm8k");
+    let policy = match args.str_or("policy", "dsd").as_str() {
+        "baseline" => Policy::Autoregressive,
+        "eagle3" => Policy::Eagle3,
+        _ => Policy::Dsd,
+    };
+
+    let engine = Rc::new(Engine::from_dir("artifacts")?);
+    let profile = dataset(&ds).ok_or_else(|| anyhow::anyhow!("unknown dataset {ds}"))?;
+    let vocab = engine.manifest().model.vocab;
+
+    // Open-loop workload: Poisson arrivals at `rate` req/s.
+    let mut gen = WorkloadGen::new(profile.clone(), vocab, 7);
+    let mut requests = gen.poisson(n_requests, rate);
+    for r in &mut requests {
+        r.max_new_tokens = 24;
+    }
+
+    // Router assigns requests to replicas by outstanding token budget.
+    let mut router = Router::new(replicas, RoutePolicy::LeastTokens);
+    let mut per_replica: Vec<Vec<dsd::workload::Request>> = vec![Vec::new(); replicas];
+    for r in &requests {
+        let w = (r.prompt.len() + r.max_new_tokens) as u64;
+        let target = router.route(w);
+        per_replica[target].push(r.clone());
+    }
+
+    println!(
+        "{} requests @ {:.0}/s over {} replicas x {} nodes (t1={}ms, {})",
+        n_requests, rate, replicas, nodes, link_ms, policy.name()
+    );
+
+    let mut table = Table::new(
+        "per-replica serving report",
+        &["replica", "requests", "tok/s", "p50 ms", "p95 ms", "comm %", "avg len"],
+    );
+    let mut reports: Vec<RunReport> = Vec::new();
+    for (ri, reqs) in per_replica.into_iter().enumerate() {
+        let mut cfg = DeployConfig {
+            n_nodes: nodes,
+            link_ms,
+            max_batch: 4,
+            dataset: profile.name.to_string(),
+            draft_variant: profile.draft_variant.to_string(),
+            seed: 100 + ri as u64,
+            ..Default::default()
+        };
+        cfg.decode.policy = policy;
+        cfg.decode.temp = profile.temp;
+        cfg.decode.max_new_tokens = 24;
+        let n = reqs.len();
+        let mut coord = Coordinator::with_engine(engine.clone(), cfg)?;
+        let (report, _) = coord.run_workload(reqs)?;
+        table.row(vec![
+            ri.to_string(),
+            n.to_string(),
+            fnum(report.throughput(), 1),
+            fnum(report.request_latency.quantile(0.5) as f64 / 1e6, 1),
+            fnum(report.request_latency.quantile(0.95) as f64 / 1e6, 1),
+            format!("{:.0}%", report.comm_fraction() * 100.0),
+            fnum(report.accept.mean_committed(), 2),
+        ]);
+        reports.push(report);
+    }
+    table.print();
+
+    let total_tokens: u64 = reports.iter().map(|r| r.tokens).sum();
+    let makespan = reports.iter().map(|r| r.elapsed_ns).max().unwrap_or(0);
+    println!(
+        "\nfleet: {} tokens, makespan {:.0} ms, aggregate {:.1} tok/s",
+        total_tokens,
+        makespan as f64 / 1e6,
+        total_tokens as f64 / (makespan as f64 / 1e9).max(1e-9),
+    );
+    Ok(())
+}

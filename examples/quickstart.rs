@@ -1,0 +1,53 @@
+//! Quickstart: the five-minute tour.
+//!
+//! Loads the AOT artifacts, builds a 4-node simulated decentralized
+//! deployment, serves a few HumanEval-profile requests under all three
+//! systems, and prints the comparison — the smallest end-to-end use of
+//! the public API.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::rc::Rc;
+
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the engine over the AOT artifacts (HLO text + weights).
+    let engine = Rc::new(Engine::from_dir("artifacts")?);
+    println!(
+        "loaded model: {} layers, d_model {}, vocab {}",
+        engine.manifest().model.n_layers,
+        engine.manifest().model.d_model,
+        engine.manifest().model.vocab,
+    );
+
+    // 2. Build a harness: workload + accuracy references for one dataset.
+    let harness = Harness::new(engine.clone(), "humaneval", 2, 32, 42)?;
+
+    // 3. Deploy: 4 nodes, 15 ms links (the paper's sweet-spot regime).
+    let mut cfg = harness.deploy(4, 15.0, 1);
+    cfg.decode.max_new_tokens = 32;
+
+    // 4. Serve the same requests under each system and compare.
+    let mut table = Table::new(
+        "quickstart: humaneval, N=4, t1=15ms",
+        &["system", "tok/s", "speedup", "avg accepted len", "accuracy"],
+    );
+    let base = harness.run(cfg.clone(), Policy::Autoregressive)?;
+    for policy in [Policy::Autoregressive, Policy::Eagle3, Policy::Dsd] {
+        let run = harness.run(cfg.clone(), policy)?;
+        table.row(vec![
+            policy.name().to_string(),
+            fnum(run.report.throughput(), 1),
+            fnum(run.report.speedup_over(&base.report), 2),
+            fnum(run.report.accept.mean_committed(), 2),
+            fnum(run.accuracy, 3),
+        ]);
+    }
+    table.print();
+    println!("\ndone — see `dsd help` and the benches for the full experiment suite.");
+    Ok(())
+}

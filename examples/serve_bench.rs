@@ -1,0 +1,106 @@
+//! **The end-to-end driver** (DESIGN.md E9): a real multi-threaded
+//! deployment — one OS thread + one PJRT engine per node, wallclock link
+//! latency on every hop — serving batched requests and reporting
+//! latency/throughput for all three systems plus the interleaved-pipeline
+//! mode. This is the run EXPERIMENTS.md records as the headline
+//! end-to-end validation.
+//!
+//! Run: `cargo run --release --example serve_bench -- \
+//!         [--nodes 4] [--link_ms 15] [--requests 4] [--tokens 32]`
+
+use dsd::cluster::real::RealCluster;
+use dsd::cluster::LinkModel;
+use dsd::spec::{DecodeConfig, Policy};
+use dsd::util::cli;
+use dsd::util::rng::Rng;
+use dsd::util::table::{fnum, Table};
+use dsd::workload::{dataset, WorkloadGen};
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_env(&["nodes", "link_ms", "requests", "tokens", "gamma", "dataset"])?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 15.0)?;
+    let n_requests = args.usize_or("requests", 4)?;
+    let tokens = args.usize_or("tokens", 32)?;
+    let gamma = args.usize_or("gamma", 8)?;
+    let ds = args.str_or("dataset", "humaneval");
+
+    let profile = dataset(&ds).ok_or_else(|| anyhow::anyhow!("unknown dataset {ds}"))?;
+    let link = LinkModel::wan(link_ms, 1.0);
+
+    println!(
+        "# serve_bench — REAL deployment: {} threads/nodes, {}ms links, {} requests x {} tokens ({})",
+        nodes, link_ms, n_requests, tokens, ds
+    );
+
+    // workload (shared across systems)
+    let mut rng = Rng::new(99);
+    let mut gen = WorkloadGen::new(profile.clone(), 512, 99);
+    let requests: Vec<(u64, Vec<i32>)> = gen
+        .batch(n_requests)
+        .into_iter()
+        .map(|r| (r.id, r.prompt))
+        .collect();
+    let _ = &mut rng;
+
+    let mut table = Table::new(
+        "wallclock results",
+        &["system", "total s", "tok/s", "mean latency ms", "avg len", "speedup"],
+    );
+
+    let mut base_tput = None;
+    for (label, policy, interleaved) in [
+        ("baseline (AR)", Policy::Autoregressive, false),
+        ("eagle3", Policy::Eagle3, false),
+        ("dsd", Policy::Dsd, false),
+        ("dsd + interleave", Policy::Dsd, true),
+    ] {
+        let mut cluster = RealCluster::launch("artifacts", nodes, link.clone(), profile.draft_variant)?;
+        let cfg = DecodeConfig {
+            policy,
+            gamma,
+            temp: profile.temp,
+            max_new_tokens: tokens,
+            seed: 1234,
+            ..Default::default()
+        };
+        // Warmup (untimed): drives every artifact through compile +
+        // weight upload on every node so the measured runs are serve-only.
+        {
+            let mut wcfg = cfg.clone();
+            wcfg.max_new_tokens = gamma + 2;
+            let _ = cluster.serve_one(u64::MAX, &requests[0].1, &wcfg)?;
+        }
+        let t0 = std::time::Instant::now();
+        let results = if interleaved {
+            cluster.serve_interleaved(&requests, &cfg, 2)?
+        } else {
+            let mut out = Vec::new();
+            for (id, prompt) in &requests {
+                let (r, _) = cluster.serve_one(*id, prompt, &cfg)?;
+                out.push(r);
+            }
+            out
+        };
+        let total = t0.elapsed();
+        cluster.shutdown()?;
+
+        let n_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+        let mean_latency_ms = results.iter().map(|r| r.latency.as_secs_f64() * 1e3).sum::<f64>()
+            / results.len() as f64;
+        let rounds: u64 = results.iter().map(|r| r.rounds).sum();
+        let tput = n_tokens as f64 / total.as_secs_f64();
+        let speedup = tput / *base_tput.get_or_insert(tput);
+        table.row(vec![
+            label.to_string(),
+            fnum(total.as_secs_f64(), 1),
+            fnum(tput, 1),
+            fnum(mean_latency_ms, 0),
+            fnum(n_tokens as f64 / rounds.max(1) as f64, 2),
+            fnum(speedup, 2),
+        ]);
+    }
+    table.print();
+    println!("\n(every hop above was a real thread-to-thread message with {link_ms}ms injected latency)");
+    Ok(())
+}

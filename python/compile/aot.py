@@ -1,0 +1,355 @@
+"""AOT export: lower every stage/draft/verify function to HLO text and
+write the weight blob + manifest the Rust runtime consumes.
+
+Interchange is HLO *text* (NOT serialized HloModuleProto): jax ≥ 0.5 emits
+protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Outputs, under --out-dir (default ../artifacts):
+  manifest.json       — model config, artifact schema (parameter order,
+                        runtime input/output shapes), weight-set offsets,
+                        draft-variant calibration stats.
+  weights.bin         — all weight sets, raw little-endian f32, offsets in
+                        the manifest.
+  *.hlo.txt           — one per artifact (see `enumerate_artifacts`).
+
+Weights are *runtime parameters* of every HLO module, passed positionally
+before the runtime inputs, so one artifact serves any weight set of the
+same architecture (target vs. the draft agreement-ladder variants).
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import EXPORT, MODEL, layers_per_stage, stage_roles
+from . import model as M
+from .kernels import verify as V
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_meta(structs):
+    return [
+        {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))} for s in structs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions
+# ---------------------------------------------------------------------------
+
+def stage_artifact(role: str, lps: int, window: int):
+    """A pipeline-stage forward: (weights..., x, k, v, pos) -> (out, k, v)."""
+    cfg = MODEL
+    names = M.param_names(role, lps, cfg)
+    cache = (lps, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    if role in ("first", "full"):
+        x_spec = spec((window,), jnp.int32)
+    else:
+        x_spec = spec((window, cfg.d_model))
+    out_dim = cfg.vocab if role in ("last", "full") else cfg.d_model
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        x, k, v, pos = args[len(names):]
+        return M.stage_forward(role, params, x, k, v, pos, cfg)
+
+    w_specs = [spec(M.param_shape(n, cfg)) for n in names]
+    rt_specs = [x_spec, spec(cache), spec(cache), spec((), jnp.int32)]
+    return {
+        "fn": fn,
+        "specs": w_specs + rt_specs,
+        "params": names,
+        "inputs": [
+            dict(name="x", **_io_meta([x_spec])[0]),
+            dict(name="k_cache", **_io_meta([spec(cache)])[0]),
+            dict(name="v_cache", **_io_meta([spec(cache)])[0]),
+            dict(name="pos", **_io_meta([spec((), jnp.int32)])[0]),
+        ],
+        "outputs": [
+            dict(name="out", shape=[window, out_dim], dtype="float32"),
+            dict(name="k_cache", shape=list(cache), dtype="float32"),
+            dict(name="v_cache", shape=list(cache), dtype="float32"),
+        ],
+        "meta": {"kind": "stage", "role": role, "layers": lps, "window": window},
+    }
+
+
+def draft_step_artifact(depth: int):
+    """One draft step with fused sampling:
+    (weights..., token, k, v, pos, temp, uniform) -> (next, logits, k, v)."""
+    cfg = dataclasses.replace(MODEL, draft_layers=depth)
+    names = M.param_names("full", depth, cfg)
+    cache = (depth, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+
+    def fn(*args):
+        params = dict(zip(names, args[: len(names)]))
+        token, k, v, pos, temp, uniform = args[len(names):]
+        return M.draft_step(params, token, k, v, pos, temp, uniform, cfg)
+
+    w_specs = [spec(M.param_shape(n, cfg)) for n in names]
+    rt = [
+        spec((1,), jnp.int32),
+        spec(cache),
+        spec(cache),
+        spec((), jnp.int32),
+        spec(()),
+        spec(()),
+    ]
+    return {
+        "fn": fn,
+        "specs": w_specs + rt,
+        "params": names,
+        "inputs": [
+            {"name": "token", "shape": [1], "dtype": "int32"},
+            {"name": "k_cache", "shape": list(cache), "dtype": "float32"},
+            {"name": "v_cache", "shape": list(cache), "dtype": "float32"},
+            {"name": "pos", "shape": [], "dtype": "int32"},
+            {"name": "temp", "shape": [], "dtype": "float32"},
+            {"name": "uniform", "shape": [], "dtype": "float32"},
+        ],
+        "outputs": [
+            {"name": "next_token", "shape": [1], "dtype": "int32"},
+            {"name": "logits", "shape": [1, cfg.vocab], "dtype": "float32"},
+            {"name": "k_cache", "shape": list(cache), "dtype": "float32"},
+            {"name": "v_cache", "shape": list(cache), "dtype": "float32"},
+        ],
+        "meta": {"kind": "draft_step", "layers": depth, "window": 1},
+    }
+
+
+def verify_artifact(gamma: int):
+    """The L1 DSD verification kernel as a standalone artifact."""
+    cfg = MODEL
+
+    def fn(t_logits, d_logits, d_tokens, u_accept, u_sample, knobs):
+        return V.verify_window(t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)
+
+    specs = [
+        spec((gamma + 1, cfg.vocab)),
+        spec((gamma, cfg.vocab)),
+        spec((gamma,), jnp.int32),
+        spec((gamma,)),
+        spec((gamma + 1,)),
+        spec((V.N_KNOBS,)),
+    ]
+    return {
+        "fn": fn,
+        "specs": specs,
+        "params": [],
+        "inputs": [
+            {"name": "t_logits", "shape": [gamma + 1, cfg.vocab], "dtype": "float32"},
+            {"name": "d_logits", "shape": [gamma, cfg.vocab], "dtype": "float32"},
+            {"name": "d_tokens", "shape": [gamma], "dtype": "int32"},
+            {"name": "u_accept", "shape": [gamma], "dtype": "float32"},
+            {"name": "u_sample", "shape": [gamma + 1], "dtype": "float32"},
+            {"name": "knobs", "shape": [V.N_KNOBS], "dtype": "float32"},
+        ],
+        "outputs": [
+            {"name": "out_tokens", "shape": [gamma + 1], "dtype": "int32"},
+            {"name": "accept_count", "shape": [1], "dtype": "int32"},
+            {"name": "key_flags", "shape": [gamma], "dtype": "int32"},
+            {"name": "stats", "shape": [gamma, V.N_STATS], "dtype": "float32"},
+        ],
+        "meta": {"kind": "verify", "gamma": gamma, "window": gamma + 1},
+    }
+
+
+def enumerate_artifacts():
+    arts = {}
+    windows = sorted({1, MODEL.prefill_window} | {g + 1 for g in EXPORT.gammas})
+    combos = {("full", MODEL.n_layers)}
+    for n in EXPORT.shard_counts:
+        lps = layers_per_stage(n)
+        for role in set(stage_roles(n)):
+            combos.add((role, lps))
+    for role, lps in sorted(combos):
+        for w in windows:
+            arts[f"target_{role}{lps}_w{w}"] = stage_artifact(role, lps, w)
+    depths = sorted({v.layers for v in EXPORT.draft_variants})
+    for d in depths:
+        arts[f"draft{d}_step"] = draft_step_artifact(d)
+        arts[f"draft{d}_prefill"] = stage_artifact("full", d, MODEL.prefill_window)
+    for g in EXPORT.gammas:
+        arts[f"verify_g{g}"] = verify_artifact(g)
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def build_weight_sets():
+    target = M.init_target_params(EXPORT.seed)
+    target["unembed"] = target["unembed"] * MODEL.logit_scale
+    sets = {"target": target}
+    for var in EXPORT.draft_variants:
+        cfg = dataclasses.replace(MODEL, draft_layers=var.layers)
+        sets[f"draft_{var.name}"] = M.make_draft_params(
+            target, var.sigma, EXPORT.seed, cfg
+        )
+    return sets
+
+
+def write_weights(sets, path):
+    """Concatenate every tensor of every set; return per-set offset maps."""
+    offsets = {}
+    off = 0
+    with open(path, "wb") as f:
+        for set_name, params in sets.items():
+            entry = {}
+            for name, arr in params.items():
+                arr = np.ascontiguousarray(arr, dtype=np.float32)
+                raw = arr.tobytes()
+                entry[name] = {
+                    "offset": off,
+                    "shape": list(arr.shape),
+                    "dtype": "float32",
+                }
+                f.write(raw)
+                off += len(raw)
+            offsets[set_name] = entry
+    return offsets, off
+
+
+# ---------------------------------------------------------------------------
+# Draft-variant calibration (recorded into the manifest so the Rust side
+# can map dataset profiles to variants)
+# ---------------------------------------------------------------------------
+
+def calibrate_variants(sets, steps=32):
+    import jax.nn as jnn
+
+    target = sets["target"]
+    rng = np.random.default_rng(EXPORT.seed)
+    ctx = jnp.asarray(rng.integers(0, MODEL.vocab, size=(16,)).astype(np.int32))
+    out = []
+    for var in EXPORT.draft_variants:
+        dparams = sets[f"draft_{var.name}"]
+        kc, vc = M.empty_cache(MODEL.n_layers)
+        dk, dv = M.empty_cache(var.layers)
+        lt, kc, vc = M.full_forward(target, ctx, kc, vc, 0)
+        _, dk, dv = M.full_forward(dparams, ctx, dk, dv, 0)
+        pos, cur = ctx.shape[0], int(jnp.argmax(lt[-1]))
+        agree, overlap = 0, 0.0
+        for _ in range(steps):
+            t1 = jnp.asarray(np.array([cur], np.int32))
+            lt1, kc, vc = M.full_forward(target, t1, kc, vc, pos)
+            ld1, dk, dv = M.full_forward(dparams, t1, dk, dv, pos)
+            pt, pd = jnn.softmax(lt1[0]), jnn.softmax(ld1[0])
+            overlap += float(jnp.sum(jnp.minimum(pt, pd)))
+            agree += int(int(jnp.argmax(lt1[0])) == int(jnp.argmax(ld1[0])))
+            cur = int(jnp.argmax(lt1[0]))
+            pos += 1
+        out.append(
+            {
+                "name": var.name,
+                "layers": var.layers,
+                "sigma": var.sigma,
+                "greedy_agree": agree / steps,
+                "overlap": overlap / steps,
+            }
+        )
+        print(f"  variant {var.name}: agree={agree/steps:.3f} overlap={overlap/steps:.3f}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None, help="(legacy) marker path; ignored")
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    ap.add_argument("--skip-calibration", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    print("== building weight sets ==")
+    sets = build_weight_sets()
+    woff, total = write_weights(sets, os.path.join(out_dir, "weights.bin"))
+    print(f"weights.bin: {total/1e6:.1f} MB, {len(sets)} sets")
+
+    variants = []
+    if not args.skip_calibration:
+        print("== calibrating draft variants ==")
+        variants = calibrate_variants(sets)
+
+    print("== lowering artifacts ==")
+    arts = enumerate_artifacts()
+    manifest_arts = {}
+    for name, a in arts.items():
+        lowered = jax.jit(a["fn"]).lower(*a["specs"])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_arts[name] = {
+            "file": fname,
+            "params": a["params"],
+            "inputs": a["inputs"],
+            "outputs": a["outputs"],
+            **a["meta"],
+        }
+        print(f"  {name}: {len(text)/1e3:.0f} kB, {len(a['params'])} weight params")
+
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab": MODEL.vocab,
+            "d_model": MODEL.d_model,
+            "n_heads": MODEL.n_heads,
+            "head_dim": MODEL.head_dim,
+            "d_ff": MODEL.d_ff,
+            "n_layers": MODEL.n_layers,
+            "max_seq": MODEL.max_seq,
+            "prefill_window": MODEL.prefill_window,
+            "logit_scale": MODEL.logit_scale,
+        },
+        "shard_counts": list(EXPORT.shard_counts),
+        "gammas": list(EXPORT.gammas),
+        "seed": EXPORT.seed,
+        "weights_file": "weights.bin",
+        "weight_sets": woff,
+        "draft_variants": variants,
+        "artifacts": manifest_arts,
+        "stats_layout": ["h_d", "h_t", "pt_y", "pd_y", "normmatch", "accept_prob"],
+        "knobs_layout": ["tau", "lam1", "lam2", "lam3", "temp", "adaptive", "_", "_"],
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    digest = hashlib.sha256(open(mpath, "rb").read()).hexdigest()[:12]
+    print(f"manifest.json written ({digest}); {len(manifest_arts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Model/export configuration shared by model.py, kernels, and aot.py.
+
+These constants define the *artifact schema*: every shape the Rust runtime
+loads is derived from them, and `aot.py` writes them into manifest.json so
+the Rust side never hard-codes a dimension.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the target transformer (the "Llama3.1-8B analog").
+
+    The draft model shares this architecture with `draft_layers` layers and
+    sigma-perturbed weights (see DESIGN.md §3).
+    """
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_layers: int = 8
+    max_seq: int = 192          # KV-cache capacity (prompt + generation)
+    prefill_window: int = 64    # fixed prefill shape; prompts are padded
+    draft_layers: int = 2       # default draft depth (variants below)
+    # Unembedding scale: calibrated so the target's per-token entropy sits
+    # around ~3.3 nats (vocab 512), a realistic LM sharpness band; without
+    # it a random-weight net is near-uniform and acceptance statistics
+    # degenerate (see DESIGN.md §3).
+    logit_scale: float = 4.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class DraftVariant:
+    """One exported draft weight set.
+
+    (layers, sigma) is the draft↔target agreement knob; measured greedy
+    agreement / distribution overlap for each variant is recorded in
+    manifest.json at export time so the Rust side can map dataset profiles
+    to variants without re-deriving anything.
+    """
+
+    name: str
+    layers: int
+    sigma: float
+
+
+@dataclass(frozen=True)
+class ExportConfig:
+    """What `make artifacts` produces."""
+
+    # Pipeline shard counts supported by the AOT artifact set. 8 layers
+    # divide evenly into 1/2/4/8 layers-per-stage.
+    shard_counts: tuple = (2, 4, 8)
+    # Speculative window lengths gamma; verify processes gamma+1 positions.
+    gammas: tuple = (4, 8)
+    # Draft weight variants: agreement ladder used by the dataset profiles
+    # (HumanEval ≈ highest agreement ... CNN/DailyMail ≈ lowest).
+    draft_variants: tuple = (
+        DraftVariant("d6_s000", 6, 0.00),
+        DraftVariant("d6_s005", 6, 0.05),
+        DraftVariant("d4_s000", 4, 0.00),
+        DraftVariant("d4_s005", 4, 0.05),
+        DraftVariant("d2_s000", 2, 0.00),
+    )
+    seed: int = 20250710
+
+
+MODEL = ModelConfig()
+EXPORT = ExportConfig()
+
+
+def layers_per_stage(n_shards: int, cfg: ModelConfig = MODEL) -> int:
+    assert cfg.n_layers % n_shards == 0, (cfg.n_layers, n_shards)
+    return cfg.n_layers // n_shards
+
+
+def stage_roles(n_shards: int) -> list:
+    """Role of each pipeline stage: 'first' embeds, 'last' unembeds."""
+    if n_shards == 1:
+        return ["full"]
+    return ["first"] + ["mid"] * (n_shards - 2) + ["last"]

@@ -1,0 +1,196 @@
+"""Generate golden input/output pairs for the Rust runtime integration
+tests: run a handful of artifacts in JAX with fixed inputs and dump both
+sides as raw binaries + a JSON index.
+
+Usage: python -m compile.golden [--out-dir ../artifacts/golden]
+Runs as part of `make artifacts` (cheap), so `cargo test` can verify the
+Rust PJRT path reproduces JAX numerics bit-for-bit-ish (atol 1e-4).
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .aot import build_weight_sets
+from .config import EXPORT, MODEL
+from . import model as M
+from .kernels import verify as V
+
+
+def dump(out_dir, name, arr):
+    arr = np.asarray(arr)
+    fname = f"{name}.bin"
+    arr.tofile(os.path.join(out_dir, fname))
+    return {
+        "file": fname,
+        "shape": list(arr.shape),
+        "dtype": "int32" if arr.dtype == np.int32 else "float32",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "golden"),
+    )
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(99)
+    sets = build_weight_sets()
+    index = {}
+
+    # --- target_full8_w5: one verify-window forward ---
+    target = sets["target"]
+    w = 5
+    tokens = rng.integers(0, MODEL.vocab, size=(w,)).astype(np.int32)
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    kc = jnp.asarray(rng.normal(size=kc.shape).astype(np.float32) * 0.1)
+    vc = jnp.asarray(rng.normal(size=vc.shape).astype(np.float32) * 0.1)
+    pos = np.int32(23)
+    out, nk, nv = M.full_forward(target, jnp.asarray(tokens), kc, vc, int(pos))
+    index["target_full8_w5"] = {
+        "artifact": "target_full8_w5",
+        "weight_set": "target",
+        "layer_base": 0,
+        "inputs": [
+            dump(out_dir, "full8_x", tokens),
+            dump(out_dir, "full8_k", np.asarray(kc)),
+            dump(out_dir, "full8_v", np.asarray(vc)),
+            dump(out_dir, "full8_pos", pos),
+        ],
+        "outputs": [
+            dump(out_dir, "full8_out", np.asarray(out)),
+            dump(out_dir, "full8_nk", np.asarray(nk)),
+            dump(out_dir, "full8_nv", np.asarray(nv)),
+        ],
+    }
+
+    # --- target_first4_w5 + target_last4_w5 pipeline (layer_base check) ---
+    first_names = M.param_names("first", 4)
+    last_names = M.param_names("last", 4)
+    p_first = {n: target[n] for n in first_names}
+    p_last = {}
+    for n in last_names:
+        if n.startswith("layer"):
+            i = int(n.split(".")[0][5:])
+            p_last[n] = target[f"layer{i + 4}." + n.split(".", 1)[1]]
+        else:
+            p_last[n] = target[n]
+    kc1, vc1 = M.empty_cache(4)
+    kc2, vc2 = M.empty_cache(4)
+    h, nk1, nv1 = M.stage_forward("first", p_first, jnp.asarray(tokens), kc1, vc1, int(pos))
+    logits, nk2, nv2 = M.stage_forward("last", p_last, h, kc2, vc2, int(pos))
+    index["target_first4_w5"] = {
+        "artifact": "target_first4_w5",
+        "weight_set": "target",
+        "layer_base": 0,
+        "inputs": [
+            dump(out_dir, "first4_x", tokens),
+            dump(out_dir, "first4_k", np.asarray(kc1)),
+            dump(out_dir, "first4_v", np.asarray(vc1)),
+            dump(out_dir, "first4_pos", pos),
+        ],
+        "outputs": [
+            dump(out_dir, "first4_out", np.asarray(h)),
+            dump(out_dir, "first4_nk", np.asarray(nk1)),
+            dump(out_dir, "first4_nv", np.asarray(nv1)),
+        ],
+    }
+    index["target_last4_w5"] = {
+        "artifact": "target_last4_w5",
+        "weight_set": "target",
+        "layer_base": 4,
+        "inputs": [
+            dump(out_dir, "last4_x", np.asarray(h)),
+            dump(out_dir, "last4_k", np.asarray(kc2)),
+            dump(out_dir, "last4_v", np.asarray(vc2)),
+            dump(out_dir, "last4_pos", pos),
+        ],
+        "outputs": [
+            dump(out_dir, "last4_out", np.asarray(logits)),
+            dump(out_dir, "last4_nk", np.asarray(nk2)),
+            dump(out_dir, "last4_nv", np.asarray(nv2)),
+        ],
+    }
+
+    # --- draft2_step ---
+    var = next(v for v in EXPORT.draft_variants if v.layers == 2)
+    cfg2 = dataclasses.replace(MODEL, draft_layers=2)
+    dparams = sets[f"draft_{var.name}"]
+    dk, dv = M.empty_cache(2)
+    token = np.array([17], np.int32)
+    temp = np.float32(1.0)
+    uniform = np.float32(0.4242)
+    nt, logits_d, ndk, ndv = M.draft_step(
+        dparams, jnp.asarray(token), dk, dv, 0, float(temp), float(uniform), cfg2
+    )
+    index["draft2_step"] = {
+        "artifact": "draft2_step",
+        "weight_set": f"draft_{var.name}",
+        "layer_base": 0,
+        "inputs": [
+            dump(out_dir, "d2_tok", token),
+            dump(out_dir, "d2_k", np.asarray(dk)),
+            dump(out_dir, "d2_v", np.asarray(dv)),
+            dump(out_dir, "d2_pos", np.int32(0)),
+            dump(out_dir, "d2_temp", temp),
+            dump(out_dir, "d2_u", uniform),
+        ],
+        "outputs": [
+            dump(out_dir, "d2_next", np.asarray(nt)),
+            dump(out_dir, "d2_logits", np.asarray(logits_d)),
+            dump(out_dir, "d2_nk", np.asarray(ndk)),
+            dump(out_dir, "d2_nv", np.asarray(ndv)),
+        ],
+    }
+
+    # --- verify_g4 (both strict and adaptive knob settings) ---
+    g = 4
+    tl = (rng.normal(size=(g + 1, MODEL.vocab)) * 3).astype(np.float32)
+    dl = (tl[:g] + rng.normal(size=(g, MODEL.vocab)).astype(np.float32)).astype(np.float32)
+    dt = rng.integers(0, MODEL.vocab, size=(g,)).astype(np.int32)
+    ua = rng.uniform(size=(g,)).astype(np.float32)
+    us = rng.uniform(size=(g + 1,)).astype(np.float32)
+    for tag, knobs in [
+        ("strict", [0.0, 1.5, 0.3, 0.5, 1.0, 0.0, 0, 0]),
+        ("adaptive", [0.3, 1.5, 0.3, 0.5, 1.0, 1.0, 0, 0]),
+        ("greedy", [0.2, 1.5, 0.3, 0.5, 0.0, 1.0, 0, 0]),
+    ]:
+        kn = np.array(knobs, np.float32)
+        ot, ac, kf, st = V.verify_window(
+            jnp.asarray(tl), jnp.asarray(dl), jnp.asarray(dt),
+            jnp.asarray(ua), jnp.asarray(us), jnp.asarray(kn),
+        )
+        index[f"verify_g4_{tag}"] = {
+            "artifact": "verify_g4",
+            "weight_set": "target",
+            "layer_base": 0,
+            "inputs": [
+                dump(out_dir, f"vg4_{tag}_tl", tl),
+                dump(out_dir, f"vg4_{tag}_dl", dl),
+                dump(out_dir, f"vg4_{tag}_dt", dt),
+                dump(out_dir, f"vg4_{tag}_ua", ua),
+                dump(out_dir, f"vg4_{tag}_us", us),
+                dump(out_dir, f"vg4_{tag}_kn", kn),
+            ],
+            "outputs": [
+                dump(out_dir, f"vg4_{tag}_ot", np.asarray(ot)),
+                dump(out_dir, f"vg4_{tag}_ac", np.asarray(ac)),
+                dump(out_dir, f"vg4_{tag}_kf", np.asarray(kf)),
+                dump(out_dir, f"vg4_{tag}_st", np.asarray(st)),
+            ],
+        }
+
+    with open(os.path.join(out_dir, "index.json"), "w") as f:
+        json.dump(index, f, indent=1)
+    print(f"golden: {len(index)} cases -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: KV-cache attention for the verify window.
+
+This is the model-side compute hot spot: each pipeline stage runs it once
+per layer per verification round. Inputs are the `W` new query positions
+(W = gamma+1 for a verify pass, W = 1 for a draft step, W = prefill window
+for prefill) and the full KV cache `[S, H, Dh]`; `pos` is the index of the
+first new position, so query row `j` may attend to cache slots `m <= pos+j`.
+
+TPU mapping (DESIGN.md §6): the grid iterates over heads; inside, the
+sequence axis is processed in `SEQ_BLOCK`-sized tiles with an online-softmax
+accumulator, the Pallas analog of a flash-attention threadblock schedule —
+VMEM holds one `[SEQ_BLOCK, Dh]` K/V slab at a time, and the two
+contractions (`q·kᵀ`, `p·v`) are MXU-shaped. interpret=True everywhere:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, so the kernel is
+lowered to plain HLO; the *structure* (tiling, masking, accumulation) is
+what carries to real hardware.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SEQ_BLOCK = 64  # KV tile resident in VMEM per inner step
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, seq_len: int, w: int):
+    """One head. q_ref: [W, Dh]; k_ref/v_ref: [S, Dh]; o_ref: [W, Dh]."""
+    pos = pos_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32)  # [W, Dh]
+    dh = q.shape[-1]
+    scale = 1.0 / (dh ** 0.5)
+    q = q * scale
+
+    n_blocks = seq_len // SEQ_BLOCK
+    row = jax.lax.broadcasted_iota(jnp.int32, (w, SEQ_BLOCK), 0)  # query row j
+
+    def body(b, carry):
+        m_prev, l_prev, acc = carry
+        start = b * SEQ_BLOCK
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[...], start, SEQ_BLOCK, 0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[...], start, SEQ_BLOCK, 0)
+        s = q @ k_blk.astype(jnp.float32).T  # [W, SEQ_BLOCK]
+        col = start + jax.lax.broadcasted_iota(jnp.int32, (w, SEQ_BLOCK), 1)
+        mask = col <= (pos + row)  # causal w.r.t. the write frontier
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))  # [W]
+        p = jnp.exp(s - m_cur[:, None])
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk.astype(jnp.float32)
+        return m_cur, l_cur, acc
+
+    m0 = jnp.full((w,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((w,), dtype=jnp.float32)
+    acc0 = jnp.zeros((w, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    # Every query row has at least one unmasked slot (its own position), so
+    # l > 0 always; no epsilon needed.
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cached_attention(q, k_cache, v_cache, pos, *, interpret: bool = True):
+    """Attention over a KV cache for `W` new positions.
+
+    Args:
+      q:        [W, H, Dh] queries for the new positions.
+      k_cache:  [S, H, Dh] keys   (already updated with the new positions).
+      v_cache:  [S, H, Dh] values (already updated with the new positions).
+      pos:      scalar int32, index of the first new position.
+
+    Returns:
+      [W, H, Dh] attention outputs.
+    """
+    w, h, dh = q.shape
+    s = k_cache.shape[0]
+    assert s % SEQ_BLOCK == 0, f"max_seq {s} must be a multiple of {SEQ_BLOCK}"
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(_attn_kernel, seq_len=s, w=w)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),          # pos (scalar)
+            pl.BlockSpec((w, None, dh), lambda i: (0, i, 0)),  # q, one head
+            pl.BlockSpec((s, None, dh), lambda i: (0, i, 0)),  # k cache
+            pl.BlockSpec((s, None, dh), lambda i: (0, i, 0)),  # v cache
+        ],
+        out_specs=pl.BlockSpec((w, None, dh), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, h, dh), q.dtype),
+        interpret=interpret,
+    )(pos_arr, q, k_cache, v_cache)
+    return out

@@ -1,0 +1,122 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels (the CORE correctness signal).
+
+Deliberately written as straight-line code sharing nothing with the
+kernels: dense masks instead of tiles, full softmax instead of online
+accumulation, a python loop for the accept chain.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-9
+
+
+def attention_ref(q, k_cache, v_cache, pos):
+    """Dense-mask reference for kernels.attention.cached_attention."""
+    w, h, dh = q.shape
+    s = k_cache.shape[0]
+    scale = 1.0 / np.sqrt(dh)
+    scores = jnp.einsum("whd,shd->hws", q, k_cache) * scale  # [H, W, S]
+    row = jnp.arange(w)[None, :, None]
+    col = jnp.arange(s)[None, None, :]
+    mask = col <= (pos + row)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hws,shd->whd", p, v_cache)
+    return out.astype(q.dtype)
+
+
+def _softmax(x):
+    x = x - np.max(x)
+    e = np.exp(x)
+    return e / e.sum()
+
+
+def verify_ref(t_logits, d_logits, d_tokens, u_accept, u_sample, knobs):
+    """Scalar-loop reference for kernels.verify.verify_window.
+
+    Returns (out_tokens[W], accept_count[1], key_flags[G], stats[G,6]) as
+    numpy arrays with semantics identical to the kernel docstring.
+    """
+    t_logits = np.asarray(t_logits, np.float32)
+    d_logits = np.asarray(d_logits, np.float32)
+    d_tokens = np.asarray(d_tokens, np.int32)
+    u_accept = np.asarray(u_accept, np.float32)
+    u_sample = np.asarray(u_sample, np.float32)
+    knobs = np.asarray(knobs, np.float32)
+    tau, lam1, lam2, lam3, temp, adaptive = (float(v) for v in knobs[:6])
+    adaptive = adaptive > 0.5
+    greedy = temp <= 0.0
+    inv_temp = 1.0 if greedy else 1.0 / max(temp, EPS)
+
+    gamma, vocab = d_logits.shape
+    w = gamma + 1
+
+    key_flags = np.zeros(gamma, np.int32)
+    stats = np.zeros((gamma, 6), np.float32)
+    out_tokens = np.zeros(w, np.int32)
+
+    k = 0
+    rejected = False
+    mix_rows = []
+    pd_rows = []
+    for j in range(gamma):
+        y = int(d_tokens[j])
+        lt = t_logits[j] * inv_temp
+        ld = d_logits[j] * inv_temp
+        p_t = _softmax(lt)
+        p_d = _softmax(ld)
+        pt_y, pd_y = float(p_t[y]), float(p_d[y])
+        h_d = -np.log(pd_y + EPS)
+        h_t = -np.log(pt_y + EPS)
+        normmatch = float(np.minimum(p_t, p_d).sum())
+        is_key = adaptive and (
+            (h_d / (h_t + EPS) > lam1)
+            or (abs(pt_y - pd_y) > lam2)
+            or (normmatch < lam3)
+        )
+        tau_j = tau if (adaptive and not is_key) else 0.0
+        # Eq. 8 in log space, then renormalize: P̃_t ∝ P_t^{1-τ} P_d^{τ}
+        log_pt = lt - np.max(lt) - np.log(np.exp(lt - np.max(lt)).sum())
+        log_pd = ld - np.max(ld) - np.log(np.exp(ld - np.max(ld)).sum())
+        mix = _softmax((1.0 - tau_j) * log_pt + tau_j * log_pd)
+        mix_rows.append(mix)
+        pd_rows.append(p_d)
+
+        if greedy:
+            blend = (1.0 - tau_j) * t_logits[j] + tau_j * d_logits[j]
+            accept = int(np.argmax(blend)) == y
+            accept_prob = 1.0 if accept else 0.0
+        else:
+            accept_prob = min(1.0, float(mix[y]) / (pd_y + EPS))
+            accept = bool(u_accept[j] < accept_prob)
+
+        key_flags[j] = int(is_key)
+        stats[j] = [h_d, h_t, pt_y, pd_y, normmatch, accept_prob]
+
+        if accept and not rejected:
+            out_tokens[k] = y
+            k += 1
+        elif not rejected:
+            rejected = True  # stats still computed for remaining positions
+
+    if k < gamma:
+        if greedy:
+            corr = int(np.argmax(t_logits[k]))
+        else:
+            resid = np.maximum(mix_rows[k] - pd_rows[k], 0.0)
+            mass = resid.sum()
+            p_corr = resid / mass if mass > EPS else mix_rows[k]
+            cdf = np.cumsum(p_corr)
+            corr = min(int((cdf <= u_sample[k]).sum()), vocab - 1)
+    else:
+        if greedy:
+            corr = int(np.argmax(t_logits[gamma]))
+        else:
+            bonus = _softmax(t_logits[gamma] * inv_temp)
+            cdf = np.cumsum(bonus)
+            corr = min(int((cdf <= u_sample[gamma]).sum()), vocab - 1)
+    out_tokens[k] = corr
+
+    return out_tokens, np.array([k], np.int32), key_flags, stats

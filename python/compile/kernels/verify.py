@@ -1,0 +1,248 @@
+"""L1 Pallas kernel: adaptive speculative verification (the DSD hot spot).
+
+One call per verification round. Given the target logits over the verify
+window ``[W=gamma+1, V]``, the draft logits ``[gamma, V]``, the drafted
+tokens, and pre-drawn uniforms, the kernel computes — in a single fused
+pass —
+
+  * per-token statistics: draft/target surprisal ``H_d, H_t``, token
+    probability gap ``|P_t(y) - P_d(y)|``, and ``NormMatch`` = total
+    distribution overlap ``sum_v min(P_t, P_d)`` (the paper's Eq. 7 says
+    "normalized distribution similarity ... for example based on the
+    overlap of their top-k support"; we use full-support overlap = 1 − TV
+    distance, which is tile-reducible — see DESIGN.md §5);
+  * key-token flags (Eq. 7): ``Key ⇔ H_d/H_t > λ1 ∨ |P_t−P_d| > λ2 ∨
+    NormMatch < λ3``;
+  * the τ-softened acceptance distribution (Eq. 8):
+    ``P̃_t ∝ P_t^{1−τ_j} · P_d^{τ_j}`` with ``τ_j = 0`` for key tokens;
+  * the Leviathan accept/reject chain ``u_j < min(1, P̃_t(y_j)/P_d(y_j))``,
+    the residual-distribution resample at the first rejection, and the
+    bonus token when the whole window is accepted.
+
+Greedy mode (temp ≤ 0) replaces the stochastic test with an argmax test on
+the τ-blended logits and resamples by target argmax.
+
+TPU mapping: the softmax statistics (row max, sum-exp, overlap, token
+gathers) are reduced over ``V_BLOCK``-wide vocab tiles so VMEM holds one
+``[W, V_BLOCK]`` slab per step; the accept chain itself is O(W) scalar
+work. interpret=True (CPU PJRT cannot run Mosaic custom-calls).
+
+Scalar knobs are packed into a single ``[8]`` f32 array (see KNOB_*):
+``[tau, lam1, lam2, lam3, temp, adaptive, 0, 0]``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+V_BLOCK = 128  # vocab tile width resident in VMEM per reduction step
+EPS = 1e-9
+NEG_INF = -1e30
+
+KNOB_TAU = 0
+KNOB_LAM1 = 1
+KNOB_LAM2 = 2
+KNOB_LAM3 = 3
+KNOB_TEMP = 4
+KNOB_ADAPTIVE = 5
+N_KNOBS = 8
+
+# stats[:, i] layout (mirrored by ref.py and the Rust coordinator)
+STAT_HD = 0
+STAT_HT = 1
+STAT_PT_Y = 2
+STAT_PD_Y = 3
+STAT_NORMMATCH = 4
+STAT_ACCEPT_PROB = 5
+N_STATS = 6
+
+
+def _row_softmax_stats(logits, inv_temp, gamma, v):
+    """Tiled online max / sum-exp over the vocab axis.
+
+    Returns (row_max, row_sumexp) for ``logits * inv_temp``; the reduction
+    walks V_BLOCK tiles so only one slab is live at a time (VMEM shape on
+    TPU; semantics identical under interpret).
+    """
+    n_tiles = v // V_BLOCK
+
+    def body(t, carry):
+        m_prev, s_prev = carry
+        blk = jax.lax.dynamic_slice_in_dim(logits, t * V_BLOCK, V_BLOCK, 1)
+        blk = blk * inv_temp
+        m_cur = jnp.maximum(m_prev, jnp.max(blk, axis=-1))
+        s_cur = s_prev * jnp.exp(m_prev - m_cur) + jnp.sum(
+            jnp.exp(blk - m_cur[:, None]), axis=-1
+        )
+        return m_cur, s_cur
+
+    m0 = jnp.full((gamma,), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((gamma,), jnp.float32)
+    return jax.lax.fori_loop(0, n_tiles, body, (m0, s0))
+
+
+def _verify_kernel(
+    t_logits_ref,
+    d_logits_ref,
+    d_tokens_ref,
+    u_accept_ref,
+    u_sample_ref,
+    knobs_ref,
+    out_tokens_ref,
+    accept_count_ref,
+    key_flags_ref,
+    stats_ref,
+    *,
+    gamma: int,
+    vocab: int,
+):
+    w = gamma + 1
+    tl = t_logits_ref[...].astype(jnp.float32)  # [W, V]
+    dl = d_logits_ref[...].astype(jnp.float32)  # [G, V]
+    y = d_tokens_ref[...]  # [G]
+    knobs = knobs_ref[...]
+    tau = knobs[KNOB_TAU]
+    lam1, lam2, lam3 = knobs[KNOB_LAM1], knobs[KNOB_LAM2], knobs[KNOB_LAM3]
+    temp = knobs[KNOB_TEMP]
+    adaptive = knobs[KNOB_ADAPTIVE] > 0.5
+    greedy = temp <= 0.0
+    inv_temp = jnp.where(greedy, 1.0, 1.0 / jnp.maximum(temp, EPS))
+
+    tlg = tl[:gamma]  # target rows aligned with draft positions
+
+    # --- tiled softmax statistics (stats always at the sampling temp, or
+    # temp=1 in greedy mode, matching ref.py) ---
+    tm, ts = _row_softmax_stats(tlg, inv_temp, gamma, vocab)
+    dm, ds = _row_softmax_stats(dl, inv_temp, gamma, vocab)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (gamma, vocab), 1)
+    onehot = (cols == y[:, None]).astype(jnp.float32)
+
+    p_t = jnp.exp(tlg * inv_temp - tm[:, None]) / ts[:, None]  # [G, V]
+    p_d = jnp.exp(dl * inv_temp - dm[:, None]) / ds[:, None]
+
+    # NormMatch: tiled overlap reduction sum_v min(p_t, p_d).
+    n_tiles = vocab // V_BLOCK
+
+    def ov_body(t, acc):
+        a = jax.lax.dynamic_slice_in_dim(p_t, t * V_BLOCK, V_BLOCK, 1)
+        b = jax.lax.dynamic_slice_in_dim(p_d, t * V_BLOCK, V_BLOCK, 1)
+        return acc + jnp.sum(jnp.minimum(a, b), axis=-1)
+
+    normmatch = jax.lax.fori_loop(0, n_tiles, ov_body, jnp.zeros((gamma,), jnp.float32))
+
+    pt_y = jnp.sum(p_t * onehot, axis=-1)  # [G]
+    pd_y = jnp.sum(p_d * onehot, axis=-1)
+    h_d = -jnp.log(pd_y + EPS)
+    h_t = -jnp.log(pt_y + EPS)
+
+    key = (
+        (h_d / (h_t + EPS) > lam1)
+        | (jnp.abs(pt_y - pd_y) > lam2)
+        | (normmatch < lam3)
+    )
+    key = key & adaptive
+    tau_j = jnp.where(adaptive & ~key, tau, 0.0)  # [G]
+
+    # --- Eq. 8: softened target distribution, renormalized ---
+    log_pt = tlg * inv_temp - tm[:, None] - jnp.log(ts)[:, None]
+    log_pd = dl * inv_temp - dm[:, None] - jnp.log(ds)[:, None]
+    log_mix = (1.0 - tau_j)[:, None] * log_pt + tau_j[:, None] * log_pd
+    mix_m = jnp.max(log_mix, axis=-1)
+    mix = jnp.exp(log_mix - mix_m[:, None])
+    mix = mix / jnp.sum(mix, axis=-1)[:, None]  # P̃_t, [G, V]
+
+    mix_y = jnp.sum(mix * onehot, axis=-1)
+
+    # --- acceptance chain ---
+    ratio = jnp.minimum(1.0, mix_y / (pd_y + EPS))
+    u = u_accept_ref[...]
+    accept_sample = u < ratio
+    # Greedy: accept iff y_j is the argmax of the τ-blended logits.
+    blend = (1.0 - tau_j)[:, None] * tlg + tau_j[:, None] * dl
+    accept_greedy = jnp.argmax(blend, axis=-1).astype(jnp.int32) == y
+    accept = jnp.where(greedy, accept_greedy, accept_sample)
+    accept_prob = jnp.where(greedy, accept_greedy.astype(jnp.float32), ratio)
+
+    prefix = jnp.cumprod(accept.astype(jnp.int32))
+    k = jnp.sum(prefix).astype(jnp.int32)  # accepted span length, 0..G
+
+    # --- correction token at row k ---
+    # k < G  -> residual resample from (P̃_t - P_d)_+ at row k
+    # k == G -> bonus token from the target distribution at row G
+    all_accepted = k >= gamma
+
+    mix_k = jax.lax.dynamic_slice_in_dim(mix, jnp.minimum(k, gamma - 1), 1, 0)[0]
+    pd_k = jax.lax.dynamic_slice_in_dim(p_d, jnp.minimum(k, gamma - 1), 1, 0)[0]
+    resid = jnp.maximum(mix_k - pd_k, 0.0)
+    resid_mass = jnp.sum(resid)
+    resid = jnp.where(resid_mass > EPS, resid / jnp.maximum(resid_mass, EPS), mix_k)
+
+    bonus_logits = tl[gamma] * inv_temp
+    bm = jnp.max(bonus_logits)
+    bonus_p = jnp.exp(bonus_logits - bm)
+    bonus_p = bonus_p / jnp.sum(bonus_p)
+
+    p_corr = jnp.where(all_accepted, bonus_p, resid)  # [V]
+    u_s = jax.lax.dynamic_slice_in_dim(u_sample_ref[...], k, 1, 0)[0]
+    cdf = jnp.cumsum(p_corr)
+    corr_sampled = jnp.minimum(
+        jnp.sum((cdf <= u_s).astype(jnp.int32)), vocab - 1
+    ).astype(jnp.int32)
+
+    # Greedy correction: target argmax at row k (or bonus row G).
+    t_row_k = jax.lax.dynamic_slice_in_dim(tl, k, 1, 0)[0]
+    corr_greedy = jnp.argmax(t_row_k).astype(jnp.int32)
+    corr = jnp.where(greedy, corr_greedy, corr_sampled)
+
+    # --- outputs ---
+    idx_w = jax.lax.broadcasted_iota(jnp.int32, (w,), 0)
+    y_pad = jnp.concatenate([y, jnp.zeros((1,), jnp.int32)])
+    out_tokens_ref[...] = jnp.where(
+        idx_w < k, y_pad, jnp.where(idx_w == k, corr, 0)
+    ).astype(jnp.int32)
+    accept_count_ref[...] = k.reshape(1)
+    key_flags_ref[...] = key.astype(jnp.int32)
+    stats = jnp.stack([h_d, h_t, pt_y, pd_y, normmatch, accept_prob], axis=1)
+    stats_ref[...] = stats.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def verify_window(
+    t_logits, d_logits, d_tokens, u_accept, u_sample, knobs, *, interpret: bool = True
+):
+    """Run one adaptive speculative verification round.
+
+    Args:
+      t_logits: [gamma+1, V] target logits over the verify window.
+      d_logits: [gamma, V]   draft logits at each drafted position.
+      d_tokens: [gamma] int32 drafted tokens.
+      u_accept: [gamma] uniforms for the acceptance tests.
+      u_sample: [gamma+1] uniforms for the correction sample at each
+                possible rejection position (index gamma = bonus token).
+      knobs:    [8] f32 — [tau, lam1, lam2, lam3, temp, adaptive, 0, 0].
+
+    Returns:
+      out_tokens   [gamma+1] int32 — tokens to commit: rows 0..k-1 are the
+                   accepted draft tokens, row k is the correction/bonus
+                   token; rows past k are zero. Always commits k+1 tokens.
+      accept_count [1] int32 — k.
+      key_flags    [gamma] int32 — Eq. 7 key-token indicators.
+      stats        [gamma, 6] f32 — see STAT_* layout.
+    """
+    gamma, vocab = d_logits.shape
+    assert t_logits.shape == (gamma + 1, vocab)
+    assert vocab % V_BLOCK == 0
+    kernel = functools.partial(_verify_kernel, gamma=gamma, vocab=vocab)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((gamma + 1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((gamma,), jnp.int32),
+            jax.ShapeDtypeStruct((gamma, N_STATS), jnp.float32),
+        ),
+        interpret=interpret,
+    )(t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)

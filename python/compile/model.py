@@ -1,0 +1,242 @@
+"""L2: the target/draft transformer in pure JAX, splittable into pipeline
+stages for decentralized execution.
+
+The model is a standard pre-LN GPT: learned token + position embeddings,
+`n_layers` blocks of (LN → MHA over a KV cache → residual, LN → GeLU MLP →
+residual), final LN, untied unembedding. Attention inside each block is
+the L1 Pallas kernel (`kernels.attention.cached_attention`).
+
+Everything here is *build-time only*: `aot.py` lowers the stage functions
+to HLO text with weights as runtime parameters, and the Rust runtime calls
+them via PJRT. Functions are pure; the KV cache is threaded in/out.
+
+Weight pytrees are flat ``{name: array}`` dicts with deterministic
+name ordering (see `param_names`) so the Rust side can bind the weights
+blob to HLO parameters positionally.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MODEL, ModelConfig
+from .kernels.attention import cached_attention
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def layer_param_shapes(cfg: ModelConfig = MODEL):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "ln1_scale": (d,),
+        "ln1_bias": (d,),
+        "wq": (d, d),
+        "wk": (d, d),
+        "wv": (d, d),
+        "wo": (d, d),
+        "ln2_scale": (d,),
+        "ln2_bias": (d,),
+        "w1": (d, f),
+        "b1": (f,),
+        "w2": (f, d),
+        "b2": (d,),
+    }
+
+
+def param_names(role: str, n_layers: int, cfg: ModelConfig = MODEL):
+    """Ordered parameter names for a stage of `n_layers` layers.
+
+    role ∈ {first, mid, last, full}. The order here IS the HLO parameter
+    order (aot.py passes them positionally) and is recorded in
+    manifest.json for the Rust loader.
+    """
+    names = []
+    if role in ("first", "full"):
+        names += ["embed", "pos_embed"]
+    for i in range(n_layers):
+        names += [f"layer{i}.{k}" for k in layer_param_shapes(cfg)]
+    if role in ("last", "full"):
+        names += ["lnf_scale", "lnf_bias", "unembed"]
+    return names
+
+
+def param_shape(name: str, cfg: ModelConfig = MODEL):
+    if name == "embed":
+        return (cfg.vocab, cfg.d_model)
+    if name == "pos_embed":
+        return (cfg.max_seq, cfg.d_model)
+    if name in ("lnf_scale", "lnf_bias"):
+        return (cfg.d_model,)
+    if name == "unembed":
+        return (cfg.d_model, cfg.vocab)
+    layer, key = name.split(".", 1)
+    assert layer.startswith("layer")
+    return layer_param_shapes(cfg)[key]
+
+
+def init_target_params(seed: int, cfg: ModelConfig = MODEL):
+    """Full-model weights, random but seed-fixed (numpy for determinism)."""
+    rng = np.random.default_rng(seed)
+    params = {}
+
+    def mat(shape, scale):
+        return rng.normal(0.0, scale, size=shape).astype(np.float32)
+
+    d = cfg.d_model
+    params["embed"] = mat((cfg.vocab, d), 1.0)
+    params["pos_embed"] = mat((cfg.max_seq, d), 0.3)
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        params[p + "ln1_scale"] = np.ones(d, np.float32)
+        params[p + "ln1_bias"] = np.zeros(d, np.float32)
+        params[p + "wq"] = mat((d, d), 1.0 / math.sqrt(d))
+        params[p + "wk"] = mat((d, d), 1.0 / math.sqrt(d))
+        params[p + "wv"] = mat((d, d), 1.0 / math.sqrt(d))
+        # Scale wo/w2 down with depth (GPT-2-style init) so the residual
+        # stream stays sane and logits land in a realistic entropy band.
+        params[p + "wo"] = mat((d, d), 1.0 / (math.sqrt(d) * math.sqrt(2 * cfg.n_layers)))
+        params[p + "ln2_scale"] = np.ones(d, np.float32)
+        params[p + "ln2_bias"] = np.zeros(d, np.float32)
+        params[p + "w1"] = mat((d, cfg.d_ff), 1.0 / math.sqrt(d))
+        params[p + "b1"] = np.zeros(cfg.d_ff, np.float32)
+        params[p + "w2"] = mat((cfg.d_ff, d), 1.0 / (math.sqrt(cfg.d_ff) * math.sqrt(2 * cfg.n_layers)))
+        params[p + "b2"] = np.zeros(d, np.float32)
+    params["lnf_scale"] = np.ones(d, np.float32)
+    params["lnf_bias"] = np.zeros(d, np.float32)
+    params["unembed"] = mat((d, cfg.vocab), 1.0 / math.sqrt(d))
+    return params
+
+
+def make_draft_params(target_params, sigma: float, seed: int, cfg: ModelConfig = MODEL):
+    """Draft = first `draft_layers` of the target + shared embed/head, with
+    Gaussian weight perturbation of scale sigma·rms(w) per matrix.
+
+    sigma is the draft↔target agreement knob (DESIGN.md §3): sigma=0 is a
+    pure layer-truncation ("self-speculative") draft; larger sigma lowers
+    acceptance. The draft reuses the target's embed/unembed so its logits
+    live in the same space.
+    """
+    rng = np.random.default_rng(seed + 1)
+    draft = {}
+    for name in param_names("full", cfg.draft_layers, cfg):
+        arr = np.array(target_params[name], np.float32)
+        if sigma > 0.0 and arr.ndim >= 2:  # perturb matrices, not LN/bias
+            rms = float(np.sqrt(np.mean(arr * arr)) + 1e-12)
+            arr = arr + rng.normal(0.0, sigma * rms, size=arr.shape).astype(np.float32)
+        draft[name] = arr
+    return draft
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, scale, bias):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * scale + bias
+
+
+def _block(params, prefix, h, k_cache, v_cache, pos, cfg, interpret):
+    """One transformer block over `W` new positions.
+
+    h: [W, D]; k_cache/v_cache: [S, H, Dh] for THIS layer.
+    Returns (h, new_k_cache, new_v_cache).
+    """
+    w = h.shape[0]
+    nh, dh = cfg.n_heads, cfg.head_dim
+    x = _layernorm(h, params[prefix + "ln1_scale"], params[prefix + "ln1_bias"])
+    q = (x @ params[prefix + "wq"]).reshape(w, nh, dh)
+    k = (x @ params[prefix + "wk"]).reshape(w, nh, dh)
+    v = (x @ params[prefix + "wv"]).reshape(w, nh, dh)
+    new_k = jax.lax.dynamic_update_slice_in_dim(k_cache, k, pos, axis=0)
+    new_v = jax.lax.dynamic_update_slice_in_dim(v_cache, v, pos, axis=0)
+    attn = cached_attention(q, new_k, new_v, pos, interpret=interpret)
+    h = h + attn.reshape(w, cfg.d_model) @ params[prefix + "wo"]
+    x = _layernorm(h, params[prefix + "ln2_scale"], params[prefix + "ln2_bias"])
+    x = jax.nn.gelu(x @ params[prefix + "w1"] + params[prefix + "b1"])
+    h = h + x @ params[prefix + "w2"] + params[prefix + "b2"]
+    return h, new_k, new_v
+
+
+def stage_forward(
+    role: str,
+    params,
+    x,
+    k_cache,
+    v_cache,
+    pos,
+    cfg: ModelConfig = MODEL,
+    interpret: bool = True,
+):
+    """Forward one pipeline stage.
+
+    Args:
+      role: 'first' | 'mid' | 'last' | 'full'.
+      params: flat dict with this stage's tensors (layer indices local,
+        i.e. every stage's layers are named layer0..layer{L-1}).
+      x: tokens [W] int32 for first/full, hidden [W, D] otherwise.
+      k_cache/v_cache: [L_stage, S, H, Dh] caches for this stage's layers.
+      pos: scalar int32 — write/read frontier.
+
+    Returns (out, new_k_cache, new_v_cache) where out is hidden [W, D]
+    (first/mid) or logits [W, V] (last/full).
+    """
+    n_layers = k_cache.shape[0]
+    if role in ("first", "full"):
+        w = x.shape[0]
+        positions = pos + jnp.arange(w, dtype=jnp.int32)
+        h = params["embed"][x] + params["pos_embed"][positions]
+    else:
+        h = x
+
+    new_ks, new_vs = [], []
+    for i in range(n_layers):
+        h, nk, nv = _block(
+            params, f"layer{i}.", h, k_cache[i], v_cache[i], pos, cfg, interpret
+        )
+        new_ks.append(nk)
+        new_vs.append(nv)
+    new_k = jnp.stack(new_ks)
+    new_v = jnp.stack(new_vs)
+
+    if role in ("last", "full"):
+        h = _layernorm(h, params["lnf_scale"], params["lnf_bias"])
+        out = h @ params["unembed"]
+    else:
+        out = h
+    return out, new_k, new_v
+
+
+def full_forward(params, tokens, k_cache, v_cache, pos, cfg=MODEL, interpret=True):
+    """Whole model in one call (oracle for stage-composition tests)."""
+    return stage_forward("full", params, tokens, k_cache, v_cache, pos, cfg, interpret)
+
+
+def draft_step(params, token, k_cache, v_cache, pos, temp, uniform, cfg=MODEL, interpret=True):
+    """One autoregressive draft step with fused sampling.
+
+    token: [1] int32 (the last committed/drafted token);
+    temp/uniform: scalar f32. Returns (next_token[1], logits[1,V], nk, nv).
+    temp <= 0 → greedy argmax.
+    """
+    logits, nk, nv = stage_forward("full", params, token, k_cache, v_cache, pos, cfg, interpret)
+    row = logits[0]
+    greedy = temp <= 0.0
+    inv_temp = jnp.where(greedy, 1.0, 1.0 / jnp.maximum(temp, 1e-9))
+    p = jax.nn.softmax(row * inv_temp)
+    cdf = jnp.cumsum(p)
+    sampled = jnp.minimum(
+        jnp.sum((cdf <= uniform).astype(jnp.int32)), cfg.vocab - 1
+    ).astype(jnp.int32)
+    tok = jnp.where(greedy, jnp.argmax(row).astype(jnp.int32), sampled)
+    return tok.reshape(1), logits, nk, nv
+
+
+def empty_cache(n_layers: int, cfg: ModelConfig = MODEL):
+    shape = (n_layers, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

@@ -1,0 +1,115 @@
+"""Artifact/manifest schema consistency — the contract the Rust loader
+depends on. Runs against the artifacts/ directory if present (make
+artifacts), otherwise validates the in-memory enumeration only.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+from compile.config import EXPORT, MODEL, layers_per_stage, stage_roles
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_enumeration_covers_all_shard_counts():
+    arts = aot.enumerate_artifacts()
+    for n in EXPORT.shard_counts:
+        lps = layers_per_stage(n)
+        for role in set(stage_roles(n)):
+            for g in EXPORT.gammas:
+                assert f"target_{role}{lps}_w{g+1}" in arts
+            assert f"target_{role}{lps}_w1" in arts
+            assert f"target_{role}{lps}_w{MODEL.prefill_window}" in arts
+    for g in EXPORT.gammas:
+        assert f"verify_g{g}" in arts
+    for v in EXPORT.draft_variants:
+        assert f"draft{v.layers}_step" in arts
+
+
+def test_param_name_order_is_deterministic():
+    a = M.param_names("first", 4)
+    b = M.param_names("first", 4)
+    assert a == b
+    assert a[0] == "embed" and a[1] == "pos_embed"
+    last = M.param_names("last", 2)
+    assert last[-3:] == ["lnf_scale", "lnf_bias", "unembed"]
+
+
+@needs_artifacts
+def test_manifest_weight_offsets_in_bounds():
+    m = json.load(open(MANIFEST))
+    blob = os.path.getsize(os.path.join(ART_DIR, m["weights_file"]))
+    for set_name, entry in m["weight_sets"].items():
+        for name, rec in entry.items():
+            size = int(np.prod(rec["shape"])) * 4
+            assert rec["offset"] + size <= blob, (set_name, name)
+
+
+@needs_artifacts
+def test_manifest_artifacts_exist_and_params_resolvable():
+    m = json.load(open(MANIFEST))
+    for name, art in m["artifacts"].items():
+        path = os.path.join(ART_DIR, art["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 1000, name
+        if name.startswith("target_"):
+            wset = m["weight_sets"]["target"]
+            role, lps = art["role"], art["layers"]
+            # stage-local layer names map onto global indices for some base
+            for p in art["params"]:
+                if not p.startswith("layer"):
+                    assert p in wset, (name, p)
+        elif name.startswith("draft"):
+            depth = art["layers"]
+            cands = [
+                f"draft_{v.name}" for v in EXPORT.draft_variants if v.layers == depth
+            ]
+            assert cands
+            for p in art["params"]:
+                assert p in m["weight_sets"][cands[0]], (name, p)
+
+
+@needs_artifacts
+def test_manifest_io_schema():
+    m = json.load(open(MANIFEST))
+    for name, art in m["artifacts"].items():
+        if art["kind"] == "stage":
+            assert [i["name"] for i in art["inputs"]] == ["x", "k_cache", "v_cache", "pos"]
+            assert [o["name"] for o in art["outputs"]] == ["out", "k_cache", "v_cache"]
+            w = art["window"]
+            assert art["inputs"][0]["shape"][0] == w
+            assert art["outputs"][0]["shape"][0] == w
+        elif art["kind"] == "verify":
+            g = art["gamma"]
+            assert art["inputs"][0]["shape"] == [g + 1, m["model"]["vocab"]]
+            assert art["outputs"][0]["shape"] == [g + 1]
+
+
+@needs_artifacts
+def test_hlo_text_is_parsable_shape():
+    """Cheap sanity: HLO text has an ENTRY computation and parameters."""
+    m = json.load(open(MANIFEST))
+    art = m["artifacts"]["verify_g4"]
+    text = open(os.path.join(ART_DIR, art["file"])).read()
+    assert "ENTRY" in text
+    assert "parameter(0)" in text
+
+
+@needs_artifacts
+def test_draft_variant_agreement_ladder():
+    """Calibration stats recorded and ordered: deeper drafts agree more."""
+    m = json.load(open(MANIFEST))
+    v = {x["name"]: x for x in m["draft_variants"]}
+    assert v["d6_s000"]["overlap"] > v["d4_s000"]["overlap"] > 0.3
+    assert v["d4_s000"]["overlap"] >= v["d2_s000"]["overlap"] - 0.05
+    for x in m["draft_variants"]:
+        assert 0.0 <= x["greedy_agree"] <= 1.0

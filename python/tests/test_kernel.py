@@ -1,0 +1,94 @@
+"""Pallas attention kernel vs the dense-mask oracle (ref.attention_ref).
+
+Hypothesis sweeps shapes/positions; fixed cases pin the exact artifact
+shapes the Rust runtime executes (W ∈ {1, 5, 9, 64}, S = 192).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.config import MODEL
+from compile.kernels.attention import SEQ_BLOCK, cached_attention
+from compile.kernels.ref import attention_ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _check(w, h, dh, s, pos, seed=0, atol=2e-5):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, w, h, dh)
+    k = _rand(rng, s, h, dh)
+    v = _rand(rng, s, h, dh)
+    out = cached_attention(q, k, v, pos)
+    ref = attention_ref(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=atol, rtol=1e-4)
+
+
+@pytest.mark.parametrize("w", [1, 5, 9, 64])
+def test_artifact_shapes(w):
+    """The exact shapes exported by aot.py."""
+    pos = 40 if w < 64 else 0
+    _check(w, MODEL.n_heads, MODEL.head_dim, MODEL.max_seq, pos)
+
+
+@pytest.mark.parametrize("pos", [0, 1, 63, 64, 100, MODEL.max_seq - 9])
+def test_positions(pos):
+    _check(9, MODEL.n_heads, MODEL.head_dim, MODEL.max_seq, pos)
+
+
+def test_single_token_attends_to_prefix_only():
+    """q at pos P must ignore cache rows > P even if they hold garbage."""
+    rng = np.random.default_rng(3)
+    s, h, dh, pos = 192, 2, 8, 17
+    q = _rand(rng, 1, h, dh)
+    k = _rand(rng, s, h, dh)
+    v = _rand(rng, s, h, dh)
+    out1 = cached_attention(q, k, v, pos)
+    # poison everything past the frontier
+    k2 = k.at[pos + 1 :].set(1e3)
+    v2 = v.at[pos + 1 :].set(-1e3)
+    out2 = cached_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+def test_pos_zero_is_causal():
+    """At pos=0 the window is purely causal (prefill)."""
+    rng = np.random.default_rng(4)
+    w, h, dh, s = 64, 4, 32, 192
+    q = _rand(rng, w, h, dh)
+    k = _rand(rng, s, h, dh)
+    v = _rand(rng, s, h, dh)
+    out = cached_attention(q, k, v, 0)
+    ref = attention_ref(q, k, v, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.sampled_from([1, 2, 5, 9, 16, 64]),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16, 32]),
+    s_blocks=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    data=st.data(),
+)
+def test_hypothesis_sweep(w, h, dh, s_blocks, seed, data):
+    s = s_blocks * SEQ_BLOCK
+    pos = data.draw(st.integers(min_value=0, max_value=s - w))
+    _check(w, h, dh, s, pos, seed=seed)
+
+
+def test_scale_invariance_of_uniform_values():
+    """If V rows are constant, output equals that constant regardless of K."""
+    rng = np.random.default_rng(7)
+    w, h, dh, s = 5, 2, 16, 64
+    q = _rand(rng, w, h, dh)
+    k = _rand(rng, s, h, dh)
+    v = jnp.ones((s, h, dh), jnp.float32) * 3.5
+    out = cached_attention(q, k, v, 30)
+    np.testing.assert_allclose(np.asarray(out), 3.5, atol=1e-5)

@@ -1,0 +1,132 @@
+"""L2 model invariants: pipeline-stage composition equals the monolithic
+forward, KV-cache decode equals recomputation from scratch, and the draft
+step's fused sampling is correct.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.config import MODEL, layers_per_stage, stage_roles
+
+
+@pytest.fixture(scope="module")
+def params():
+    p = M.init_target_params(20250710)
+    p["unembed"] = p["unembed"] * MODEL.logit_scale
+    return p
+
+
+def stage_params(params, role, stage_idx, lps):
+    """Slice global layer indices into a stage-local param dict."""
+    out = {}
+    for name in M.param_names(role, lps):
+        if name.startswith("layer"):
+            local = int(name.split(".")[0][5:])
+            out[name] = params[f"layer{stage_idx * lps + local}." + name.split(".", 1)[1]]
+        else:
+            out[name] = params[name]
+    return out
+
+
+def run_pipeline(params, n_shards, tokens, caches, pos):
+    """Compose stage_forward calls the way the Rust coordinator does."""
+    lps = layers_per_stage(n_shards)
+    roles = stage_roles(n_shards)
+    x = tokens
+    new_caches = []
+    for i, role in enumerate(roles):
+        sp = stage_params(params, role, i, lps)
+        kc, vc = caches[i]
+        x, nk, nv = M.stage_forward(role, sp, x, kc, vc, pos)
+        new_caches.append((nk, nv))
+    return x, new_caches
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 8])
+def test_stage_composition_matches_full(params, n_shards):
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, MODEL.vocab, size=(8,)).astype(np.int32))
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    full, _, _ = M.full_forward(params, tokens, kc, vc, 0)
+    lps = layers_per_stage(n_shards)
+    caches = [M.empty_cache(lps) for _ in range(n_shards)]
+    piped, _ = run_pipeline(params, n_shards, tokens, caches, 0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(piped), atol=2e-4, rtol=1e-4)
+
+
+def test_incremental_decode_matches_recompute(params):
+    """prefill(16) + decode window(5) == one forward over all 21 tokens."""
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, MODEL.vocab, size=(21,)).astype(np.int32)
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    all_logits, _, _ = M.full_forward(params, jnp.asarray(toks), kc, vc, 0)
+
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    _, kc, vc = M.full_forward(params, jnp.asarray(toks[:16]), kc, vc, 0)
+    win, _, _ = M.full_forward(params, jnp.asarray(toks[16:]), kc, vc, 16)
+    np.testing.assert_allclose(
+        np.asarray(all_logits[16:]), np.asarray(win), atol=2e-4, rtol=1e-4
+    )
+
+
+def test_prefill_padding_is_masked(params):
+    """Garbage tokens past the true prompt length must not change logits
+    at positions < prompt_len (the padded-prefill invariant the Rust
+    coordinator relies on)."""
+    rng = np.random.default_rng(3)
+    plen = 11
+    base = rng.integers(0, MODEL.vocab, size=(16,)).astype(np.int32)
+    alt = base.copy()
+    alt[plen:] = rng.integers(0, MODEL.vocab, size=(16 - plen,))
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    la, _, _ = M.full_forward(params, jnp.asarray(base), kc, vc, 0)
+    lb, _, _ = M.full_forward(params, jnp.asarray(alt), kc, vc, 0)
+    np.testing.assert_allclose(
+        np.asarray(la[:plen]), np.asarray(lb[:plen]), atol=1e-5
+    )
+
+
+def test_draft_step_greedy_is_argmax(params):
+    cfg = dataclasses.replace(MODEL, draft_layers=2)
+    dp = M.make_draft_params(params, 0.0, 20250710, cfg)
+    dk, dv = M.empty_cache(2)
+    tok = jnp.asarray(np.array([7], np.int32))
+    nxt, logits, _, _ = M.draft_step(dp, tok, dk, dv, 0, 0.0, 0.5, cfg)
+    assert int(nxt[0]) == int(jnp.argmax(logits[0]))
+
+
+def test_draft_step_sampling_respects_cdf(params):
+    """uniform=0 must give the first token with nonzero probability mass;
+    uniform→1 the last."""
+    cfg = dataclasses.replace(MODEL, draft_layers=2)
+    dp = M.make_draft_params(params, 0.0, 20250710, cfg)
+    dk, dv = M.empty_cache(2)
+    tok = jnp.asarray(np.array([7], np.int32))
+    n0, logits, _, _ = M.draft_step(dp, tok, dk, dv, 0, 1.0, 0.0, cfg)
+    p = np.array(jnp.exp(logits[0] - jnp.max(logits[0])))
+    p /= p.sum()
+    cdf = np.cumsum(p)
+    assert int(n0[0]) == int((cdf <= 0.0).sum())
+    n1, _, _, _ = M.draft_step(dp, tok, dk, dv, 0, 1.0, 0.999999, cfg)
+    assert int(n1[0]) >= int((cdf <= 0.999).sum()) - 1
+
+
+def test_draft_variants_share_logit_space(params):
+    """Draft logits must correlate with target logits (shared embed/head)."""
+    cfg = dataclasses.replace(MODEL, draft_layers=6)
+    dp = M.make_draft_params(params, 0.0, 20250710, cfg)
+    rng = np.random.default_rng(5)
+    toks = jnp.asarray(rng.integers(0, MODEL.vocab, size=(8,)).astype(np.int32))
+    kc, vc = M.empty_cache(MODEL.n_layers)
+    dk, dv = M.empty_cache(6)
+    lt, _, _ = M.full_forward(params, toks, kc, vc, 0)
+    ld, _, _ = M.full_forward(dp, toks, dk, dv, 0)
+    lt = np.asarray(lt[-1])
+    ld = np.asarray(ld[-1])
+    corr = np.corrcoef(lt, ld)[0, 1]
+    assert corr > 0.5, corr

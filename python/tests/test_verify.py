@@ -1,0 +1,182 @@
+"""DSD verification kernel vs the scalar-loop oracle, plus semantic
+properties of the oracle itself (losslessness of strict verification,
+relaxation raising acceptance, key tokens pinning τ to 0).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import verify_ref
+from compile.kernels.verify import (
+    KNOB_ADAPTIVE,
+    KNOB_LAM1,
+    KNOB_LAM2,
+    KNOB_LAM3,
+    KNOB_TAU,
+    KNOB_TEMP,
+    N_KNOBS,
+    verify_window,
+)
+
+
+def knobs(tau=0.0, lam1=1.5, lam2=0.3, lam3=0.5, temp=1.0, adaptive=1.0):
+    k = np.zeros(N_KNOBS, np.float32)
+    k[KNOB_TAU], k[KNOB_LAM1], k[KNOB_LAM2] = tau, lam1, lam2
+    k[KNOB_LAM3], k[KNOB_TEMP], k[KNOB_ADAPTIVE] = lam3, temp, adaptive
+    return k
+
+
+def make_case(seed, gamma=8, vocab=512, corr=1.0, scale=3.0):
+    """Random logits; `corr` controls draft/target correlation."""
+    rng = np.random.default_rng(seed)
+    tl = rng.normal(size=(gamma + 1, vocab)).astype(np.float32) * scale
+    noise = rng.normal(size=(gamma, vocab)).astype(np.float32) * scale
+    dl = corr * tl[:gamma] + (1.0 - corr) * noise
+    # draft tokens sampled from the draft distribution (as the system does)
+    dt = np.zeros(gamma, np.int32)
+    for j in range(gamma):
+        p = np.exp(dl[j] - dl[j].max())
+        p /= p.sum()
+        dt[j] = rng.choice(vocab, p=p)
+    ua = rng.uniform(size=gamma).astype(np.float32)
+    us = rng.uniform(size=gamma + 1).astype(np.float32)
+    return tl, dl, dt, ua, us
+
+
+def run_both(tl, dl, dt, ua, us, kn):
+    out = verify_window(
+        jnp.asarray(tl), jnp.asarray(dl), jnp.asarray(dt),
+        jnp.asarray(ua), jnp.asarray(us), jnp.asarray(kn),
+    )
+    ref = verify_ref(tl, dl, dt, ua, us, kn)
+    return [np.asarray(o) for o in out], ref
+
+
+def assert_match(out, ref):
+    ot, ac, kf, st_ = out
+    rot, rac, rkf, rst = ref
+    assert int(ac[0]) == int(rac[0]), (ac, rac)
+    np.testing.assert_array_equal(ot, rot)
+    np.testing.assert_array_equal(kf, rkf)
+    np.testing.assert_allclose(st_, rst, atol=3e-5, rtol=1e-3)
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.7, 1.0])
+@pytest.mark.parametrize("tau", [0.0, 0.2, 0.5, 0.8])
+@pytest.mark.parametrize("adaptive", [0.0, 1.0])
+def test_kernel_matches_ref_grid(temp, tau, adaptive):
+    tl, dl, dt, ua, us = make_case(42, gamma=8)
+    kn = knobs(tau=tau, temp=temp, adaptive=adaptive)
+    out, ref = run_both(tl, dl, dt, ua, us, kn)
+    assert_match(out, ref)
+
+
+@pytest.mark.parametrize("gamma", [1, 4, 8])
+def test_kernel_matches_ref_gammas(gamma):
+    tl, dl, dt, ua, us = make_case(7, gamma=gamma)
+    out, ref = run_both(tl, dl, dt, ua, us, knobs(tau=0.3))
+    assert_match(out, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    gamma=st.sampled_from([1, 4, 8]),
+    corr=st.sampled_from([0.0, 0.5, 0.9, 1.0]),
+    tau=st.floats(min_value=0.0, max_value=0.9),
+    temp=st.sampled_from([0.0, 0.5, 1.0, 1.5]),
+    adaptive=st.sampled_from([0.0, 1.0]),
+)
+def test_hypothesis_sweep(seed, gamma, corr, tau, temp, adaptive):
+    tl, dl, dt, ua, us = make_case(seed, gamma=gamma, vocab=256, corr=corr)
+    kn = knobs(tau=tau, temp=temp, adaptive=adaptive)
+    out, ref = run_both(tl, dl, dt, ua, us, kn)
+    assert_match(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# Semantic properties (tested on the oracle; the kernel == oracle above)
+# ---------------------------------------------------------------------------
+
+def test_tau_zero_equals_strict():
+    """adaptive with τ=0 and thresholds that never fire == strict verify."""
+    tl, dl, dt, ua, us = make_case(9, gamma=8)
+    strict = verify_ref(tl, dl, dt, ua, us, knobs(adaptive=0.0))
+    adaptive = verify_ref(
+        tl, dl, dt, ua, us, knobs(tau=0.0, lam1=1e9, lam2=1e9, lam3=-1.0, adaptive=1.0)
+    )
+    assert int(strict[1][0]) == int(adaptive[1][0])
+    np.testing.assert_array_equal(strict[0], adaptive[0])
+
+
+def test_relaxation_raises_mean_acceptance():
+    """E[k] must not drop as τ grows (statistical, many seeds)."""
+    ks = {0.0: 0, 0.5: 0}
+    n = 200
+    for seed in range(n):
+        tl, dl, dt, ua, us = make_case(seed, gamma=8, vocab=128, corr=0.6)
+        for tau in ks:
+            kn = knobs(tau=tau, lam1=1e9, lam2=1e9, lam3=-1.0)  # no key tokens
+            ks[tau] += int(verify_ref(tl, dl, dt, ua, us, kn)[1][0])
+    assert ks[0.5] > ks[0.0], ks
+
+
+def test_key_tokens_disable_relaxation():
+    """With λ3=2 (>1 ⇒ every token is key), τ has no effect."""
+    for seed in range(20):
+        tl, dl, dt, ua, us = make_case(seed, gamma=8, vocab=128, corr=0.6)
+        a = verify_ref(tl, dl, dt, ua, us, knobs(tau=0.8, lam3=2.0))
+        b = verify_ref(tl, dl, dt, ua, us, knobs(tau=0.0, lam3=2.0))
+        assert int(a[1][0]) == int(b[1][0])
+        np.testing.assert_array_equal(a[0], b[0])
+        assert np.all(a[2] == 1)  # everything flagged key
+
+
+def test_identical_models_accept_everything():
+    """P_d == P_t ⇒ min(1, ratio) = 1 ⇒ full window accepted + bonus."""
+    tl, dl, dt, ua, us = make_case(11, gamma=8, corr=1.0)
+    out = verify_ref(tl, dl, dt, ua, us, knobs(adaptive=0.0))
+    assert int(out[1][0]) == 8
+    np.testing.assert_array_equal(out[0][:8], dt)
+
+
+def test_greedy_strict_is_argmax_match():
+    tl, dl, dt, ua, us = make_case(13, gamma=8)
+    dt = np.argmax(tl[:8], axis=-1).astype(np.int32)  # draft == target argmax
+    out = verify_ref(tl, dl, dt, ua, us, knobs(temp=0.0, adaptive=0.0))
+    assert int(out[1][0]) == 8
+    assert out[0][8] == np.argmax(tl[8])  # bonus = target argmax
+
+
+def test_strict_verification_is_lossless():
+    """The committed first token of a round must be distributed exactly as
+    a direct sample from P_t — the Leviathan residual-sampling theorem.
+
+    Empirical: small vocab, many trials, chi-square-style bound.
+    """
+    vocab, gamma, trials = 16, 1, 30000
+    rng = np.random.default_rng(123)
+    tl = rng.normal(size=(gamma + 1, vocab)).astype(np.float32) * 2.0
+    dl = (0.5 * tl[:gamma] + rng.normal(size=(gamma, vocab)).astype(np.float32)).astype(
+        np.float32
+    )
+    p_t = np.exp(tl[0] - tl[0].max())
+    p_t /= p_t.sum()
+    p_d = np.exp(dl[0] - dl[0].max())
+    p_d /= p_d.sum()
+
+    counts = np.zeros(vocab)
+    kn = knobs(adaptive=0.0)
+    for _ in range(trials):
+        y = rng.choice(vocab, p=p_d)
+        dt = np.array([y], np.int32)
+        ua = rng.uniform(size=gamma).astype(np.float32)
+        us = rng.uniform(size=gamma + 1).astype(np.float32)
+        out = verify_ref(tl, dl, dt, ua, us, kn)
+        counts[out[0][0]] += 1
+    emp = counts / trials
+    # max deviation ~ sqrt(p(1-p)/n); 5 sigma with p<=0.5 -> ~0.015
+    assert np.max(np.abs(emp - p_t)) < 0.015, np.max(np.abs(emp - p_t))

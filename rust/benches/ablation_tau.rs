@@ -1,0 +1,58 @@
+//! E5 (DESIGN.md §4): the paper's **τ ablation** — sweep the relaxation
+//! coefficient 0.0 → 0.8 and report the speed/accuracy trade-off.
+//!
+//! Paper shape: acceleration rises steadily toward ≈2.6×; accuracy loss
+//! stays small for τ ∈ [0.1, 0.3] (the default band) and grows beyond.
+//!
+//! Run: `cargo bench --bench ablation_tau`
+
+use std::rc::Rc;
+
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &["requests", "tokens", "nodes", "link_ms", "seed", "dataset"],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let requests = args.usize_or("requests", 3)?;
+    let tokens = args.usize_or("tokens", 40)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 15.0)?;
+    let seed = args.u64_or("seed", 20250710)?;
+    let dataset = args.str_or("dataset", "humaneval");
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Rc::new(Engine::from_dir(dir)?);
+
+    println!("# τ ablation ({dataset}; N={nodes}, t1={link_ms}ms, T=1.0, γ=8)");
+    let h = Harness::new(engine.clone(), &dataset, requests, tokens, seed)?;
+    let mut t = Table::new(
+        "relaxation coefficient sweep",
+        &["τ", "speedup", "avg len", "accept rate", "key rate", "acc", "Δacc vs base"],
+    );
+    let mut cfg0 = h.deploy(nodes, link_ms, 1);
+    cfg0.decode.max_new_tokens = tokens;
+    cfg0.decode.gamma = 8;
+    let base = h.run(cfg0.clone(), Policy::Autoregressive)?;
+    for tau in [0.0f32, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.8] {
+        let mut cfg = cfg0.clone();
+        cfg.decode.tau = tau;
+        let run = h.run(cfg, Policy::Dsd)?;
+        t.row(vec![
+            fnum(tau as f64, 1),
+            fnum(run.report.speedup_over(&base.report), 2),
+            fnum(run.report.accept.mean_committed(), 2),
+            fnum(run.report.accept.acceptance_rate(), 3),
+            fnum(run.report.accept.key_rate(), 3),
+            fnum(run.accuracy, 3),
+            fnum(run.accuracy - h.base_accuracy, 3),
+        ]);
+    }
+    t.print();
+    println!("\n(base acc at T=1.0: {:.3}; greedy reference = acc 1.0)", h.base_accuracy);
+    Ok(())
+}

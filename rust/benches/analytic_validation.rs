@@ -1,0 +1,89 @@
+//! E8 (DESIGN.md §4): validate the paper's closed forms (Eqs. 3–5, 9)
+//! against the discrete-event simulator and against a real engine run.
+//!
+//! * Eq. 3 / Eq. 4: simulated T_std and T_DSD must match the formulas
+//!   exactly when compute and links are constant.
+//! * Eq. 5: R_comm from the formula vs measured 1 − T_DSD/T_std.
+//! * Eq. 9: predicted speedup from (k̄, γ, t0, t1) vs the speedup the full
+//!   system actually measures.
+//!
+//! Run: `cargo bench --bench analytic_validation`
+
+use std::rc::Rc;
+
+use dsd::analysis::LatencyModel;
+use dsd::cluster::{LinkModel, PipelineSim, Topology};
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    println!("# Analytic validation — Eqs. 3, 4, 5, 9 vs simulation and system");
+
+    // ---- Part 1: formulas vs the discrete-event simulator ----
+    let mut t = Table::new(
+        "Eqs. 3-5 vs simulator (t0=4ms, t1=15ms, k tokens per round)",
+        &["N", "k", "T_std eq/sim (ms)", "T_dsd eq/sim (ms)", "R_comm eq/sim"],
+    );
+    for n in [2usize, 4, 8] {
+        for k in [2.0f64, 4.0, 8.0] {
+            let t0 = 4.0e-3;
+            let t1 = 15.0e-3;
+            let m = LatencyModel::new(t0, t1, n);
+            // simulator with matching constants; paper counts (N-1) hops,
+            // so the sim pass here omits the return hop.
+            let topo = Topology::uniform(n, LinkModel::wan(15.0, 0.0));
+            let mut sim = PipelineSim::new(topo, 1);
+            let stage = vec![(t0 * 1e9) as u64 / n as u64; n];
+            let mut now = 0;
+            for _ in 0..k as usize {
+                now = sim.pipeline_pass(now, &stage, 0, 0, false).finish;
+            }
+            let t_std_sim = now as f64 / 1e9;
+            sim.reset();
+            // DSD: k tokens' compute in one pass + one comm round
+            let stage_k = vec![(k * t0 * 1e9) as u64 / n as u64; n];
+            let t_dsd_sim = sim.pipeline_pass(0, &stage_k, 0, 0, false).finish as f64 / 1e9;
+            let r_sim = 1.0 - t_dsd_sim / t_std_sim;
+            t.row(vec![
+                n.to_string(),
+                fnum(k, 0),
+                format!("{:.1}/{:.1}", m.t_std(k) * 1e3, t_std_sim * 1e3),
+                format!("{:.1}/{:.1}", m.t_dsd(k) * 1e3, t_dsd_sim * 1e3),
+                format!("{:.3}/{:.3}", m.r_comm(k), r_sim),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- Part 2: Eq. 9 prediction vs the full system ----
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Rc::new(Engine::from_dir(dir)?);
+    let h = Harness::new(engine.clone(), "humaneval", 2, 32, 20250710)?;
+    let mut t = Table::new(
+        "Eq. 9 predicted vs measured speedup (HumanEval, γ=8)",
+        &["N", "t1 ms", "k̄", "S predicted", "S measured"],
+    );
+    for (n, link_ms) in [(4usize, 15.0f64), (4, 25.0), (8, 15.0)] {
+        let mut cfg = h.deploy(n, link_ms, 1);
+        cfg.decode.max_new_tokens = 32;
+        let base = h.run(cfg.clone(), Policy::Autoregressive)?;
+        let dsd = h.run(cfg, Policy::Dsd)?;
+        let measured = dsd.report.speedup_over(&base.report);
+        // calibrate t0 from the baseline run itself (per-token compute)
+        let t0 = base.report.compute_ns as f64 / base.report.tokens.max(1) as f64 / 1e9;
+        let k_mean = dsd.report.accept.mean_committed();
+        let m = LatencyModel::new(t0, link_ms * 1e-3, n);
+        t.row(vec![
+            n.to_string(),
+            fnum(link_ms, 0),
+            fnum(k_mean, 2),
+            fnum(m.speedup(k_mean, 8), 2),
+            fnum(measured, 2),
+        ]);
+    }
+    t.print();
+    println!("\n(Eq. 9 folds drafting/verification into ρ; measured includes them explicitly,\n so predicted ≳ measured by a modest factor is the expected relationship)");
+    Ok(())
+}

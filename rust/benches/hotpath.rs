@@ -1,0 +1,109 @@
+//! Hot-path micro-benchmarks (the criterion substitute; see Cargo.toml's
+//! offline note). These are the numbers the performance pass iterates on
+//! — EXPERIMENTS.md §Perf records before/after per change.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::rc::Rc;
+
+use dsd::cluster::{LinkModel, PipelineSim, Topology};
+use dsd::coordinator::{next_action, SeqView};
+use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs};
+use dsd::runtime::Engine;
+use dsd::sampling::softmax;
+use dsd::spec::host_verify;
+use dsd::util::bench::bench;
+use dsd::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Rc::new(Engine::from_dir(dir)?);
+    let dims = engine.manifest().model.clone();
+    let vocab = dims.vocab;
+    println!("# hot-path micro-benchmarks\n");
+
+    // --- engine stage calls per window size ---
+    let model = ShardedModel::new(engine.clone(), 2, "d6_s000")?;
+    model.warmup(&[4, 8])?;
+    let mut rng = Rng::new(1);
+    for w in [1usize, 5, 9, 64] {
+        let tokens: Vec<i32> = (0..w).map(|_| rng.below(vocab as u64) as i32).collect();
+        let mut cache = {
+            let [l, s, h, d] = model.stage_dims()[0];
+            KvCache::new(l, s, h, d)
+        };
+        let stage = &model.stages[0];
+        let r = bench(&format!("stage first4 w={w}"), 3, 20, || {
+            let _ = stage.run(w, &StageInput::Tokens(tokens.clone()), &mut cache, 0).unwrap();
+        });
+        println!("{}", r.line());
+    }
+
+    // --- draft step ---
+    {
+        let [l, s, h, d] = model.draft.cache_dims();
+        let mut cache = KvCache::new(l, s, h, d);
+        let r = bench("draft6 step", 3, 20, || {
+            let _ = model.draft.step(7, &mut cache, 0, 1.0, 0.5).unwrap();
+        });
+        println!("{}", r.line());
+    }
+
+    // --- verify kernel (engine) vs host reference ---
+    let gamma = 8;
+    let mut rng = Rng::new(2);
+    let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32).collect();
+    let d: Vec<f32> = (0..gamma * vocab).map(|_| rng.normal() as f32).collect();
+    let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
+    let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+    let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+    let knobs = VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
+    let r = bench("verify kernel g=8 (engine)", 3, 30, || {
+        let _ = model
+            .verify
+            .run(gamma, t.clone(), d.clone(), toks.clone(), ua.clone(), us.clone(), knobs)
+            .unwrap();
+    });
+    println!("{}", r.line());
+    let r = bench("verify host reference g=8", 3, 30, || {
+        let _ = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+    });
+    println!("{}", r.line());
+
+    // --- pure substrate paths ---
+    let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() as f32).collect();
+    let mut out = Vec::new();
+    let r = bench("softmax 512", 10, 1000, || {
+        let _ = softmax(&logits, &mut out);
+    });
+    println!("{}", r.line());
+
+    let topo = Topology::uniform(8, LinkModel::wan(15.0, 1.0));
+    let mut sim = PipelineSim::new(topo, 3);
+    let stage = vec![500_000u64; 8];
+    let r = bench("sim pipeline_pass N=8", 10, 1000, || {
+        let _ = sim.pipeline_pass(0, &stage, 4608, 18432, true);
+    });
+    println!("{}", r.line());
+
+    let views: Vec<SeqView> = (0..16)
+        .map(|idx| SeqView { idx, ready_at: (idx as u64) * 37 % 11, prefilled: idx % 2 == 0 })
+        .collect();
+    let r = bench("batcher next_action 16 seqs", 10, 10_000, || {
+        let _ = next_action(5, Some(100), true, &views);
+    });
+    println!("{}", r.line());
+
+    // --- engine upload/download accounting summary ---
+    let s = engine.stats();
+    println!(
+        "\nengine totals: {} execs, exec {:.1}ms, upload {:.1}ms ({}MB), download {:.1}ms ({}MB)",
+        s.executions,
+        s.exec_nanos as f64 / 1e6,
+        s.upload_nanos as f64 / 1e6,
+        s.bytes_uploaded / 1_000_000,
+        s.download_nanos as f64 / 1e6,
+        s.bytes_downloaded / 1_000_000,
+    );
+    Ok(())
+}

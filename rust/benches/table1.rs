@@ -1,0 +1,156 @@
+//! E1–E3 (DESIGN.md §4): regenerate the paper's **Table 1** — results and
+//! ablations across datasets and parameter settings.
+//!
+//! Paper shape to reproduce: Eagle3 ≈ 2.3–2.9× over the AR baseline at
+//! t=1.0 (≈3.6–4.8× at t=0), DSD adds 15–20%+ via adaptive verification
+//! with accuracy within noise of base for τ in [0.1, 0.3]; speedup stays
+//! ≈flat (~2.3–2.4×) as the latency ratio grows (system-level scaling
+//! block). Absolute numbers differ from the paper (simulated substrate);
+//! the ordering and factors are the reproduction target.
+//!
+//! Run: `cargo bench --bench table1 [-- --requests N --tokens M]`
+
+use std::rc::Rc;
+
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &["requests", "tokens", "nodes", "link_ms", "seed"],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let requests = args.usize_or("requests", 3)?;
+    let tokens = args.usize_or("tokens", 40)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 15.0)?;
+    let seed = args.u64_or("seed", 20250710)?;
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Rc::new(Engine::from_dir(dir)?);
+
+    println!("# Table 1 — results and ablations (N={nodes}, t1={link_ms}ms, {requests} req x {tokens} tok)");
+
+    // ---- Block 1: HumanEval, model A (Llama3.1-8B analog = d6_s000) ----
+    block_dataset(&engine, "humaneval", "Llama-analog", requests, tokens, nodes, link_ms, seed)?;
+
+    // ---- Block 2: HumanEval, model B (Qwen3-8B analog = d6_s005) + the
+    //      relaxation ladder the paper reports as r=0.92..0.82 ----
+    relaxation_ladder(&engine, requests, tokens, nodes, link_ms, seed)?;
+
+    // ---- Block 3: system-level scaling (latency ratio sweep) ----
+    latency_ratio_block(&engine, requests, tokens, nodes, seed)?;
+
+    // ---- Block 4: GSM8K ----
+    block_dataset(&engine, "gsm8k", "Llama-analog", requests, tokens, nodes, link_ms, seed)?;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn block_dataset(
+    engine: &Rc<Engine>,
+    dataset: &str,
+    model_tag: &str,
+    requests: usize,
+    tokens: usize,
+    nodes: usize,
+    link_ms: f64,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let h = Harness::new(engine.clone(), dataset, requests, tokens, seed)?;
+    let mut t = Table::new(
+        format!("{dataset} ({model_tag})"),
+        &["setting", "base acc", "sys acc", "speedup", "avg len"],
+    );
+    for (label, temp, policy, tau) in [
+        ("t=0.0 eagle3", 0.0f32, Policy::Eagle3, 0.0f32),
+        ("t=0.0 dsd", 0.0, Policy::Dsd, 0.2),
+        ("t=1.0 eagle3", 1.0, Policy::Eagle3, 0.0),
+        ("t=1.0 dsd", 1.0, Policy::Dsd, 0.2),
+    ] {
+        let mut cfg = h.deploy(nodes, link_ms, 1);
+        cfg.decode.temp = temp;
+        cfg.decode.tau = tau;
+        cfg.decode.max_new_tokens = tokens;
+        let base = h.run(cfg.clone(), Policy::Autoregressive)?;
+        let run = h.run(cfg, policy)?;
+        let base_acc = if temp == 0.0 { 1.0 } else { h.base_accuracy };
+        t.row(vec![
+            label.to_string(),
+            fnum(base_acc, 4),
+            fnum(run.accuracy, 4),
+            fnum(run.report.speedup_over(&base.report), 2),
+            fnum(run.report.accept.mean_committed(), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn relaxation_ladder(
+    engine: &Rc<Engine>,
+    requests: usize,
+    tokens: usize,
+    nodes: usize,
+    link_ms: f64,
+    seed: u64,
+) -> anyhow::Result<()> {
+    let h = Harness::new(engine.clone(), "humaneval", requests, tokens, seed)?;
+    let mut t = Table::new(
+        "HumanEval (Qwen-analog): relaxation ladder (paper r=0.92..0.82 ≈ τ ladder)",
+        &["setting", "base acc", "dsd acc", "speedup", "avg len"],
+    );
+    let mut cfg0 = h.deploy(nodes, link_ms, 1);
+    cfg0.draft_variant = "d6_s005".to_string(); // "model B" drafter
+    cfg0.decode.max_new_tokens = tokens;
+    let base = h.run(cfg0.clone(), Policy::Autoregressive)?;
+    for tau in [0.0f32, 0.1, 0.2, 0.3, 0.4, 0.5] {
+        let mut cfg = cfg0.clone();
+        cfg.decode.tau = tau;
+        let run = h.run(cfg, if tau == 0.0 { Policy::Eagle3 } else { Policy::Dsd })?;
+        t.row(vec![
+            format!("t=1, τ={tau:.2}"),
+            fnum(h.base_accuracy, 4),
+            fnum(run.accuracy, 4),
+            fnum(run.report.speedup_over(&base.report), 2),
+            fnum(run.report.accept.mean_committed(), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn latency_ratio_block(
+    engine: &Rc<Engine>,
+    requests: usize,
+    tokens: usize,
+    nodes: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
+    // The paper sweeps a "latency ratio" 1.2..2.2 and finds speedup stable
+    // ~2.3-2.4x. We sweep t1 multiplicatively around the sweet spot.
+    let h = Harness::new(engine.clone(), "humaneval", requests, tokens, seed)?;
+    let mut t = Table::new(
+        "System-level scaling (latency ratio, HumanEval)",
+        &["ratio", "t1 (ms)", "dsd acc", "speedup", "avg len"],
+    );
+    let base_ms = 12.0;
+    for ratio in [1.2f64, 1.4, 1.6, 1.8, 2.0, 2.2] {
+        let link_ms = base_ms * ratio;
+        let mut cfg = h.deploy(nodes, link_ms, 1);
+        cfg.decode.max_new_tokens = tokens;
+        let base = h.run(cfg.clone(), Policy::Autoregressive)?;
+        let run = h.run(cfg, Policy::Dsd)?;
+        t.row(vec![
+            fnum(ratio, 1),
+            fnum(link_ms, 1),
+            fnum(run.accuracy, 4),
+            fnum(run.report.speedup_over(&base.report), 2),
+            fnum(run.report.accept.mean_committed(), 2),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! E4 (DESIGN.md §4): regenerate the paper's **Table 2** — cross-dataset
+//! summary (K=1, T=1.0, γ=8): Eagle3 vs DSD speedup and average accepted
+//! length on all five datasets.
+//!
+//! Paper shape: DSD beats Eagle3 on both columns on every dataset;
+//! absolute speedups 1.6–2.6× (Eagle3) vs 1.9–2.6× (DSD); avg len
+//! 2.4–3.4 (Eagle3) vs 3.0–4.0 (DSD), with HumanEval/GSM8K at the top
+//! and CNN/DailyMail at the bottom of the agreement ladder.
+//!
+//! Run: `cargo bench --bench table2`
+
+use std::rc::Rc;
+
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+use dsd::workload::all_datasets;
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &["requests", "tokens", "nodes", "link_ms", "seed"],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let requests = args.usize_or("requests", 3)?;
+    let tokens = args.usize_or("tokens", 40)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 15.0)?;
+    let seed = args.u64_or("seed", 20250710)?;
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Rc::new(Engine::from_dir(dir)?);
+
+    println!(
+        "# Table 2 — cross-dataset summary (K=1, T=1.0, γ=8; N={nodes}, t1={link_ms}ms, {requests} req x {tokens} tok)"
+    );
+    let mut t = Table::new(
+        "Eagle3 vs DSD across the five datasets",
+        &["dataset", "system", "speedup", "avg len", "acc (sys)", "acc (base)", "comm red."],
+    );
+    for profile in all_datasets() {
+        let h = Harness::new(engine.clone(), profile.name, requests, tokens, seed)?;
+        let mut cfg = h.deploy(nodes, link_ms, 1);
+        cfg.decode.max_new_tokens = tokens;
+        cfg.decode.temp = 1.0;
+        cfg.decode.gamma = 8;
+        let base = h.run(cfg.clone(), Policy::Autoregressive)?;
+        for policy in [Policy::Eagle3, Policy::Dsd] {
+            let run = h.run(cfg.clone(), policy)?;
+            t.row(vec![
+                profile.name.to_string(),
+                policy.name().to_string(),
+                fnum(run.report.speedup_over(&base.report), 3),
+                fnum(run.report.accept.mean_committed(), 3),
+                fnum(run.accuracy, 3),
+                fnum(h.base_accuracy, 3),
+                format!("{:.1}%", run.report.comm_reduction_over(&base.report) * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    println!("\n(accuracy = agreement-based proxy vs the target-greedy reference; see DESIGN.md §5)");
+    Ok(())
+}

@@ -1,0 +1,149 @@
+//! Analytic models from the paper: the communication/latency equations
+//! (§2.2, §2.4) and the roofline view (Fig. 1).
+//!
+//! These closed forms are validated against the discrete-event simulator
+//! by `benches/analytic_validation.rs` (E8 in DESIGN.md §4).
+
+pub mod roofline;
+
+pub use roofline::{RooflinePoint, TpuLikeRoofline};
+
+/// Parameters of the paper's latency model (§2.2).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyModel {
+    /// Local compute time per decoding step (seconds) — t0.
+    pub t0: f64,
+    /// Point-to-point link latency (seconds) — t1.
+    pub t1: f64,
+    /// Number of nodes — N.
+    pub n: usize,
+}
+
+impl LatencyModel {
+    pub fn new(t0: f64, t1: f64, n: usize) -> LatencyModel {
+        LatencyModel { t0, t1, n }
+    }
+
+    fn hops(&self) -> f64 {
+        (self.n.saturating_sub(1)) as f64
+    }
+
+    /// Eq. 3: time for k tokens under standard autoregressive decoding,
+    /// `T_std = k (t0 + (N-1) t1)`.
+    pub fn t_std(&self, k: f64) -> f64 {
+        k * (self.t0 + self.hops() * self.t1)
+    }
+
+    /// Eq. 4: time for k tokens under DSD (one sync round per window),
+    /// `T_DSD = k t0 + (N-1) t1`.
+    pub fn t_dsd(&self, k: f64) -> f64 {
+        k * self.t0 + self.hops() * self.t1
+    }
+
+    /// Eq. 5: communication reduction ratio
+    /// `R_comm = (N-1) t1 (k-1) / (k (t0 + (N-1) t1))`.
+    pub fn r_comm(&self, k: f64) -> f64 {
+        if k <= 0.0 {
+            return 0.0;
+        }
+        (self.hops() * self.t1 * (k - 1.0)) / (k * (self.t0 + self.hops() * self.t1))
+    }
+
+    /// Eq. 9: expected speedup with mean acceptance ratio ρ = k/(γ+1),
+    /// `S = (t0 + (N-1) t1) / (t0/ρ + (N-1) t1 / k)`.
+    pub fn speedup(&self, k: f64, gamma: usize) -> f64 {
+        let rho = k / (gamma as f64 + 1.0);
+        if rho <= 0.0 || k <= 0.0 {
+            return 0.0;
+        }
+        (self.t0 + self.hops() * self.t1) / (self.t0 / rho + self.hops() * self.t1 / k)
+    }
+
+    /// The paper's abstract-level approximation of saved communication per
+    /// k tokens: `(N-1) t1 (k-1) / k`.
+    pub fn comm_saved_per_token(&self, k: f64) -> f64 {
+        if k <= 0.0 {
+            return 0.0;
+        }
+        self.hops() * self.t1 * (k - 1.0) / k
+    }
+
+    /// Is this deployment in the paper's sweet-spot regime
+    /// (3 ≤ N ≤ 8 and 3 t0 < t1 < 10 t0)?
+    pub fn in_sweet_spot(&self) -> bool {
+        (3..=8).contains(&self.n) && self.t1 > 3.0 * self.t0 && self.t1 < 10.0 * self.t0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_eq4_limits() {
+        let m = LatencyModel::new(1.0, 4.0, 4); // t1 = 4 t0, N = 4
+        // k = 1: both models identical (one token, one round)
+        assert!((m.t_std(1.0) - m.t_dsd(1.0)).abs() < 1e-12);
+        // large k: DSD approaches pure compute
+        let k = 1000.0;
+        assert!(m.t_dsd(k) < m.t_std(k) / 5.0);
+    }
+
+    #[test]
+    fn eq5_matches_definition() {
+        let m = LatencyModel::new(1.0, 4.0, 4);
+        for k in [1.0f64, 2.0, 4.0, 8.0] {
+            let direct = 1.0 - m.t_dsd(k) / m.t_std(k);
+            assert!((m.r_comm(k) - direct).abs() < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn r_comm_zero_when_single_node() {
+        let m = LatencyModel::new(1.0, 4.0, 1);
+        assert_eq!(m.r_comm(8.0), 0.0);
+    }
+
+    #[test]
+    fn r_comm_increases_with_k_and_saturates() {
+        let m = LatencyModel::new(1.0, 5.0, 8);
+        let r2 = m.r_comm(2.0);
+        let r4 = m.r_comm(4.0);
+        let r8 = m.r_comm(8.0);
+        assert!(r2 < r4 && r4 < r8);
+        let bound = m.hops() * m.t1 / (m.t0 + m.hops() * m.t1);
+        assert!(r8 < bound);
+        assert!(m.r_comm(1e9) > bound - 1e-6);
+    }
+
+    #[test]
+    fn eq9_speedup_exceeds_one_in_sweet_spot() {
+        let m = LatencyModel::new(1.0, 5.0, 4);
+        assert!(m.in_sweet_spot());
+        // decent acceptance: k = 4 of gamma = 8
+        let s = m.speedup(4.0, 8);
+        assert!(s > 1.5, "{s}");
+    }
+
+    #[test]
+    fn speedup_formula_vs_times() {
+        // S should equal T_std(per-token) / T_DSD(per-token) with the
+        // round-structure the formula encodes: a round commits k tokens
+        // at cost (gamma+1) t0 ... the paper folds drafting into rho.
+        let m = LatencyModel::new(1.0, 4.0, 4);
+        let k = 4.0;
+        let gamma = 8;
+        let rho = k / (gamma as f64 + 1.0);
+        let per_token_dsd = m.t0 / rho + m.hops() * m.t1 / k;
+        let s = m.speedup(k, gamma);
+        assert!(((m.t0 + m.hops() * m.t1) / per_token_dsd - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweet_spot_bounds() {
+        assert!(!LatencyModel::new(1.0, 1.0, 4).in_sweet_spot()); // t1 too small
+        assert!(!LatencyModel::new(1.0, 20.0, 4).in_sweet_spot()); // too big
+        assert!(!LatencyModel::new(1.0, 5.0, 2).in_sweet_spot()); // N too small
+        assert!(!LatencyModel::new(1.0, 5.0, 16).in_sweet_spot()); // N too big
+    }
+}

@@ -1,0 +1,166 @@
+//! Roofline model (paper Fig. 1): attainable FLOP/s versus arithmetic
+//! intensity for decode, speculative-verify, and prefill windows.
+//!
+//! The paper's point: token-by-token decode is memory-bound; verifying a
+//! compact draft window multiplies FLOPs per weight byte moved by W,
+//! pushing effective intensity toward the compute roof. We model a
+//! TPU-like accelerator (configurable peak FLOP/s and HBM bandwidth) and
+//! compute intensity analytically from the transformer dimensions — the
+//! same numbers DESIGN.md §6 uses for the VMEM/MXU estimates.
+
+use crate::runtime::ModelDims;
+
+/// A point on the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// FLOPs per byte of weight+KV traffic.
+    pub intensity: f64,
+    /// Attainable fraction of peak compute, min(1, intensity/knee).
+    pub attainable_flops: f64,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Accelerator model: peak compute and memory bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct TpuLikeRoofline {
+    /// Peak FLOP/s (e.g. 1.97e14 bf16 for a TPU v4 MXU).
+    pub peak_flops: f64,
+    /// Memory bandwidth bytes/s (e.g. 1.2e12 HBM).
+    pub bandwidth: f64,
+}
+
+impl Default for TpuLikeRoofline {
+    fn default() -> Self {
+        // TPUv4-ish numbers; the *ratio* (knee) is what matters.
+        TpuLikeRoofline { peak_flops: 1.97e14, bandwidth: 1.2e12 }
+    }
+}
+
+impl TpuLikeRoofline {
+    /// Intensity at which compute becomes the bound.
+    pub fn knee(&self) -> f64 {
+        self.peak_flops / self.bandwidth
+    }
+
+    /// Attainable FLOP/s at a given intensity.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (intensity * self.bandwidth).min(self.peak_flops)
+    }
+
+    /// Roofline point for processing a window of `w` positions through the
+    /// model with `context` tokens of KV history, weights in `wbytes`
+    /// bytes per element.
+    pub fn window_point(&self, dims: &ModelDims, w: usize, context: usize, label: &str) -> RooflinePoint {
+        let flops = transformer_window_flops(dims, w, context);
+        let bytes = transformer_window_bytes(dims, w, context);
+        let intensity = flops / bytes;
+        RooflinePoint {
+            label: label.to_string(),
+            intensity,
+            attainable_flops: self.attainable(intensity),
+            flops,
+            bytes,
+        }
+    }
+
+    /// The Fig. 1 series: decode (W=1), verify windows, prefill.
+    pub fn figure1(&self, dims: &ModelDims, gammas: &[usize], context: usize) -> Vec<RooflinePoint> {
+        let mut pts = vec![self.window_point(dims, 1, context, "decode W=1")];
+        for &g in gammas {
+            pts.push(self.window_point(
+                dims,
+                g + 1,
+                context,
+                &format!("verify W={}", g + 1),
+            ));
+        }
+        pts.push(self.window_point(dims, dims.prefill_window, 0, "prefill"));
+        pts
+    }
+}
+
+/// FLOPs to run `w` new positions with `context` cached tokens.
+pub fn transformer_window_flops(dims: &ModelDims, w: usize, context: usize) -> f64 {
+    let d = dims.d_model as f64;
+    let ff = dims.d_ff as f64;
+    let v = dims.vocab as f64;
+    let l = dims.n_layers as f64;
+    let w = w as f64;
+    let s = context as f64 + w;
+    // per layer: qkv+out projections 4 d^2, mlp 2 d ff, attention 2 s d
+    let per_layer = w * (4.0 * 2.0 * d * d + 2.0 * 2.0 * d * ff + 2.0 * 2.0 * s * d);
+    l * per_layer + w * 2.0 * d * v // unembed
+}
+
+/// Bytes moved: weights once per pass + KV history + activations.
+pub fn transformer_window_bytes(dims: &ModelDims, w: usize, context: usize) -> f64 {
+    let d = dims.d_model as f64;
+    let ff = dims.d_ff as f64;
+    let v = dims.vocab as f64;
+    let l = dims.n_layers as f64;
+    let s = context as f64 + w as f64;
+    let elem = 4.0; // f32 artifacts; bf16 on real TPUs halves this uniformly
+    let weights = l * (4.0 * d * d + 2.0 * d * ff) + d * v + v * d;
+    let kv = l * 2.0 * s * d;
+    let act = w as f64 * d * l;
+    elem * (weights + kv + act)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 512,
+            d_model: 128,
+            n_heads: 4,
+            head_dim: 32,
+            d_ff: 512,
+            n_layers: 8,
+            max_seq: 192,
+            prefill_window: 64,
+            logit_scale: 4.0,
+        }
+    }
+
+    #[test]
+    fn verify_window_raises_intensity() {
+        let r = TpuLikeRoofline::default();
+        let d = dims();
+        let decode = r.window_point(&d, 1, 64, "decode");
+        let verify = r.window_point(&d, 9, 64, "verify");
+        let prefill = r.window_point(&d, 64, 0, "prefill");
+        assert!(verify.intensity > 3.0 * decode.intensity);
+        assert!(prefill.intensity > verify.intensity);
+        assert!(verify.attainable_flops > decode.attainable_flops);
+    }
+
+    #[test]
+    fn attainable_capped_at_peak() {
+        let r = TpuLikeRoofline::default();
+        assert_eq!(r.attainable(1e9), r.peak_flops);
+        assert!(r.attainable(1.0) < r.peak_flops);
+        assert!(r.knee() > 100.0 && r.knee() < 300.0);
+    }
+
+    #[test]
+    fn figure1_series_is_monotone_in_window() {
+        let r = TpuLikeRoofline::default();
+        let pts = r.figure1(&dims(), &[4, 8], 64);
+        assert_eq!(pts.len(), 4);
+        for w in pts.windows(2) {
+            assert!(w[1].intensity > w[0].intensity, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn flops_scale_linearly_with_window() {
+        let d = dims();
+        let f1 = transformer_window_flops(&d, 1, 64);
+        let f9 = transformer_window_flops(&d, 9, 64);
+        assert!(f9 > 8.0 * f1 && f9 < 10.0 * f1);
+    }
+}

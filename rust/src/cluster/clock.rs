@@ -1,0 +1,133 @@
+//! Two clocks, one decode loop.
+//!
+//! Every latency-bearing operation goes through [`Clock`], so the same
+//! coordinator code runs under the deterministic discrete-event
+//! [`SimClock`] (used by all paper-table sweeps — fast, reproducible) and
+//! the wallclock [`RealClock`] (used by the end-to-end serving example,
+//! where link latency is a real `thread::sleep`).
+
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+/// Nanoseconds of simulated or real time.
+pub type Nanos = u64;
+
+pub trait Clock {
+    /// Current time in nanoseconds since clock start.
+    fn now(&self) -> Nanos;
+    /// Let `d` nanoseconds elapse (advance sim time / sleep wallclock).
+    fn wait(&self, d: Nanos);
+}
+
+/// Deterministic virtual clock for discrete-event simulation.
+#[derive(Debug, Default)]
+pub struct SimClock {
+    now: Cell<Nanos>,
+}
+
+impl SimClock {
+    pub fn new() -> SimClock {
+        SimClock { now: Cell::new(0) }
+    }
+
+    /// Jump directly to an absolute time (used by the event queue; must
+    /// not move backwards).
+    pub fn advance_to(&self, t: Nanos) {
+        debug_assert!(t >= self.now.get(), "sim time went backwards");
+        self.now.set(t.max(self.now.get()));
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> Nanos {
+        self.now.get()
+    }
+
+    fn wait(&self, d: Nanos) {
+        self.now.set(self.now.get() + d);
+    }
+}
+
+/// Wallclock.
+pub struct RealClock {
+    start: Instant,
+}
+
+impl RealClock {
+    pub fn new() -> RealClock {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Nanos {
+        self.start.elapsed().as_nanos() as Nanos
+    }
+
+    fn wait(&self, d: Nanos) {
+        if d > 0 {
+            std::thread::sleep(Duration::from_nanos(d));
+        }
+    }
+}
+
+pub fn millis(ms: f64) -> Nanos {
+    (ms * 1e6) as Nanos
+}
+
+pub fn micros(us: f64) -> Nanos {
+    (us * 1e3) as Nanos
+}
+
+pub fn to_millis(ns: Nanos) -> f64 {
+    ns as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_advances() {
+        let c = SimClock::new();
+        assert_eq!(c.now(), 0);
+        c.wait(500);
+        assert_eq!(c.now(), 500);
+        c.advance_to(1_000);
+        assert_eq!(c.now(), 1_000);
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic)]
+    fn sim_clock_rejects_backwards_in_debug() {
+        let c = SimClock::new();
+        c.wait(100);
+        c.advance_to(50);
+        // In release builds the debug_assert is compiled out and
+        // advance_to clamps instead of panicking.
+        #[cfg(not(debug_assertions))]
+        assert_eq!(c.now(), 100);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        c.wait(1_000_000); // 1ms
+        let b = c.now();
+        assert!(b >= a + 900_000, "{a} {b}");
+    }
+
+    #[test]
+    fn unit_helpers() {
+        assert_eq!(millis(2.0), 2_000_000);
+        assert_eq!(micros(3.0), 3_000);
+        assert!((to_millis(1_500_000) - 1.5).abs() < 1e-9);
+    }
+}

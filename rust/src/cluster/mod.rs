@@ -1,0 +1,18 @@
+//! The decentralized-cluster substrate.
+//!
+//! * [`clock`] — virtual ([`SimClock`]) vs wallclock ([`RealClock`]) time
+//!   behind one trait, so benches and serving share the decode loop.
+//! * [`topology`] — nodes + per-link latency/bandwidth/jitter models.
+//! * [`sim`] — discrete-event pipeline simulator (busy-until queueing),
+//!   used by every paper-table sweep.
+//! * [`real`] — OS-thread node actors with latency-injecting channels and
+//!   per-thread PJRT engines: the end-to-end serving deployment.
+
+pub mod clock;
+pub mod real;
+pub mod sim;
+pub mod topology;
+
+pub use clock::{millis, micros, to_millis, Clock, Nanos, RealClock, SimClock};
+pub use sim::{PassTiming, PipelineSim, SimStats};
+pub use topology::{LinkModel, Topology};

@@ -1,0 +1,536 @@
+//! Real deployment mode: one OS thread per node, latency-injecting
+//! channels, a PJRT engine per node thread (PjRtClient is not Send — and
+//! a real decentralized node owns its own runtime anyway).
+//!
+//! The leader (node 0) hosts the first shard, the draft model, and the
+//! verification kernel, exactly as in the paper's Fig. 2. Messages carry
+//! their send timestamp; the receiver sleeps out the remaining link
+//! latency, so wire time is wallclock-real without blocking the sender —
+//! which is what lets the leader *draft for sequence B while sequence A's
+//! window is in flight* (`serve_interleaved`), the paper's "turning
+//! communication latency into computation throughput" made literal.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::cluster::topology::LinkModel;
+use crate::model::kv::KvCache;
+use crate::model::shard::{plan_shards, ShardSpec};
+use crate::model::{DraftExecutor, StageExecutor, StageInput, VerifyExecutor, VerifyKnobs};
+use crate::runtime::Engine;
+use crate::spec::{AcceptanceStats, DecodeConfig, Policy, RoundRecord};
+use crate::util::rng::Rng;
+
+/// Wire messages between node threads.
+enum Wire {
+    /// A window of activations (or the return leg's logits).
+    Window {
+        seq: u64,
+        w: usize,
+        pos: i32,
+        payload: Vec<f32>,
+        sent_at: Instant,
+    },
+    /// Release a sequence's KV on this node.
+    Free { seq: u64 },
+    Shutdown,
+}
+
+fn sleep_link(link: &LinkModel, bytes: usize, sent_at: Instant) {
+    let lat = Duration::from_nanos(link.transfer_time(bytes, None));
+    let elapsed = sent_at.elapsed();
+    if lat > elapsed {
+        std::thread::sleep(lat - elapsed);
+    }
+}
+
+/// Worker thread: one mid/last pipeline stage.
+fn worker_loop(
+    artifacts_dir: String,
+    spec: ShardSpec,
+    link_in: LinkModel,
+    rx: Receiver<Wire>,
+    tx: Sender<Wire>,
+) -> Result<()> {
+    let engine = std::rc::Rc::new(Engine::from_dir(&artifacts_dir)?);
+    let m = engine.manifest().model.clone();
+    let stage = StageExecutor::new(engine.clone(), spec);
+    let mut caches: HashMap<u64, KvCache> = HashMap::new();
+    let lps = stage.spec.lps;
+    loop {
+        match rx.recv() {
+            Err(_) => return Ok(()),
+            Ok(Wire::Shutdown) => {
+                // forward so the whole chain drains
+                let _ = tx.send(Wire::Shutdown);
+                return Ok(());
+            }
+            Ok(Wire::Free { seq }) => {
+                caches.remove(&seq);
+                let _ = tx.send(Wire::Free { seq });
+            }
+            Ok(Wire::Window { seq, w, pos, payload, sent_at }) => {
+                sleep_link(&link_in, payload.len() * 4, sent_at);
+                let cache = caches
+                    .entry(seq)
+                    .or_insert_with(|| KvCache::new(lps, m.max_seq, m.n_heads, m.head_dim));
+                let (out, _) = stage.run(w, &StageInput::Hidden(payload), cache, pos as usize)?;
+                tx.send(Wire::Window {
+                    seq,
+                    w,
+                    pos,
+                    payload: out.data,
+                    sent_at: Instant::now(),
+                })
+                .map_err(|_| anyhow!("downstream channel closed"))?;
+            }
+        }
+    }
+}
+
+/// Outcome of serving one request on the real cluster.
+#[derive(Debug, Clone)]
+pub struct RealResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub latency: Duration,
+    pub rounds: u64,
+}
+
+/// The live deployment handle (owned by the leader thread).
+pub struct RealCluster {
+    n_nodes: usize,
+    leader_stage: StageExecutor,
+    draft: DraftExecutor,
+    verify: VerifyExecutor,
+    leader_caches: HashMap<u64, KvCache>,
+    draft_caches: HashMap<u64, (KvCache, usize)>, // (cache, frontier)
+    to_next: Sender<Wire>,
+    from_last: Receiver<Wire>,
+    return_link: LinkModel,
+    handles: Vec<JoinHandle<Result<()>>>,
+    pub engine: std::rc::Rc<Engine>,
+}
+
+impl RealCluster {
+    /// Launch N-1 worker threads; the caller's thread becomes the leader.
+    pub fn launch(
+        artifacts_dir: &str,
+        n_nodes: usize,
+        link: LinkModel,
+        draft_variant: &str,
+    ) -> Result<RealCluster> {
+        if n_nodes < 2 {
+            bail!("real cluster needs >= 2 nodes (leader + workers)");
+        }
+        let engine = std::rc::Rc::new(Engine::from_dir(artifacts_dir).context("leader engine")?);
+        let shards = plan_shards(engine.manifest(), n_nodes)?;
+        let leader_stage = StageExecutor::new(engine.clone(), shards[0].clone());
+        let draft = DraftExecutor::new(engine.clone(), draft_variant)?;
+        let verify = VerifyExecutor::new(engine.clone());
+
+        // Build the chain: leader -> w1 -> w2 -> ... -> leader.
+        let (to_next, mut prev_rx) = channel::<Wire>();
+        let mut handles = Vec::new();
+        let (tx_last, from_last) = channel::<Wire>();
+        for spec in shards.into_iter().skip(1) {
+            let (tx, rx_next) = channel::<Wire>();
+            let is_last = spec.stage_idx == n_nodes - 1;
+            let out: Sender<Wire> = if is_last { tx_last.clone() } else { tx };
+            let dir = artifacts_dir.to_string();
+            let link_in = link.clone();
+            let rx_in = prev_rx;
+            handles.push(std::thread::spawn(move || {
+                worker_loop(dir, spec, link_in, rx_in, out)
+            }));
+            prev_rx = rx_next;
+        }
+        Ok(RealCluster {
+            n_nodes,
+            leader_stage,
+            draft,
+            verify,
+            leader_caches: HashMap::new(),
+            draft_caches: HashMap::new(),
+            to_next,
+            from_last,
+            return_link: link,
+            handles,
+            engine,
+        })
+    }
+
+    fn dims(&self) -> crate::runtime::ModelDims {
+        self.engine.manifest().model.clone()
+    }
+
+    /// One full pipeline pass: leader stage locally, then through the
+    /// worker chain, blocking until the logits return.
+    fn window_pass(&mut self, seq: u64, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        self.send_window(seq, tokens, pos)?;
+        self.recv_logits(seq)
+    }
+
+    /// Nonblocking half: leader stage + dispatch downstream.
+    fn send_window(&mut self, seq: u64, tokens: &[i32], pos: usize) -> Result<()> {
+        let m = self.dims();
+        let w = tokens.len();
+        let cache = self.leader_caches.entry(seq).or_insert_with(|| {
+            KvCache::new(self.leader_stage.spec.lps, m.max_seq, m.n_heads, m.head_dim)
+        });
+        let (out, _) = self
+            .leader_stage
+            .run(w, &StageInput::Tokens(tokens.to_vec()), cache, pos)?;
+        self.to_next
+            .send(Wire::Window {
+                seq,
+                w,
+                pos: pos as i32,
+                payload: out.data,
+                sent_at: Instant::now(),
+            })
+            .map_err(|_| anyhow!("worker chain closed"))?;
+        Ok(())
+    }
+
+    /// Blocking half: wait for the return leg.
+    fn recv_logits(&mut self, seq: u64) -> Result<Vec<f32>> {
+        match self.from_last.recv() {
+            Ok(Wire::Window { seq: s, payload, sent_at, .. }) => {
+                sleep_link(&self.return_link, payload.len() * 4, sent_at);
+                if s != seq {
+                    bail!("out-of-order pipeline result: expected seq {seq}, got {s}");
+                }
+                Ok(payload)
+            }
+            Ok(_) => bail!("unexpected control message on data path"),
+            Err(_) => bail!("pipeline chain disconnected"),
+        }
+    }
+
+    /// Serve one request end-to-end (speculative or AR per `cfg`).
+    pub fn serve_one(&mut self, id: u64, prompt: &[i32], cfg: &DecodeConfig) -> Result<(RealResult, AcceptanceStats)> {
+        let t_start = Instant::now();
+        let m = self.dims();
+        let mut rng = Rng::new(cfg.seed ^ id);
+        let mut committed = prompt.to_vec();
+        let plen = committed.len();
+
+        // prefill (target pipeline + draft local)
+        let mut padded = committed.clone();
+        padded.resize(m.prefill_window, 0);
+        let logits = self.window_pass(id, &padded, 0)?;
+        {
+            let depth = self.draft.depth;
+            let dcache = self
+                .draft_caches
+                .entry(id)
+                .or_insert_with(|| (KvCache::new(depth, m.max_seq, m.n_heads, m.head_dim), 0));
+            self.draft.prefill(&padded, &mut dcache.0)?;
+            dcache.1 = plen;
+        }
+        let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
+        committed.push(crate::sampling::sample_logits(row, cfg.temp, &mut rng) as i32);
+
+        let mut accept = AcceptanceStats::default();
+        let mut rounds = 0u64;
+        while committed.len() - plen < cfg.max_new_tokens
+            && committed.len() + cfg.gamma + 1 < m.max_seq
+        {
+            rounds += 1;
+            match cfg.policy {
+                Policy::Autoregressive => {
+                    let pos = committed.len() - 1;
+                    let logits = self.window_pass(id, &committed[pos..=pos], pos)?;
+                    let tok = crate::sampling::sample_logits(&logits[..m.vocab], cfg.temp, &mut rng);
+                    committed.push(tok as i32);
+                }
+                Policy::Eagle3 | Policy::Dsd => {
+                    let out = self.speculative_round(id, &mut committed, cfg, &mut rng)?;
+                    accept.record(RoundRecord {
+                        gamma: cfg.gamma,
+                        accepted: out.0,
+                        committed: out.1,
+                        key_tokens: out.2,
+                    });
+                }
+            }
+        }
+        let gen: Vec<i32> = committed[plen..]
+            .iter()
+            .take(cfg.max_new_tokens)
+            .copied()
+            .collect();
+        self.free_seq(id)?;
+        Ok((
+            RealResult { id, tokens: gen, latency: t_start.elapsed(), rounds },
+            accept,
+        ))
+    }
+
+    /// One speculative round; returns (accepted, committed, key_tokens).
+    fn speculative_round(
+        &mut self,
+        id: u64,
+        committed: &mut Vec<i32>,
+        cfg: &DecodeConfig,
+        rng: &mut Rng,
+    ) -> Result<(usize, usize, usize)> {
+        let m = self.dims();
+        let gamma = cfg.gamma;
+        let i = committed.len() - 1;
+        let (d_tokens, d_logits) = self.draft_window(id, committed, gamma, cfg.temp, rng)?;
+        let mut window = Vec::with_capacity(gamma + 1);
+        window.push(committed[i]);
+        window.extend_from_slice(&d_tokens);
+        let t_logits = self.window_pass(id, &window, i)?;
+        let u_accept: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+        let u_sample: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+        let knobs = VerifyKnobs {
+            tau: cfg.tau,
+            lam1: cfg.lam1,
+            lam2: cfg.lam2,
+            lam3: cfg.lam3,
+            temp: cfg.temp,
+            adaptive: matches!(cfg.policy, Policy::Dsd),
+        };
+        let (out, _) = self
+            .verify
+            .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
+        // draft frontier: rows valid through position i + min(k, γ-1)
+        if let Some(entry) = self.draft_caches.get_mut(&id) {
+            entry.1 = i + out.accepted.min(gamma - 1) + 1;
+        }
+        committed.extend_from_slice(&out.tokens);
+        let _ = m;
+        Ok((
+            out.accepted,
+            out.tokens.len(),
+            out.key_flags.iter().filter(|&&k| k).count(),
+        ))
+    }
+
+    /// Catch-up + γ draft steps (leader-local), mirroring decode.rs.
+    fn draft_window(
+        &mut self,
+        id: u64,
+        committed: &[i32],
+        gamma: usize,
+        temp: f32,
+        rng: &mut Rng,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let i = committed.len() - 1;
+        let (cache, frontier) = self
+            .draft_caches
+            .get_mut(&id)
+            .ok_or_else(|| anyhow!("sequence {id} not prefetched"))?;
+        let mut d_tokens = Vec::with_capacity(gamma);
+        let mut d_logits = Vec::new();
+        for pos in *frontier..i {
+            let u = rng.f32();
+            self.draft.step(committed[pos], cache, pos, temp, u)?;
+        }
+        let mut prev = committed[i];
+        for j in 0..gamma {
+            let u = rng.f32();
+            let (tok, logits, _) = self.draft.step(prev, cache, i + j, temp, u)?;
+            d_tokens.push(tok);
+            d_logits.extend_from_slice(&logits);
+            prev = tok;
+        }
+        Ok((d_tokens, d_logits))
+    }
+
+    /// Serve several requests with **software pipelining**: while one
+    /// sequence's verify window is traversing the (high-latency) node
+    /// chain, the leader drafts for the next sequence — communication
+    /// stalls become draft compute, the paper's thesis made literal.
+    /// `depth` windows may be in flight at once (FIFO channel order keeps
+    /// results matchable).
+    pub fn serve_interleaved(
+        &mut self,
+        requests: &[(u64, Vec<i32>)],
+        cfg: &DecodeConfig,
+        depth: usize,
+    ) -> Result<Vec<RealResult>> {
+        use std::collections::VecDeque;
+        let m = self.dims();
+        struct Run {
+            id: u64,
+            committed: Vec<i32>,
+            plen: usize,
+            rng: Rng,
+            rounds: u64,
+            start: Instant,
+            done: bool,
+        }
+        let mut runs: Vec<Run> = Vec::new();
+        for (id, prompt) in requests {
+            let start = Instant::now();
+            let mut rng = Rng::new(cfg.seed ^ id);
+            let mut committed = prompt.clone();
+            let plen = committed.len();
+            let mut padded = committed.clone();
+            padded.resize(m.prefill_window, 0);
+            let logits = self.window_pass(*id, &padded, 0)?;
+            let depth_d = self.draft.depth;
+            let dc = self
+                .draft_caches
+                .entry(*id)
+                .or_insert_with(|| (KvCache::new(depth_d, m.max_seq, m.n_heads, m.head_dim), 0));
+            self.draft.prefill(&padded, &mut dc.0)?;
+            dc.1 = plen;
+            let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
+            committed.push(crate::sampling::sample_logits(row, cfg.temp, &mut rng) as i32);
+            runs.push(Run { id: *id, committed, plen, rng, rounds: 0, start, done: false });
+        }
+
+        // In-flight window: (run index, draft tokens, draft logits, i).
+        let mut inflight: VecDeque<(usize, Vec<i32>, Vec<f32>, usize)> = VecDeque::new();
+        let mut results: Vec<RealResult> = Vec::new();
+        let gamma = cfg.gamma;
+        loop {
+            // Fill the pipeline: draft + dispatch for any idle, unfinished
+            // sequence while there is depth budget. THIS drafting happens
+            // while earlier windows are still on the wire.
+            for (ri, run) in runs.iter_mut().enumerate() {
+                if inflight.len() >= depth || run.done {
+                    continue;
+                }
+                if inflight.iter().any(|(i, ..)| *i == ri) {
+                    continue; // one window per sequence at a time
+                }
+                if run.committed.len() - run.plen >= cfg.max_new_tokens
+                    || run.committed.len() + gamma + 1 >= m.max_seq
+                {
+                    continue;
+                }
+                let i = run.committed.len() - 1;
+                // draft locally (catch-up + gamma steps)
+                let (d_tokens, d_logits) = {
+                    let (cache, frontier) = self
+                        .draft_caches
+                        .get_mut(&run.id)
+                        .ok_or_else(|| anyhow!("sequence {} missing draft cache", run.id))?;
+                    let mut d_tokens = Vec::with_capacity(gamma);
+                    let mut d_logits = Vec::new();
+                    for pos in *frontier..i {
+                        let u = run.rng.f32();
+                        self.draft.step(run.committed[pos], cache, pos, cfg.temp, u)?;
+                    }
+                    let mut prev = run.committed[i];
+                    for j in 0..gamma {
+                        let u = run.rng.f32();
+                        let (tok, logits, _) = self.draft.step(prev, cache, i + j, cfg.temp, u)?;
+                        d_tokens.push(tok);
+                        d_logits.extend_from_slice(&logits);
+                        prev = tok;
+                    }
+                    (d_tokens, d_logits)
+                };
+                let mut window = Vec::with_capacity(gamma + 1);
+                window.push(run.committed[i]);
+                window.extend_from_slice(&d_tokens);
+                // leader stage + dispatch; do NOT wait
+                let cache = self.leader_caches.entry(run.id).or_insert_with(|| {
+                    KvCache::new(self.leader_stage.spec.lps, m.max_seq, m.n_heads, m.head_dim)
+                });
+                let (out, _) = self
+                    .leader_stage
+                    .run(gamma + 1, &StageInput::Tokens(window), cache, i)?;
+                self.to_next
+                    .send(Wire::Window {
+                        seq: run.id,
+                        w: gamma + 1,
+                        pos: i as i32,
+                        payload: out.data,
+                        sent_at: Instant::now(),
+                    })
+                    .map_err(|_| anyhow!("worker chain closed"))?;
+                inflight.push_back((ri, d_tokens, d_logits, i));
+            }
+
+            let Some((ri, d_tokens, d_logits, i)) = inflight.pop_front() else {
+                break; // nothing in flight and nothing schedulable -> done
+            };
+            let t_logits = self.recv_logits(runs[ri].id)?;
+            let run = &mut runs[ri];
+            let u_accept: Vec<f32> = (0..gamma).map(|_| run.rng.f32()).collect();
+            let u_sample: Vec<f32> = (0..=gamma).map(|_| run.rng.f32()).collect();
+            let knobs = VerifyKnobs {
+                tau: cfg.tau,
+                lam1: cfg.lam1,
+                lam2: cfg.lam2,
+                lam3: cfg.lam3,
+                temp: cfg.temp,
+                adaptive: matches!(cfg.policy, Policy::Dsd),
+            };
+            let (out, _) = self
+                .verify
+                .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
+            if let Some(entry) = self.draft_caches.get_mut(&run.id) {
+                entry.1 = i + out.accepted.min(gamma - 1) + 1;
+            }
+            run.committed.extend_from_slice(&out.tokens);
+            run.rounds += 1;
+            if run.committed.len() - run.plen >= cfg.max_new_tokens
+                || run.committed.len() + gamma + 1 >= m.max_seq
+            {
+                run.done = true;
+                let tokens: Vec<i32> = run.committed[run.plen..]
+                    .iter()
+                    .take(cfg.max_new_tokens)
+                    .copied()
+                    .collect();
+                results.push(RealResult {
+                    id: run.id,
+                    tokens,
+                    latency: run.start.elapsed(),
+                    rounds: run.rounds,
+                });
+            }
+        }
+        for (id, _) in requests {
+            self.free_seq(*id)?;
+        }
+        results.sort_by_key(|r| r.id);
+        Ok(results)
+    }
+
+    fn free_seq(&mut self, seq: u64) -> Result<()> {
+        self.leader_caches.remove(&seq);
+        self.draft_caches.remove(&seq);
+        self.to_next
+            .send(Wire::Free { seq })
+            .map_err(|_| anyhow!("worker chain closed"))?;
+        // drain the Free ack that circulates back
+        match self.from_last.recv() {
+            Ok(Wire::Free { .. }) => Ok(()),
+            Ok(_) => bail!("unexpected message while draining Free"),
+            Err(_) => bail!("chain closed during Free"),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Shut the chain down and join workers.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.to_next.send(Wire::Shutdown);
+        // drain until the shutdown circulates out
+        while let Ok(msg) = self.from_last.recv() {
+            if matches!(msg, Wire::Shutdown) {
+                break;
+            }
+        }
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}

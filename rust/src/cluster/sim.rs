@@ -1,0 +1,233 @@
+//! Discrete-event pipeline simulator.
+//!
+//! Models the decentralized deployment as N stage-nodes with busy-until
+//! times and latency-charged hops. The coordinator drives it with
+//! *measured* per-stage compute durations (from the PJRT engine) or with
+//! calibrated constants, so simulated time composes real compute with
+//! modeled communication — the substitution DESIGN.md §5 documents for
+//! the paper's multi-node testbed.
+//!
+//! The event model is intentionally minimal (sequences are independent
+//! chains of stage visits): each visit waits for the node to be free,
+//! computes, then pays the hop latency. That is exactly the queueing
+//! structure of pipeline-parallel inference, and it lets multiple
+//! in-flight sequences interleave across stages the way microbatches do.
+
+use crate::cluster::clock::Nanos;
+use crate::cluster::topology::Topology;
+use crate::util::rng::Rng;
+
+/// Cumulative communication/computation accounting.
+#[derive(Debug, Default, Clone)]
+pub struct SimStats {
+    pub messages: u64,
+    pub bytes: u64,
+    pub comm_ns: Nanos,
+    pub compute_ns: Nanos,
+    pub queue_ns: Nanos,
+    pub sync_rounds: u64,
+}
+
+/// Timing of one pipeline pass.
+#[derive(Debug, Clone, Copy)]
+pub struct PassTiming {
+    /// Absolute sim time when the pass result is available at its
+    /// destination (leader if `return_to_leader`).
+    pub finish: Nanos,
+    pub comm_ns: Nanos,
+    pub compute_ns: Nanos,
+    pub queue_ns: Nanos,
+}
+
+/// Discrete-event state of the cluster.
+#[derive(Debug, Clone)]
+pub struct PipelineSim {
+    pub topo: Topology,
+    /// Per-node time until which the node is busy.
+    busy_until: Vec<Nanos>,
+    /// Per-node compute-time multiplier (1.0 = homogeneous; >1 models a
+    /// straggler / weaker accelerator).
+    compute_scale: Vec<f64>,
+    rng: Rng,
+    pub stats: SimStats,
+}
+
+impl PipelineSim {
+    pub fn new(topo: Topology, seed: u64) -> PipelineSim {
+        let n = topo.n_nodes;
+        PipelineSim {
+            topo,
+            busy_until: vec![0; n],
+            compute_scale: vec![1.0; n],
+            rng: Rng::new(seed),
+            stats: SimStats::default(),
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.topo.n_nodes
+    }
+
+    /// Mark node `i` as a straggler with the given compute multiplier.
+    pub fn set_compute_scale(&mut self, node: usize, scale: f64) {
+        self.compute_scale[node] = scale;
+    }
+
+    fn scaled(&self, node: usize, d: Nanos) -> Nanos {
+        (d as f64 * self.compute_scale[node]) as Nanos
+    }
+
+    /// Occupy the leader (node 0) for `dur` starting no earlier than
+    /// `start` — used for drafting and verification, which are local.
+    /// Returns the finish time.
+    pub fn local_work(&mut self, start: Nanos, dur: Nanos) -> Nanos {
+        let begin = start.max(self.busy_until[0]);
+        let d = self.scaled(0, dur);
+        self.stats.queue_ns += begin - start;
+        self.stats.compute_ns += d;
+        let finish = begin + d;
+        self.busy_until[0] = finish;
+        finish
+    }
+
+    /// One pipeline pass: the window enters stage 0 at `start`, computes
+    /// `stage_compute[i]` on node i, pays each forward hop for `msg_bytes`,
+    /// and optionally the return hop (last node -> leader) for
+    /// `return_bytes` (logits back to the verifier).
+    ///
+    /// Counts one synchronization round — the quantity DSD amortizes.
+    pub fn pipeline_pass(
+        &mut self,
+        start: Nanos,
+        stage_compute: &[Nanos],
+        msg_bytes: usize,
+        return_bytes: usize,
+        return_to_leader: bool,
+    ) -> PassTiming {
+        let n = self.topo.n_nodes;
+        assert_eq!(stage_compute.len(), n, "one compute duration per stage");
+        let mut t = start;
+        let mut comm = 0;
+        let mut compute = 0;
+        let mut queue = 0;
+        for i in 0..n {
+            let begin = t.max(self.busy_until[i]);
+            queue += begin - t;
+            let d = self.scaled(i, stage_compute[i]);
+            t = begin + d;
+            compute += d;
+            self.busy_until[i] = t;
+            if i + 1 < n {
+                let hop = self.topo.hop(i).transfer_time(msg_bytes, Some(&mut self.rng));
+                comm += hop;
+                t += hop;
+                self.stats.messages += 1;
+                self.stats.bytes += msg_bytes as u64;
+            }
+        }
+        if return_to_leader && n > 1 {
+            let hop = self
+                .topo
+                .hop(n - 1)
+                .transfer_time(return_bytes, Some(&mut self.rng));
+            comm += hop;
+            t += hop;
+            self.stats.messages += 1;
+            self.stats.bytes += return_bytes as u64;
+        }
+        self.stats.comm_ns += comm;
+        self.stats.compute_ns += compute;
+        self.stats.queue_ns += queue;
+        self.stats.sync_rounds += 1;
+        PassTiming { finish: t, comm_ns: comm, compute_ns: compute, queue_ns: queue }
+    }
+
+    /// Reset busy times and stats (new experiment, same topology).
+    pub fn reset(&mut self) {
+        self.busy_until.iter_mut().for_each(|b| *b = 0);
+        self.stats = SimStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::LinkModel;
+
+    fn sim(n: usize, t1_ms: f64) -> PipelineSim {
+        PipelineSim::new(Topology::uniform(n, LinkModel::wan(t1_ms, 0.0)), 7)
+    }
+
+    #[test]
+    fn single_pass_time_matches_eq3_structure() {
+        // Eq. 3 per token: t0 + (N-1) t1 (ignoring the return hop).
+        let mut s = sim(4, 2.0);
+        let t0 = 1_000_000; // 1ms split across 4 stages
+        let timing = s.pipeline_pass(0, &[250_000; 4], 0, 0, false);
+        assert_eq!(timing.compute_ns, t0);
+        assert_eq!(timing.comm_ns, 3 * 2_000_000);
+        assert_eq!(timing.finish, t0 + 6_000_000);
+        assert_eq!(s.stats.sync_rounds, 1);
+    }
+
+    #[test]
+    fn return_hop_charged_when_requested() {
+        let mut s = sim(2, 1.0);
+        let t = s.pipeline_pass(0, &[0, 0], 100, 200, true);
+        assert_eq!(t.comm_ns, 2_000_000);
+        assert_eq!(s.stats.messages, 2);
+        assert_eq!(s.stats.bytes, 300);
+    }
+
+    #[test]
+    fn busy_nodes_queue_later_passes() {
+        let mut s = sim(2, 0.0);
+        let a = s.pipeline_pass(0, &[1_000, 1_000], 0, 0, false);
+        // second pass enters while node 0 is busy
+        let b = s.pipeline_pass(0, &[1_000, 1_000], 0, 0, false);
+        assert_eq!(a.finish, 2_000);
+        assert!(b.queue_ns > 0);
+        // node 0 frees at 1000, so pass b computes 1000..2000 on node 0,
+        // then node 1 is free at 2000 -> b finishes at 3000.
+        assert_eq!(b.finish, 3_000);
+    }
+
+    #[test]
+    fn pipeline_interleaving_beats_serial() {
+        // Two sequences through 4 stages: interleaved total < 2x serial.
+        let mut s = sim(4, 0.0);
+        let a = s.pipeline_pass(0, &[1_000; 4], 0, 0, false);
+        let b = s.pipeline_pass(0, &[1_000; 4], 0, 0, false);
+        assert_eq!(a.finish, 4_000);
+        assert_eq!(b.finish, 5_000); // slides in one stage behind
+    }
+
+    #[test]
+    fn straggler_scales_compute() {
+        let mut s = sim(2, 0.0);
+        s.set_compute_scale(1, 3.0);
+        let t = s.pipeline_pass(0, &[1_000, 1_000], 0, 0, false);
+        assert_eq!(t.compute_ns, 1_000 + 3_000);
+    }
+
+    #[test]
+    fn local_work_occupies_leader() {
+        let mut s = sim(2, 0.0);
+        let f = s.local_work(0, 5_000);
+        assert_eq!(f, 5_000);
+        // pipeline pass must queue behind the local work on node 0
+        let t = s.pipeline_pass(0, &[1_000, 0], 0, 0, false);
+        assert_eq!(t.queue_ns, 5_000);
+        assert_eq!(t.finish, 6_000);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut s = sim(2, 1.0);
+        s.pipeline_pass(0, &[1, 1], 10, 10, true);
+        s.reset();
+        assert_eq!(s.stats.messages, 0);
+        let t = s.pipeline_pass(0, &[1, 1], 0, 0, false);
+        assert_eq!(t.queue_ns, 0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Cluster topology: nodes, links, and latency models.
+//!
+//! The paper's regime of interest is `3 ≤ N ≤ 8` nodes with per-link
+//! latency `t1` several multiples of per-step compute `t0` (wide-area or
+//! mixed-hardware deployments). A [`LinkModel`] charges
+//! `base + bytes/bandwidth (+ jitter)` per message; a [`Topology`] holds
+//! the per-hop links of the pipeline ring plus the leader's broadcast
+//! fan-out.
+
+use crate::cluster::clock::Nanos;
+use crate::util::rng::Rng;
+
+/// Latency model of one directed link.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// Fixed one-way latency (the paper's t1), nanoseconds.
+    pub base_ns: Nanos,
+    /// Bandwidth in bytes/second (0 = infinite).
+    pub bandwidth_bps: u64,
+    /// Uniform jitter fraction in [0, j]: latency *= 1 + U(0,j).
+    pub jitter: f64,
+}
+
+impl LinkModel {
+    pub fn ideal() -> LinkModel {
+        LinkModel { base_ns: 0, bandwidth_bps: 0, jitter: 0.0 }
+    }
+
+    /// A WAN-ish link with the given one-way ms latency and Gbps bandwidth.
+    pub fn wan(ms: f64, gbps: f64) -> LinkModel {
+        LinkModel {
+            base_ns: (ms * 1e6) as Nanos,
+            bandwidth_bps: (gbps * 1e9 / 8.0) as u64,
+            jitter: 0.0,
+        }
+    }
+
+    /// Time for a message of `bytes` to traverse this link.
+    pub fn transfer_time(&self, bytes: usize, rng: Option<&mut Rng>) -> Nanos {
+        let bw = if self.bandwidth_bps == 0 {
+            0
+        } else {
+            (bytes as u128 * 1_000_000_000u128 / self.bandwidth_bps as u128) as Nanos
+        };
+        let mut t = self.base_ns + bw;
+        if self.jitter > 0.0 {
+            if let Some(rng) = rng {
+                t = (t as f64 * (1.0 + rng.f64() * self.jitter)) as Nanos;
+            }
+        }
+        t
+    }
+}
+
+/// The decentralized deployment: `n_nodes` pipeline stages in a chain,
+/// node 0 is the leader (hosts the draft model, the verify kernel, and
+/// the first shard).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// links[i] connects node i -> node i+1 (forward pipeline hops);
+    /// the last entry connects node N-1 back to the leader.
+    pub links: Vec<LinkModel>,
+    pub n_nodes: usize,
+}
+
+impl Topology {
+    /// Homogeneous chain of `n` nodes with the same link everywhere.
+    pub fn uniform(n: usize, link: LinkModel) -> Topology {
+        assert!(n >= 1);
+        Topology { links: vec![link; n.max(1)], n_nodes: n }
+    }
+
+    /// Heterogeneous chain (e.g. one slow cross-region hop).
+    pub fn chain(links: Vec<LinkModel>) -> Topology {
+        let n = links.len();
+        Topology { links, n_nodes: n }
+    }
+
+    /// Link for hop i -> i+1 (wrapping: last entry is the return hop).
+    pub fn hop(&self, from: usize) -> &LinkModel {
+        &self.links[from % self.links.len()]
+    }
+
+    /// Number of forward pipeline hops, the paper's (N-1).
+    pub fn forward_hops(&self) -> usize {
+        self.n_nodes.saturating_sub(1)
+    }
+
+    /// Total one-way latency of a full forward pass for a message of
+    /// `bytes` — the `(N-1)·t1` term in Eqs. 3–4.
+    pub fn forward_pass_latency(&self, bytes: usize) -> Nanos {
+        (0..self.forward_hops())
+            .map(|i| self.hop(i).transfer_time(bytes, None))
+            .sum()
+    }
+
+    /// Mean base link latency (the scalar t1 used by the analytic model).
+    pub fn mean_t1(&self) -> Nanos {
+        if self.links.is_empty() {
+            return 0;
+        }
+        let total: u128 = self.links.iter().map(|l| l.base_ns as u128).sum();
+        (total / self.links.len() as u128) as Nanos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_components() {
+        let link = LinkModel { base_ns: 1_000_000, bandwidth_bps: 1_000_000_000, jitter: 0.0 };
+        // 1 MB over 1 GB/s = 1 ms transfer + 1 ms base
+        assert_eq!(link.transfer_time(1_000_000, None), 2_000_000);
+        // zero-bandwidth = infinite bandwidth convention
+        let fast = LinkModel { base_ns: 5, bandwidth_bps: 0, jitter: 0.0 };
+        assert_eq!(fast.transfer_time(usize::MAX / 2, None), 5);
+    }
+
+    #[test]
+    fn jitter_bounded() {
+        let link = LinkModel { base_ns: 1_000, bandwidth_bps: 0, jitter: 0.5 };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = link.transfer_time(0, Some(&mut rng));
+            assert!((1_000..=1_500).contains(&t), "{t}");
+        }
+    }
+
+    #[test]
+    fn forward_pass_counts_n_minus_1_hops() {
+        let topo = Topology::uniform(4, LinkModel::wan(2.0, 100.0));
+        assert_eq!(topo.forward_hops(), 3);
+        // tiny message: bandwidth term negligible
+        let t = topo.forward_pass_latency(0);
+        assert_eq!(t, 3 * 2_000_000);
+    }
+
+    #[test]
+    fn single_node_has_no_hops() {
+        let topo = Topology::uniform(1, LinkModel::wan(2.0, 100.0));
+        assert_eq!(topo.forward_hops(), 0);
+        assert_eq!(topo.forward_pass_latency(1_000_000), 0);
+    }
+
+    #[test]
+    fn heterogeneous_chain() {
+        let topo = Topology::chain(vec![
+            LinkModel::wan(1.0, 100.0),
+            LinkModel::wan(10.0, 1.0),
+            LinkModel::wan(1.0, 100.0),
+        ]);
+        assert_eq!(topo.n_nodes, 3);
+        assert_eq!(topo.forward_pass_latency(0), 11_000_000);
+        assert_eq!(topo.mean_t1(), 4_000_000);
+    }
+}

@@ -1,0 +1,262 @@
+//! Deployment configuration: a layered system (defaults ← TOML-lite file
+//! ← CLI overrides) describing the cluster, model sharding, decode
+//! policy, and workload — the launcher's single source of truth.
+//!
+//! The file format is a flat `key = value` subset of TOML (sections are
+//! allowed and become `section.key`); see `examples/deploy.toml` written
+//! by `dsd init-config`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::{LinkModel, Topology};
+use crate::spec::{DecodeConfig, Policy};
+use crate::util::cli::Args;
+
+/// Everything needed to launch a deployment.
+#[derive(Debug, Clone)]
+pub struct DeployConfig {
+    /// Artifact directory (manifest.json, weights.bin, *.hlo.txt).
+    pub artifacts_dir: String,
+    /// Pipeline stages = nodes.
+    pub n_nodes: usize,
+    /// Per-link one-way latency, milliseconds (the paper's t1).
+    pub link_ms: f64,
+    /// Link bandwidth, Gbps (0 = infinite).
+    pub link_gbps: f64,
+    /// Link jitter fraction.
+    pub jitter: f64,
+    /// Draft variant name (agreement ladder); empty = per-dataset default.
+    pub draft_variant: String,
+    /// Decode settings.
+    pub decode: DecodeConfig,
+    /// Max concurrent sequences (KV slot pool size).
+    pub max_batch: usize,
+    /// Workload dataset name.
+    pub dataset: String,
+    /// Number of requests.
+    pub requests: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        DeployConfig {
+            artifacts_dir: "artifacts".to_string(),
+            n_nodes: 4,
+            link_ms: 15.0,
+            link_gbps: 1.0,
+            jitter: 0.0,
+            draft_variant: String::new(),
+            decode: DecodeConfig::default(),
+            max_batch: 8,
+            dataset: "humaneval".to_string(),
+            requests: 8,
+            seed: 20250710,
+        }
+    }
+}
+
+impl DeployConfig {
+    pub fn topology(&self) -> Topology {
+        let link = LinkModel {
+            base_ns: (self.link_ms * 1e6) as u64,
+            bandwidth_bps: if self.link_gbps <= 0.0 {
+                0
+            } else {
+                (self.link_gbps * 1e9 / 8.0) as u64
+            },
+            jitter: self.jitter,
+        };
+        Topology::uniform(self.n_nodes, link)
+    }
+
+    /// Parse a TOML-lite config file into key/value pairs and apply.
+    pub fn load_file(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        let kv = parse_toml_lite(&text)?;
+        for (k, v) in &kv {
+            self.set(k, v)
+                .with_context(|| format!("config key '{k}' in {}", path.as_ref().display()))?;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (--key value with dots, e.g. --decode.tau 0.3).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        for (k, v) in &args.options {
+            // Unknown CLI keys that aren't config fields are left to the
+            // caller (e.g. --config itself).
+            if k == "config" {
+                continue;
+            }
+            if self.set(k, v).is_err() {
+                // tolerate non-config options, but catch typos for known prefixes
+                if k.contains('.') {
+                    bail!("unknown config key '--{k}'");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Set one field by dotted name.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "n_nodes" | "nodes" => self.n_nodes = value.parse()?,
+            "link_ms" => self.link_ms = value.parse()?,
+            "link_gbps" => self.link_gbps = value.parse()?,
+            "jitter" => self.jitter = value.parse()?,
+            "draft_variant" | "draft" => self.draft_variant = value.to_string(),
+            "max_batch" => self.max_batch = value.parse()?,
+            "dataset" => self.dataset = value.to_string(),
+            "requests" => self.requests = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "decode.policy" | "policy" => {
+                self.decode.policy = match value {
+                    "baseline" | "autoregressive" | "ar" => Policy::Autoregressive,
+                    "eagle3" | "eagle" => Policy::Eagle3,
+                    "dsd" | "adaptive" => Policy::Dsd,
+                    other => bail!("unknown policy '{other}'"),
+                }
+            }
+            "decode.gamma" | "gamma" => self.decode.gamma = value.parse()?,
+            "decode.temp" | "temp" => self.decode.temp = value.parse()?,
+            "decode.tau" | "tau" => self.decode.tau = value.parse()?,
+            "decode.lam1" | "lam1" => self.decode.lam1 = value.parse()?,
+            "decode.lam2" | "lam2" => self.decode.lam2 = value.parse()?,
+            "decode.lam3" | "lam3" => self.decode.lam3 = value.parse()?,
+            "decode.max_new_tokens" | "max_new_tokens" => {
+                self.decode.max_new_tokens = value.parse()?
+            }
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Render as a config file (round-trips through load_file).
+    pub fn to_toml(&self) -> String {
+        format!(
+            "# DSD deployment config\n\
+             artifacts_dir = \"{}\"\n\
+             n_nodes = {}\n\
+             link_ms = {}\n\
+             link_gbps = {}\n\
+             jitter = {}\n\
+             draft_variant = \"{}\"\n\
+             max_batch = {}\n\
+             dataset = \"{}\"\n\
+             requests = {}\n\
+             seed = {}\n\n\
+             [decode]\n\
+             policy = \"{}\"\n\
+             gamma = {}\n\
+             temp = {}\n\
+             tau = {}\n\
+             lam1 = {}\n\
+             lam2 = {}\n\
+             lam3 = {}\n\
+             max_new_tokens = {}\n",
+            self.artifacts_dir,
+            self.n_nodes,
+            self.link_ms,
+            self.link_gbps,
+            self.jitter,
+            self.draft_variant,
+            self.max_batch,
+            self.dataset,
+            self.requests,
+            self.seed,
+            self.decode.policy.name(),
+            self.decode.gamma,
+            self.decode.temp,
+            self.decode.tau,
+            self.decode.lam1,
+            self.decode.lam2,
+            self.decode.lam3,
+            self.decode.max_new_tokens,
+        )
+    }
+}
+
+/// Parse the `key = value` / `[section]` subset of TOML.
+pub fn parse_toml_lite(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(sec) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = sec.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_lite_sections_and_comments() {
+        let kv = parse_toml_lite(
+            "a = 1 # comment\n[decode]\n tau = 0.2\n# full comment\npolicy = \"dsd\"\n",
+        )
+        .unwrap();
+        assert_eq!(kv["a"], "1");
+        assert_eq!(kv["decode.tau"], "0.2");
+        assert_eq!(kv["decode.policy"], "dsd");
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let mut cfg = DeployConfig::default();
+        cfg.set("decode.tau", "0.35").unwrap();
+        cfg.set("nodes", "8").unwrap();
+        cfg.set("policy", "eagle3").unwrap();
+        let text = cfg.to_toml();
+        let mut cfg2 = DeployConfig::default();
+        let kv = parse_toml_lite(&text).unwrap();
+        for (k, v) in &kv {
+            cfg2.set(k, v).unwrap();
+        }
+        assert_eq!(cfg2.n_nodes, 8);
+        assert!((cfg2.decode.tau - 0.35).abs() < 1e-6);
+        assert_eq!(cfg2.decode.policy, Policy::Eagle3);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut cfg = DeployConfig::default();
+        assert!(cfg.set("decode.bogus", "1").is_err());
+        assert!(cfg.set("policy", "bogus").is_err());
+    }
+
+    #[test]
+    fn topology_from_config() {
+        let mut cfg = DeployConfig::default();
+        cfg.set("nodes", "4").unwrap();
+        cfg.set("link_ms", "2.5").unwrap();
+        let topo = cfg.topology();
+        assert_eq!(topo.n_nodes, 4);
+        assert_eq!(topo.mean_t1(), 2_500_000);
+    }
+}

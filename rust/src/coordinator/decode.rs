@@ -1,0 +1,262 @@
+//! The decode engine: one speculative (or autoregressive) round at a
+//! time, composing real PJRT execution with the discrete-event cluster
+//! simulator.
+//!
+//! Round structure for speculative policies (Eagle3 / DSD), Algorithm 1:
+//!
+//! ```text
+//! leader:   catch-up + γ draft steps (local)          | k t_draft
+//! pipeline: verify window, one pass over N stages     | Σ t_stage + (N-1) t1
+//! leader:   L1 verify kernel -> k accepted + 1 corr   | t_verify
+//! commit:   advance frontiers; ONE sync round total   | (Eq. 4)
+//! ```
+//!
+//! Standard autoregressive decoding instead pays a full pipeline pass per
+//! token (Eq. 3). Both paths share all executors, so measured compute is
+//! apples-to-apples.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::clock::Nanos;
+use crate::cluster::sim::PipelineSim;
+use crate::model::{KvPool, ShardedModel, StageInput, VerifyOutcome};
+use crate::coordinator::session::Sequence;
+use crate::spec::{DecodeConfig, Policy, RoundRecord};
+use crate::util::rng::Rng;
+
+/// Timing + acceptance outcome of one round.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Tokens committed this round.
+    pub committed: Vec<i32>,
+    /// Accepted draft tokens (speculative policies; 0 for AR).
+    pub accepted: usize,
+    pub key_tokens: usize,
+    /// Absolute sim time at which the round's result is committed.
+    pub finish: Nanos,
+    pub comm_ns: Nanos,
+    pub compute_ns: Nanos,
+}
+
+/// Drives decode rounds for sequences against one sharded model replica.
+pub struct DecodeEngine {
+    pub model: ShardedModel,
+    pub cfg: DecodeConfig,
+    rng: Rng,
+}
+
+impl DecodeEngine {
+    pub fn new(model: ShardedModel, cfg: DecodeConfig) -> DecodeEngine {
+        let rng = Rng::new(cfg.seed ^ 0x5EC0_DE00);
+        DecodeEngine { model, cfg, rng }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Run prefill for a sequence: pads the prompt, fills target-stage and
+    /// draft caches, samples the first generated token, charges the sim.
+    pub fn prefill(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+    ) -> Result<()> {
+        let m = self.model.engine.manifest().model.clone();
+        let w = m.prefill_window;
+        if seq.committed.len() > w {
+            bail!("prompt of {} exceeds prefill window {w}", seq.committed.len());
+        }
+        let plen = seq.committed.len();
+        let mut padded = seq.committed.clone();
+        padded.resize(w, 0);
+
+        // Target pipeline pass over the padded prompt.
+        let (logits, stage_times, fwd_bytes, ret_bytes) =
+            self.pipeline_window(seq, pool, &padded, 0, w)?;
+        let timing = sim.pipeline_pass(seq.ready_at, &stage_times, fwd_bytes, ret_bytes, true);
+
+        // Draft prefill, local on the leader (overlappable in principle;
+        // we charge it sequentially, which is conservative).
+        let dcache = pool.stage_cache(seq.slot, self.model.n_shards())?;
+        let (_, draft_ns) = self.model.draft.prefill(&padded, dcache)?;
+        let finish = sim.local_work(timing.finish, draft_ns);
+        seq.draft_frontier = plen;
+
+        // First token from the prompt's last logits row.
+        let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
+        let tok = crate::sampling::sample_logits(row, self.cfg.temp, &mut self.rng) as i32;
+        seq.commit(&[tok]);
+        seq.ready_at = finish;
+        Ok(())
+    }
+
+    /// One decode round under the configured policy.
+    pub fn round(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+    ) -> Result<RoundOutcome> {
+        match self.cfg.policy {
+            Policy::Autoregressive => self.round_autoregressive(seq, pool, sim),
+            Policy::Eagle3 | Policy::Dsd => self.round_speculative(seq, pool, sim),
+        }
+    }
+
+    /// Eq. 3 baseline: one token, one pipeline pass.
+    fn round_autoregressive(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+    ) -> Result<RoundOutcome> {
+        let m = self.model.engine.manifest().model.clone();
+        let window = vec![seq.last_token()];
+        let pos = seq.last_index();
+        let (logits, stage_times, fwd_bytes, ret_bytes) =
+            self.pipeline_window(seq, pool, &window, pos, 1)?;
+        let timing = sim.pipeline_pass(seq.ready_at, &stage_times, fwd_bytes, ret_bytes, true);
+        let tok = crate::sampling::sample_logits(&logits[..m.vocab], self.cfg.temp, &mut self.rng) as i32;
+        seq.commit(&[tok]);
+        seq.ready_at = timing.finish;
+        Ok(RoundOutcome {
+            committed: vec![tok],
+            accepted: 0,
+            key_tokens: 0,
+            finish: timing.finish,
+            comm_ns: timing.comm_ns,
+            compute_ns: timing.compute_ns,
+        })
+    }
+
+    /// Algorithm 1: draft γ, verify in ONE pipeline pass, commit k+1.
+    fn round_speculative(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+    ) -> Result<RoundOutcome> {
+        let m = self.model.engine.manifest().model.clone();
+        let gamma = self.cfg.gamma;
+        let i = seq.last_index(); // position of last committed token
+
+        // --- drafting (leader-local) ---
+        // Catch-up: draft rows for committed positions the draft cache is
+        // missing (1 step after a fully-accepted window, else 0), then γ
+        // sampling steps. Each step's input is the token at `pos`.
+        let dstage = self.model.n_shards();
+        let mut draft_ns_total: Nanos = 0;
+        let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
+        let mut d_logits: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
+        {
+            let temp = self.cfg.temp;
+            // catch-up positions: draft_frontier .. i-1 (logits unused)
+            for pos in seq.draft_frontier..i {
+                let input = seq.committed[pos];
+                let u = self.rng.f32();
+                let dcache = pool.stage_cache(seq.slot, dstage)?;
+                let (_, _, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
+                draft_ns_total += ns;
+            }
+            // drafting: step at position i consumes the last committed
+            // token and yields the distribution for position i+1, etc.
+            let mut prev = seq.last_token();
+            for j in 0..gamma {
+                let u = self.rng.f32();
+                let dcache = pool.stage_cache(seq.slot, dstage)?;
+                let (tok, logits, ns) = self.model.draft.step(prev, dcache, i + j, temp, u)?;
+                draft_ns_total += ns;
+                d_tokens.push(tok);
+                d_logits.extend_from_slice(&logits);
+                prev = tok;
+            }
+        }
+        let draft_done = sim.local_work(seq.ready_at, draft_ns_total);
+
+        // --- one pipeline pass over the verify window ---
+        let mut window = Vec::with_capacity(gamma + 1);
+        window.push(seq.last_token());
+        window.extend_from_slice(&d_tokens);
+        let (t_logits, stage_times, fwd_bytes, ret_bytes) =
+            self.pipeline_window(seq, pool, &window, i, gamma + 1)?;
+        let timing = sim.pipeline_pass(draft_done, &stage_times, fwd_bytes, ret_bytes, true);
+
+        // --- L1 adaptive verification (leader-local) ---
+        let u_accept: Vec<f32> = (0..gamma).map(|_| self.rng.f32()).collect();
+        let u_sample: Vec<f32> = (0..=gamma).map(|_| self.rng.f32()).collect();
+        let (outcome, verify_ns) = self.model.verify.run(
+            gamma,
+            t_logits,
+            d_logits,
+            d_tokens.clone(),
+            u_accept,
+            u_sample,
+            self.cfg.knobs(),
+        )?;
+        let finish = sim.local_work(timing.finish, verify_ns);
+
+        self.commit_outcome(seq, i, &outcome);
+        seq.ready_at = finish;
+        Ok(RoundOutcome {
+            committed: outcome.tokens.clone(),
+            accepted: outcome.accepted,
+            key_tokens: outcome.key_flags.iter().filter(|&&k| k).count(),
+            finish,
+            comm_ns: timing.comm_ns,
+            compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
+        })
+    }
+
+    fn commit_outcome(&self, seq: &mut Sequence, i: usize, out: &VerifyOutcome) {
+        let k = out.accepted;
+        // Draft rows valid through position i + min(k, γ-1):
+        // rows i..i+γ-1 were written (inputs: last token, d1..dγ-1); the
+        // tokens at those positions are committed only up to i+k.
+        seq.draft_frontier = i + (k.min(self.cfg.gamma - 1)) + 1;
+        seq.commit(&out.tokens);
+    }
+
+    /// Run one window through all pipeline stages, returning the logits
+    /// (flattened [w, vocab]), per-stage compute times, and the hop
+    /// payload sizes for the simulator.
+    fn pipeline_window(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        tokens: &[i32],
+        pos: usize,
+        w: usize,
+    ) -> Result<(Vec<f32>, Vec<Nanos>, usize, usize)> {
+        debug_assert_eq!(tokens.len(), w);
+        let n = self.model.n_shards();
+        let mut stage_times = Vec::with_capacity(n);
+        let mut fwd_bytes = 0usize;
+        let mut x = StageInput::Tokens(tokens.to_vec());
+        let mut out_data: Option<Vec<f32>> = None;
+        for (si, stage) in self.model.stages.iter().enumerate() {
+            let cache = pool.stage_cache(seq.slot, si)?;
+            let (out, ns) = stage.run(w, &x, cache, pos)?;
+            stage_times.push(ns);
+            if si + 1 < n {
+                fwd_bytes = out.size_bytes();
+                x = StageInput::Hidden(out.data);
+            } else {
+                out_data = Some(out.data);
+            }
+        }
+        let logits = out_data.expect("last stage emits logits");
+        let ret_bytes = logits.len() * 4;
+        Ok((logits, stage_times, fwd_bytes, ret_bytes))
+    }
+}
+
+/// Result of decoding one sequence to completion.
+#[derive(Debug, Clone)]
+pub struct SequenceResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub rounds: Vec<RoundRecord>,
+    pub latency_ns: Nanos,
+}

@@ -1,0 +1,191 @@
+//! L3 coordinator: the serving loop tying workload → batcher → decode
+//! engine → metrics over the simulated decentralized cluster.
+//!
+//! `Coordinator` is one replica (one pipeline of N nodes). The round loop
+//! is event-driven on simulated time: admission and round scheduling are
+//! decided by the pure logic in [`batcher`], execution happens on the
+//! PJRT engine, and all latency accounting flows through
+//! [`PipelineSim`](crate::cluster::PipelineSim).
+
+pub mod batcher;
+pub mod decode;
+pub mod router;
+pub mod session;
+
+pub use batcher::{next_action, next_action_prefill_first, Action, SeqView};
+pub use decode::{DecodeEngine, RoundOutcome, SequenceResult};
+pub use router::{RoutePolicy, Router};
+pub use session::{SeqState, Sequence};
+
+use std::collections::VecDeque;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::sim::PipelineSim;
+use crate::config::DeployConfig;
+use crate::metrics::RunReport;
+use crate::model::{KvPool, ShardedModel};
+use crate::runtime::Engine;
+use crate::spec::{AcceptanceStats, RoundRecord};
+use crate::workload::{dataset, Request};
+
+/// One serving replica over a simulated decentralized pipeline.
+pub struct Coordinator {
+    pub engine: Rc<Engine>,
+    pub cfg: DeployConfig,
+    decode: DecodeEngine,
+    pool: KvPool,
+    pub sim: PipelineSim,
+}
+
+impl Coordinator {
+    /// Build a replica from a deployment config (loads the engine).
+    pub fn new(cfg: DeployConfig) -> Result<Coordinator> {
+        let engine = Rc::new(Engine::from_dir(&cfg.artifacts_dir).context("loading artifacts")?);
+        Self::with_engine(engine, cfg)
+    }
+
+    /// Build a replica sharing an existing engine (multi-replica setups,
+    /// benches that sweep configurations).
+    pub fn with_engine(engine: Rc<Engine>, cfg: DeployConfig) -> Result<Coordinator> {
+        let variant = if cfg.draft_variant.is_empty() {
+            dataset(&cfg.dataset)
+                .map(|d| d.draft_variant.to_string())
+                .unwrap_or_else(|| "d6_s000".to_string())
+        } else {
+            cfg.draft_variant.clone()
+        };
+        let model = ShardedModel::new(engine.clone(), cfg.n_nodes, &variant)?;
+        // Slot layout: one KV cache per target stage + one draft cache.
+        let mut dims = model.stage_dims();
+        dims.push(model.draft.cache_dims());
+        let pool = KvPool::new(cfg.max_batch, dims);
+        let sim = PipelineSim::new(cfg.topology(), cfg.seed ^ 0xC1);
+        let mut decode_cfg = cfg.decode.clone();
+        if decode_cfg.seed == 0 {
+            // Inherit the deployment seed unless the decode seed was pinned.
+            decode_cfg.seed = cfg.seed;
+        }
+        let decode = DecodeEngine::new(model, decode_cfg);
+        Ok(Coordinator { engine, cfg, decode, pool, sim })
+    }
+
+    /// Pre-compile all artifacts used by this deployment.
+    pub fn warmup(&self) -> Result<()> {
+        self.decode.model.warmup(&[self.cfg.decode.gamma])
+    }
+
+    pub fn decode_engine(&mut self) -> &mut DecodeEngine {
+        &mut self.decode
+    }
+
+    /// Serve a workload to completion; returns the run report and the
+    /// per-sequence outputs.
+    pub fn run_workload(&mut self, requests: Vec<Request>) -> Result<(RunReport, Vec<SequenceResult>)> {
+        let max_seq = self.engine.manifest().model.max_seq;
+        let label = format!("{}/N{}", self.cfg.decode.policy.name(), self.cfg.n_nodes);
+        let mut report = RunReport::new(label);
+        let mut results = Vec::new();
+
+        let mut queue: VecDeque<Request> = {
+            let mut v = requests;
+            v.sort_by_key(|r| r.arrival_ns);
+            v.into()
+        };
+        let mut active: Vec<Sequence> = Vec::new();
+        let mut now: u64 = 0;
+        let mut accept = AcceptanceStats::default();
+
+        loop {
+            let views: Vec<SeqView> = active
+                .iter()
+                .enumerate()
+                .map(|(idx, s)| SeqView {
+                    idx,
+                    ready_at: s.ready_at,
+                    prefilled: s.state != SeqState::Admitted,
+                })
+                .collect();
+            let action = next_action_prefill_first(
+                now,
+                queue.front().map(|r| r.arrival_ns),
+                self.pool.in_use() < self.pool.capacity(),
+                &views,
+            );
+            match action {
+                Action::Done => break,
+                Action::WaitUntil { at } => now = at,
+                Action::Admit => {
+                    let r = queue.pop_front().unwrap();
+                    let slot = self.pool.alloc().expect("checked free");
+                    let mut seq = Sequence::new(r.id, r.prompt, r.max_new_tokens, r.arrival_ns);
+                    seq.slot = slot;
+                    seq.state = SeqState::Admitted;
+                    seq.ready_at = seq.arrival_ns.max(now);
+                    active.push(seq);
+                }
+                Action::Run { idx } => {
+                    let seq = &mut active[idx];
+                    if seq.state == SeqState::Admitted {
+                        self.decode.prefill(seq, &mut self.pool, &mut self.sim)?;
+                        seq.state = SeqState::Decoding;
+                        now = now.max(seq.ready_at.min(now + 0)); // now advances via rounds
+                    } else {
+                        let gamma = self.cfg.decode.gamma;
+                        let out = self.decode.round(seq, &mut self.pool, &mut self.sim)?;
+                        if self.cfg.decode.policy.is_speculative() {
+                            accept.record(RoundRecord {
+                                gamma,
+                                accepted: out.accepted,
+                                committed: out.committed.len(),
+                                key_tokens: out.key_tokens,
+                            });
+                        }
+                        report.sync_rounds += 1;
+                    }
+                    now = now.max(active[idx].ready_at);
+                    // Completion check: token budget or cache window room.
+                    let seq = &mut active[idx];
+                    let window_room =
+                        seq.committed.len() + self.cfg.decode.gamma + 1 < max_seq;
+                    if seq.generated() >= seq.max_new_tokens || !window_room {
+                        // Trim overshoot from the last speculative round.
+                        let excess = seq.generated().saturating_sub(seq.max_new_tokens);
+                        for _ in 0..excess {
+                            seq.committed.pop();
+                        }
+                        seq.state = SeqState::Finished;
+                        seq.finished_at = seq.ready_at;
+                        let latency = seq.finished_at - seq.arrival_ns;
+                        report.requests += 1;
+                        report.tokens += seq.generated() as u64;
+                        report.request_latency.record(latency);
+                        results.push(SequenceResult {
+                            id: seq.id,
+                            tokens: seq.generated_tokens().to_vec(),
+                            rounds: Vec::new(),
+                            latency_ns: latency,
+                        });
+                        self.pool.release(seq.slot)?;
+                        active.swap_remove(idx);
+                    }
+                }
+            }
+        }
+
+        report.elapsed_ns = now;
+        report.comm_ns = self.sim.stats.comm_ns;
+        report.compute_ns = self.sim.stats.compute_ns;
+        report.comm_bytes = self.sim.stats.bytes;
+        report.sync_rounds = self.sim.stats.sync_rounds;
+        report.accept = accept;
+        results.sort_by_key(|r| r.id);
+        Ok((report, results))
+    }
+
+    /// Reset sim state between experiment runs (fresh topology clock).
+    pub fn reset(&mut self) {
+        self.sim.reset();
+    }
+}

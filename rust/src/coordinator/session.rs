@@ -1,0 +1,137 @@
+//! Per-request sequence state: committed tokens, cache frontiers, and the
+//! position bookkeeping that makes speculative rollback O(1).
+//!
+//! Position conventions (see also model::kv):
+//! * `committed` holds prompt + generated tokens; the *position* of a
+//!   token is its index in this vector.
+//! * Target-stage caches are valid for all positions `< last_index()`;
+//!   the last committed token's row is written by the next window pass
+//!   (its token is always the first input of that window).
+//! * The draft cache tracks its own frontier `draft_frontier` = number of
+//!   positions with valid rows; after a fully-accepted window (k = γ) the
+//!   draft is one row behind and performs a catch-up step next round.
+
+use crate::cluster::clock::Nanos;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqState {
+    /// Waiting for admission (no KV slot yet).
+    Queued,
+    /// Admitted, prefill not yet run.
+    Admitted,
+    /// Generating.
+    Decoding,
+    /// Hit max tokens or cache capacity.
+    Finished,
+}
+
+/// One in-flight request.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: u64,
+    /// Prompt + committed generated tokens (positions are indices here).
+    pub committed: Vec<i32>,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub state: SeqState,
+    /// KV slot index (valid once admitted).
+    pub slot: usize,
+    /// Valid-row count of the draft cache.
+    pub draft_frontier: usize,
+    /// Sim/real time when this sequence can take its next round.
+    pub ready_at: Nanos,
+    pub arrival_ns: Nanos,
+    pub finished_at: Nanos,
+}
+
+impl Sequence {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize, arrival_ns: Nanos) -> Sequence {
+        let prompt_len = prompt.len();
+        Sequence {
+            id,
+            committed: prompt,
+            prompt_len,
+            max_new_tokens,
+            state: SeqState::Queued,
+            slot: usize::MAX,
+            draft_frontier: 0,
+            ready_at: arrival_ns,
+            arrival_ns,
+            finished_at: 0,
+        }
+    }
+
+    /// Position of the last committed token.
+    pub fn last_index(&self) -> usize {
+        self.committed.len() - 1
+    }
+
+    pub fn last_token(&self) -> i32 {
+        *self.committed.last().unwrap()
+    }
+
+    pub fn generated(&self) -> usize {
+        self.committed.len() - self.prompt_len
+    }
+
+    pub fn generated_tokens(&self) -> &[i32] {
+        &self.committed[self.prompt_len..]
+    }
+
+    /// How many new tokens may still be committed (token budget and cache
+    /// capacity `max_seq` jointly).
+    pub fn remaining_budget(&self, max_seq: usize) -> usize {
+        let by_request = self.max_new_tokens.saturating_sub(self.generated());
+        // The window pass starting at last_index() writes rows up to
+        // last_index() + W; keep strictly within max_seq.
+        let by_cache = max_seq.saturating_sub(self.committed.len() + 1);
+        by_request.min(by_cache)
+    }
+
+    pub fn commit(&mut self, tokens: &[i32]) {
+        self.committed.extend_from_slice(tokens);
+    }
+
+    pub fn is_done(&self, max_seq: usize) -> bool {
+        self.remaining_budget(max_seq) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq() -> Sequence {
+        Sequence::new(1, vec![10, 11, 12], 5, 0)
+    }
+
+    #[test]
+    fn positions_and_counts() {
+        let mut s = seq();
+        assert_eq!(s.last_index(), 2);
+        assert_eq!(s.last_token(), 12);
+        assert_eq!(s.generated(), 0);
+        s.commit(&[40, 41]);
+        assert_eq!(s.generated(), 2);
+        assert_eq!(s.generated_tokens(), &[40, 41]);
+        assert_eq!(s.last_index(), 4);
+    }
+
+    #[test]
+    fn budget_respects_request_and_cache() {
+        let mut s = seq();
+        assert_eq!(s.remaining_budget(192), 5);
+        s.commit(&[1, 2, 3, 4]);
+        assert_eq!(s.remaining_budget(192), 1);
+        s.commit(&[5]);
+        assert_eq!(s.remaining_budget(192), 0);
+        assert!(s.is_done(192));
+    }
+
+    #[test]
+    fn budget_limited_by_cache_capacity() {
+        let s = Sequence::new(1, vec![0; 100], 1000, 0);
+        // 192-cap cache: 100 prompt + 1 frontier margin
+        assert_eq!(s.remaining_budget(192), 91);
+    }
+}

@@ -1,0 +1,208 @@
+//! Experiment harness: the shared machinery behind every paper-table
+//! bench and example — run a workload under several policies on identical
+//! requests, compute the accuracy proxy against the target-greedy
+//! reference, and emit table rows.
+//!
+//! Accuracy protocol (DESIGN.md §5): **teacher-forced greedy agreement**
+//! (GTA). After a system produces its output, we run the target model
+//! once over `prompt ⊕ output` (teacher-forced) and measure the fraction
+//! of generated positions whose token equals the target's argmax *in that
+//! context*. Properties that make this the right proxy:
+//!   * greedy decoding scores exactly 1.0 (it IS the argmax path);
+//!   * a pure target sample at temperature T scores E[P(argmax)] — the
+//!     task's intrinsic "Base Acc" at that temperature;
+//!   * strict speculative decoding is distribution-lossless, so it scores
+//!     Base Acc up to noise;
+//!   * τ-relaxation admits tokens from the draft-blended distribution and
+//!     shows up as a drift below Base Acc — the effect Table 1 tracks.
+//! (Naive rollout-vs-rollout agreement collapses to chance after the
+//! first divergent sample and cannot distinguish systems.)
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::DeployConfig;
+use crate::coordinator::Coordinator;
+use crate::metrics::RunReport;
+use crate::model::{KvCache, ShardedModel, StageInput};
+use crate::runtime::Engine;
+use crate::sampling::argmax;
+use crate::spec::Policy;
+use crate::workload::{dataset, DatasetProfile, Request, WorkloadGen};
+
+/// One system's outcome on a workload.
+#[derive(Debug, Clone)]
+pub struct SystemRun {
+    pub policy: Policy,
+    pub report: RunReport,
+    pub outputs: Vec<Vec<i32>>,
+    pub accuracy: f64,
+}
+
+/// Harness over one engine + dataset.
+pub struct Harness {
+    pub engine: Rc<Engine>,
+    pub profile: DatasetProfile,
+    pub requests: Vec<Request>,
+    /// Unsharded target model used for teacher-forced scoring.
+    scorer: RefCell<ShardedModel>,
+    /// GTA of a pure target sample at the workload temperature.
+    pub base_accuracy: f64,
+}
+
+impl Harness {
+    /// Build the harness: generate requests, run the Base Acc reference.
+    pub fn new(
+        engine: Rc<Engine>,
+        dataset_name: &str,
+        n_requests: usize,
+        max_new_tokens: usize,
+        seed: u64,
+    ) -> Result<Harness> {
+        let profile = dataset(dataset_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset_name}'"))?;
+        let vocab = engine.manifest().model.vocab;
+        let mut gen = WorkloadGen::new(profile.clone(), vocab, seed);
+        let mut requests = gen.batch(n_requests);
+        for r in &mut requests {
+            r.max_new_tokens = max_new_tokens.min(r.max_new_tokens);
+        }
+
+        // Scorer: the monolithic (1-shard) target model.
+        let scorer = ShardedModel::new(engine.clone(), 1, profile.draft_variant)?;
+
+        let mut h = Harness {
+            engine: engine.clone(),
+            profile: profile.clone(),
+            requests,
+            scorer: RefCell::new(scorer),
+            base_accuracy: 0.0,
+        };
+
+        // Base Acc: a pure target sample at the workload temperature.
+        let base_cfg =
+            reference_config(engine.manifest().dir.to_str().unwrap(), &profile, profile.temp, seed ^ 0xBA5E);
+        let base_outputs = run_outputs(&engine, &base_cfg, &h.requests)?;
+        h.base_accuracy = h.score_outputs(&base_outputs)?;
+        Ok(h)
+    }
+
+    /// Run one policy configuration on the shared requests.
+    pub fn run(&self, mut cfg: DeployConfig, policy: Policy) -> Result<SystemRun> {
+        cfg.decode.policy = policy;
+        cfg.dataset = self.profile.name.to_string();
+        if cfg.draft_variant.is_empty() {
+            cfg.draft_variant = self.profile.draft_variant.to_string();
+        }
+        let mut coord = Coordinator::with_engine(self.engine.clone(), cfg)?;
+        // Pre-compile everything so measured stage times are compile-free.
+        coord.warmup()?;
+        let (mut report, results) = coord.run_workload(self.requests.clone())?;
+        let outputs: Vec<Vec<i32>> = results.into_iter().map(|r| r.tokens).collect();
+        let accuracy = self.score_outputs(&outputs)?;
+        report.accuracy = accuracy;
+        Ok(SystemRun { policy, report, outputs, accuracy })
+    }
+
+    /// Teacher-forced greedy agreement of outputs with the target model.
+    pub fn score_outputs(&self, outputs: &[Vec<i32>]) -> Result<f64> {
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for (req, out) in self.requests.iter().zip(outputs) {
+            let (h, t) = self.score_one(&req.prompt, out)?;
+            hits += h;
+            total += t;
+        }
+        Ok(if total == 0 { 0.0 } else { hits as f64 / total as f64 })
+    }
+
+    /// Score one sequence: fraction of generated tokens equal to the
+    /// target argmax in their own (teacher-forced) context.
+    fn score_one(&self, prompt: &[i32], output: &[i32]) -> Result<(usize, usize)> {
+        let m = self.engine.manifest().model.clone();
+        let scorer = self.scorer.borrow_mut();
+        let stage = &scorer.stages[0]; // single 'full' stage
+        let [l, s, hd, dd] = scorer.stage_dims()[0];
+        let mut cache = KvCache::new(l, s, hd, dd);
+
+        let mut seq: Vec<i32> = prompt.to_vec();
+        seq.extend_from_slice(output);
+        let plen = prompt.len();
+
+        // Pass 1: prefill window over the first min(64, len) tokens.
+        let w = m.prefill_window;
+        let mut padded = seq.clone();
+        padded.truncate(w);
+        padded.resize(w, 0);
+        let (out0, _) = stage.run(w, &StageInput::Tokens(padded), &mut cache, 0)?;
+        let mut hits = 0;
+        let mut total = 0;
+        // Row j of the prefill output predicts position j+1: score the
+        // generated positions covered by the window.
+        for p in plen..seq.len().min(w) {
+            let row = out0.row(p - 1);
+            total += 1;
+            if argmax(row) as i32 == seq[p] {
+                hits += 1;
+            }
+        }
+        // W=1 steps for positions beyond the prefill window: feeding
+        // seq[p-1] at pos p-1 yields the prediction for position p.
+        for p in w..seq.len() {
+            let (o, _) = stage.run(
+                1,
+                &StageInput::Tokens(vec![seq[p - 1]]),
+                &mut cache,
+                p - 1,
+            )?;
+            if p >= plen {
+                total += 1;
+                if argmax(o.row(0)) as i32 == seq[p] {
+                    hits += 1;
+                }
+            }
+        }
+        Ok((hits, total))
+    }
+
+    /// Default deployment for this harness's dataset.
+    pub fn deploy(&self, n_nodes: usize, link_ms: f64, max_batch: usize) -> DeployConfig {
+        let mut cfg = DeployConfig {
+            n_nodes,
+            link_ms,
+            max_batch,
+            dataset: self.profile.name.to_string(),
+            draft_variant: self.profile.draft_variant.to_string(),
+            ..Default::default()
+        };
+        cfg.decode.temp = self.profile.temp;
+        cfg.artifacts_dir = self.engine.manifest().dir.to_string_lossy().into_owned();
+        cfg
+    }
+}
+
+fn reference_config(artifacts_dir: &str, profile: &DatasetProfile, temp: f32, seed: u64) -> DeployConfig {
+    let mut cfg = DeployConfig {
+        artifacts_dir: artifacts_dir.to_string(),
+        n_nodes: 2,       // smallest pipeline; token stream is latency-free
+        link_ms: 0.0,
+        max_batch: 1,
+        dataset: profile.name.to_string(),
+        draft_variant: profile.draft_variant.to_string(),
+        seed,
+        ..Default::default()
+    };
+    cfg.decode.policy = Policy::Autoregressive;
+    cfg.decode.temp = temp;
+    cfg.decode.seed = seed;
+    cfg
+}
+
+fn run_outputs(engine: &Rc<Engine>, cfg: &DeployConfig, requests: &[Request]) -> Result<Vec<Vec<i32>>> {
+    let mut coord = Coordinator::with_engine(engine.clone(), cfg.clone())?;
+    let (_, results) = coord.run_workload(requests.to_vec())?;
+    Ok(results.into_iter().map(|r| r.tokens).collect())
+}
+

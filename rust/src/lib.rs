@@ -1,0 +1,37 @@
+//! # DSD — Decentralized Speculative Decoding
+//!
+//! A three-layer Rust + JAX + Pallas serving stack reproducing
+//! *"Speculative Decoding in Decentralized LLM Inference: Turning
+//! Communication Latency into Computation Throughput"* (CS.DC 2025).
+//!
+//! Layers:
+//! * **L3 (this crate)** — the decentralized coordinator: request router,
+//!   dynamic batcher, KV-cache management, pipeline-sharded execution over
+//!   latency-injected links, and the DSD decode loop (one synchronization
+//!   round per speculative window).
+//! * **L2 (python/compile/model.py)** — the JAX transformer, AOT-lowered
+//!   per pipeline stage to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels: KV-cache flash
+//!   attention and the fused adaptive-verification kernel (Eqs. 7–8).
+//!
+//! Python never runs at serving time: `make artifacts` produces
+//! `artifacts/*.hlo.txt` + `weights.bin` + `manifest.json`, and the
+//! [`runtime::Engine`] loads them through PJRT.
+//!
+//! Start with [`coordinator::Coordinator`] (serving) or
+//! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
+//! shows the five-line happy path.
+
+pub mod analysis;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod spec;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,202 @@
+//! `dsd` — the DSD serving launcher.
+//!
+//! Subcommands:
+//!   serve        run a workload on the simulated decentralized cluster
+//!   compare      run baseline / eagle3 / dsd on the same workload
+//!   sweep        node-count sweep (quick look; full sweeps live in
+//!                `cargo bench`)
+//!   inspect      print manifest/artifact info
+//!   init-config  write a commented deploy.toml
+//!
+//! Examples:
+//!   dsd serve --dataset humaneval --nodes 4 --policy dsd --requests 8
+//!   dsd compare --dataset gsm8k --nodes 8 --link_ms 3
+//!   dsd inspect --artifacts_dir artifacts
+
+use anyhow::{bail, Result};
+
+use dsd::config::DeployConfig;
+use dsd::coordinator::Coordinator;
+use dsd::metrics::RunReport;
+use dsd::spec::Policy;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+use dsd::workload::{dataset, WorkloadGen};
+
+const VALUED: &[&str] = &[
+    "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
+    "draft", "draft_variant", "max_batch", "dataset", "requests", "seed", "policy",
+    "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "out",
+    "sweep_nodes",
+];
+
+fn main() -> Result<()> {
+    let args = cli::parse_env(VALUED)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "compare" => compare(&args),
+        "sweep" => sweep(&args),
+        "inspect" => inspect(&args),
+        "init-config" => init_config(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `dsd help`)"),
+    }
+}
+
+const HELP: &str = "\
+dsd — Decentralized Speculative Decoding launcher
+
+USAGE: dsd <serve|compare|sweep|inspect|init-config> [--key value ...]
+
+Common options:
+  --config FILE          layer a deploy.toml before CLI overrides
+  --artifacts_dir DIR    AOT artifact directory (default: artifacts)
+  --nodes N              pipeline nodes (2/4/8)         [4]
+  --link_ms MS           per-link one-way latency       [2.0]
+  --link_gbps G          link bandwidth, 0 = infinite   [1.0]
+  --dataset NAME         humaneval|gsm8k|alpaca|mtbench|cnndm
+  --policy P             baseline|eagle3|dsd            [dsd]
+  --gamma G              draft window                   [8]
+  --temp T               sampling temperature           [1.0]
+  --tau T                relaxation coefficient         [0.2]
+  --requests N           number of requests             [8]
+  --max_batch B          KV slots / max concurrency     [8]
+  --seed S               RNG seed
+";
+
+fn build_config(args: &cli::Args) -> Result<DeployConfig> {
+    let mut cfg = DeployConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg.load_file(path)?;
+    }
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn run_once(cfg: &DeployConfig) -> Result<RunReport> {
+    let mut coord = Coordinator::new(cfg.clone())?;
+    coord.warmup()?;
+    let profile = dataset(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
+    let vocab = coord.engine.manifest().model.vocab;
+    let mut gen = WorkloadGen::new(profile, vocab, cfg.seed);
+    let requests = gen.batch(cfg.requests);
+    let (report, _) = coord.run_workload(requests)?;
+    Ok(report)
+}
+
+fn serve(args: &cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    eprintln!(
+        "serving {} requests of '{}' on N={} nodes (t1={}ms, policy={})...",
+        cfg.requests, cfg.dataset, cfg.n_nodes, cfg.link_ms, cfg.decode.policy.name()
+    );
+    let report = run_once(&cfg)?;
+    println!("{}", report.summary_line());
+    println!(
+        "  p50 latency {:.1}ms  p95 {:.1}ms  comm fraction {:.1}%  mean accepted {:.2}",
+        report.request_latency.quantile(0.5) as f64 / 1e6,
+        report.request_latency.quantile(0.95) as f64 / 1e6,
+        report.comm_fraction() * 100.0,
+        report.accept.mean_accepted(),
+    );
+    Ok(())
+}
+
+fn compare(args: &cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let mut t = Table::new(
+        format!(
+            "{} | N={} t1={}ms γ={} τ={}",
+            cfg.dataset, cfg.n_nodes, cfg.link_ms, cfg.decode.gamma, cfg.decode.tau
+        ),
+        &["system", "tok/s", "ms/tok", "avg len", "comm ms/tok", "speedup"],
+    );
+    let mut base: Option<RunReport> = None;
+    for policy in [Policy::Autoregressive, Policy::Eagle3, Policy::Dsd] {
+        let mut c = cfg.clone();
+        c.decode.policy = policy;
+        let report = run_once(&c)?;
+        let speedup = base.as_ref().map(|b| report.speedup_over(b)).unwrap_or(1.0);
+        t.row(vec![
+            policy.name().to_string(),
+            fnum(report.throughput(), 1),
+            fnum(report.ms_per_token(), 2),
+            fnum(report.accept.mean_committed(), 2),
+            fnum(report.comm_ns as f64 / 1e6 / report.tokens.max(1) as f64, 2),
+            fnum(speedup, 2),
+        ]);
+        if base.is_none() {
+            base = Some(report);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn sweep(args: &cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let nodes = args.usize_list_or("sweep_nodes", &[2, 4, 8])?;
+    let mut t = Table::new(
+        format!("node sweep | {} t1={}ms", cfg.dataset, cfg.link_ms),
+        &["N", "policy", "tok/s", "ms/tok", "comm ms/tok"],
+    );
+    for n in nodes {
+        for policy in [Policy::Autoregressive, Policy::Dsd] {
+            let mut c = cfg.clone();
+            c.n_nodes = n;
+            c.decode.policy = policy;
+            let r = run_once(&c)?;
+            t.row(vec![
+                n.to_string(),
+                policy.name().to_string(),
+                fnum(r.throughput(), 1),
+                fnum(r.ms_per_token(), 2),
+                fnum(r.comm_ns as f64 / 1e6 / r.tokens.max(1) as f64, 2),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}
+
+fn inspect(args: &cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let manifest = dsd::runtime::Manifest::load(&cfg.artifacts_dir)?;
+    let m = &manifest.model;
+    println!(
+        "model: vocab={} d_model={} heads={} layers={} max_seq={} prefill={}",
+        m.vocab, m.d_model, m.n_heads, m.n_layers, m.max_seq, m.prefill_window
+    );
+    println!("shard counts: {:?}  gammas: {:?}", manifest.shard_counts, manifest.gammas);
+    println!("draft variants (agreement ladder):");
+    for v in &manifest.draft_variants {
+        println!(
+            "  {:>8}: {} layers, sigma={:.2}, greedy-agree={:.3}, overlap={:.3}",
+            v.name, v.layers, v.sigma, v.greedy_agree, v.overlap
+        );
+    }
+    println!("{} artifacts:", manifest.artifacts.len());
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "  {:<24} kind={:<10} window={:<3} params={}",
+            name,
+            format!("{:?}", a.kind),
+            a.window,
+            a.params.len()
+        );
+    }
+    Ok(())
+}
+
+fn init_config(args: &cli::Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let path = args.str_or("out", "deploy.toml");
+    std::fs::write(&path, cfg.to_toml())?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! Serving metrics: latency histograms, throughput meters, and the
+//! per-run report the benches and examples print.
+
+use crate::cluster::clock::{to_millis, Nanos};
+use crate::spec::AcceptanceStats;
+
+/// Fixed-boundary log-scale histogram for latencies.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds in nanoseconds (last is +inf).
+    bounds: Vec<Nanos>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: Nanos,
+    max: Nanos,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::latency()
+    }
+}
+
+impl Histogram {
+    /// Buckets from 10µs to ~100s, ~20% resolution.
+    pub fn latency() -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = 10_000f64; // 10 µs
+        while b < 100e9 {
+            bounds.push(b as Nanos);
+            b *= 1.2;
+        }
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+            total: 0,
+            sum: 0,
+            min: Nanos::MAX,
+            max: 0,
+        }
+    }
+
+    pub fn record(&mut self, v: Nanos) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Approximate quantile (bucket upper bound).
+    pub fn quantile(&self, q: f64) -> Nanos {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max };
+            }
+        }
+        self.max
+    }
+
+    pub fn min(&self) -> Nanos {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> Nanos {
+        self.max
+    }
+}
+
+/// End-to-end report for one experiment run (one policy, one workload).
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub label: String,
+    /// Requests completed.
+    pub requests: u64,
+    /// New tokens generated (excluding prompts).
+    pub tokens: u64,
+    /// Total (simulated or real) time, ns.
+    pub elapsed_ns: Nanos,
+    /// Communication time summed over links, ns.
+    pub comm_ns: Nanos,
+    /// Compute time summed over nodes, ns.
+    pub compute_ns: Nanos,
+    /// Synchronization rounds (pipeline passes).
+    pub sync_rounds: u64,
+    /// Bytes moved across links.
+    pub comm_bytes: u64,
+    pub accept: AcceptanceStats,
+    pub request_latency: Histogram,
+    /// Mean agreement with the target-greedy reference (accuracy proxy).
+    pub accuracy: f64,
+}
+
+impl RunReport {
+    pub fn new(label: impl Into<String>) -> RunReport {
+        RunReport { label: label.into(), request_latency: Histogram::latency(), ..Default::default() }
+    }
+
+    /// Tokens per second of (simulated) wallclock.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.elapsed_ns as f64 / 1e9)
+    }
+
+    /// Mean latency per generated token, ms.
+    pub fn ms_per_token(&self) -> f64 {
+        if self.tokens == 0 {
+            return 0.0;
+        }
+        to_millis(self.elapsed_ns) / self.tokens as f64
+    }
+
+    /// Speedup of this run relative to a baseline run (same workload).
+    pub fn speedup_over(&self, baseline: &RunReport) -> f64 {
+        if self.elapsed_ns == 0 || baseline.tokens == 0 || self.tokens == 0 {
+            return 0.0;
+        }
+        // Normalize per token in case token counts differ slightly.
+        baseline.ms_per_token() / self.ms_per_token()
+    }
+
+    /// Fraction of total time spent in communication.
+    pub fn comm_fraction(&self) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.comm_ns as f64 / self.elapsed_ns as f64
+    }
+
+    /// Communication reduction vs a baseline (the paper's ~37% claim).
+    pub fn comm_reduction_over(&self, baseline: &RunReport) -> f64 {
+        if baseline.comm_ns == 0 {
+            return 0.0;
+        }
+        // Per-token comparison.
+        let ours = self.comm_ns as f64 / self.tokens.max(1) as f64;
+        let theirs = baseline.comm_ns as f64 / baseline.tokens.max(1) as f64;
+        1.0 - ours / theirs
+    }
+
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{:<10} tokens={:<6} elapsed={:>9.1}ms thpt={:>8.1} tok/s avg_len={:>5.2} comm={:>6.1}ms rounds={}",
+            self.label,
+            self.tokens,
+            to_millis(self.elapsed_ns),
+            self.throughput(),
+            self.accept.mean_committed(),
+            to_millis(self.comm_ns),
+            self.sync_rounds,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000u64 {
+            h.record(i * 1_000_000); // 1..1000 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 < p99);
+        assert!(p50 > 400_000_000 && p50 < 700_000_000, "{p50}");
+        assert!(h.mean() > 4.0e8 && h.mean() < 6.0e8);
+        assert_eq!(h.min(), 1_000_000);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let mut r = RunReport::new("x");
+        r.tokens = 100;
+        r.elapsed_ns = 2_000_000_000; // 2s
+        assert!((r.throughput() - 50.0).abs() < 1e-9);
+        assert!((r.ms_per_token() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_normalizes_per_token() {
+        let mut base = RunReport::new("base");
+        base.tokens = 100;
+        base.elapsed_ns = 10_000_000_000;
+        let mut fast = RunReport::new("fast");
+        fast.tokens = 200;
+        fast.elapsed_ns = 8_000_000_000;
+        // base: 100ms/tok; fast: 40ms/tok -> 2.5x
+        assert!((fast.speedup_over(&base) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_reduction() {
+        let mut base = RunReport::new("base");
+        base.tokens = 100;
+        base.comm_ns = 1_000_000;
+        let mut ours = RunReport::new("dsd");
+        ours.tokens = 100;
+        ours.comm_ns = 600_000;
+        assert!((ours.comm_reduction_over(&base) - 0.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,323 @@
+//! Stage/draft/verify executors: the bridge between the coordinator's
+//! host-tensor world and the PJRT engine, with per-call timing for the
+//! discrete-event simulator.
+//!
+//! Executors are stateless w.r.t. sequences — KV caches are passed in by
+//! the owner (the coordinator's `KvPool`, or a real-cluster node's local
+//! map), so the same executor code runs in both deployment modes.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::clock::Nanos;
+use crate::model::kv::KvCache;
+use crate::model::shard::ShardSpec;
+use crate::runtime::{Engine, HostTensor};
+
+/// Input to a pipeline stage.
+#[derive(Debug, Clone)]
+pub enum StageInput {
+    /// Token ids (first/full stages).
+    Tokens(Vec<i32>),
+    /// Hidden states [W, d_model] flattened (mid/last stages).
+    Hidden(Vec<f32>),
+}
+
+impl StageInput {
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            StageInput::Tokens(t) => t.len() * 4,
+            StageInput::Hidden(h) => h.len() * 4,
+        }
+    }
+}
+
+/// Output of a pipeline stage: hidden states or logits, flattened [W, D].
+#[derive(Debug, Clone)]
+pub struct StageOutput {
+    pub data: Vec<f32>,
+    pub width: usize,
+    pub dim: usize,
+}
+
+impl StageOutput {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Executes one pipeline shard of the target model.
+pub struct StageExecutor {
+    engine: Rc<Engine>,
+    pub spec: ShardSpec,
+    weight_set: String,
+}
+
+impl StageExecutor {
+    pub fn new(engine: Rc<Engine>, spec: ShardSpec) -> StageExecutor {
+        StageExecutor { engine, spec, weight_set: "target".to_string() }
+    }
+
+    /// Run this shard over a window of `w` positions starting at `pos`.
+    /// Updates `cache` in place (rows pos..pos+w) and returns the output
+    /// plus the measured compute time.
+    pub fn run(
+        &self,
+        w: usize,
+        x: &StageInput,
+        cache: &mut KvCache,
+        pos: usize,
+    ) -> Result<(StageOutput, Nanos)> {
+        let artifact = self.spec.artifact(w);
+        let m = &self.engine.manifest().model;
+        let x_tensor = match (x, self.spec.takes_tokens()) {
+            (StageInput::Tokens(t), true) => {
+                if t.len() != w {
+                    bail!("stage {}: expected {w} tokens, got {}", self.spec.stage_idx, t.len());
+                }
+                HostTensor::i32(t.clone(), vec![w])
+            }
+            (StageInput::Hidden(h), false) => {
+                if h.len() != w * m.d_model {
+                    bail!("stage {}: hidden len {} != {}x{}", self.spec.stage_idx, h.len(), w, m.d_model);
+                }
+                HostTensor::f32(h.clone(), vec![w, m.d_model])
+            }
+            _ => bail!(
+                "stage {} role '{}' got wrong input kind",
+                self.spec.stage_idx,
+                self.spec.role
+            ),
+        };
+        let cache_shape = cache.shape.to_vec();
+        // Perf: move the KV vectors out instead of cloning (~1.5 MB saved
+        // per stage call); the artifact returns the updated cache, which
+        // replaces them below. An engine error leaves the cache empty —
+        // the sequence is dead at that point anyway (EXPERIMENTS.md §Perf).
+        let k_in = std::mem::take(&mut cache.k);
+        let v_in = std::mem::take(&mut cache.v);
+        let inputs = vec![
+            x_tensor,
+            HostTensor::f32(k_in, cache_shape.clone()),
+            HostTensor::f32(v_in, cache_shape),
+            HostTensor::scalar_i32(pos as i32),
+        ];
+        let t0 = Instant::now();
+        let mut outs = self.engine.run(&artifact, &self.weight_set, self.spec.layer_base, &inputs)?;
+        let elapsed = t0.elapsed().as_nanos() as Nanos;
+        // outputs: [out, k_cache, v_cache]
+        let nv = outs.pop().unwrap();
+        let nk = outs.pop().unwrap();
+        let out = outs.pop().unwrap();
+        let (nk, nv) = match (nk, nv) {
+            (HostTensor::F32 { data: k, .. }, HostTensor::F32 { data: v, .. }) => (k, v),
+            _ => bail!("stage cache outputs must be f32"),
+        };
+        cache.replace(nk, nv)?;
+        let dim = if self.spec.emits_logits() { m.vocab } else { m.d_model };
+        let data = match out {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("stage output must be f32"),
+        };
+        Ok((StageOutput { data, width: w, dim }, elapsed))
+    }
+}
+
+/// Executes the draft model (leader-local).
+pub struct DraftExecutor {
+    engine: Rc<Engine>,
+    pub depth: usize,
+    weight_set: String,
+}
+
+impl DraftExecutor {
+    /// `variant` is a manifest draft-variant name like "d6_s000".
+    pub fn new(engine: Rc<Engine>, variant: &str) -> Result<DraftExecutor> {
+        let v = engine.manifest().variant(variant)?;
+        Ok(DraftExecutor {
+            engine: engine.clone(),
+            depth: v.layers,
+            weight_set: format!("draft_{}", v.name),
+        })
+    }
+
+    pub fn cache_dims(&self) -> [usize; 4] {
+        let m = &self.engine.manifest().model;
+        [self.depth, m.max_seq, m.n_heads, m.head_dim]
+    }
+
+    /// Prefill the draft cache over the padded prompt window.
+    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<(StageOutput, Nanos)> {
+        let m = &self.engine.manifest().model;
+        let w = m.prefill_window;
+        if tokens.len() != w {
+            bail!("draft prefill expects {w} (padded) tokens, got {}", tokens.len());
+        }
+        let artifact = format!("draft{}_prefill", self.depth);
+        let shape = cache.shape.to_vec();
+        let k_in = std::mem::take(&mut cache.k);
+        let v_in = std::mem::take(&mut cache.v);
+        let inputs = vec![
+            HostTensor::i32(tokens.to_vec(), vec![w]),
+            HostTensor::f32(k_in, shape.clone()),
+            HostTensor::f32(v_in, shape),
+            HostTensor::scalar_i32(0),
+        ];
+        let t0 = Instant::now();
+        let mut outs = self.engine.run(&artifact, &self.weight_set, 0, &inputs)?;
+        let elapsed = t0.elapsed().as_nanos() as Nanos;
+        let nv = outs.pop().unwrap();
+        let nk = outs.pop().unwrap();
+        let out = outs.pop().unwrap();
+        match (nk, nv) {
+            (HostTensor::F32 { data: k, .. }, HostTensor::F32 { data: v, .. }) => {
+                cache.replace(k, v)?
+            }
+            _ => bail!("draft cache outputs must be f32"),
+        }
+        let data = match out {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("draft prefill output must be f32"),
+        };
+        Ok((StageOutput { data, width: w, dim: m.vocab }, elapsed))
+    }
+
+    /// One draft step with fused sampling. Returns (token, logits, time).
+    pub fn step(
+        &self,
+        token: i32,
+        cache: &mut KvCache,
+        pos: usize,
+        temp: f32,
+        uniform: f32,
+    ) -> Result<(i32, Vec<f32>, Nanos)> {
+        let artifact = format!("draft{}_step", self.depth);
+        let shape = cache.shape.to_vec();
+        let k_in = std::mem::take(&mut cache.k);
+        let v_in = std::mem::take(&mut cache.v);
+        let inputs = vec![
+            HostTensor::i32(vec![token], vec![1]),
+            HostTensor::f32(k_in, shape.clone()),
+            HostTensor::f32(v_in, shape),
+            HostTensor::scalar_i32(pos as i32),
+            HostTensor::scalar_f32(temp),
+            HostTensor::scalar_f32(uniform),
+        ];
+        let t0 = Instant::now();
+        let mut outs = self.engine.run(&artifact, &self.weight_set, 0, &inputs)?;
+        let elapsed = t0.elapsed().as_nanos() as Nanos;
+        // outputs: [next_token, logits, k, v]
+        let nv = outs.pop().unwrap();
+        let nk = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+        let next = outs.pop().unwrap();
+        match (nk, nv) {
+            (HostTensor::F32 { data: k, .. }, HostTensor::F32 { data: v, .. }) => {
+                cache.replace(k, v)?
+            }
+            _ => bail!("draft cache outputs must be f32"),
+        }
+        let logits = match logits {
+            HostTensor::F32 { data, .. } => data,
+            _ => bail!("draft logits must be f32"),
+        };
+        Ok((next.as_i32()?[0], logits, elapsed))
+    }
+}
+
+/// Outcome of one verification round (mirrors the L1 kernel outputs).
+#[derive(Debug, Clone)]
+pub struct VerifyOutcome {
+    /// Committed tokens: the `k` accepted draft tokens then the
+    /// correction/bonus token (`k+1` entries).
+    pub tokens: Vec<i32>,
+    /// Number of accepted draft tokens.
+    pub accepted: usize,
+    pub key_flags: Vec<bool>,
+    /// [gamma, 6] stats rows: h_d, h_t, pt_y, pd_y, normmatch, accept_prob.
+    pub stats: Vec<f32>,
+}
+
+/// Knobs for the verify kernel — layout must match aot.py's knobs_layout.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyKnobs {
+    pub tau: f32,
+    pub lam1: f32,
+    pub lam2: f32,
+    pub lam3: f32,
+    pub temp: f32,
+    pub adaptive: bool,
+}
+
+impl VerifyKnobs {
+    pub fn strict(temp: f32) -> VerifyKnobs {
+        VerifyKnobs { tau: 0.0, lam1: 0.0, lam2: 0.0, lam3: 0.0, temp, adaptive: false }
+    }
+
+    pub fn to_array(self) -> Vec<f32> {
+        vec![
+            self.tau,
+            self.lam1,
+            self.lam2,
+            self.lam3,
+            self.temp,
+            if self.adaptive { 1.0 } else { 0.0 },
+            0.0,
+            0.0,
+        ]
+    }
+}
+
+/// Executes the L1 adaptive-verification kernel (leader-local).
+pub struct VerifyExecutor {
+    engine: Rc<Engine>,
+}
+
+impl VerifyExecutor {
+    pub fn new(engine: Rc<Engine>) -> VerifyExecutor {
+        VerifyExecutor { engine }
+    }
+
+    /// Verify a window: target logits [gamma+1, V] (flattened), draft
+    /// logits [gamma, V], drafted tokens, uniforms, knobs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        gamma: usize,
+        t_logits: Vec<f32>,
+        d_logits: Vec<f32>,
+        d_tokens: Vec<i32>,
+        u_accept: Vec<f32>,
+        u_sample: Vec<f32>,
+        knobs: VerifyKnobs,
+    ) -> Result<(VerifyOutcome, Nanos)> {
+        let vocab = self.engine.manifest().model.vocab;
+        let artifact = format!("verify_g{gamma}");
+        let inputs = vec![
+            HostTensor::f32(t_logits, vec![gamma + 1, vocab]),
+            HostTensor::f32(d_logits, vec![gamma, vocab]),
+            HostTensor::i32(d_tokens, vec![gamma]),
+            HostTensor::f32(u_accept, vec![gamma]),
+            HostTensor::f32(u_sample, vec![gamma + 1]),
+            HostTensor::f32(knobs.to_array(), vec![8]),
+        ];
+        let t0 = Instant::now();
+        let outs = self.engine.run(&artifact, "target", 0, &inputs)?;
+        let elapsed = t0.elapsed().as_nanos() as Nanos;
+        let out_tokens = outs[0].as_i32()?;
+        let accepted = outs[1].scalar_i32_value().map_or_else(
+            |_| outs[1].as_i32().map(|v| v[0]),
+            Ok,
+        )? as usize;
+        let key_flags = outs[2].as_i32()?.iter().map(|&x| x != 0).collect();
+        let stats = outs[3].as_f32()?.to_vec();
+        let tokens = out_tokens[..=accepted].to_vec();
+        Ok((VerifyOutcome { tokens, accepted, key_flags, stats }, elapsed))
+    }
+}

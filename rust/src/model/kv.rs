@@ -1,0 +1,221 @@
+//! KV-cache management: per-sequence caches with frontier semantics and a
+//! fixed-capacity slot pool (the serving system's memory manager).
+//!
+//! Speculative decoding needs cheap *rollback*: a verify pass writes all
+//! `W = γ+1` positions into the cache, but only `k+1` tokens are
+//! committed. Because every attention read is masked by the frontier
+//! (`cache index ≤ pos + row`), rejected rows past the frontier are
+//! invisible and are simply overwritten by the next round — rollback is
+//! O(1): just don't advance `pos`. `test_rollback_by_frontier` (python
+//! test_model.py::test_prefill_padding_is_masked is the L2 twin) pins
+//! this invariant.
+
+use anyhow::{anyhow, bail, Result};
+
+/// One stage's KV cache for one sequence.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Flattened [layers, max_seq, heads, head_dim].
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub shape: [usize; 4],
+    /// Commit frontier: number of committed positions.
+    pub pos: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, max_seq: usize, heads: usize, head_dim: usize) -> KvCache {
+        let n = layers * max_seq * heads * head_dim;
+        KvCache {
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+            shape: [layers, max_seq, heads, head_dim],
+            pos: 0,
+        }
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.shape[1]
+    }
+
+    /// Remaining capacity before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.max_seq() - self.pos
+    }
+
+    /// Advance the commit frontier by `n` accepted positions.
+    pub fn commit(&mut self, n: usize) -> Result<()> {
+        if self.pos + n > self.max_seq() {
+            bail!(
+                "KV commit overflow: pos {} + {} > capacity {}",
+                self.pos,
+                n,
+                self.max_seq()
+            );
+        }
+        self.pos += n;
+        Ok(())
+    }
+
+    /// Replace contents with an artifact's updated cache (same shape).
+    /// Checked against the *declared* shape, not the current buffer —
+    /// executors `mem::take` the buffers before upload (perf: avoids a
+    /// ~1.5 MB clone per stage call), so `self.k` may be empty here.
+    pub fn replace(&mut self, k: Vec<f32>, v: Vec<f32>) -> Result<()> {
+        let expect: usize = self.shape.iter().product();
+        if k.len() != expect || v.len() != expect {
+            bail!("KV replace: size mismatch ({} / {} vs {expect})", k.len(), v.len());
+        }
+        self.k = k;
+        self.v = v;
+        Ok(())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+}
+
+/// Fixed-capacity pool of sequence slots — the coordinator's admission
+/// limiter. A sequence holds one slot per pipeline stage; the pool tracks
+/// them jointly so admission is all-or-nothing.
+#[derive(Debug)]
+pub struct KvPool {
+    /// slot -> per-stage caches (None = free).
+    slots: Vec<Option<Vec<KvCache>>>,
+    free: Vec<usize>,
+    /// Template dims per stage: (layers, max_seq, heads, head_dim).
+    stage_dims: Vec<[usize; 4]>,
+}
+
+impl KvPool {
+    pub fn new(capacity: usize, stage_dims: Vec<[usize; 4]>) -> KvPool {
+        KvPool {
+            slots: (0..capacity).map(|_| None).collect(),
+            free: (0..capacity).rev().collect(),
+            stage_dims,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.capacity() - self.free.len()
+    }
+
+    /// Allocate a slot with fresh caches; None if the pool is exhausted
+    /// (the batcher's backpressure signal).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        let caches = self
+            .stage_dims
+            .iter()
+            .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
+            .collect();
+        self.slots[slot] = Some(caches);
+        Some(slot)
+    }
+
+    pub fn release(&mut self, slot: usize) -> Result<()> {
+        if self.slots.get(slot).map(Option::is_none).unwrap_or(true) {
+            bail!("release of free or invalid slot {slot}");
+        }
+        self.slots[slot] = None;
+        self.free.push(slot);
+        Ok(())
+    }
+
+    pub fn stage_cache(&mut self, slot: usize, stage: usize) -> Result<&mut KvCache> {
+        self.slots
+            .get_mut(slot)
+            .and_then(Option::as_mut)
+            .and_then(|v| v.get_mut(stage))
+            .ok_or_else(|| anyhow!("no cache for slot {slot} stage {stage}"))
+    }
+
+    /// Total bytes held by live caches (memory accounting metric).
+    pub fn bytes_in_use(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .flat_map(|v| v.iter())
+            .map(KvCache::size_bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commit_advances_frontier() {
+        let mut c = KvCache::new(2, 16, 2, 4);
+        assert_eq!(c.pos, 0);
+        c.commit(5).unwrap();
+        assert_eq!(c.pos, 5);
+        assert_eq!(c.remaining(), 11);
+        assert!(c.commit(12).is_err());
+    }
+
+    #[test]
+    fn rollback_by_frontier() {
+        // A verify round writes gamma+1 rows but only commits k+1: the
+        // frontier simply advances less. Nothing to undo.
+        let mut c = KvCache::new(1, 8, 1, 1);
+        c.replace(vec![1.0; 8], vec![2.0; 8]).unwrap();
+        c.commit(3).unwrap(); // k+1 = 3 of a 5-wide window
+        assert_eq!(c.pos, 3);
+        // the next window overwrites rows starting at pos — no stale reads
+        // possible because attention masks index > pos + row.
+    }
+
+    #[test]
+    fn replace_checks_size() {
+        let mut c = KvCache::new(1, 4, 1, 1);
+        assert!(c.replace(vec![0.0; 3], vec![0.0; 4]).is_err());
+        assert!(c.replace(vec![0.0; 4], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn pool_alloc_release_cycle() {
+        let mut p = KvPool::new(2, vec![[1, 4, 1, 1], [1, 4, 1, 1]]);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(p.alloc().is_none(), "pool exhausted -> backpressure");
+        assert_eq!(p.in_use(), 2);
+        p.release(a).unwrap();
+        assert_eq!(p.in_use(), 1);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "slot reused");
+    }
+
+    #[test]
+    fn pool_rejects_double_release() {
+        let mut p = KvPool::new(1, vec![[1, 4, 1, 1]]);
+        let a = p.alloc().unwrap();
+        p.release(a).unwrap();
+        assert!(p.release(a).is_err());
+    }
+
+    #[test]
+    fn pool_accounts_memory() {
+        let mut p = KvPool::new(1, vec![[2, 8, 2, 4]]);
+        assert_eq!(p.bytes_in_use(), 0);
+        let _ = p.alloc().unwrap();
+        assert_eq!(p.bytes_in_use(), 2 * (2 * 8 * 2 * 4) * 4);
+    }
+
+    #[test]
+    fn stage_cache_access() {
+        let mut p = KvPool::new(1, vec![[1, 4, 1, 1], [1, 4, 1, 1]]);
+        let s = p.alloc().unwrap();
+        p.stage_cache(s, 0).unwrap().commit(2).unwrap();
+        assert_eq!(p.stage_cache(s, 0).unwrap().pos, 2);
+        assert_eq!(p.stage_cache(s, 1).unwrap().pos, 0);
+        assert!(p.stage_cache(s, 2).is_err());
+    }
+}

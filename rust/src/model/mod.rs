@@ -1,0 +1,75 @@
+//! Model layer: shard planning, KV-cache management, and the executors
+//! that run AOT artifacts through the PJRT engine.
+
+pub mod executor;
+pub mod kv;
+pub mod shard;
+
+pub use executor::{
+    DraftExecutor, StageExecutor, StageInput, StageOutput, VerifyExecutor, VerifyKnobs,
+    VerifyOutcome,
+};
+pub use kv::{KvCache, KvPool};
+pub use shard::{plan_shards, stage_cache_dims, ShardSpec};
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+
+/// Convenience bundle: the full sharded target model plus draft + verify
+/// executors over one engine (single-process / sim-mode deployment).
+pub struct ShardedModel {
+    pub engine: Rc<Engine>,
+    pub stages: Vec<StageExecutor>,
+    pub draft: DraftExecutor,
+    pub verify: VerifyExecutor,
+}
+
+impl ShardedModel {
+    pub fn new(engine: Rc<Engine>, n_shards: usize, draft_variant: &str) -> Result<ShardedModel> {
+        let shards = plan_shards(engine.manifest(), n_shards)?;
+        let stages = shards
+            .into_iter()
+            .map(|s| StageExecutor::new(engine.clone(), s))
+            .collect();
+        let draft = DraftExecutor::new(engine.clone(), draft_variant)?;
+        let verify = VerifyExecutor::new(engine.clone());
+        Ok(ShardedModel { engine, stages, draft, verify })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// KV dims for the target stages (for KvPool construction).
+    pub fn stage_dims(&self) -> Vec<[usize; 4]> {
+        let m = &self.engine.manifest().model;
+        self.stages
+            .iter()
+            .map(|s| [s.spec.lps, m.max_seq, m.n_heads, m.head_dim])
+            .collect()
+    }
+
+    /// Pre-compile all artifacts this deployment will execute.
+    pub fn warmup(&self, gammas: &[usize]) -> Result<()> {
+        let m = self.engine.manifest();
+        let prefill = m.model.prefill_window;
+        let mut windows = vec![1usize, prefill];
+        windows.extend(gammas.iter().map(|g| g + 1));
+        for stage in &self.stages {
+            for &w in &windows {
+                let art = stage.spec.artifact(w);
+                self.engine.ensure_compiled(&art)?;
+                self.engine.ensure_weights(&art, "target", stage.spec.layer_base)?;
+            }
+        }
+        for g in gammas {
+            self.engine.ensure_compiled(&format!("verify_g{g}"))?;
+        }
+        self.engine.ensure_compiled(&format!("draft{}_step", self.draft.depth))?;
+        self.engine.ensure_compiled(&format!("draft{}_prefill", self.draft.depth))?;
+        Ok(())
+    }
+}

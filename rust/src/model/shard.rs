@@ -1,0 +1,73 @@
+//! Pipeline-shard planning: which layers and artifacts each node runs.
+
+use anyhow::Result;
+
+use crate::runtime::Manifest;
+
+/// One stage of the pipeline-parallel target model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub stage_idx: usize,
+    /// 'first' | 'mid' | 'last' | 'full'.
+    pub role: String,
+    /// Global index of this stage's first layer.
+    pub layer_base: usize,
+    /// Layers per stage.
+    pub lps: usize,
+}
+
+impl ShardSpec {
+    /// Artifact name for this shard at a given window size.
+    pub fn artifact(&self, window: usize) -> String {
+        Manifest::stage_artifact_name(&self.role, self.lps, window)
+    }
+
+    /// Does this stage take token ids (vs hidden states) as input?
+    pub fn takes_tokens(&self) -> bool {
+        self.role == "first" || self.role == "full"
+    }
+
+    /// Does this stage emit logits (vs hidden states)?
+    pub fn emits_logits(&self) -> bool {
+        self.role == "last" || self.role == "full"
+    }
+}
+
+/// Plan the shard layout for `n_shards` pipeline stages.
+pub fn plan_shards(manifest: &Manifest, n_shards: usize) -> Result<Vec<ShardSpec>> {
+    let lps = manifest.layers_per_stage(n_shards)?;
+    Ok(Manifest::stage_roles(n_shards)
+        .into_iter()
+        .enumerate()
+        .map(|(i, role)| ShardSpec {
+            stage_idx: i,
+            role: role.to_string(),
+            layer_base: i * lps,
+            lps,
+        })
+        .collect())
+}
+
+/// KV-cache dims per stage: [layers, max_seq, heads, head_dim].
+pub fn stage_cache_dims(manifest: &Manifest, shards: &[ShardSpec]) -> Vec<[usize; 4]> {
+    let m = &manifest.model;
+    shards
+        .iter()
+        .map(|s| [s.lps, m.max_seq, m.n_heads, m.head_dim])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_spec_artifact_names() {
+        let s = ShardSpec { stage_idx: 1, role: "mid".into(), layer_base: 2, lps: 2 };
+        assert_eq!(s.artifact(5), "target_mid2_w5");
+        assert!(!s.takes_tokens());
+        assert!(!s.emits_logits());
+        let f = ShardSpec { stage_idx: 0, role: "full".into(), layer_base: 0, lps: 8 };
+        assert!(f.takes_tokens() && f.emits_logits());
+    }
+}

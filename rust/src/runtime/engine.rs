@@ -1,0 +1,288 @@
+//! The PJRT execution engine: load HLO-text artifacts, compile once, bind
+//! weight sets as device-resident buffers, execute with host tensors.
+//!
+//! `PjRtClient` is `Rc`-backed (not `Send`), so an `Engine` is
+//! thread-confined. Each cluster node thread builds its own engine — which
+//! mirrors a real decentralized deployment, where every node runs its own
+//! runtime. The host weight blob is shared (`WeightStore` is `Arc`ed);
+//! device weight buffers are uploaded once per engine and cached.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{ElementType, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use super::tensor::HostTensor;
+use super::weights::{resolve_param_name, WeightStore};
+
+/// Cumulative engine counters (observability for the metrics layer).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_nanos: u64,
+    pub upload_nanos: u64,
+    pub download_nanos: u64,
+    pub bytes_uploaded: u64,
+    pub bytes_downloaded: u64,
+}
+
+/// Thread-confined PJRT engine over one artifact directory.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Rc<Manifest>,
+    weights: WeightStore,
+    executables: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// (artifact, weight_set, layer_base) -> uploaded weight buffers.
+    weight_buffers: RefCell<HashMap<(String, String, usize), Rc<Vec<PjRtBuffer>>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Create an engine over an already-loaded manifest + weight store.
+    pub fn new(manifest: Rc<Manifest>, weights: WeightStore) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            weights,
+            executables: RefCell::new(HashMap::new()),
+            weight_buffers: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    /// Convenience: load manifest + weights from an artifact directory.
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Rc::new(Manifest::load(dir)?);
+        let weights = WeightStore::load(&manifest)?;
+        Engine::new(manifest, weights)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (and cache) an artifact's executable.
+    pub fn ensure_compiled(&self, artifact: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(artifact) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.artifact(artifact)?;
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{artifact}'"))?;
+        self.stats.borrow_mut().compiles += 1;
+        let exe = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(artifact.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload (and cache) the weight buffers for (artifact, weight_set,
+    /// layer_base). layer_base maps stage-local layer indices to global
+    /// ones (stage s of a pipeline with L layers/stage has base s*L).
+    pub fn ensure_weights(
+        &self,
+        artifact: &str,
+        weight_set: &str,
+        layer_base: usize,
+    ) -> Result<Rc<Vec<PjRtBuffer>>> {
+        let key = (artifact.to_string(), weight_set.to_string(), layer_base);
+        if let Some(bufs) = self.weight_buffers.borrow().get(&key) {
+            return Ok(bufs.clone());
+        }
+        let meta = self.manifest.artifact(artifact)?;
+        let set = self.manifest.weight_set(weight_set)?;
+        let mut bufs = Vec::with_capacity(meta.params.len());
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        for local in &meta.params {
+            let global = resolve_param_name(local, layer_base);
+            let rec = set.get(&global).ok_or_else(|| {
+                anyhow!("weight '{global}' (local '{local}') missing from set '{weight_set}'")
+            })?;
+            let data = self.weights.tensor_f32(rec)?;
+            bytes += (data.len() * 4) as u64;
+            let buf = self
+                .client
+                .buffer_from_host_buffer(&data, &rec.shape, None)
+                .with_context(|| format!("uploading weight '{global}'"))?;
+            bufs.push(buf);
+        }
+        {
+            let mut s = self.stats.borrow_mut();
+            s.upload_nanos += t0.elapsed().as_nanos() as u64;
+            s.bytes_uploaded += bytes;
+        }
+        let bufs = Rc::new(bufs);
+        self.weight_buffers.borrow_mut().insert(key, bufs.clone());
+        Ok(bufs)
+    }
+
+    /// Upload one host tensor as a device buffer.
+    ///
+    /// Uses the typed `buffer_from_host_buffer`, which (a) maps to PJRT's
+    /// `kImmutableOnlyDuringCall` semantics — the copy completes before the
+    /// call returns, so the host memory may be freed immediately — and
+    /// (b) passes the correct `PrimitiveType`. Two upstream traps avoided:
+    /// `buffer_from_host_literal` is asynchronous (the literal must outlive
+    /// the transfer → use-after-free), and `buffer_from_host_raw_bytes`
+    /// passes `ElementType as i32` where the C shim expects a
+    /// `PrimitiveType`, mislabeling F32 data as F16.
+    fn upload(&self, t: &HostTensor) -> Result<PjRtBuffer> {
+        let dims: Vec<usize> = t.shape().to_vec();
+        Ok(match t {
+            HostTensor::F32 { data, .. } => {
+                self.client.buffer_from_host_buffer(data, &dims, None)?
+            }
+            HostTensor::I32 { data, .. } => {
+                self.client.buffer_from_host_buffer(data, &dims, None)?
+            }
+        })
+    }
+
+    fn host_of(&self, lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => Ok(HostTensor::f32(lit.to_vec::<f32>()?, dims)),
+            ElementType::S32 => Ok(HostTensor::i32(lit.to_vec::<i32>()?, dims)),
+            other => bail!("unsupported artifact output dtype {other:?}"),
+        }
+    }
+
+    /// Execute an artifact: weights (cached device buffers) + runtime
+    /// inputs (uploaded per call). Returns host tensors in the artifact's
+    /// declared output order.
+    pub fn run(
+        &self,
+        artifact: &str,
+        weight_set: &str,
+        layer_base: usize,
+        inputs: &[HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let meta = self.manifest.artifact(artifact)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact '{artifact}' expects {} runtime inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        self.validate_inputs(&meta, inputs)?;
+        let exe = self.ensure_compiled(artifact)?;
+        let wbufs = if meta.params.is_empty() {
+            Rc::new(Vec::new())
+        } else {
+            self.ensure_weights(artifact, weight_set, layer_base)?
+        };
+
+        // Upload runtime inputs.
+        let t_up = Instant::now();
+        let mut in_bufs: Vec<PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut up_bytes = 0u64;
+        for t in inputs {
+            up_bytes += t.size_bytes() as u64;
+            in_bufs.push(self.upload(t)?);
+        }
+        let upload_nanos = t_up.elapsed().as_nanos() as u64;
+
+        // Assemble the positional argument list: weights then inputs.
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(wbufs.len() + in_bufs.len());
+        args.extend(wbufs.iter());
+        args.extend(in_bufs.iter());
+
+        let t_exec = Instant::now();
+        let result = exe
+            .execute_b(&args)
+            .with_context(|| format!("executing '{artifact}'"))?;
+        let exec_nanos = t_exec.elapsed().as_nanos() as u64;
+
+        // One replica, one tuple-valued output buffer (return_tuple=True).
+        let t_down = Instant::now();
+        let out_buf = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("artifact '{artifact}' produced no outputs"))?;
+        let lit = out_buf.to_literal_sync()?;
+        let leaves = lit.to_tuple()?;
+        let mut outs = Vec::with_capacity(leaves.len());
+        let mut down_bytes = 0u64;
+        for leaf in &leaves {
+            let t = self.host_of(leaf)?;
+            down_bytes += t.size_bytes() as u64;
+            outs.push(t);
+        }
+        let download_nanos = t_down.elapsed().as_nanos() as u64;
+
+        if outs.len() != meta.outputs.len() {
+            bail!(
+                "artifact '{artifact}' returned {} outputs, manifest says {}",
+                outs.len(),
+                meta.outputs.len()
+            );
+        }
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_nanos += exec_nanos;
+            s.upload_nanos += upload_nanos;
+            s.download_nanos += download_nanos;
+            s.bytes_uploaded += up_bytes;
+            s.bytes_downloaded += down_bytes;
+        }
+        Ok(outs)
+    }
+
+    fn validate_inputs(&self, meta: &ArtifactMeta, inputs: &[HostTensor]) -> Result<()> {
+        for (spec, t) in meta.inputs.iter().zip(inputs) {
+            if spec.shape != t.shape() {
+                bail!(
+                    "artifact '{}' input '{}': expected shape {:?}, got {:?}",
+                    meta.name,
+                    spec.name,
+                    spec.shape,
+                    t.shape()
+                );
+            }
+            if spec.dtype != t.dtype_name() {
+                bail!(
+                    "artifact '{}' input '{}': expected {}, got {}",
+                    meta.name,
+                    spec.name,
+                    spec.dtype,
+                    t.dtype_name()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-compile + pre-upload everything a node will need, so the first
+    /// request doesn't pay compile latency (production warmup path).
+    pub fn warmup(&self, artifacts: &[(&str, &str, usize)]) -> Result<()> {
+        for (artifact, wset, base) in artifacts {
+            self.ensure_compiled(artifact)?;
+            let meta = self.manifest.artifact(artifact)?;
+            if !meta.params.is_empty() {
+                self.ensure_weights(artifact, wset, *base)?;
+            }
+        }
+        Ok(())
+    }
+}

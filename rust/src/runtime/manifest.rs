@@ -1,0 +1,314 @@
+//! Parse `artifacts/manifest.json` — the schema contract with `aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Architecture constants of the exported model.
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub prefill_window: usize,
+    pub logit_scale: f64,
+}
+
+/// One tensor's location inside weights.bin.
+#[derive(Debug, Clone)]
+pub struct TensorRec {
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl TensorRec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.num_elements() * 4
+    }
+}
+
+/// Calibrated draft weight-set variant (the agreement ladder).
+#[derive(Debug, Clone)]
+pub struct DraftVariant {
+    pub name: String,
+    pub layers: usize,
+    pub sigma: f64,
+    pub greedy_agree: f64,
+    pub overlap: f64,
+}
+
+impl DraftVariant {
+    pub fn weight_set(&self) -> String {
+        format!("draft_{}", self.name)
+    }
+}
+
+/// Runtime input/output slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Stage,
+    DraftStep,
+    Verify,
+}
+
+/// Metadata for one HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    /// 'first' | 'mid' | 'last' | 'full' for stages.
+    pub role: Option<String>,
+    /// Layers per stage (stage/draft artifacts).
+    pub layers: Option<usize>,
+    pub window: usize,
+    pub gamma: Option<usize>,
+    /// Weight parameter names, in HLO positional order, stage-local.
+    pub params: Vec<String>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub shard_counts: Vec<usize>,
+    pub gammas: Vec<usize>,
+    pub seed: u64,
+    pub weights_file: String,
+    pub weight_sets: BTreeMap<String, BTreeMap<String, TensorRec>>,
+    pub draft_variants: Vec<DraftVariant>,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn io_specs(v: &Value) -> Result<Vec<IoSpec>> {
+    v.as_array()
+        .ok_or_else(|| anyhow!("io spec list is not an array"))?
+        .iter()
+        .map(|s| {
+            Ok(IoSpec {
+                name: s.str_field("name")?.to_string(),
+                shape: s.usize_array_field("shape")?,
+                dtype: s.str_field("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let m = v.get("model")?;
+        let model = ModelDims {
+            vocab: m.usize_field("vocab")?,
+            d_model: m.usize_field("d_model")?,
+            n_heads: m.usize_field("n_heads")?,
+            head_dim: m.usize_field("head_dim")?,
+            d_ff: m.usize_field("d_ff")?,
+            n_layers: m.usize_field("n_layers")?,
+            max_seq: m.usize_field("max_seq")?,
+            prefill_window: m.usize_field("prefill_window")?,
+            logit_scale: m.f64_field("logit_scale")?,
+        };
+
+        let mut weight_sets = BTreeMap::new();
+        for (set, tensors) in v
+            .get("weight_sets")?
+            .as_object()
+            .ok_or_else(|| anyhow!("weight_sets not an object"))?
+        {
+            let mut map = BTreeMap::new();
+            for (name, rec) in tensors
+                .as_object()
+                .ok_or_else(|| anyhow!("weight set {set} not an object"))?
+            {
+                map.insert(
+                    name.clone(),
+                    TensorRec {
+                        offset: rec.usize_field("offset")?,
+                        shape: rec.usize_array_field("shape")?,
+                    },
+                );
+            }
+            weight_sets.insert(set.clone(), map);
+        }
+
+        let draft_variants = v
+            .get("draft_variants")?
+            .as_array()
+            .ok_or_else(|| anyhow!("draft_variants not an array"))?
+            .iter()
+            .map(|d| {
+                Ok(DraftVariant {
+                    name: d.str_field("name")?.to_string(),
+                    layers: d.usize_field("layers")?,
+                    sigma: d.f64_field("sigma")?,
+                    greedy_agree: d.f64_field("greedy_agree")?,
+                    overlap: d.f64_field("overlap")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v
+            .get("artifacts")?
+            .as_object()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let kind = match a.str_field("kind")? {
+                "stage" => ArtifactKind::Stage,
+                "draft_step" => ArtifactKind::DraftStep,
+                "verify" => ArtifactKind::Verify,
+                other => bail!("unknown artifact kind '{other}'"),
+            };
+            let params = a
+                .get("params")?
+                .as_array()
+                .ok_or_else(|| anyhow!("params not an array"))?
+                .iter()
+                .map(|p| {
+                    p.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("param not a string"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: a.str_field("file")?.to_string(),
+                    kind,
+                    role: a.get_opt("role").and_then(|r| r.as_str()).map(str::to_string),
+                    layers: a.get_opt("layers").and_then(|l| l.as_usize()),
+                    window: a.usize_field("window")?,
+                    gamma: a.get_opt("gamma").and_then(|g| g.as_usize()),
+                    params,
+                    inputs: io_specs(a.get("inputs")?)?,
+                    outputs: io_specs(a.get("outputs")?)?,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            model,
+            shard_counts: v.usize_array_field("shard_counts")?,
+            gammas: v.usize_array_field("gammas")?,
+            seed: v.usize_field("seed")? as u64,
+            weights_file: v.str_field("weights_file")?.to_string(),
+            weight_sets,
+            draft_variants,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn weight_set(&self, name: &str) -> Result<&BTreeMap<String, TensorRec>> {
+        self.weight_sets
+            .get(name)
+            .ok_or_else(|| anyhow!("weight set '{name}' not in manifest"))
+    }
+
+    /// The draft variant whose measured overlap best matches `target`.
+    pub fn variant_by_overlap(&self, target: f64) -> Result<&DraftVariant> {
+        self.draft_variants
+            .iter()
+            .min_by(|a, b| {
+                (a.overlap - target)
+                    .abs()
+                    .partial_cmp(&(b.overlap - target).abs())
+                    .unwrap()
+            })
+            .ok_or_else(|| anyhow!("no draft variants in manifest"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&DraftVariant> {
+        self.draft_variants
+            .iter()
+            .find(|v| v.name == name)
+            .ok_or_else(|| anyhow!("draft variant '{name}' not in manifest"))
+    }
+
+    /// Name of the stage artifact for (role, layers-per-stage, window).
+    pub fn stage_artifact_name(role: &str, lps: usize, window: usize) -> String {
+        format!("target_{role}{lps}_w{window}")
+    }
+
+    /// Layers-per-stage for a shard count.
+    pub fn layers_per_stage(&self, n_shards: usize) -> Result<usize> {
+        if n_shards == 0 || self.model.n_layers % n_shards != 0 {
+            bail!(
+                "{} layers not divisible into {n_shards} stages",
+                self.model.n_layers
+            );
+        }
+        Ok(self.model.n_layers / n_shards)
+    }
+
+    /// Stage roles for a shard count (mirrors config.stage_roles in python).
+    pub fn stage_roles(n_shards: usize) -> Vec<&'static str> {
+        if n_shards == 1 {
+            return vec!["full"];
+        }
+        let mut roles = vec!["first"];
+        for _ in 0..n_shards.saturating_sub(2) {
+            roles.push("mid");
+        }
+        roles.push("last");
+        roles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_roles_shapes() {
+        assert_eq!(Manifest::stage_roles(1), vec!["full"]);
+        assert_eq!(Manifest::stage_roles(2), vec!["first", "last"]);
+        assert_eq!(
+            Manifest::stage_roles(4),
+            vec!["first", "mid", "mid", "last"]
+        );
+    }
+
+    #[test]
+    fn stage_artifact_names() {
+        assert_eq!(
+            Manifest::stage_artifact_name("first", 4, 5),
+            "target_first4_w5"
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime layer: artifact manifest, weight store, execution engine.
+//!
+//! This is the only module that touches the `xla` crate. Everything above
+//! it (coordinator, spec decoding, cluster) works with [`HostTensor`]s and
+//! artifact names, so the rest of the stack is testable without PJRT.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+pub mod weights;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{
+    ArtifactKind, ArtifactMeta, DraftVariant, IoSpec, Manifest, ModelDims, TensorRec,
+};
+pub use tensor::HostTensor;
+pub use weights::{resolve_param_name, WeightStore};

@@ -1,0 +1,121 @@
+//! Host-side tensors: the data that crosses node boundaries.
+//!
+//! PJRT handles (`Literal`, `PjRtBuffer`) hold raw pointers and are not
+//! `Send`, so everything that travels between node threads — activations,
+//! logits, tokens, KV snapshots — is a plain `HostTensor`. Conversion to
+//! and from literals happens inside each node's `Engine`.
+
+use anyhow::{bail, Result};
+
+/// Row-major host tensor, f32 or i32 (the only dtypes in the artifact set).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        HostTensor::F32 {
+            data: vec![0.0; shape.iter().product()],
+            shape: shape.to_vec(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size in bytes — what the simulated network charges for.
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            HostTensor::F32 { .. } => "float32",
+            HostTensor::I32 { .. } => "int32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        let d = self.as_i32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_sizes() {
+        let t = HostTensor::zeros_f32(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn dtype_enforcement() {
+        let t = HostTensor::i32(vec![1, 2], vec![2]);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+        assert_eq!(HostTensor::scalar_i32(5).scalar_i32_value().unwrap(), 5);
+    }
+}

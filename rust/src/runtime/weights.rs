@@ -1,0 +1,104 @@
+//! Memory-mapped-style access to `weights.bin`.
+//!
+//! The blob is read once into an `Arc<[u8]>` and shared by every engine in
+//! the process (weight *buffers* are per-PJRT-client, but the host copy is
+//! shared). Tensors are sliced out lazily by manifest offset.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, TensorRec};
+
+/// Shared host copy of weights.bin.
+#[derive(Clone)]
+pub struct WeightStore {
+    blob: Arc<Vec<u8>>,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let path = manifest.dir.join(&manifest.weights_file);
+        Self::load_path(&path)
+    }
+
+    pub fn load_path(path: impl AsRef<Path>) -> Result<WeightStore> {
+        let blob = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Ok(WeightStore { blob: Arc::new(blob) })
+    }
+
+    pub fn size(&self) -> usize {
+        self.blob.len()
+    }
+
+    /// Raw little-endian f32 bytes for one tensor.
+    pub fn tensor_bytes(&self, rec: &TensorRec) -> Result<&[u8]> {
+        let end = rec.offset + rec.size_bytes();
+        if end > self.blob.len() {
+            bail!(
+                "tensor out of bounds: offset {} + {} > blob {}",
+                rec.offset,
+                rec.size_bytes(),
+                self.blob.len()
+            );
+        }
+        Ok(&self.blob[rec.offset..end])
+    }
+
+    /// Decode one tensor to f32 (host copy).
+    pub fn tensor_f32(&self, rec: &TensorRec) -> Result<Vec<f32>> {
+        let bytes = self.tensor_bytes(rec)?;
+        let mut out = Vec::with_capacity(rec.num_elements());
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+        }
+        Ok(out)
+    }
+}
+
+/// Map a stage-local parameter name (`layer0.wq`) to the global weight-set
+/// name (`layer{base+0}.wq`). Non-layer names pass through.
+pub fn resolve_param_name(local: &str, layer_base: usize) -> String {
+    if let Some(rest) = local.strip_prefix("layer") {
+        if let Some((idx, field)) = rest.split_once('.') {
+            if let Ok(i) = idx.parse::<usize>() {
+                return format!("layer{}.{}", i + layer_base, field);
+            }
+        }
+    }
+    local.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_name_resolution() {
+        assert_eq!(resolve_param_name("layer0.wq", 4), "layer4.wq");
+        assert_eq!(resolve_param_name("layer3.b2", 0), "layer3.b2");
+        assert_eq!(resolve_param_name("embed", 4), "embed");
+        assert_eq!(resolve_param_name("lnf_scale", 2), "lnf_scale");
+    }
+
+    #[test]
+    fn tensor_bounds_checked() {
+        let store = WeightStore { blob: Arc::new(vec![0u8; 16]) };
+        let ok = TensorRec { offset: 0, shape: vec![4] };
+        assert_eq!(store.tensor_f32(&ok).unwrap().len(), 4);
+        let bad = TensorRec { offset: 8, shape: vec![4] };
+        assert!(store.tensor_f32(&bad).is_err());
+    }
+
+    #[test]
+    fn tensor_decodes_le_f32() {
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&1.5f32.to_le_bytes());
+        blob.extend_from_slice(&(-2.0f32).to_le_bytes());
+        let store = WeightStore { blob: Arc::new(blob) };
+        let rec = TensorRec { offset: 0, shape: vec![2] };
+        assert_eq!(store.tensor_f32(&rec).unwrap(), vec![1.5, -2.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Host-side sampling & distribution utilities.
+//!
+//! The hot path samples inside the AOT artifacts (draft step fuses its own
+//! CDF inversion; the verify kernel resamples residuals), so these
+//! routines serve the *baselines*, the accuracy evaluator, and tests.
+//! They intentionally mirror the kernel semantics (same CDF convention:
+//! token = #{i : cdf_i <= u}) so cross-layer checks are exact.
+
+use crate::util::rng::Rng;
+
+/// Numerically stable in-place softmax; returns the entropy (nats).
+pub fn softmax(logits: &[f32], out: &mut Vec<f32>) -> f32 {
+    out.clear();
+    out.reserve(logits.len());
+    let mut max = f32::NEG_INFINITY;
+    for &x in logits {
+        max = max.max(x);
+    }
+    let mut sum = 0f32;
+    for &x in logits {
+        let e = (x - max).exp();
+        out.push(e);
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    let mut entropy = 0f32;
+    for p in out.iter_mut() {
+        *p *= inv;
+        if *p > 0.0 {
+            entropy -= *p * p.ln();
+        }
+    }
+    entropy
+}
+
+/// Softmax with temperature; `temp <= 0` produces a one-hot argmax.
+pub fn softmax_with_temp(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
+    if temp <= 0.0 {
+        let am = argmax(logits);
+        out.clear();
+        out.resize(logits.len(), 0.0);
+        out[am] = 1.0;
+        return;
+    }
+    let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
+    softmax(&scaled, out);
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Inverse-CDF categorical sample matching the kernel convention
+/// (token = #{i : cdf_i <= u}, clamped to V-1).
+pub fn sample_cdf(probs: &[f32], u: f32) -> usize {
+    let mut cdf = 0f32;
+    let mut idx = 0usize;
+    for &p in probs {
+        cdf += p;
+        if cdf <= u {
+            idx += 1;
+        } else {
+            break;
+        }
+    }
+    idx.min(probs.len() - 1)
+}
+
+/// Sample from logits at a temperature (temp <= 0 → greedy argmax).
+pub fn sample_logits(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    if temp <= 0.0 {
+        return argmax(logits);
+    }
+    let mut probs = Vec::new();
+    softmax_with_temp(logits, temp, &mut probs);
+    sample_cdf(&probs, rng.f32())
+}
+
+/// Top-k filtering: keep the k largest logits, set the rest to -inf.
+pub fn top_k_filter(logits: &mut [f32], k: usize) {
+    if k == 0 || k >= logits.len() {
+        return;
+    }
+    let mut sorted: Vec<f32> = logits.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let threshold = sorted[k - 1];
+    let mut kept = 0;
+    for x in logits.iter_mut() {
+        // Keep exactly k entries even under ties.
+        if *x >= threshold && kept < k {
+            kept += 1;
+        } else {
+            *x = f32::NEG_INFINITY;
+        }
+    }
+}
+
+/// Nucleus (top-p) filtering on a probability vector (renormalized).
+pub fn top_p_filter(probs: &mut [f32], p: f32) {
+    if p >= 1.0 {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    let mut cum = 0f32;
+    let mut cut = probs.len();
+    for (rank, &i) in idx.iter().enumerate() {
+        cum += probs[i];
+        if cum >= p {
+            cut = rank + 1;
+            break;
+        }
+    }
+    let keep: std::collections::HashSet<usize> = idx[..cut].iter().copied().collect();
+    let mut total = 0f32;
+    for (i, q) in probs.iter_mut().enumerate() {
+        if keep.contains(&i) {
+            total += *q;
+        } else {
+            *q = 0.0;
+        }
+    }
+    if total > 0.0 {
+        for q in probs.iter_mut() {
+            *q /= total;
+        }
+    }
+}
+
+/// Total-variation overlap `Σ min(p, q)` — the quantity the verify kernel
+/// calls NormMatch, and the expected single-token acceptance probability
+/// of lossless speculative decoding.
+pub fn overlap(p: &[f32], q: &[f32]) -> f32 {
+    p.iter().zip(q).map(|(&a, &b)| a.min(b)).sum()
+}
+
+/// KL(p || q) in nats, with epsilon smoothing on q.
+pub fn kl_divergence(p: &[f32], q: &[f32]) -> f32 {
+    let eps = 1e-9f32;
+    p.iter()
+        .zip(q)
+        .filter(|(&a, _)| a > 0.0)
+        .map(|(&a, &b)| a * (a / (b + eps)).ln())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut out = Vec::new();
+        let h = softmax(&[1.0, 2.0, 3.0], &mut out);
+        let sum: f32 = out.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(out[2] > out[1] && out[1] > out[0]);
+        assert!(h > 0.0 && h < (3f32).ln() + 1e-6);
+    }
+
+    #[test]
+    fn greedy_temp_is_one_hot() {
+        let mut out = Vec::new();
+        softmax_with_temp(&[0.1, 5.0, 0.2], 0.0, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn cdf_sampling_matches_kernel_convention() {
+        let probs = [0.25f32, 0.25, 0.5];
+        assert_eq!(sample_cdf(&probs, 0.0), 0);
+        assert_eq!(sample_cdf(&probs, 0.24), 0);
+        assert_eq!(sample_cdf(&probs, 0.25), 1);
+        assert_eq!(sample_cdf(&probs, 0.49), 1);
+        assert_eq!(sample_cdf(&probs, 0.99), 2);
+    }
+
+    #[test]
+    fn sampling_distribution_is_right() {
+        let mut rng = Rng::new(11);
+        let logits = [0.0f32, (3.0f32).ln()]; // p = [0.25, 0.75]
+        let n = 40_000;
+        let ones = (0..n)
+            .filter(|_| sample_logits(&logits, 1.0, &mut rng) == 1)
+            .count();
+        let p = ones as f64 / n as f64;
+        assert!((p - 0.75).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn top_k_keeps_k() {
+        let mut l = vec![1.0, 5.0, 3.0, 2.0];
+        top_k_filter(&mut l, 2);
+        let kept = l.iter().filter(|x| x.is_finite()).count();
+        assert_eq!(kept, 2);
+        assert!(l[1].is_finite() && l[2].is_finite());
+    }
+
+    #[test]
+    fn top_p_renormalizes() {
+        let mut p = vec![0.5f32, 0.3, 0.15, 0.05];
+        top_p_filter(&mut p, 0.8);
+        let sum: f32 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert_eq!(p[3], 0.0);
+        assert_eq!(p[2], 0.0);
+    }
+
+    #[test]
+    fn overlap_bounds() {
+        let p = [0.5f32, 0.5];
+        let q = [0.5f32, 0.5];
+        assert!((overlap(&p, &q) - 1.0).abs() < 1e-6);
+        let r = [1.0f32, 0.0];
+        let s = [0.0f32, 1.0];
+        assert_eq!(overlap(&r, &s), 0.0);
+    }
+
+    #[test]
+    fn kl_zero_iff_equal() {
+        let p = [0.25f32, 0.75];
+        assert!(kl_divergence(&p, &p).abs() < 1e-5);
+        let q = [0.75f32, 0.25];
+        assert!(kl_divergence(&p, &q) > 0.1);
+    }
+}

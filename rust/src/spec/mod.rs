@@ -1,0 +1,128 @@
+//! Speculative-decoding policies and semantics.
+//!
+//! * [`reference`] — a pure-Rust implementation of the verification
+//!   semantics (the third implementation, after the Pallas kernel and the
+//!   jnp oracle) used for engine-free property tests and host-side
+//!   baselines.
+//! * [`stats`] — per-round and per-sequence acceptance accounting.
+//!
+//! The policy taxonomy mirrors the paper's §3.1 "systems compared":
+//! `Autoregressive` (Eq. 3 baseline), `Eagle3` (nonadaptive strict
+//! speculative decoding — see DESIGN.md §5 for the substitution note),
+//! and `Dsd` (adaptive verification, Eqs. 7–8).
+
+pub mod reference;
+pub mod stats;
+
+pub use reference::{host_verify, HostVerifyResult};
+pub use stats::{AcceptanceStats, RoundRecord};
+
+use crate::model::VerifyKnobs;
+
+/// Which decoding system runs (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Standard autoregressive decoding: one token per sync round.
+    Autoregressive,
+    /// Nonadaptive speculative decoding with strict (lossless)
+    /// verification — the Eagle3 stand-in baseline.
+    Eagle3,
+    /// Decentralized speculative decoding with adaptive verification.
+    Dsd,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Autoregressive => "baseline",
+            Policy::Eagle3 => "eagle3",
+            Policy::Dsd => "dsd",
+        }
+    }
+
+    pub fn is_speculative(self) -> bool {
+        !matches!(self, Policy::Autoregressive)
+    }
+}
+
+/// Full decode configuration for one run.
+#[derive(Debug, Clone)]
+pub struct DecodeConfig {
+    pub policy: Policy,
+    /// Draft window length γ (speculative policies).
+    pub gamma: usize,
+    /// Sampling temperature; <= 0 is greedy.
+    pub temp: f32,
+    /// Relaxation coefficient τ (DSD only; Eq. 8).
+    pub tau: f32,
+    /// Key-token thresholds λ1..λ3 (DSD only; Eq. 7).
+    pub lam1: f32,
+    pub lam2: f32,
+    pub lam3: f32,
+    /// Max new tokens to generate.
+    pub max_new_tokens: usize,
+    /// RNG seed for draft sampling / acceptance uniforms.
+    pub seed: u64,
+}
+
+impl Default for DecodeConfig {
+    fn default() -> Self {
+        DecodeConfig {
+            policy: Policy::Dsd,
+            gamma: 8,
+            temp: 1.0,
+            // Defaults from the paper's §2.4: τ in [0.1, 0.3]; λs
+            // calibrated on a validation sweep (see bench ablation_tau).
+            tau: 0.2,
+            lam1: 2.5,
+            lam2: 0.25,
+            lam3: 0.45,
+            max_new_tokens: 64,
+            seed: 0,
+        }
+    }
+}
+
+impl DecodeConfig {
+    pub fn knobs(&self) -> VerifyKnobs {
+        VerifyKnobs {
+            tau: self.tau,
+            lam1: self.lam1,
+            lam2: self.lam2,
+            lam3: self.lam3,
+            temp: self.temp,
+            adaptive: matches!(self.policy, Policy::Dsd),
+        }
+    }
+
+    pub fn with_policy(mut self, p: Policy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn greedy(&self) -> bool {
+        self.temp <= 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::Autoregressive.name(), "baseline");
+        assert_eq!(Policy::Eagle3.name(), "eagle3");
+        assert_eq!(Policy::Dsd.name(), "dsd");
+        assert!(!Policy::Autoregressive.is_speculative());
+        assert!(Policy::Dsd.is_speculative());
+    }
+
+    #[test]
+    fn knobs_follow_policy() {
+        let cfg = DecodeConfig { policy: Policy::Eagle3, ..Default::default() };
+        assert!(!cfg.knobs().adaptive);
+        let cfg = DecodeConfig { policy: Policy::Dsd, ..Default::default() };
+        assert!(cfg.knobs().adaptive);
+    }
+}

@@ -1,0 +1,282 @@
+//! Pure-Rust reference implementation of adaptive speculative
+//! verification — semantically identical to the L1 Pallas kernel
+//! (`python/compile/kernels/verify.py`) and the jnp oracle (`ref.py`).
+//!
+//! Three roles:
+//! 1. engine-free property tests (losslessness, τ-monotonicity, key-token
+//!    pinning) that run in plain `cargo test`;
+//! 2. a host fallback path so the coordinator logic can be exercised
+//!    without artifacts;
+//! 3. cross-validation against the kernel in the integration tests.
+
+use crate::model::{VerifyKnobs, VerifyOutcome};
+use crate::sampling::{argmax, overlap, sample_cdf, softmax};
+
+const EPS: f32 = 1e-9;
+
+/// Result of host verification (same content as [`VerifyOutcome`]).
+pub type HostVerifyResult = VerifyOutcome;
+
+/// Verify a draft window on the host.
+///
+/// * `t_logits`: [gamma+1, V] flattened; `d_logits`: [gamma, V] flattened.
+/// * `u_accept`: gamma uniforms; `u_sample`: gamma+1 uniforms.
+pub fn host_verify(
+    gamma: usize,
+    vocab: usize,
+    t_logits: &[f32],
+    d_logits: &[f32],
+    d_tokens: &[i32],
+    u_accept: &[f32],
+    u_sample: &[f32],
+    knobs: VerifyKnobs,
+) -> HostVerifyResult {
+    assert_eq!(t_logits.len(), (gamma + 1) * vocab);
+    assert_eq!(d_logits.len(), gamma * vocab);
+    let greedy = knobs.temp <= 0.0;
+    let inv_temp = if greedy { 1.0 } else { 1.0 / knobs.temp.max(EPS) };
+
+    let mut key_flags = Vec::with_capacity(gamma);
+    let mut stats = Vec::with_capacity(gamma * 6);
+    let mut tokens: Vec<i32> = Vec::with_capacity(gamma + 1);
+    let mut accepted = 0usize;
+    let mut rejected = false;
+    let mut mix_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+    let mut pd_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+
+    let mut p_t = Vec::new();
+    let mut p_d = Vec::new();
+    for j in 0..gamma {
+        let y = d_tokens[j] as usize;
+        let lt: Vec<f32> = t_logits[j * vocab..(j + 1) * vocab]
+            .iter()
+            .map(|&x| x * inv_temp)
+            .collect();
+        let ld: Vec<f32> = d_logits[j * vocab..(j + 1) * vocab]
+            .iter()
+            .map(|&x| x * inv_temp)
+            .collect();
+        softmax(&lt, &mut p_t);
+        softmax(&ld, &mut p_d);
+        let pt_y = p_t[y];
+        let pd_y = p_d[y];
+        let h_d = -(pd_y + EPS).ln();
+        let h_t = -(pt_y + EPS).ln();
+        let normmatch = overlap(&p_t, &p_d);
+        let is_key = knobs.adaptive
+            && (h_d / (h_t + EPS) > knobs.lam1
+                || (pt_y - pd_y).abs() > knobs.lam2
+                || normmatch < knobs.lam3);
+        let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
+
+        // Eq. 8 in log space, renormalized.
+        let log_mix: Vec<f32> = p_t
+            .iter()
+            .zip(&p_d)
+            .map(|(&a, &b)| (1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln())
+            .collect();
+        let mut mix = Vec::new();
+        softmax(&log_mix, &mut mix);
+
+        let (accept, accept_prob) = if greedy {
+            let blend: Vec<f32> = t_logits[j * vocab..(j + 1) * vocab]
+                .iter()
+                .zip(&d_logits[j * vocab..(j + 1) * vocab])
+                .map(|(&a, &b)| (1.0 - tau_j) * a + tau_j * b)
+                .collect();
+            let ok = argmax(&blend) == y;
+            (ok, if ok { 1.0 } else { 0.0 })
+        } else {
+            let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+            (u_accept[j] < ratio, ratio)
+        };
+
+        key_flags.push(is_key);
+        stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+        mix_rows.push(mix);
+        pd_rows.push(p_d.clone());
+
+        if accept && !rejected {
+            tokens.push(y as i32);
+            accepted += 1;
+        } else if !rejected {
+            rejected = true;
+        }
+    }
+
+    // Correction / bonus token.
+    let corr = if accepted < gamma {
+        if greedy {
+            argmax(&t_logits[accepted * vocab..(accepted + 1) * vocab]) as i32
+        } else {
+            let mix = &mix_rows[accepted];
+            let pd = &pd_rows[accepted];
+            let mut resid: Vec<f32> = mix
+                .iter()
+                .zip(pd)
+                .map(|(&m, &p)| (m - p).max(0.0))
+                .collect();
+            let mass: f32 = resid.iter().sum();
+            if mass > EPS {
+                resid.iter_mut().for_each(|r| *r /= mass);
+                sample_cdf(&resid, u_sample[accepted]) as i32
+            } else {
+                sample_cdf(mix, u_sample[accepted]) as i32
+            }
+        }
+    } else if greedy {
+        argmax(&t_logits[gamma * vocab..(gamma + 1) * vocab]) as i32
+    } else {
+        let lt: Vec<f32> = t_logits[gamma * vocab..(gamma + 1) * vocab]
+            .iter()
+            .map(|&x| x * inv_temp)
+            .collect();
+        let mut bonus = Vec::new();
+        softmax(&lt, &mut bonus);
+        sample_cdf(&bonus, u_sample[gamma]) as i32
+    };
+    tokens.push(corr);
+
+    VerifyOutcome { tokens, accepted, key_flags, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn case(seed: u64, gamma: usize, vocab: usize, corr: f32) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32 * 2.0).collect();
+        let d: Vec<f32> = (0..gamma * vocab)
+            .enumerate()
+            .map(|(i, _)| corr * t[i] + (1.0 - corr) * rng.normal() as f32 * 2.0)
+            .collect();
+        // draft tokens sampled from draft distribution
+        let mut toks = Vec::new();
+        let mut p = Vec::new();
+        for j in 0..gamma {
+            softmax(&d[j * vocab..(j + 1) * vocab], &mut p);
+            toks.push(sample_cdf(&p, rng.f32()) as i32);
+        }
+        let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+        let us: Vec<f32> = (0..gamma + 1).map(|_| rng.f32()).collect();
+        (t, d, toks, ua, us)
+    }
+
+    #[test]
+    fn identical_models_accept_all() {
+        let (t, _, _, ua, us) = case(3, 4, 32, 1.0);
+        let d = t[..4 * 32].to_vec();
+        let mut toks = Vec::new();
+        let mut p = Vec::new();
+        let mut rng = Rng::new(9);
+        for j in 0..4 {
+            softmax(&d[j * 32..(j + 1) * 32], &mut p);
+            toks.push(sample_cdf(&p, rng.f32()) as i32);
+        }
+        let out = host_verify(4, 32, &t, &d, &toks, &ua, &us, VerifyKnobs::strict(1.0));
+        assert_eq!(out.accepted, 4);
+        assert_eq!(out.tokens.len(), 5);
+        assert_eq!(&out.tokens[..4], &toks[..]);
+    }
+
+    #[test]
+    fn greedy_strict_accepts_iff_argmax_matches() {
+        let (t, d, _, ua, us) = case(5, 6, 64, 0.7);
+        let toks: Vec<i32> = (0..6)
+            .map(|j| argmax(&t[j * 64..(j + 1) * 64]) as i32)
+            .collect();
+        let out = host_verify(6, 64, &t, &d, &toks, &ua, &us, VerifyKnobs::strict(0.0));
+        assert_eq!(out.accepted, 6);
+        // bonus = target argmax at row gamma
+        assert_eq!(out.tokens[6], argmax(&t[6 * 64..7 * 64]) as i32);
+    }
+
+    #[test]
+    fn tau_raises_mean_acceptance() {
+        let mut base = 0usize;
+        let mut relaxed = 0usize;
+        for seed in 0..100 {
+            let (t, d, toks, ua, us) = case(seed, 8, 64, 0.6);
+            let strict = VerifyKnobs::strict(1.0);
+            let soft = VerifyKnobs {
+                tau: 0.6,
+                lam1: f32::INFINITY,
+                lam2: f32::INFINITY,
+                lam3: -1.0,
+                temp: 1.0,
+                adaptive: true,
+            };
+            base += host_verify(8, 64, &t, &d, &toks, &ua, &us, strict).accepted;
+            relaxed += host_verify(8, 64, &t, &d, &toks, &ua, &us, soft).accepted;
+        }
+        assert!(relaxed > base, "relaxed {relaxed} <= strict {base}");
+    }
+
+    #[test]
+    fn all_key_tokens_disable_relaxation() {
+        for seed in 0..20 {
+            let (t, d, toks, ua, us) = case(seed, 8, 64, 0.6);
+            // lam3 = 2.0 > 1 makes every token key
+            let pinned = VerifyKnobs { tau: 0.9, lam1: 0.0, lam2: 0.0, lam3: 2.0, temp: 1.0, adaptive: true };
+            let strict = VerifyKnobs::strict(1.0);
+            let a = host_verify(8, 64, &t, &d, &toks, &ua, &us, pinned);
+            let b = host_verify(8, 64, &t, &d, &toks, &ua, &us, strict);
+            assert_eq!(a.accepted, b.accepted, "seed {seed}");
+            assert_eq!(a.tokens, b.tokens, "seed {seed}");
+            assert!(a.key_flags.iter().all(|&k| k));
+        }
+    }
+
+    #[test]
+    fn strict_verification_is_lossless() {
+        // First committed token of a round ~ P_t exactly (Leviathan).
+        let vocab = 16;
+        let mut rng = Rng::new(42);
+        let t: Vec<f32> = (0..2 * vocab).map(|_| rng.normal() as f32 * 2.0).collect();
+        let d: Vec<f32> = t[..vocab]
+            .iter()
+            .map(|&x| 0.5 * x + rng.normal() as f32)
+            .collect();
+        let mut p_t = Vec::new();
+        softmax(&t[..vocab], &mut p_t);
+        let mut p_d = Vec::new();
+        softmax(&d, &mut p_d);
+
+        let trials = 30_000;
+        let mut counts = vec![0usize; vocab];
+        for _ in 0..trials {
+            let y = sample_cdf(&p_d, rng.f32()) as i32;
+            let out = host_verify(
+                1,
+                vocab,
+                &t,
+                &d,
+                &[y],
+                &[rng.f32()],
+                &[rng.f32(), rng.f32()],
+                VerifyKnobs::strict(1.0),
+            );
+            counts[out.tokens[0] as usize] += 1;
+        }
+        let mut worst = 0f64;
+        for (i, &c) in counts.iter().enumerate() {
+            worst = worst.max((c as f64 / trials as f64 - p_t[i] as f64).abs());
+        }
+        assert!(worst < 0.015, "max deviation {worst}");
+    }
+
+    #[test]
+    fn stats_rows_are_filled_for_all_positions() {
+        let (t, d, toks, ua, us) = case(1, 8, 32, 0.2);
+        let out = host_verify(8, 32, &t, &d, &toks, &ua, &us, VerifyKnobs::strict(1.0));
+        assert_eq!(out.stats.len(), 8 * 6);
+        assert_eq!(out.key_flags.len(), 8);
+        // normmatch column within [0, 1]
+        for j in 0..8 {
+            let nm = out.stats[j * 6 + 4];
+            assert!((0.0..=1.0 + 1e-5).contains(&nm), "{nm}");
+        }
+    }
+}

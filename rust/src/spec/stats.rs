@@ -1,0 +1,130 @@
+//! Acceptance accounting: per-round records and aggregated statistics
+//! (the "Avg len" / acceptance-ratio columns of Tables 1–2).
+
+/// One verification round's outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundRecord {
+    /// Draft window length γ.
+    pub gamma: usize,
+    /// Accepted draft tokens k (0..=γ).
+    pub accepted: usize,
+    /// Tokens committed this round (k + 1 with the correction/bonus).
+    pub committed: usize,
+    /// Key tokens flagged in the window.
+    pub key_tokens: usize,
+}
+
+/// Aggregate acceptance statistics over a run.
+#[derive(Debug, Clone, Default)]
+pub struct AcceptanceStats {
+    pub rounds: u64,
+    pub draft_tokens: u64,
+    pub accepted_tokens: u64,
+    pub committed_tokens: u64,
+    pub key_tokens: u64,
+    /// Histogram of k per round, index 0..=γ_max.
+    pub accept_hist: Vec<u64>,
+}
+
+impl AcceptanceStats {
+    pub fn record(&mut self, r: RoundRecord) {
+        self.rounds += 1;
+        self.draft_tokens += r.gamma as u64;
+        self.accepted_tokens += r.accepted as u64;
+        self.committed_tokens += r.committed as u64;
+        self.key_tokens += r.key_tokens as u64;
+        if self.accept_hist.len() <= r.gamma {
+            self.accept_hist.resize(r.gamma + 1, 0);
+        }
+        self.accept_hist[r.accepted] += 1;
+    }
+
+    /// Mean accepted draft tokens per round (k̄).
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.rounds as f64
+    }
+
+    /// Mean committed tokens per round — the paper's "Avg len"
+    /// (accepted span + the correction/bonus token).
+    pub fn mean_committed(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.committed_tokens as f64 / self.rounds as f64
+    }
+
+    /// Fraction of drafted tokens accepted (the paper's ρ numerator).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            return 0.0;
+        }
+        self.accepted_tokens as f64 / self.draft_tokens as f64
+    }
+
+    /// Fraction of drafted tokens flagged as key (Eq. 7 selectivity).
+    pub fn key_rate(&self) -> f64 {
+        if self.draft_tokens == 0 {
+            return 0.0;
+        }
+        self.key_tokens as f64 / self.draft_tokens as f64
+    }
+
+    pub fn merge(&mut self, other: &AcceptanceStats) {
+        self.rounds += other.rounds;
+        self.draft_tokens += other.draft_tokens;
+        self.accepted_tokens += other.accepted_tokens;
+        self.committed_tokens += other.committed_tokens;
+        self.key_tokens += other.key_tokens;
+        if self.accept_hist.len() < other.accept_hist.len() {
+            self.accept_hist.resize(other.accept_hist.len(), 0);
+        }
+        for (i, &c) in other.accept_hist.iter().enumerate() {
+            self.accept_hist[i] += c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(gamma: usize, accepted: usize, keys: usize) -> RoundRecord {
+        RoundRecord { gamma, accepted, committed: accepted + 1, key_tokens: keys }
+    }
+
+    #[test]
+    fn aggregates_means() {
+        let mut s = AcceptanceStats::default();
+        s.record(rec(8, 4, 2));
+        s.record(rec(8, 6, 1));
+        assert_eq!(s.rounds, 2);
+        assert!((s.mean_accepted() - 5.0).abs() < 1e-9);
+        assert!((s.mean_committed() - 6.0).abs() < 1e-9);
+        assert!((s.acceptance_rate() - 10.0 / 16.0).abs() < 1e-9);
+        assert!((s.key_rate() - 3.0 / 16.0).abs() < 1e-9);
+        assert_eq!(s.accept_hist[4], 1);
+        assert_eq!(s.accept_hist[6], 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = AcceptanceStats::default();
+        a.record(rec(4, 2, 0));
+        let mut b = AcceptanceStats::default();
+        b.record(rec(8, 8, 3));
+        a.merge(&b);
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.accepted_tokens, 10);
+        assert_eq!(a.accept_hist.len(), 9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = AcceptanceStats::default();
+        assert_eq!(s.mean_accepted(), 0.0);
+        assert_eq!(s.acceptance_rate(), 0.0);
+    }
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmark helper (offline environment: no criterion). Used by
+//! `benches/hotpath.rs` and the perf pass.
+
+use std::time::Instant;
+
+/// Result of one measured loop.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns >= 1e6 {
+                format!("{:.2} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.2} µs", ns / 1e3)
+            } else {
+                format!("{:.0} ns", ns)
+            }
+        }
+        format!(
+            "{:<36} iters={:<6} mean={:<10} min={:<10} p50={:<10} p95={}",
+            self.name,
+            self.iters,
+            fmt(self.mean_ns),
+            fmt(self.min_ns),
+            fmt(self.p50_ns),
+            fmt(self.p95_ns),
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        min_ns: samples[0],
+        p50_ns: samples[samples.len() / 2],
+        p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+        assert!(r.line().contains("spin"));
+    }
+}

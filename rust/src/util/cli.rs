@@ -1,0 +1,167 @@
+//! Tiny CLI argument parser (offline environment: no clap).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! args, and subcommands. Used by `main.rs`, the examples, and the bench
+//! harnesses.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Option keys that take a value (everything else starting with `--` is a
+/// boolean flag).
+pub fn parse_with(valued: &[&str], argv: impl IntoIterator<Item = String>) -> Result<Args> {
+    let valued: Vec<&str> = valued.to_vec();
+    let mut out = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(rest) = arg.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if valued.contains(&rest) {
+                let v = it
+                    .next()
+                    .ok_or_else(|| anyhow!("option --{rest} needs a value"))?;
+                out.options.insert(rest.to_string(), v);
+            } else {
+                out.flags.push(rest.to_string());
+            }
+        } else {
+            out.positional.push(arg);
+        }
+    }
+    Ok(out)
+}
+
+/// Parse `std::env::args()` (skipping argv[0]).
+pub fn parse_env(valued: &[&str]) -> Result<Args> {
+    parse_with(valued, std::env::args().skip(1))
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of numbers, e.g. `--nodes 2,4,8`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name}: bad number '{s}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        self.positional
+            .first()
+            .map(String::as_str)
+            .ok_or_else(|| bail_msg())
+    }
+}
+
+fn bail_msg() -> anyhow::Error {
+    anyhow!("missing subcommand")
+}
+
+#[allow(unused)]
+fn _unused() -> Result<()> {
+    bail!("")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse_with(&["nodes"], argv("serve --nodes 4 --verbose --tau=0.2 extra")).unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.get("nodes"), Some("4"));
+        assert_eq!(a.get("tau"), Some("0.2"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse_with(&["n", "x", "list"], argv("--n 3 --x 1.5 --list 2,4,8")).unwrap();
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+        assert_eq!(a.f64_or("x", 0.0).unwrap(), 1.5);
+        assert_eq!(a.usize_list_or("list", &[]).unwrap(), vec![2, 4, 8]);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse_with(&["nodes"], argv("--nodes")).is_err());
+        let a = parse_with(&["n"], argv("--n x")).unwrap();
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained substrates (the build environment is offline; no serde,
+//! clap, rand, or criterion in the crate cache — see Cargo.toml).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod table;

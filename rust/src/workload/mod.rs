@@ -1,0 +1,223 @@
+//! Workload generation: synthetic stand-ins for the paper's five
+//! evaluation datasets.
+//!
+//! What speculative-decoding dynamics actually depend on is (a) the
+//! draft↔target agreement statistics, (b) prompt/generation lengths, and
+//! (c) the sampling temperature — not the natural-language content
+//! (DESIGN.md §5). Each profile therefore pins: a draft variant from the
+//! calibrated agreement ladder (deeper draft = higher agreement, like a
+//! better-trained Eagle head), a Zipf skew for prompt token statistics,
+//! and length distributions matching the task shape (short prompts/long
+//! generations for code, long prompts/short generations for
+//! summarization, ...).
+
+use crate::cluster::clock::Nanos;
+use crate::util::rng::Rng;
+
+/// One synthetic dataset profile.
+#[derive(Debug, Clone)]
+pub struct DatasetProfile {
+    /// Paper dataset this profile stands in for.
+    pub name: &'static str,
+    /// The paper's accuracy metric for the dataset (reporting label).
+    pub metric: &'static str,
+    /// Draft variant from the manifest's agreement ladder.
+    pub draft_variant: &'static str,
+    /// Default sampling temperature.
+    pub temp: f32,
+    /// Zipf skew of prompt token ids (higher = peakier, code-like).
+    pub zipf: f64,
+    pub prompt_len: (usize, usize),
+    pub gen_len: usize,
+}
+
+/// The five evaluation datasets of the paper's §3.1.
+pub fn all_datasets() -> Vec<DatasetProfile> {
+    vec![
+        DatasetProfile {
+            name: "humaneval",
+            metric: "pass@1",
+            draft_variant: "d6_s000", // highest agreement: code is predictable
+            temp: 1.0,
+            zipf: 1.3,
+            prompt_len: (16, 48),
+            gen_len: 96,
+        },
+        DatasetProfile {
+            name: "gsm8k",
+            metric: "exact-match",
+            draft_variant: "d6_s005",
+            temp: 1.0,
+            zipf: 1.1,
+            prompt_len: (24, 56),
+            gen_len: 80,
+        },
+        DatasetProfile {
+            name: "alpaca",
+            metric: "win-rate",
+            draft_variant: "d4_s000",
+            temp: 1.0,
+            zipf: 0.9,
+            prompt_len: (8, 32),
+            gen_len: 96,
+        },
+        DatasetProfile {
+            name: "mtbench",
+            metric: "score",
+            draft_variant: "d4_s005",
+            temp: 1.0,
+            zipf: 0.9,
+            prompt_len: (16, 56),
+            gen_len: 72,
+        },
+        DatasetProfile {
+            name: "cnndm",
+            metric: "rouge-l",
+            draft_variant: "d2_s000", // summarization: least predictable
+            temp: 1.0,
+            zipf: 0.7,
+            prompt_len: (40, 64),
+            gen_len: 56,
+        },
+    ]
+}
+
+pub fn dataset(name: &str) -> Option<DatasetProfile> {
+    all_datasets().into_iter().find(|d| d.name == name)
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Arrival time (ns since workload start).
+    pub arrival_ns: Nanos,
+}
+
+/// Zipf-distributed token sampler with a per-profile random permutation
+/// (so "frequent" token ids differ across datasets).
+pub struct TokenSampler {
+    perm: Vec<i32>,
+    weights: Vec<f64>,
+}
+
+impl TokenSampler {
+    pub fn new(vocab: usize, zipf: f64, rng: &mut Rng) -> TokenSampler {
+        let mut perm: Vec<i32> = (0..vocab as i32).collect();
+        rng.shuffle(&mut perm);
+        let weights: Vec<f64> = (0..vocab)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(zipf))
+            .collect();
+        TokenSampler { perm, weights }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> i32 {
+        self.perm[rng.categorical(&self.weights)]
+    }
+}
+
+/// Deterministic request generator for a profile.
+pub struct WorkloadGen {
+    pub profile: DatasetProfile,
+    sampler: TokenSampler,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(profile: DatasetProfile, vocab: usize, seed: u64) -> WorkloadGen {
+        let mut rng = Rng::new(seed ^ 0xD5D0_5EED);
+        let sampler = TokenSampler::new(vocab, profile.zipf, &mut rng);
+        WorkloadGen { profile, sampler, rng, next_id: 0 }
+    }
+
+    /// Generate one request arriving at `arrival_ns`.
+    pub fn request_at(&mut self, arrival_ns: Nanos) -> Request {
+        let (lo, hi) = self.profile.prompt_len;
+        let plen = self.rng.range_usize(lo, hi);
+        let prompt = (0..plen).map(|_| self.sampler.sample(&mut self.rng)).collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, prompt, max_new_tokens: self.profile.gen_len, arrival_ns }
+    }
+
+    /// A closed-loop batch: all requests available at t=0.
+    pub fn batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.request_at(0)).collect()
+    }
+
+    /// Open-loop Poisson arrivals at `rate` requests/second.
+    pub fn poisson(&mut self, n: usize, rate: f64) -> Vec<Request> {
+        let mut t = 0f64;
+        (0..n)
+            .map(|_| {
+                t += self.rng.exponential(rate);
+                self.request_at((t * 1e9) as Nanos)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_datasets_with_distinct_variants() {
+        let ds = all_datasets();
+        assert_eq!(ds.len(), 5);
+        let names: Vec<_> = ds.iter().map(|d| d.name).collect();
+        assert!(names.contains(&"humaneval") && names.contains(&"cnndm"));
+        assert!(dataset("humaneval").is_some());
+        assert!(dataset("nope").is_none());
+    }
+
+    #[test]
+    fn prompts_respect_length_bounds() {
+        let mut g = WorkloadGen::new(dataset("gsm8k").unwrap(), 512, 1);
+        for r in g.batch(50) {
+            assert!((24..=56).contains(&r.prompt.len()));
+            assert!(r.prompt.iter().all(|&t| (0..512).contains(&t)));
+            assert_eq!(r.max_new_tokens, 80);
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let mut a = WorkloadGen::new(dataset("alpaca").unwrap(), 512, 7);
+        let mut b = WorkloadGen::new(dataset("alpaca").unwrap(), 512, 7);
+        let ra = a.batch(5);
+        let rb = b.batch(5);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.prompt, y.prompt);
+        }
+    }
+
+    #[test]
+    fn zipf_skew_shows_in_token_frequencies() {
+        let mut rng = Rng::new(3);
+        let peaky = TokenSampler::new(64, 1.5, &mut rng);
+        let mut counts = vec![0usize; 64];
+        let mut r2 = Rng::new(4);
+        for _ in 0..20_000 {
+            counts[peaky.sample(&mut r2) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        // heaviest token should dominate noticeably under zipf 1.5
+        assert!(max > 20_000 / 8, "{max}");
+    }
+
+    #[test]
+    fn poisson_arrivals_increase() {
+        let mut g = WorkloadGen::new(dataset("cnndm").unwrap(), 512, 5);
+        let reqs = g.poisson(20, 100.0);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ns >= w[0].arrival_ns);
+        }
+        // mean inter-arrival ~ 10ms
+        let total = reqs.last().unwrap().arrival_ns;
+        assert!(total > 50_000_000 && total < 600_000_000, "{total}");
+    }
+}

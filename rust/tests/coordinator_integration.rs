@@ -1,0 +1,153 @@
+//! Integration: the serving coordinator under multi-request workloads —
+//! continuous batching, backpressure, interleaving benefits, and the
+//! harness's accuracy protocol.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dsd::config::DeployConfig;
+use dsd::coordinator::Coordinator;
+use dsd::harness::Harness;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::workload::{dataset, WorkloadGen};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::from_dir(artifacts()).expect("run `make artifacts` first"))
+}
+
+fn base_cfg() -> DeployConfig {
+    let mut cfg = DeployConfig {
+        artifacts_dir: artifacts().to_string_lossy().into_owned(),
+        n_nodes: 2,
+        link_ms: 5.0,
+        max_batch: 4,
+        dataset: "humaneval".to_string(),
+        ..Default::default()
+    };
+    cfg.decode.gamma = 4;
+    cfg.decode.max_new_tokens = 12;
+    cfg
+}
+
+fn requests(n: usize, cfg: &DeployConfig, e: &Rc<Engine>) -> Vec<dsd::workload::Request> {
+    let profile = dataset(&cfg.dataset).unwrap();
+    let mut gen = WorkloadGen::new(profile, e.manifest().model.vocab, cfg.seed);
+    let mut reqs = gen.batch(n);
+    for r in &mut reqs {
+        r.max_new_tokens = cfg.decode.max_new_tokens;
+    }
+    reqs
+}
+
+#[test]
+fn all_requests_complete_with_backpressure() {
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.max_batch = 1; // force queuing: 4 requests through 1 slot
+    let reqs = requests(4, &cfg, &e);
+    let mut coord = Coordinator::with_engine(e, cfg.clone()).unwrap();
+    let (report, results) = coord.run_workload(reqs).unwrap();
+    assert_eq!(report.requests, 4);
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert_eq!(r.tokens.len(), cfg.decode.max_new_tokens);
+    }
+    // ids preserved & sorted
+    let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+}
+
+#[test]
+fn batching_improves_throughput_under_latency() {
+    // With latency-dominated links, interleaving multiple sequences hides
+    // link stalls: batch=4 must finish 4 requests much faster than 4x a
+    // single request's time.
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.n_nodes = 4;
+    cfg.link_ms = 20.0;
+    cfg.decode.policy = Policy::Autoregressive;
+
+    cfg.max_batch = 1;
+    let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+    let (serial, _) = coord.run_workload(requests(4, &cfg, &e)).unwrap();
+
+    cfg.max_batch = 4;
+    let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+    let (batched, _) = coord.run_workload(requests(4, &cfg, &e)).unwrap();
+
+    assert!(
+        (batched.elapsed_ns as f64) < serial.elapsed_ns as f64 * 0.6,
+        "batched {} vs serial {}",
+        batched.elapsed_ns,
+        serial.elapsed_ns
+    );
+}
+
+#[test]
+fn dsd_beats_baseline_latency_in_sweet_spot() {
+    // The headline: in the paper's regime the DSD run is faster.
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.n_nodes = 4;
+    // Debug builds inflate host-side compute (t0), which would push the
+    // deployment out of the paper's 3·t0 < t1 < 10·t0 sweet spot at the
+    // release-mode link latency; scale t1 to stay in regime.
+    cfg.link_ms = if cfg!(debug_assertions) { 80.0 } else { 15.0 };
+    cfg.max_batch = 1;
+    cfg.decode.gamma = 8;
+    cfg.decode.max_new_tokens = 24;
+
+    cfg.decode.policy = Policy::Autoregressive;
+    let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+    let (base, _) = coord.run_workload(requests(2, &cfg, &e)).unwrap();
+
+    cfg.decode.policy = Policy::Dsd;
+    let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+    let (dsd, _) = coord.run_workload(requests(2, &cfg, &e)).unwrap();
+
+    let speedup = dsd.speedup_over(&base);
+    assert!(speedup > 1.5, "expected sweet-spot speedup, got {speedup:.2}x");
+    // and the comm reduction that drives it
+    assert!(dsd.comm_reduction_over(&base) > 0.4);
+}
+
+#[test]
+fn harness_accuracy_protocol() {
+    let e = engine();
+    let h = Harness::new(e.clone(), "humaneval", 2, 12, 99).unwrap();
+    // Base accuracy at temp 1.0 is strictly between 0 and 1 for a
+    // non-degenerate model.
+    assert!(h.base_accuracy > 0.0 && h.base_accuracy < 1.0, "{}", h.base_accuracy);
+
+    // An AR run at temp 0 must score 1.0 (greedy IS the argmax path —
+    // the teacher-forced scorer's defining property).
+    let mut cfg = h.deploy(2, 1.0, 2);
+    cfg.decode.temp = 0.0;
+    cfg.decode.max_new_tokens = 12;
+    let run = h.run(cfg, Policy::Autoregressive).unwrap();
+    assert!((run.accuracy - 1.0).abs() < 1e-9, "{}", run.accuracy);
+}
+
+#[test]
+fn eagle3_accuracy_matches_base_within_noise() {
+    // Strict speculation is lossless in distribution; with few requests we
+    // only check it stays in a plausible band around base accuracy.
+    let e = engine();
+    let h = Harness::new(e.clone(), "gsm8k", 3, 16, 7).unwrap();
+    let mut cfg = h.deploy(2, 1.0, 2);
+    cfg.decode.max_new_tokens = 16;
+    cfg.decode.gamma = 4;
+    let run = h.run(cfg, Policy::Eagle3).unwrap();
+    assert!(
+        (run.accuracy - h.base_accuracy).abs() < 0.35,
+        "eagle3 {:.3} vs base {:.3}",
+        run.accuracy,
+        h.base_accuracy
+    );
+}

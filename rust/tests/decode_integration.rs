@@ -1,0 +1,151 @@
+//! Integration: the decode loop end to end (sim mode) + real-cluster
+//! equivalence.
+//!
+//! The strongest invariant: **greedy nonadaptive speculative decoding
+//! must produce exactly the autoregressive greedy token stream** — the
+//! losslessness of strict verification surviving the entire system
+//! (drafting, KV frontiers, pipeline passes, commit bookkeeping). Any
+//! off-by-one in cache positions breaks it instantly.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dsd::cluster::real::RealCluster;
+use dsd::cluster::LinkModel;
+use dsd::config::DeployConfig;
+use dsd::coordinator::Coordinator;
+use dsd::runtime::Engine;
+use dsd::spec::Policy;
+use dsd::workload::Request;
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Rc<Engine> {
+    Rc::new(Engine::from_dir(artifacts()).expect("run `make artifacts` first"))
+}
+
+fn deploy(policy: Policy, temp: f32, n_nodes: usize) -> DeployConfig {
+    let mut cfg = DeployConfig {
+        artifacts_dir: artifacts().to_string_lossy().into_owned(),
+        n_nodes,
+        link_ms: 1.0,
+        max_batch: 2,
+        draft_variant: "d6_s000".to_string(),
+        ..Default::default()
+    };
+    cfg.decode.policy = policy;
+    cfg.decode.temp = temp;
+    cfg.decode.gamma = 4;
+    cfg.decode.max_new_tokens = 24;
+    cfg
+}
+
+fn run(engine: Rc<Engine>, cfg: DeployConfig, prompt: &[i32]) -> Vec<i32> {
+    let mut coord = Coordinator::with_engine(engine, cfg).unwrap();
+    let req = Request { id: 0, prompt: prompt.to_vec(), max_new_tokens: 24, arrival_ns: 0 };
+    let (_, results) = coord.run_workload(vec![req]).unwrap();
+    results[0].tokens.clone()
+}
+
+#[test]
+fn greedy_strict_speculation_is_lossless_end_to_end() {
+    let e = engine();
+    let prompt = vec![3, 141, 59, 26, 53, 58, 97, 9];
+    let ar = run(e.clone(), deploy(Policy::Autoregressive, 0.0, 2), &prompt);
+    let spec = run(e.clone(), deploy(Policy::Eagle3, 0.0, 2), &prompt);
+    assert_eq!(ar, spec, "strict greedy speculation diverged from AR");
+    // and across shard counts
+    let spec4 = run(e.clone(), deploy(Policy::Eagle3, 0.0, 4), &prompt);
+    assert_eq!(ar, spec4);
+}
+
+#[test]
+fn greedy_dsd_tau_zero_is_lossless() {
+    let e = engine();
+    let prompt = vec![100, 200, 300, 400];
+    let ar = run(e.clone(), deploy(Policy::Autoregressive, 0.0, 2), &prompt);
+    let mut cfg = deploy(Policy::Dsd, 0.0, 2);
+    cfg.decode.tau = 0.0;
+    // thresholds irrelevant at tau=0: P̃_t == P_t for every token
+    let dsd = run(e.clone(), cfg, &prompt);
+    assert_eq!(ar, dsd);
+}
+
+#[test]
+fn speculation_commits_at_least_one_token_per_round() {
+    let e = engine();
+    let mut cfg = deploy(Policy::Dsd, 1.0, 2);
+    cfg.decode.max_new_tokens = 16;
+    let mut coord = Coordinator::with_engine(e, cfg).unwrap();
+    let req = Request { id: 0, prompt: vec![1, 2, 3], max_new_tokens: 16, arrival_ns: 0 };
+    let (report, results) = coord.run_workload(vec![req]).unwrap();
+    assert_eq!(results[0].tokens.len(), 16);
+    // rounds <= tokens (each round commits >= 1)
+    assert!(report.accept.rounds as usize <= 16);
+    assert!(report.accept.mean_committed() >= 1.0);
+}
+
+#[test]
+fn dsd_accepts_more_than_strict_at_temperature() {
+    let e = engine();
+    let prompt = vec![7, 8, 9, 10, 11];
+    let mut strict_cfg = deploy(Policy::Eagle3, 1.0, 2);
+    strict_cfg.decode.max_new_tokens = 48;
+    let mut dsd_cfg = deploy(Policy::Dsd, 1.0, 2);
+    dsd_cfg.decode.max_new_tokens = 48;
+    dsd_cfg.decode.tau = 0.3;
+
+    let run_stats = |cfg: DeployConfig| {
+        let mut coord = Coordinator::with_engine(e.clone(), cfg).unwrap();
+        let req = Request { id: 0, prompt: prompt.clone(), max_new_tokens: 48, arrival_ns: 0 };
+        let (report, _) = coord.run_workload(vec![req]).unwrap();
+        report.accept.mean_accepted()
+    };
+    let strict = run_stats(strict_cfg);
+    let dsd = run_stats(dsd_cfg);
+    assert!(
+        dsd > strict - 0.2,
+        "adaptive acceptance ({dsd:.2}) should not fall below strict ({strict:.2})"
+    );
+}
+
+#[test]
+fn real_cluster_matches_sim_mode_greedy() {
+    let e = engine();
+    let prompt = vec![42, 43, 44, 45, 46, 47];
+    let sim_tokens = run(e.clone(), deploy(Policy::Eagle3, 0.0, 2), &prompt);
+
+    let mut cfg = deploy(Policy::Eagle3, 0.0, 2);
+    cfg.decode.seed = cfg.seed; // RealCluster derives rng from decode.seed ^ id
+    let mut real = RealCluster::launch(
+        artifacts().to_str().unwrap(),
+        2,
+        LinkModel::wan(0.2, 0.0),
+        "d6_s000",
+    )
+    .unwrap();
+    let (res, _) = real.serve_one(0, &prompt, &cfg.decode).unwrap();
+    real.shutdown().unwrap();
+    assert_eq!(res.tokens, sim_tokens, "real-thread deployment diverged from sim mode");
+}
+
+#[test]
+fn autoregressive_comm_cost_matches_eq3() {
+    // AR over N nodes: per token, (N-1) forward hops + 1 return hop at
+    // t1 each (zero-bandwidth links).
+    let e = engine();
+    let mut cfg = deploy(Policy::Autoregressive, 0.0, 4);
+    cfg.link_ms = 10.0;
+    cfg.link_gbps = 0.0; // infinite bandwidth: pure base latency
+    cfg.decode.max_new_tokens = 8;
+    let mut coord = Coordinator::with_engine(e, cfg).unwrap();
+    let req = Request { id: 0, prompt: vec![5, 6, 7], max_new_tokens: 8, arrival_ns: 0 };
+    let (report, _) = coord.run_workload(vec![req]).unwrap();
+    // prefill (yields token 1) + 7 decode passes, each (3 fwd + 1 ret)
+    // hops at 10ms
+    let expected = 8 * 4 * 10_000_000u64;
+    assert_eq!(report.comm_ns, expected, "comm accounting mismatch");
+    assert_eq!(report.sync_rounds, 8);
+}

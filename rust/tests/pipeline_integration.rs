@@ -1,0 +1,188 @@
+//! Integration: sharded execution through the PJRT engine.
+//!
+//! Verifies that the pipeline decomposition is exact (N=2/4/8 produce the
+//! same logits), that the draft executor chains steps correctly, and that
+//! the L1 verify kernel agrees with the pure-Rust host implementation on
+//! identical inputs (kernel ⇄ host cross-validation; kernel ⇄ jnp oracle
+//! is covered by pytest).
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs};
+use dsd::runtime::Engine;
+use dsd::spec::host_verify;
+use dsd::util::rng::Rng;
+
+fn engine() -> Rc<Engine> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Rc::new(Engine::from_dir(dir).expect("run `make artifacts` first"))
+}
+
+fn run_pipeline(model: &ShardedModel, tokens: &[i32], pos: usize) -> Vec<f32> {
+    let m = model.engine.manifest().model.clone();
+    let w = tokens.len();
+    let mut caches: Vec<KvCache> = model
+        .stage_dims()
+        .iter()
+        .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
+        .collect();
+    let mut x = StageInput::Tokens(tokens.to_vec());
+    let mut out = Vec::new();
+    for (i, stage) in model.stages.iter().enumerate() {
+        let (o, _) = stage.run(w, &x, &mut caches[i], pos).unwrap();
+        if i + 1 < model.n_shards() {
+            x = StageInput::Hidden(o.data);
+        } else {
+            out = o.data;
+        }
+    }
+    assert_eq!(out.len(), w * m.vocab);
+    out
+}
+
+#[test]
+fn shard_counts_agree_on_logits() {
+    let e = engine();
+    let mut rng = Rng::new(1);
+    let tokens: Vec<i32> = (0..5).map(|_| rng.below(512) as i32).collect();
+    let m2 = ShardedModel::new(e.clone(), 2, "d2_s000").unwrap();
+    let m4 = ShardedModel::new(e.clone(), 4, "d2_s000").unwrap();
+    let m8 = ShardedModel::new(e.clone(), 8, "d2_s000").unwrap();
+    let l2 = run_pipeline(&m2, &tokens, 0);
+    let l4 = run_pipeline(&m4, &tokens, 0);
+    let l8 = run_pipeline(&m8, &tokens, 0);
+    for i in 0..l2.len() {
+        assert!((l2[i] - l4[i]).abs() < 2e-3, "idx {i}: {} vs {}", l2[i], l4[i]);
+        assert!((l2[i] - l8[i]).abs() < 2e-3, "idx {i}: {} vs {}", l2[i], l8[i]);
+    }
+}
+
+#[test]
+fn incremental_windows_match_recompute() {
+    // prefill(64-pad over 16 real) + window(5) == one pass over the same
+    // 21 tokens — the KV-frontier invariant end to end.
+    let e = engine();
+    let model = ShardedModel::new(e.clone(), 2, "d2_s000").unwrap();
+    let m = e.manifest().model.clone();
+    let mut rng = Rng::new(2);
+    let prompt: Vec<i32> = (0..16).map(|_| rng.below(512) as i32).collect();
+    let win: Vec<i32> = (0..5).map(|_| rng.below(512) as i32).collect();
+
+    // Path A: prefill then window.
+    let mut caches: Vec<KvCache> = model
+        .stage_dims()
+        .iter()
+        .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
+        .collect();
+    let mut padded = prompt.clone();
+    padded.resize(m.prefill_window, 0);
+    let mut x = StageInput::Tokens(padded);
+    for (i, stage) in model.stages.iter().enumerate() {
+        let (o, _) = stage.run(m.prefill_window, &x, &mut caches[i], 0).unwrap();
+        if i + 1 < model.n_shards() {
+            x = StageInput::Hidden(o.data);
+        }
+    }
+    let mut x = StageInput::Tokens(win.clone());
+    let mut via_cache = Vec::new();
+    for (i, stage) in model.stages.iter().enumerate() {
+        let (o, _) = stage.run(5, &x, &mut caches[i], 16).unwrap();
+        if i + 1 < model.n_shards() {
+            x = StageInput::Hidden(o.data);
+        } else {
+            via_cache = o.data;
+        }
+    }
+
+    // Path B: one pass over prompt+window via the prefill artifact.
+    let mut all = prompt.clone();
+    all.extend_from_slice(&win);
+    let mut caches2: Vec<KvCache> = model
+        .stage_dims()
+        .iter()
+        .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
+        .collect();
+    let mut padded = all.clone();
+    padded.resize(m.prefill_window, 0);
+    let mut x = StageInput::Tokens(padded);
+    let mut direct = Vec::new();
+    for (i, stage) in model.stages.iter().enumerate() {
+        let (o, _) = stage.run(m.prefill_window, &x, &mut caches2[i], 0).unwrap();
+        if i + 1 < model.n_shards() {
+            x = StageInput::Hidden(o.data);
+        } else {
+            direct = o.data;
+        }
+    }
+    for r in 0..5 {
+        for v in 0..m.vocab {
+            let a = via_cache[r * m.vocab + v];
+            let b = direct[(16 + r) * m.vocab + v];
+            assert!((a - b).abs() < 2e-3, "row {r} vocab {v}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn draft_steps_chain_against_prefill() {
+    // draft prefill over 4 tokens then a step consuming token 5 at pos 4
+    // must reproduce the logits row a 5-token prefill puts at row 4.
+    let e = engine();
+    let model = ShardedModel::new(e.clone(), 2, "d2_s000").unwrap();
+    let m = e.manifest().model.clone();
+    let toks: Vec<i32> = vec![11, 22, 33, 44, 55, 66];
+
+    let [l, s, h, d] = model.draft.cache_dims();
+    let mut c1 = KvCache::new(l, s, h, d);
+    let mut p1 = toks[..4].to_vec();
+    p1.resize(m.prefill_window, 0);
+    model.draft.prefill(&p1, &mut c1).unwrap();
+    let (_, logits_a, _) = model.draft.step(toks[4], &mut c1, 4, 1.0, 0.5).unwrap();
+
+    let mut c2 = KvCache::new(l, s, h, d);
+    let mut p2 = toks[..5].to_vec();
+    p2.resize(m.prefill_window, 0);
+    let (out, _) = model.draft.prefill(&p2, &mut c2).unwrap();
+    let logits_b = &out.data[4 * m.vocab..5 * m.vocab];
+    for v in 0..m.vocab {
+        assert!(
+            (logits_a[v] - logits_b[v]).abs() < 2e-3,
+            "vocab {v}: {} vs {}",
+            logits_a[v],
+            logits_b[v]
+        );
+    }
+}
+
+#[test]
+fn verify_kernel_matches_host_reference() {
+    let e = engine();
+    let model = ShardedModel::new(e.clone(), 2, "d6_s000").unwrap();
+    let vocab = e.manifest().model.vocab;
+    let mut rng = Rng::new(7);
+    for gamma in [4usize, 8] {
+        for knobs in [
+            VerifyKnobs::strict(1.0),
+            VerifyKnobs { tau: 0.3, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true },
+            VerifyKnobs { tau: 0.3, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 0.0, adaptive: true },
+        ] {
+            let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32 * 3.0).collect();
+            let d: Vec<f32> = (0..gamma * vocab)
+                .enumerate()
+                .map(|(i, _)| 0.7 * t[i] + 0.3 * rng.normal() as f32 * 3.0)
+                .collect();
+            let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
+            let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+            let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+            let (kernel, _) = model
+                .verify
+                .run(gamma, t.clone(), d.clone(), toks.clone(), ua.clone(), us.clone(), knobs)
+                .unwrap();
+            let host = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+            assert_eq!(kernel.accepted, host.accepted, "gamma={gamma} knobs={knobs:?}");
+            assert_eq!(kernel.tokens, host.tokens);
+            assert_eq!(kernel.key_flags, host.key_flags);
+        }
+    }
+}

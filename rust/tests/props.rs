@@ -1,0 +1,244 @@
+//! Property-based tests (seeded-RNG sweeps — the offline environment has
+//! no proptest, so this file carries its own micro-framework: `forall`
+//! runs a closure over N derived seeds and reports the failing seed).
+//!
+//! Engine-free: these exercise the pure logic — host verification
+//! semantics, KV pool/frontier invariants, batcher decisions, router
+//! accounting, JSON round-trips, analytic-model identities.
+
+use dsd::analysis::LatencyModel;
+use dsd::coordinator::{next_action, Action, SeqView};
+use dsd::model::{KvCache, KvPool, VerifyKnobs};
+use dsd::sampling::{sample_cdf, softmax};
+use dsd::spec::host_verify;
+use dsd::util::json::{self, Value};
+use dsd::util::rng::Rng;
+
+const P_SEED_BASE: u64 = 0x5EED_5EED;
+
+/// Run `f` over `n` derived seeds (panics inside `f` name the case via
+/// the deterministic derivation, so failures reproduce exactly).
+fn forall2(n: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(P_SEED_BASE ^ seed.wrapping_mul(0x9E37_79B9));
+        f(&mut rng);
+    }
+}
+
+fn random_verify_case(
+    rng: &mut Rng,
+    gamma: usize,
+    vocab: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+    let corr = rng.f32();
+    let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32 * 3.0).collect();
+    let d: Vec<f32> = (0..gamma * vocab)
+        .enumerate()
+        .map(|(i, _)| corr * t[i] + (1.0 - corr) * rng.normal() as f32 * 3.0)
+        .collect();
+    let mut toks = Vec::with_capacity(gamma);
+    let mut p = Vec::new();
+    for j in 0..gamma {
+        softmax(&d[j * vocab..(j + 1) * vocab], &mut p);
+        toks.push(sample_cdf(&p, rng.f32()) as i32);
+    }
+    let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+    let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+    (t, d, toks, ua, us)
+}
+
+fn random_knobs(rng: &mut Rng) -> VerifyKnobs {
+    VerifyKnobs {
+        tau: rng.f32() * 0.9,
+        lam1: rng.f32() * 8.0,
+        lam2: rng.f32(),
+        lam3: rng.f32(),
+        temp: if rng.f32() < 0.25 { 0.0 } else { 0.2 + rng.f32() * 1.5 },
+        adaptive: rng.f32() < 0.7,
+    }
+}
+
+#[test]
+fn prop_verify_output_wellformed() {
+    forall2(300, |rng| {
+        let gamma = [1usize, 2, 4, 8][rng.below(4) as usize];
+        let vocab = 64;
+        let (t, d, toks, ua, us) = random_verify_case(rng, gamma, vocab);
+        let knobs = random_knobs(rng);
+        let out = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+        // committed = accepted prefix + exactly one correction token
+        assert!(out.accepted <= gamma);
+        assert_eq!(out.tokens.len(), out.accepted + 1);
+        assert_eq!(&out.tokens[..out.accepted], &toks[..out.accepted]);
+        assert!(out.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));
+        assert_eq!(out.key_flags.len(), gamma);
+        assert_eq!(out.stats.len(), gamma * 6);
+        if !knobs.adaptive {
+            assert!(out.key_flags.iter().all(|&k| !k), "strict mode flags no keys");
+        }
+    });
+}
+
+#[test]
+fn prop_verify_accept_prob_bounds() {
+    forall2(200, |rng| {
+        let (t, d, toks, ua, us) = random_verify_case(rng, 8, 64);
+        let knobs = random_knobs(rng);
+        let out = host_verify(8, 64, &t, &d, &toks, &ua, &us, knobs);
+        for j in 0..8 {
+            let ap = out.stats[j * 6 + 5];
+            assert!((0.0..=1.0 + 1e-6).contains(&ap), "accept prob {ap}");
+            let nm = out.stats[j * 6 + 4];
+            assert!((0.0..=1.0 + 1e-5).contains(&nm), "normmatch {nm}");
+        }
+    });
+}
+
+#[test]
+fn prop_tau_never_hurts_expected_acceptance() {
+    // Mean accepted across many cases: relaxed >= strict (per-case it can
+    // go either way; the expectation must not).
+    let mut strict_total = 0usize;
+    let mut relaxed_total = 0usize;
+    for seed in 0..250u64 {
+        let mut rng = Rng::new(P_SEED_BASE ^ seed.wrapping_mul(0x9E37_79B9));
+        let (t, d, toks, ua, us) = random_verify_case(&mut rng, 8, 64);
+        let strict = VerifyKnobs::strict(1.0);
+        let relaxed = VerifyKnobs {
+            tau: 0.5,
+            lam1: f32::INFINITY,
+            lam2: f32::INFINITY,
+            lam3: -1.0,
+            temp: 1.0,
+            adaptive: true,
+        };
+        strict_total += host_verify(8, 64, &t, &d, &toks, &ua, &us, strict).accepted;
+        relaxed_total += host_verify(8, 64, &t, &d, &toks, &ua, &us, relaxed).accepted;
+    }
+    assert!(
+        relaxed_total >= strict_total,
+        "relaxed {relaxed_total} < strict {strict_total}"
+    );
+}
+
+#[test]
+fn prop_kv_pool_never_double_allocates() {
+    forall2(100, |rng| {
+        let cap = 1 + rng.below(6) as usize;
+        let mut pool = KvPool::new(cap, vec![[1, 8, 1, 2]]);
+        let mut live: Vec<usize> = Vec::new();
+        for _ in 0..200 {
+            if rng.f32() < 0.5 {
+                if let Some(slot) = pool.alloc() {
+                    assert!(!live.contains(&slot), "slot {slot} double-allocated");
+                    live.push(slot);
+                } else {
+                    assert_eq!(live.len(), cap, "alloc failed below capacity");
+                }
+            } else if !live.is_empty() {
+                let idx = rng.below(live.len() as u64) as usize;
+                let slot = live.swap_remove(idx);
+                pool.release(slot).unwrap();
+            }
+            assert_eq!(pool.in_use(), live.len());
+        }
+    });
+}
+
+#[test]
+fn prop_kv_frontier_monotone_and_bounded() {
+    forall2(100, |rng| {
+        let mut cache = KvCache::new(2, 32, 2, 4);
+        let mut committed = 0usize;
+        for _ in 0..100 {
+            let n = rng.below(6) as usize;
+            if committed + n <= 32 {
+                cache.commit(n).unwrap();
+                committed += n;
+            } else {
+                assert!(cache.commit(n).is_err());
+            }
+            assert_eq!(cache.pos, committed);
+            assert_eq!(cache.remaining(), 32 - committed);
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_always_progresses() {
+    // Whatever the state, next_action never deadlocks: it returns Done
+    // only when queue and active are both empty, and WaitUntil only with
+    // a future arrival.
+    forall2(300, |rng| {
+        let now = rng.below(1000);
+        let n_active = rng.below(5) as usize;
+        let active: Vec<SeqView> = (0..n_active)
+            .map(|idx| SeqView { idx, ready_at: rng.below(2000), prefilled: rng.f32() < 0.5 })
+            .collect();
+        let next_arrival = if rng.f32() < 0.5 { Some(rng.below(2000)) } else { None };
+        let slots_free = rng.f32() < 0.5;
+        match next_action(now, next_arrival, slots_free, &active) {
+            Action::Done => {
+                assert!(active.is_empty() && next_arrival.is_none());
+            }
+            Action::Admit => {
+                assert!(slots_free && next_arrival.is_some());
+            }
+            Action::Run { idx } => {
+                assert!(idx < n_active);
+                let min = active.iter().map(|s| s.ready_at).min().unwrap();
+                assert_eq!(active[idx].ready_at, min);
+            }
+            Action::WaitUntil { at } => {
+                assert!(active.is_empty());
+                assert!(at >= now);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut Rng, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.f32() < 0.5),
+            2 => Value::Int(rng.range_i64(-1_000_000, 1_000_000)),
+            3 => Value::Str(format!("s{}", rng.below(10_000))),
+            4 => Value::Array((0..rng.below(4)).map(|_| random_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut map = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    map.insert(format!("k{i}"), random_value(rng, depth - 1));
+                }
+                Value::Object(map)
+            }
+        }
+    }
+    forall2(300, |rng| {
+        let v = random_value(rng, 3);
+        let text = v.to_string();
+        let back = json::parse(&text).unwrap();
+        assert_eq!(v, back, "roundtrip failed for {text}");
+    });
+}
+
+#[test]
+fn prop_analytic_model_identities() {
+    forall2(500, |rng| {
+        let t0 = 0.5 + rng.f64() * 5.0;
+        let t1 = rng.f64() * 20.0;
+        let n = 1 + rng.below(16) as usize;
+        let k = 1.0 + rng.f64() * 8.0;
+        let m = LatencyModel::new(t0, t1, n);
+        // R_comm == 1 - T_DSD/T_std  (Eq. 5 is consistent with Eqs. 3-4)
+        let direct = 1.0 - m.t_dsd(k) / m.t_std(k);
+        assert!((m.r_comm(k) - direct).abs() < 1e-9);
+        // T_DSD <= T_std always (k >= 1)
+        assert!(m.t_dsd(k) <= m.t_std(k) + 1e-12);
+        // speedup is positive and bounded by (gamma+1)
+        let s = m.speedup(k, 8);
+        assert!(s > 0.0 && s <= 9.0 + 1e-9, "{s}");
+    });
+}
+

@@ -1,0 +1,141 @@
+//! End-to-end runtime validation: execute AOT artifacts through the PJRT
+//! engine and compare against JAX-computed goldens (artifacts/golden/).
+//!
+//! This is the contract test for the whole python→rust bridge: HLO text
+//! round-trip, positional weight binding, layer_base remapping, dtype
+//! handling, and tuple output decomposition.
+
+use std::path::{Path, PathBuf};
+
+use dsd::runtime::{Engine, HostTensor};
+use dsd::util::json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn golden_dir() -> PathBuf {
+    artifacts_dir().join("golden")
+}
+
+fn load_tensor(dir: &Path, spec: &json::Value) -> HostTensor {
+    let file = spec.str_field("file").unwrap();
+    let shape = spec.usize_array_field("shape").unwrap();
+    let dtype = spec.str_field("dtype").unwrap();
+    let bytes = std::fs::read(dir.join(file)).unwrap();
+    match dtype {
+        "float32" => {
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            HostTensor::f32(data, shape)
+        }
+        "int32" => {
+            let data: Vec<i32> = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            HostTensor::i32(data, shape)
+        }
+        other => panic!("bad dtype {other}"),
+    }
+}
+
+fn assert_close(name: &str, got: &HostTensor, want: &HostTensor, atol: f32) {
+    assert_eq!(got.shape(), want.shape(), "{name}: shape mismatch");
+    match (got, want) {
+        (HostTensor::F32 { data: g, .. }, HostTensor::F32 { data: w, .. }) => {
+            let mut worst = 0f32;
+            for (a, b) in g.iter().zip(w) {
+                worst = worst.max((a - b).abs());
+            }
+            assert!(worst <= atol, "{name}: max abs err {worst} > {atol}");
+        }
+        (HostTensor::I32 { data: g, .. }, HostTensor::I32 { data: w, .. }) => {
+            assert_eq!(g, w, "{name}: int outputs differ");
+        }
+        _ => panic!("{name}: dtype mismatch"),
+    }
+}
+
+fn run_case(engine: &Engine, index: &json::Value, case: &str, atol: f32) {
+    let c = index.get(case).unwrap();
+    let artifact = c.str_field("artifact").unwrap();
+    let wset = c.str_field("weight_set").unwrap();
+    let base = c.usize_field("layer_base").unwrap();
+    let dir = golden_dir();
+    let inputs: Vec<HostTensor> = c
+        .get("inputs")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|s| load_tensor(&dir, s))
+        .collect();
+    let want: Vec<HostTensor> = c
+        .get("outputs")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|s| load_tensor(&dir, s))
+        .collect();
+    let got = engine.run(artifact, wset, base, &inputs).unwrap();
+    assert_eq!(got.len(), want.len(), "{case}: output arity");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_close(&format!("{case}[{i}]"), g, w, atol);
+    }
+}
+
+fn load_index() -> json::Value {
+    let text = std::fs::read_to_string(golden_dir().join("index.json"))
+        .expect("run `make artifacts` first");
+    json::parse(&text).unwrap()
+}
+
+#[test]
+fn golden_target_full_window() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    let index = load_index();
+    run_case(&engine, &index, "target_full8_w5", 1e-3);
+}
+
+#[test]
+fn golden_pipeline_stages_with_layer_base() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    let index = load_index();
+    run_case(&engine, &index, "target_first4_w5", 1e-3);
+    run_case(&engine, &index, "target_last4_w5", 1e-3);
+}
+
+#[test]
+fn golden_draft_step() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    let index = load_index();
+    run_case(&engine, &index, "draft2_step", 1e-3);
+}
+
+#[test]
+fn golden_verify_kernel_all_modes() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    let index = load_index();
+    for tag in ["strict", "adaptive", "greedy"] {
+        run_case(&engine, &index, &format!("verify_g4_{tag}"), 1e-4);
+    }
+}
+
+#[test]
+fn engine_validates_input_shapes() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    let bad = vec![HostTensor::zeros_f32(&[3, 3])];
+    assert!(engine.run("verify_g4", "target", 0, &bad).is_err());
+}
+
+#[test]
+fn engine_reuses_compilations() {
+    let engine = Engine::from_dir(artifacts_dir()).unwrap();
+    engine.ensure_compiled("verify_g4").unwrap();
+    engine.ensure_compiled("verify_g4").unwrap();
+    assert_eq!(engine.stats().compiles, 1);
+}
