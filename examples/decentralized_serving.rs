@@ -19,13 +19,18 @@ use dsd::util::table::{fnum, Table};
 use dsd::workload::{dataset, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
-    let args = cli::parse_env(&["replicas", "rate", "requests", "policy", "nodes", "link_ms", "dataset"])?;
+    let args = cli::parse_env(&[
+        "replicas", "rate", "requests", "policy", "nodes", "link_ms", "dataset", "draft_shape",
+    ])?;
     let replicas = args.usize_or("replicas", 2)?;
     let rate = args.f64_or("rate", 40.0)?;
     let n_requests = args.usize_or("requests", 12)?;
     let nodes = args.usize_or("nodes", 4)?;
     let link_ms = args.f64_or("link_ms", 15.0)?;
     let ds = args.str_or("dataset", "gsm8k");
+    // `--draft_shape tree:<b>x<d>` widens each sync round into a token
+    // tree; parse errors list the accepted forms.
+    let draft_shape = dsd::spec::DraftShape::parse(&args.str_or("draft_shape", "chain"))?;
     let policy = match args.str_or("policy", "dsd").as_str() {
         "baseline" => Policy::Autoregressive,
         "eagle3" => Policy::Eagle3,
@@ -73,6 +78,7 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
         cfg.decode.policy = policy;
+        cfg.decode.shape = draft_shape;
         cfg.decode.temp = profile.temp;
         cfg.decode.max_new_tokens = 24;
         let n = reqs.len();

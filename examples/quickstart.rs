@@ -6,6 +6,28 @@
 //! the public API.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
+//!
+//! ## Tree speculation
+//!
+//! Every speculative system here drafts a γ-token *chain* per sync
+//! round; the accepted length is capped by the first rejection. The
+//! `spec::tree` subsystem instead drafts a top-k token *tree* and
+//! verifies all candidates in the same single pipeline pass, raising the
+//! mean accepted length at identical sync-round cost. Opt in with the
+//! draft-shape knob anywhere a config is accepted:
+//!
+//! ```text
+//! dsd serve --dataset humaneval --policy dsd --draft_shape tree:4x3
+//! cargo run --release --example decentralized_serving -- --draft_shape tree:4x3
+//! cargo bench --bench ablation_tree          # chain vs tree sweep, engine-free
+//! ```
+//!
+//! `tree:4x3` = branching 4, depth 3. Note the drafting difference:
+//! `chain` *samples* its γ-window (distribution-lossless under strict
+//! verification), while `tree:BxD` drafts deterministic top-k tokens —
+//! so `tree:1xD` matches `chain` exactly only under greedy decoding
+//! (temp 0). Branching trees need tree-attention artifacts;
+//! branching-1 trees and the ablation bench run everywhere.
 
 use std::rc::Rc;
 

@@ -10,20 +10,25 @@
 
 use dsd::cluster::real::RealCluster;
 use dsd::cluster::LinkModel;
-use dsd::spec::{DecodeConfig, Policy};
+use dsd::spec::{DecodeConfig, DraftShape, Policy};
 use dsd::util::cli;
 use dsd::util::rng::Rng;
 use dsd::util::table::{fnum, Table};
 use dsd::workload::{dataset, WorkloadGen};
 
 fn main() -> anyhow::Result<()> {
-    let args = cli::parse_env(&["nodes", "link_ms", "requests", "tokens", "gamma", "dataset"])?;
+    let args = cli::parse_env(&[
+        "nodes", "link_ms", "requests", "tokens", "gamma", "dataset", "draft_shape",
+    ])?;
     let nodes = args.usize_or("nodes", 4)?;
     let link_ms = args.f64_or("link_ms", 15.0)?;
     let n_requests = args.usize_or("requests", 4)?;
     let tokens = args.usize_or("tokens", 32)?;
     let gamma = args.usize_or("gamma", 8)?;
     let ds = args.str_or("dataset", "humaneval");
+    // Parse errors list the accepted forms (`chain`, `tree:<b>x<d>`);
+    // the real-cluster driver itself is chain-only and says so clearly.
+    let shape = DraftShape::parse(&args.str_or("draft_shape", "chain"))?;
 
     let profile = dataset(&ds).ok_or_else(|| anyhow::anyhow!("unknown dataset {ds}"))?;
     let link = LinkModel::wan(link_ms, 1.0);
@@ -59,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = DecodeConfig {
             policy,
             gamma,
+            shape,
             temp: profile.temp,
             max_new_tokens: tokens,
             seed: 1234,

@@ -214,6 +214,14 @@ impl RealCluster {
 
     /// Serve one request end-to-end (speculative or AR per `cfg`).
     pub fn serve_one(&mut self, id: u64, prompt: &[i32], cfg: &DecodeConfig) -> Result<(RealResult, AcceptanceStats)> {
+        if !cfg.shape.is_chain() {
+            bail!(
+                "the real-cluster driver decodes chain windows only; tree draft \
+                 shapes ({}) run on the simulated coordinator (dsd serve, \
+                 decentralized_serving, bench ablation_tree)",
+                cfg.shape.name()
+            );
+        }
         let t_start = Instant::now();
         let m = self.dims();
         let mut rng = Rng::new(cfg.seed ^ id);
@@ -251,12 +259,7 @@ impl RealCluster {
                 }
                 Policy::Eagle3 | Policy::Dsd => {
                     let out = self.speculative_round(id, &mut committed, cfg, &mut rng)?;
-                    accept.record(RoundRecord {
-                        gamma: cfg.gamma,
-                        accepted: out.0,
-                        committed: out.1,
-                        key_tokens: out.2,
-                    });
+                    accept.record(RoundRecord::chain(cfg.gamma, out.0, out.1, out.2));
                 }
             }
         }
@@ -358,6 +361,13 @@ impl RealCluster {
         depth: usize,
     ) -> Result<Vec<RealResult>> {
         use std::collections::VecDeque;
+        if !cfg.shape.is_chain() {
+            bail!(
+                "the real-cluster driver decodes chain windows only; tree draft \
+                 shapes ({}) run on the simulated coordinator",
+                cfg.shape.name()
+            );
+        }
         let m = self.dims();
         struct Run {
             id: u64,

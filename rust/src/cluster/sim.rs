@@ -142,6 +142,32 @@ impl PipelineSim {
         PassTiming { finish: t, comm_ns: comm, compute_ns: compute, queue_ns: queue }
     }
 
+    /// One speculative verify pass over a flattened window of `width`
+    /// slots (chain: γ+1; tree: nodes+1): per-stage compute and the hop
+    /// payloads scale with the width, but the pass is still **one**
+    /// pipeline traversal and one sync round — on latency-dominated
+    /// links (`bandwidth = 0` ⇒ infinite) `comm_ns` is independent of
+    /// the tree's node count. This is the sim-side accounting for tree
+    /// speculation: wider trees buy acceptance with compute and bytes,
+    /// never with extra rounds.
+    pub fn window_pass(
+        &mut self,
+        start: Nanos,
+        width: usize,
+        per_token_stage: &[Nanos],
+        fwd_bytes_per_token: usize,
+        ret_bytes_per_token: usize,
+    ) -> PassTiming {
+        let stage: Vec<Nanos> = per_token_stage.iter().map(|&d| d * width as Nanos).collect();
+        self.pipeline_pass(
+            start,
+            &stage,
+            width * fwd_bytes_per_token,
+            width * ret_bytes_per_token,
+            true,
+        )
+    }
+
     /// Reset busy times and stats (new experiment, same topology).
     pub fn reset(&mut self) {
         self.busy_until.iter_mut().for_each(|b| *b = 0);
@@ -219,6 +245,22 @@ mod tests {
         let t = s.pipeline_pass(0, &[1_000, 0], 0, 0, false);
         assert_eq!(t.queue_ns, 5_000);
         assert_eq!(t.finish, 6_000);
+    }
+
+    #[test]
+    fn window_pass_scales_compute_not_latency() {
+        // Infinite bandwidth (the WAN-latency regime): a 4x-wider tree
+        // window pays 4x compute and 4x bytes but identical comm_ns and
+        // exactly one sync round — the tree-speculation invariant.
+        let mut narrow = sim(4, 15.0);
+        let a = narrow.window_pass(0, 5, &[100_000; 4], 256, 2048);
+        let mut wide = sim(4, 15.0);
+        let b = wide.window_pass(0, 20, &[100_000; 4], 256, 2048);
+        assert_eq!(a.comm_ns, b.comm_ns, "comm must not depend on node count");
+        assert_eq!(b.compute_ns, 4 * a.compute_ns);
+        assert_eq!(wide.stats.bytes, 4 * narrow.stats.bytes);
+        assert_eq!(narrow.stats.sync_rounds, 1);
+        assert_eq!(wide.stats.sync_rounds, 1);
     }
 
     #[test]

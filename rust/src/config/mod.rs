@@ -12,7 +12,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{LinkModel, Topology};
-use crate::spec::{DecodeConfig, Policy};
+use crate::spec::{DecodeConfig, DraftShape, Policy};
 use crate::util::cli::Args;
 
 /// Everything needed to launch a deployment.
@@ -94,10 +94,15 @@ impl DeployConfig {
             if k == "config" {
                 continue;
             }
-            if self.set(k, v).is_err() {
-                // tolerate non-config options, but catch typos for known prefixes
-                if k.contains('.') {
-                    bail!("unknown config key '--{k}'");
+            if let Err(e) = self.set(k, v) {
+                // Tolerate options the config doesn't own (--out,
+                // --sweep_nodes, ...), but surface bad *values* for keys
+                // it does recognize — `--draft_shape tree:x3` must error
+                // with the accepted forms, not silently run as chain —
+                // and typos in dotted keys.
+                let foreign = e.to_string().starts_with("unknown config key");
+                if k.contains('.') || !foreign {
+                    return Err(e);
                 }
             }
         }
@@ -126,6 +131,9 @@ impl DeployConfig {
                 }
             }
             "decode.gamma" | "gamma" => self.decode.gamma = value.parse()?,
+            "decode.draft_shape" | "draft_shape" => {
+                self.decode.shape = DraftShape::parse(value)?
+            }
             "decode.temp" | "temp" => self.decode.temp = value.parse()?,
             "decode.tau" | "tau" => self.decode.tau = value.parse()?,
             "decode.lam1" | "lam1" => self.decode.lam1 = value.parse()?,
@@ -156,6 +164,7 @@ impl DeployConfig {
              [decode]\n\
              policy = \"{}\"\n\
              gamma = {}\n\
+             draft_shape = \"{}\"\n\
              temp = {}\n\
              tau = {}\n\
              lam1 = {}\n\
@@ -174,6 +183,7 @@ impl DeployConfig {
             self.seed,
             self.decode.policy.name(),
             self.decode.gamma,
+            self.decode.shape.name(),
             self.decode.temp,
             self.decode.tau,
             self.decode.lam1,
@@ -232,6 +242,7 @@ mod tests {
         cfg.set("decode.tau", "0.35").unwrap();
         cfg.set("nodes", "8").unwrap();
         cfg.set("policy", "eagle3").unwrap();
+        cfg.set("draft_shape", "tree:4x3").unwrap();
         let text = cfg.to_toml();
         let mut cfg2 = DeployConfig::default();
         let kv = parse_toml_lite(&text).unwrap();
@@ -241,6 +252,41 @@ mod tests {
         assert_eq!(cfg2.n_nodes, 8);
         assert!((cfg2.decode.tau - 0.35).abs() < 1e-6);
         assert_eq!(cfg2.decode.policy, Policy::Eagle3);
+        assert_eq!(cfg2.decode.shape, cfg.decode.shape);
+    }
+
+    #[test]
+    fn draft_shape_key() {
+        let mut cfg = DeployConfig::default();
+        cfg.set("decode.draft_shape", "tree:2x3").unwrap();
+        assert!(!cfg.decode.shape.is_chain());
+        cfg.set("draft_shape", "chain").unwrap();
+        assert!(cfg.decode.shape.is_chain());
+        let err = cfg.set("draft_shape", "tree:x3").unwrap_err().to_string();
+        assert!(err.contains("accepted forms"), "{err}");
+    }
+
+    #[test]
+    fn apply_args_surfaces_bad_values_for_known_keys() {
+        fn args_with(k: &str, v: &str) -> Args {
+            let mut a = Args::default();
+            a.options.insert(k.to_string(), v.to_string());
+            a
+        }
+        let mut cfg = DeployConfig::default();
+        // foreign keys (other drivers' options, e.g. --out) pass through
+        cfg.apply_args(&args_with("out", "deploy.toml")).unwrap();
+        // a bad value for a recognized key must error with the accepted
+        // forms, not silently fall back to the default
+        let err = cfg
+            .apply_args(&args_with("draft_shape", "tree:x3"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("accepted forms"), "{err}");
+        assert!(cfg.decode.shape.is_chain(), "failed parse must not mutate");
+        // bad numeric values surface too; dotted typos still rejected
+        assert!(cfg.apply_args(&args_with("nodes", "abc")).is_err());
+        assert!(cfg.apply_args(&args_with("decode.bogus", "1")).is_err());
     }
 
     #[test]

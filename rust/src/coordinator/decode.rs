@@ -11,16 +11,30 @@
 //! commit:   advance frontiers; ONE sync round total   | (Eq. 4)
 //! ```
 //!
+//! Under a tree [`DraftShape`] the draft step instead grows a top-k
+//! [`DraftTree`](crate::spec::tree::DraftTree); the whole tree is
+//! flattened into **one** verify window
+//! (position ids + ancestor mask via [`StageInput::Tree`]) so it still
+//! costs a single pipeline pass and a single sync round — per-stage
+//! compute and hop payloads scale with tree width, the (N-1)·t1 latency
+//! term does not. Verification picks the longest accepted root-path
+//! ([`host_verify_tree`]) on the leader, and the accepted rows are
+//! compacted into chain layout in every stage's KV cache.
+//!
 //! Standard autoregressive decoding instead pays a full pipeline pass per
-//! token (Eq. 3). Both paths share all executors, so measured compute is
+//! token (Eq. 3). All paths share all executors, so measured compute is
 //! apples-to-apples.
+
+use std::rc::Rc;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::sim::PipelineSim;
-use crate::model::{KvPool, ShardedModel, StageInput, VerifyOutcome};
 use crate::coordinator::session::Sequence;
+use crate::model::{KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome};
+use crate::spec::tree::{build_tree, host_verify_tree, DraftShape, TreeVerifyResult};
 use crate::spec::{DecodeConfig, Policy, RoundRecord};
 use crate::util::rng::Rng;
 
@@ -32,6 +46,12 @@ pub struct RoundOutcome {
     /// Accepted draft tokens (speculative policies; 0 for AR).
     pub accepted: usize,
     pub key_tokens: usize,
+    /// Maximum accepted-path length this round offered (γ for chains,
+    /// tree depth for trees; 0 for AR).
+    pub draft_len: usize,
+    /// Draft nodes verified in the window (γ for chains, tree size for
+    /// trees; 0 for AR).
+    pub tree_nodes: usize,
     /// Absolute sim time at which the round's result is committed.
     pub finish: Nanos,
     pub comm_ns: Nanos,
@@ -92,16 +112,17 @@ impl DecodeEngine {
         Ok(())
     }
 
-    /// One decode round under the configured policy.
+    /// One decode round under the configured policy and draft shape.
     pub fn round(
         &mut self,
         seq: &mut Sequence,
         pool: &mut KvPool,
         sim: &mut PipelineSim,
     ) -> Result<RoundOutcome> {
-        match self.cfg.policy {
-            Policy::Autoregressive => self.round_autoregressive(seq, pool, sim),
-            Policy::Eagle3 | Policy::Dsd => self.round_speculative(seq, pool, sim),
+        match (self.cfg.policy, self.cfg.shape) {
+            (Policy::Autoregressive, _) => self.round_autoregressive(seq, pool, sim),
+            (_, DraftShape::Chain) => self.round_speculative(seq, pool, sim),
+            (_, shape @ DraftShape::Tree { .. }) => self.round_tree(seq, pool, sim, shape),
         }
     }
 
@@ -125,6 +146,8 @@ impl DecodeEngine {
             committed: vec![tok],
             accepted: 0,
             key_tokens: 0,
+            draft_len: 0,
+            tree_nodes: 0,
             finish: timing.finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns,
@@ -203,6 +226,8 @@ impl DecodeEngine {
             committed: outcome.tokens.clone(),
             accepted: outcome.accepted,
             key_tokens: outcome.key_flags.iter().filter(|&&k| k).count(),
+            draft_len: gamma,
+            tree_nodes: gamma,
             finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
@@ -216,6 +241,194 @@ impl DecodeEngine {
         // tokens at those positions are committed only up to i+k.
         seq.draft_frontier = i + (k.min(self.cfg.gamma - 1)) + 1;
         seq.commit(&out.tokens);
+    }
+
+    /// Tree round: grow a top-k draft tree, verify it in ONE flattened
+    /// pipeline pass, commit the longest accepted root-path + 1.
+    ///
+    /// Branching-1 trees are chain-shaped and run on the plain causal
+    /// artifacts; branching > 1 flattens through [`StageInput::Tree`]
+    /// (tree-attention artifacts). Tree verification runs on the leader
+    /// host — the L1 kernel is chain-only.
+    fn round_tree(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+        shape: DraftShape,
+    ) -> Result<RoundOutcome> {
+        let m = self.model.engine.manifest().model.clone();
+        let i = seq.last_index();
+        let temp = self.cfg.temp;
+
+        // --- catch-up: replay committed positions the draft cache lacks.
+        // Tree rounds draft in scratch clones and leave the pooled draft
+        // cache at the committed frontier, so this also re-drafts tokens
+        // committed by the previous tree round (conservative: the replay
+        // cost is charged as leader-local work).
+        let dstage = self.model.n_shards();
+        let mut draft_ns_total: Nanos = 0;
+        for pos in seq.draft_frontier..i {
+            let input = seq.committed[pos];
+            let u = self.rng.f32();
+            let dcache = pool.stage_cache(seq.slot, dstage)?;
+            let (_, _, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
+            draft_ns_total += ns;
+        }
+        seq.draft_frontier = i;
+
+        // --- grow the draft tree on scratch cache clones (a branching
+        // path is a different draft context, so each expanded node forks
+        // its parent's cache; the fork is host bookkeeping, not charged).
+        // Expansions arrive level by level and only ever fork the
+        // previous level's caches, so caches older than that are freed
+        // as each level opens — at most two levels are live at once.
+        let root_cache = pool.stage_cache(seq.slot, dstage)?.clone();
+        let last_token = seq.last_token();
+        let max_depth = shape.depth_or(self.cfg.gamma);
+        let draft = &self.model.draft;
+        let rng = &mut self.rng;
+        let mut expansion_caches: Vec<Option<KvCache>> = Vec::new();
+        let mut cur_level = 1usize;
+        let mut cur_level_start = 0usize; // first expansion row of cur_level
+        let mut tree_draft_ns: Nanos = 0;
+        let (tree, d_logits) = build_tree(shape, self.cfg.gamma, temp, m.vocab, |e| {
+            if e.child_depth > cur_level {
+                // entering a new level: rows before the previous level's
+                // start can never be forked again
+                for c in expansion_caches.iter_mut().take(cur_level_start) {
+                    *c = None;
+                }
+                cur_level = e.child_depth;
+                cur_level_start = e.row;
+            }
+            let mut cache = match e.parent_row {
+                None => root_cache.clone(),
+                Some(r) => expansion_caches[r]
+                    .as_ref()
+                    .expect("parent expansion cache freed too early")
+                    .clone(),
+            };
+            let token = e.path.last().copied().unwrap_or(last_token);
+            let u = rng.f32();
+            let (_, logits, ns) = draft.step(token, &mut cache, i + e.path.len(), temp, u)?;
+            tree_draft_ns += ns;
+            // Keep the stepped cache only if its children can themselves
+            // be expanded — final-level expansions produce leaves, which
+            // are never forked, so their clones drop immediately.
+            let retain = e.child_depth < max_depth;
+            expansion_caches.push(if retain { Some(cache) } else { None }); // index == e.row
+            Ok(logits)
+        })?;
+        draft_ns_total += tree_draft_ns;
+        let draft_done = sim.local_work(seq.ready_at, draft_ns_total);
+
+        // --- ONE pipeline pass over the flattened tree window ---
+        let window = tree.window(last_token, i);
+        let n = tree.len();
+        let (t_logits, stage_times, fwd_bytes, ret_bytes) = if window.is_causal() {
+            // chain-shaped tree: plain causal window, standard artifacts
+            self.pipeline_window(seq, pool, &window.tokens, i, n + 1)?
+        } else {
+            self.pipeline_tree_window(seq, pool, window)?
+        };
+        let timing = sim.pipeline_pass(draft_done, &stage_times, fwd_bytes, ret_bytes, true);
+
+        // --- host tree verification (leader-local) ---
+        let u_accept: Vec<f32> = (0..n).map(|_| self.rng.f32()).collect();
+        let u_sample: Vec<f32> = (0..=tree.depth()).map(|_| self.rng.f32()).collect();
+        let t0 = Instant::now();
+        let outcome = host_verify_tree(
+            &tree,
+            m.vocab,
+            &t_logits,
+            &d_logits,
+            &u_accept,
+            &u_sample,
+            self.cfg.knobs(),
+        );
+        let verify_ns = t0.elapsed().as_nanos() as Nanos;
+        let finish = sim.local_work(timing.finish, verify_ns);
+
+        self.commit_tree_outcome(seq, pool, i, &outcome)?;
+        seq.ready_at = finish;
+        Ok(RoundOutcome {
+            committed: outcome.tokens.clone(),
+            accepted: outcome.accepted,
+            key_tokens: outcome.key_flags.iter().filter(|&&k| k).count(),
+            draft_len: tree.depth(),
+            tree_nodes: n,
+            finish,
+            comm_ns: timing.comm_ns,
+            compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
+        })
+    }
+
+    /// Commit a tree round: gather the accepted path's KV rows (written
+    /// at window-slot positions `i + slot`) into chain layout
+    /// `i+1..=i+k` in every target stage cache, then extend the
+    /// sequence. Chain-shaped trees already sit in chain layout, so the
+    /// gather is a no-op for them.
+    fn commit_tree_outcome(
+        &self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        i: usize,
+        out: &TreeVerifyResult,
+    ) -> Result<()> {
+        let moves: Vec<(usize, usize)> = out
+            .path
+            .iter()
+            .enumerate()
+            .filter_map(|(j, &node)| {
+                let from = i + node + 1; // node's window slot position
+                let to = i + j + 1; // its committed position
+                (from != to).then_some((from, to))
+            })
+            .collect();
+        if !moves.is_empty() {
+            for si in 0..self.model.n_shards() {
+                pool.stage_cache(seq.slot, si)?.compact_rows(&moves)?;
+            }
+        }
+        // The pooled draft cache holds rows < i; the catch-up loop next
+        // round replays the freshly committed tokens through it.
+        seq.commit(&out.tokens);
+        Ok(())
+    }
+
+    /// Run a non-causal tree window through all stages via
+    /// [`StageInput::Tree`] (tree-attention artifacts), returning the
+    /// logits and sim inputs like [`Self::pipeline_window`].
+    fn pipeline_tree_window(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        window: crate::model::TreeWindow,
+    ) -> Result<(Vec<f32>, Vec<Nanos>, usize, usize)> {
+        let window = Rc::new(window);
+        let w = window.width();
+        let base = window.positions[0] as usize;
+        let n = self.model.n_shards();
+        let mut stage_times = Vec::with_capacity(n);
+        let mut fwd_bytes = 0usize;
+        let mut x = StageInput::Tree { window: window.clone(), hidden: None };
+        let mut out_data: Option<Vec<f32>> = None;
+        for (si, stage) in self.model.stages.iter().enumerate() {
+            let cache = pool.stage_cache(seq.slot, si)?;
+            let (out, ns) = stage.run(w, &x, cache, base)?;
+            stage_times.push(ns);
+            if si + 1 < n {
+                let next = StageInput::Tree { window: window.clone(), hidden: Some(out.data) };
+                fwd_bytes = next.size_bytes();
+                x = next;
+            } else {
+                out_data = Some(out.data);
+            }
+        }
+        let logits = out_data.expect("last stage emits logits");
+        let ret_bytes = logits.len() * 4;
+        Ok((logits, stage_times, fwd_bytes, ret_bytes))
     }
 
     /// Run one window through all pipeline stages, returning the logits

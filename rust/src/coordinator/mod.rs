@@ -71,9 +71,14 @@ impl Coordinator {
         Ok(Coordinator { engine, cfg, decode, pool, sim })
     }
 
-    /// Pre-compile all artifacts used by this deployment.
+    /// Pre-compile all artifacts used by this deployment (shape-aware:
+    /// tree rounds verify on the host, so only their flattened stage
+    /// windows are compiled).
     pub fn warmup(&self) -> Result<()> {
-        self.decode.model.warmup(&[self.cfg.decode.gamma])
+        match self.cfg.decode.shape {
+            crate::spec::DraftShape::Chain => self.decode.model.warmup(&[self.cfg.decode.gamma]),
+            shape => self.decode.model.warmup_tree(shape, self.cfg.decode.gamma),
+        }
     }
 
     pub fn decode_engine(&mut self) -> &mut DecodeEngine {
@@ -132,14 +137,14 @@ impl Coordinator {
                         seq.state = SeqState::Decoding;
                         now = now.max(seq.ready_at.min(now + 0)); // now advances via rounds
                     } else {
-                        let gamma = self.cfg.decode.gamma;
                         let out = self.decode.round(seq, &mut self.pool, &mut self.sim)?;
                         if self.cfg.decode.policy.is_speculative() {
                             accept.record(RoundRecord {
-                                gamma,
+                                gamma: out.draft_len,
                                 accepted: out.accepted,
                                 committed: out.committed.len(),
                                 key_tokens: out.key_tokens,
+                                tree_nodes: out.tree_nodes,
                             });
                         }
                         report.sync_rounds += 1;
@@ -148,7 +153,7 @@ impl Coordinator {
                     // Completion check: token budget or cache window room.
                     let seq = &mut active[idx];
                     let window_room =
-                        seq.committed.len() + self.cfg.decode.gamma + 1 < max_seq;
+                        seq.committed.len() + self.cfg.decode.max_window() < max_seq;
                     if seq.generated() >= seq.max_new_tokens || !window_room {
                         // Trim overshoot from the last speculative round.
                         let excess = seq.generated().saturating_sub(seq.max_new_tokens);

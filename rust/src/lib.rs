@@ -18,6 +18,22 @@
 //! `artifacts/*.hlo.txt` + `weights.bin` + `manifest.json`, and the
 //! [`runtime::Engine`] loads them through PJRT.
 //!
+//! ## Token-tree speculation
+//!
+//! Beyond the paper's γ-token draft *chains*, the [`spec::tree`]
+//! subsystem drafts top-k token **trees** ([`spec::DraftShape`],
+//! `--draft_shape tree:4x3`): a [`spec::DraftTree`] is flattened into a
+//! single verify window (position ids + ancestor mask,
+//! [`model::TreeWindow`]) so the whole tree costs **one** pipeline pass
+//! and one sync round — the (N-1)·t1 latency term is unchanged while
+//! many candidate continuations are verified at once, raising the mean
+//! accepted length k̄ that drives the paper's communication saving
+//! (Eq. 5). [`spec::host_verify_tree`] selects the longest accepted
+//! root-path under strict or adaptive (Eqs. 7–8, per node) thresholds; a
+//! branching-1 tree reproduces the chain reference byte-for-byte.
+//! `benches/ablation_tree.rs` sweeps branching×depth×link latency
+//! against the chain baseline, engine-free.
+//!
 //! Start with [`coordinator::Coordinator`] (serving) or
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.

@@ -25,8 +25,8 @@ use dsd::workload::{dataset, WorkloadGen};
 
 const VALUED: &[&str] = &[
     "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
-    "draft", "draft_variant", "max_batch", "dataset", "requests", "seed", "policy",
-    "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "out",
+    "draft", "draft_variant", "draft_shape", "max_batch", "dataset", "requests", "seed",
+    "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "out",
     "sweep_nodes",
 ];
 
@@ -61,6 +61,7 @@ Common options:
   --dataset NAME         humaneval|gsm8k|alpaca|mtbench|cnndm
   --policy P             baseline|eagle3|dsd            [dsd]
   --gamma G              draft window                   [8]
+  --draft_shape S        chain | tree:<branching>x<depth>  [chain]
   --temp T               sampling temperature           [1.0]
   --tau T                relaxation coefficient         [0.2]
   --requests N           number of requests             [8]

@@ -16,6 +16,60 @@ use crate::model::kv::KvCache;
 use crate::model::shard::ShardSpec;
 use crate::runtime::{Engine, HostTensor};
 
+/// A flattened token-tree verify window (spec::tree): per-slot tokens,
+/// absolute position ids, and the ancestor-visibility mask that replaces
+/// plain causal attention. Slot 0 is the last committed token; slot
+/// `n + 1` is draft-tree node `n`.
+///
+/// Tree-attention artifact contract: KV rows for slot `s` are written at
+/// cache index `base_pos + s` (the coordinator compacts accepted rows
+/// into chain layout after verification), attention over the window uses
+/// `mask`, and attention over the committed cache prefix is bounded by
+/// each slot's position id.
+#[derive(Debug, Clone)]
+pub struct TreeWindow {
+    /// Window tokens, length `W`.
+    pub tokens: Vec<i32>,
+    /// Absolute position id per slot, length `W`.
+    pub positions: Vec<i32>,
+    /// Row-major `[W, W]` visibility mask (1.0 = slot `row` attends to
+    /// slot `col`); f32 so it uploads as a plain tensor input.
+    pub mask: Vec<f32>,
+}
+
+impl TreeWindow {
+    pub fn width(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// True iff this window is an ordinary causal chain (consecutive
+    /// positions, lower-triangular mask) — such windows run on the plain
+    /// stage artifacts with no tree-attention support needed.
+    pub fn is_causal(&self) -> bool {
+        let w = self.width();
+        for s in 0..w {
+            if self.positions[s] != self.positions[0] + s as i32 {
+                return false;
+            }
+        }
+        for r in 0..w {
+            for c in 0..w {
+                let want = if c <= r { 1.0 } else { 0.0 };
+                if self.mask[r * w + c] != want {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Bytes of tree metadata (positions + mask) that ride every hop on
+    /// top of the payload tensor.
+    pub fn meta_bytes(&self) -> usize {
+        self.positions.len() * 4 + self.mask.len() * 4
+    }
+}
+
 /// Input to a pipeline stage.
 #[derive(Debug, Clone)]
 pub enum StageInput {
@@ -23,6 +77,12 @@ pub enum StageInput {
     Tokens(Vec<i32>),
     /// Hidden states [W, d_model] flattened (mid/last stages).
     Hidden(Vec<f32>),
+    /// Token-tree verify window. `hidden` is `None` entering the first
+    /// stage (tokens come from the window) and `Some` thereafter; the
+    /// window metadata travels with the activation on every hop
+    /// (`Rc`-shared so the per-hop clone is O(1) — `size_bytes` still
+    /// charges the full metadata per hop, since a real wire would).
+    Tree { window: Rc<TreeWindow>, hidden: Option<Vec<f32>> },
 }
 
 impl StageInput {
@@ -30,6 +90,13 @@ impl StageInput {
         match self {
             StageInput::Tokens(t) => t.len() * 4,
             StageInput::Hidden(h) => h.len() * 4,
+            StageInput::Tree { window, hidden } => {
+                let payload = match hidden {
+                    Some(h) => h.len() * 4,
+                    None => window.tokens.len() * 4,
+                };
+                payload + window.meta_bytes()
+            }
         }
     }
 }
@@ -67,6 +134,10 @@ impl StageExecutor {
     /// Run this shard over a window of `w` positions starting at `pos`.
     /// Updates `cache` in place (rows pos..pos+w) and returns the output
     /// plus the measured compute time.
+    ///
+    /// [`StageInput::Tree`] windows dispatch to the tree-attention
+    /// artifact variant (per-slot position ids + ancestor mask as extra
+    /// inputs); causal artifact sets reject them with guidance.
     pub fn run(
         &self,
         w: usize,
@@ -74,6 +145,9 @@ impl StageExecutor {
         cache: &mut KvCache,
         pos: usize,
     ) -> Result<(StageOutput, Nanos)> {
+        if let StageInput::Tree { window, hidden } = x {
+            return self.run_tree(w, window, hidden.as_deref(), cache, pos);
+        }
         let artifact = self.spec.artifact(w);
         let m = &self.engine.manifest().model;
         let x_tensor = match (x, self.spec.takes_tokens()) {
@@ -109,9 +183,21 @@ impl StageExecutor {
             HostTensor::scalar_i32(pos as i32),
         ];
         let t0 = Instant::now();
-        let mut outs = self.engine.run(&artifact, &self.weight_set, self.spec.layer_base, &inputs)?;
+        let outs = self.engine.run(&artifact, &self.weight_set, self.spec.layer_base, &inputs)?;
         let elapsed = t0.elapsed().as_nanos() as Nanos;
-        // outputs: [out, k_cache, v_cache]
+        Ok((self.unpack_outputs(outs, cache, w)?, elapsed))
+    }
+
+    /// Decompose a stage artifact's `[out, k_cache, v_cache]` outputs:
+    /// replace the sequence's KV cache in place and shape the payload —
+    /// shared tail of the causal and tree-window paths.
+    fn unpack_outputs(
+        &self,
+        mut outs: Vec<HostTensor>,
+        cache: &mut KvCache,
+        w: usize,
+    ) -> Result<StageOutput> {
+        let m = &self.engine.manifest().model;
         let nv = outs.pop().unwrap();
         let nk = outs.pop().unwrap();
         let out = outs.pop().unwrap();
@@ -125,7 +211,65 @@ impl StageExecutor {
             HostTensor::F32 { data, .. } => data,
             _ => bail!("stage output must be f32"),
         };
-        Ok((StageOutput { data, width: w, dim }, elapsed))
+        Ok(StageOutput { data, width: w, dim })
+    }
+
+    /// Run a token-tree verify window through this shard. The tree
+    /// artifact takes two extra inputs (position ids `[W]` i32, ancestor
+    /// mask `[W, W]` f32) after the standard quartet; outputs match the
+    /// causal artifact. KV rows land at `pos + slot` per the
+    /// [`TreeWindow`] contract.
+    fn run_tree(
+        &self,
+        w: usize,
+        window: &TreeWindow,
+        hidden: Option<&[f32]>,
+        cache: &mut KvCache,
+        pos: usize,
+    ) -> Result<(StageOutput, Nanos)> {
+        if window.width() != w {
+            bail!("stage {}: tree window width {} != {w}", self.spec.stage_idx, window.width());
+        }
+        let artifact = self.spec.tree_artifact(w);
+        if !self.engine.manifest().has_artifact(&artifact) {
+            bail!(
+                "stage {}: this artifact set has no tree-attention variant '{artifact}'. \
+                 Branching draft trees need artifacts exported with tree support \
+                 (python/compile/aot.py); chain-shaped drafting (--draft_shape chain \
+                 or tree:1x<depth>) runs on the causal artifacts",
+                self.spec.stage_idx
+            );
+        }
+        let m = &self.engine.manifest().model;
+        let x_tensor = match (hidden, self.spec.takes_tokens()) {
+            (None, true) => HostTensor::i32(window.tokens.clone(), vec![w]),
+            (Some(h), false) => {
+                if h.len() != w * m.d_model {
+                    bail!("stage {}: hidden len {} != {w}x{}", self.spec.stage_idx, h.len(), m.d_model);
+                }
+                HostTensor::f32(h.to_vec(), vec![w, m.d_model])
+            }
+            _ => bail!(
+                "stage {} role '{}' got wrong tree-window payload",
+                self.spec.stage_idx,
+                self.spec.role
+            ),
+        };
+        let cache_shape = cache.shape.to_vec();
+        let k_in = std::mem::take(&mut cache.k);
+        let v_in = std::mem::take(&mut cache.v);
+        let inputs = vec![
+            x_tensor,
+            HostTensor::f32(k_in, cache_shape.clone()),
+            HostTensor::f32(v_in, cache_shape),
+            HostTensor::scalar_i32(pos as i32),
+            HostTensor::i32(window.positions.clone(), vec![w]),
+            HostTensor::f32(window.mask.clone(), vec![w, w]),
+        ];
+        let t0 = Instant::now();
+        let outs = self.engine.run(&artifact, &self.weight_set, self.spec.layer_base, &inputs)?;
+        let elapsed = t0.elapsed().as_nanos() as Nanos;
+        Ok((self.unpack_outputs(outs, cache, w)?, elapsed))
     }
 }
 

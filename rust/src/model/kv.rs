@@ -74,6 +74,35 @@ impl KvCache {
     pub fn size_bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
     }
+
+    /// Move cache rows (all layers/heads) from source to destination
+    /// positions — the compaction step after tree verification, where the
+    /// accepted root-path's rows (written at window-slot positions) are
+    /// gathered into chain layout. `moves` must be ordered so that no
+    /// destination overwrites a later source; accepted-path compaction
+    /// `(base + slot_j, base + j)` with slots ascending satisfies this
+    /// (`slot_j >= j`, so every later source lies past every earlier
+    /// destination).
+    pub fn compact_rows(&mut self, moves: &[(usize, usize)]) -> Result<()> {
+        let [layers, max_seq, heads, head_dim] = self.shape;
+        let row = heads * head_dim;
+        let per_layer = max_seq * row;
+        for &(from, to) in moves {
+            if from >= max_seq || to >= max_seq {
+                bail!("KV compact: row move {from}->{to} outside capacity {max_seq}");
+            }
+            if from == to {
+                continue;
+            }
+            for l in 0..layers {
+                let src = l * per_layer + from * row;
+                let dst = l * per_layer + to * row;
+                self.k.copy_within(src..src + row, dst);
+                self.v.copy_within(src..src + row, dst);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Fixed-capacity pool of sequence slots — the coordinator's admission
@@ -170,6 +199,35 @@ mod tests {
         assert_eq!(c.pos, 3);
         // the next window overwrites rows starting at pos — no stale reads
         // possible because attention masks index > pos + row.
+    }
+
+    #[test]
+    fn compact_rows_gathers_accepted_path() {
+        // 2 layers, 8 positions, 1 head, 2 dims: row r of layer l holds
+        // value 100*l + r so moves are observable.
+        let mut c = KvCache::new(2, 8, 1, 2);
+        for l in 0..2 {
+            for r in 0..8 {
+                for d in 0..2 {
+                    c.k[l * 16 + r * 2 + d] = (100 * l + r) as f32;
+                    c.v[l * 16 + r * 2 + d] = (100 * l + r) as f32 + 0.5;
+                }
+            }
+        }
+        // accepted tree path at window slots [2, 5] after base 0:
+        // rows 3 and 6 move to 1 and 2 (slot s -> base + s + 1 source).
+        c.compact_rows(&[(3, 1), (6, 2)]).unwrap();
+        for l in 0..2 {
+            assert_eq!(c.k[l * 16 + 2], (100 * l + 3) as f32);
+            assert_eq!(c.k[l * 16 + 4], (100 * l + 6) as f32);
+            assert_eq!(c.v[l * 16 + 5], (100 * l + 6) as f32 + 0.5);
+            // untouched rows keep their values
+            assert_eq!(c.k[l * 16], (100 * l) as f32);
+            assert_eq!(c.k[l * 16 + 14], (100 * l + 7) as f32);
+        }
+        assert!(c.compact_rows(&[(9, 0)]).is_err());
+        // identity moves are no-ops
+        c.compact_rows(&[(4, 4)]).unwrap();
     }
 
     #[test]

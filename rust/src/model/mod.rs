@@ -6,17 +6,18 @@ pub mod kv;
 pub mod shard;
 
 pub use executor::{
-    DraftExecutor, StageExecutor, StageInput, StageOutput, VerifyExecutor, VerifyKnobs,
-    VerifyOutcome,
+    DraftExecutor, StageExecutor, StageInput, StageOutput, TreeWindow, VerifyExecutor,
+    VerifyKnobs, VerifyOutcome,
 };
 pub use kv::{KvCache, KvPool};
 pub use shard::{plan_shards, stage_cache_dims, ShardSpec};
 
 use std::rc::Rc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::runtime::Engine;
+use crate::spec::DraftShape;
 
 /// Convenience bundle: the full sharded target model plus draft + verify
 /// executors over one engine (single-process / sim-mode deployment).
@@ -67,6 +68,45 @@ impl ShardedModel {
         }
         for g in gammas {
             self.engine.ensure_compiled(&format!("verify_g{g}"))?;
+        }
+        self.engine.ensure_compiled(&format!("draft{}_step", self.draft.depth))?;
+        self.engine.ensure_compiled(&format!("draft{}_prefill", self.draft.depth))?;
+        Ok(())
+    }
+
+    /// Pre-compile artifacts for tree-shaped rounds. Tree drafting
+    /// produces a deterministic node count, so exactly one flattened
+    /// window width is needed per shape; branching-1 trees are
+    /// chain-shaped and warm the plain causal window, wider trees need
+    /// tree-attention artifact variants. Tree verification runs on the
+    /// host, so no verify kernel is compiled.
+    pub fn warmup_tree(&self, shape: DraftShape, gamma: usize) -> Result<()> {
+        let m = self.engine.manifest();
+        let prefill = m.model.prefill_window;
+        let width = shape.max_nodes_or(gamma) + 1;
+        let chain_shaped = matches!(
+            shape,
+            DraftShape::Chain | DraftShape::Tree { branching: 1, .. }
+        );
+        for stage in &self.stages {
+            let mut arts = vec![stage.spec.artifact(1), stage.spec.artifact(prefill)];
+            if chain_shaped {
+                arts.push(stage.spec.artifact(width));
+            } else {
+                let name = stage.spec.tree_artifact(width);
+                if !m.has_artifact(&name) {
+                    bail!(
+                        "artifact set has no tree-attention stage variant '{name}' — \
+                         regenerate artifacts with tree support (python/compile/aot.py) \
+                         or use --draft_shape chain / tree:1x<depth>"
+                    );
+                }
+                arts.push(name);
+            }
+            for art in &arts {
+                self.engine.ensure_compiled(art)?;
+                self.engine.ensure_weights(art, "target", stage.spec.layer_base)?;
+            }
         }
         self.engine.ensure_compiled(&format!("draft{}_step", self.draft.depth))?;
         self.engine.ensure_compiled(&format!("draft{}_prefill", self.draft.depth))?;

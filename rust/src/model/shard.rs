@@ -22,6 +22,12 @@ impl ShardSpec {
         Manifest::stage_artifact_name(&self.role, self.lps, window)
     }
 
+    /// Tree-attention artifact name for this shard at a given flattened
+    /// window size (spec::tree verify windows).
+    pub fn tree_artifact(&self, window: usize) -> String {
+        Manifest::stage_tree_artifact_name(&self.role, self.lps, window)
+    }
+
     /// Does this stage take token ids (vs hidden states) as input?
     pub fn takes_tokens(&self) -> bool {
         self.role == "first" || self.role == "full"
@@ -65,6 +71,7 @@ mod tests {
     fn shard_spec_artifact_names() {
         let s = ShardSpec { stage_idx: 1, role: "mid".into(), layer_base: 2, lps: 2 };
         assert_eq!(s.artifact(5), "target_mid2_w5");
+        assert_eq!(s.tree_artifact(5), "target_mid2_tree5");
         assert!(!s.takes_tokens());
         assert!(!s.emits_logits());
         let f = ShardSpec { stage_idx: 0, role: "full".into(), layer_base: 0, lps: 8 };

@@ -234,6 +234,12 @@ impl Manifest {
             .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
     }
 
+    /// Whether an artifact exists (capability probe — e.g. tree-attention
+    /// stage variants, which older artifact exports lack).
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
     pub fn weight_set(&self, name: &str) -> Result<&BTreeMap<String, TensorRec>> {
         self.weight_sets
             .get(name)
@@ -263,6 +269,12 @@ impl Manifest {
     /// Name of the stage artifact for (role, layers-per-stage, window).
     pub fn stage_artifact_name(role: &str, lps: usize, window: usize) -> String {
         format!("target_{role}{lps}_w{window}")
+    }
+
+    /// Name of the tree-attention stage artifact (flattened token-tree
+    /// verify windows: extra position-id and ancestor-mask inputs).
+    pub fn stage_tree_artifact_name(role: &str, lps: usize, window: usize) -> String {
+        format!("target_{role}{lps}_tree{window}")
     }
 
     /// Layers-per-stage for a shard count.

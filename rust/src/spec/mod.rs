@@ -4,18 +4,32 @@
 //!   semantics (the third implementation, after the Pallas kernel and the
 //!   jnp oracle) used for engine-free property tests and host-side
 //!   baselines.
-//! * [`stats`] — per-round and per-sequence acceptance accounting.
+//! * [`tree`] — token-tree speculation: [`DraftTree`] arenas built by
+//!   top-k branching under a [`DraftShape`], flattened into a single
+//!   verify window (one pipeline pass, one sync round — same cost shape
+//!   as a chain), and scored by [`host_verify_tree`], which generalizes
+//!   the chain rule to pick the longest accepted root-path. A
+//!   branching-1 tree reproduces [`host_verify`] byte-for-byte.
+//! * [`stats`] — per-round and per-sequence acceptance accounting,
+//!   including tree node counts and per-depth acceptance histograms.
 //!
 //! The policy taxonomy mirrors the paper's §3.1 "systems compared":
 //! `Autoregressive` (Eq. 3 baseline), `Eagle3` (nonadaptive strict
 //! speculative decoding — see DESIGN.md §5 for the substitution note),
-//! and `Dsd` (adaptive verification, Eqs. 7–8).
+//! and `Dsd` (adaptive verification, Eqs. 7–8). Both speculative
+//! policies draft under any [`DraftShape`]; the adaptive thresholds of
+//! Eqs. 7–8 apply per tree node.
 
 pub mod reference;
 pub mod stats;
+pub mod tree;
 
 pub use reference::{host_verify, HostVerifyResult};
 pub use stats::{AcceptanceStats, RoundRecord};
+pub use tree::{
+    build_tree, host_verify_tree, DraftShape, DraftTree, Expansion, TreeVerifyResult,
+    DEFAULT_MAX_TREE_NODES,
+};
 
 use crate::model::VerifyKnobs;
 
@@ -49,8 +63,11 @@ impl Policy {
 #[derive(Debug, Clone)]
 pub struct DecodeConfig {
     pub policy: Policy,
-    /// Draft window length γ (speculative policies).
+    /// Draft window length γ (speculative policies, chain shape).
     pub gamma: usize,
+    /// Shape of the per-round draft: chain (sampled γ-window) or a
+    /// top-k token tree (see [`DraftShape::parse`] for spellings).
+    pub shape: DraftShape,
     /// Sampling temperature; <= 0 is greedy.
     pub temp: f32,
     /// Relaxation coefficient τ (DSD only; Eq. 8).
@@ -70,6 +87,7 @@ impl Default for DecodeConfig {
         DecodeConfig {
             policy: Policy::Dsd,
             gamma: 8,
+            shape: DraftShape::Chain,
             temp: 1.0,
             // Defaults from the paper's §2.4: τ in [0.1, 0.3]; λs
             // calibrated on a validation sweep (see bench ablation_tau).
@@ -103,6 +121,18 @@ impl DecodeConfig {
     pub fn greedy(&self) -> bool {
         self.temp <= 0.0
     }
+
+    /// Maximum accepted-path length per round (γ for chains, tree depth
+    /// otherwise).
+    pub fn max_depth(&self) -> usize {
+        self.shape.depth_or(self.gamma)
+    }
+
+    /// Widest verify window a round can issue (root slot + drafted
+    /// nodes) — what the KV window-room check must reserve.
+    pub fn max_window(&self) -> usize {
+        self.shape.max_nodes_or(self.gamma) + 1
+    }
 }
 
 #[cfg(test)]
@@ -116,6 +146,20 @@ mod tests {
         assert_eq!(Policy::Dsd.name(), "dsd");
         assert!(!Policy::Autoregressive.is_speculative());
         assert!(Policy::Dsd.is_speculative());
+    }
+
+    #[test]
+    fn shape_window_bounds() {
+        let cfg = DecodeConfig::default();
+        assert!(cfg.shape.is_chain());
+        assert_eq!(cfg.max_depth(), 8);
+        assert_eq!(cfg.max_window(), 9);
+        let cfg = DecodeConfig {
+            shape: DraftShape::parse("tree:2x3").unwrap(),
+            ..Default::default()
+        };
+        assert_eq!(cfg.max_depth(), 3);
+        assert_eq!(cfg.max_window(), 2 + 4 + 8 + 1);
     }
 
     #[test]

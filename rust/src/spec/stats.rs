@@ -1,17 +1,30 @@
 //! Acceptance accounting: per-round records and aggregated statistics
-//! (the "Avg len" / acceptance-ratio columns of Tables 1–2).
+//! (the "Avg len" / acceptance-ratio columns of Tables 1–2), including
+//! tree-shaped rounds (node counts and per-depth acceptance).
 
 /// One verification round's outcome.
 #[derive(Debug, Clone, Copy)]
 pub struct RoundRecord {
-    /// Draft window length γ.
+    /// Draft window length γ — for tree rounds, the tree depth (the
+    /// maximum accepted-path length).
     pub gamma: usize,
-    /// Accepted draft tokens k (0..=γ).
+    /// Accepted draft tokens k (0..=γ) — accepted root-path depth for
+    /// tree rounds.
     pub accepted: usize,
     /// Tokens committed this round (k + 1 with the correction/bonus).
     pub committed: usize,
-    /// Key tokens flagged in the window.
+    /// Key tokens flagged in the window (over all tree nodes).
     pub key_tokens: usize,
+    /// Draft nodes verified this round (= γ for chains, tree size
+    /// otherwise) — what one pipeline pass actually carried.
+    pub tree_nodes: usize,
+}
+
+impl RoundRecord {
+    /// A chain-shaped round (tree_nodes = γ).
+    pub fn chain(gamma: usize, accepted: usize, committed: usize, key_tokens: usize) -> RoundRecord {
+        RoundRecord { gamma, accepted, committed, key_tokens, tree_nodes: gamma }
+    }
 }
 
 /// Aggregate acceptance statistics over a run.
@@ -22,8 +35,15 @@ pub struct AcceptanceStats {
     pub accepted_tokens: u64,
     pub committed_tokens: u64,
     pub key_tokens: u64,
+    /// Draft-tree nodes verified (== `draft_tokens` for chain-only runs).
+    pub tree_nodes: u64,
     /// Histogram of k per round, index 0..=γ_max.
     pub accept_hist: Vec<u64>,
+    /// Per-depth acceptance: `depth_hist[d]` counts rounds whose accepted
+    /// root-path reached depth `d` (d >= 1; index 0 unused). A round with
+    /// k accepted tokens increments depths 1..=k, so
+    /// `depth_hist[d] / rounds` is the survival probability of depth `d`.
+    pub depth_hist: Vec<u64>,
 }
 
 impl AcceptanceStats {
@@ -33,10 +53,17 @@ impl AcceptanceStats {
         self.accepted_tokens += r.accepted as u64;
         self.committed_tokens += r.committed as u64;
         self.key_tokens += r.key_tokens as u64;
+        self.tree_nodes += r.tree_nodes as u64;
         if self.accept_hist.len() <= r.gamma {
             self.accept_hist.resize(r.gamma + 1, 0);
         }
         self.accept_hist[r.accepted] += 1;
+        if self.depth_hist.len() <= r.gamma {
+            self.depth_hist.resize(r.gamma + 1, 0);
+        }
+        for d in 1..=r.accepted {
+            self.depth_hist[d] += 1;
+        }
     }
 
     /// Mean accepted draft tokens per round (k̄).
@@ -54,6 +81,23 @@ impl AcceptanceStats {
             return 0.0;
         }
         self.committed_tokens as f64 / self.rounds as f64
+    }
+
+    /// Mean verified tree nodes per round (= γ for chain runs; the width
+    /// one sync round amortizes for tree runs).
+    pub fn mean_tree_nodes(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.tree_nodes as f64 / self.rounds as f64
+    }
+
+    /// Fraction of rounds whose accepted path reached depth `d`.
+    pub fn depth_acceptance(&self, d: usize) -> f64 {
+        if self.rounds == 0 || d == 0 || d >= self.depth_hist.len() {
+            return 0.0;
+        }
+        self.depth_hist[d] as f64 / self.rounds as f64
     }
 
     /// Fraction of drafted tokens accepted (the paper's ρ numerator).
@@ -78,11 +122,18 @@ impl AcceptanceStats {
         self.accepted_tokens += other.accepted_tokens;
         self.committed_tokens += other.committed_tokens;
         self.key_tokens += other.key_tokens;
+        self.tree_nodes += other.tree_nodes;
         if self.accept_hist.len() < other.accept_hist.len() {
             self.accept_hist.resize(other.accept_hist.len(), 0);
         }
         for (i, &c) in other.accept_hist.iter().enumerate() {
             self.accept_hist[i] += c;
+        }
+        if self.depth_hist.len() < other.depth_hist.len() {
+            self.depth_hist.resize(other.depth_hist.len(), 0);
+        }
+        for (i, &c) in other.depth_hist.iter().enumerate() {
+            self.depth_hist[i] += c;
         }
     }
 }
@@ -92,7 +143,11 @@ mod tests {
     use super::*;
 
     fn rec(gamma: usize, accepted: usize, keys: usize) -> RoundRecord {
-        RoundRecord { gamma, accepted, committed: accepted + 1, key_tokens: keys }
+        RoundRecord::chain(gamma, accepted, accepted + 1, keys)
+    }
+
+    fn tree_rec(depth: usize, nodes: usize, accepted: usize) -> RoundRecord {
+        RoundRecord { gamma: depth, accepted, committed: accepted + 1, key_tokens: 0, tree_nodes: nodes }
     }
 
     #[test]
@@ -107,6 +162,9 @@ mod tests {
         assert!((s.key_rate() - 3.0 / 16.0).abs() < 1e-9);
         assert_eq!(s.accept_hist[4], 1);
         assert_eq!(s.accept_hist[6], 1);
+        // chain rounds: one node per drafted token
+        assert_eq!(s.tree_nodes, 16);
+        assert!((s.mean_tree_nodes() - 8.0).abs() < 1e-9);
     }
 
     #[test]
@@ -119,6 +177,8 @@ mod tests {
         assert_eq!(a.rounds, 2);
         assert_eq!(a.accepted_tokens, 10);
         assert_eq!(a.accept_hist.len(), 9);
+        assert_eq!(a.tree_nodes, 12);
+        assert_eq!(a.depth_hist.len(), 9);
     }
 
     #[test]
@@ -126,5 +186,64 @@ mod tests {
         let s = AcceptanceStats::default();
         assert_eq!(s.mean_accepted(), 0.0);
         assert_eq!(s.acceptance_rate(), 0.0);
+        assert_eq!(s.mean_tree_nodes(), 0.0);
+        assert_eq!(s.depth_acceptance(1), 0.0);
+    }
+
+    #[test]
+    fn depth_histogram_counts_survival() {
+        let mut s = AcceptanceStats::default();
+        s.record(tree_rec(3, 14, 3)); // survives depths 1, 2, 3
+        s.record(tree_rec(3, 14, 1)); // survives depth 1
+        s.record(tree_rec(3, 14, 0)); // immediate divergence
+        assert_eq!(s.depth_hist[1], 2);
+        assert_eq!(s.depth_hist[2], 1);
+        assert_eq!(s.depth_hist[3], 1);
+        assert!((s.depth_acceptance(1) - 2.0 / 3.0).abs() < 1e-9);
+        assert!((s.depth_acceptance(3) - 1.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.depth_acceptance(0), 0.0);
+        assert_eq!(s.depth_acceptance(9), 0.0);
+        // survival is monotone non-increasing in depth
+        for d in 1..3 {
+            assert!(s.depth_hist[d] >= s.depth_hist[d + 1]);
+        }
+    }
+
+    #[test]
+    fn mixed_gamma_and_shape_round_streams() {
+        // A serving run can interleave chain rounds (γ=8), small-γ chain
+        // rounds (γ=4), and tree rounds (depth 3, 14 nodes): the
+        // aggregates must stay consistent.
+        let mut s = AcceptanceStats::default();
+        s.record(rec(8, 5, 1));
+        s.record(rec(4, 4, 0));
+        s.record(tree_rec(3, 14, 2));
+        s.record(tree_rec(3, 6, 0));
+        assert_eq!(s.rounds, 4);
+        assert_eq!(s.draft_tokens, 8 + 4 + 3 + 3);
+        assert_eq!(s.accepted_tokens, 5 + 4 + 2);
+        assert_eq!(s.tree_nodes, 8 + 4 + 14 + 6);
+        assert!((s.mean_tree_nodes() - 8.0).abs() < 1e-9);
+        // accept_hist sized by the largest γ seen, depth_hist likewise
+        assert_eq!(s.accept_hist.len(), 9);
+        assert_eq!(s.accept_hist[0], 1);
+        assert_eq!(s.accept_hist[2], 1);
+        assert_eq!(s.accept_hist[4], 1);
+        assert_eq!(s.accept_hist[5], 1);
+        // depths: round1 hits 1..5, round2 hits 1..4, round3 hits 1..2
+        assert_eq!(s.depth_hist[1], 3);
+        assert_eq!(s.depth_hist[2], 3);
+        assert_eq!(s.depth_hist[3], 2);
+        assert_eq!(s.depth_hist[4], 2);
+        assert_eq!(s.depth_hist[5], 1);
+
+        // merging two mixed streams preserves every histogram cell
+        let mut t = AcceptanceStats::default();
+        t.record(tree_rec(5, 20, 5));
+        t.merge(&s);
+        assert_eq!(t.rounds, 5);
+        assert_eq!(t.depth_hist[5], 2);
+        assert_eq!(t.accept_hist[5], 2);
+        assert_eq!(t.tree_nodes, 20 + 32);
     }
 }

@@ -1,0 +1,849 @@
+//! Token-tree speculation: draft trees, tree verification, and the
+//! flattened one-pass verify window.
+//!
+//! The paper's DSD loop amortizes one cross-node sync round over a
+//! γ-token draft *chain*; the accepted length k — the k in the
+//! (N-1)·t1·(k-1)/k communication saving (Eq. 5) — is capped by the first
+//! chain rejection. Tree-structured drafting (the Eagle/Medusa lineage)
+//! verifies many candidate continuations in the same window: a
+//! [`DraftTree`] is built by top-k branching from draft-model logits
+//! under a [`DraftShape`], flattened into **one** verify window
+//! (position ids + ancestor mask, see [`crate::model::TreeWindow`]), and
+//! scored by [`host_verify_tree`], which generalizes
+//! [`host_verify`](crate::spec::reference::host_verify) to select the
+//! longest accepted root-path under both strict (Eagle3) and adaptive
+//! DSD per-node thresholds (Eqs. 7–8 applied per tree node). A
+//! chain-shaped tree (branching = 1) reproduces the chain reference
+//! byte-for-byte — `tests/props.rs` pins that equivalence.
+
+use anyhow::{bail, Result};
+
+use crate::model::{TreeWindow, VerifyKnobs};
+use crate::sampling::{argmax, overlap, sample_cdf, softmax, softmax_with_temp};
+
+const EPS: f32 = 1e-9;
+
+/// Node budget cap for parsed tree shapes (`tree:4x3` would otherwise
+/// expand 4 + 16 + 64 nodes; the cap keeps the flattened verify window —
+/// and with it per-stage compute and hop payloads — bounded).
+pub const DEFAULT_MAX_TREE_NODES: usize = 64;
+
+/// Shape of the per-round draft: a chain (the paper's γ-token window) or
+/// a top-k token tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DraftShape {
+    /// Linear window of `DecodeConfig::gamma` sampled draft tokens.
+    Chain,
+    /// Top-`branching` expansion per node, `depth` levels, at most
+    /// `max_nodes` nodes total. `tree:1xD` is a chain of greedy draft
+    /// tokens and runs on plain causal artifacts.
+    Tree { branching: usize, depth: usize, max_nodes: usize },
+}
+
+impl DraftShape {
+    /// Parse a CLI/config spelling. Accepted forms: `chain`,
+    /// `tree:<branching>x<depth>` (e.g. `tree:4x3`).
+    pub fn parse(s: &str) -> Result<DraftShape> {
+        let err = || {
+            anyhow::anyhow!(
+                "invalid draft shape '{s}': accepted forms are 'chain' or \
+                 'tree:<branching>x<depth>' (e.g. tree:4x3)"
+            )
+        };
+        let s = s.trim();
+        if s == "chain" {
+            return Ok(DraftShape::Chain);
+        }
+        let spec = s.strip_prefix("tree:").ok_or_else(err)?;
+        let (b, d) = spec.split_once('x').ok_or_else(err)?;
+        let branching: usize = b.trim().parse().map_err(|_| err())?;
+        let depth: usize = d.trim().parse().map_err(|_| err())?;
+        if branching == 0 || depth == 0 {
+            return Err(err());
+        }
+        Ok(DraftShape::Tree { branching, depth, max_nodes: DEFAULT_MAX_TREE_NODES })
+    }
+
+    /// Canonical spelling (round-trips through [`DraftShape::parse`]).
+    pub fn name(&self) -> String {
+        match *self {
+            DraftShape::Chain => "chain".to_string(),
+            DraftShape::Tree { branching, depth, .. } => format!("tree:{branching}x{depth}"),
+        }
+    }
+
+    pub fn is_chain(&self) -> bool {
+        matches!(self, DraftShape::Chain)
+    }
+
+    /// Maximum accepted-path length per round (γ for chains).
+    pub fn depth_or(&self, gamma: usize) -> usize {
+        match *self {
+            DraftShape::Chain => gamma,
+            DraftShape::Tree { depth, .. } => depth,
+        }
+    }
+
+    /// Upper bound on drafted nodes per round (= flattened window width
+    /// minus the root slot).
+    pub fn max_nodes_or(&self, gamma: usize) -> usize {
+        match *self {
+            DraftShape::Chain => gamma,
+            DraftShape::Tree { branching, depth, max_nodes } => {
+                // full b-ary tree size, saturating, capped by max_nodes
+                let mut total = 0usize;
+                let mut level = 1usize;
+                for _ in 0..depth {
+                    level = level.saturating_mul(branching);
+                    total = total.saturating_add(level);
+                    if total >= max_nodes {
+                        return max_nodes;
+                    }
+                }
+                total
+            }
+        }
+    }
+}
+
+/// Arena of drafted candidate tokens, in creation (level) order: parents
+/// always precede children, siblings are stored in descending
+/// draft-probability order. Node `n` occupies slot `n + 1` of the
+/// flattened verify window (slot 0 is the last committed token).
+#[derive(Debug, Clone)]
+pub struct DraftTree {
+    tokens: Vec<i32>,
+    /// Parent node index; `None` = child of the committed context.
+    parents: Vec<Option<usize>>,
+    /// 1-based depth (root-path length up to and including this node).
+    depths: Vec<usize>,
+    /// Index of the draft-logits row this node's token was scored from
+    /// (the expansion row of its parent; siblings share it).
+    q_rows: Vec<usize>,
+    /// Draft probability of the token under its row (diagnostic).
+    probs: Vec<f32>,
+    /// Number of expansion rows backing `q_rows` (= rows of `d_logits`).
+    n_expansions: usize,
+    /// Children of each node, sibling order preserved.
+    children: Vec<Vec<usize>>,
+    /// Children of the committed context (depth-1 nodes).
+    root_children: Vec<usize>,
+}
+
+impl DraftTree {
+    /// Build from parallel arrays (checked). `parents[n]`, when present,
+    /// must be `< n`; `q_rows` must be `< n_expansions`.
+    pub fn new(
+        tokens: Vec<i32>,
+        parents: Vec<Option<usize>>,
+        q_rows: Vec<usize>,
+        probs: Vec<f32>,
+        n_expansions: usize,
+    ) -> Result<DraftTree> {
+        let n = tokens.len();
+        if n == 0 {
+            bail!("draft tree must have at least one node");
+        }
+        if parents.len() != n || q_rows.len() != n || probs.len() != n {
+            bail!("draft tree arrays disagree on node count");
+        }
+        let mut depths = vec![0usize; n];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut root_children = Vec::new();
+        for i in 0..n {
+            match parents[i] {
+                None => {
+                    depths[i] = 1;
+                    root_children.push(i);
+                }
+                Some(p) => {
+                    if p >= i {
+                        bail!("draft tree node {i} has parent {p} (parents must precede children)");
+                    }
+                    depths[i] = depths[p] + 1;
+                    children[p].push(i);
+                }
+            }
+            if q_rows[i] >= n_expansions {
+                bail!("draft tree node {i} references missing draft row {}", q_rows[i]);
+            }
+        }
+        Ok(DraftTree {
+            tokens,
+            parents,
+            depths,
+            q_rows,
+            probs,
+            n_expansions,
+            children,
+            root_children,
+        })
+    }
+
+    /// A chain-shaped tree over already-drafted tokens: node `j` is the
+    /// child of node `j-1` and was scored from draft row `j` — the exact
+    /// layout of the chain reference path (draft probs are not recorded).
+    pub fn chain(tokens: &[i32]) -> DraftTree {
+        let n = tokens.len();
+        let parents = (0..n).map(|j| j.checked_sub(1)).collect();
+        let q_rows = (0..n).collect();
+        DraftTree::new(tokens.to_vec(), parents, q_rows, vec![0.0; n], n)
+            .expect("chain layout is always well-formed")
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Maximum node depth (≥ 1).
+    pub fn depth(&self) -> usize {
+        self.depths.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn n_expansions(&self) -> usize {
+        self.n_expansions
+    }
+
+    pub fn token(&self, n: usize) -> i32 {
+        self.tokens[n]
+    }
+
+    pub fn parent(&self, n: usize) -> Option<usize> {
+        self.parents[n]
+    }
+
+    pub fn node_depth(&self, n: usize) -> usize {
+        self.depths[n]
+    }
+
+    pub fn q_row(&self, n: usize) -> usize {
+        self.q_rows[n]
+    }
+
+    pub fn prob(&self, n: usize) -> f32 {
+        self.probs[n]
+    }
+
+    pub fn children(&self, n: usize) -> &[usize] {
+        &self.children[n]
+    }
+
+    pub fn root_children(&self) -> &[usize] {
+        &self.root_children
+    }
+
+    /// True iff this tree is a single root-path (every level has exactly
+    /// one candidate) — such trees verify on plain causal windows.
+    pub fn is_chain_shaped(&self) -> bool {
+        self.root_children.len() <= 1 && self.children.iter().all(|c| c.len() <= 1)
+    }
+
+    /// Draft tokens from the root context to node `n`, inclusive.
+    pub fn path_to(&self, n: usize) -> Vec<i32> {
+        let mut rev = vec![self.tokens[n]];
+        let mut cur = self.parents[n];
+        while let Some(p) = cur {
+            rev.push(self.tokens[p]);
+            cur = self.parents[p];
+        }
+        rev.reverse();
+        rev
+    }
+
+    /// Flatten into the one-pass verify window: slot 0 carries the last
+    /// committed token at `base_pos`, slot `n + 1` carries node `n` at
+    /// `base_pos + depth(n)`, and the mask grants each slot its
+    /// ancestors (plus slot 0) — the tree-attention contract.
+    pub fn window(&self, last_token: i32, base_pos: usize) -> TreeWindow {
+        let n = self.len();
+        let w = n + 1;
+        let mut tokens = Vec::with_capacity(w);
+        tokens.push(last_token);
+        tokens.extend_from_slice(&self.tokens);
+        let mut positions = Vec::with_capacity(w);
+        positions.push(base_pos as i32);
+        positions.extend(self.depths.iter().map(|&d| (base_pos + d) as i32));
+        let mut mask = vec![0.0f32; w * w];
+        mask[0] = 1.0; // root slot attends to itself
+        for i in 0..n {
+            let row = (i + 1) * w;
+            mask[row] = 1.0; // every node sees the committed context
+            mask[row + i + 1] = 1.0; // ... and itself
+            let mut cur = self.parents[i];
+            while let Some(p) = cur {
+                mask[row + p + 1] = 1.0;
+                cur = self.parents[p];
+            }
+        }
+        TreeWindow { tokens, positions, mask }
+    }
+}
+
+/// One draft-model expansion request issued by [`build_tree`]: compute
+/// the draft distribution after consuming `path` on top of the committed
+/// context.
+#[derive(Debug)]
+pub struct Expansion<'a> {
+    /// Node being expanded (`None` = the committed context itself).
+    pub node: Option<usize>,
+    /// Expansion-row index of `node`'s parent (`None` for the root
+    /// expansion) — engine-backed drafters key KV-cache clones on this.
+    pub parent_row: Option<usize>,
+    /// Row index this expansion occupies in the returned `d_logits`.
+    pub row: usize,
+    /// Draft tokens from the root context to `node`, inclusive (empty
+    /// for the root expansion). The token to feed is `path.last()` (or
+    /// the last committed token when empty) at position
+    /// `base + path.len()`.
+    pub path: &'a [i32],
+    /// Depth of the children this expansion produces (1 for the root's).
+    pub child_depth: usize,
+}
+
+/// Indices of the top-`k` logits, descending (ties: lower index first).
+fn top_k(logits: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Grow a [`DraftTree`] by top-k branching, level by level. `expand` is
+/// the draft model: it returns the logits row (length `vocab`) for each
+/// [`Expansion`], issued in row order. Returns the tree plus the stacked
+/// expansion rows (`d_logits`, `[n_expansions, vocab]` flattened) —
+/// exactly the draft-side inputs [`host_verify_tree`] consumes.
+///
+/// For `DraftShape::Chain` the tree is a depth-`gamma` greedy chain
+/// (branching 1); sampled chain drafting stays on the reference path.
+pub fn build_tree<E>(
+    shape: DraftShape,
+    gamma: usize,
+    temp: f32,
+    vocab: usize,
+    mut expand: E,
+) -> Result<(DraftTree, Vec<f32>)>
+where
+    E: FnMut(&Expansion) -> Result<Vec<f32>>,
+{
+    let (branching, depth, cap) = match shape {
+        DraftShape::Chain => (1, gamma, gamma),
+        DraftShape::Tree { branching, depth, max_nodes } => (branching, depth, max_nodes),
+    };
+    if branching == 0 || depth == 0 || cap == 0 {
+        bail!("draft shape must have branching, depth and node budget >= 1");
+    }
+
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut parents: Vec<Option<usize>> = Vec::new();
+    let mut q_rows: Vec<usize> = Vec::new();
+    let mut probs: Vec<f32> = Vec::new();
+    let mut rows: Vec<f32> = Vec::new();
+    let mut n_expansions = 0usize;
+
+    // Frontier of nodes to expand at the current level: (node, its
+    // expansion-row parent, path from root inclusive).
+    let mut frontier: Vec<(Option<usize>, Option<usize>, Vec<i32>)> = vec![(None, None, Vec::new())];
+    let mut p = Vec::new();
+    'levels: for level in 1..=depth {
+        let mut next: Vec<(Option<usize>, Option<usize>, Vec<i32>)> = Vec::new();
+        for (node, parent_row, path) in frontier {
+            if tokens.len() >= cap {
+                break 'levels;
+            }
+            let row = n_expansions;
+            let logits = expand(&Expansion { node, parent_row, row, path: &path, child_depth: level })?;
+            if logits.len() != vocab {
+                bail!("draft expansion returned {} logits, expected vocab {vocab}", logits.len());
+            }
+            softmax_with_temp(&logits, temp, &mut p);
+            let picks = top_k(&logits, branching);
+            rows.extend_from_slice(&logits);
+            n_expansions += 1;
+            for tok in picks {
+                if tokens.len() >= cap {
+                    break;
+                }
+                let idx = tokens.len();
+                tokens.push(tok as i32);
+                parents.push(node);
+                q_rows.push(row);
+                probs.push(p[tok]);
+                if level < depth {
+                    let mut child_path = path.clone();
+                    child_path.push(tok as i32);
+                    next.push((Some(idx), Some(row), child_path));
+                }
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        frontier = next;
+    }
+
+    let tree = DraftTree::new(tokens, parents, q_rows, probs, n_expansions)?;
+    Ok((tree, rows))
+}
+
+/// Outcome of one tree-verification round.
+#[derive(Debug, Clone)]
+pub struct TreeVerifyResult {
+    /// Committed tokens: the accepted root-path, then the
+    /// correction/bonus token (`accepted + 1` entries).
+    pub tokens: Vec<i32>,
+    /// Node indices of the accepted root-path, shallow to deep.
+    pub path: Vec<usize>,
+    /// Accepted path length (`path.len()`).
+    pub accepted: usize,
+    /// Per-node key-token flags (Eq. 7), node order.
+    pub key_flags: Vec<bool>,
+    /// `[n_nodes, 6]` stats rows (same columns as the chain reference):
+    /// h_d, h_t, pt_y, pd_y, normmatch, accept_prob.
+    pub stats: Vec<f32>,
+}
+
+/// Verify a draft tree against target logits for its flattened window.
+///
+/// Generalizes [`host_verify`](crate::spec::reference::host_verify): each
+/// node is scored against its *parent slot's* target row with the chain
+/// rule — key-token classification (Eq. 7) and τ-relaxed mixing (Eq. 8)
+/// applied per node — then the longest accepted root-path is selected
+/// greedily (first accepted sibling in stored order descends). At the
+/// divergence point the correction token is sampled from the residual of
+/// the last rejected sibling's mixed distribution; a fully accepted path
+/// earns the bonus token from the leaf slot's row.
+///
+/// * `t_logits`: `[len+1, vocab]` flattened, row `s` = target output of
+///   window slot `s` (slot 0 is the last committed token).
+/// * `d_logits`: `[n_expansions, vocab]` flattened expansion rows.
+/// * `u_accept`: one uniform per node; `u_sample`: `depth+1` uniforms
+///   indexed by accepted-path length.
+///
+/// With a chain-shaped tree (branching 1) this reproduces `host_verify`
+/// byte-for-byte — the per-node arithmetic is kept operation-for-
+/// operation identical to `reference.rs`.
+pub fn host_verify_tree(
+    tree: &DraftTree,
+    vocab: usize,
+    t_logits: &[f32],
+    d_logits: &[f32],
+    u_accept: &[f32],
+    u_sample: &[f32],
+    knobs: VerifyKnobs,
+) -> TreeVerifyResult {
+    let n = tree.len();
+    assert_eq!(t_logits.len(), (n + 1) * vocab, "t_logits rows");
+    assert_eq!(d_logits.len(), tree.n_expansions() * vocab, "d_logits rows");
+    assert!(u_accept.len() >= n, "one accept uniform per node");
+    assert!(u_sample.len() > tree.depth(), "depth+1 sample uniforms");
+    let greedy = knobs.temp <= 0.0;
+    let inv_temp = if greedy { 1.0 } else { 1.0 / knobs.temp.max(EPS) };
+
+    let mut key_flags = Vec::with_capacity(n);
+    let mut stats = Vec::with_capacity(n * 6);
+    let mut accepts = Vec::with_capacity(n);
+    let mut mix_rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut pd_rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+
+    let mut p_t = Vec::new();
+    let mut p_d = Vec::new();
+    for j in 0..n {
+        let y = tree.token(j) as usize;
+        let tslot = tree.parent(j).map_or(0, |p| p + 1);
+        let qrow = tree.q_row(j);
+        let lt: Vec<f32> = t_logits[tslot * vocab..(tslot + 1) * vocab]
+            .iter()
+            .map(|&x| x * inv_temp)
+            .collect();
+        let ld: Vec<f32> = d_logits[qrow * vocab..(qrow + 1) * vocab]
+            .iter()
+            .map(|&x| x * inv_temp)
+            .collect();
+        softmax(&lt, &mut p_t);
+        softmax(&ld, &mut p_d);
+        let pt_y = p_t[y];
+        let pd_y = p_d[y];
+        let h_d = -(pd_y + EPS).ln();
+        let h_t = -(pt_y + EPS).ln();
+        let normmatch = overlap(&p_t, &p_d);
+        let is_key = knobs.adaptive
+            && (h_d / (h_t + EPS) > knobs.lam1
+                || (pt_y - pd_y).abs() > knobs.lam2
+                || normmatch < knobs.lam3);
+        let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
+
+        // Eq. 8 in log space, renormalized.
+        let log_mix: Vec<f32> = p_t
+            .iter()
+            .zip(&p_d)
+            .map(|(&a, &b)| (1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln())
+            .collect();
+        let mut mix = Vec::new();
+        softmax(&log_mix, &mut mix);
+
+        let (accept, accept_prob) = if greedy {
+            let blend: Vec<f32> = t_logits[tslot * vocab..(tslot + 1) * vocab]
+                .iter()
+                .zip(&d_logits[qrow * vocab..(qrow + 1) * vocab])
+                .map(|(&a, &b)| (1.0 - tau_j) * a + tau_j * b)
+                .collect();
+            let ok = argmax(&blend) == y;
+            (ok, if ok { 1.0 } else { 0.0 })
+        } else {
+            let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+            (u_accept[j] < ratio, ratio)
+        };
+
+        key_flags.push(is_key);
+        stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+        accepts.push(accept);
+        mix_rows.push(mix);
+        pd_rows.push(p_d.clone());
+    }
+
+    // Longest accepted root-path: descend through the first accepted
+    // sibling (stored order = descending draft probability).
+    let mut path: Vec<usize> = Vec::new();
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut cur_slot = 0usize;
+    let mut siblings: &[usize] = tree.root_children();
+    let mut divergence: Option<usize> = None;
+    loop {
+        if siblings.is_empty() {
+            break; // accepted through a leaf: bonus token
+        }
+        match siblings.iter().copied().find(|&c| accepts[c]) {
+            Some(c) => {
+                path.push(c);
+                tokens.push(tree.token(c));
+                cur_slot = c + 1;
+                siblings = tree.children(c);
+            }
+            None => {
+                divergence = Some(*siblings.last().unwrap());
+                break;
+            }
+        }
+    }
+    let accepted = path.len();
+
+    // Correction (divergence) or bonus (leaf) token.
+    let corr = match divergence {
+        Some(rej) => {
+            if greedy {
+                argmax(&t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]) as i32
+            } else {
+                let mix = &mix_rows[rej];
+                let pd = &pd_rows[rej];
+                let mut resid: Vec<f32> = mix
+                    .iter()
+                    .zip(pd)
+                    .map(|(&m, &p)| (m - p).max(0.0))
+                    .collect();
+                let mass: f32 = resid.iter().sum();
+                if mass > EPS {
+                    resid.iter_mut().for_each(|r| *r /= mass);
+                    sample_cdf(&resid, u_sample[accepted]) as i32
+                } else {
+                    sample_cdf(mix, u_sample[accepted]) as i32
+                }
+            }
+        }
+        None => {
+            if greedy {
+                argmax(&t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]) as i32
+            } else {
+                let lt: Vec<f32> = t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]
+                    .iter()
+                    .map(|&x| x * inv_temp)
+                    .collect();
+                let mut bonus = Vec::new();
+                softmax(&lt, &mut bonus);
+                sample_cdf(&bonus, u_sample[accepted]) as i32
+            }
+        }
+    };
+    tokens.push(corr);
+
+    TreeVerifyResult { tokens, path, accepted, key_flags, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parse_shapes() {
+        assert_eq!(DraftShape::parse("chain").unwrap(), DraftShape::Chain);
+        assert_eq!(
+            DraftShape::parse("tree:4x3").unwrap(),
+            DraftShape::Tree { branching: 4, depth: 3, max_nodes: DEFAULT_MAX_TREE_NODES }
+        );
+        assert_eq!(
+            DraftShape::parse(" tree:1x8 ").unwrap(),
+            DraftShape::Tree { branching: 1, depth: 8, max_nodes: DEFAULT_MAX_TREE_NODES }
+        );
+        for bad in ["", "tre:2x2", "tree:0x3", "tree:3x0", "tree:3", "tree:axb", "chains"] {
+            let e = DraftShape::parse(bad).unwrap_err().to_string();
+            assert!(e.contains("accepted forms"), "{bad}: {e}");
+            assert!(e.contains("chain") && e.contains("tree:<branching>x<depth>"), "{e}");
+        }
+    }
+
+    #[test]
+    fn shape_roundtrip_and_bounds() {
+        for s in ["chain", "tree:2x3", "tree:4x3", "tree:1x8"] {
+            let shape = DraftShape::parse(s).unwrap();
+            assert_eq!(DraftShape::parse(&shape.name()).unwrap(), shape);
+        }
+        assert_eq!(DraftShape::Chain.depth_or(8), 8);
+        assert_eq!(DraftShape::Chain.max_nodes_or(8), 8);
+        let t = DraftShape::parse("tree:2x3").unwrap();
+        assert_eq!(t.depth_or(8), 3);
+        assert_eq!(t.max_nodes_or(8), 2 + 4 + 8);
+        let big = DraftShape::parse("tree:4x3").unwrap();
+        assert_eq!(big.max_nodes_or(8), DEFAULT_MAX_TREE_NODES);
+    }
+
+    #[test]
+    fn chain_tree_layout() {
+        let t = DraftTree::chain(&[5, 6, 7]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.depth(), 3);
+        assert!(t.is_chain_shaped());
+        assert_eq!(t.n_expansions(), 3);
+        assert_eq!(t.root_children(), &[0]);
+        assert_eq!(t.children(0), &[1]);
+        assert_eq!(t.children(2), &[] as &[usize]);
+        assert_eq!(t.path_to(2), vec![5, 6, 7]);
+        for j in 0..3 {
+            assert_eq!(t.q_row(j), j);
+            assert_eq!(t.node_depth(j), j + 1);
+        }
+    }
+
+    #[test]
+    fn window_flattening_chain_is_causal() {
+        let t = DraftTree::chain(&[5, 6, 7]);
+        let w = t.window(9, 10);
+        assert_eq!(w.tokens, vec![9, 5, 6, 7]);
+        assert_eq!(w.positions, vec![10, 11, 12, 13]);
+        assert!(w.is_causal());
+    }
+
+    fn synthetic_expand(seed: u64, vocab: usize) -> impl FnMut(&Expansion) -> Result<Vec<f32>> {
+        move |e: &Expansion| {
+            let mut h = seed;
+            for &t in e.path {
+                h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64);
+            }
+            let mut rng = Rng::new(h);
+            Ok((0..vocab).map(|_| rng.normal() as f32 * 2.0).collect())
+        }
+    }
+
+    #[test]
+    fn build_tree_shapes_and_rows() {
+        let shape = DraftShape::Tree { branching: 2, depth: 3, max_nodes: 64 };
+        let (tree, rows) = build_tree(shape, 0, 1.0, 16, synthetic_expand(3, 16)).unwrap();
+        // full 2-ary tree: 2 + 4 + 8 nodes, 1 + 2 + 4 expansions
+        assert_eq!(tree.len(), 14);
+        assert_eq!(tree.depth(), 3);
+        assert_eq!(tree.n_expansions(), 7);
+        assert_eq!(rows.len(), 7 * 16);
+        assert!(!tree.is_chain_shaped());
+        // siblings share their q_row and are distinct tokens
+        let rc = tree.root_children();
+        assert_eq!(rc.len(), 2);
+        assert_eq!(tree.q_row(rc[0]), tree.q_row(rc[1]));
+        assert_ne!(tree.token(rc[0]), tree.token(rc[1]));
+        // siblings in descending draft probability
+        assert!(tree.prob(rc[0]) >= tree.prob(rc[1]));
+        // parents precede children, depths consistent
+        for n in 0..tree.len() {
+            if let Some(p) = tree.parent(n) {
+                assert!(p < n);
+                assert_eq!(tree.node_depth(n), tree.node_depth(p) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn build_tree_respects_node_cap() {
+        let shape = DraftShape::Tree { branching: 4, depth: 3, max_nodes: 10 };
+        let (tree, _) = build_tree(shape, 0, 1.0, 32, synthetic_expand(7, 32)).unwrap();
+        assert_eq!(tree.len(), 10);
+        assert!(tree.depth() <= 3);
+    }
+
+    #[test]
+    fn build_chain_matches_greedy_argmax() {
+        let (tree, rows) = build_tree(DraftShape::Chain, 4, 1.0, 16, synthetic_expand(11, 16)).unwrap();
+        assert_eq!(tree.len(), 4);
+        assert!(tree.is_chain_shaped());
+        assert_eq!(tree.n_expansions(), 4);
+        for j in 0..4 {
+            assert_eq!(tree.token(j) as usize, argmax(&rows[j * 16..(j + 1) * 16]));
+        }
+    }
+
+    #[test]
+    fn tree_window_mask_grants_ancestors_only() {
+        let shape = DraftShape::Tree { branching: 2, depth: 2, max_nodes: 64 };
+        let (tree, _) = build_tree(shape, 0, 1.0, 16, synthetic_expand(5, 16)).unwrap();
+        let w = tree.window(1, 0);
+        let n = tree.len();
+        assert_eq!(w.width(), n + 1);
+        assert!(!w.is_causal());
+        for i in 0..n {
+            let row = (i + 1) * w.width();
+            assert_eq!(w.mask[row], 1.0, "node {i} must see the context slot");
+            assert_eq!(w.mask[row + i + 1], 1.0, "node {i} must see itself");
+            // siblings are mutually invisible
+            if let Some(p) = tree.parent(i) {
+                for &s in tree.children(p) {
+                    if s != i {
+                        assert_eq!(w.mask[row + s + 1], 0.0, "node {i} sees sibling {s}");
+                    }
+                }
+            }
+            // positions follow depth
+            assert_eq!(w.positions[i + 1] as usize, tree.node_depth(i));
+        }
+    }
+
+    #[test]
+    fn greedy_tree_verify_descends_matching_branch() {
+        // Hand-built 1-level tree with 2 candidates; the target argmax
+        // picks the second, so the first must be rejected and the second
+        // accepted (sibling order must not mask deeper acceptance).
+        let vocab = 4;
+        let tree = DraftTree::new(
+            vec![0, 2],
+            vec![None, None],
+            vec![0, 0],
+            vec![0.6, 0.4],
+            1,
+        )
+        .unwrap();
+        // root row: argmax at token 2; node rows unused for acceptance
+        let t_logits = vec![
+            0.0, 0.1, 3.0, 0.2, // slot 0 (root) -> predicts depth-1
+            1.0, 0.0, 0.0, 0.0, // slot 1 (node 0)
+            0.0, 0.0, 0.0, 2.0, // slot 2 (node 1) -> bonus row
+        ];
+        let d_logits = vec![0.5, 0.0, 0.4, 0.0];
+        let out = host_verify_tree(
+            &tree,
+            vocab,
+            &t_logits,
+            &d_logits,
+            &[0.5, 0.5],
+            &[0.5, 0.5],
+            VerifyKnobs::strict(0.0),
+        );
+        assert_eq!(out.accepted, 1);
+        assert_eq!(out.path, vec![1]);
+        // bonus from node 1's slot: argmax = token 3
+        assert_eq!(out.tokens, vec![2, 3]);
+    }
+
+    #[test]
+    fn greedy_tree_verify_rejects_all_and_corrects() {
+        let vocab = 4;
+        let tree =
+            DraftTree::new(vec![0, 1], vec![None, None], vec![0, 0], vec![0.5, 0.5], 1).unwrap();
+        let t_logits = vec![
+            0.0, 0.1, 0.2, 3.0, // root row: argmax 3 != {0, 1}
+            0.0, 0.0, 0.0, 0.0,
+            0.0, 0.0, 0.0, 0.0,
+        ];
+        let d_logits = vec![0.0; 4];
+        let out = host_verify_tree(
+            &tree,
+            vocab,
+            &t_logits,
+            &d_logits,
+            &[0.0, 0.0],
+            &[0.0, 0.0],
+            VerifyKnobs::strict(0.0),
+        );
+        assert_eq!(out.accepted, 0);
+        assert!(out.path.is_empty());
+        assert_eq!(out.tokens, vec![3]); // correction = root-row argmax
+        assert_eq!(out.stats.len(), 2 * 6);
+        assert_eq!(out.key_flags.len(), 2);
+    }
+
+    #[test]
+    fn wider_trees_accept_at_least_as_much_in_expectation() {
+        // With correlated target/draft logits, a branching-4 depth-3 tree
+        // should beat the branching-1 depth-3 chain on mean accepted
+        // length across many seeds (the whole point of trees).
+        let vocab = 32;
+        let mut total = [0usize; 2];
+        for seed in 0..60u64 {
+            for (si, branching) in [1usize, 4].into_iter().enumerate() {
+                let shape = DraftShape::Tree { branching, depth: 3, max_nodes: 64 };
+                let mut rng = Rng::new(0xACCE97 ^ seed);
+                let mut target_of = {
+                    let mut cache: std::collections::HashMap<Vec<i32>, Vec<f32>> =
+                        std::collections::HashMap::new();
+                    move |path: &[i32]| -> Vec<f32> {
+                        cache
+                            .entry(path.to_vec())
+                            .or_insert_with(|| {
+                                let mut h = 0x7A67E7 ^ seed;
+                                for &t in path {
+                                    h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64);
+                                }
+                                let mut r = Rng::new(h);
+                                (0..vocab).map(|_| r.normal() as f32 * 2.0).collect()
+                            })
+                            .clone()
+                    }
+                };
+                // draft = target + noise (correlated but imperfect)
+                let (tree, d_logits) = build_tree(shape, 0, 1.0, vocab, |e| {
+                    let t = target_of(e.path);
+                    let mut h = 0xD4AF7 ^ seed;
+                    for &tok in e.path {
+                        h = h.wrapping_mul(0x100000001B3).wrapping_add(tok as u64);
+                    }
+                    let mut r = Rng::new(h);
+                    Ok(t.iter().map(|&x| 0.6 * x + 0.8 * r.normal() as f32).collect())
+                })
+                .unwrap();
+                let n = tree.len();
+                let mut t_logits = target_of(&[]);
+                for j in 0..n {
+                    t_logits.extend(target_of(&tree.path_to(j)));
+                }
+                let u_accept: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let u_sample: Vec<f32> = (0..=tree.depth()).map(|_| rng.f32()).collect();
+                let out = host_verify_tree(
+                    &tree,
+                    vocab,
+                    &t_logits,
+                    &d_logits,
+                    &u_accept,
+                    &u_sample,
+                    VerifyKnobs::strict(1.0),
+                );
+                total[si] += out.accepted;
+            }
+        }
+        assert!(
+            total[1] > total[0],
+            "tree {} should exceed chain {}",
+            total[1],
+            total[0]
+        );
+    }
+}

@@ -3,6 +3,12 @@
 //! Supports `--key value`, `--key=value`, boolean `--flag`, positional
 //! args, and subcommands. Used by `main.rs`, the examples, and the bench
 //! harnesses.
+//!
+//! Each entry point passes its own `valued` allowlist (option keys that
+//! consume a value). Keys shared across drivers — `nodes`, `link_ms`,
+//! `gamma`, `draft_shape` (`chain` | `tree:<branching>x<depth>`), … —
+//! should be spelled identically everywhere so configs and muscle memory
+//! transfer between `dsd`, the examples, and the benches.
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,33 @@
+//! Shared helpers for the engine-backed integration tests.
+//!
+//! The PJRT integration tests need the AOT artifact directory
+//! (`rust/artifacts/`, produced by `make artifacts`). A bare checkout
+//! doesn't have it, so every engine-backed test opens with
+//! `common::require_artifacts!()` and skips cleanly — tier-1
+//! `cargo test -q` stays green without artifacts while the full suite
+//! runs wherever they exist.
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+pub fn artifacts_present() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+/// Skip (early-return from) the calling test when `artifacts/` is
+/// missing, with a notice on stderr.
+macro_rules! require_artifacts {
+    () => {
+        if !crate::common::artifacts_present() {
+            eprintln!(
+                "skipping (artifacts/ not found — run `make artifacts` to enable \
+                 engine-backed tests)"
+            );
+            return;
+        }
+    };
+}
+pub(crate) use require_artifacts;

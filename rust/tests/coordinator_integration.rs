@@ -12,8 +12,10 @@ use dsd::runtime::Engine;
 use dsd::spec::Policy;
 use dsd::workload::{dataset, WorkloadGen};
 
+mod common;
+
 fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    common::artifacts_dir()
 }
 
 fn engine() -> Rc<Engine> {
@@ -46,6 +48,7 @@ fn requests(n: usize, cfg: &DeployConfig, e: &Rc<Engine>) -> Vec<dsd::workload::
 
 #[test]
 fn all_requests_complete_with_backpressure() {
+    common::require_artifacts!();
     let e = engine();
     let mut cfg = base_cfg();
     cfg.max_batch = 1; // force queuing: 4 requests through 1 slot
@@ -64,6 +67,7 @@ fn all_requests_complete_with_backpressure() {
 
 #[test]
 fn batching_improves_throughput_under_latency() {
+    common::require_artifacts!();
     // With latency-dominated links, interleaving multiple sequences hides
     // link stalls: batch=4 must finish 4 requests much faster than 4x a
     // single request's time.
@@ -91,6 +95,7 @@ fn batching_improves_throughput_under_latency() {
 
 #[test]
 fn dsd_beats_baseline_latency_in_sweet_spot() {
+    common::require_artifacts!();
     // The headline: in the paper's regime the DSD run is faster.
     let e = engine();
     let mut cfg = base_cfg();
@@ -119,6 +124,7 @@ fn dsd_beats_baseline_latency_in_sweet_spot() {
 
 #[test]
 fn harness_accuracy_protocol() {
+    common::require_artifacts!();
     let e = engine();
     let h = Harness::new(e.clone(), "humaneval", 2, 12, 99).unwrap();
     // Base accuracy at temp 1.0 is strictly between 0 and 1 for a
@@ -136,6 +142,7 @@ fn harness_accuracy_protocol() {
 
 #[test]
 fn eagle3_accuracy_matches_base_within_noise() {
+    common::require_artifacts!();
     // Strict speculation is lossless in distribution; with few requests we
     // only check it stays in a plausible band around base accuracy.
     let e = engine();

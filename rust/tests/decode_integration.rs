@@ -18,8 +18,10 @@ use dsd::runtime::Engine;
 use dsd::spec::Policy;
 use dsd::workload::Request;
 
+mod common;
+
 fn artifacts() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    common::artifacts_dir()
 }
 
 fn engine() -> Rc<Engine> {
@@ -51,6 +53,7 @@ fn run(engine: Rc<Engine>, cfg: DeployConfig, prompt: &[i32]) -> Vec<i32> {
 
 #[test]
 fn greedy_strict_speculation_is_lossless_end_to_end() {
+    common::require_artifacts!();
     let e = engine();
     let prompt = vec![3, 141, 59, 26, 53, 58, 97, 9];
     let ar = run(e.clone(), deploy(Policy::Autoregressive, 0.0, 2), &prompt);
@@ -63,6 +66,7 @@ fn greedy_strict_speculation_is_lossless_end_to_end() {
 
 #[test]
 fn greedy_dsd_tau_zero_is_lossless() {
+    common::require_artifacts!();
     let e = engine();
     let prompt = vec![100, 200, 300, 400];
     let ar = run(e.clone(), deploy(Policy::Autoregressive, 0.0, 2), &prompt);
@@ -74,7 +78,24 @@ fn greedy_dsd_tau_zero_is_lossless() {
 }
 
 #[test]
+fn greedy_chain_shaped_tree_is_lossless_end_to_end() {
+    common::require_artifacts!();
+    // tree:1x4 drafts the greedy draft chain and verifies it through the
+    // tree round path (flattened window, host tree verification, KV
+    // compaction no-op): under strict greedy verification the committed
+    // stream is the target argmax path, so it must equal AR exactly.
+    let e = engine();
+    let prompt = vec![3, 141, 59, 26, 53, 58, 97, 9];
+    let ar = run(e.clone(), deploy(Policy::Autoregressive, 0.0, 2), &prompt);
+    let mut cfg = deploy(Policy::Eagle3, 0.0, 2);
+    cfg.decode.shape = dsd::spec::DraftShape::parse("tree:1x4").unwrap();
+    let tree = run(e.clone(), cfg, &prompt);
+    assert_eq!(ar, tree, "chain-shaped tree diverged from AR under greedy strict verify");
+}
+
+#[test]
 fn speculation_commits_at_least_one_token_per_round() {
+    common::require_artifacts!();
     let e = engine();
     let mut cfg = deploy(Policy::Dsd, 1.0, 2);
     cfg.decode.max_new_tokens = 16;
@@ -89,6 +110,7 @@ fn speculation_commits_at_least_one_token_per_round() {
 
 #[test]
 fn dsd_accepts_more_than_strict_at_temperature() {
+    common::require_artifacts!();
     let e = engine();
     let prompt = vec![7, 8, 9, 10, 11];
     let mut strict_cfg = deploy(Policy::Eagle3, 1.0, 2);
@@ -113,6 +135,7 @@ fn dsd_accepts_more_than_strict_at_temperature() {
 
 #[test]
 fn real_cluster_matches_sim_mode_greedy() {
+    common::require_artifacts!();
     let e = engine();
     let prompt = vec![42, 43, 44, 45, 46, 47];
     let sim_tokens = run(e.clone(), deploy(Policy::Eagle3, 0.0, 2), &prompt);
@@ -133,6 +156,7 @@ fn real_cluster_matches_sim_mode_greedy() {
 
 #[test]
 fn autoregressive_comm_cost_matches_eq3() {
+    common::require_artifacts!();
     // AR over N nodes: per token, (N-1) forward hops + 1 return hop at
     // t1 each (zero-bandwidth links).
     let e = engine();

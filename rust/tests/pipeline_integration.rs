@@ -6,7 +6,6 @@
 //! identical inputs (kernel ⇄ host cross-validation; kernel ⇄ jnp oracle
 //! is covered by pytest).
 
-use std::path::PathBuf;
 use std::rc::Rc;
 
 use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs};
@@ -14,9 +13,10 @@ use dsd::runtime::Engine;
 use dsd::spec::host_verify;
 use dsd::util::rng::Rng;
 
+mod common;
+
 fn engine() -> Rc<Engine> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Rc::new(Engine::from_dir(dir).expect("run `make artifacts` first"))
+    Rc::new(Engine::from_dir(common::artifacts_dir()).expect("run `make artifacts` first"))
 }
 
 fn run_pipeline(model: &ShardedModel, tokens: &[i32], pos: usize) -> Vec<f32> {
@@ -43,6 +43,7 @@ fn run_pipeline(model: &ShardedModel, tokens: &[i32], pos: usize) -> Vec<f32> {
 
 #[test]
 fn shard_counts_agree_on_logits() {
+    common::require_artifacts!();
     let e = engine();
     let mut rng = Rng::new(1);
     let tokens: Vec<i32> = (0..5).map(|_| rng.below(512) as i32).collect();
@@ -60,6 +61,7 @@ fn shard_counts_agree_on_logits() {
 
 #[test]
 fn incremental_windows_match_recompute() {
+    common::require_artifacts!();
     // prefill(64-pad over 16 real) + window(5) == one pass over the same
     // 21 tokens — the KV-frontier invariant end to end.
     let e = engine();
@@ -126,6 +128,7 @@ fn incremental_windows_match_recompute() {
 
 #[test]
 fn draft_steps_chain_against_prefill() {
+    common::require_artifacts!();
     // draft prefill over 4 tokens then a step consuming token 5 at pos 4
     // must reproduce the logits row a 5-token prefill puts at row 4.
     let e = engine();
@@ -157,6 +160,7 @@ fn draft_steps_chain_against_prefill() {
 
 #[test]
 fn verify_kernel_matches_host_reference() {
+    common::require_artifacts!();
     let e = engine();
     let model = ShardedModel::new(e.clone(), 2, "d6_s000").unwrap();
     let vocab = e.manifest().model.vocab;

@@ -10,7 +10,7 @@ use dsd::analysis::LatencyModel;
 use dsd::coordinator::{next_action, Action, SeqView};
 use dsd::model::{KvCache, KvPool, VerifyKnobs};
 use dsd::sampling::{sample_cdf, softmax};
-use dsd::spec::host_verify;
+use dsd::spec::{build_tree, host_verify, host_verify_tree, DraftShape, DraftTree};
 use dsd::util::json::{self, Value};
 use dsd::util::rng::Rng;
 
@@ -119,6 +119,91 @@ fn prop_tau_never_hurts_expected_acceptance() {
         relaxed_total >= strict_total,
         "relaxed {relaxed_total} < strict {strict_total}"
     );
+}
+
+#[test]
+fn prop_chain_tree_matches_host_verify_exactly() {
+    // Differential test: for any seed/γ/temperature/knobs, verifying a
+    // chain-shaped (branching=1) tree must reproduce the chain reference
+    // path byte-for-byte — committed tokens, acceptance, key flags, and
+    // bit-identical stats rows.
+    forall2(250, |rng| {
+        let gamma = [1usize, 2, 4, 8][rng.below(4) as usize];
+        let vocab = 64;
+        let (t, d, toks, ua, us) = random_verify_case(rng, gamma, vocab);
+        let knobs = random_knobs(rng);
+        let chain = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+        let tree = DraftTree::chain(&toks);
+        let out = host_verify_tree(&tree, vocab, &t, &d, &ua, &us, knobs);
+        assert_eq!(out.tokens, chain.tokens, "committed tokens diverged");
+        assert_eq!(out.accepted, chain.accepted);
+        assert_eq!(out.key_flags, chain.key_flags);
+        assert_eq!(out.stats.len(), chain.stats.len());
+        for (i, (a, b)) in out.stats.iter().zip(&chain.stats).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "stats[{i}] not bit-identical: {a} vs {b}");
+        }
+        // the accepted path is the leading chain prefix
+        assert_eq!(out.path, (0..out.accepted).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn prop_tree_verify_wellformed() {
+    // Random shapes, random correlated logits: the tree verdict is
+    // always a root-path plus exactly one correction/bonus token, with
+    // stats/key rows for every node.
+    forall2(150, |rng| {
+        let vocab = 32;
+        let branching = 1 + rng.below(4) as usize;
+        let depth = 1 + rng.below(4) as usize;
+        let max_nodes = 1 + rng.below(40) as usize;
+        let shape = DraftShape::Tree { branching, depth, max_nodes };
+        let corr = rng.f32();
+        let seed = rng.next_u64();
+        let target_row = |path: &[i32]| -> Vec<f32> {
+            let mut h = seed;
+            for &t in path {
+                h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64 ^ 0x9E37);
+            }
+            let mut r = Rng::new(h);
+            (0..vocab).map(|_| r.normal() as f32 * 2.5).collect()
+        };
+        let (tree, d_logits) = build_tree(shape, 0, 1.0, vocab, |e| {
+            let t = target_row(e.path);
+            let mut r = Rng::new(seed ^ (e.row as u64 + 1).wrapping_mul(0xDEAD_BEEF));
+            Ok(t.iter().map(|&x| corr * x + (1.0 - corr) * r.normal() as f32 * 2.5).collect())
+        })
+        .unwrap();
+        let n = tree.len();
+        assert!(n <= max_nodes);
+        assert!(tree.depth() <= depth);
+        let mut t_logits = target_row(&[]);
+        for j in 0..n {
+            t_logits.extend(target_row(&tree.path_to(j)));
+        }
+        let ua: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let us: Vec<f32> = (0..=tree.depth()).map(|_| rng.f32()).collect();
+        let knobs = random_knobs(rng);
+        let out = host_verify_tree(&tree, vocab, &t_logits, &d_logits, &ua, &us, knobs);
+        assert_eq!(out.tokens.len(), out.accepted + 1);
+        assert!(out.accepted <= tree.depth());
+        assert_eq!(out.path.len(), out.accepted);
+        assert_eq!(out.key_flags.len(), n);
+        assert_eq!(out.stats.len(), n * 6);
+        assert!(out.tokens.iter().all(|&t| (0..vocab as i32).contains(&t)));
+        // the path is a root-path: depths 1..=k, each node the parent of
+        // the next, and committed tokens mirror the path tokens
+        for (step, &node) in out.path.iter().enumerate() {
+            assert_eq!(tree.node_depth(node), step + 1);
+            assert_eq!(out.tokens[step], tree.token(node));
+            if step > 0 {
+                assert_eq!(tree.parent(node), Some(out.path[step - 1]));
+            }
+        }
+        if !knobs.adaptive {
+            assert!(out.key_flags.iter().all(|&k| !k));
+        }
+    });
 }
 
 #[test]

@@ -10,8 +10,10 @@ use std::path::{Path, PathBuf};
 use dsd::runtime::{Engine, HostTensor};
 use dsd::util::json;
 
+mod common;
+
 fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    common::artifacts_dir()
 }
 
 fn golden_dir() -> PathBuf {
@@ -96,6 +98,7 @@ fn load_index() -> json::Value {
 
 #[test]
 fn golden_target_full_window() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     let index = load_index();
     run_case(&engine, &index, "target_full8_w5", 1e-3);
@@ -103,6 +106,7 @@ fn golden_target_full_window() {
 
 #[test]
 fn golden_pipeline_stages_with_layer_base() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     let index = load_index();
     run_case(&engine, &index, "target_first4_w5", 1e-3);
@@ -111,6 +115,7 @@ fn golden_pipeline_stages_with_layer_base() {
 
 #[test]
 fn golden_draft_step() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     let index = load_index();
     run_case(&engine, &index, "draft2_step", 1e-3);
@@ -118,6 +123,7 @@ fn golden_draft_step() {
 
 #[test]
 fn golden_verify_kernel_all_modes() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     let index = load_index();
     for tag in ["strict", "adaptive", "greedy"] {
@@ -127,6 +133,7 @@ fn golden_verify_kernel_all_modes() {
 
 #[test]
 fn engine_validates_input_shapes() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     let bad = vec![HostTensor::zeros_f32(&[3, 3])];
     assert!(engine.run("verify_g4", "target", 0, &bad).is_err());
@@ -134,6 +141,7 @@ fn engine_validates_input_shapes() {
 
 #[test]
 fn engine_reuses_compilations() {
+    common::require_artifacts!();
     let engine = Engine::from_dir(artifacts_dir()).unwrap();
     engine.ensure_compiled("verify_g4").unwrap();
     engine.ensure_compiled("verify_g4").unwrap();

@@ -1,0 +1,170 @@
+//! Stub of the PJRT/XLA binding surface used by `dsd::runtime::Engine`.
+//!
+//! The offline build environment has no PJRT shared library, so this
+//! crate provides the exact API shape the engine compiles against and
+//! fails at *runtime* with an actionable message. Everything that needs
+//! the real runtime (integration tests, engine-backed benches) detects
+//! the missing `artifacts/` directory and skips, so the stub is never
+//! exercised by `cargo test -q` on a bare checkout.
+//!
+//! A real deployment swaps this crate for the actual binding (same
+//! types, same method signatures) via the `xla` path dependency in
+//! `rust/Cargo.toml`.
+
+// Stub types mirror the full binding surface; several variants/fields
+// exist only for signature compatibility.
+#![allow(dead_code)]
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the binding's: implements `std::error::Error`,
+/// so it converts into `anyhow::Error` at call sites.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (this build links the vendored \
+         stub `xla` crate; install the real PJRT binding and point the \
+         `xla` path dependency at it to execute artifacts)"
+    ))
+}
+
+/// Element dtypes the engine decodes from literals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    F16,
+    Pred,
+}
+
+/// Host-native element types accepted by `buffer_from_host_buffer`.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+/// Parsed HLO module (stub: holds nothing).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "parsing HLO text {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// An XLA computation handle (stub).
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-resident buffer (stub).
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("downloading buffer"))
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing computation"))
+    }
+}
+
+/// PJRT client (stub). `cpu()` is the constructor the engine calls first,
+/// so a missing runtime surfaces immediately with a clear error.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("creating PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling computation"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("uploading host buffer"))
+    }
+}
+
+/// Array shape of a literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host-side literal value (stub).
+pub struct Literal(());
+
+impl Literal {
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(unavailable("reading literal shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("reading literal data"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("decomposing tuple literal"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_with_actionable_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+}
