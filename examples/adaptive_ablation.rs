@@ -44,7 +44,8 @@ fn main() -> anyhow::Result<()> {
             prefill_logits = o.data;
         }
     }
-    let first = dsd::sampling::argmax(&prefill_logits[(prompt.len() - 1) * m.vocab..prompt.len() * m.vocab]) as i32;
+    let last_row = &prefill_logits[(prompt.len() - 1) * m.vocab..prompt.len() * m.vocab];
+    let first = dsd::sampling::argmax(last_row) as i32;
     let mut committed = prompt.clone();
     committed.push(first);
     let i = committed.len() - 1;
@@ -79,7 +80,8 @@ fn main() -> anyhow::Result<()> {
     let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
     let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
     for tau in [0.0f32, 0.3, 0.6] {
-        let knobs = VerifyKnobs { tau, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
+        let knobs =
+            VerifyKnobs { tau, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
         let (out, _) = model.verify.run(
             gamma,
             t_logits.clone(),

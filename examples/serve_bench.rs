@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
         ("dsd", Policy::Dsd, false),
         ("dsd + interleave", Policy::Dsd, true),
     ] {
-        let mut cluster = RealCluster::launch("artifacts", nodes, link.clone(), profile.draft_variant)?;
+        let mut cluster =
+            RealCluster::launch("artifacts", nodes, link.clone(), profile.draft_variant)?;
         let cfg = DecodeConfig {
             policy,
             gamma,
@@ -107,6 +108,9 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     table.print();
-    println!("\n(every hop above was a real thread-to-thread message with {link_ms}ms injected latency)");
+    println!(
+        "\n(every hop above was a real thread-to-thread message with {link_ms}ms injected \
+         latency)"
+    );
     Ok(())
 }

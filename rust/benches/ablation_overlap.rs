@@ -1,0 +1,178 @@
+//! Speculate-ahead scheduler ablation: sequential vs overlap round
+//! scheduling across link latency × draft window length, with the
+//! byte-identical-commit check run inline.
+//!
+//! The sweep is **engine-free**: both modes run the
+//! [`OracleChainDecoder`] twin of `DecodeEngine::round_speculative` —
+//! a seeded synthetic logit oracle for draft/target, `PipelineSim` for
+//! all timing, `host_verify` for acceptance — differing ONLY in the
+//! `overlap` flag. For every configuration the bench asserts the two
+//! modes committed the exact same token stream (the differential
+//! property `tests/overlap_differential.rs` sweeps more broadly), then
+//! reports where the recovered drafting time lands.
+//!
+//! Expected shape of the result: overlap is never slower, hides
+//! (almost) all pre-draft work inside the in-flight verify window, and
+//! converts reused pre-drafts into an end-to-end speedup that grows as
+//! the draft cost share of the round grows — the bench prints an
+//! explicit PASS/FAIL line for "speedup at every link_ms >= 5" and
+//! exits nonzero on failure, so CI can run it as an engine-free smoke.
+//!
+//! Run: `cargo bench --bench ablation_overlap` \
+//!      `-- [--gammas 2,4,8] [--link_ms 2,5,15] [--rounds 200]`
+
+use dsd::coordinator::{OracleChainDecoder, OracleConfig};
+use dsd::model::VerifyKnobs;
+use dsd::util::cli;
+use dsd::util::table::{fnum, Table};
+
+struct ModeRun {
+    committed: Vec<i32>,
+    tokens: u64,
+    finish_ns: u64,
+    reuse_rate: f64,
+    overlap_ratio: f64,
+    wasted_per_round: f64,
+    recovered_ms: f64,
+}
+
+fn run_mode(base: &OracleConfig, overlap: bool, rounds: usize) -> anyhow::Result<ModeRun> {
+    let cfg = OracleConfig { overlap, ..base.clone() };
+    let mut dec = OracleChainDecoder::new(cfg, &[2, 7, 1, 8])?;
+    let mut tokens = 0u64;
+    let mut pre_drafted = 0u64;
+    let mut reused = 0u64;
+    let mut wasted = 0u64;
+    let mut overlap_ns = 0u64;
+    let mut pre_draft_ns = 0u64;
+    let mut recovered_ns = 0u64;
+    for _ in 0..rounds {
+        let r = dec.round();
+        tokens += r.committed.len() as u64;
+        pre_drafted += r.pre_drafted as u64;
+        reused += r.reused as u64;
+        wasted += r.wasted as u64;
+        overlap_ns += r.overlap_ns;
+        pre_draft_ns += r.pre_draft_ns;
+        recovered_ns += r.recovered_ns;
+    }
+    Ok(ModeRun {
+        committed: dec.committed.clone(),
+        tokens,
+        finish_ns: dec.finish_time(),
+        reuse_rate: if pre_drafted == 0 { 0.0 } else { reused as f64 / pre_drafted as f64 },
+        overlap_ratio: if pre_draft_ns == 0 {
+            0.0
+        } else {
+            overlap_ns as f64 / pre_draft_ns as f64
+        },
+        wasted_per_round: wasted as f64 / rounds.max(1) as f64,
+        recovered_ms: recovered_ns as f64 / 1e6,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &[
+            "gammas", "link_ms", "rounds", "nodes", "vocab", "corr", "seed", "policy", "temp",
+            "draft_step_us",
+        ],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let rounds = args.usize_or("rounds", 200)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let vocab = args.usize_or("vocab", 64)?;
+    let corr = args.f64_or("corr", 0.85)? as f32;
+    let seed = args.u64_or("seed", 20250710)?;
+    let temp = args.f64_or("temp", 1.0)? as f32;
+    let gammas = args.usize_list_or("gammas", &[2, 4, 8])?;
+    let links = args.f64_list_or("link_ms", &[2.0, 5.0, 15.0])?;
+    let draft_step_ns = (args.f64_or("draft_step_us", 600.0)? * 1e3) as u64;
+    let policy = args.str_or("policy", "dsd");
+    let knobs = match policy.as_str() {
+        "eagle3" | "strict" => VerifyKnobs::strict(temp),
+        _ => VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp, adaptive: true },
+    };
+
+    println!(
+        "# Speculate-ahead ablation ({policy}; N={nodes}, vocab={vocab}, corr={corr}, \
+         temp={temp}, draft step {:.2}ms, {rounds} rounds per cell)",
+        draft_step_ns as f64 / 1e6
+    );
+
+    let mut all_identical = true;
+    let mut total_reused = 0.0f64;
+    let mut fail_links: Vec<f64> = Vec::new();
+    for &link_ms in &links {
+        let mut table = Table::new(
+            format!("sequential vs overlap @ t1={link_ms}ms"),
+            &[
+                "γ", "seq ms/tok", "ovl ms/tok", "speedup", "reuse %", "hidden %", "wasted/rnd",
+                "recovered ms", "tokens ==",
+            ],
+        );
+        let mut link_seq_ns = 0u64;
+        let mut link_ovl_ns = 0u64;
+        for &gamma in &gammas {
+            let base = OracleConfig {
+                vocab,
+                corr,
+                gamma,
+                temp,
+                knobs,
+                seed,
+                nodes,
+                link_ms,
+                draft_step_ns,
+                ..Default::default()
+            };
+            let seq = run_mode(&base, false, rounds)?;
+            let ovl = run_mode(&base, true, rounds)?;
+            let identical = seq.committed == ovl.committed;
+            all_identical &= identical;
+            total_reused += ovl.reuse_rate;
+            link_seq_ns += seq.finish_ns;
+            link_ovl_ns += ovl.finish_ns;
+            let seq_ms_tok = seq.finish_ns as f64 / 1e6 / seq.tokens.max(1) as f64;
+            let ovl_ms_tok = ovl.finish_ns as f64 / 1e6 / ovl.tokens.max(1) as f64;
+            table.row(vec![
+                gamma.to_string(),
+                fnum(seq_ms_tok, 3),
+                fnum(ovl_ms_tok, 3),
+                fnum(seq_ms_tok / ovl_ms_tok, 3),
+                fnum(ovl.reuse_rate * 100.0, 1),
+                fnum(ovl.overlap_ratio * 100.0, 1),
+                fnum(ovl.wasted_per_round, 2),
+                fnum(ovl.recovered_ms, 2),
+                if identical { "OK".to_string() } else { "DIVERGED".to_string() },
+            ]);
+        }
+        table.print();
+        println!();
+        if link_ms >= 5.0 && link_ovl_ns >= link_seq_ns {
+            fail_links.push(link_ms);
+        }
+    }
+
+    println!(
+        "differential     {}",
+        if all_identical {
+            "PASS (overlap committed byte-identical streams to sequential in every cell)"
+        } else {
+            "FAIL (overlap diverged from sequential — scheduler bug)"
+        }
+    );
+    let speedup_ok = fail_links.is_empty() && total_reused > 0.0;
+    println!(
+        "speedup criterion {}",
+        if speedup_ok {
+            "PASS (overlap strictly faster at every link_ms >= 5, with nonzero reuse)"
+        } else {
+            "FAIL (no end-to-end win at link_ms >= 5 — check calibration)"
+        }
+    );
+    if !all_identical || !speedup_ok {
+        anyhow::bail!("ablation_overlap smoke criteria failed");
+    }
+    Ok(())
+}

@@ -106,14 +106,16 @@ fn run_shape(
     let mut tokens = 0u64;
 
     for _ in 0..rounds {
-        let (tree, d_logits) =
-            build_tree(shape, shape.depth_or(4), 1.0, oracle.vocab, |e| Ok(oracle.draft(&ctx, e.path)))?;
+        let (tree, d_logits) = build_tree(shape, shape.depth_or(4), 1.0, oracle.vocab, |e| {
+            Ok(oracle.draft(&ctx, e.path))
+        })?;
         let n = tree.len();
 
         // leader-local drafting: one draft step per expansion
         let draft_done = sim.local_work(now, tree.n_expansions() as u64 * draft_step_ns);
         // ONE flattened pipeline pass, width = nodes + root slot
-        let timing = sim.window_pass(draft_done, n + 1, &per_token_stage, d_model * 4, oracle.vocab * 4);
+        let timing =
+            sim.window_pass(draft_done, n + 1, &per_token_stage, d_model * 4, oracle.vocab * 4);
         // target logits for every window slot (root context + each path)
         let mut t_logits = oracle.target(&ctx, &[]);
         for j in 0..n {
@@ -121,7 +123,15 @@ fn run_shape(
         }
         let u_accept: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
         let u_sample: Vec<f32> = (0..=tree.depth()).map(|_| rng.f32()).collect();
-        let out = host_verify_tree(&tree, oracle.vocab, &t_logits, &d_logits, &u_accept, &u_sample, knobs);
+        let out = host_verify_tree(
+            &tree,
+            oracle.vocab,
+            &t_logits,
+            &d_logits,
+            &u_accept,
+            &u_sample,
+            knobs,
+        );
         now = sim.local_work(timing.finish, verify_base_ns + n as u64 * verify_per_node_ns);
 
         ctx.extend_from_slice(&out.tokens);
@@ -132,6 +142,7 @@ fn run_shape(
             committed: out.tokens.len(),
             key_tokens: out.key_flags.iter().filter(|&&k| k).count(),
             tree_nodes: n,
+            ..Default::default()
         });
     }
 
@@ -188,7 +199,9 @@ fn main() -> anyhow::Result<()> {
         );
         let mut runs: Vec<ShapeRun> = Vec::new();
         for shape in &shapes {
-            let label = if shape.is_chain() || matches!(shape, DraftShape::Tree { branching: 1, .. }) {
+            let chainlike =
+                shape.is_chain() || matches!(shape, DraftShape::Tree { branching: 1, .. });
+            let label = if chainlike {
                 format!("{} (chain)", shape.name())
             } else {
                 shape.name()

@@ -84,6 +84,9 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t.print();
-    println!("\n(Eq. 9 folds drafting/verification into ρ; measured includes them explicitly,\n so predicted ≳ measured by a modest factor is the expected relationship)");
+    println!(
+        "\n(Eq. 9 folds drafting/verification into ρ; measured includes them explicitly,\n \
+         so predicted ≳ measured by a modest factor is the expected relationship)"
+    );
     Ok(())
 }

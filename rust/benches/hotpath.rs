@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
     let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
     let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
-    let knobs = VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
+    let knobs =
+        VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
     let r = bench("verify kernel g=8 (engine)", 3, 30, || {
         let _ = model
             .verify

@@ -31,7 +31,10 @@ fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = Rc::new(Engine::from_dir(dir)?);
 
-    println!("# Table 1 — results and ablations (N={nodes}, t1={link_ms}ms, {requests} req x {tokens} tok)");
+    println!(
+        "# Table 1 — results and ablations (N={nodes}, t1={link_ms}ms, {requests} req x \
+         {tokens} tok)"
+    );
 
     // ---- Block 1: HumanEval, model A (Llama3.1-8B analog = d6_s000) ----
     block_dataset(&engine, "humaneval", "Llama-analog", requests, tokens, nodes, link_ms, seed)?;

@@ -59,6 +59,8 @@ fn main() -> anyhow::Result<()> {
         }
     }
     t.print();
-    println!("\n(accuracy = agreement-based proxy vs the target-greedy reference; see DESIGN.md §5)");
+    println!(
+        "\n(accuracy = agreement-based proxy vs the target-greedy reference; see DESIGN.md §5)"
+    );
     Ok(())
 }

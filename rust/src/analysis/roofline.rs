@@ -52,7 +52,13 @@ impl TpuLikeRoofline {
     /// Roofline point for processing a window of `w` positions through the
     /// model with `context` tokens of KV history, weights in `wbytes`
     /// bytes per element.
-    pub fn window_point(&self, dims: &ModelDims, w: usize, context: usize, label: &str) -> RooflinePoint {
+    pub fn window_point(
+        &self,
+        dims: &ModelDims,
+        w: usize,
+        context: usize,
+        label: &str,
+    ) -> RooflinePoint {
         let flops = transformer_window_flops(dims, w, context);
         let bytes = transformer_window_bytes(dims, w, context);
         let intensity = flops / bytes;
@@ -66,7 +72,12 @@ impl TpuLikeRoofline {
     }
 
     /// The Fig. 1 series: decode (W=1), verify windows, prefill.
-    pub fn figure1(&self, dims: &ModelDims, gammas: &[usize], context: usize) -> Vec<RooflinePoint> {
+    pub fn figure1(
+        &self,
+        dims: &ModelDims,
+        gammas: &[usize],
+        context: usize,
+    ) -> Vec<RooflinePoint> {
         let mut pts = vec![self.window_point(dims, 1, context, "decode W=1")];
         for &g in gammas {
             pts.push(self.window_point(

@@ -18,12 +18,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::topology::LinkModel;
+use crate::coordinator::overlap::{accept_uniform, draft_uniform, sample_uniform, stream_seed};
 use crate::model::kv::KvCache;
 use crate::model::shard::{plan_shards, ShardSpec};
 use crate::model::{DraftExecutor, StageExecutor, StageInput, VerifyExecutor, VerifyKnobs};
 use crate::runtime::Engine;
+use crate::sampling::sample_logits_with;
 use crate::spec::{AcceptanceStats, DecodeConfig, Policy, RoundRecord};
-use crate::util::rng::Rng;
 
 /// Wire messages between node threads.
 enum Wire {
@@ -213,7 +214,13 @@ impl RealCluster {
     }
 
     /// Serve one request end-to-end (speculative or AR per `cfg`).
-    pub fn serve_one(&mut self, id: u64, prompt: &[i32], cfg: &DecodeConfig) -> Result<(RealResult, AcceptanceStats)> {
+    pub fn serve_one(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        cfg: &DecodeConfig,
+    ) -> Result<(RealResult, AcceptanceStats)> {
+        cfg.validate()?;
         if !cfg.shape.is_chain() {
             bail!(
                 "the real-cluster driver decodes chain windows only; tree draft \
@@ -222,9 +229,14 @@ impl RealCluster {
                 cfg.shape.name()
             );
         }
+        if prompt.is_empty() {
+            bail!("request {id} has an empty prompt — prefill needs at least one token");
+        }
         let t_start = Instant::now();
         let m = self.dims();
-        let mut rng = Rng::new(cfg.seed ^ id);
+        // Position-keyed uniforms, the same streams the sim-mode decode
+        // engine draws from — real mode commits identical token streams.
+        let sseed = stream_seed(cfg.seed, id);
         let mut committed = prompt.to_vec();
         let plen = committed.len();
 
@@ -242,7 +254,8 @@ impl RealCluster {
             dcache.1 = plen;
         }
         let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
-        committed.push(crate::sampling::sample_logits(row, cfg.temp, &mut rng) as i32);
+        let u0 = sample_uniform(sseed, plen - 1, 0);
+        committed.push(sample_logits_with(row, cfg.temp, u0) as i32);
 
         let mut accept = AcceptanceStats::default();
         let mut rounds = 0u64;
@@ -254,11 +267,12 @@ impl RealCluster {
                 Policy::Autoregressive => {
                     let pos = committed.len() - 1;
                     let logits = self.window_pass(id, &committed[pos..=pos], pos)?;
-                    let tok = crate::sampling::sample_logits(&logits[..m.vocab], cfg.temp, &mut rng);
+                    let u = sample_uniform(sseed, pos, 0);
+                    let tok = sample_logits_with(&logits[..m.vocab], cfg.temp, u);
                     committed.push(tok as i32);
                 }
                 Policy::Eagle3 | Policy::Dsd => {
-                    let out = self.speculative_round(id, &mut committed, cfg, &mut rng)?;
+                    let out = self.speculative_round(id, &mut committed, cfg, sseed)?;
                     accept.record(RoundRecord::chain(cfg.gamma, out.0, out.1, out.2));
                 }
             }
@@ -281,18 +295,18 @@ impl RealCluster {
         id: u64,
         committed: &mut Vec<i32>,
         cfg: &DecodeConfig,
-        rng: &mut Rng,
+        sseed: u64,
     ) -> Result<(usize, usize, usize)> {
         let m = self.dims();
         let gamma = cfg.gamma;
         let i = committed.len() - 1;
-        let (d_tokens, d_logits) = self.draft_window(id, committed, gamma, cfg.temp, rng)?;
+        let (d_tokens, d_logits) = self.draft_window(id, committed, gamma, cfg.temp, sseed)?;
         let mut window = Vec::with_capacity(gamma + 1);
         window.push(committed[i]);
         window.extend_from_slice(&d_tokens);
         let t_logits = self.window_pass(id, &window, i)?;
-        let u_accept: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
-        let u_sample: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+        let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
+        let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
         let knobs = VerifyKnobs {
             tau: cfg.tau,
             lam1: cfg.lam1,
@@ -306,7 +320,7 @@ impl RealCluster {
             .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
         // draft frontier: rows valid through position i + min(k, γ-1)
         if let Some(entry) = self.draft_caches.get_mut(&id) {
-            entry.1 = i + out.accepted.min(gamma - 1) + 1;
+            entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
         }
         committed.extend_from_slice(&out.tokens);
         let _ = m;
@@ -324,7 +338,7 @@ impl RealCluster {
         committed: &[i32],
         gamma: usize,
         temp: f32,
-        rng: &mut Rng,
+        sseed: u64,
     ) -> Result<(Vec<i32>, Vec<f32>)> {
         let i = committed.len() - 1;
         let (cache, frontier) = self
@@ -334,12 +348,12 @@ impl RealCluster {
         let mut d_tokens = Vec::with_capacity(gamma);
         let mut d_logits = Vec::new();
         for pos in *frontier..i {
-            let u = rng.f32();
+            let u = draft_uniform(sseed, pos);
             self.draft.step(committed[pos], cache, pos, temp, u)?;
         }
         let mut prev = committed[i];
         for j in 0..gamma {
-            let u = rng.f32();
+            let u = draft_uniform(sseed, i + j);
             let (tok, logits, _) = self.draft.step(prev, cache, i + j, temp, u)?;
             d_tokens.push(tok);
             d_logits.extend_from_slice(&logits);
@@ -361,6 +375,7 @@ impl RealCluster {
         depth: usize,
     ) -> Result<Vec<RealResult>> {
         use std::collections::VecDeque;
+        cfg.validate()?;
         if !cfg.shape.is_chain() {
             bail!(
                 "the real-cluster driver decodes chain windows only; tree draft \
@@ -373,15 +388,18 @@ impl RealCluster {
             id: u64,
             committed: Vec<i32>,
             plen: usize,
-            rng: Rng,
+            sseed: u64,
             rounds: u64,
             start: Instant,
             done: bool,
         }
         let mut runs: Vec<Run> = Vec::new();
         for (id, prompt) in requests {
+            if prompt.is_empty() {
+                bail!("request {id} has an empty prompt — prefill needs at least one token");
+            }
             let start = Instant::now();
-            let mut rng = Rng::new(cfg.seed ^ id);
+            let sseed = stream_seed(cfg.seed, *id);
             let mut committed = prompt.clone();
             let plen = committed.len();
             let mut padded = committed.clone();
@@ -395,8 +413,9 @@ impl RealCluster {
             self.draft.prefill(&padded, &mut dc.0)?;
             dc.1 = plen;
             let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
-            committed.push(crate::sampling::sample_logits(row, cfg.temp, &mut rng) as i32);
-            runs.push(Run { id: *id, committed, plen, rng, rounds: 0, start, done: false });
+            let u = sample_uniform(sseed, plen - 1, 0);
+            committed.push(sample_logits_with(row, cfg.temp, u) as i32);
+            runs.push(Run { id: *id, committed, plen, sseed, rounds: 0, start, done: false });
         }
 
         // In-flight window: (run index, draft tokens, draft logits, i).
@@ -429,12 +448,12 @@ impl RealCluster {
                     let mut d_tokens = Vec::with_capacity(gamma);
                     let mut d_logits = Vec::new();
                     for pos in *frontier..i {
-                        let u = run.rng.f32();
+                        let u = draft_uniform(run.sseed, pos);
                         self.draft.step(run.committed[pos], cache, pos, cfg.temp, u)?;
                     }
                     let mut prev = run.committed[i];
                     for j in 0..gamma {
-                        let u = run.rng.f32();
+                        let u = draft_uniform(run.sseed, i + j);
                         let (tok, logits, _) = self.draft.step(prev, cache, i + j, cfg.temp, u)?;
                         d_tokens.push(tok);
                         d_logits.extend_from_slice(&logits);
@@ -469,8 +488,8 @@ impl RealCluster {
             };
             let t_logits = self.recv_logits(runs[ri].id)?;
             let run = &mut runs[ri];
-            let u_accept: Vec<f32> = (0..gamma).map(|_| run.rng.f32()).collect();
-            let u_sample: Vec<f32> = (0..=gamma).map(|_| run.rng.f32()).collect();
+            let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(run.sseed, i, j)).collect();
+            let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(run.sseed, i, j)).collect();
             let knobs = VerifyKnobs {
                 tau: cfg.tau,
                 lam1: cfg.lam1,
@@ -483,7 +502,7 @@ impl RealCluster {
                 .verify
                 .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
             if let Some(entry) = self.draft_caches.get_mut(&run.id) {
-                entry.1 = i + out.accepted.min(gamma - 1) + 1;
+                entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
             }
             run.committed.extend_from_slice(&out.tokens);
             run.rounds += 1;

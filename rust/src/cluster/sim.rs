@@ -34,6 +34,13 @@ pub struct PassTiming {
     /// Absolute sim time when the pass result is available at its
     /// destination (leader if `return_to_leader`).
     pub finish: Nanos,
+    /// Absolute sim time when stage 0 (the leader) finishes its compute
+    /// and releases the window downstream. From here until `finish` the
+    /// leader only waits on the wire — the `(N-1)·t1` window the
+    /// speculate-ahead scheduler fills with next-round drafting
+    /// (`local_work` started at `stage0_release` runs *inside* the
+    /// in-flight gap instead of queueing after `finish`).
+    pub stage0_release: Nanos,
     pub comm_ns: Nanos,
     pub compute_ns: Nanos,
     pub queue_ns: Nanos,
@@ -110,6 +117,7 @@ impl PipelineSim {
         let mut comm = 0;
         let mut compute = 0;
         let mut queue = 0;
+        let mut stage0_release = start;
         for i in 0..n {
             let begin = t.max(self.busy_until[i]);
             queue += begin - t;
@@ -117,6 +125,9 @@ impl PipelineSim {
             t = begin + d;
             compute += d;
             self.busy_until[i] = t;
+            if i == 0 {
+                stage0_release = t;
+            }
             if i + 1 < n {
                 let hop = self.topo.hop(i).transfer_time(msg_bytes, Some(&mut self.rng));
                 comm += hop;
@@ -139,7 +150,13 @@ impl PipelineSim {
         self.stats.compute_ns += compute;
         self.stats.queue_ns += queue;
         self.stats.sync_rounds += 1;
-        PassTiming { finish: t, comm_ns: comm, compute_ns: compute, queue_ns: queue }
+        PassTiming {
+            finish: t,
+            stage0_release,
+            comm_ns: comm,
+            compute_ns: compute,
+            queue_ns: queue,
+        }
     }
 
     /// One speculative verify pass over a flattened window of `width`
@@ -261,6 +278,26 @@ mod tests {
         assert_eq!(wide.stats.bytes, 4 * narrow.stats.bytes);
         assert_eq!(narrow.stats.sync_rounds, 1);
         assert_eq!(wide.stats.sync_rounds, 1);
+    }
+
+    #[test]
+    fn stage0_release_opens_the_inflight_gap() {
+        // 4 stages, 2ms links: stage 0 releases after its own compute;
+        // the gap to `finish` is the (N-1)-hop traversal the overlap
+        // scheduler drafts into.
+        let mut s = sim(4, 2.0);
+        let t = s.pipeline_pass(1_000, &[250_000; 4], 0, 0, false);
+        assert_eq!(t.stage0_release, 1_000 + 250_000);
+        assert!(t.stage0_release < t.finish);
+        assert_eq!(t.finish - t.stage0_release, 3 * 250_000 + 3 * 2_000_000);
+        // local work started at the release time runs inside the gap and
+        // does not delay the pass (it already left node 0)
+        let done = s.local_work(t.stage0_release, 1_000_000);
+        assert!(done < t.finish);
+        // single-node degenerate case: release == finish
+        let mut s1 = sim(1, 2.0);
+        let t1 = s1.pipeline_pass(0, &[5_000], 0, 0, false);
+        assert_eq!(t1.stage0_release, t1.finish);
     }
 
     #[test]

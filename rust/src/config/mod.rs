@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{LinkModel, Topology};
 use crate::spec::{DecodeConfig, DraftShape, Policy};
-use crate::util::cli::Args;
+use crate::util::cli::{parse_on_off, Args};
 
 /// Everything needed to launch a deployment.
 #[derive(Debug, Clone)]
@@ -61,6 +61,24 @@ impl Default for DeployConfig {
 }
 
 impl DeployConfig {
+    /// Validate the whole deployment before launch — clear errors at
+    /// config/CLI time instead of panics deep in the round loop.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_nodes == 0 {
+            bail!("n_nodes must be >= 1");
+        }
+        if self.max_batch == 0 {
+            bail!("max_batch must be >= 1 (KV slot pool size)");
+        }
+        if !self.link_ms.is_finite() || self.link_ms < 0.0 {
+            bail!("link_ms must be a non-negative number, got {}", self.link_ms);
+        }
+        if !self.jitter.is_finite() || self.jitter < 0.0 {
+            bail!("jitter must be a non-negative fraction, got {}", self.jitter);
+        }
+        self.decode.validate()
+    }
+
     pub fn topology(&self) -> Topology {
         let link = LinkModel {
             base_ns: (self.link_ms * 1e6) as u64,
@@ -142,6 +160,10 @@ impl DeployConfig {
             "decode.max_new_tokens" | "max_new_tokens" => {
                 self.decode.max_new_tokens = value.parse()?
             }
+            "decode.overlap" | "overlap" => {
+                self.decode.overlap = parse_on_off(value)
+                    .map_err(|_| anyhow::anyhow!("overlap expects on|off, got '{value}'"))?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -170,7 +192,8 @@ impl DeployConfig {
              lam1 = {}\n\
              lam2 = {}\n\
              lam3 = {}\n\
-             max_new_tokens = {}\n",
+             max_new_tokens = {}\n\
+             overlap = \"{}\"\n",
             self.artifacts_dir,
             self.n_nodes,
             self.link_ms,
@@ -190,6 +213,7 @@ impl DeployConfig {
             self.decode.lam2,
             self.decode.lam3,
             self.decode.max_new_tokens,
+            if self.decode.overlap { "on" } else { "off" },
         )
     }
 }
@@ -243,6 +267,7 @@ mod tests {
         cfg.set("nodes", "8").unwrap();
         cfg.set("policy", "eagle3").unwrap();
         cfg.set("draft_shape", "tree:4x3").unwrap();
+        cfg.set("overlap", "off").unwrap();
         let text = cfg.to_toml();
         let mut cfg2 = DeployConfig::default();
         let kv = parse_toml_lite(&text).unwrap();
@@ -253,6 +278,41 @@ mod tests {
         assert!((cfg2.decode.tau - 0.35).abs() < 1e-6);
         assert_eq!(cfg2.decode.policy, Policy::Eagle3);
         assert_eq!(cfg2.decode.shape, cfg.decode.shape);
+        assert!(!cfg2.decode.overlap);
+    }
+
+    #[test]
+    fn overlap_key_parses_on_off() {
+        let mut cfg = DeployConfig::default();
+        assert!(cfg.decode.overlap, "overlap defaults on");
+        cfg.set("overlap", "off").unwrap();
+        assert!(!cfg.decode.overlap);
+        cfg.set("decode.overlap", "on").unwrap();
+        assert!(cfg.decode.overlap);
+        let err = cfg.set("overlap", "maybe").unwrap_err().to_string();
+        assert!(err.contains("on|off"), "{err}");
+    }
+
+    #[test]
+    fn validate_surfaces_clear_errors() {
+        let mut cfg = DeployConfig::default();
+        assert!(cfg.validate().is_ok());
+        // the γ = 0 underflow class is now a config-time error
+        cfg.set("gamma", "0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("gamma") && err.contains("baseline"), "{err}");
+        cfg.set("gamma", "8").unwrap();
+        cfg.set("max_new_tokens", "0").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set("max_new_tokens", "64").unwrap();
+        cfg.set("tau", "1.5").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("tau"));
+        cfg.set("tau", "0.2").unwrap();
+        cfg.set("nodes", "0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("n_nodes"));
+        cfg.set("nodes", "4").unwrap();
+        cfg.set("link_ms", "-3").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("link_ms"));
     }
 
     #[test]

@@ -131,6 +131,25 @@ mod tests {
     }
 
     #[test]
+    fn future_arrival_admitted_only_when_active_is_empty() {
+        // Empty batch + free slot: admit even a *future* arrival so the
+        // clock can jump straight to its prefill (the coordinator clamps
+        // the sequence's ready_at to max(arrival, now)) — never WaitUntil
+        // with a free slot and work in the queue.
+        assert_eq!(next_action(100, Some(500), true, &[]), Action::Admit);
+        assert_eq!(next_action_prefill_first(100, Some(500), true, &[]), Action::Admit);
+        // Runnable work present: the future arrival must NOT preempt it —
+        // it is admitted once its time actually comes.
+        let a = next_action(100, Some(500), true, &[v(0, 400, true)]);
+        assert_eq!(a, Action::Run { idx: 0 });
+        let a = next_action(600, Some(500), true, &[v(0, 400, true)]);
+        assert_eq!(a, Action::Admit, "arrived requests fill the batch first");
+        // Empty active and no free slot cannot admit: wait for the clock,
+        // never regressing it below `now`.
+        assert_eq!(next_action(700, Some(500), false, &[]), Action::WaitUntil { at: 700 });
+    }
+
+    #[test]
     fn ties_break_by_index_for_determinism() {
         let a = next_action(0, None, false, &[v(2, 40, true), v(1, 40, true)]);
         assert_eq!(a, Action::Run { idx: 1 });

@@ -11,6 +11,19 @@
 //! commit:   advance frontiers; ONE sync round total   | (Eq. 4)
 //! ```
 //!
+//! With the **speculate-ahead scheduler** (`DecodeConfig::overlap`, on
+//! by default) the leader additionally drafts round r+1's window while
+//! round r's verify window is in flight: after stage 0 releases the
+//! window, the `(N-1)·t1` gap is filled with the assume-all-accepted
+//! continuation (catch-up step + bonus-token guess + γ window steps).
+//! When round r commits all γ drafts and the guess matches the bonus
+//! token, round r+1's drafting term vanishes from Eq. 4; otherwise the
+//! pre-draft is discarded and the sequential path runs unchanged. All
+//! stochastic draws are position-keyed (see [`overlap`]), so overlap
+//! mode commits byte-identical token streams to the sequential
+//! scheduler — pinned by `tests/overlap_differential.rs` and the
+//! engine-backed differential in `decode_integration.rs`.
+//!
 //! Under a tree [`DraftShape`] the draft step instead grows a top-k
 //! [`DraftTree`](crate::spec::tree::DraftTree); the whole tree is
 //! flattened into **one** verify window
@@ -19,27 +32,31 @@
 //! compute and hop payloads scale with tree width, the (N-1)·t1 latency
 //! term does not. Verification picks the longest accepted root-path
 //! ([`host_verify_tree`]) on the leader, and the accepted rows are
-//! compacted into chain layout in every stage's KV cache.
+//! compacted into chain layout in every stage's KV cache. Tree rounds
+//! run the sequential schedule (the all-accepted continuation of a tree
+//! is not a unique path to pre-draft from; see ROADMAP).
 //!
 //! Standard autoregressive decoding instead pays a full pipeline pass per
 //! token (Eq. 3). All paths share all executors, so measured compute is
 //! apples-to-apples.
 
 use std::rc::Rc;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::sim::PipelineSim;
+use crate::coordinator::overlap::{
+    accept_uniform, draft_uniform, host_verify_cost, sample_uniform, stream_seed, PreDraft,
+};
 use crate::coordinator::session::Sequence;
 use crate::model::{KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome};
+use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::tree::{build_tree, host_verify_tree, DraftShape, TreeVerifyResult};
 use crate::spec::{DecodeConfig, Policy, RoundRecord};
-use crate::util::rng::Rng;
 
 /// Timing + acceptance outcome of one round.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RoundOutcome {
     /// Tokens committed this round.
     pub committed: Vec<i32>,
@@ -56,23 +73,49 @@ pub struct RoundOutcome {
     pub finish: Nanos,
     pub comm_ns: Nanos,
     pub compute_ns: Nanos,
+    /// Tokens drafted ahead for the next round inside this round's
+    /// in-flight verify window (overlap scheduler).
+    pub pre_drafted: usize,
+    /// Previous round's pre-drafted tokens this round reused.
+    pub reused: usize,
+    /// Previous round's pre-drafted tokens this round discarded.
+    pub wasted: usize,
+    /// Pre-draft time that ran inside the in-flight window, ns.
+    pub overlap_ns: Nanos,
+    /// Total pre-draft time charged this round, ns.
+    pub pre_draft_ns: Nanos,
+    /// Drafting removed from this round's critical path by reuse, ns.
+    pub recovered_ns: Nanos,
+}
+
+impl RoundOutcome {
+    /// The acceptance-accounting view of this round.
+    pub fn record(&self) -> RoundRecord {
+        RoundRecord {
+            gamma: self.draft_len,
+            accepted: self.accepted,
+            committed: self.committed.len(),
+            key_tokens: self.key_tokens,
+            tree_nodes: self.tree_nodes,
+            pre_drafted: self.pre_drafted,
+            reused: self.reused,
+            wasted: self.wasted,
+            overlap_ns: self.overlap_ns,
+            pre_draft_ns: self.pre_draft_ns,
+            recovered_ns: self.recovered_ns,
+        }
+    }
 }
 
 /// Drives decode rounds for sequences against one sharded model replica.
 pub struct DecodeEngine {
     pub model: ShardedModel,
     pub cfg: DecodeConfig,
-    rng: Rng,
 }
 
 impl DecodeEngine {
     pub fn new(model: ShardedModel, cfg: DecodeConfig) -> DecodeEngine {
-        let rng = Rng::new(cfg.seed ^ 0x5EC0_DE00);
-        DecodeEngine { model, cfg, rng }
-    }
-
-    pub fn rng(&mut self) -> &mut Rng {
-        &mut self.rng
+        DecodeEngine { model, cfg }
     }
 
     /// Run prefill for a sequence: pads the prompt, fills target-stage and
@@ -83,6 +126,12 @@ impl DecodeEngine {
         pool: &mut KvPool,
         sim: &mut PipelineSim,
     ) -> Result<()> {
+        if seq.committed.is_empty() {
+            bail!(
+                "request {} has an empty prompt — prefill needs at least one token",
+                seq.id
+            );
+        }
         let m = self.model.engine.manifest().model.clone();
         let w = m.prefill_window;
         if seq.committed.len() > w {
@@ -106,7 +155,9 @@ impl DecodeEngine {
 
         // First token from the prompt's last logits row.
         let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
-        let tok = crate::sampling::sample_logits(row, self.cfg.temp, &mut self.rng) as i32;
+        let sseed = stream_seed(self.cfg.seed, seq.id);
+        let u = sample_uniform(sseed, plen - 1, 0);
+        let tok = sample_logits_with(row, self.cfg.temp, u) as i32;
         seq.commit(&[tok]);
         seq.ready_at = finish;
         Ok(())
@@ -139,22 +190,36 @@ impl DecodeEngine {
         let (logits, stage_times, fwd_bytes, ret_bytes) =
             self.pipeline_window(seq, pool, &window, pos, 1)?;
         let timing = sim.pipeline_pass(seq.ready_at, &stage_times, fwd_bytes, ret_bytes, true);
-        let tok = crate::sampling::sample_logits(&logits[..m.vocab], self.cfg.temp, &mut self.rng) as i32;
+        let sseed = stream_seed(self.cfg.seed, seq.id);
+        let u = sample_uniform(sseed, pos, 0);
+        let tok = sample_logits_with(&logits[..m.vocab], self.cfg.temp, u) as i32;
         seq.commit(&[tok]);
         seq.ready_at = timing.finish;
         Ok(RoundOutcome {
             committed: vec![tok],
-            accepted: 0,
-            key_tokens: 0,
-            draft_len: 0,
-            tree_nodes: 0,
             finish: timing.finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns,
+            ..Default::default()
         })
     }
 
-    /// Algorithm 1: draft γ, verify in ONE pipeline pass, commit k+1.
+    /// Whether the sequence will still be decoding after a fully
+    /// accepted round — the only outcome whose pre-draft can be reused,
+    /// and the draft cache must have row room for the speculative
+    /// continuation (positions through `i + 2γ`).
+    fn continues_after_full_accept(&self, seq: &Sequence, max_seq: usize) -> bool {
+        let gamma = self.cfg.gamma;
+        let len_next = seq.committed.len() + gamma + 1;
+        let generated_next = seq.generated() + gamma + 1;
+        generated_next < seq.max_new_tokens
+            && len_next + self.cfg.max_window() < max_seq
+            && seq.last_index() + 2 * gamma < max_seq
+    }
+
+    /// Algorithm 1 + speculate-ahead: draft γ (or reuse the pre-draft),
+    /// verify in ONE pipeline pass while drafting round r+1's window
+    /// inside the in-flight gap, commit k+1.
     fn round_speculative(
         &mut self,
         seq: &mut Sequence,
@@ -164,21 +229,46 @@ impl DecodeEngine {
         let m = self.model.engine.manifest().model.clone();
         let gamma = self.cfg.gamma;
         let i = seq.last_index(); // position of last committed token
-
-        // --- drafting (leader-local) ---
-        // Catch-up: draft rows for committed positions the draft cache is
-        // missing (1 step after a fully-accepted window, else 0), then γ
-        // sampling steps. Each step's input is the token at `pos`.
+        let temp = self.cfg.temp;
         let dstage = self.model.n_shards();
+        let sseed = stream_seed(self.cfg.seed, seq.id);
+
+        // --- drafting (leader-local), consuming the previous round's
+        // pre-draft when its assume-all-accepted continuation held ---
+        let pre = seq.pre_draft.take();
+        let mut recovered_ns: Nanos = 0;
+        let mut full_reuse = false;
+        if let Some(pd) = &pre {
+            if i == pd.next_base {
+                // the previous round accepted all γ drafts, so the
+                // pre-draft's catch-up row (input d_γ) is valid
+                seq.draft_frontier = seq.draft_frontier.max(pd.anchor_pos + 1);
+                recovered_ns = pd.draft_ns / (gamma as Nanos + 1);
+                if pd.guess == seq.last_token() {
+                    // ... and the bonus-token guess matched: the whole
+                    // pre-drafted window is this round's draft window
+                    full_reuse = true;
+                    recovered_ns = pd.draft_ns;
+                }
+            }
+        }
+        let reused = if full_reuse { gamma } else { 0 };
+        let wasted = match &pre {
+            Some(pd) if !full_reuse => pd.tokens.len(),
+            _ => 0,
+        };
+
         let mut draft_ns_total: Nanos = 0;
-        let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
-        let mut d_logits: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
-        {
-            let temp = self.cfg.temp;
+        let (d_tokens, d_logits) = if full_reuse {
+            let pd = pre.expect("checked above");
+            (pd.tokens, pd.logits)
+        } else {
+            let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
+            let mut d_logits: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
             // catch-up positions: draft_frontier .. i-1 (logits unused)
             for pos in seq.draft_frontier..i {
                 let input = seq.committed[pos];
-                let u = self.rng.f32();
+                let u = draft_uniform(sseed, pos);
                 let dcache = pool.stage_cache(seq.slot, dstage)?;
                 let (_, _, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
                 draft_ns_total += ns;
@@ -187,7 +277,7 @@ impl DecodeEngine {
             // token and yields the distribution for position i+1, etc.
             let mut prev = seq.last_token();
             for j in 0..gamma {
-                let u = self.rng.f32();
+                let u = draft_uniform(sseed, i + j);
                 let dcache = pool.stage_cache(seq.slot, dstage)?;
                 let (tok, logits, ns) = self.model.draft.step(prev, dcache, i + j, temp, u)?;
                 draft_ns_total += ns;
@@ -195,8 +285,13 @@ impl DecodeEngine {
                 d_logits.extend_from_slice(&logits);
                 prev = tok;
             }
-        }
-        let draft_done = sim.local_work(seq.ready_at, draft_ns_total);
+            (d_tokens, d_logits)
+        };
+        let draft_done = if draft_ns_total == 0 {
+            seq.ready_at
+        } else {
+            sim.local_work(seq.ready_at, draft_ns_total)
+        };
 
         // --- one pipeline pass over the verify window ---
         let mut window = Vec::with_capacity(gamma + 1);
@@ -206,9 +301,58 @@ impl DecodeEngine {
             self.pipeline_window(seq, pool, &window, i, gamma + 1)?;
         let timing = sim.pipeline_pass(draft_done, &stage_times, fwd_bytes, ret_bytes, true);
 
-        // --- L1 adaptive verification (leader-local) ---
-        let u_accept: Vec<f32> = (0..gamma).map(|_| self.rng.f32()).collect();
-        let u_sample: Vec<f32> = (0..=gamma).map(|_| self.rng.f32()).collect();
+        // --- speculate ahead: draft round r+1's window while this
+        // round's verify window is in flight (the leader is idle from
+        // stage-0 release to the return hop) ---
+        let mut pre_drafted = 0usize;
+        let mut pre_draft_ns: Nanos = 0;
+        let mut overlap_ns: Nanos = 0;
+        if self.cfg.overlap && gamma >= 1 && self.continues_after_full_accept(seq, m.max_seq) {
+            let anchor_pos = i + gamma;
+            let next_base = i + gamma + 1;
+            let mut ns_total: Nanos = 0;
+            // speculative catch-up step (input d_γ): its logits row is
+            // the draft's belief about the bonus position, so its argmax
+            // doubles as the bonus-token guess
+            let u = draft_uniform(sseed, anchor_pos);
+            let dcache = pool.stage_cache(seq.slot, dstage)?;
+            let (_, head_logits, ns) =
+                self.model.draft.step(d_tokens[gamma - 1], dcache, anchor_pos, temp, u)?;
+            ns_total += ns;
+            let guess = argmax(&head_logits) as i32;
+            // γ window steps from the guessed bonus — exactly the steps
+            // round r+1 will need if the guess is right
+            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
+            let mut rows: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
+            let mut prev = guess;
+            for j in 0..gamma {
+                let u = draft_uniform(sseed, next_base + j);
+                let dcache = pool.stage_cache(seq.slot, dstage)?;
+                let (tok, logits, ns) =
+                    self.model.draft.step(prev, dcache, next_base + j, temp, u)?;
+                ns_total += ns;
+                toks.push(tok);
+                rows.extend_from_slice(&logits);
+                prev = tok;
+            }
+            let done = sim.local_work(timing.stage0_release, ns_total);
+            pre_draft_ns = ns_total;
+            overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
+            pre_drafted = gamma;
+            seq.pre_draft = Some(PreDraft {
+                next_base,
+                anchor_pos,
+                guess,
+                tokens: toks,
+                logits: rows,
+                draft_ns: ns_total,
+            });
+        }
+
+        // --- L1 adaptive verification (leader-local); queues behind a
+        // pre-draft that spilled past the return hop ---
+        let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
+        let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
         let (outcome, verify_ns) = self.model.verify.run(
             gamma,
             t_logits,
@@ -230,7 +374,13 @@ impl DecodeEngine {
             tree_nodes: gamma,
             finish,
             comm_ns: timing.comm_ns,
-            compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
+            compute_ns: timing.compute_ns + draft_ns_total + pre_draft_ns + verify_ns,
+            pre_drafted,
+            reused,
+            wasted,
+            overlap_ns,
+            pre_draft_ns,
+            recovered_ns,
         })
     }
 
@@ -239,7 +389,9 @@ impl DecodeEngine {
         // Draft rows valid through position i + min(k, γ-1):
         // rows i..i+γ-1 were written (inputs: last token, d1..dγ-1); the
         // tokens at those positions are committed only up to i+k.
-        seq.draft_frontier = i + (k.min(self.cfg.gamma - 1)) + 1;
+        // (saturating: γ is validated >= 1 for speculative policies, but
+        // never underflow here regardless.)
+        seq.draft_frontier = i + k.min(self.cfg.gamma.saturating_sub(1)) + 1;
         seq.commit(&out.tokens);
     }
 
@@ -249,7 +401,13 @@ impl DecodeEngine {
     /// Branching-1 trees are chain-shaped and run on the plain causal
     /// artifacts; branching > 1 flattens through [`StageInput::Tree`]
     /// (tree-attention artifacts). Tree verification runs on the leader
-    /// host — the L1 kernel is chain-only.
+    /// host — the L1 kernel is chain-only — and is charged at the
+    /// deterministic calibrated cost ([`host_verify_cost`]), not its own
+    /// wall-clock: the host loop's time is scheduling noise, unlike the
+    /// executors' *measured model compute*, which stays wall-clock by
+    /// design (sim time composes real compute with modeled comm). With
+    /// calibrated executor costs (the engine-free paths), identical
+    /// seeds reproduce identical simulated times.
     fn round_tree(
         &mut self,
         seq: &mut Sequence,
@@ -260,6 +418,7 @@ impl DecodeEngine {
         let m = self.model.engine.manifest().model.clone();
         let i = seq.last_index();
         let temp = self.cfg.temp;
+        let sseed = stream_seed(self.cfg.seed, seq.id);
 
         // --- catch-up: replay committed positions the draft cache lacks.
         // Tree rounds draft in scratch clones and leave the pooled draft
@@ -270,7 +429,7 @@ impl DecodeEngine {
         let mut draft_ns_total: Nanos = 0;
         for pos in seq.draft_frontier..i {
             let input = seq.committed[pos];
-            let u = self.rng.f32();
+            let u = draft_uniform(sseed, pos);
             let dcache = pool.stage_cache(seq.slot, dstage)?;
             let (_, _, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
             draft_ns_total += ns;
@@ -287,7 +446,6 @@ impl DecodeEngine {
         let last_token = seq.last_token();
         let max_depth = shape.depth_or(self.cfg.gamma);
         let draft = &self.model.draft;
-        let rng = &mut self.rng;
         let mut expansion_caches: Vec<Option<KvCache>> = Vec::new();
         let mut cur_level = 1usize;
         let mut cur_level_start = 0usize; // first expansion row of cur_level
@@ -310,7 +468,10 @@ impl DecodeEngine {
                     .clone(),
             };
             let token = e.path.last().copied().unwrap_or(last_token);
-            let u = rng.f32();
+            // the fused sample is unused for trees (children come from
+            // top-k over the logits), so sibling expansions may share
+            // the position-keyed uniform
+            let u = draft_uniform(sseed, i + e.path.len());
             let (_, logits, ns) = draft.step(token, &mut cache, i + e.path.len(), temp, u)?;
             tree_draft_ns += ns;
             // Keep the stepped cache only if its children can themselves
@@ -334,10 +495,11 @@ impl DecodeEngine {
         };
         let timing = sim.pipeline_pass(draft_done, &stage_times, fwd_bytes, ret_bytes, true);
 
-        // --- host tree verification (leader-local) ---
-        let u_accept: Vec<f32> = (0..n).map(|_| self.rng.f32()).collect();
-        let u_sample: Vec<f32> = (0..=tree.depth()).map(|_| self.rng.f32()).collect();
-        let t0 = Instant::now();
+        // --- host tree verification (leader-local), charged at the
+        // deterministic calibrated cost: wall-clocking the host loop
+        // made identical seeds report different finish/latency numbers.
+        let u_accept: Vec<f32> = (0..n).map(|j| accept_uniform(sseed, i, j)).collect();
+        let u_sample: Vec<f32> = (0..=tree.depth()).map(|j| sample_uniform(sseed, i, j)).collect();
         let outcome = host_verify_tree(
             &tree,
             m.vocab,
@@ -347,7 +509,7 @@ impl DecodeEngine {
             &u_sample,
             self.cfg.knobs(),
         );
-        let verify_ns = t0.elapsed().as_nanos() as Nanos;
+        let verify_ns = host_verify_cost(n);
         let finish = sim.local_work(timing.finish, verify_ns);
 
         self.commit_tree_outcome(seq, pool, i, &outcome)?;
@@ -361,6 +523,7 @@ impl DecodeEngine {
             finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
+            ..Default::default()
         })
     }
 

@@ -9,11 +9,13 @@
 
 pub mod batcher;
 pub mod decode;
+pub mod overlap;
 pub mod router;
 pub mod session;
 
 pub use batcher::{next_action, next_action_prefill_first, Action, SeqView};
 pub use decode::{DecodeEngine, RoundOutcome, SequenceResult};
+pub use overlap::{OracleChainDecoder, OracleConfig, OracleRound, PreDraft};
 pub use router::{RoutePolicy, Router};
 pub use session::{SeqState, Sequence};
 
@@ -27,7 +29,7 @@ use crate::config::DeployConfig;
 use crate::metrics::RunReport;
 use crate::model::{KvPool, ShardedModel};
 use crate::runtime::Engine;
-use crate::spec::{AcceptanceStats, RoundRecord};
+use crate::spec::AcceptanceStats;
 use crate::workload::{dataset, Request};
 
 /// One serving replica over a simulated decentralized pipeline.
@@ -49,6 +51,7 @@ impl Coordinator {
     /// Build a replica sharing an existing engine (multi-replica setups,
     /// benches that sweep configurations).
     pub fn with_engine(engine: Rc<Engine>, cfg: DeployConfig) -> Result<Coordinator> {
+        cfg.validate()?;
         let variant = if cfg.draft_variant.is_empty() {
             dataset(&cfg.dataset)
                 .map(|d| d.draft_variant.to_string())
@@ -87,7 +90,10 @@ impl Coordinator {
 
     /// Serve a workload to completion; returns the run report and the
     /// per-sequence outputs.
-    pub fn run_workload(&mut self, requests: Vec<Request>) -> Result<(RunReport, Vec<SequenceResult>)> {
+    pub fn run_workload(
+        &mut self,
+        requests: Vec<Request>,
+    ) -> Result<(RunReport, Vec<SequenceResult>)> {
         let max_seq = self.engine.manifest().model.max_seq;
         let label = format!("{}/N{}", self.cfg.decode.policy.name(), self.cfg.n_nodes);
         let mut report = RunReport::new(label);
@@ -139,13 +145,7 @@ impl Coordinator {
                     } else {
                         let out = self.decode.round(seq, &mut self.pool, &mut self.sim)?;
                         if self.cfg.decode.policy.is_speculative() {
-                            accept.record(RoundRecord {
-                                gamma: out.draft_len,
-                                accepted: out.accepted,
-                                committed: out.committed.len(),
-                                key_tokens: out.key_tokens,
-                                tree_nodes: out.tree_nodes,
-                            });
+                            accept.record(out.record());
                         }
                         report.sync_rounds += 1;
                     }

@@ -1,0 +1,503 @@
+//! Speculate-ahead round scheduling: overlap next-round drafting with
+//! the in-flight verify window.
+//!
+//! # The stall, and what fills it
+//!
+//! Eq. 4 gives the per-round latency of decentralized speculative
+//! decoding as
+//!
+//! ```text
+//! T_round = γ·t_draft + Σ_s t_stage(s) + (N-1)·t1 + t_ret + t_verify   (Eq. 4)
+//! ```
+//!
+//! Once the leader (stage 0) releases the verify window downstream, it
+//! sits idle for the whole in-flight gap
+//!
+//! ```text
+//! G = Σ_{s≥1} t_stage(s) + (N-1)·t1 + t_ret
+//! ```
+//!
+//! — on WAN links the dominant term of the round. The speculate-ahead
+//! scheduler fills G with the *optimistic* drafting of round r+1: assume
+//! every one of round r's γ draft tokens is accepted, run the catch-up
+//! step that assumption implies (input d_γ), take the resulting draft
+//! head's argmax as a guess for the bonus token, and draft the full
+//! γ-token window from that guess — γ+1 leader-local steps that cost
+//! nothing when they fit inside G.
+//!
+//! On commit, the pre-draft is consumed by the *next* round:
+//!
+//! * round r accepted all γ and the bonus guess matched → the whole
+//!   pre-drafted window (tokens, draft logits, and draft-cache rows) is
+//!   round r+1's draft window; its drafting term vanishes:
+//!   `T_round(r+1) = Σ_s t_stage(s) + (N-1)·t1 + t_ret + t_verify`.
+//! * round r accepted all γ but the guess missed → only the catch-up
+//!   row survives (its input d_γ was committed); one draft step is
+//!   saved.
+//! * any rejection → the pre-draft is discarded wholesale and round r+1
+//!   runs the sequential path unchanged.
+//!
+//! With reuse probability p and the pre-draft inside the gap
+//! ((γ+1)·t_draft ≤ G), the expected round time becomes
+//! `E[T] = T_round − p·(γ+1)·t_draft`; when the pre-draft spills past
+//! the gap, verification queues behind the spill — the scheduler
+//! degrades gracefully instead of corrupting timing.
+//!
+//! # Why overlap commits byte-identical tokens
+//!
+//! Two invariants make the pre-draft a pure reordering of work:
+//!
+//! 1. **Position-keyed uniforms** ([`draft_uniform`], [`accept_uniform`],
+//!    [`sample_uniform`] over [`crate::util::rng::uniform_at`]): every
+//!    stochastic decision is a pure function of (seed, sequence,
+//!    position/slot), not of *when* it is drawn. A draft step at
+//!    position p produces the same token on the speculative and the
+//!    sequential path.
+//! 2. **Reuse only on exact prefix match**: pre-drafted state is
+//!    consumed only when the committed stream equals the assumption it
+//!    was drafted under (all-accepted + matching bonus); otherwise the
+//!    stale draft-cache rows sit beyond `draft_frontier` and are
+//!    rewritten before any read.
+//!
+//! `tests/overlap_differential.rs` pins overlap ≡ sequential token
+//! streams across seeds, policies and shapes via the engine-free
+//! [`OracleChainDecoder`]; `decode_integration.rs` pins the same on the
+//! real engine. Tree-shaped rounds currently fall back to the
+//! sequential path (the all-accepted continuation of a tree is not a
+//! unique path; see ROADMAP).
+
+use anyhow::Result;
+
+use crate::cluster::clock::Nanos;
+use crate::cluster::sim::PipelineSim;
+use crate::cluster::topology::{LinkModel, Topology};
+use crate::model::VerifyKnobs;
+use crate::sampling::{argmax, sample_logits_with};
+use crate::spec::reference::host_verify;
+use crate::util::rng::{mix, uniform_at, Rng};
+
+/// RNG stream tags (see [`crate::util::rng::uniform_at`]).
+const STREAM_DRAFT: u64 = 0xD4AF;
+const STREAM_ACCEPT: u64 = 0xACC7;
+const STREAM_SAMPLE: u64 = 0x5A3F;
+
+/// Per-sequence seed for the keyed decode streams.
+pub fn stream_seed(seed: u64, seq_id: u64) -> u64 {
+    mix(seed ^ 0x5EC0_DE00, seq_id)
+}
+
+/// Uniform for the fused draft-sampling of the step at `pos`.
+pub fn draft_uniform(sseed: u64, pos: usize) -> f32 {
+    uniform_at(sseed, STREAM_DRAFT, pos as u64, 0)
+}
+
+/// Acceptance uniform for window slot `j` of the round based at `base`.
+pub fn accept_uniform(sseed: u64, base: usize, j: usize) -> f32 {
+    uniform_at(sseed, STREAM_ACCEPT, base as u64, j as u64)
+}
+
+/// Correction/bonus-sampling uniform `j` of the round based at `base`
+/// (also used for prefill and autoregressive sampling with `j = 0`).
+pub fn sample_uniform(sseed: u64, base: usize, j: usize) -> f32 {
+    uniform_at(sseed, STREAM_SAMPLE, base as u64, j as u64)
+}
+
+/// Calibrated host-verification cost: fixed base + per-node term, the
+/// calibration the engine-free benches use. `round_tree` charges this
+/// instead of its own wall-clock so identical seeds yield identical
+/// simulated `finish`/latency numbers (host loop time is scheduling
+/// noise, not model compute).
+pub const HOST_VERIFY_BASE_NS: Nanos = 100_000;
+/// Per verified node (tree node or chain slot) on top of the base.
+pub const HOST_VERIFY_PER_NODE_NS: Nanos = 2_000;
+
+/// Deterministic leader-local cost of verifying `nodes` draft nodes.
+pub fn host_verify_cost(nodes: usize) -> Nanos {
+    HOST_VERIFY_BASE_NS + nodes as Nanos * HOST_VERIFY_PER_NODE_NS
+}
+
+/// A pre-drafted next-round window, produced while the previous round's
+/// verify window was in flight. Stored on the sequence until the next
+/// round classifies it (reuse vs discard).
+#[derive(Debug, Clone)]
+pub struct PreDraft {
+    /// Base position round r+1 will have if round r accepts all γ
+    /// drafts (`i + γ + 1`); any other outcome invalidates everything.
+    pub next_base: usize,
+    /// Position of the speculative catch-up step (`i + γ`, input d_γ);
+    /// its draft-cache row is valid whenever `next_base` matches.
+    pub anchor_pos: usize,
+    /// Draft-head argmax guess for the bonus token at `next_base`.
+    pub guess: i32,
+    /// The pre-drafted window (round r+1's d'_1..d'_γ when the guess
+    /// matches the committed bonus token).
+    pub tokens: Vec<i32>,
+    /// Their draft logits, `[γ, vocab]` flattened.
+    pub logits: Vec<f32>,
+    /// Leader-local time charged for the γ+1 pre-draft steps.
+    pub draft_ns: Nanos,
+}
+
+/// One round's outcome from the engine-free oracle decoder (the subset
+/// of `RoundOutcome` the differential tests and benches consume).
+#[derive(Debug, Clone, Default)]
+pub struct OracleRound {
+    /// Tokens committed this round (k accepted + correction/bonus).
+    pub committed: Vec<i32>,
+    pub accepted: usize,
+    /// Absolute sim time at which the round committed.
+    pub finish: Nanos,
+    /// Tokens pre-drafted for the next round inside this round.
+    pub pre_drafted: usize,
+    /// Previous round's pre-drafted tokens reused by this round.
+    pub reused: usize,
+    /// Previous round's pre-drafted tokens discarded by this round.
+    pub wasted: usize,
+    /// Pre-draft ns that ran inside the in-flight verify window.
+    pub overlap_ns: Nanos,
+    /// Total pre-draft ns charged this round.
+    pub pre_draft_ns: Nanos,
+    /// Drafting ns removed from this round's critical path by reuse.
+    pub recovered_ns: Nanos,
+}
+
+/// Calibration + policy for [`OracleChainDecoder`].
+#[derive(Debug, Clone)]
+pub struct OracleConfig {
+    pub vocab: usize,
+    /// Draft/target logit correlation in [0, 1] (≈ acceptance quality).
+    pub corr: f32,
+    pub gamma: usize,
+    pub temp: f32,
+    pub knobs: VerifyKnobs,
+    /// Speculate-ahead scheduler on/off.
+    pub overlap: bool,
+    pub seed: u64,
+    pub seq_id: u64,
+    pub nodes: usize,
+    pub link_ms: f64,
+    /// Leader-local cost of one draft step.
+    pub draft_step_ns: Nanos,
+    /// Full-pipeline marginal compute per window token (split evenly
+    /// across the stages).
+    pub per_token_pass_ns: Nanos,
+    /// Hidden width for per-hop payload accounting.
+    pub d_model: usize,
+}
+
+impl Default for OracleConfig {
+    fn default() -> Self {
+        OracleConfig {
+            vocab: 64,
+            corr: 0.85,
+            gamma: 4,
+            temp: 1.0,
+            knobs: VerifyKnobs::strict(1.0),
+            overlap: true,
+            seed: 0,
+            seq_id: 0,
+            nodes: 4,
+            link_ms: 15.0,
+            draft_step_ns: 600_000,
+            per_token_pass_ns: 240_000,
+            d_model: 256,
+        }
+    }
+}
+
+const FNV: u64 = 0x100000001B3;
+
+/// Engine-free twin of `DecodeEngine::round_speculative`'s scheduling:
+/// chain drafting from a seeded synthetic logit oracle, one verify pass
+/// through [`PipelineSim`], host verification, commit — and, with
+/// `overlap` on, the speculate-ahead pre-draft under exactly the reuse
+/// rules and keyed uniforms the engine path uses. Lets the differential
+/// tests prove overlap ≡ sequential, and the `ablation_overlap` bench
+/// measure recovered stall time, without AOT artifacts.
+pub struct OracleChainDecoder {
+    pub cfg: OracleConfig,
+    pub sim: PipelineSim,
+    /// Prompt + committed tokens (the oracle conditions on this chain).
+    pub committed: Vec<i32>,
+    draft_frontier: usize,
+    ready_at: Nanos,
+    pre: Option<PreDraft>,
+    per_stage: Vec<Nanos>,
+}
+
+impl OracleChainDecoder {
+    pub fn new(cfg: OracleConfig, prompt: &[i32]) -> Result<OracleChainDecoder> {
+        if prompt.is_empty() {
+            anyhow::bail!("oracle decoder needs a non-empty prompt");
+        }
+        if cfg.gamma == 0 {
+            anyhow::bail!("gamma must be >= 1 for speculative decoding");
+        }
+        let topo = Topology::uniform(cfg.nodes, LinkModel::wan(cfg.link_ms, 0.0));
+        let sim = PipelineSim::new(topo, cfg.seed ^ 0xC1);
+        let per_stage = vec![cfg.per_token_pass_ns / cfg.nodes as Nanos; cfg.nodes];
+        let frontier = prompt.len().saturating_sub(1);
+        Ok(OracleChainDecoder {
+            cfg,
+            sim,
+            committed: prompt.to_vec(),
+            draft_frontier: frontier,
+            ready_at: 0,
+            pre: None,
+            per_stage,
+        })
+    }
+
+    /// Absolute sim time of the last committed round.
+    pub fn finish_time(&self) -> Nanos {
+        self.ready_at
+    }
+
+    fn ctx_hash(&self, prefix: &[i32], salt: u64) -> u64 {
+        let tail = &prefix[prefix.len().saturating_sub(8)..];
+        let mut h = (self.cfg.seed ^ 0x0AC1E) ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        for &t in tail {
+            h = h.wrapping_mul(FNV).wrapping_add(t as u64 ^ 0x9E37);
+        }
+        h
+    }
+
+    /// Target logits for the position following `prefix` — a pure
+    /// function of the recent context, so drafting the same position
+    /// early or late sees the same distribution (the KV-cache-coherence
+    /// property of the real models).
+    pub fn target_row(&self, prefix: &[i32]) -> Vec<f32> {
+        let mut r = Rng::new(self.ctx_hash(prefix, 0));
+        (0..self.cfg.vocab).map(|_| r.normal() as f32 * 2.0).collect()
+    }
+
+    /// Draft logits: a correlated corruption of the target's.
+    pub fn draft_row(&self, prefix: &[i32]) -> Vec<f32> {
+        let t = self.target_row(prefix);
+        let mut r = Rng::new(self.ctx_hash(prefix, 1));
+        let c = self.cfg.corr;
+        let noise = (1.0 - c * c).sqrt();
+        t.iter().map(|&x| c * x + noise * r.normal() as f32 * 2.0).collect()
+    }
+
+    /// One speculative round, mirroring `DecodeEngine::round_speculative`.
+    pub fn round(&mut self) -> OracleRound {
+        let gamma = self.cfg.gamma;
+        let temp = self.cfg.temp;
+        let sseed = stream_seed(self.cfg.seed, self.cfg.seq_id);
+        let i = self.committed.len() - 1;
+
+        // --- drafting, consuming the pre-draft when its assumption held
+        let pre = self.pre.take();
+        let mut recovered_ns: Nanos = 0;
+        let mut full_reuse = false;
+        if let Some(pd) = &pre {
+            if i == pd.next_base {
+                self.draft_frontier = self.draft_frontier.max(pd.anchor_pos + 1);
+                recovered_ns = pd.draft_ns / (gamma as Nanos + 1);
+                if pd.guess == *self.committed.last().unwrap() {
+                    full_reuse = true;
+                    recovered_ns = pd.draft_ns;
+                }
+            }
+        }
+        let reused = if full_reuse { gamma } else { 0 };
+        let wasted = match &pre {
+            Some(pd) if !full_reuse => pd.tokens.len(),
+            _ => 0,
+        };
+
+        let mut draft_ns_total: Nanos = 0;
+        let (d_tokens, d_logits) = if full_reuse {
+            let pd = pre.expect("checked above");
+            (pd.tokens, pd.logits)
+        } else {
+            // catch-up replays cost time but produce no window tokens
+            // (the "cache" here is the committed prefix itself)
+            draft_ns_total += (i - self.draft_frontier) as Nanos * self.cfg.draft_step_ns;
+            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
+            let mut rows: Vec<f32> = Vec::with_capacity(gamma * self.cfg.vocab);
+            let mut chain = self.committed.clone();
+            for j in 0..gamma {
+                let logits = self.draft_row(&chain);
+                let tok = sample_logits_with(&logits, temp, draft_uniform(sseed, i + j)) as i32;
+                rows.extend_from_slice(&logits);
+                toks.push(tok);
+                chain.push(tok);
+                draft_ns_total += self.cfg.draft_step_ns;
+            }
+            (toks, rows)
+        };
+        let draft_done = if draft_ns_total == 0 {
+            self.ready_at
+        } else {
+            self.sim.local_work(self.ready_at, draft_ns_total)
+        };
+
+        // --- ONE verify pass over the flattened window ---
+        let timing = self.sim.window_pass(
+            draft_done,
+            gamma + 1,
+            &self.per_stage,
+            self.cfg.d_model * 4,
+            self.cfg.vocab * 4,
+        );
+
+        // target logits per window slot (slot j predicts position i+j+1)
+        let mut t_logits = self.target_row(&self.committed);
+        {
+            let mut chain = self.committed.clone();
+            for &t in &d_tokens {
+                chain.push(t);
+                t_logits.extend(self.target_row(&chain));
+            }
+        }
+
+        // --- speculate ahead inside the in-flight gap ---
+        let mut pre_drafted = 0usize;
+        let mut pre_draft_ns: Nanos = 0;
+        let mut overlap_ns: Nanos = 0;
+        if self.cfg.overlap {
+            let anchor_pos = i + gamma;
+            let next_base = i + gamma + 1;
+            let mut chain = self.committed.clone();
+            chain.extend_from_slice(&d_tokens);
+            // speculative catch-up step (input d_γ): its head is the
+            // draft's belief about the bonus position
+            let head = self.draft_row(&chain);
+            let guess = argmax(&head) as i32;
+            let mut ns_total = self.cfg.draft_step_ns;
+            chain.push(guess);
+            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
+            let mut rows: Vec<f32> = Vec::with_capacity(gamma * self.cfg.vocab);
+            for j in 0..gamma {
+                let logits = self.draft_row(&chain);
+                let tok =
+                    sample_logits_with(&logits, temp, draft_uniform(sseed, next_base + j)) as i32;
+                rows.extend_from_slice(&logits);
+                toks.push(tok);
+                chain.push(tok);
+                ns_total += self.cfg.draft_step_ns;
+            }
+            let done = self.sim.local_work(timing.stage0_release, ns_total);
+            pre_draft_ns = ns_total;
+            overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
+            pre_drafted = gamma;
+            self.pre = Some(PreDraft {
+                next_base,
+                anchor_pos,
+                guess,
+                tokens: toks,
+                logits: rows,
+                draft_ns: ns_total,
+            });
+        }
+
+        // --- host verification + commit ---
+        let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
+        let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
+        let out = host_verify(
+            gamma,
+            self.cfg.vocab,
+            &t_logits,
+            &d_logits,
+            &d_tokens,
+            &u_accept,
+            &u_sample,
+            self.cfg.knobs,
+        );
+        let finish = self.sim.local_work(timing.finish, host_verify_cost(gamma));
+        self.draft_frontier = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
+        self.committed.extend_from_slice(&out.tokens);
+        self.ready_at = finish;
+
+        OracleRound {
+            committed: out.tokens,
+            accepted: out.accepted,
+            finish,
+            pre_drafted,
+            reused,
+            wasted,
+            overlap_ns,
+            pre_draft_ns,
+            recovered_ns,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decoder(overlap: bool, seed: u64) -> OracleChainDecoder {
+        let cfg = OracleConfig { overlap, seed, ..Default::default() };
+        OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap()
+    }
+
+    #[test]
+    fn keyed_uniforms_are_stream_separated() {
+        let s = stream_seed(5, 1);
+        assert_ne!(draft_uniform(s, 3), accept_uniform(s, 3, 0));
+        assert_ne!(accept_uniform(s, 3, 0), sample_uniform(s, 3, 0));
+        assert_ne!(stream_seed(5, 1), stream_seed(5, 2));
+        // pure functions of position
+        assert_eq!(draft_uniform(s, 9), draft_uniform(s, 9));
+    }
+
+    #[test]
+    fn host_verify_cost_is_linear_in_nodes() {
+        assert_eq!(host_verify_cost(0), HOST_VERIFY_BASE_NS);
+        assert_eq!(
+            host_verify_cost(14) - host_verify_cost(4),
+            10 * HOST_VERIFY_PER_NODE_NS
+        );
+    }
+
+    #[test]
+    fn oracle_rows_are_pure_and_correlated() {
+        let d = decoder(true, 3);
+        let t1 = d.target_row(&[1, 2, 3]);
+        let t2 = d.target_row(&[1, 2, 3]);
+        assert_eq!(t1, t2);
+        assert_ne!(t1, d.target_row(&[1, 2, 4]));
+        // corr < 1 ⇒ draft differs from target but tracks it
+        let q = d.draft_row(&[1, 2, 3]);
+        assert_ne!(q, t1);
+    }
+
+    #[test]
+    fn rejects_empty_prompt_and_zero_gamma() {
+        assert!(OracleChainDecoder::new(OracleConfig::default(), &[]).is_err());
+        let cfg = OracleConfig { gamma: 0, ..Default::default() };
+        assert!(OracleChainDecoder::new(cfg, &[1]).is_err());
+    }
+
+    #[test]
+    fn overlap_round_produces_and_consumes_pre_drafts() {
+        let mut d = decoder(true, 11);
+        let r0 = d.round();
+        assert_eq!(r0.pre_drafted, d.cfg.gamma, "every overlap round speculates ahead");
+        assert!(r0.pre_draft_ns > 0);
+        // at this calibration ((γ+1)·0.6ms ≪ the 15ms-link gap) the
+        // pre-draft is fully hidden
+        assert_eq!(r0.overlap_ns, r0.pre_draft_ns);
+        // a later round must classify every pre-draft as reused or wasted
+        let mut consumed = 0usize;
+        for _ in 0..40 {
+            let r = d.round();
+            consumed += r.reused + r.wasted;
+        }
+        assert!(consumed > 0);
+    }
+
+    #[test]
+    fn sequential_mode_never_pre_drafts() {
+        let mut d = decoder(false, 11);
+        for _ in 0..10 {
+            let r = d.round();
+            assert_eq!(r.pre_drafted + r.reused + r.wasted, 0);
+            assert_eq!(r.pre_draft_ns, 0);
+            assert_eq!(r.recovered_ns, 0);
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //!   draft is one row behind and performs a catch-up step next round.
 
 use crate::cluster::clock::Nanos;
+use crate::coordinator::overlap::PreDraft;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SeqState {
@@ -38,6 +39,10 @@ pub struct Sequence {
     pub slot: usize,
     /// Valid-row count of the draft cache.
     pub draft_frontier: usize,
+    /// Next-round window drafted ahead inside the previous round's
+    /// in-flight verify window (overlap scheduler); consumed or
+    /// discarded by the next round's reuse classification.
+    pub pre_draft: Option<PreDraft>,
     /// Sim/real time when this sequence can take its next round.
     pub ready_at: Nanos,
     pub arrival_ns: Nanos,
@@ -55,6 +60,7 @@ impl Sequence {
             state: SeqState::Queued,
             slot: usize::MAX,
             draft_frontier: 0,
+            pre_draft: None,
             ready_at: arrival_ns,
             arrival_ns,
             finished_at: 0,

@@ -82,8 +82,12 @@ impl Harness {
         };
 
         // Base Acc: a pure target sample at the workload temperature.
-        let base_cfg =
-            reference_config(engine.manifest().dir.to_str().unwrap(), &profile, profile.temp, seed ^ 0xBA5E);
+        let base_cfg = reference_config(
+            engine.manifest().dir.to_str().unwrap(),
+            &profile,
+            profile.temp,
+            seed ^ 0xBA5E,
+        );
         let base_outputs = run_outputs(&engine, &base_cfg, &h.requests)?;
         h.base_accuracy = h.score_outputs(&base_outputs)?;
         Ok(h)
@@ -183,7 +187,12 @@ impl Harness {
     }
 }
 
-fn reference_config(artifacts_dir: &str, profile: &DatasetProfile, temp: f32, seed: u64) -> DeployConfig {
+fn reference_config(
+    artifacts_dir: &str,
+    profile: &DatasetProfile,
+    temp: f32,
+    seed: u64,
+) -> DeployConfig {
     let mut cfg = DeployConfig {
         artifacts_dir: artifacts_dir.to_string(),
         n_nodes: 2,       // smallest pipeline; token stream is latency-free
@@ -200,7 +209,11 @@ fn reference_config(artifacts_dir: &str, profile: &DatasetProfile, temp: f32, se
     cfg
 }
 
-fn run_outputs(engine: &Rc<Engine>, cfg: &DeployConfig, requests: &[Request]) -> Result<Vec<Vec<i32>>> {
+fn run_outputs(
+    engine: &Rc<Engine>,
+    cfg: &DeployConfig,
+    requests: &[Request],
+) -> Result<Vec<Vec<i32>>> {
     let mut coord = Coordinator::with_engine(engine.clone(), cfg.clone())?;
     let (_, results) = coord.run_workload(requests.to_vec())?;
     Ok(results.into_iter().map(|r| r.tokens).collect())

@@ -26,8 +26,8 @@ use dsd::workload::{dataset, WorkloadGen};
 const VALUED: &[&str] = &[
     "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
     "draft", "draft_variant", "draft_shape", "max_batch", "dataset", "requests", "seed",
-    "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "out",
-    "sweep_nodes",
+    "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "overlap",
+    "out", "sweep_nodes",
 ];
 
 fn main() -> Result<()> {
@@ -62,6 +62,7 @@ Common options:
   --policy P             baseline|eagle3|dsd            [dsd]
   --gamma G              draft window                   [8]
   --draft_shape S        chain | tree:<branching>x<depth>  [chain]
+  --overlap S            speculate-ahead scheduler, on|off [on]
   --temp T               sampling temperature           [1.0]
   --tau T                relaxation coefficient         [0.2]
   --requests N           number of requests             [8]
@@ -75,6 +76,7 @@ fn build_config(args: &cli::Args) -> Result<DeployConfig> {
         cfg.load_file(path)?;
     }
     cfg.apply_args(args)?;
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -105,6 +107,15 @@ fn serve(args: &cli::Args) -> Result<()> {
         report.comm_fraction() * 100.0,
         report.accept.mean_accepted(),
     );
+    if cfg.decode.policy.is_speculative() && cfg.decode.overlap {
+        println!(
+            "  overlap: reuse {:.1}%  hidden {:.1}%  recovered {:.2}ms  wasted/rnd {:.2}",
+            report.accept.reuse_rate() * 100.0,
+            report.accept.overlap_ratio() * 100.0,
+            report.accept.recovered_ns as f64 / 1e6,
+            report.accept.wasted_per_round(),
+        );
+    }
     Ok(())
 }
 

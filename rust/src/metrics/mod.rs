@@ -117,7 +117,11 @@ pub struct RunReport {
 
 impl RunReport {
     pub fn new(label: impl Into<String>) -> RunReport {
-        RunReport { label: label.into(), request_latency: Histogram::latency(), ..Default::default() }
+        RunReport {
+            label: label.into(),
+            request_latency: Histogram::latency(),
+            ..Default::default()
+        }
     }
 
     /// Tokens per second of (simulated) wallclock.

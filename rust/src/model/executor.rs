@@ -159,7 +159,13 @@ impl StageExecutor {
             }
             (StageInput::Hidden(h), false) => {
                 if h.len() != w * m.d_model {
-                    bail!("stage {}: hidden len {} != {}x{}", self.spec.stage_idx, h.len(), w, m.d_model);
+                    bail!(
+                        "stage {}: hidden len {} != {}x{}",
+                        self.spec.stage_idx,
+                        h.len(),
+                        w,
+                        m.d_model
+                    );
                 }
                 HostTensor::f32(h.clone(), vec![w, m.d_model])
             }
@@ -245,7 +251,12 @@ impl StageExecutor {
             (None, true) => HostTensor::i32(window.tokens.clone(), vec![w]),
             (Some(h), false) => {
                 if h.len() != w * m.d_model {
-                    bail!("stage {}: hidden len {} != {w}x{}", self.spec.stage_idx, h.len(), m.d_model);
+                    bail!(
+                        "stage {}: hidden len {} != {w}x{}",
+                        self.spec.stage_idx,
+                        h.len(),
+                        m.d_model
+                    );
                 }
                 HostTensor::f32(h.to_vec(), vec![w, m.d_model])
             }

@@ -76,12 +76,19 @@ pub fn sample_cdf(probs: &[f32], u: f32) -> usize {
 
 /// Sample from logits at a temperature (temp <= 0 → greedy argmax).
 pub fn sample_logits(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
+    sample_logits_with(logits, temp, rng.f32())
+}
+
+/// [`sample_logits`] with an explicit uniform — the counter-based-RNG
+/// form the decode engine uses, whose draws are keyed on position so
+/// they are independent of evaluation order (see `util::rng::uniform_at`).
+pub fn sample_logits_with(logits: &[f32], temp: f32, u: f32) -> usize {
     if temp <= 0.0 {
         return argmax(logits);
     }
     let mut probs = Vec::new();
     softmax_with_temp(logits, temp, &mut probs);
-    sample_cdf(&probs, rng.f32())
+    sample_cdf(&probs, u)
 }
 
 /// Top-k filtering: keep the k largest logits, set the rest to -inf.

@@ -31,6 +31,8 @@ pub use tree::{
     DEFAULT_MAX_TREE_NODES,
 };
 
+use anyhow::{bail, Result};
+
 use crate::model::VerifyKnobs;
 
 /// Which decoding system runs (paper §3.1).
@@ -80,6 +82,11 @@ pub struct DecodeConfig {
     pub max_new_tokens: usize,
     /// RNG seed for draft sampling / acceptance uniforms.
     pub seed: u64,
+    /// Speculate-ahead scheduler: draft round r+1's window while round
+    /// r's verify window is in flight (chain shape; trees fall back to
+    /// the sequential path). Commits byte-identical token streams to
+    /// the sequential scheduler — see `coordinator::overlap`.
+    pub overlap: bool,
 }
 
 impl Default for DecodeConfig {
@@ -97,11 +104,40 @@ impl Default for DecodeConfig {
             lam3: 0.45,
             max_new_tokens: 64,
             seed: 0,
+            overlap: true,
         }
     }
 }
 
 impl DecodeConfig {
+    /// Validate bounds before a run — clear errors at config time
+    /// instead of panics deep in the round loop (`gamma == 0` used to
+    /// underflow the draft-frontier arithmetic in `commit_outcome`).
+    pub fn validate(&self) -> Result<()> {
+        if self.policy.is_speculative() && self.gamma == 0 {
+            bail!(
+                "gamma must be >= 1 for speculative policies (policy '{}', gamma 0); \
+                 use --policy baseline for plain autoregressive decoding",
+                self.policy.name()
+            );
+        }
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens must be >= 1");
+        }
+        if !self.temp.is_finite() {
+            bail!("temp must be a finite number, got {}", self.temp);
+        }
+        if !self.tau.is_finite() || !(0.0..=1.0).contains(&self.tau) {
+            bail!("tau must be in [0, 1] (Eq. 8 mixing coefficient), got {}", self.tau);
+        }
+        for (name, v) in [("lam1", self.lam1), ("lam2", self.lam2), ("lam3", self.lam3)] {
+            if v.is_nan() {
+                bail!("{name} must be a number, got NaN");
+            }
+        }
+        Ok(())
+    }
+
     pub fn knobs(&self) -> VerifyKnobs {
         VerifyKnobs {
             tau: self.tau,
@@ -160,6 +196,37 @@ mod tests {
         };
         assert_eq!(cfg.max_depth(), 3);
         assert_eq!(cfg.max_window(), 2 + 4 + 8 + 1);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        assert!(DecodeConfig::default().validate().is_ok());
+
+        // γ = 0 under a speculative policy used to panic in
+        // commit_outcome's frontier arithmetic; now a config error.
+        let cfg = DecodeConfig { gamma: 0, ..Default::default() };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("gamma") && err.contains("baseline"), "{err}");
+        // ... but γ = 0 is fine for the autoregressive baseline
+        let cfg = DecodeConfig { gamma: 0, policy: Policy::Autoregressive, ..Default::default() };
+        assert!(cfg.validate().is_ok());
+
+        let cfg = DecodeConfig { max_new_tokens: 0, ..Default::default() };
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_new_tokens"));
+
+        for bad_tau in [-0.1f32, 1.5, f32::NAN, f32::INFINITY] {
+            let cfg = DecodeConfig { tau: bad_tau, ..Default::default() };
+            assert!(cfg.validate().is_err(), "tau {bad_tau} must be rejected");
+        }
+        let cfg = DecodeConfig { temp: f32::NAN, ..Default::default() };
+        assert!(cfg.validate().unwrap_err().to_string().contains("temp"));
+        let cfg = DecodeConfig { lam2: f32::NAN, ..Default::default() };
+        assert!(cfg.validate().unwrap_err().to_string().contains("lam2"));
+    }
+
+    #[test]
+    fn overlap_defaults_on() {
+        assert!(DecodeConfig::default().overlap);
     }
 
     #[test]

@@ -145,7 +145,13 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn case(seed: u64, gamma: usize, vocab: usize, corr: f32) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>) {
+    #[allow(clippy::type_complexity)]
+    fn case(
+        seed: u64,
+        gamma: usize,
+        vocab: usize,
+        corr: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>, Vec<f32>, Vec<f32>) {
         let mut rng = Rng::new(seed);
         let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32 * 2.0).collect();
         let d: Vec<f32> = (0..gamma * vocab)
@@ -219,7 +225,14 @@ mod tests {
         for seed in 0..20 {
             let (t, d, toks, ua, us) = case(seed, 8, 64, 0.6);
             // lam3 = 2.0 > 1 makes every token key
-            let pinned = VerifyKnobs { tau: 0.9, lam1: 0.0, lam2: 0.0, lam3: 2.0, temp: 1.0, adaptive: true };
+            let pinned = VerifyKnobs {
+                tau: 0.9,
+                lam1: 0.0,
+                lam2: 0.0,
+                lam3: 2.0,
+                temp: 1.0,
+                adaptive: true,
+            };
             let strict = VerifyKnobs::strict(1.0);
             let a = host_verify(8, 64, &t, &d, &toks, &ua, &us, pinned);
             let b = host_verify(8, 64, &t, &d, &toks, &ua, &us, strict);

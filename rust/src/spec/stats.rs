@@ -3,7 +3,7 @@
 //! tree-shaped rounds (node counts and per-depth acceptance).
 
 /// One verification round's outcome.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct RoundRecord {
     /// Draft window length γ — for tree rounds, the tree depth (the
     /// maximum accepted-path length).
@@ -18,12 +18,38 @@ pub struct RoundRecord {
     /// Draft nodes verified this round (= γ for chains, tree size
     /// otherwise) — what one pipeline pass actually carried.
     pub tree_nodes: usize,
+    /// Tokens drafted ahead for the next round inside this round's
+    /// in-flight verify window (overlap scheduler; 0 sequentially).
+    pub pre_drafted: usize,
+    /// Previous round's pre-drafted tokens this round reused.
+    pub reused: usize,
+    /// Previous round's pre-drafted tokens this round discarded.
+    pub wasted: usize,
+    /// Pre-draft time that ran inside the in-flight window, ns.
+    pub overlap_ns: u64,
+    /// Total pre-draft time charged this round, ns.
+    pub pre_draft_ns: u64,
+    /// Drafting time removed from this round's critical path by
+    /// pre-draft reuse ("stall recovered"), ns.
+    pub recovered_ns: u64,
 }
 
 impl RoundRecord {
-    /// A chain-shaped round (tree_nodes = γ).
-    pub fn chain(gamma: usize, accepted: usize, committed: usize, key_tokens: usize) -> RoundRecord {
-        RoundRecord { gamma, accepted, committed, key_tokens, tree_nodes: gamma }
+    /// A chain-shaped round (tree_nodes = γ), no overlap bookkeeping.
+    pub fn chain(
+        gamma: usize,
+        accepted: usize,
+        committed: usize,
+        key_tokens: usize,
+    ) -> RoundRecord {
+        RoundRecord {
+            gamma,
+            accepted,
+            committed,
+            key_tokens,
+            tree_nodes: gamma,
+            ..Default::default()
+        }
     }
 }
 
@@ -44,6 +70,18 @@ pub struct AcceptanceStats {
     /// k accepted tokens increments depths 1..=k, so
     /// `depth_hist[d] / rounds` is the survival probability of depth `d`.
     pub depth_hist: Vec<u64>,
+    /// Overlap scheduler: tokens drafted ahead inside in-flight windows.
+    pub pre_drafted: u64,
+    /// Pre-drafted tokens later reused as a round's draft window.
+    pub reused_pre_draft: u64,
+    /// Pre-drafted tokens discarded (assumption failed).
+    pub wasted_pre_draft: u64,
+    /// Pre-draft ns that ran inside in-flight verify windows.
+    pub overlap_ns: u64,
+    /// Total pre-draft ns charged.
+    pub pre_draft_ns: u64,
+    /// Drafting ns removed from round critical paths by reuse.
+    pub recovered_ns: u64,
 }
 
 impl AcceptanceStats {
@@ -64,6 +102,12 @@ impl AcceptanceStats {
         for d in 1..=r.accepted {
             self.depth_hist[d] += 1;
         }
+        self.pre_drafted += r.pre_drafted as u64;
+        self.reused_pre_draft += r.reused as u64;
+        self.wasted_pre_draft += r.wasted as u64;
+        self.overlap_ns += r.overlap_ns;
+        self.pre_draft_ns += r.pre_draft_ns;
+        self.recovered_ns += r.recovered_ns;
     }
 
     /// Mean accepted draft tokens per round (k̄).
@@ -116,6 +160,33 @@ impl AcceptanceStats {
         self.key_tokens as f64 / self.draft_tokens as f64
     }
 
+    /// Fraction of pre-drafted tokens the next round actually reused
+    /// (the speculate-ahead hit rate).
+    pub fn reuse_rate(&self) -> f64 {
+        if self.pre_drafted == 0 {
+            return 0.0;
+        }
+        self.reused_pre_draft as f64 / self.pre_drafted as f64
+    }
+
+    /// Fraction of speculate-ahead work that ran inside in-flight verify
+    /// windows (1.0 = fully hidden behind communication; < 1 when
+    /// pre-drafts spill past the return hop). 0 with the scheduler off.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.pre_draft_ns == 0 {
+            return 0.0;
+        }
+        self.overlap_ns as f64 / self.pre_draft_ns as f64
+    }
+
+    /// Mean pre-drafted tokens discarded per round.
+    pub fn wasted_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.wasted_pre_draft as f64 / self.rounds as f64
+    }
+
     pub fn merge(&mut self, other: &AcceptanceStats) {
         self.rounds += other.rounds;
         self.draft_tokens += other.draft_tokens;
@@ -135,6 +206,12 @@ impl AcceptanceStats {
         for (i, &c) in other.depth_hist.iter().enumerate() {
             self.depth_hist[i] += c;
         }
+        self.pre_drafted += other.pre_drafted;
+        self.reused_pre_draft += other.reused_pre_draft;
+        self.wasted_pre_draft += other.wasted_pre_draft;
+        self.overlap_ns += other.overlap_ns;
+        self.pre_draft_ns += other.pre_draft_ns;
+        self.recovered_ns += other.recovered_ns;
     }
 }
 
@@ -147,7 +224,14 @@ mod tests {
     }
 
     fn tree_rec(depth: usize, nodes: usize, accepted: usize) -> RoundRecord {
-        RoundRecord { gamma: depth, accepted, committed: accepted + 1, key_tokens: 0, tree_nodes: nodes }
+        RoundRecord {
+            gamma: depth,
+            accepted,
+            committed: accepted + 1,
+            key_tokens: 0,
+            tree_nodes: nodes,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -188,6 +272,48 @@ mod tests {
         assert_eq!(s.acceptance_rate(), 0.0);
         assert_eq!(s.mean_tree_nodes(), 0.0);
         assert_eq!(s.depth_acceptance(1), 0.0);
+        assert_eq!(s.reuse_rate(), 0.0);
+        assert_eq!(s.overlap_ratio(), 0.0);
+        assert_eq!(s.wasted_per_round(), 0.0);
+    }
+
+    #[test]
+    fn overlap_accounting_aggregates_and_merges() {
+        let mut s = AcceptanceStats::default();
+        // round 1: pre-drafted 4 inside a 2ms window, fully hidden
+        s.record(RoundRecord {
+            pre_drafted: 4,
+            overlap_ns: 2_000_000,
+            pre_draft_ns: 2_000_000,
+            ..rec(4, 4, 0)
+        });
+        // round 2: reused the 4, pre-drafted 4 more, half spilled
+        s.record(RoundRecord {
+            pre_drafted: 4,
+            reused: 4,
+            overlap_ns: 1_000_000,
+            pre_draft_ns: 2_000_000,
+            recovered_ns: 2_500_000,
+            ..rec(4, 1, 0)
+        });
+        // round 3: assumption failed, previous pre-draft wasted
+        s.record(RoundRecord { wasted: 4, ..rec(4, 2, 0) });
+        assert_eq!(s.pre_drafted, 8);
+        assert_eq!(s.reused_pre_draft, 4);
+        assert_eq!(s.wasted_pre_draft, 4);
+        assert!((s.reuse_rate() - 0.5).abs() < 1e-9);
+        assert!((s.overlap_ratio() - 3.0 / 4.0).abs() < 1e-9);
+        assert!((s.wasted_per_round() - 4.0 / 3.0).abs() < 1e-9);
+        assert_eq!(s.recovered_ns, 2_500_000);
+
+        let mut t = AcceptanceStats::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.pre_drafted, 16);
+        assert_eq!(t.reused_pre_draft, 8);
+        assert_eq!(t.overlap_ns, 6_000_000);
+        assert_eq!(t.recovered_ns, 5_000_000);
+        assert!((t.reuse_rate() - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -307,7 +307,12 @@ pub struct Expansion<'a> {
 /// Indices of the top-`k` logits, descending (ties: lower index first).
 fn top_k(logits: &[f32], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| {
+        logits[b]
+            .partial_cmp(&logits[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
     idx.truncate(k);
     idx
 }
@@ -347,7 +352,8 @@ where
 
     // Frontier of nodes to expand at the current level: (node, its
     // expansion-row parent, path from root inclusive).
-    let mut frontier: Vec<(Option<usize>, Option<usize>, Vec<i32>)> = vec![(None, None, Vec::new())];
+    let mut frontier: Vec<(Option<usize>, Option<usize>, Vec<i32>)> =
+        vec![(None, None, Vec::new())];
     let mut p = Vec::new();
     'levels: for level in 1..=depth {
         let mut next: Vec<(Option<usize>, Option<usize>, Vec<i32>)> = Vec::new();
@@ -356,7 +362,8 @@ where
                 break 'levels;
             }
             let row = n_expansions;
-            let logits = expand(&Expansion { node, parent_row, row, path: &path, child_depth: level })?;
+            let logits =
+                expand(&Expansion { node, parent_row, row, path: &path, child_depth: level })?;
             if logits.len() != vocab {
                 bail!("draft expansion returned {} logits, expected vocab {vocab}", logits.len());
             }
@@ -684,7 +691,8 @@ mod tests {
 
     #[test]
     fn build_chain_matches_greedy_argmax() {
-        let (tree, rows) = build_tree(DraftShape::Chain, 4, 1.0, 16, synthetic_expand(11, 16)).unwrap();
+        let (tree, rows) =
+            build_tree(DraftShape::Chain, 4, 1.0, 16, synthetic_expand(11, 16)).unwrap();
         assert_eq!(tree.len(), 4);
         assert!(tree.is_chain_shaped());
         assert_eq!(tree.n_expansions(), 4);

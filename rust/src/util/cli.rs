@@ -6,9 +6,10 @@
 //!
 //! Each entry point passes its own `valued` allowlist (option keys that
 //! consume a value). Keys shared across drivers — `nodes`, `link_ms`,
-//! `gamma`, `draft_shape` (`chain` | `tree:<branching>x<depth>`), … —
-//! should be spelled identically everywhere so configs and muscle memory
-//! transfer between `dsd`, the examples, and the benches.
+//! `gamma`, `draft_shape` (`chain` | `tree:<branching>x<depth>`),
+//! `overlap` (`on` | `off`), … — should be spelled identically
+//! everywhere so configs and muscle memory transfer between `dsd`, the
+//! examples, and the benches.
 
 use std::collections::BTreeMap;
 
@@ -50,6 +51,16 @@ pub fn parse_with(valued: &[&str], argv: impl IntoIterator<Item = String>) -> Re
 /// Parse `std::env::args()` (skipping argv[0]).
 pub fn parse_env(valued: &[&str]) -> Result<Args> {
     parse_with(valued, std::env::args().skip(1))
+}
+
+/// Parse an `on|off` switch value (also accepts true/false, 1/0,
+/// yes/no) — the spelling shared by `--overlap` and config files.
+pub fn parse_on_off(v: &str) -> Result<bool> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        other => bail!("expected on|off, got '{other}'"),
+    }
 }
 
 impl Args {
@@ -133,11 +144,6 @@ fn bail_msg() -> anyhow::Error {
     anyhow!("missing subcommand")
 }
 
-#[allow(unused)]
-fn _unused() -> Result<()> {
-    bail!("")
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +175,17 @@ mod tests {
         assert!(parse_with(&["nodes"], argv("--nodes")).is_err());
         let a = parse_with(&["n"], argv("--n x")).unwrap();
         assert!(a.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn on_off_switches() {
+        assert!(parse_on_off("on").unwrap());
+        assert!(parse_on_off(" ON ").unwrap());
+        assert!(parse_on_off("1").unwrap());
+        assert!(!parse_on_off("off").unwrap());
+        assert!(!parse_on_off("false").unwrap());
+        assert!(!parse_on_off("no").unwrap());
+        assert!(parse_on_off("maybe").is_err());
+        assert!(parse_on_off("").is_err());
     }
 }

@@ -12,6 +12,34 @@ pub struct Rng {
     s: [u64; 4],
 }
 
+/// Mix two seeds into one derived seed (order-sensitive).
+pub fn mix(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.wrapping_mul(0xD1B54A32D192ED03);
+    splitmix64(&mut s)
+}
+
+/// Counter-based uniform in [0, 1): a pure function of
+/// `(seed, stream, a, b)` with the same 24-bit mantissa convention as
+/// [`Rng::f32`].
+///
+/// Components whose draws must be *timing-independent* key their
+/// uniforms on what the draw decides (sequence, position, window slot)
+/// instead of consuming a shared mutable stream. The decode engine
+/// relies on this for the speculate-ahead scheduler: a draft-sampling
+/// uniform for position `p` has the same value whether the step runs
+/// ahead of time (inside the previous round's in-flight verify window)
+/// or on the sequential path, so overlap mode commits byte-identical
+/// token streams.
+pub fn uniform_at(seed: u64, stream: u64, a: u64, b: u64) -> f32 {
+    let mut s = seed
+        ^ stream.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ a.wrapping_mul(0xBF58476D1CE4E5B9)
+        ^ b.wrapping_mul(0x94D049BB133111EB);
+    let _ = splitmix64(&mut s);
+    let z = splitmix64(&mut s);
+    (z >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+}
+
 #[inline]
 fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
@@ -210,6 +238,47 @@ mod tests {
         let ones = (0..n).filter(|_| r.categorical(&w) == 1).count();
         let p = ones as f64 / n as f64;
         assert!((p - 0.75).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn uniform_at_is_pure_and_in_range() {
+        for stream in 0..4u64 {
+            for a in 0..64u64 {
+                let x = uniform_at(7, stream, a, 3);
+                assert!((0.0..1.0).contains(&x), "{x}");
+                assert_eq!(x, uniform_at(7, stream, a, 3), "must be a pure function");
+            }
+        }
+        // distinct keys give distinct draws (no systematic collisions)
+        let mut vals: Vec<u32> = Vec::new();
+        for stream in 0..3u64 {
+            for a in 0..50u64 {
+                for b in 0..4u64 {
+                    vals.push(uniform_at(9, stream, a, b).to_bits());
+                }
+            }
+        }
+        let n = vals.len();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() > n - 3, "too many collisions: {} of {n} unique", vals.len());
+    }
+
+    #[test]
+    fn uniform_at_is_unbiased_enough() {
+        let n = 50_000u64;
+        let mean: f64 = (0..n).map(|i| uniform_at(11, 1, i, 0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn mix_derives_distinct_seeds() {
+        assert_ne!(mix(1, 2), mix(2, 1));
+        assert_ne!(mix(1, 2), mix(1, 3));
+        let mut a = Rng::new(mix(5, 0));
+        let mut b = Rng::new(mix(5, 1));
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
     }
 
     #[test]

@@ -123,6 +123,78 @@ fn dsd_beats_baseline_latency_in_sweet_spot() {
 }
 
 #[test]
+fn empty_prompt_fails_with_clear_error() {
+    common::require_artifacts!();
+    // An empty prompt used to underflow `logits[(plen - 1) * vocab..]`
+    // in prefill and panic; it must surface as a clean error instead.
+    let e = engine();
+    let cfg = base_cfg();
+    let mut coord = Coordinator::with_engine(e, cfg).unwrap();
+    let req = dsd::workload::Request { id: 0, prompt: vec![], max_new_tokens: 8, arrival_ns: 0 };
+    let err = coord.run_workload(vec![req]).unwrap_err().to_string();
+    assert!(err.contains("empty prompt"), "{err}");
+}
+
+#[test]
+fn gamma_zero_rejected_at_construction() {
+    common::require_artifacts!();
+    // γ = 0 under a speculative policy used to panic in commit_outcome
+    // (`k.min(gamma - 1)` underflow); it is now a config-time error.
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.decode.gamma = 0;
+    let err = Coordinator::with_engine(e, cfg)
+        .err()
+        .map(|e| e.to_string())
+        .expect("gamma 0 must be rejected");
+    assert!(err.contains("gamma"), "{err}");
+}
+
+#[test]
+fn overlap_commits_identical_streams_on_engine() {
+    common::require_artifacts!();
+    // The tentpole differential on real artifacts: the speculate-ahead
+    // scheduler must commit byte-identical tokens to the sequential
+    // path — across a multi-request batch (scheduling-order changes
+    // must not leak into the streams) and at sampling temperature.
+    let e = engine();
+    for policy in [Policy::Eagle3, Policy::Dsd] {
+        let mut outs: Vec<Vec<Vec<i32>>> = Vec::new();
+        for overlap in [false, true] {
+            let mut cfg = base_cfg();
+            cfg.max_batch = 2;
+            cfg.decode.policy = policy;
+            cfg.decode.temp = 1.0;
+            cfg.decode.overlap = overlap;
+            let reqs = requests(3, &cfg, &e);
+            let mut coord = Coordinator::with_engine(e.clone(), cfg).unwrap();
+            let (_, results) = coord.run_workload(reqs).unwrap();
+            outs.push(results.into_iter().map(|r| r.tokens).collect());
+        }
+        assert_eq!(outs[0], outs[1], "overlap diverged from sequential ({policy:?})");
+    }
+}
+
+#[test]
+fn overlap_reports_reuse_on_engine() {
+    common::require_artifacts!();
+    // Greedy decoding has the highest guess-hit rate; over enough
+    // tokens the scheduler must record pre-drafts and hide them inside
+    // in-flight windows.
+    let e = engine();
+    let mut cfg = base_cfg();
+    cfg.decode.policy = Policy::Dsd;
+    cfg.decode.temp = 0.0;
+    cfg.decode.gamma = 2;
+    cfg.decode.max_new_tokens = 24;
+    let reqs = requests(2, &cfg, &e);
+    let mut coord = Coordinator::with_engine(e, cfg).unwrap();
+    let (report, _) = coord.run_workload(reqs).unwrap();
+    assert!(report.accept.pre_drafted > 0, "overlap rounds must speculate ahead");
+    assert!(report.accept.overlap_ratio() > 0.0);
+}
+
+#[test]
 fn harness_accuracy_protocol() {
     common::require_artifacts!();
     let e = engine();

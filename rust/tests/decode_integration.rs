@@ -155,6 +155,49 @@ fn real_cluster_matches_sim_mode_greedy() {
 }
 
 #[test]
+fn real_cluster_matches_sim_mode_at_temperature() {
+    common::require_artifacts!();
+    // The decode draws are position-keyed (util::rng::uniform_at), so
+    // the thread-based deployment and the simulated coordinator commit
+    // identical streams even at sampling temperature — previously only
+    // the greedy path was comparable.
+    let e = engine();
+    let prompt = vec![42, 43, 44, 45, 46, 47];
+    let mut cfg = deploy(Policy::Dsd, 1.0, 2);
+    cfg.decode.seed = cfg.seed; // RealCluster keys rng off decode.seed + id
+    let sim_tokens = run(e.clone(), cfg.clone(), &prompt);
+
+    let mut real = RealCluster::launch(
+        artifacts().to_str().unwrap(),
+        2,
+        LinkModel::wan(0.2, 0.0),
+        "d6_s000",
+    )
+    .unwrap();
+    let (res, _) = real.serve_one(0, &prompt, &cfg.decode).unwrap();
+    real.shutdown().unwrap();
+    assert_eq!(res.tokens, sim_tokens, "sampled real deployment diverged from sim mode");
+}
+
+#[test]
+fn tree_rounds_ignore_overlap_flag() {
+    common::require_artifacts!();
+    // Tree-shaped rounds fall back to the sequential schedule; the
+    // overlap flag must not change their token streams.
+    let e = engine();
+    let prompt = vec![3, 141, 59, 26, 53, 58, 97, 9];
+    let mut on = deploy(Policy::Dsd, 1.0, 2);
+    on.decode.shape = dsd::spec::DraftShape::parse("tree:1x4").unwrap();
+    let mut off = on.clone();
+    off.decode.overlap = false;
+    assert_eq!(
+        run(e.clone(), on, &prompt),
+        run(e.clone(), off, &prompt),
+        "tree rounds must be overlap-invariant"
+    );
+}
+
+#[test]
 fn autoregressive_comm_cost_matches_eq3() {
     common::require_artifacts!();
     // AR over N nodes: per token, (N-1) forward hops + 1 return hop at

@@ -1,0 +1,194 @@
+//! Differential tests for the speculate-ahead scheduler (engine-free).
+//!
+//! The load-bearing property: **overlap mode commits byte-identical
+//! token streams to the sequential scheduler** at every seed, policy,
+//! temperature, γ and link latency. Both modes run the
+//! [`OracleChainDecoder`] twin of `DecodeEngine::round_speculative`
+//! (same reuse rules, same position-keyed uniforms as the engine path —
+//! see `coordinator::overlap`); the engine-backed differential in
+//! `decode_integration.rs` / `coordinator_integration.rs` pins the same
+//! property on real artifacts.
+//!
+//! Also here: same-seed reproducibility of *simulated time* over a
+//! mixed-shape round stream (chain + tree) now that tree verification
+//! charges the deterministic calibrated cost instead of its own host
+//! wall-clock.
+
+use dsd::cluster::{LinkModel, PipelineSim, Topology};
+use dsd::coordinator::overlap::host_verify_cost;
+use dsd::coordinator::{OracleChainDecoder, OracleConfig};
+use dsd::model::VerifyKnobs;
+use dsd::spec::{build_tree, host_verify_tree, DraftShape};
+use dsd::util::rng::Rng;
+
+fn knobs_for(policy: &str, temp: f32) -> VerifyKnobs {
+    match policy {
+        "eagle3" => VerifyKnobs::strict(temp),
+        _ => VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp, adaptive: true },
+    }
+}
+
+fn run_stream(cfg: OracleConfig, rounds: usize) -> (Vec<i32>, u64, u64, u64) {
+    let mut dec = OracleChainDecoder::new(cfg, &[3, 141, 59, 26]).unwrap();
+    let mut reused = 0u64;
+    let mut recovered = 0u64;
+    for _ in 0..rounds {
+        let r = dec.round();
+        reused += r.reused as u64;
+        recovered += r.recovered_ns;
+    }
+    (dec.committed.clone(), dec.finish_time(), reused, recovered)
+}
+
+#[test]
+fn overlap_commits_byte_identical_streams() {
+    // The differential property, swept across seeds × policy × temp ×
+    // γ × link latency. Also asserts the sweep is not vacuous: overlap
+    // must actually reuse pre-drafts somewhere, and recover stall time.
+    let mut total_reused = 0u64;
+    let mut total_recovered = 0u64;
+    for seed in 0..4u64 {
+        for policy in ["dsd", "eagle3"] {
+            for temp in [0.0f32, 1.0] {
+                for gamma in [1usize, 2, 4, 8] {
+                    for link_ms in [2.0f64, 15.0] {
+                        let base = OracleConfig {
+                            gamma,
+                            temp,
+                            knobs: knobs_for(policy, temp),
+                            seed: 0xD1FF ^ (seed * 977),
+                            link_ms,
+                            ..Default::default()
+                        };
+                        let seq =
+                            run_stream(OracleConfig { overlap: false, ..base.clone() }, 24);
+                        let ovl = run_stream(OracleConfig { overlap: true, ..base }, 24);
+                        assert_eq!(
+                            seq.0, ovl.0,
+                            "overlap diverged: seed {seed} policy {policy} temp {temp} \
+                             gamma {gamma} link {link_ms}"
+                        );
+                        assert!(
+                            ovl.1 <= seq.1,
+                            "overlap slower: {} vs {} (seed {seed} gamma {gamma} \
+                             link {link_ms})",
+                            ovl.1,
+                            seq.1
+                        );
+                        total_reused += ovl.2;
+                        total_recovered += ovl.3;
+                    }
+                }
+            }
+        }
+    }
+    assert!(total_reused > 0, "sweep never reused a pre-draft — vacuous differential");
+    assert!(total_recovered > 0, "sweep never recovered stall time");
+}
+
+#[test]
+fn overlap_recovers_time_when_drafts_are_reused() {
+    // At a calibration where the pre-draft fits the in-flight gap,
+    // every reuse strictly shortens the run.
+    let base = OracleConfig {
+        gamma: 2,
+        corr: 0.9,
+        seed: 42,
+        link_ms: 15.0,
+        ..Default::default()
+    };
+    let seq = run_stream(OracleConfig { overlap: false, ..base.clone() }, 200);
+    let ovl = run_stream(OracleConfig { overlap: true, ..base }, 200);
+    assert_eq!(seq.0, ovl.0);
+    assert!(ovl.2 > 0, "corr 0.9 / γ 2 must produce full reuses in 200 rounds");
+    assert!(
+        ovl.1 < seq.1,
+        "reused pre-drafts must shorten the run: overlap {} vs sequential {}",
+        ovl.1,
+        seq.1
+    );
+}
+
+#[test]
+fn same_seed_reproducibility_chain_stream() {
+    // Identical configs twice (fresh sims) ⇒ identical tokens AND
+    // identical simulated finish times, overlap on or off.
+    for overlap in [false, true] {
+        let cfg = OracleConfig { overlap, seed: 7, ..Default::default() };
+        let a = run_stream(cfg.clone(), 40);
+        let b = run_stream(cfg, 40);
+        assert_eq!(a.0, b.0, "tokens must reproduce (overlap {overlap})");
+        assert_eq!(a.1, b.1, "sim time must reproduce (overlap {overlap})");
+    }
+}
+
+/// Engine-free mixed-shape round stream (chain rounds interleaved with
+/// tree rounds), all timing through `PipelineSim` with the calibrated
+/// host-verify cost — the accounting `DecodeEngine::round_tree` now
+/// charges instead of wall-clock.
+fn mixed_shape_stream(seed: u64, rounds: usize) -> (Vec<i32>, u64, u64, u64) {
+    let vocab = 32usize;
+    let topo = Topology::uniform(4, LinkModel::wan(5.0, 0.0));
+    let mut sim = PipelineSim::new(topo, seed ^ 0xC1);
+    let mut rng = Rng::new(seed ^ 0x7B33);
+    let mut ctx: Vec<i32> = vec![2, 7, 1, 8];
+    let knobs =
+        VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp: 1.0, adaptive: true };
+    let per_stage = vec![60_000u64; 4];
+    let mut now = 0u64;
+    for r in 0..rounds {
+        // alternate chain-shaped (1x4) and branching (2x3) trees
+        let shape = if r % 2 == 0 {
+            DraftShape::Tree { branching: 1, depth: 4, max_nodes: 64 }
+        } else {
+            DraftShape::Tree { branching: 2, depth: 3, max_nodes: 64 }
+        };
+        let seed_ctx = ctx.clone();
+        let (tree, d_logits) = build_tree(shape, 4, 1.0, vocab, |e| {
+            let mut h = seed ^ 0xD12A;
+            for &t in seed_ctx.iter().rev().take(8).chain(e.path.iter()) {
+                h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64 ^ 0x9E37);
+            }
+            let mut r = Rng::new(h);
+            Ok((0..vocab).map(|_| r.normal() as f32 * 2.0).collect())
+        })
+        .unwrap();
+        let n = tree.len();
+        let draft_done = sim.local_work(now, tree.n_expansions() as u64 * 150_000);
+        let timing = sim.window_pass(draft_done, n + 1, &per_stage, 1024, vocab * 4);
+        let mut t_logits: Vec<f32> = Vec::with_capacity((n + 1) * vocab);
+        for slot in 0..=n {
+            let mut h = seed ^ 0x7A67 ^ slot as u64;
+            for &t in &ctx {
+                h = h.wrapping_mul(0x100000001B3).wrapping_add(t as u64);
+            }
+            let mut r = Rng::new(h);
+            t_logits.extend((0..vocab).map(|_| r.normal() as f32 * 2.0));
+        }
+        let u_accept: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let u_sample: Vec<f32> = (0..=tree.depth()).map(|_| rng.f32()).collect();
+        let out =
+            host_verify_tree(&tree, vocab, &t_logits, &d_logits, &u_accept, &u_sample, knobs);
+        now = sim.local_work(timing.finish, host_verify_cost(n));
+        ctx.extend_from_slice(&out.tokens);
+    }
+    (ctx, now, sim.stats.comm_ns, sim.stats.compute_ns)
+}
+
+#[test]
+fn same_seed_reproducibility_mixed_shape_stream() {
+    // The regression behind this test: round_tree used to charge
+    // `Instant::now()` host wall-clock into PipelineSim, so identical
+    // seeds reported different finish/latency numbers run to run. With
+    // the calibrated cost, every timing figure reproduces exactly.
+    for seed in [1u64, 9, 20250710] {
+        let a = mixed_shape_stream(seed, 24);
+        let b = mixed_shape_stream(seed, 24);
+        assert_eq!(a.0, b.0, "token stream must reproduce (seed {seed})");
+        assert_eq!(a.1, b.1, "finish time must reproduce (seed {seed})");
+        assert_eq!(a.2, b.2, "comm_ns must reproduce (seed {seed})");
+        assert_eq!(a.3, b.3, "compute_ns must reproduce (seed {seed})");
+    }
+    // distinct seeds still explore distinct streams
+    assert_ne!(mixed_shape_stream(1, 24).0, mixed_shape_stream(9, 24).0);
+}

@@ -25,6 +25,7 @@ fn forall2(n: u64, f: impl Fn(&mut Rng)) {
     }
 }
 
+#[allow(clippy::type_complexity)]
 fn random_verify_case(
     rng: &mut Rng,
     gamma: usize,
