@@ -23,7 +23,9 @@
 
 use dsd::coordinator::{OracleChainDecoder, OracleConfig};
 use dsd::model::VerifyKnobs;
+use dsd::util::bench::write_bench_json;
 use dsd::util::cli;
+use dsd::util::json::Value;
 use dsd::util::table::{fnum, Table};
 
 struct ModeRun {
@@ -103,6 +105,7 @@ fn main() -> anyhow::Result<()> {
     let mut all_identical = true;
     let mut total_reused = 0.0f64;
     let mut fail_links: Vec<f64> = Vec::new();
+    let mut json_cells: Vec<Value> = Vec::new();
     for &link_ms in &links {
         let mut table = Table::new(
             format!("sequential vs overlap @ t1={link_ms}ms"),
@@ -146,6 +149,18 @@ fn main() -> anyhow::Result<()> {
                 fnum(ovl.recovered_ms, 2),
                 if identical { "OK".to_string() } else { "DIVERGED".to_string() },
             ]);
+            json_cells.push(Value::obj(&[
+                ("link_ms", link_ms.into()),
+                ("gamma", gamma.into()),
+                ("seq_ms_per_token", seq_ms_tok.into()),
+                ("ovl_ms_per_token", ovl_ms_tok.into()),
+                ("speedup", (seq_ms_tok / ovl_ms_tok).into()),
+                ("reuse_rate", ovl.reuse_rate.into()),
+                ("overlap_ratio", ovl.overlap_ratio.into()),
+                ("wasted_per_round", ovl.wasted_per_round.into()),
+                ("recovered_ms", ovl.recovered_ms.into()),
+                ("identical", identical.into()),
+            ]));
         }
         table.print();
         println!();
@@ -171,6 +186,27 @@ fn main() -> anyhow::Result<()> {
             "FAIL (no end-to-end win at link_ms >= 5 — check calibration)"
         }
     );
+    let json = Value::obj(&[
+        (
+            "config",
+            Value::obj(&[
+                ("rounds", rounds.into()),
+                ("nodes", nodes.into()),
+                ("vocab", vocab.into()),
+                ("corr", (corr as f64).into()),
+                ("temp", (temp as f64).into()),
+                ("seed", seed.into()),
+                ("policy", policy.as_str().into()),
+                ("draft_step_ns", draft_step_ns.into()),
+            ]),
+        ),
+        ("cells", Value::Array(json_cells)),
+        ("differential_pass", all_identical.into()),
+        ("speedup_pass", speedup_ok.into()),
+    ]);
+    let path = write_bench_json("overlap", &json)?;
+    println!("wrote {}", path.display());
+
     if !all_identical || !speedup_ok {
         anyhow::bail!("ablation_overlap smoke criteria failed");
     }

@@ -26,7 +26,9 @@
 use dsd::cluster::{LinkModel, PipelineSim, Topology};
 use dsd::model::VerifyKnobs;
 use dsd::spec::{build_tree, host_verify_tree, AcceptanceStats, DraftShape, RoundRecord};
+use dsd::util::bench::write_bench_json;
 use dsd::util::cli;
+use dsd::util::json::Value;
 use dsd::util::rng::Rng;
 use dsd::util::table::{fnum, Table};
 
@@ -192,6 +194,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut pass_kbar = false;
     let mut comm_checks: Vec<String> = Vec::new();
+    let mut json_cells: Vec<Value> = Vec::new();
     for &link_ms in &links {
         let mut table = Table::new(
             format!("draft-shape sweep @ t1={link_ms}ms"),
@@ -224,6 +227,19 @@ fn main() -> anyhow::Result<()> {
             if ri > 0 && r.k_bar > base_kbar {
                 pass_kbar = true;
             }
+            json_cells.push(Value::obj(&[
+                ("link_ms", link_ms.into()),
+                ("shape", r.label.as_str().into()),
+                ("nodes_per_round", r.nodes_per_round.into()),
+                ("k_bar", r.k_bar.into()),
+                ("mean_accepted", r.k_bar.into()),
+                ("avg_len", r.avg_len.into()),
+                ("ms_per_token", r.ms_per_token.into()),
+                ("speedup", (base_ms_tok / r.ms_per_token).into()),
+                ("comm_ms_per_round", r.comm_ms_per_round.into()),
+                ("bytes_per_round", r.bytes_per_round.into()),
+                ("sync_rounds", r.sync_rounds.into()),
+            ]));
         }
         table.print();
 
@@ -274,5 +290,24 @@ fn main() -> anyhow::Result<()> {
             "FAIL (no tree shape beat the chain baseline — check corr/shape settings)"
         }
     );
+
+    let json = Value::obj(&[
+        (
+            "config",
+            Value::obj(&[
+                ("rounds", rounds.into()),
+                ("nodes", nodes.into()),
+                ("vocab", vocab.into()),
+                ("corr", (corr as f64).into()),
+                ("seed", seed.into()),
+                ("policy", policy.as_str().into()),
+                ("shapes", shape_spec.as_str().into()),
+            ]),
+        ),
+        ("cells", Value::Array(json_cells)),
+        ("kbar_pass", pass_kbar.into()),
+    ]);
+    let path = write_bench_json("tree", &json)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -18,12 +18,15 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::topology::LinkModel;
-use crate::coordinator::overlap::{accept_uniform, draft_uniform, sample_uniform, stream_seed};
+use crate::control::ControllerKind;
+use crate::coordinator::overlap::{
+    accept_uniform, draft_uniform, sample_uniform, stream_seed, PreDraft,
+};
 use crate::model::kv::KvCache;
 use crate::model::shard::{plan_shards, ShardSpec};
 use crate::model::{DraftExecutor, StageExecutor, StageInput, VerifyExecutor, VerifyKnobs};
 use crate::runtime::Engine;
-use crate::sampling::sample_logits_with;
+use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::{AcceptanceStats, DecodeConfig, Policy, RoundRecord};
 
 /// Wire messages between node threads.
@@ -229,6 +232,13 @@ impl RealCluster {
                 cfg.shape.name()
             );
         }
+        if cfg.controller != ControllerKind::Static {
+            bail!(
+                "the real-cluster driver runs the static controller only; adaptive \
+                 controllers (--controller {}) run on the simulated coordinator",
+                cfg.controller.name()
+            );
+        }
         if prompt.is_empty() {
             bail!("request {id} has an empty prompt — prefill needs at least one token");
         }
@@ -368,6 +378,16 @@ impl RealCluster {
     /// stalls become draft compute, the paper's thesis made literal.
     /// `depth` windows may be in flight at once (FIFO channel order keeps
     /// results matchable).
+    ///
+    /// With `cfg.overlap` on, the leader additionally **pre-drafts the
+    /// same sequence's next window** right after dispatching its verify
+    /// window (the port of `coordinator::overlap`'s speculate-ahead
+    /// scheduler to the thread deployment): the assume-all-accepted
+    /// catch-up step, a bonus-token guess, and γ window steps, reused
+    /// wholesale when the round fully accepts and the guess matches.
+    /// Both drafting kinds share the position-keyed uniform streams, so
+    /// commits stay byte-identical to the simulated coordinator at any
+    /// temperature — pinned by `decode_integration.rs`.
     pub fn serve_interleaved(
         &mut self,
         requests: &[(u64, Vec<i32>)],
@@ -383,6 +403,13 @@ impl RealCluster {
                 cfg.shape.name()
             );
         }
+        if cfg.controller != ControllerKind::Static {
+            bail!(
+                "the real-cluster driver runs the static controller only; adaptive \
+                 controllers (--controller {}) run on the simulated coordinator",
+                cfg.controller.name()
+            );
+        }
         let m = self.dims();
         struct Run {
             id: u64,
@@ -392,6 +419,9 @@ impl RealCluster {
             rounds: u64,
             start: Instant,
             done: bool,
+            /// Speculate-ahead window drafted while this run's verify
+            /// window was on the wire.
+            pre: Option<PreDraft>,
         }
         let mut runs: Vec<Run> = Vec::new();
         for (id, prompt) in requests {
@@ -415,7 +445,16 @@ impl RealCluster {
             let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
             let u = sample_uniform(sseed, plen - 1, 0);
             committed.push(sample_logits_with(row, cfg.temp, u) as i32);
-            runs.push(Run { id: *id, committed, plen, sseed, rounds: 0, start, done: false });
+            runs.push(Run {
+                id: *id,
+                committed,
+                plen,
+                sseed,
+                rounds: 0,
+                start,
+                done: false,
+                pre: None,
+            });
         }
 
         // In-flight window: (run index, draft tokens, draft logits, i).
@@ -439,8 +478,26 @@ impl RealCluster {
                     continue;
                 }
                 let i = run.committed.len() - 1;
-                // draft locally (catch-up + gamma steps)
-                let (d_tokens, d_logits) = {
+                // draft locally — reusing the speculate-ahead window when
+                // its assume-all-accepted continuation held (same rules
+                // as DecodeEngine::round_speculative)
+                let pre = run.pre.take();
+                let mut full_reuse = false;
+                if let Some(pd) = &pre {
+                    if i == pd.next_base {
+                        if let Some(entry) = self.draft_caches.get_mut(&run.id) {
+                            // the catch-up row (input d_γ) is valid
+                            entry.1 = entry.1.max(pd.anchor_pos + 1);
+                        }
+                        if pd.guess == run.committed[i] && pd.tokens.len() == gamma {
+                            full_reuse = true;
+                        }
+                    }
+                }
+                let (d_tokens, d_logits) = if full_reuse {
+                    let pd = pre.expect("checked above");
+                    (pd.tokens, pd.logits)
+                } else {
                     let (cache, frontier) = self
                         .draft_caches
                         .get_mut(&run.id)
@@ -480,6 +537,47 @@ impl RealCluster {
                         sent_at: Instant::now(),
                     })
                     .map_err(|_| anyhow!("worker chain closed"))?;
+
+                // speculate ahead while this window is on the wire: the
+                // assume-all-accepted catch-up step + bonus guess + γ
+                // window steps, exactly the sim scheduler's pre-draft
+                let len_next = run.committed.len() + gamma + 1;
+                let generated_next = run.committed.len() - run.plen + gamma + 1;
+                if cfg.overlap
+                    && generated_next < cfg.max_new_tokens
+                    && len_next + gamma + 1 < m.max_seq
+                    && i + 2 * gamma < m.max_seq
+                {
+                    let anchor_pos = i + gamma;
+                    let next_base = i + gamma + 1;
+                    let (cache, _) = self
+                        .draft_caches
+                        .get_mut(&run.id)
+                        .ok_or_else(|| anyhow!("sequence {} missing draft cache", run.id))?;
+                    let u = draft_uniform(run.sseed, anchor_pos);
+                    let (_, head_logits, _) =
+                        self.draft.step(d_tokens[gamma - 1], cache, anchor_pos, cfg.temp, u)?;
+                    let guess = argmax(&head_logits) as i32;
+                    let mut toks: Vec<i32> = Vec::with_capacity(gamma);
+                    let mut rows: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
+                    let mut prev = guess;
+                    for j in 0..gamma {
+                        let u = draft_uniform(run.sseed, next_base + j);
+                        let (tok, logits, _) =
+                            self.draft.step(prev, cache, next_base + j, cfg.temp, u)?;
+                        toks.push(tok);
+                        rows.extend_from_slice(&logits);
+                        prev = tok;
+                    }
+                    run.pre = Some(PreDraft {
+                        next_base,
+                        anchor_pos,
+                        guess,
+                        tokens: toks,
+                        logits: rows,
+                        draft_ns: 0,
+                    });
+                }
                 inflight.push_back((ri, d_tokens, d_logits, i));
             }
 

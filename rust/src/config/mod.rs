@@ -12,6 +12,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::{LinkModel, Topology};
+use crate::control::ControllerKind;
 use crate::spec::{DecodeConfig, DraftShape, Policy};
 use crate::util::cli::{parse_on_off, Args};
 
@@ -164,6 +165,9 @@ impl DeployConfig {
                 self.decode.overlap = parse_on_off(value)
                     .map_err(|_| anyhow::anyhow!("overlap expects on|off, got '{value}'"))?
             }
+            "decode.controller" | "controller" => {
+                self.decode.controller = ControllerKind::parse(value)?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -193,7 +197,8 @@ impl DeployConfig {
              lam2 = {}\n\
              lam3 = {}\n\
              max_new_tokens = {}\n\
-             overlap = \"{}\"\n",
+             overlap = \"{}\"\n\
+             controller = \"{}\"\n",
             self.artifacts_dir,
             self.n_nodes,
             self.link_ms,
@@ -214,6 +219,7 @@ impl DeployConfig {
             self.decode.lam3,
             self.decode.max_new_tokens,
             if self.decode.overlap { "on" } else { "off" },
+            self.decode.controller.name(),
         )
     }
 }
@@ -268,6 +274,7 @@ mod tests {
         cfg.set("policy", "eagle3").unwrap();
         cfg.set("draft_shape", "tree:4x3").unwrap();
         cfg.set("overlap", "off").unwrap();
+        cfg.set("controller", "cost-optimal").unwrap();
         let text = cfg.to_toml();
         let mut cfg2 = DeployConfig::default();
         let kv = parse_toml_lite(&text).unwrap();
@@ -279,6 +286,19 @@ mod tests {
         assert_eq!(cfg2.decode.policy, Policy::Eagle3);
         assert_eq!(cfg2.decode.shape, cfg.decode.shape);
         assert!(!cfg2.decode.overlap);
+        assert_eq!(cfg2.decode.controller, ControllerKind::CostOptimal);
+    }
+
+    #[test]
+    fn controller_key_parses_kinds() {
+        let mut cfg = DeployConfig::default();
+        assert_eq!(cfg.decode.controller, ControllerKind::Static);
+        cfg.set("controller", "aimd").unwrap();
+        assert_eq!(cfg.decode.controller, ControllerKind::Aimd);
+        cfg.set("decode.controller", "static").unwrap();
+        assert_eq!(cfg.decode.controller, ControllerKind::Static);
+        let err = cfg.set("controller", "pid").unwrap_err().to_string();
+        assert!(err.contains("accepted forms"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! The closed-form expected-round-time model the controllers minimize.
+//!
+//! One speculative round verifies a flattened window of `W = nodes + 1`
+//! slots (γ drafted tokens + the root slot for chains; the whole tree +
+//! root for tree shapes) in exactly one pipeline pass:
+//!
+//! ```text
+//! T = D·t_draft                         leader-local drafting (D steps)
+//!   + W·t_pass                          per-stage compute, summed over stages
+//!   + (N−1)·hop(W·b_fwd)                forward hops (the paper's (N−1)·t1)
+//!   + hop(W·b_ret)                      logits return hop
+//!   + t_vbase + nodes·t_vnode           leader-local verification
+//! ```
+//!
+//! with `hop(bytes) = t1 + bytes/bandwidth` — term for term the charges
+//! [`PipelineSim`](crate::cluster::PipelineSim) makes for the same round,
+//! so [`CostModel::round_time_ns`] matches a fresh simulator **exactly**
+//! (pinned by `tests/control_props.rs`). The expectation layer divides by
+//! the expected committed tokens per round: the geometric series
+//! `E[k+1] = (1 − α^{γ+1})/(1 − α)` for chains, and its per-level
+//! generalization for trees (level survival `1 − (1−α)^b` under top-b
+//! branching). Dividing Eq. 5's saving `(N−1)·t1·(k−1)/k` by tokens is
+//! exactly minimizing `T/E[tokens]` — the objective below.
+//!
+//! The model also carries PR 2's overlap recovery term: with the
+//! speculate-ahead scheduler, a fully accepted round whose bonus guess
+//! hits reuses the pre-drafted window and removes the next round's draft
+//! term from the critical path, so `E[T] −= p_reuse · D·t_draft` with
+//! `p_reuse = α^γ · p_guess` (clamped to the in-flight gap the pre-draft
+//! hides in). The controller always models the scheduler as on — its
+//! decisions must not depend on the runtime `overlap` flag, or the
+//! overlap ≡ sequential differential would break.
+
+use crate::cluster::clock::Nanos;
+use crate::spec::DraftShape;
+
+/// Prior probability the pre-draft's bonus-token guess matches the
+/// committed bonus token. Deliberately a constant: the measured guess-hit
+/// rate lives in overlap-scheduling fields the estimator must not read
+/// (they are zero in sequential mode).
+pub const GUESS_HIT_PRIOR: f64 = 0.5;
+
+/// Engine-free calibration constants, shared with the oracle twin
+/// (`OracleConfig` defaults): full-pipeline marginal compute per window
+/// token and leader-local cost of one draft step. Decisions use these
+/// rather than measured wall-clock so the decision stream is identical
+/// across sim and real deployments.
+pub const CAL_PER_TOKEN_PASS_NS: Nanos = 240_000;
+pub const CAL_DRAFT_STEP_NS: Nanos = 600_000;
+
+/// Calibration of one deployment's round-time terms.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Pipeline stages (the paper's N).
+    pub nodes: usize,
+    /// Per-link one-way base latency (t1), ns.
+    pub link_ns: Nanos,
+    /// Link bandwidth, bytes/second (0 = infinite).
+    pub bandwidth_bps: u64,
+    /// Full-pipeline marginal compute per window token, ns (split evenly
+    /// across stages, mirroring `PipelineSim::window_pass`).
+    pub per_token_pass_ns: Nanos,
+    /// Leader-local cost of one draft step, ns.
+    pub draft_step_ns: Nanos,
+    /// Leader-local verification: fixed base + per-node term, ns.
+    pub verify_base_ns: Nanos,
+    pub verify_per_node_ns: Nanos,
+    /// Forward-hop payload per window token (activations), bytes.
+    pub fwd_bytes_per_token: usize,
+    /// Return-hop payload per window token (logits), bytes.
+    pub ret_bytes_per_token: usize,
+}
+
+impl CostModel {
+    /// Calibration for a deployment: topology terms from the config,
+    /// payload widths from the model dims, engine-free compute constants
+    /// (matching the discrete-event benches' calibration).
+    pub fn from_deploy(
+        cfg: &crate::config::DeployConfig,
+        d_model: usize,
+        vocab: usize,
+    ) -> CostModel {
+        CostModel {
+            nodes: cfg.n_nodes.max(1),
+            link_ns: (cfg.link_ms * 1e6) as Nanos,
+            bandwidth_bps: if cfg.link_gbps <= 0.0 {
+                0
+            } else {
+                (cfg.link_gbps * 1e9 / 8.0) as u64
+            },
+            per_token_pass_ns: CAL_PER_TOKEN_PASS_NS,
+            draft_step_ns: CAL_DRAFT_STEP_NS,
+            verify_base_ns: crate::coordinator::overlap::HOST_VERIFY_BASE_NS,
+            verify_per_node_ns: crate::coordinator::overlap::HOST_VERIFY_PER_NODE_NS,
+            fwd_bytes_per_token: d_model * 4,
+            ret_bytes_per_token: vocab * 4,
+        }
+    }
+
+    /// One link traversal for a message of `bytes` — the same arithmetic
+    /// as `LinkModel::transfer_time` with jitter off.
+    pub fn hop_ns(&self, bytes: usize) -> Nanos {
+        let bw = if self.bandwidth_bps == 0 {
+            0
+        } else {
+            (bytes as u128 * 1_000_000_000u128 / self.bandwidth_bps as u128) as Nanos
+        };
+        self.link_ns + bw
+    }
+
+    /// Deterministic single-round latency: `draft_steps` leader-local
+    /// draft steps, one flattened pass over a window of `window_nodes`
+    /// draft nodes (+ the root slot), leader-local verification. Matches
+    /// a fresh `PipelineSim` charging the same round exactly.
+    pub fn round_time_ns(&self, window_nodes: usize, draft_steps: usize) -> Nanos {
+        let width = window_nodes + 1;
+        let per_stage = self.per_token_pass_ns / self.nodes as Nanos;
+        let compute = per_stage * width as Nanos * self.nodes as Nanos;
+        let mut comm: Nanos = 0;
+        if self.nodes > 1 {
+            comm += (self.nodes as Nanos - 1) * self.hop_ns(width * self.fwd_bytes_per_token);
+            comm += self.hop_ns(width * self.ret_bytes_per_token);
+        }
+        let draft = draft_steps as Nanos * self.draft_step_ns;
+        let verify = self.verify_base_ns + window_nodes as Nanos * self.verify_per_node_ns;
+        draft + compute + comm + verify
+    }
+
+    /// The in-flight gap after stage 0 releases the window — what the
+    /// speculate-ahead pre-draft can hide inside (everything downstream
+    /// of the leader's own compute).
+    pub fn inflight_gap_ns(&self, window_nodes: usize) -> Nanos {
+        if self.nodes <= 1 {
+            return 0;
+        }
+        let width = window_nodes + 1;
+        let per_stage = self.per_token_pass_ns / self.nodes as Nanos;
+        let downstream_compute = per_stage * width as Nanos * (self.nodes as Nanos - 1);
+        let comm = (self.nodes as Nanos - 1) * self.hop_ns(width * self.fwd_bytes_per_token)
+            + self.hop_ns(width * self.ret_bytes_per_token);
+        downstream_compute + comm
+    }
+
+    /// Expected committed tokens per round (accepted span + the
+    /// correction/bonus token) at per-token acceptance `alpha`.
+    pub fn expected_committed(shape: DraftShape, gamma: usize, alpha: f64) -> f64 {
+        let alpha = alpha.clamp(0.0, 0.9999);
+        match shape {
+            DraftShape::Chain => {
+                // E[k + 1] = sum_{j=0..=γ} α^j = (1 − α^{γ+1}) / (1 − α)
+                (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+            }
+            DraftShape::Tree { branching, depth, max_nodes } => {
+                // Top-b branching: a level survives if any of its
+                // candidates is accepted. The node cap truncates deep
+                // levels, shrinking their effective branching (a 4x3
+                // tree capped at 64 nodes has only 44 of 64 leaves) —
+                // price that, or capped trees look better than they are.
+                let mut committed = 1.0; // correction/bonus token
+                let mut surv = 1.0;
+                let mut level = 1usize; // parent count of the next level
+                let mut counted = 0usize;
+                for _ in 0..depth {
+                    let next = level
+                        .saturating_mul(branching)
+                        .min(max_nodes.saturating_sub(counted));
+                    if next == 0 {
+                        break;
+                    }
+                    let eff_b = (next as f64 / level as f64).min(branching as f64);
+                    let p = 1.0 - (1.0 - alpha).powf(eff_b);
+                    surv *= p;
+                    committed += surv;
+                    counted += next;
+                    level = next;
+                }
+                committed
+            }
+        }
+    }
+
+    /// Approximate leader-local draft steps a round of this shape needs:
+    /// the catch-up step plus one step per expansion (γ window steps for
+    /// chains; root + internal-node expansions for trees).
+    pub fn draft_steps(shape: DraftShape, gamma: usize) -> usize {
+        match shape {
+            DraftShape::Chain => gamma + 1,
+            DraftShape::Tree { branching, depth, max_nodes } => {
+                // expansions = 1 (root) + nodes at depth < depth_max;
+                // mirror the level-by-level cap of DraftShape::max_nodes_or.
+                let total = shape.max_nodes_or(gamma).min(max_nodes);
+                let mut last_level = 1usize;
+                let mut counted = 0usize;
+                for _ in 0..depth {
+                    last_level = last_level.saturating_mul(branching);
+                    if counted + last_level >= total {
+                        last_level = total - counted;
+                        break;
+                    }
+                    counted += last_level;
+                }
+                1 + total.saturating_sub(last_level)
+            }
+        }
+    }
+
+    /// Expected round time at per-token acceptance `alpha`, including
+    /// the speculate-ahead recovery term (modeled as always on — see the
+    /// module docs for why the runtime flag must not leak in here).
+    pub fn expected_round_ns(&self, shape: DraftShape, gamma: usize, alpha: f64) -> f64 {
+        let window_nodes = shape.max_nodes_or(gamma);
+        let draft_steps = Self::draft_steps(shape, gamma);
+        let base = self.round_time_ns(window_nodes, draft_steps) as f64;
+        match shape {
+            DraftShape::Chain => {
+                let draft_cost = draft_steps as f64 * self.draft_step_ns as f64;
+                let hidden = draft_cost.min(self.inflight_gap_ns(window_nodes) as f64);
+                let p_reuse = alpha.clamp(0.0, 1.0).powi(gamma as i32) * GUESS_HIT_PRIOR;
+                base - p_reuse * hidden
+            }
+            // Tree rounds run the sequential schedule (no pre-draft path
+            // through a branching tree yet — see ROADMAP), and they
+            // draft in scratch cache clones, leaving the pooled draft
+            // cache at the committed frontier — so every tree round also
+            // replays the previous round's ~E[committed] commits through
+            // the draft model (decode.rs charges that replay; price it
+            // here or trees look cheaper than they run).
+            DraftShape::Tree { .. } => {
+                let replay = Self::expected_committed(shape, gamma, alpha)
+                    * self.draft_step_ns as f64;
+                base + replay
+            }
+        }
+    }
+
+    /// The controllers' objective: expected ns per committed token.
+    pub fn expected_ns_per_token(&self, shape: DraftShape, gamma: usize, alpha: f64) -> f64 {
+        self.expected_round_ns(shape, gamma, alpha) / Self::expected_committed(shape, gamma, alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(link_ms: f64) -> CostModel {
+        CostModel {
+            nodes: 4,
+            link_ns: (link_ms * 1e6) as Nanos,
+            bandwidth_bps: 0,
+            per_token_pass_ns: 240_000,
+            draft_step_ns: 600_000,
+            verify_base_ns: 100_000,
+            verify_per_node_ns: 2_000,
+            fwd_bytes_per_token: 1024,
+            ret_bytes_per_token: 256,
+        }
+    }
+
+    #[test]
+    fn round_time_components() {
+        let m = model(15.0);
+        // γ=4 chain: width 5, compute 5*240k, comm 4 hops at 15ms,
+        // draft 5 steps, verify base + 4 nodes.
+        let t = m.round_time_ns(4, 5);
+        let expect = 5 * 600_000 + 5 * 240_000 + 4 * 15_000_000 + 100_000 + 4 * 2_000;
+        assert_eq!(t, expect);
+        // single node: no hops at all
+        let m1 = CostModel { nodes: 1, ..m };
+        let t1 = m1.round_time_ns(4, 5);
+        assert_eq!(t1, 5 * 600_000 + 5 * 240_000 + 100_000 + 4 * 2_000);
+    }
+
+    #[test]
+    fn bandwidth_term_mirrors_link_model() {
+        let m = CostModel { bandwidth_bps: 1_000_000_000, ..model(1.0) };
+        // 1 MB at 1 GB/s = 1 ms on top of the base
+        assert_eq!(m.hop_ns(1_000_000), 2_000_000);
+        assert_eq!(model(1.0).hop_ns(usize::MAX / 2), 1_000_000);
+    }
+
+    #[test]
+    fn expected_committed_chain_series() {
+        // α = 0: exactly the correction token.
+        assert!((CostModel::expected_committed(DraftShape::Chain, 8, 0.0) - 1.0).abs() < 1e-9);
+        // α = 0.5, γ = 2: 1 + 0.5 + 0.25 = 1.75
+        let e = CostModel::expected_committed(DraftShape::Chain, 2, 0.5);
+        assert!((e - 1.75).abs() < 1e-9);
+        // monotone in γ and α
+        assert!(
+            CostModel::expected_committed(DraftShape::Chain, 8, 0.8)
+                > CostModel::expected_committed(DraftShape::Chain, 4, 0.8)
+        );
+        assert!(
+            CostModel::expected_committed(DraftShape::Chain, 4, 0.9)
+                > CostModel::expected_committed(DraftShape::Chain, 4, 0.5)
+        );
+    }
+
+    #[test]
+    fn expected_committed_tree_beats_chain_at_equal_depth() {
+        let chain = CostModel::expected_committed(DraftShape::Chain, 4, 0.5);
+        let tree = CostModel::expected_committed(
+            DraftShape::Tree { branching: 3, depth: 4, max_nodes: 64 },
+            4,
+            0.5,
+        );
+        assert!(tree > chain, "tree {tree} vs chain {chain}");
+    }
+
+    #[test]
+    fn draft_steps_counts_expansions() {
+        assert_eq!(CostModel::draft_steps(DraftShape::Chain, 4), 5);
+        // 2x3 tree: 2 + 4 + 8 nodes; expansions = root + 6 internal = 7
+        let shape = DraftShape::Tree { branching: 2, depth: 3, max_nodes: 64 };
+        assert_eq!(CostModel::draft_steps(shape, 4), 7);
+        // capped tree: 4x3 capped at 64 nodes (4 + 16 + 44)
+        let capped = DraftShape::Tree { branching: 4, depth: 3, max_nodes: 64 };
+        assert_eq!(CostModel::draft_steps(capped, 4), 1 + 20);
+    }
+
+    #[test]
+    fn per_token_objective_prefers_long_windows_on_slow_links() {
+        let slow = model(15.0);
+        // high acceptance: γ=8 amortizes the 60ms round better than γ=2
+        let t2 = slow.expected_ns_per_token(DraftShape::Chain, 2, 0.85);
+        let t8 = slow.expected_ns_per_token(DraftShape::Chain, 8, 0.85);
+        assert!(t8 < t2, "γ8 {t8} vs γ2 {t2}");
+        // at near-zero acceptance the long window only wastes drafting
+        let t2lo = slow.expected_ns_per_token(DraftShape::Chain, 2, 0.05);
+        let t8lo = slow.expected_ns_per_token(DraftShape::Chain, 8, 0.05);
+        assert!(t2lo < t8lo, "γ2 {t2lo} vs γ8 {t8lo}");
+    }
+
+    #[test]
+    fn overlap_recovery_shrinks_expected_chain_time() {
+        let m = model(15.0);
+        let with = m.expected_round_ns(DraftShape::Chain, 4, 0.9);
+        let base = m.round_time_ns(4, 5) as f64;
+        assert!(with < base, "recovery term must discount the round: {with} vs {base}");
+        // gap clamp: recovery never exceeds the draft cost itself
+        assert!(base - with <= 5.0 * 600_000.0 + 1e-6);
+    }
+
+    #[test]
+    fn tree_wins_when_acceptance_is_low_and_links_slow() {
+        let m = model(20.0);
+        let tree = DraftShape::Tree { branching: 3, depth: 4, max_nodes: 64 };
+        let best_chain = (1..=8)
+            .map(|g| m.expected_ns_per_token(DraftShape::Chain, g, 0.5))
+            .fold(f64::INFINITY, f64::min);
+        let t_tree = m.expected_ns_per_token(tree, 4, 0.5);
+        assert!(
+            t_tree < best_chain,
+            "wide tree must beat every chain at α=0.5, t1=20ms: {t_tree} vs {best_chain}"
+        );
+    }
+}

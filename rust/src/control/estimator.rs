@@ -1,0 +1,183 @@
+//! Per-sequence acceptance estimation: a discounted Beta posterior over
+//! the per-token draft acceptance probability, plus the key-token rate
+//! used by the τ model.
+//!
+//! Purity contract: the estimator consumes only the sampling-determined
+//! outcome of a round — offered window length, accepted length, key
+//! tokens. It must never see timing (`*_ns`) or overlap-scheduling
+//! fields, which differ between the overlap and sequential schedulers;
+//! this is what keeps controller decisions identical across scheduler
+//! modes and across sim/real deployments.
+
+/// Discounted Beta posterior over per-token acceptance.
+///
+/// Each round contributes `accepted` successes and one failure iff the
+/// round rejected before exhausting the window (the first rejection ends
+/// a chain round; deeper slots carry no information). Old evidence is
+/// exponentially discounted so the estimate tracks drift within a
+/// sequence.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    /// Discounted accepted-token pseudo-count (Beta α).
+    acc: f64,
+    /// Discounted rejection pseudo-count (Beta β).
+    rej: f64,
+    /// Discounted key-token count.
+    key: f64,
+    /// Discounted offered-token count (key-rate denominator).
+    offered: f64,
+    /// Per-round discount on old evidence.
+    decay: f64,
+    last_gamma: usize,
+    last_accepted: usize,
+    rounds: u64,
+}
+
+/// Prior pseudo-counts: a weakly-held 0.75 acceptance prior (about one
+/// round's worth of evidence), matching the calibrated draft ladder's
+/// typical agreement.
+const PRIOR_ACC: f64 = 3.0;
+const PRIOR_REJ: f64 = 1.0;
+/// Default evidence discount (≈ 10-round memory).
+const DEFAULT_DECAY: f64 = 0.9;
+
+impl Default for AcceptanceEstimator {
+    fn default() -> Self {
+        AcceptanceEstimator::new()
+    }
+}
+
+impl AcceptanceEstimator {
+    pub fn new() -> AcceptanceEstimator {
+        AcceptanceEstimator {
+            acc: PRIOR_ACC,
+            rej: PRIOR_REJ,
+            key: 0.0,
+            offered: 0.0,
+            decay: DEFAULT_DECAY,
+            last_gamma: 0,
+            last_accepted: 0,
+            rounds: 0,
+        }
+    }
+
+    /// Record one round's outcome: `offered` drafted positions along the
+    /// accepted path's dimension (γ for chains, tree depth for trees),
+    /// `accepted` of which were accepted, with `key_tokens` flagged.
+    pub fn observe(&mut self, offered: usize, accepted: usize, key_tokens: usize) {
+        let accepted = accepted.min(offered);
+        self.acc = self.decay * self.acc + accepted as f64;
+        self.rej = self.decay * self.rej + if accepted < offered { 1.0 } else { 0.0 };
+        self.key = self.decay * self.key + key_tokens as f64;
+        self.offered = self.decay * self.offered + offered as f64;
+        self.last_gamma = offered;
+        self.last_accepted = accepted;
+        self.rounds += 1;
+    }
+
+    /// Posterior mean of the per-token acceptance probability, kept
+    /// strictly inside (0, 1) so geometric-series expectations stay
+    /// finite.
+    pub fn rate(&self) -> f64 {
+        (self.acc / (self.acc + self.rej)).clamp(0.01, 0.995)
+    }
+
+    /// Fraction of drafted tokens flagged as key (Eq. 7 selectivity) —
+    /// key tokens are exempt from τ relaxation, so the τ model scales its
+    /// acceptance boost by `1 − key_rate()`.
+    pub fn key_rate(&self) -> f64 {
+        if self.offered <= 0.0 {
+            return 0.0;
+        }
+        (self.key / self.offered).clamp(0.0, 1.0)
+    }
+
+    /// Probability a chain round of length `gamma` accepts everything.
+    pub fn full_accept_prob(&self, gamma: usize) -> f64 {
+        self.rate().powi(gamma as i32)
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn last_gamma(&self) -> usize {
+        self.last_gamma
+    }
+
+    pub fn last_accepted(&self) -> usize {
+        self.last_accepted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prior_is_optimistic_but_weak() {
+        let e = AcceptanceEstimator::new();
+        assert!((e.rate() - 0.75).abs() < 1e-9);
+        assert_eq!(e.rounds(), 0);
+        assert_eq!(e.key_rate(), 0.0);
+    }
+
+    #[test]
+    fn converges_to_empirical_rate() {
+        // Rounds of γ=4 with 2 accepted + 1 rejection each: per-token
+        // acceptance evidence 2/(2+1) = 2/3 per round.
+        let mut e = AcceptanceEstimator::new();
+        for _ in 0..200 {
+            e.observe(4, 2, 0);
+        }
+        assert!((e.rate() - 2.0 / 3.0).abs() < 0.05, "{}", e.rate());
+
+        // All-accept rounds push the rate toward the cap.
+        let mut hi = AcceptanceEstimator::new();
+        for _ in 0..200 {
+            hi.observe(8, 8, 0);
+        }
+        assert!(hi.rate() > 0.97, "{}", hi.rate());
+        // Immediate-rejection rounds push it to the floor.
+        let mut lo = AcceptanceEstimator::new();
+        for _ in 0..200 {
+            lo.observe(8, 0, 0);
+        }
+        assert!(lo.rate() < 0.1, "{}", lo.rate());
+    }
+
+    #[test]
+    fn discounting_tracks_drift() {
+        let mut e = AcceptanceEstimator::new();
+        for _ in 0..100 {
+            e.observe(4, 4, 0);
+        }
+        let high = e.rate();
+        for _ in 0..30 {
+            e.observe(4, 0, 0);
+        }
+        assert!(e.rate() < high - 0.3, "estimator must forget: {} -> {}", high, e.rate());
+    }
+
+    #[test]
+    fn key_rate_and_full_accept() {
+        let mut e = AcceptanceEstimator::new();
+        for _ in 0..50 {
+            e.observe(4, 4, 1);
+        }
+        assert!((e.key_rate() - 0.25).abs() < 0.02, "{}", e.key_rate());
+        let p1 = e.full_accept_prob(1);
+        let p8 = e.full_accept_prob(8);
+        assert!(p8 < p1 && p8 > 0.0);
+        assert_eq!(e.last_gamma(), 4);
+        assert_eq!(e.last_accepted(), 4);
+    }
+
+    #[test]
+    fn accepted_clamped_to_offered() {
+        let mut e = AcceptanceEstimator::new();
+        e.observe(2, 5, 0); // defensive: malformed record
+        assert_eq!(e.last_accepted(), 2);
+        assert!(e.rate() <= 0.995);
+    }
+}

@@ -1,0 +1,74 @@
+//! Online speculation control: per-sequence, per-round tuning of the
+//! draft window length γ, the draft shape, and the adaptive-verification
+//! threshold τ, driven by the paper's analytic round-time model under a
+//! live acceptance estimate.
+//!
+//! # Why a control loop
+//!
+//! The serving configuration fixes γ, the draft shape, and τ for a whole
+//! run, but the quantities that make those knobs good or bad — the
+//! draft↔target acceptance rate and the compute/latency balance — vary
+//! per sequence and drift within one. The paper's communication saving
+//! (Eq. 5) is `(N−1)·t1·(k−1)/k` per committed token: one sync round of
+//! `(N−1)·t1` is amortized over the `k` tokens the round commits, so the
+//! saving collapses as k̄ → 1 (γ too long for the acceptance rate wastes
+//! draft compute without raising k̄; γ too short leaves latency
+//! unamortized). The right γ is a function of the *measured* acceptance
+//! rate and the *deployed* link latency — a runtime quantity, not a
+//! config constant.
+//!
+//! # The cost model (control::cost)
+//!
+//! [`CostModel`] is the closed-form expected-round-time of one
+//! speculative round, assembled from the same terms the discrete-event
+//! simulator charges (Eq. 4 plus the PR 2 overlap recovery term):
+//!
+//! ```text
+//! T(γ, shape)   = D·t_draft + W·t_pass + (N−1)·hop(W·b_fwd) + hop(W·b_ret) + t_verify(W)
+//! E[tokens]     = (1 − α^{γ+1}) / (1 − α)                  (chain, per-token accept α)
+//! E[T]/token    = (T − p_reuse·D·t_draft) / E[tokens]      (overlap recovery, p_reuse = α^γ·p_guess)
+//! ```
+//!
+//! where `W` is the flattened verify-window width, `D` the leader-local
+//! draft steps, and `hop` the link model `t1 + bytes/bandwidth`. The
+//! deterministic part (`T`) is pinned **exactly** against
+//! [`PipelineSim`](crate::cluster::PipelineSim) measurements by a
+//! property test (`tests/control_props.rs`) across γ × branching × link
+//! latency; the expectation layer is the standard speculative-decoding
+//! geometric series (chains) and its per-level generalization (trees).
+//!
+//! # The estimator (control::estimator)
+//!
+//! [`AcceptanceEstimator`] maintains a discounted Beta posterior over the
+//! per-token acceptance probability, fed from each round's
+//! `RoundRecord`-level outcome (offered γ, accepted k, key tokens). It
+//! deliberately consumes **only** sampling-determined fields — never
+//! timing (`*_ns`) or scheduling fields (`pre_drafted`/`reused`) — so the
+//! controller's decision stream is a pure function of (config, committed
+//! outcomes) and therefore identical across the overlap and sequential
+//! schedulers and across sim and real deployments.
+//!
+//! # The policies (control::policy)
+//!
+//! * `static` — today's behavior: every decision is the configured
+//!   (γ, shape, τ). The default; byte-identical to the pre-controller
+//!   scheduler by construction.
+//! * `aimd` — a PEARL-style additive-increase/multiplicative-decrease
+//!   rule on γ: grow by one on a fully accepted round, halve when fewer
+//!   than half the drafts were accepted.
+//! * `cost-optimal` — argmin of the cost model's expected ns/token over
+//!   a bounded γ × shape × τ grid under the live acceptance estimate,
+//!   with an ε tie-break that prefers the smallest τ (spend the accuracy
+//!   budget only where it buys speed) and the narrowest window.
+//!
+//! Decisions are re-clamped against KV-slot headroom at runtime
+//! ([`clamp_gamma`]) — a controller may ask for a γ that no longer fits
+//! the sequence's remaining cache rows.
+
+pub mod cost;
+pub mod estimator;
+pub mod policy;
+
+pub use cost::{CostModel, GUESS_HIT_PRIOR};
+pub use estimator::AcceptanceEstimator;
+pub use policy::{clamp_gamma, ControlConfig, ControllerKind, Decision, SeqController};

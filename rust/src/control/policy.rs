@@ -1,0 +1,577 @@
+//! Pluggable speculation controllers: `static` (today's fixed knobs),
+//! `aimd` (PEARL-style window adaptation), and `cost-optimal` (argmin of
+//! the cost model over a bounded γ × shape × τ grid).
+//!
+//! A [`SeqController`] is per-sequence state: the acceptance estimator
+//! plus the current [`Decision`]. Every update is a deterministic
+//! function of the round outcomes fed to [`SeqController::observe`], so
+//! the decision stream — and with it the committed token stream — is
+//! identical across the overlap and sequential schedulers and across the
+//! sim and real deployments. The speculate-ahead scheduler pre-drafts
+//! round r+1's window before round r's outcome is known; it uses
+//! [`SeqController::peek_full_accept`], which evaluates the controller
+//! under the assume-all-accepted outcome the pre-draft is only ever
+//! reused for, so a reused pre-draft always has exactly the window the
+//! controller then asks for.
+
+use anyhow::{bail, Result};
+
+use crate::control::cost::CostModel;
+use crate::control::estimator::AcceptanceEstimator;
+use crate::spec::DraftShape;
+
+/// Which controller picks (γ, shape, τ) each round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerKind {
+    /// Every decision is the configured (γ, shape, τ) — today's
+    /// behavior, byte-identical to the pre-controller scheduler.
+    Static,
+    /// PEARL-style AIMD on γ: +1 on a fully accepted round, halve when
+    /// fewer than half the drafts were accepted. Shape and τ stay fixed.
+    Aimd,
+    /// Argmin of the cost model's expected ns/token over a bounded
+    /// γ × shape × τ grid under the live acceptance estimate.
+    CostOptimal,
+}
+
+impl ControllerKind {
+    pub fn parse(s: &str) -> Result<ControllerKind> {
+        match s.trim() {
+            "static" => Ok(ControllerKind::Static),
+            "aimd" => Ok(ControllerKind::Aimd),
+            "cost-optimal" | "cost_optimal" | "costopt" => Ok(ControllerKind::CostOptimal),
+            other => bail!(
+                "unknown controller '{other}': accepted forms are \
+                 static | aimd | cost-optimal"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ControllerKind::Static => "static",
+            ControllerKind::Aimd => "aimd",
+            ControllerKind::CostOptimal => "cost-optimal",
+        }
+    }
+}
+
+/// One round's chosen knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    /// Draft window length (chains); for tree shapes, the tree depth.
+    pub gamma: usize,
+    pub shape: DraftShape,
+    /// Adaptive-verification threshold this round verifies under.
+    pub tau: f32,
+    /// Per-token regret of this decision against the grid optimum under
+    /// the estimator state it was made from, ns (0 when optimal).
+    pub regret_ns: u64,
+}
+
+/// Controller specification shared by every sequence of a deployment.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    pub kind: ControllerKind,
+    pub base_gamma: usize,
+    pub base_shape: DraftShape,
+    pub base_tau: f32,
+    /// Candidate γ grid, sorted ascending, always containing
+    /// `base_gamma`. Engine-backed deployments restrict this to the
+    /// window widths the AOT artifacts were exported for
+    /// (`Manifest::gammas`); engine-free paths default to `1..=2·γ`.
+    pub gammas: Vec<usize>,
+    /// Candidate shapes for `cost-optimal` (always contains
+    /// `base_shape`). Defaults to chains only: branching > 1 trees need
+    /// the tree-attention stage artifacts (see ROADMAP) and no pre-draft
+    /// path, so the serving default keeps the grid chain-shaped.
+    pub shapes: Vec<DraftShape>,
+    /// Candidate τ values (⊆ [0, base_tau]): the configured τ is the
+    /// accuracy budget; the controller may spend less, never more.
+    pub taus: Vec<f32>,
+    pub cost: CostModel,
+}
+
+/// Relative tolerance for the argmin tie-break: among decisions within
+/// this fraction of the optimum, prefer the smallest τ (preserve
+/// accuracy when relaxation buys no speed), then the narrowest window.
+const TIE_EPS: f64 = 0.02;
+
+impl ControlConfig {
+    /// Standard construction from decode knobs + a cost calibration.
+    /// `adaptive_tau` should be true only for the DSD policy (strict
+    /// verification ignores τ, so the grid collapses to the base value).
+    pub fn new(
+        kind: ControllerKind,
+        base_gamma: usize,
+        base_shape: DraftShape,
+        base_tau: f32,
+        adaptive_tau: bool,
+        cost: CostModel,
+    ) -> ControlConfig {
+        let base_gamma = base_gamma.max(1);
+        let gamma_max = (base_gamma * 2).max(8).min(16);
+        let taus = if adaptive_tau && base_tau > 0.0 {
+            vec![0.0, base_tau * 0.5, base_tau]
+        } else {
+            vec![base_tau]
+        };
+        // The grid must always contain base_gamma (a configured γ above
+        // the default ceiling would otherwise be silently snapped down,
+        // breaking the static controller's byte-identical guarantee).
+        let mut gammas: Vec<usize> = (1..=gamma_max).collect();
+        if !gammas.contains(&base_gamma) {
+            gammas.push(base_gamma);
+        }
+        ControlConfig {
+            kind,
+            base_gamma,
+            base_shape,
+            base_tau,
+            gammas,
+            shapes: vec![base_shape],
+            taus,
+            cost,
+        }
+    }
+
+    /// Widen the candidate shape grid (benches / sim-only deployments).
+    pub fn with_shapes(mut self, shapes: Vec<DraftShape>) -> ControlConfig {
+        self.shapes = shapes;
+        if !self.shapes.contains(&self.base_shape) {
+            self.shapes.push(self.base_shape);
+        }
+        self
+    }
+
+    /// Restrict the candidate γ grid (engine-backed deployments pass the
+    /// manifest's exported window widths). Always keeps `base_gamma`.
+    pub fn with_gammas(mut self, mut gammas: Vec<usize>) -> ControlConfig {
+        gammas.retain(|&g| g >= 1);
+        if !gammas.contains(&self.base_gamma) {
+            gammas.push(self.base_gamma);
+        }
+        gammas.sort_unstable();
+        gammas.dedup();
+        self.gammas = gammas;
+        self
+    }
+
+    /// Largest candidate γ `<= g` (the smallest candidate when none
+    /// fits) — how runtime clamps and AIMD moves stay on the grid of
+    /// window widths the deployment can actually run.
+    pub fn snap_gamma(&self, g: usize) -> usize {
+        let mut best: Option<usize> = None;
+        let mut smallest = usize::MAX;
+        for &c in &self.gammas {
+            smallest = smallest.min(c);
+            if c <= g && best.map_or(true, |b| c > b) {
+                best = Some(c);
+            }
+        }
+        best.unwrap_or(if smallest == usize::MAX { 1 } else { smallest })
+    }
+
+    /// Smallest candidate γ `> g` (or `g` itself at the top of the
+    /// grid) — AIMD's additive-increase step.
+    fn next_gamma_up(&self, g: usize) -> usize {
+        let mut best: Option<usize> = None;
+        for &c in &self.gammas {
+            if c > g && best.map_or(true, |b| c < b) {
+                best = Some(c);
+            }
+        }
+        best.unwrap_or(g)
+    }
+
+    fn static_decision(&self) -> Decision {
+        Decision {
+            gamma: self.base_gamma,
+            shape: self.base_shape,
+            tau: self.base_tau,
+            regret_ns: 0,
+        }
+    }
+}
+
+/// Re-clamp a controller-chosen γ against the sequence's remaining KV
+/// rows: a verify window based at the last committed position writes
+/// rows `i .. i+γ`, and the bonus token needs one more committable
+/// position, so at most `max_seq − len − 1` drafts fit. Returns at
+/// least 1 (callers only run a round when the serving loop's window-room
+/// check left space for one).
+pub fn clamp_gamma(gamma: usize, committed_len: usize, max_seq: usize) -> usize {
+    let headroom = max_seq.saturating_sub(committed_len + 1);
+    gamma.clamp(1, headroom.max(1))
+}
+
+/// First-order Eq. 8 model of τ's acceptance effect: relaxation admits
+/// draft tokens on non-key positions with weight τ, so moving from the
+/// τ the estimate was measured under to a candidate τ' shifts the
+/// per-token acceptance by `(τ' − τ)·(1 − α)·(1 − key_rate)`.
+fn alpha_at_tau(alpha: f64, tau_measured: f32, tau: f32, key_rate: f64) -> f64 {
+    let delta = (tau as f64 - tau_measured as f64) * (1.0 - alpha) * (1.0 - key_rate);
+    (alpha + delta).clamp(0.01, 0.995)
+}
+
+/// Per-sequence controller state: estimator + current decision.
+#[derive(Debug, Clone)]
+pub struct SeqController {
+    cfg: ControlConfig,
+    est: AcceptanceEstimator,
+    cur: Decision,
+}
+
+impl SeqController {
+    pub fn new(cfg: ControlConfig) -> SeqController {
+        // The first round always runs the configured knobs (no evidence
+        // yet) — which also makes round 0 byte-identical across every
+        // controller kind.
+        let cur = cfg.static_decision();
+        SeqController { cfg, est: AcceptanceEstimator::new(), cur }
+    }
+
+    /// The knobs the next round should run under.
+    pub fn decision(&self) -> Decision {
+        self.cur
+    }
+
+    pub fn estimator(&self) -> &AcceptanceEstimator {
+        &self.est
+    }
+
+    /// Feed one committed round's outcome and recompute the decision.
+    /// Callers must pass only sampling-determined fields (offered window
+    /// length, accepted length, key tokens) — never timing or
+    /// overlap-scheduling counters.
+    pub fn observe(&mut self, offered: usize, accepted: usize, key_tokens: usize) {
+        self.est.observe(offered, accepted, key_tokens);
+        self.cur = decide(&self.cfg, &self.est, &self.cur);
+    }
+
+    /// The decision this controller will make *if* the in-flight round
+    /// accepts all `offered` drafts — what the speculate-ahead scheduler
+    /// pre-drafts with. The hypothetical record assumes zero key tokens
+    /// (the actual count isn't known until verification), so the
+    /// post-`observe` decision can drift by a little when a full-accept
+    /// round flags keys; the reuse path tolerates that by consuming a
+    /// γ-prefix of a longer pre-draft (tokens are pure functions of
+    /// position), and discards only when the window *grew* past the
+    /// pre-drafted length.
+    pub fn peek_full_accept(&self, offered: usize) -> Decision {
+        // Equivalent to cloning the whole controller and observing the
+        // hypothetical record, without copying the (Vec-carrying) config:
+        // observe() is exactly est.observe + decide.
+        let mut est = self.est.clone();
+        est.observe(offered, offered, 0);
+        decide(&self.cfg, &est, &self.cur)
+    }
+}
+
+/// The decision rule: deterministic in (config, estimator, previous
+/// decision).
+fn decide(cfg: &ControlConfig, est: &AcceptanceEstimator, cur: &Decision) -> Decision {
+    let (best_per_tok, best) = grid_argmin(cfg, est, cur.tau);
+    match cfg.kind {
+        ControllerKind::Static => {
+            let d = cfg.static_decision();
+            with_regret(cfg, est, cur.tau, d, best_per_tok)
+        }
+        ControllerKind::Aimd => {
+            let (lg, la) = (est.last_gamma(), est.last_accepted());
+            let g = cfg.snap_gamma(cur.gamma);
+            let gamma = if la >= lg {
+                cfg.next_gamma_up(g)
+            } else if 2 * la < lg {
+                cfg.snap_gamma((g / 2).max(1))
+            } else {
+                g
+            };
+            let d = Decision { gamma, ..cfg.static_decision() };
+            with_regret(cfg, est, cur.tau, d, best_per_tok)
+        }
+        ControllerKind::CostOptimal => best,
+    }
+}
+
+fn with_regret(
+    cfg: &ControlConfig,
+    est: &AcceptanceEstimator,
+    tau_measured: f32,
+    mut d: Decision,
+    best_per_tok: f64,
+) -> Decision {
+    let alpha = alpha_at_tau(est.rate(), tau_measured, d.tau, est.key_rate());
+    let mine = cfg.cost.expected_ns_per_token(d.shape, d.gamma, alpha);
+    d.regret_ns = (mine - best_per_tok).max(0.0) as u64;
+    d
+}
+
+/// Argmin over the γ × shape × τ grid, with the ε tie-break. Returns
+/// (best expected ns/token, winning decision with regret 0).
+fn grid_argmin(cfg: &ControlConfig, est: &AcceptanceEstimator, tau_measured: f32) -> (f64, Decision) {
+    let alpha0 = est.rate();
+    let key_rate = est.key_rate();
+    let mut candidates: Vec<(f64, usize, Decision)> = Vec::new();
+    for &shape in &cfg.shapes {
+        let gammas: Vec<usize> = match shape {
+            DraftShape::Chain => cfg.gammas.clone(),
+            // tree shapes fix their own depth; γ only labels it
+            DraftShape::Tree { depth, .. } => vec![depth],
+        };
+        for gamma in gammas {
+            for &tau in &cfg.taus {
+                let alpha = alpha_at_tau(alpha0, tau_measured, tau, key_rate);
+                let t = cfg.cost.expected_ns_per_token(shape, gamma, alpha);
+                let nodes = shape.max_nodes_or(gamma);
+                candidates
+                    .push((t, nodes, Decision { gamma, shape, tau, regret_ns: 0 }));
+            }
+        }
+    }
+    let min_t = candidates.iter().map(|c| c.0).fold(f64::INFINITY, f64::min);
+    // among near-ties, prefer the smallest τ, then the narrowest window,
+    // then the smallest γ — deterministic regardless of grid order
+    let mut winner: Option<&(f64, usize, Decision)> = None;
+    for c in &candidates {
+        if c.0 > min_t * (1.0 + TIE_EPS) {
+            continue;
+        }
+        let better = match winner {
+            None => true,
+            Some(w) => {
+                let (ct, wt) = (c.2.tau, w.2.tau);
+                if (ct - wt).abs() > 1e-9 {
+                    ct < wt
+                } else if c.1 != w.1 {
+                    c.1 < w.1
+                } else if c.2.gamma != w.2.gamma {
+                    c.2.gamma < w.2.gamma
+                } else {
+                    false
+                }
+            }
+        };
+        if better {
+            winner = Some(c);
+        }
+    }
+    let w = winner.expect("grid is never empty");
+    (min_t, w.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::clock::Nanos;
+
+    fn cost(link_ms: f64) -> CostModel {
+        CostModel {
+            nodes: 4,
+            link_ns: (link_ms * 1e6) as Nanos,
+            bandwidth_bps: 0,
+            per_token_pass_ns: 240_000,
+            draft_step_ns: 600_000,
+            verify_base_ns: 100_000,
+            verify_per_node_ns: 2_000,
+            fwd_bytes_per_token: 1024,
+            ret_bytes_per_token: 256,
+        }
+    }
+
+    fn config(kind: ControllerKind, link_ms: f64) -> ControlConfig {
+        ControlConfig::new(kind, 4, DraftShape::Chain, 0.2, true, cost(link_ms))
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [ControllerKind::Static, ControllerKind::Aimd, ControllerKind::CostOptimal] {
+            assert_eq!(ControllerKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(ControllerKind::parse("cost_optimal").unwrap(), ControllerKind::CostOptimal);
+        let err = ControllerKind::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("accepted forms"), "{err}");
+    }
+
+    #[test]
+    fn static_controller_pins_config_values() {
+        let mut c = SeqController::new(config(ControllerKind::Static, 15.0));
+        let d0 = c.decision();
+        assert_eq!((d0.gamma, d0.shape, d0.tau), (4, DraftShape::Chain, 0.2));
+        // whatever it observes, the knobs never move
+        for (off, acc) in [(4, 4), (4, 0), (4, 2), (4, 4), (4, 4)] {
+            c.observe(off, acc, 1);
+            let d = c.decision();
+            assert_eq!((d.gamma, d.shape, d.tau), (4, DraftShape::Chain, 0.2));
+        }
+        // ... but the regret meter reports what static leaves on the table
+        for _ in 0..50 {
+            c.observe(4, 4, 0);
+        }
+        assert!(c.decision().regret_ns > 0, "fully-accepting stream: γ=4 is suboptimal at 15ms");
+    }
+
+    #[test]
+    fn first_decision_is_static_for_every_kind() {
+        for kind in [ControllerKind::Static, ControllerKind::Aimd, ControllerKind::CostOptimal] {
+            let c = SeqController::new(config(kind, 15.0));
+            let d = c.decision();
+            assert_eq!((d.gamma, d.shape, d.tau, d.regret_ns), (4, DraftShape::Chain, 0.2, 0));
+        }
+    }
+
+    #[test]
+    fn aimd_grows_on_full_accept_and_halves_on_rejection() {
+        let mut c = SeqController::new(config(ControllerKind::Aimd, 5.0));
+        c.observe(4, 4, 0);
+        assert_eq!(c.decision().gamma, 5);
+        c.observe(5, 5, 0);
+        assert_eq!(c.decision().gamma, 6);
+        // 2 of 6 accepted: less than half -> halve
+        c.observe(6, 2, 0);
+        assert_eq!(c.decision().gamma, 3);
+        // middling acceptance holds steady
+        c.observe(3, 2, 0);
+        assert_eq!(c.decision().gamma, 3);
+        // floor and ceiling respected
+        for _ in 0..10 {
+            let g = c.decision().gamma;
+            c.observe(g, 0, 0);
+        }
+        assert_eq!(c.decision().gamma, 1);
+        for _ in 0..20 {
+            let g = c.decision().gamma;
+            c.observe(g, g, 0);
+        }
+        assert_eq!(c.decision().gamma, 8); // gamma_max for base 4
+    }
+
+    #[test]
+    fn cost_optimal_widens_on_slow_links_and_shrinks_on_rejection() {
+        let mut c = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        for _ in 0..30 {
+            c.observe(c.decision().gamma, c.decision().gamma, 0);
+        }
+        let d = c.decision();
+        assert!(d.gamma > 4, "high acceptance at 15ms must widen γ, got {}", d.gamma);
+        assert_eq!(d.regret_ns, 0, "cost-optimal is regret-free by construction");
+
+        let mut lo = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        for _ in 0..30 {
+            lo.observe(lo.decision().gamma, 0, 0);
+        }
+        assert!(
+            lo.decision().gamma <= 2,
+            "near-zero acceptance must shrink γ, got {}",
+            lo.decision().gamma
+        );
+    }
+
+    #[test]
+    fn cost_optimal_spends_tau_only_when_needed() {
+        // High strict acceptance: relaxation buys (almost) nothing, so
+        // the ε tie-break keeps τ at 0 — the accuracy budget unspent.
+        let mut hi = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        for _ in 0..40 {
+            hi.observe(hi.decision().gamma, hi.decision().gamma, 0);
+        }
+        assert_eq!(hi.decision().tau, 0.0, "τ must not be spent at ~full acceptance");
+
+        // Low acceptance: the τ boost shortens rounds beyond the ε band,
+        // so the full budget is spent.
+        let mut lo = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        for _ in 0..40 {
+            lo.observe(lo.decision().gamma, lo.decision().gamma / 2, 0);
+        }
+        assert!(
+            lo.decision().tau > 0.0,
+            "low acceptance must spend the τ budget, got {}",
+            lo.decision().tau
+        );
+    }
+
+    #[test]
+    fn cost_optimal_picks_tree_when_grid_allows() {
+        let tree = DraftShape::Tree { branching: 3, depth: 4, max_nodes: 64 };
+        let cfg = ControlConfig::new(
+            ControllerKind::CostOptimal,
+            4,
+            DraftShape::Chain,
+            0.0,
+            false,
+            cost(20.0),
+        )
+        .with_shapes(vec![DraftShape::Chain, tree]);
+        let mut c = SeqController::new(cfg);
+        // ~50% acceptance: chains stall early, the wide tree still
+        // survives levels — the cost model prefers it on slow links.
+        for i in 0..60 {
+            let g = c.decision().gamma.max(1);
+            c.observe(g.max(2), if i % 2 == 0 { 1 } else { 0 }, 0);
+        }
+        assert_eq!(c.decision().shape, tree, "got {:?}", c.decision());
+    }
+
+    #[test]
+    fn peek_matches_observe_on_full_accept() {
+        for kind in [ControllerKind::Static, ControllerKind::Aimd, ControllerKind::CostOptimal] {
+            let mut c = SeqController::new(config(kind, 15.0));
+            c.observe(4, 2, 0);
+            c.observe(4, 4, 1);
+            let g = c.decision().gamma;
+            let peek = c.peek_full_accept(g);
+            let mut twin = c.clone();
+            twin.observe(g, g, 0);
+            assert_eq!(peek, twin.decision(), "kind {kind:?}");
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_replays() {
+        // Same record stream twice => same decision stream (purity).
+        let stream = [(4, 4, 0), (4, 1, 1), (5, 5, 0), (2, 0, 0), (6, 6, 2)];
+        for kind in [ControllerKind::Aimd, ControllerKind::CostOptimal] {
+            let mut a = SeqController::new(config(kind, 5.0));
+            let mut b = SeqController::new(config(kind, 5.0));
+            for &(o, k, key) in &stream {
+                a.observe(o, k, key);
+                b.observe(o, k, key);
+                assert_eq!(a.decision(), b.decision());
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_grid_snaps_to_runnable_windows() {
+        let cfg = config(ControllerKind::Aimd, 5.0).with_gammas(vec![2, 4, 8]);
+        assert_eq!(cfg.gammas, vec![2, 4, 8]); // base 4 already present
+        assert_eq!(cfg.snap_gamma(8), 8);
+        assert_eq!(cfg.snap_gamma(7), 4);
+        assert_eq!(cfg.snap_gamma(3), 2);
+        assert_eq!(cfg.snap_gamma(1), 2); // nothing <= 1: smallest wins
+        // AIMD moves along the grid, not by ±1
+        let mut c = SeqController::new(cfg);
+        c.observe(4, 4, 0);
+        assert_eq!(c.decision().gamma, 8);
+        c.observe(8, 3, 0); // 3*2 < 8 -> halve to 4
+        assert_eq!(c.decision().gamma, 4);
+        c.observe(4, 1, 0); // halve: snap(2) = 2
+        assert_eq!(c.decision().gamma, 2);
+        // base_gamma is force-kept in a grid that omits it
+        let kept = config(ControllerKind::CostOptimal, 5.0).with_gammas(vec![2, 8]);
+        assert_eq!(kept.gammas, vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn clamp_gamma_respects_kv_headroom() {
+        // plenty of room: unchanged
+        assert_eq!(clamp_gamma(8, 10, 192), 8);
+        // near-full cache: max_seq 32, 28 committed -> 3 rows left
+        assert_eq!(clamp_gamma(8, 28, 32), 3);
+        // exactly one row left
+        assert_eq!(clamp_gamma(8, 30, 32), 1);
+        // degenerate: never returns 0 (loop guards room for >= 1)
+        assert_eq!(clamp_gamma(8, 32, 32), 1);
+        assert_eq!(clamp_gamma(0, 10, 192), 1);
+    }
+}

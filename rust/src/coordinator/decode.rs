@@ -39,6 +39,15 @@
 //! Standard autoregressive decoding instead pays a full pipeline pass per
 //! token (Eq. 3). All paths share all executors, so measured compute is
 //! apples-to-apples.
+//!
+//! **Adaptive speculation control**: each speculative round's (γ, shape,
+//! τ) comes from the sequence's [`SeqController`]
+//! (`DecodeConfig::controller`), re-clamped against KV-slot headroom and
+//! snapped to the deployment's runnable window widths. The speculate-ahead
+//! pre-draft uses the controller's decision *under the all-accepted
+//! outcome* (`peek_full_accept`) so reused windows always match the next
+//! round's request. The default `static` controller pins this config's
+//! values and reproduces the pre-controller scheduler byte for byte.
 
 use std::rc::Rc;
 
@@ -46,8 +55,10 @@ use anyhow::{bail, Result};
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::sim::PipelineSim;
+use crate::control::{clamp_gamma, ControlConfig, CostModel, Decision, SeqController};
 use crate::coordinator::overlap::{
     accept_uniform, draft_uniform, host_verify_cost, sample_uniform, stream_seed, PreDraft,
+    HOST_VERIFY_BASE_NS, HOST_VERIFY_PER_NODE_NS,
 };
 use crate::coordinator::session::Sequence;
 use crate::model::{KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome};
@@ -86,6 +97,10 @@ pub struct RoundOutcome {
     pub pre_draft_ns: Nanos,
     /// Drafting removed from this round's critical path by reuse, ns.
     pub recovered_ns: Nanos,
+    /// Verification threshold τ this round ran under (controller-chosen).
+    pub tau: f32,
+    /// Controller regret of this round's decision, ns/token.
+    pub regret_ns: u64,
 }
 
 impl RoundOutcome {
@@ -103,6 +118,8 @@ impl RoundOutcome {
             overlap_ns: self.overlap_ns,
             pre_draft_ns: self.pre_draft_ns,
             recovered_ns: self.recovered_ns,
+            tau: self.tau,
+            regret_ns: self.regret_ns,
         }
     }
 }
@@ -111,11 +128,53 @@ impl RoundOutcome {
 pub struct DecodeEngine {
     pub model: ShardedModel,
     pub cfg: DecodeConfig,
+    /// Controller specification instantiated per sequence (see
+    /// [`crate::control`]); `DecodeConfig::controller` picks the policy.
+    pub ctrl: ControlConfig,
 }
 
 impl DecodeEngine {
+    /// Build with a calibration-default cost model (no deployment link
+    /// info): fine for the static controller; `with_control` supplies
+    /// the deployment-aware model for adaptive controllers.
     pub fn new(model: ShardedModel, cfg: DecodeConfig) -> DecodeEngine {
-        DecodeEngine { model, cfg }
+        let m = model.engine.manifest().model.clone();
+        let cost = CostModel {
+            nodes: model.n_shards().max(1),
+            link_ns: 0,
+            bandwidth_bps: 0,
+            per_token_pass_ns: crate::control::cost::CAL_PER_TOKEN_PASS_NS,
+            draft_step_ns: crate::control::cost::CAL_DRAFT_STEP_NS,
+            verify_base_ns: HOST_VERIFY_BASE_NS,
+            verify_per_node_ns: HOST_VERIFY_PER_NODE_NS,
+            fwd_bytes_per_token: m.d_model * 4,
+            ret_bytes_per_token: m.vocab * 4,
+        };
+        let ctrl = ControlConfig::new(
+            cfg.controller,
+            cfg.gamma.max(1),
+            cfg.shape,
+            cfg.tau,
+            matches!(cfg.policy, Policy::Dsd),
+            cost,
+        );
+        DecodeEngine::with_control(model, cfg, ctrl)
+    }
+
+    /// Build with an explicit controller specification (the coordinator
+    /// derives one from the deployment's topology and calibration).
+    pub fn with_control(model: ShardedModel, cfg: DecodeConfig, ctrl: ControlConfig) -> DecodeEngine {
+        DecodeEngine { model, cfg, ctrl }
+    }
+
+    /// The per-round decision for a sequence, creating its controller on
+    /// first use. Pure in (controller config, the sequence's committed
+    /// round outcomes).
+    fn decision_for(&self, seq: &mut Sequence) -> Decision {
+        if seq.ctrl.is_none() {
+            seq.ctrl = Some(SeqController::new(self.ctrl.clone()));
+        }
+        seq.ctrl.as_ref().expect("just created").decision()
     }
 
     /// Run prefill for a sequence: pads the prompt, fills target-stage and
@@ -163,17 +222,23 @@ impl DecodeEngine {
         Ok(())
     }
 
-    /// One decode round under the configured policy and draft shape.
+    /// One decode round under the configured policy, with the per-round
+    /// (γ, shape, τ) chosen by the sequence's controller (the static
+    /// controller pins this config's values, reproducing the
+    /// pre-controller scheduler byte for byte).
     pub fn round(
         &mut self,
         seq: &mut Sequence,
         pool: &mut KvPool,
         sim: &mut PipelineSim,
     ) -> Result<RoundOutcome> {
-        match (self.cfg.policy, self.cfg.shape) {
-            (Policy::Autoregressive, _) => self.round_autoregressive(seq, pool, sim),
-            (_, DraftShape::Chain) => self.round_speculative(seq, pool, sim),
-            (_, shape @ DraftShape::Tree { .. }) => self.round_tree(seq, pool, sim, shape),
+        if self.cfg.policy == Policy::Autoregressive {
+            return self.round_autoregressive(seq, pool, sim);
+        }
+        let d = self.decision_for(seq);
+        match d.shape {
+            DraftShape::Chain => self.round_speculative(seq, pool, sim, d),
+            shape @ DraftShape::Tree { .. } => self.round_tree(seq, pool, sim, shape, d),
         }
     }
 
@@ -205,29 +270,43 @@ impl DecodeEngine {
     }
 
     /// Whether the sequence will still be decoding after a fully
-    /// accepted round — the only outcome whose pre-draft can be reused,
-    /// and the draft cache must have row room for the speculative
-    /// continuation (positions through `i + 2γ`).
-    fn continues_after_full_accept(&self, seq: &Sequence, max_seq: usize) -> bool {
-        let gamma = self.cfg.gamma;
+    /// accepted round of `gamma` drafts — the only outcome whose
+    /// pre-draft can be reused — with room for a `g_next`-token next
+    /// window and the draft-cache rows the speculative continuation
+    /// writes (positions through `i + γ + g_next`).
+    fn continues_after_full_accept(
+        &self,
+        seq: &Sequence,
+        max_seq: usize,
+        gamma: usize,
+        g_next: usize,
+    ) -> bool {
         let len_next = seq.committed.len() + gamma + 1;
         let generated_next = seq.generated() + gamma + 1;
         generated_next < seq.max_new_tokens
-            && len_next + self.cfg.max_window() < max_seq
-            && seq.last_index() + 2 * gamma < max_seq
+            && len_next + g_next + 1 < max_seq
+            && seq.last_index() + gamma + g_next < max_seq
     }
 
     /// Algorithm 1 + speculate-ahead: draft γ (or reuse the pre-draft),
     /// verify in ONE pipeline pass while drafting round r+1's window
-    /// inside the in-flight gap, commit k+1.
+    /// inside the in-flight gap, commit k+1. The window length, shape
+    /// and τ come from the sequence controller's `Decision`; γ is
+    /// re-clamped against the KV slot's remaining rows (an adaptive
+    /// controller may ask for more than the near-full cache can hold).
     fn round_speculative(
         &mut self,
         seq: &mut Sequence,
         pool: &mut KvPool,
         sim: &mut PipelineSim,
+        d: Decision,
     ) -> Result<RoundOutcome> {
         let m = self.model.engine.manifest().model.clone();
-        let gamma = self.cfg.gamma;
+        // KV-headroom re-clamp, snapped down to the γ grid so the window
+        // width is one the stage artifacts exist for. Static decisions
+        // are never clamped (the serving loop's window-room check leaves
+        // base-γ room before scheduling a round).
+        let gamma = self.ctrl.snap_gamma(clamp_gamma(d.gamma, seq.committed.len(), m.max_seq));
         let i = seq.last_index(); // position of last committed token
         let temp = self.cfg.temp;
         let dstage = self.model.n_shards();
@@ -240,27 +319,36 @@ impl DecodeEngine {
         let mut full_reuse = false;
         if let Some(pd) = &pre {
             if i == pd.next_base {
-                // the previous round accepted all γ drafts, so the
+                // the previous round accepted all its drafts, so the
                 // pre-draft's catch-up row (input d_γ) is valid
                 seq.draft_frontier = seq.draft_frontier.max(pd.anchor_pos + 1);
-                recovered_ns = pd.draft_ns / (gamma as Nanos + 1);
-                if pd.guess == seq.last_token() {
-                    // ... and the bonus-token guess matched: the whole
-                    // pre-drafted window is this round's draft window
+                recovered_ns = pd.draft_ns / (pd.tokens.len() as Nanos + 1);
+                if pd.guess == seq.last_token() && pd.tokens.len() >= gamma {
+                    // ... and the bonus-token guess matched, with at
+                    // least the window this round wants: every drafted
+                    // token is a pure function of its position, so a
+                    // longer pre-draft's γ-prefix IS this round's window
+                    // (the controller may have settled on a smaller γ
+                    // than the peek predicted — e.g. key-token counts
+                    // shifted the estimate).
                     full_reuse = true;
-                    recovered_ns = pd.draft_ns;
+                    recovered_ns =
+                        pd.draft_ns * (gamma as Nanos + 1) / (pd.tokens.len() as Nanos + 1);
                 }
             }
         }
         let reused = if full_reuse { gamma } else { 0 };
         let wasted = match &pre {
-            Some(pd) if !full_reuse => pd.tokens.len(),
+            Some(pd) if full_reuse => pd.tokens.len() - gamma,
+            Some(pd) => pd.tokens.len(),
             _ => 0,
         };
 
         let mut draft_ns_total: Nanos = 0;
         let (d_tokens, d_logits) = if full_reuse {
-            let pd = pre.expect("checked above");
+            let mut pd = pre.expect("checked above");
+            pd.tokens.truncate(gamma);
+            pd.logits.truncate(gamma * m.vocab);
             (pd.tokens, pd.logits)
         } else {
             let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
@@ -303,11 +391,29 @@ impl DecodeEngine {
 
         // --- speculate ahead: draft round r+1's window while this
         // round's verify window is in flight (the leader is idle from
-        // stage-0 release to the return hop) ---
+        // stage-0 release to the return hop). The pre-drafted window
+        // length is the controller's decision *under the
+        // assume-all-accepted outcome* — the only outcome the pre-draft
+        // is ever reused for — so a reused window always matches what
+        // the next round asks for (see SeqController::peek_full_accept).
         let mut pre_drafted = 0usize;
         let mut pre_draft_ns: Nanos = 0;
         let mut overlap_ns: Nanos = 0;
-        if self.cfg.overlap && gamma >= 1 && self.continues_after_full_accept(seq, m.max_seq) {
+        let g_next = match seq.ctrl.as_ref() {
+            Some(c) => {
+                let peek = c.peek_full_accept(gamma);
+                match peek.shape {
+                    // trees have no unique all-accepted path to pre-draft
+                    DraftShape::Tree { .. } => 0,
+                    DraftShape::Chain => self.ctrl.snap_gamma(peek.gamma),
+                }
+            }
+            None => gamma,
+        };
+        if self.cfg.overlap
+            && g_next >= 1
+            && self.continues_after_full_accept(seq, m.max_seq, gamma, g_next)
+        {
             let anchor_pos = i + gamma;
             let next_base = i + gamma + 1;
             let mut ns_total: Nanos = 0;
@@ -320,12 +426,12 @@ impl DecodeEngine {
                 self.model.draft.step(d_tokens[gamma - 1], dcache, anchor_pos, temp, u)?;
             ns_total += ns;
             let guess = argmax(&head_logits) as i32;
-            // γ window steps from the guessed bonus — exactly the steps
-            // round r+1 will need if the guess is right
-            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
-            let mut rows: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
+            // g_next window steps from the guessed bonus — exactly the
+            // steps round r+1 will need if the guess is right
+            let mut toks: Vec<i32> = Vec::with_capacity(g_next);
+            let mut rows: Vec<f32> = Vec::with_capacity(g_next * m.vocab);
             let mut prev = guess;
-            for j in 0..gamma {
+            for j in 0..g_next {
                 let u = draft_uniform(sseed, next_base + j);
                 let dcache = pool.stage_cache(seq.slot, dstage)?;
                 let (tok, logits, ns) =
@@ -338,7 +444,7 @@ impl DecodeEngine {
             let done = sim.local_work(timing.stage0_release, ns_total);
             pre_draft_ns = ns_total;
             overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
-            pre_drafted = gamma;
+            pre_drafted = g_next;
             seq.pre_draft = Some(PreDraft {
                 next_base,
                 anchor_pos,
@@ -360,16 +466,20 @@ impl DecodeEngine {
             d_tokens.clone(),
             u_accept,
             u_sample,
-            self.cfg.knobs(),
+            self.cfg.knobs_with_tau(d.tau),
         )?;
         let finish = sim.local_work(timing.finish, verify_ns);
 
-        self.commit_outcome(seq, i, &outcome);
+        self.commit_outcome(seq, i, gamma, &outcome);
         seq.ready_at = finish;
+        let key_tokens = outcome.key_flags.iter().filter(|&&k| k).count();
+        if let Some(c) = seq.ctrl.as_mut() {
+            c.observe(gamma, outcome.accepted, key_tokens);
+        }
         Ok(RoundOutcome {
             committed: outcome.tokens.clone(),
             accepted: outcome.accepted,
-            key_tokens: outcome.key_flags.iter().filter(|&&k| k).count(),
+            key_tokens,
             draft_len: gamma,
             tree_nodes: gamma,
             finish,
@@ -381,17 +491,19 @@ impl DecodeEngine {
             overlap_ns,
             pre_draft_ns,
             recovered_ns,
+            tau: d.tau,
+            regret_ns: d.regret_ns,
         })
     }
 
-    fn commit_outcome(&self, seq: &mut Sequence, i: usize, out: &VerifyOutcome) {
+    fn commit_outcome(&self, seq: &mut Sequence, i: usize, gamma: usize, out: &VerifyOutcome) {
         let k = out.accepted;
         // Draft rows valid through position i + min(k, γ-1):
         // rows i..i+γ-1 were written (inputs: last token, d1..dγ-1); the
         // tokens at those positions are committed only up to i+k.
         // (saturating: γ is validated >= 1 for speculative policies, but
         // never underflow here regardless.)
-        seq.draft_frontier = i + k.min(self.cfg.gamma.saturating_sub(1)) + 1;
+        seq.draft_frontier = i + k.min(gamma.saturating_sub(1)) + 1;
         seq.commit(&out.tokens);
     }
 
@@ -414,6 +526,7 @@ impl DecodeEngine {
         pool: &mut KvPool,
         sim: &mut PipelineSim,
         shape: DraftShape,
+        d: Decision,
     ) -> Result<RoundOutcome> {
         let m = self.model.engine.manifest().model.clone();
         let i = seq.last_index();
@@ -444,13 +557,13 @@ impl DecodeEngine {
         // as each level opens — at most two levels are live at once.
         let root_cache = pool.stage_cache(seq.slot, dstage)?.clone();
         let last_token = seq.last_token();
-        let max_depth = shape.depth_or(self.cfg.gamma);
+        let max_depth = shape.depth_or(d.gamma);
         let draft = &self.model.draft;
         let mut expansion_caches: Vec<Option<KvCache>> = Vec::new();
         let mut cur_level = 1usize;
         let mut cur_level_start = 0usize; // first expansion row of cur_level
         let mut tree_draft_ns: Nanos = 0;
-        let (tree, d_logits) = build_tree(shape, self.cfg.gamma, temp, m.vocab, |e| {
+        let (tree, d_logits) = build_tree(shape, d.gamma, temp, m.vocab, |e| {
             if e.child_depth > cur_level {
                 // entering a new level: rows before the previous level's
                 // start can never be forked again
@@ -507,22 +620,28 @@ impl DecodeEngine {
             &d_logits,
             &u_accept,
             &u_sample,
-            self.cfg.knobs(),
+            self.cfg.knobs_with_tau(d.tau),
         );
         let verify_ns = host_verify_cost(n);
         let finish = sim.local_work(timing.finish, verify_ns);
 
         self.commit_tree_outcome(seq, pool, i, &outcome)?;
         seq.ready_at = finish;
+        let key_tokens = outcome.key_flags.iter().filter(|&&k| k).count();
+        if let Some(c) = seq.ctrl.as_mut() {
+            c.observe(tree.depth(), outcome.accepted, key_tokens);
+        }
         Ok(RoundOutcome {
             committed: outcome.tokens.clone(),
             accepted: outcome.accepted,
-            key_tokens: outcome.key_flags.iter().filter(|&&k| k).count(),
+            key_tokens,
             draft_len: tree.depth(),
             tree_nodes: n,
             finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
+            tau: d.tau,
+            regret_ns: d.regret_ns,
             ..Default::default()
         })
     }

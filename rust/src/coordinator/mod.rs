@@ -26,10 +26,11 @@ use anyhow::{Context, Result};
 
 use crate::cluster::sim::PipelineSim;
 use crate::config::DeployConfig;
+use crate::control::{ControlConfig, CostModel};
 use crate::metrics::RunReport;
 use crate::model::{KvPool, ShardedModel};
 use crate::runtime::Engine;
-use crate::spec::AcceptanceStats;
+use crate::spec::{AcceptanceStats, Policy};
 use crate::workload::{dataset, Request};
 
 /// One serving replica over a simulated decentralized pipeline.
@@ -70,16 +71,44 @@ impl Coordinator {
             // Inherit the deployment seed unless the decode seed was pinned.
             decode_cfg.seed = cfg.seed;
         }
-        let decode = DecodeEngine::new(model, decode_cfg);
+        // Controller spec: the cost model sees the deployment's topology
+        // (nodes, t1, bandwidth) and payload widths; compute/draft costs
+        // are the engine-free calibration constants, so decisions stay
+        // pure functions of (config, recorded stats) — never of measured
+        // wall-clock, which would break sim/real equivalence.
+        let m = engine.manifest().model.clone();
+        let cost = CostModel::from_deploy(&cfg, m.d_model, m.vocab);
+        // The γ grid is restricted to the manifest's exported window
+        // widths — an adaptive controller must only ask for windows the
+        // AOT artifacts can actually run.
+        let ctrl = ControlConfig::new(
+            decode_cfg.controller,
+            decode_cfg.gamma.max(1),
+            decode_cfg.shape,
+            decode_cfg.tau,
+            matches!(decode_cfg.policy, Policy::Dsd),
+            cost,
+        )
+        .with_gammas(engine.manifest().gammas.clone());
+        let decode = DecodeEngine::with_control(model, decode_cfg, ctrl);
         Ok(Coordinator { engine, cfg, decode, pool, sim })
     }
 
     /// Pre-compile all artifacts used by this deployment (shape-aware:
     /// tree rounds verify on the host, so only their flattened stage
-    /// windows are compiled).
+    /// windows are compiled). Adaptive controllers can choose any γ in
+    /// their candidate grid, so every grid window is warmed.
     pub fn warmup(&self) -> Result<()> {
         match self.cfg.decode.shape {
-            crate::spec::DraftShape::Chain => self.decode.model.warmup(&[self.cfg.decode.gamma]),
+            crate::spec::DraftShape::Chain => {
+                let gammas: Vec<usize> =
+                    if self.cfg.decode.controller == crate::control::ControllerKind::Static {
+                        vec![self.cfg.decode.gamma]
+                    } else {
+                        self.decode.ctrl.gammas.clone()
+                    };
+                self.decode.model.warmup(&gammas)
+            }
             shape => self.decode.model.warmup_tree(shape, self.cfg.decode.gamma),
         }
     }

@@ -71,9 +71,11 @@ use anyhow::Result;
 use crate::cluster::clock::Nanos;
 use crate::cluster::sim::PipelineSim;
 use crate::cluster::topology::{LinkModel, Topology};
+use crate::control::{ControlConfig, ControllerKind, CostModel, SeqController};
 use crate::model::VerifyKnobs;
 use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::reference::host_verify;
+use crate::spec::DraftShape;
 use crate::util::rng::{mix, uniform_at, Rng};
 
 /// RNG stream tags (see [`crate::util::rng::uniform_at`]).
@@ -159,6 +161,12 @@ pub struct OracleRound {
     pub pre_draft_ns: Nanos,
     /// Drafting ns removed from this round's critical path by reuse.
     pub recovered_ns: Nanos,
+    /// Controller-chosen window length this round drafted.
+    pub gamma: usize,
+    /// Controller-chosen verification threshold this round ran under.
+    pub tau: f32,
+    /// Controller regret of this round's decision, ns/token.
+    pub regret_ns: u64,
 }
 
 /// Calibration + policy for [`OracleChainDecoder`].
@@ -172,6 +180,9 @@ pub struct OracleConfig {
     pub knobs: VerifyKnobs,
     /// Speculate-ahead scheduler on/off.
     pub overlap: bool,
+    /// Per-sequence speculation controller (γ/τ per round; the oracle
+    /// twin is chain-only, so the shape grid stays chains).
+    pub controller: ControllerKind,
     pub seed: u64,
     pub seq_id: u64,
     pub nodes: usize,
@@ -194,6 +205,7 @@ impl Default for OracleConfig {
             temp: 1.0,
             knobs: VerifyKnobs::strict(1.0),
             overlap: true,
+            controller: ControllerKind::Static,
             seed: 0,
             seq_id: 0,
             nodes: 4,
@@ -202,6 +214,34 @@ impl Default for OracleConfig {
             per_token_pass_ns: 240_000,
             d_model: 256,
         }
+    }
+}
+
+impl OracleConfig {
+    /// The controller spec this oracle deployment implies: its cost
+    /// model is the oracle's own calibration, so `cost-optimal`
+    /// decisions are optimal with respect to the very simulator the
+    /// bench measures with.
+    pub fn control_config(&self) -> ControlConfig {
+        let cost = CostModel {
+            nodes: self.nodes,
+            link_ns: (self.link_ms * 1e6) as Nanos,
+            bandwidth_bps: 0,
+            per_token_pass_ns: self.per_token_pass_ns,
+            draft_step_ns: self.draft_step_ns,
+            verify_base_ns: HOST_VERIFY_BASE_NS,
+            verify_per_node_ns: HOST_VERIFY_PER_NODE_NS,
+            fwd_bytes_per_token: self.d_model * 4,
+            ret_bytes_per_token: self.vocab * 4,
+        };
+        ControlConfig::new(
+            self.controller,
+            self.gamma,
+            DraftShape::Chain,
+            self.knobs.tau,
+            self.knobs.adaptive,
+            cost,
+        )
     }
 }
 
@@ -219,6 +259,8 @@ pub struct OracleChainDecoder {
     pub sim: PipelineSim,
     /// Prompt + committed tokens (the oracle conditions on this chain).
     pub committed: Vec<i32>,
+    /// Per-sequence controller (γ/τ per round; static by default).
+    ctrl: SeqController,
     draft_frontier: usize,
     ready_at: Nanos,
     pre: Option<PreDraft>,
@@ -237,15 +279,22 @@ impl OracleChainDecoder {
         let sim = PipelineSim::new(topo, cfg.seed ^ 0xC1);
         let per_stage = vec![cfg.per_token_pass_ns / cfg.nodes as Nanos; cfg.nodes];
         let frontier = prompt.len().saturating_sub(1);
+        let ctrl = SeqController::new(cfg.control_config());
         Ok(OracleChainDecoder {
             cfg,
             sim,
             committed: prompt.to_vec(),
+            ctrl,
             draft_frontier: frontier,
             ready_at: 0,
             pre: None,
             per_stage,
         })
+    }
+
+    /// The controller's live state (telemetry for benches).
+    pub fn controller(&self) -> &SeqController {
+        &self.ctrl
     }
 
     /// Absolute sim time of the last committed round.
@@ -280,9 +329,12 @@ impl OracleChainDecoder {
         t.iter().map(|&x| c * x + noise * r.normal() as f32 * 2.0).collect()
     }
 
-    /// One speculative round, mirroring `DecodeEngine::round_speculative`.
+    /// One speculative round, mirroring `DecodeEngine::round_speculative`
+    /// (controller decision, reuse classification, one verify pass,
+    /// speculate-ahead pre-draft with the peeked next-round window).
     pub fn round(&mut self) -> OracleRound {
-        let gamma = self.cfg.gamma;
+        let d = self.ctrl.decision();
+        let gamma = d.gamma.max(1);
         let temp = self.cfg.temp;
         let sseed = stream_seed(self.cfg.seed, self.cfg.seq_id);
         let i = self.committed.len() - 1;
@@ -294,22 +346,28 @@ impl OracleChainDecoder {
         if let Some(pd) = &pre {
             if i == pd.next_base {
                 self.draft_frontier = self.draft_frontier.max(pd.anchor_pos + 1);
-                recovered_ns = pd.draft_ns / (gamma as Nanos + 1);
-                if pd.guess == *self.committed.last().unwrap() {
+                recovered_ns = pd.draft_ns / (pd.tokens.len() as Nanos + 1);
+                if pd.guess == *self.committed.last().unwrap() && pd.tokens.len() >= gamma {
+                    // a longer pre-draft's γ-prefix is valid wholesale:
+                    // every drafted token is a pure function of position
                     full_reuse = true;
-                    recovered_ns = pd.draft_ns;
+                    recovered_ns =
+                        pd.draft_ns * (gamma as Nanos + 1) / (pd.tokens.len() as Nanos + 1);
                 }
             }
         }
         let reused = if full_reuse { gamma } else { 0 };
         let wasted = match &pre {
-            Some(pd) if !full_reuse => pd.tokens.len(),
+            Some(pd) if full_reuse => pd.tokens.len() - gamma,
+            Some(pd) => pd.tokens.len(),
             _ => 0,
         };
 
         let mut draft_ns_total: Nanos = 0;
         let (d_tokens, d_logits) = if full_reuse {
-            let pd = pre.expect("checked above");
+            let mut pd = pre.expect("checked above");
+            pd.tokens.truncate(gamma);
+            pd.logits.truncate(gamma * self.cfg.vocab);
             (pd.tokens, pd.logits)
         } else {
             // catch-up replays cost time but produce no window tokens
@@ -353,10 +411,12 @@ impl OracleChainDecoder {
             }
         }
 
-        // --- speculate ahead inside the in-flight gap ---
+        // --- speculate ahead inside the in-flight gap, drafting the
+        // window the controller will ask for after a full accept ---
         let mut pre_drafted = 0usize;
         let mut pre_draft_ns: Nanos = 0;
         let mut overlap_ns: Nanos = 0;
+        let g_next = self.ctrl.peek_full_accept(gamma).gamma.max(1);
         if self.cfg.overlap {
             let anchor_pos = i + gamma;
             let next_base = i + gamma + 1;
@@ -368,9 +428,9 @@ impl OracleChainDecoder {
             let guess = argmax(&head) as i32;
             let mut ns_total = self.cfg.draft_step_ns;
             chain.push(guess);
-            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
-            let mut rows: Vec<f32> = Vec::with_capacity(gamma * self.cfg.vocab);
-            for j in 0..gamma {
+            let mut toks: Vec<i32> = Vec::with_capacity(g_next);
+            let mut rows: Vec<f32> = Vec::with_capacity(g_next * self.cfg.vocab);
+            for j in 0..g_next {
                 let logits = self.draft_row(&chain);
                 let tok =
                     sample_logits_with(&logits, temp, draft_uniform(sseed, next_base + j)) as i32;
@@ -382,7 +442,7 @@ impl OracleChainDecoder {
             let done = self.sim.local_work(timing.stage0_release, ns_total);
             pre_draft_ns = ns_total;
             overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
-            pre_drafted = gamma;
+            pre_drafted = g_next;
             self.pre = Some(PreDraft {
                 next_base,
                 anchor_pos,
@@ -396,6 +456,11 @@ impl OracleChainDecoder {
         // --- host verification + commit ---
         let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
         let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
+        let knobs = if self.cfg.knobs.adaptive {
+            VerifyKnobs { tau: d.tau, ..self.cfg.knobs }
+        } else {
+            self.cfg.knobs
+        };
         let out = host_verify(
             gamma,
             self.cfg.vocab,
@@ -404,12 +469,14 @@ impl OracleChainDecoder {
             &d_tokens,
             &u_accept,
             &u_sample,
-            self.cfg.knobs,
+            knobs,
         );
         let finish = self.sim.local_work(timing.finish, host_verify_cost(gamma));
         self.draft_frontier = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
         self.committed.extend_from_slice(&out.tokens);
         self.ready_at = finish;
+        let key_tokens = out.key_flags.iter().filter(|&&k| k).count();
+        self.ctrl.observe(gamma, out.accepted, key_tokens);
 
         OracleRound {
             committed: out.tokens,
@@ -421,6 +488,9 @@ impl OracleChainDecoder {
             overlap_ns,
             pre_draft_ns,
             recovered_ns,
+            gamma,
+            tau: d.tau,
+            regret_ns: d.regret_ns,
         }
     }
 }

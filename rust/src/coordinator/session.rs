@@ -12,6 +12,7 @@
 //!   draft is one row behind and performs a catch-up step next round.
 
 use crate::cluster::clock::Nanos;
+use crate::control::SeqController;
 use crate::coordinator::overlap::PreDraft;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -43,6 +44,10 @@ pub struct Sequence {
     /// in-flight verify window (overlap scheduler); consumed or
     /// discarded by the next round's reuse classification.
     pub pre_draft: Option<PreDraft>,
+    /// Per-sequence speculation controller (estimator + current
+    /// decision), lazily created by the decode engine on the first
+    /// speculative round.
+    pub ctrl: Option<SeqController>,
     /// Sim/real time when this sequence can take its next round.
     pub ready_at: Nanos,
     pub arrival_ns: Nanos,
@@ -61,6 +66,7 @@ impl Sequence {
             slot: usize::MAX,
             draft_frontier: 0,
             pre_draft: None,
+            ctrl: None,
             ready_at: arrival_ns,
             arrival_ns,
             finished_at: 0,

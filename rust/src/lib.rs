@@ -34,6 +34,19 @@
 //! `benches/ablation_tree.rs` sweeps branching×depth×link latency
 //! against the chain baseline, engine-free.
 //!
+//! ## Adaptive speculation control
+//!
+//! The [`control`] subsystem closes the loop the paper leaves open: a
+//! per-sequence controller (`--controller static|aimd|cost-optimal`)
+//! that each round picks γ, the draft shape, and τ by minimizing the
+//! analytic round-time model ([`control::CostModel`], validated against
+//! [`cluster::PipelineSim`] by a property test) under a live acceptance
+//! estimate ([`control::AcceptanceEstimator`]). Decisions are pure
+//! functions of (config, committed round outcomes), so the
+//! overlap ≡ sequential and sim ≡ real equivalences are preserved;
+//! `benches/ablation_controller.rs` sweeps controller × link latency ×
+//! dataset profile, engine-free.
+//!
 //! Start with [`coordinator::Coordinator`] (serving) or
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.
@@ -41,6 +54,7 @@
 pub mod analysis;
 pub mod cluster;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod eval;
 pub mod harness;

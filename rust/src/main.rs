@@ -27,7 +27,7 @@ const VALUED: &[&str] = &[
     "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
     "draft", "draft_variant", "draft_shape", "max_batch", "dataset", "requests", "seed",
     "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "overlap",
-    "out", "sweep_nodes",
+    "controller", "out", "sweep_nodes",
 ];
 
 fn main() -> Result<()> {
@@ -63,6 +63,7 @@ Common options:
   --gamma G              draft window                   [8]
   --draft_shape S        chain | tree:<branching>x<depth>  [chain]
   --overlap S            speculate-ahead scheduler, on|off [on]
+  --controller C         static|aimd|cost-optimal       [static]
   --temp T               sampling temperature           [1.0]
   --tau T                relaxation coefficient         [0.2]
   --requests N           number of requests             [8]
@@ -114,6 +115,15 @@ fn serve(args: &cli::Args) -> Result<()> {
             report.accept.overlap_ratio() * 100.0,
             report.accept.recovered_ns as f64 / 1e6,
             report.accept.wasted_per_round(),
+        );
+    }
+    if cfg.decode.policy.is_speculative() {
+        println!(
+            "  controller {}: mean γ {:.2}  mean τ {:.3}  regret {:.3} ms/tok",
+            cfg.decode.controller.name(),
+            report.accept.mean_gamma(),
+            report.accept.mean_tau(),
+            report.accept.mean_regret_ns() / 1e6,
         );
     }
     Ok(())

@@ -33,6 +33,7 @@ pub use tree::{
 
 use anyhow::{bail, Result};
 
+use crate::control::ControllerKind;
 use crate::model::VerifyKnobs;
 
 /// Which decoding system runs (paper §3.1).
@@ -87,6 +88,10 @@ pub struct DecodeConfig {
     /// the sequential path). Commits byte-identical token streams to
     /// the sequential scheduler — see `coordinator::overlap`.
     pub overlap: bool,
+    /// Which controller picks (γ, shape, τ) per sequence per round:
+    /// `static` (this config's values, the default), `aimd`, or
+    /// `cost-optimal` — see [`crate::control`].
+    pub controller: ControllerKind,
 }
 
 impl Default for DecodeConfig {
@@ -105,6 +110,7 @@ impl Default for DecodeConfig {
             max_new_tokens: 64,
             seed: 0,
             overlap: true,
+            controller: ControllerKind::Static,
         }
     }
 }
@@ -139,8 +145,14 @@ impl DecodeConfig {
     }
 
     pub fn knobs(&self) -> VerifyKnobs {
+        self.knobs_with_tau(self.tau)
+    }
+
+    /// Verification knobs under a controller-chosen τ (the configured τ
+    /// is the accuracy budget; controllers only ever spend `<= self.tau`).
+    pub fn knobs_with_tau(&self, tau: f32) -> VerifyKnobs {
         VerifyKnobs {
-            tau: self.tau,
+            tau,
             lam1: self.lam1,
             lam2: self.lam2,
             lam3: self.lam3,
@@ -235,5 +247,14 @@ mod tests {
         assert!(!cfg.knobs().adaptive);
         let cfg = DecodeConfig { policy: Policy::Dsd, ..Default::default() };
         assert!(cfg.knobs().adaptive);
+    }
+
+    #[test]
+    fn controller_defaults_static_and_knobs_take_chosen_tau() {
+        let cfg = DecodeConfig::default();
+        assert_eq!(cfg.controller, ControllerKind::Static);
+        let k = cfg.knobs_with_tau(0.05);
+        assert!((k.tau - 0.05).abs() < 1e-9);
+        assert!((cfg.knobs().tau - cfg.tau).abs() < 1e-9);
     }
 }

@@ -32,6 +32,12 @@ pub struct RoundRecord {
     /// Drafting time removed from this round's critical path by
     /// pre-draft reuse ("stall recovered"), ns.
     pub recovered_ns: u64,
+    /// Adaptive-verification threshold τ this round verified under
+    /// (controller-chosen; the configured τ for `--controller static`).
+    pub tau: f32,
+    /// Controller regret: expected ns/token of the chosen (γ, shape, τ)
+    /// against the cost-model optimum at decision time (0 = optimal).
+    pub regret_ns: u64,
 }
 
 impl RoundRecord {
@@ -82,6 +88,13 @@ pub struct AcceptanceStats {
     pub pre_draft_ns: u64,
     /// Drafting ns removed from round critical paths by reuse.
     pub recovered_ns: u64,
+    /// Sum of per-round τ values (controller telemetry).
+    pub tau_sum: f64,
+    /// Sum of per-round controller regret, ns/token.
+    pub regret_ns: u64,
+    /// Histogram of the chosen per-round γ (index = γ) — shows how an
+    /// adaptive controller actually moved the window length.
+    pub gamma_hist: Vec<u64>,
 }
 
 impl AcceptanceStats {
@@ -108,6 +121,12 @@ impl AcceptanceStats {
         self.overlap_ns += r.overlap_ns;
         self.pre_draft_ns += r.pre_draft_ns;
         self.recovered_ns += r.recovered_ns;
+        self.tau_sum += r.tau as f64;
+        self.regret_ns += r.regret_ns;
+        if self.gamma_hist.len() <= r.gamma {
+            self.gamma_hist.resize(r.gamma + 1, 0);
+        }
+        self.gamma_hist[r.gamma] += 1;
     }
 
     /// Mean accepted draft tokens per round (k̄).
@@ -187,6 +206,32 @@ impl AcceptanceStats {
         self.wasted_pre_draft as f64 / self.rounds as f64
     }
 
+    /// Mean chosen draft window length per round (= the configured γ for
+    /// the static controller; tracks the controller elsewhere).
+    pub fn mean_gamma(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.draft_tokens as f64 / self.rounds as f64
+    }
+
+    /// Mean verification threshold τ per round.
+    pub fn mean_tau(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.tau_sum / self.rounds as f64
+    }
+
+    /// Mean controller regret per round, ns/token (0 when every decision
+    /// hit the cost-model optimum).
+    pub fn mean_regret_ns(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.regret_ns as f64 / self.rounds as f64
+    }
+
     pub fn merge(&mut self, other: &AcceptanceStats) {
         self.rounds += other.rounds;
         self.draft_tokens += other.draft_tokens;
@@ -212,6 +257,14 @@ impl AcceptanceStats {
         self.overlap_ns += other.overlap_ns;
         self.pre_draft_ns += other.pre_draft_ns;
         self.recovered_ns += other.recovered_ns;
+        self.tau_sum += other.tau_sum;
+        self.regret_ns += other.regret_ns;
+        if self.gamma_hist.len() < other.gamma_hist.len() {
+            self.gamma_hist.resize(other.gamma_hist.len(), 0);
+        }
+        for (i, &c) in other.gamma_hist.iter().enumerate() {
+            self.gamma_hist[i] += c;
+        }
     }
 }
 
@@ -275,6 +328,31 @@ mod tests {
         assert_eq!(s.reuse_rate(), 0.0);
         assert_eq!(s.overlap_ratio(), 0.0);
         assert_eq!(s.wasted_per_round(), 0.0);
+        assert_eq!(s.mean_gamma(), 0.0);
+        assert_eq!(s.mean_tau(), 0.0);
+        assert_eq!(s.mean_regret_ns(), 0.0);
+    }
+
+    #[test]
+    fn controller_telemetry_aggregates_and_merges() {
+        let mut s = AcceptanceStats::default();
+        s.record(RoundRecord { tau: 0.2, regret_ns: 1_000, ..rec(8, 5, 0) });
+        s.record(RoundRecord { tau: 0.0, regret_ns: 0, ..rec(4, 4, 0) });
+        assert!((s.mean_tau() - 0.1).abs() < 1e-7);
+        assert!((s.mean_regret_ns() - 500.0).abs() < 1e-9);
+        assert!((s.mean_gamma() - 6.0).abs() < 1e-9);
+        assert_eq!(s.gamma_hist[8], 1);
+        assert_eq!(s.gamma_hist[4], 1);
+
+        let mut t = AcceptanceStats::default();
+        t.record(RoundRecord { tau: 0.3, regret_ns: 500, ..rec(2, 1, 0) });
+        t.merge(&s);
+        assert_eq!(t.rounds, 3);
+        assert_eq!(t.regret_ns, 1_500);
+        assert_eq!(t.gamma_hist.len(), 9);
+        assert_eq!(t.gamma_hist[2], 1);
+        assert_eq!(t.gamma_hist[8], 1);
+        assert!((t.tau_sum - 0.5).abs() < 1e-7);
     }
 
     #[test]

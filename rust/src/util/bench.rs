@@ -1,7 +1,28 @@
 //! Micro-benchmark helper (offline environment: no criterion). Used by
-//! `benches/hotpath.rs` and the perf pass.
+//! `benches/hotpath.rs` and the perf pass. Also home of the
+//! machine-readable bench output: ablation benches write a
+//! `BENCH_<name>.json` (config + headline numbers) via
+//! [`write_bench_json`] so the perf trajectory is tracked across PRs
+//! (CI uploads the files as workflow artifacts).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// Write `BENCH_<name>.json` in the current directory (the crate root
+/// under `cargo bench`) and return the path. The value should be an
+/// object carrying the bench's config and headline metrics.
+pub fn write_bench_json(name: &str, value: &Value) -> std::io::Result<PathBuf> {
+    write_bench_json_in(Path::new("."), name, value)
+}
+
+/// [`write_bench_json`] into an explicit directory.
+pub fn write_bench_json_in(dir: &Path, name: &str, value: &Value) -> std::io::Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{value}\n"))?;
+    Ok(path)
+}
 
 /// Result of one measured loop.
 #[derive(Debug, Clone)]
@@ -63,6 +84,20 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> Bench
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_writes_parseable_file() {
+        let dir = std::env::temp_dir().join("dsd_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let v = Value::obj(&[("speedup", 1.5f64.into()), ("rounds", 10usize.into())]);
+        let path = write_bench_json_in(&dir, "testbench", &v).unwrap();
+        assert!(path.ends_with("BENCH_testbench.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(back.f64_field("speedup").unwrap(), 1.5);
+        assert_eq!(back.usize_field("rounds").unwrap(), 10);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn bench_measures_something() {

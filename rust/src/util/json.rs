@@ -103,6 +103,72 @@ impl Value {
     }
 }
 
+impl Value {
+    /// Build an object from key/value pairs (bench JSON emitters).
+    pub fn obj(pairs: &[(&str, Value)]) -> Value {
+        Value::Object(
+            pairs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.clone()))
+                .collect(),
+        )
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(i: i64) -> Value {
+        Value::Int(i)
+    }
+}
+
+impl From<u64> for Value {
+    /// Saturating: values past i64::MAX would otherwise wrap negative.
+    fn from(i: u64) -> Value {
+        Value::Int(i.min(i64::MAX as u64) as i64)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(i: usize) -> Value {
+        Value::Int(i as i64)
+    }
+}
+
+impl From<f64> for Value {
+    /// Non-finite floats have no JSON spelling; emit null instead.
+    fn from(x: f64) -> Value {
+        if x.is_finite() {
+            Value::Float(x)
+        } else {
+            Value::Null
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Value {
+        Value::Array(a)
+    }
+}
+
 impl fmt::Display for Value {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -381,6 +447,27 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("1 2").is_err());
         assert!(parse("nul").is_err());
+    }
+
+    #[test]
+    fn builders_roundtrip_through_parse() {
+        let v = Value::obj(&[
+            ("name", "overlap".into()),
+            ("speedup", 1.25f64.into()),
+            ("rounds", 200usize.into()),
+            ("pass", true.into()),
+            ("cells", Value::Array(vec![Value::obj(&[("gamma", 4usize.into())])])),
+            ("nan_becomes_null", f64::NAN.into()),
+        ]);
+        let text = v.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.str_field("name").unwrap(), "overlap");
+        assert_eq!(back.f64_field("speedup").unwrap(), 1.25);
+        assert_eq!(back.usize_field("rounds").unwrap(), 200);
+        assert_eq!(back.get("pass").unwrap(), &Value::Bool(true));
+        assert_eq!(back.get("nan_becomes_null").unwrap(), &Value::Null);
+        let cells = back.get("cells").unwrap().as_array().unwrap();
+        assert_eq!(cells[0].usize_field("gamma").unwrap(), 4);
     }
 
     #[test]

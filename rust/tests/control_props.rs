@@ -1,0 +1,244 @@
+//! Engine-free properties of the `control` subsystem.
+//!
+//! * The analytic cost model's deterministic round time matches a fresh
+//!   `PipelineSim` charging the same round **exactly**, across
+//!   γ × branching × link latency × bandwidth (the model is assembled
+//!   from the same terms the simulator charges — any drift here means
+//!   the controller is optimizing a different machine than it runs on).
+//! * Every controller commits byte-identical token streams with the
+//!   speculate-ahead scheduler on and off: decisions are pure functions
+//!   of committed outcomes, so scheduling can never leak into tokens.
+//! * Controller-chosen γ is re-clamped against KV headroom (the
+//!   near-full-cache regression).
+//! * `cost-optimal` actually adapts: on slow links with a healthy
+//!   acceptance rate it widens γ beyond the static default and is not
+//!   slower end-to-end.
+
+use dsd::cluster::{LinkModel, PipelineSim, Topology};
+use dsd::control::{clamp_gamma, ControllerKind, CostModel};
+use dsd::coordinator::{OracleChainDecoder, OracleConfig};
+use dsd::model::{KvCache, VerifyKnobs};
+use dsd::spec::DraftShape;
+
+fn cost_for(nodes: usize, link_ms: f64, gbps: f64) -> CostModel {
+    CostModel {
+        nodes,
+        link_ns: (link_ms * 1e6) as u64,
+        bandwidth_bps: (gbps * 1e9 / 8.0) as u64,
+        per_token_pass_ns: 240_000,
+        draft_step_ns: 600_000,
+        verify_base_ns: 100_000,
+        verify_per_node_ns: 2_000,
+        fwd_bytes_per_token: 1024,
+        ret_bytes_per_token: 256,
+    }
+}
+
+/// Drive a fresh simulator through exactly the round the cost model
+/// prices: leader-local drafting, one flattened window pass, leader-local
+/// verification. Returns the absolute finish time.
+fn measure_round(
+    nodes: usize,
+    link_ms: f64,
+    gbps: f64,
+    cost: &CostModel,
+    window_nodes: usize,
+    draft_steps: usize,
+) -> u64 {
+    let topo = Topology::uniform(nodes, LinkModel::wan(link_ms, gbps));
+    let mut sim = PipelineSim::new(topo, 7);
+    let per_stage = vec![cost.per_token_pass_ns / nodes as u64; nodes];
+    let draft_done = sim.local_work(0, draft_steps as u64 * cost.draft_step_ns);
+    let t = sim.window_pass(
+        draft_done,
+        window_nodes + 1,
+        &per_stage,
+        cost.fwd_bytes_per_token,
+        cost.ret_bytes_per_token,
+    );
+    sim.local_work(
+        t.finish,
+        cost.verify_base_ns + window_nodes as u64 * cost.verify_per_node_ns,
+    )
+}
+
+#[test]
+fn cost_model_matches_pipeline_sim_exactly() {
+    // The satellite property: analytic expected round time vs an
+    // engine-free PipelineSim measurement across γ ∈ 1..8,
+    // branching ∈ {1,2,3}, link_ms ∈ {0,5,20} — deterministic terms, so
+    // the tolerance is zero.
+    let nodes = 4;
+    for link_ms in [0.0f64, 5.0, 20.0] {
+        for gbps in [0.0f64, 1.0] {
+            let cost = cost_for(nodes, link_ms, gbps);
+            for gamma in 1usize..=8 {
+                for branching in [1usize, 2, 3] {
+                    let shape =
+                        DraftShape::Tree { branching, depth: gamma, max_nodes: 64 };
+                    let window_nodes = shape.max_nodes_or(gamma);
+                    let draft_steps = CostModel::draft_steps(shape, gamma);
+                    let analytic = cost.round_time_ns(window_nodes, draft_steps);
+                    let measured =
+                        measure_round(nodes, link_ms, gbps, &cost, window_nodes, draft_steps);
+                    assert_eq!(
+                        analytic, measured,
+                        "cost model drifted from the simulator: γ={gamma} b={branching} \
+                         t1={link_ms}ms bw={gbps}Gbps"
+                    );
+                }
+                // chains go through the same deterministic terms
+                let chain_nodes = DraftShape::Chain.max_nodes_or(gamma);
+                let chain_steps = CostModel::draft_steps(DraftShape::Chain, gamma);
+                assert_eq!(
+                    cost.round_time_ns(chain_nodes, chain_steps),
+                    measure_round(nodes, link_ms, gbps, &cost, chain_nodes, chain_steps),
+                    "chain cost drifted: γ={gamma} t1={link_ms}ms bw={gbps}Gbps"
+                );
+            }
+        }
+    }
+}
+
+fn knobs_for(policy: &str, temp: f32) -> VerifyKnobs {
+    match policy {
+        "eagle3" => VerifyKnobs::strict(temp),
+        _ => VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp, adaptive: true },
+    }
+}
+
+fn run_stream(cfg: OracleConfig, rounds: usize) -> (Vec<i32>, u64, u64) {
+    let mut dec = OracleChainDecoder::new(cfg, &[3, 141, 59, 26]).unwrap();
+    let mut reused = 0u64;
+    for _ in 0..rounds {
+        let r = dec.round();
+        reused += r.reused as u64;
+    }
+    (dec.committed.clone(), dec.finish_time(), reused)
+}
+
+#[test]
+fn every_controller_is_overlap_invariant() {
+    // The purity property behind the whole design: controller decisions
+    // are functions of committed outcomes only, so the speculate-ahead
+    // scheduler changes WHEN work happens but never WHAT is committed.
+    let mut total_reused = 0u64;
+    for kind in [ControllerKind::Static, ControllerKind::Aimd, ControllerKind::CostOptimal] {
+        for seed in 0..3u64 {
+            for policy in ["dsd", "eagle3"] {
+                for temp in [0.0f32, 1.0] {
+                    for link_ms in [2.0f64, 15.0] {
+                        let base = OracleConfig {
+                            gamma: 3,
+                            temp,
+                            knobs: knobs_for(policy, temp),
+                            controller: kind,
+                            seed: 0xC0DE ^ (seed * 7919),
+                            link_ms,
+                            ..Default::default()
+                        };
+                        let seq =
+                            run_stream(OracleConfig { overlap: false, ..base.clone() }, 24);
+                        let ovl = run_stream(OracleConfig { overlap: true, ..base }, 24);
+                        assert_eq!(
+                            seq.0, ovl.0,
+                            "controller {kind:?} diverged under overlap: seed {seed} \
+                             policy {policy} temp {temp} link {link_ms}"
+                        );
+                        assert!(
+                            ovl.1 <= seq.1,
+                            "controller {kind:?} made overlap slower: {} vs {}",
+                            ovl.1,
+                            seq.1
+                        );
+                        total_reused += ovl.2;
+                    }
+                }
+            }
+        }
+    }
+    assert!(total_reused > 0, "sweep never reused a pre-draft — vacuous differential");
+}
+
+#[test]
+fn static_controller_reproduces_runs_exactly() {
+    // Same config twice (fresh decoders): identical tokens AND identical
+    // simulated times — and the controller field being Static means the
+    // stream equals the pre-controller scheduler's by construction
+    // (pinned against golden expectations in overlap_differential.rs).
+    for kind in [ControllerKind::Static, ControllerKind::CostOptimal] {
+        let cfg = OracleConfig { controller: kind, seed: 11, ..Default::default() };
+        let a = run_stream(cfg.clone(), 30);
+        let b = run_stream(cfg, 30);
+        assert_eq!(a.0, b.0, "{kind:?} tokens must reproduce");
+        assert_eq!(a.1, b.1, "{kind:?} sim time must reproduce");
+    }
+}
+
+#[test]
+fn cost_optimal_adapts_gamma_and_is_not_slower() {
+    // Slow link, predictable draft: the controller must widen γ beyond
+    // the conservative static default and convert that into fewer sync
+    // rounds per token (not-slower end to end, and typically faster).
+    let base = OracleConfig {
+        gamma: 2,
+        corr: 0.9,
+        link_ms: 15.0,
+        knobs: knobs_for("dsd", 1.0),
+        seed: 99,
+        ..Default::default()
+    };
+    let token_budget = 200usize;
+    let run_until = |kind: ControllerKind| {
+        let cfg = OracleConfig { controller: kind, ..base.clone() };
+        let mut dec = OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap();
+        let mut rounds = 0u64;
+        let mut gamma_sum = 0u64;
+        while dec.committed.len() - 4 < token_budget {
+            let r = dec.round();
+            rounds += 1;
+            gamma_sum += r.gamma as u64;
+        }
+        let tokens = (dec.committed.len() - 4) as u64;
+        (
+            dec.finish_time() as f64 / tokens as f64,
+            gamma_sum as f64 / rounds as f64,
+        )
+    };
+    let (static_ns_tok, static_gamma) = run_until(ControllerKind::Static);
+    let (opt_ns_tok, opt_gamma) = run_until(ControllerKind::CostOptimal);
+    assert!((static_gamma - 2.0).abs() < 1e-9, "static γ must stay pinned");
+    assert!(
+        opt_gamma > 2.5,
+        "cost-optimal must widen γ on a 15ms link at corr 0.9, got mean {opt_gamma:.2}"
+    );
+    assert!(
+        opt_ns_tok < static_ns_tok * 1.02,
+        "cost-optimal must not be slower: {opt_ns_tok:.0} vs {static_ns_tok:.0} ns/tok"
+    );
+}
+
+#[test]
+fn controller_gamma_is_clamped_by_kv_headroom() {
+    // The near-full KvCache regression: a controller-chosen γ=8 against
+    // 3 remaining rows must shrink to 3 — committing the clamped round
+    // fits the cache, the unclamped one would overflow.
+    let max_seq = 32;
+    let committed_len = 28;
+    let g = clamp_gamma(8, committed_len, max_seq);
+    assert_eq!(g, 3);
+
+    let mut cache = KvCache::new(1, max_seq, 1, 4);
+    cache.commit(committed_len).unwrap();
+    // worst case commits the whole clamped window + bonus token
+    cache.commit(g + 1).unwrap();
+    assert_eq!(cache.remaining(), 0);
+
+    let mut unclamped = KvCache::new(1, max_seq, 1, 4);
+    unclamped.commit(committed_len).unwrap();
+    let err = unclamped.commit(8 + 1).unwrap_err().to_string();
+    assert!(err.contains("overflow"), "{err}");
+
+    // boundary: one free row still admits a γ=1 round
+    assert_eq!(clamp_gamma(8, max_seq - 2, max_seq), 1);
+}

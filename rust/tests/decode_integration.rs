@@ -180,6 +180,83 @@ fn real_cluster_matches_sim_mode_at_temperature() {
 }
 
 #[test]
+fn real_interleaved_with_predraft_matches_sim_at_temperature() {
+    common::require_artifacts!();
+    // The ROADMAP port: `serve_interleaved` now pre-drafts the same
+    // sequence's next window while its verify window is on the wire
+    // (overlap on), sharing `coordinator::overlap`'s keyed uniforms —
+    // so the thread deployment must commit byte-identical streams to
+    // the simulated coordinator at sampling temperature, across a
+    // multi-request interleaved batch.
+    let e = engine();
+    let prompts: Vec<(u64, Vec<i32>)> = vec![
+        (0, vec![42, 43, 44, 45, 46, 47]),
+        (1, vec![7, 8, 9, 10]),
+        (2, vec![100, 200, 300, 400, 500]),
+    ];
+    let mut cfg = deploy(Policy::Dsd, 1.0, 2);
+    cfg.max_batch = 3;
+    cfg.decode.seed = cfg.seed; // RealCluster keys rng off decode.seed + id
+    cfg.decode.overlap = true;
+    cfg.decode.max_new_tokens = 16;
+
+    // sim side: the coordinator on the same requests
+    let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .map(|(id, p)| Request {
+            id: *id,
+            prompt: p.clone(),
+            max_new_tokens: cfg.decode.max_new_tokens,
+            arrival_ns: 0,
+        })
+        .collect();
+    let (_, sim_results) = coord.run_workload(reqs).unwrap();
+
+    // real side: thread deployment, interleaved with pre-drafting
+    let mut real = RealCluster::launch(
+        artifacts().to_str().unwrap(),
+        2,
+        LinkModel::wan(0.2, 0.0),
+        "d6_s000",
+    )
+    .unwrap();
+    let real_results = real.serve_interleaved(&prompts, &cfg.decode, 2).unwrap();
+    real.shutdown().unwrap();
+
+    assert_eq!(sim_results.len(), real_results.len());
+    for (s, r) in sim_results.iter().zip(&real_results) {
+        assert_eq!(s.id, r.id);
+        assert_eq!(
+            s.tokens, r.tokens,
+            "interleaved real deployment diverged from sim for request {}",
+            s.id
+        );
+    }
+}
+
+#[test]
+fn real_cluster_rejects_adaptive_controllers() {
+    common::require_artifacts!();
+    let mut cfg = deploy(Policy::Dsd, 1.0, 2);
+    cfg.decode.controller = dsd::control::ControllerKind::CostOptimal;
+    let mut real = RealCluster::launch(
+        artifacts().to_str().unwrap(),
+        2,
+        LinkModel::wan(0.2, 0.0),
+        "d6_s000",
+    )
+    .unwrap();
+    let err = real
+        .serve_one(0, &[1, 2, 3], &cfg.decode)
+        .err()
+        .map(|e| e.to_string())
+        .expect("adaptive controller must be rejected on the real cluster");
+    assert!(err.contains("static controller"), "{err}");
+    real.shutdown().unwrap();
+}
+
+#[test]
 fn tree_rounds_ignore_overlap_flag() {
     common::require_artifacts!();
     // Tree-shaped rounds fall back to the sequential schedule; the
