@@ -1,0 +1,225 @@
+//! Fused-batch ablation: fused group size × link latency × dataset
+//! profile vs the B=1 per-sequence baseline, engine-free.
+//!
+//! Every cell serves the same fleet of sequences through the
+//! [`OracleFleet`] twin of the fused coordinator (seeded synthetic
+//! draft/target logits, shared `PipelineSim` with channel-occupying
+//! links, keyed uniforms) with ONLY the group cap changed: `cap = 1`
+//! dispatches one verify window per sequence per round (the legacy
+//! path — every link carries B messages per round wave), `cap = B`
+//! fuses the windows into one ragged pass per round (one message per
+//! hop, one sync for the whole group).
+//!
+//! The bench asserts, and exits nonzero otherwise:
+//! * **B-invariance differential** — every cap commits byte-identical
+//!   per-sequence token streams (grouping moves time, never tokens);
+//! * **win criterion** — the fully fused fleet beats the B=1 baseline's
+//!   wall-clock per committed token at every link_ms >= 5 on at least
+//!   two dataset profiles (the multi-user version of the paper's
+//!   high-latency regime: per-sequence syncs contend on the channels,
+//!   fused rounds pay them once per batch).
+//!
+//! A machine-readable `BENCH_ablation_batch.json` (config + per-cell
+//! rows) is written next to the crate so CI tracks the trajectory.
+//!
+//! The default fleet is deliberately wider than the pipeline
+//! (`batch 12` over 4 nodes): a fused wave's round trip costs ~N·t1 of
+//! channel time where a generation of solo rounds costs each hop B·t1,
+//! so the win scales with B/N — the multi-user regime the ROADMAP's
+//! north star names.
+//!
+//! Run: `cargo bench --bench ablation_batch` \
+//!      `-- [--tokens 48] [--batch 12] [--caps 1,3,12] [--link_ms 2,5,15]`
+
+use dsd::control::ControllerKind;
+use dsd::coordinator::{OracleConfig, OracleFleet};
+use dsd::model::VerifyKnobs;
+use dsd::util::bench::write_bench_json;
+use dsd::util::cli;
+use dsd::util::json::Value;
+use dsd::util::table::{fnum, Table};
+
+/// Synthetic stand-ins for the paper's dataset profiles: name + the
+/// draft/target logit correlation of the oracle pair.
+const PROFILES: &[(&str, f32)] = &[("humaneval", 0.92), ("gsm8k", 0.85), ("cnndm", 0.60)];
+
+struct CellRun {
+    streams: Vec<Vec<i32>>,
+    tokens: u64,
+    finish_ns: u64,
+    sync_rounds: u64,
+    mean_group_width: f64,
+}
+
+impl CellRun {
+    fn ms_per_token(&self) -> f64 {
+        self.finish_ns as f64 / 1e6 / self.tokens.max(1) as f64
+    }
+}
+
+fn run_cell(
+    base: &OracleConfig,
+    batch: usize,
+    cap: usize,
+    tokens_per_seq: usize,
+    budget: usize,
+) -> anyhow::Result<CellRun> {
+    let prompt = [3, 141, 59, 26];
+    let mut fleet = OracleFleet::new(base, batch, &prompt)?;
+    let report = fleet.serve(tokens_per_seq, cap, budget);
+    let streams = (0..batch).map(|s| fleet.generated(s).to_vec()).collect();
+    Ok(CellRun {
+        streams,
+        tokens: report.tokens,
+        finish_ns: report.finish_ns,
+        sync_rounds: fleet.sim.stats.sync_rounds,
+        mean_group_width: report.mean_group_width,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &["tokens", "batch", "caps", "link_ms", "gamma", "nodes", "vocab", "seed", "budget"],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let tokens_per_seq = args.usize_or("tokens", 48)?;
+    let batch = args.usize_or("batch", 12)?;
+    let caps = args.usize_list_or("caps", &[1, 3, 12])?;
+    let links = args.f64_list_or("link_ms", &[2.0, 5.0, 15.0])?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let vocab = args.usize_or("vocab", 64)?;
+    let gamma = args.usize_or("gamma", 2)?;
+    let seed = args.u64_or("seed", 20250710)?;
+    let budget = args.usize_or("budget", 64)?;
+    let knobs =
+        VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp: 1.0, adaptive: true };
+    let max_cap = caps.iter().copied().max().unwrap_or(1);
+
+    println!(
+        "# Fused-batch ablation (dsd; {batch} sequences, N={nodes}, vocab={vocab}, γ={gamma}, \
+         {tokens_per_seq} tokens/seq, budget {budget})"
+    );
+
+    let mut all_identical = true;
+    let mut json_cells: Vec<Value> = Vec::new();
+    // profile -> fully fused beats cap=1 at every link >= 5?
+    let mut profile_wins: Vec<(String, bool, usize)> = Vec::new();
+
+    for &(profile, corr) in PROFILES {
+        let mut wins_needed = 0usize;
+        let mut wins = 0usize;
+        for &link_ms in &links {
+            let base = OracleConfig {
+                vocab,
+                corr,
+                gamma,
+                knobs,
+                controller: ControllerKind::Static,
+                seed,
+                nodes,
+                link_ms,
+                ..Default::default()
+            };
+            let mut table = Table::new(
+                format!("{profile} (corr {corr}) @ t1={link_ms}ms"),
+                &["group cap", "ms/tok", "speedup", "syncs", "mean width", "identical"],
+            );
+            let mut base_ms_tok = 0.0f64;
+            let mut base_streams: Vec<Vec<i32>> = Vec::new();
+            for &cap in &caps {
+                let cell = run_cell(&base, batch, cap, tokens_per_seq, budget)?;
+                let identical = if cap == caps[0] {
+                    base_ms_tok = cell.ms_per_token();
+                    base_streams = cell.streams.clone();
+                    true
+                } else {
+                    cell.streams == base_streams
+                };
+                all_identical &= identical;
+                if cap == max_cap && cap > 1 && link_ms >= 5.0 {
+                    wins_needed += 1;
+                    if cell.ms_per_token() < base_ms_tok {
+                        wins += 1;
+                    }
+                }
+                table.row(vec![
+                    cap.to_string(),
+                    fnum(cell.ms_per_token(), 3),
+                    fnum(base_ms_tok / cell.ms_per_token(), 3),
+                    cell.sync_rounds.to_string(),
+                    fnum(cell.mean_group_width, 2),
+                    if identical { "yes".into() } else { "DIVERGED".into() },
+                ]);
+                json_cells.push(Value::obj(&[
+                    ("profile", profile.into()),
+                    ("corr", (corr as f64).into()),
+                    ("link_ms", link_ms.into()),
+                    ("group_cap", cap.into()),
+                    ("ms_per_token", cell.ms_per_token().into()),
+                    ("speedup_vs_b1", (base_ms_tok / cell.ms_per_token()).into()),
+                    ("finish_ms", (cell.finish_ns as f64 / 1e6).into()),
+                    ("tokens", cell.tokens.into()),
+                    ("sync_rounds", cell.sync_rounds.into()),
+                    ("mean_group_width", cell.mean_group_width.into()),
+                    ("streams_identical_to_b1", identical.into()),
+                ]));
+            }
+            table.print();
+            println!();
+        }
+        profile_wins.push((profile.to_string(), wins == wins_needed && wins_needed > 0, wins));
+    }
+
+    let winning_profiles = profile_wins.iter().filter(|(_, won, _)| *won).count();
+    for (p, won, wins) in &profile_wins {
+        println!(
+            "profile {p:<10} fused (cap {max_cap}) {} B=1 at every link_ms >= 5 ({wins} cells)",
+            if *won { "BEATS" } else { "does NOT beat" }
+        );
+    }
+    println!(
+        "differential     {}",
+        if all_identical {
+            "PASS (every group cap committed byte-identical per-sequence streams)"
+        } else {
+            "FAIL (group composition leaked into commits — B-invariance bug)"
+        }
+    );
+    let win_ok = winning_profiles >= 2;
+    println!(
+        "win criterion    {}",
+        if win_ok {
+            "PASS (fused rounds beat the B=1 baseline at link_ms >= 5 on >= 2 profiles)"
+        } else {
+            "FAIL (fusing did not pay broadly enough — check link-channel accounting)"
+        }
+    );
+
+    let json = Value::obj(&[
+        (
+            "config",
+            Value::obj(&[
+                ("tokens_per_seq", tokens_per_seq.into()),
+                ("batch", batch.into()),
+                ("caps", Value::Array(caps.iter().map(|&c| c.into()).collect())),
+                ("nodes", nodes.into()),
+                ("vocab", vocab.into()),
+                ("gamma", gamma.into()),
+                ("seed", seed.into()),
+                ("budget", budget.into()),
+                ("link_ms", Value::Array(links.iter().map(|&l| l.into()).collect())),
+            ]),
+        ),
+        ("cells", Value::Array(json_cells)),
+        ("differential_pass", all_identical.into()),
+        ("win_criterion_pass", win_ok.into()),
+        ("winning_profiles", winning_profiles.into()),
+    ]);
+    let path = write_bench_json("ablation_batch", &json)?;
+    println!("wrote {}", path.display());
+
+    if !all_identical || !win_ok {
+        anyhow::bail!("ablation_batch smoke criteria failed");
+    }
+    Ok(())
+}

@@ -88,7 +88,12 @@ fn main() -> anyhow::Result<()> {
     println!("{}", r.line());
 
     let views: Vec<SeqView> = (0..16)
-        .map(|idx| SeqView { idx, ready_at: (idx as u64) * 37 % 11, prefilled: idx % 2 == 0 })
+        .map(|idx| SeqView {
+            idx,
+            ready_at: (idx as u64) * 37 % 11,
+            prefilled: idx % 2 == 0,
+            window: 5,
+        })
         .collect();
     let r = bench("batcher next_action 16 seqs", 10, 10_000, || {
         let _ = next_action(5, Some(100), true, &views);

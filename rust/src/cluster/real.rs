@@ -18,9 +18,11 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::topology::LinkModel;
-use crate::control::ControllerKind;
+use crate::control::cost::{CAL_DRAFT_STEP_NS, CAL_PER_TOKEN_PASS_NS};
+use crate::control::{clamp_gamma, ControlConfig, ControllerKind, CostModel, SeqController};
 use crate::coordinator::overlap::{
-    accept_uniform, draft_uniform, sample_uniform, stream_seed, PreDraft,
+    accept_uniform, draft_uniform, sample_uniform, stream_seed, PreDraft, HOST_VERIFY_BASE_NS,
+    HOST_VERIFY_PER_NODE_NS,
 };
 use crate::model::kv::KvCache;
 use crate::model::shard::{plan_shards, ShardSpec};
@@ -172,6 +174,39 @@ impl RealCluster {
         self.engine.manifest().model.clone()
     }
 
+    /// Controller specification for this deployment — the same
+    /// construction as `Coordinator::with_engine` (engine-free
+    /// calibration constants; topology terms from the launch link; γ
+    /// grid from the manifest; solo sync pricing, since the thread
+    /// driver runs per-sequence rounds), so adaptive decision streams
+    /// match a simulated coordinator configured with the same link and
+    /// `fuse = off` — the real-vs-sim differential extends to
+    /// non-static controllers (`decode_integration.rs`).
+    fn control_config(&self, cfg: &DecodeConfig) -> ControlConfig {
+        let m = self.dims();
+        let cost = CostModel {
+            nodes: self.n_nodes,
+            link_ns: self.return_link.base_ns,
+            bandwidth_bps: self.return_link.bandwidth_bps,
+            per_token_pass_ns: CAL_PER_TOKEN_PASS_NS,
+            draft_step_ns: CAL_DRAFT_STEP_NS,
+            verify_base_ns: HOST_VERIFY_BASE_NS,
+            verify_per_node_ns: HOST_VERIFY_PER_NODE_NS,
+            fwd_bytes_per_token: m.d_model * 4,
+            ret_bytes_per_token: m.vocab * 4,
+        };
+        ControlConfig::new(
+            cfg.controller,
+            cfg.gamma.max(1),
+            cfg.shape,
+            cfg.tau,
+            matches!(cfg.policy, Policy::Dsd),
+            cost,
+        )
+        .with_gammas(self.engine.manifest().gammas.clone())
+        .with_fuse(1)
+    }
+
     /// One full pipeline pass: leader stage locally, then through the
     /// worker chain, blocking until the logits return.
     fn window_pass(&mut self, seq: u64, tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
@@ -234,8 +269,9 @@ impl RealCluster {
         }
         if cfg.controller != ControllerKind::Static {
             bail!(
-                "the real-cluster driver runs the static controller only; adaptive \
-                 controllers (--controller {}) run on the simulated coordinator",
+                "serve_one runs the static controller only (it is sequential by \
+                 design); adaptive controllers (--controller {}) run on \
+                 serve_interleaved or the simulated coordinator",
                 cfg.controller.name()
             );
         }
@@ -388,6 +424,12 @@ impl RealCluster {
     /// Both drafting kinds share the position-keyed uniform streams, so
     /// commits stay byte-identical to the simulated coordinator at any
     /// temperature — pinned by `decode_integration.rs`.
+    ///
+    /// Adaptive controllers (`aimd` / `cost-optimal`) are supported:
+    /// each run carries its own [`SeqController`] fed the same
+    /// committed-outcome and bonus-guess observations as the simulated
+    /// engine, so decision streams — and with them the token streams —
+    /// match a `fuse = off` coordinator at the same link settings.
     pub fn serve_interleaved(
         &mut self,
         requests: &[(u64, Vec<i32>)],
@@ -403,13 +445,7 @@ impl RealCluster {
                 cfg.shape.name()
             );
         }
-        if cfg.controller != ControllerKind::Static {
-            bail!(
-                "the real-cluster driver runs the static controller only; adaptive \
-                 controllers (--controller {}) run on the simulated coordinator",
-                cfg.controller.name()
-            );
-        }
+        let ctrl_cfg = self.control_config(cfg);
         let m = self.dims();
         struct Run {
             id: u64,
@@ -422,6 +458,16 @@ impl RealCluster {
             /// Speculate-ahead window drafted while this run's verify
             /// window was on the wire.
             pre: Option<PreDraft>,
+            /// Per-sequence speculation controller (γ/τ per round).
+            ctrl: SeqController,
+        }
+        struct Inflight {
+            ri: usize,
+            d_tokens: Vec<i32>,
+            d_logits: Vec<f32>,
+            i: usize,
+            gamma: usize,
+            tau: f32,
         }
         let mut runs: Vec<Run> = Vec::new();
         for (id, prompt) in requests {
@@ -454,13 +500,16 @@ impl RealCluster {
                 start,
                 done: false,
                 pre: None,
+                ctrl: SeqController::new(ctrl_cfg.clone()),
             });
         }
 
-        // In-flight window: (run index, draft tokens, draft logits, i).
-        let mut inflight: VecDeque<(usize, Vec<i32>, Vec<f32>, usize)> = VecDeque::new();
+        let mut inflight: VecDeque<Inflight> = VecDeque::new();
         let mut results: Vec<RealResult> = Vec::new();
-        let gamma = cfg.gamma;
+        // The serving-loop continuation bound uses the CONFIGURED γ
+        // (`cfg.gamma`), exactly like the coordinator's window-room
+        // check — per-round adaptive γ is clamped separately below.
+        let base_gamma = cfg.gamma;
         loop {
             // Fill the pipeline: draft + dispatch for any idle, unfinished
             // sequence while there is depth budget. THIS drafting happens
@@ -469,33 +518,45 @@ impl RealCluster {
                 if inflight.len() >= depth || run.done {
                     continue;
                 }
-                if inflight.iter().any(|(i, ..)| *i == ri) {
+                if inflight.iter().any(|f| f.ri == ri) {
                     continue; // one window per sequence at a time
                 }
                 if run.committed.len() - run.plen >= cfg.max_new_tokens
-                    || run.committed.len() + gamma + 1 >= m.max_seq
+                    || run.committed.len() + base_gamma + 1 >= m.max_seq
                 {
                     continue;
                 }
                 let i = run.committed.len() - 1;
+                // per-round window length: the controller's decision,
+                // KV-clamped and snapped to the manifest's γ grid —
+                // identical arithmetic to DecodeEngine::draft_phase
+                let d = run.ctrl.decision();
+                let gamma =
+                    ctrl_cfg.snap_gamma(clamp_gamma(d.gamma, run.committed.len(), m.max_seq));
+                let tau = d.tau;
                 // draft locally — reusing the speculate-ahead window when
                 // its assume-all-accepted continuation held (same rules
-                // as DecodeEngine::round_speculative)
+                // as DecodeEngine::draft_phase, including the guess-hit
+                // observation feeding the controller's estimator)
                 let pre = run.pre.take();
                 let mut full_reuse = false;
                 if let Some(pd) = &pre {
                     if i == pd.next_base {
+                        let hit = pd.guess == run.committed[i];
+                        run.ctrl.observe_guess(hit);
                         if let Some(entry) = self.draft_caches.get_mut(&run.id) {
                             // the catch-up row (input d_γ) is valid
                             entry.1 = entry.1.max(pd.anchor_pos + 1);
                         }
-                        if pd.guess == run.committed[i] && pd.tokens.len() == gamma {
+                        if hit && pd.tokens.len() >= gamma {
                             full_reuse = true;
                         }
                     }
                 }
                 let (d_tokens, d_logits) = if full_reuse {
-                    let pd = pre.expect("checked above");
+                    let mut pd = pre.expect("checked above");
+                    pd.tokens.truncate(gamma);
+                    pd.logits.truncate(gamma * m.vocab);
                     (pd.tokens, pd.logits)
                 } else {
                     let (cache, frontier) = self
@@ -506,7 +567,17 @@ impl RealCluster {
                     let mut d_logits = Vec::new();
                     for pos in *frontier..i {
                         let u = draft_uniform(run.sseed, pos);
-                        self.draft.step(run.committed[pos], cache, pos, cfg.temp, u)?;
+                        let (_, logits, _) =
+                            self.draft.step(run.committed[pos], cache, pos, cfg.temp, u)?;
+                        if pos + 1 == i {
+                            // replaying the pre-frontier position means
+                            // the previous round fully accepted: its
+                            // argmax vs the committed bonus is the same
+                            // guess-hit value the overlap branch reads
+                            // off its classification
+                            let hit = argmax(&logits) as i32 == run.committed[i];
+                            run.ctrl.observe_guess(hit);
+                        }
                     }
                     let mut prev = run.committed[i];
                     for j in 0..gamma {
@@ -539,14 +610,17 @@ impl RealCluster {
                     .map_err(|_| anyhow!("worker chain closed"))?;
 
                 // speculate ahead while this window is on the wire: the
-                // assume-all-accepted catch-up step + bonus guess + γ
-                // window steps, exactly the sim scheduler's pre-draft
+                // assume-all-accepted catch-up step + bonus guess + the
+                // peeked next-round window, exactly the sim scheduler's
+                // pre-draft (see SeqController::peek_full_accept)
+                let g_next = ctrl_cfg.snap_gamma(run.ctrl.peek_full_accept(gamma).gamma.max(1));
                 let len_next = run.committed.len() + gamma + 1;
                 let generated_next = run.committed.len() - run.plen + gamma + 1;
                 if cfg.overlap
+                    && g_next >= 1
                     && generated_next < cfg.max_new_tokens
-                    && len_next + gamma + 1 < m.max_seq
-                    && i + 2 * gamma < m.max_seq
+                    && len_next + g_next + 1 < m.max_seq
+                    && i + gamma + g_next < m.max_seq
                 {
                     let anchor_pos = i + gamma;
                     let next_base = i + gamma + 1;
@@ -558,10 +632,10 @@ impl RealCluster {
                     let (_, head_logits, _) =
                         self.draft.step(d_tokens[gamma - 1], cache, anchor_pos, cfg.temp, u)?;
                     let guess = argmax(&head_logits) as i32;
-                    let mut toks: Vec<i32> = Vec::with_capacity(gamma);
-                    let mut rows: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
+                    let mut toks: Vec<i32> = Vec::with_capacity(g_next);
+                    let mut rows: Vec<f32> = Vec::with_capacity(g_next * m.vocab);
                     let mut prev = guess;
-                    for j in 0..gamma {
+                    for j in 0..g_next {
                         let u = draft_uniform(run.sseed, next_base + j);
                         let (tok, logits, _) =
                             self.draft.step(prev, cache, next_base + j, cfg.temp, u)?;
@@ -578,24 +652,18 @@ impl RealCluster {
                         draft_ns: 0,
                     });
                 }
-                inflight.push_back((ri, d_tokens, d_logits, i));
+                inflight.push_back(Inflight { ri, d_tokens, d_logits, i, gamma, tau });
             }
 
-            let Some((ri, d_tokens, d_logits, i)) = inflight.pop_front() else {
+            let Some(fl) = inflight.pop_front() else {
                 break; // nothing in flight and nothing schedulable -> done
             };
+            let Inflight { ri, d_tokens, d_logits, i, gamma, tau } = fl;
             let t_logits = self.recv_logits(runs[ri].id)?;
             let run = &mut runs[ri];
             let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(run.sseed, i, j)).collect();
             let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(run.sseed, i, j)).collect();
-            let knobs = VerifyKnobs {
-                tau: cfg.tau,
-                lam1: cfg.lam1,
-                lam2: cfg.lam2,
-                lam3: cfg.lam3,
-                temp: cfg.temp,
-                adaptive: matches!(cfg.policy, Policy::Dsd),
-            };
+            let knobs = cfg.knobs_with_tau(tau);
             let (out, _) = self
                 .verify
                 .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
@@ -603,9 +671,11 @@ impl RealCluster {
                 entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
             }
             run.committed.extend_from_slice(&out.tokens);
+            let key_tokens = out.key_flags.iter().filter(|&&k| k).count();
+            run.ctrl.observe(gamma, out.accepted, key_tokens);
             run.rounds += 1;
             if run.committed.len() - run.plen >= cfg.max_new_tokens
-                || run.committed.len() + gamma + 1 >= m.max_seq
+                || run.committed.len() + base_gamma + 1 >= m.max_seq
             {
                 run.done = true;
                 let tokens: Vec<i32> = run.committed[run.plen..]

@@ -12,6 +12,16 @@
 //! computes, then pays the hop latency. That is exactly the queueing
 //! structure of pipeline-parallel inference, and it lets multiple
 //! in-flight sequences interleave across stages the way microbatches do.
+//!
+//! **Links are channels, not free propagation**: a message occupies its
+//! hop for the full `t1 + bytes/bandwidth` (the LogP-style per-message
+//! channel time the paper's t1 stands for — serialization, framing, and
+//! the synchronization handshake, not just speed-of-light). Concurrent
+//! solo verify windows therefore queue on the hops under multi-sequence
+//! load, which is exactly the contention fused group rounds
+//! ([`PipelineSim::group_pass`]) remove: one message per hop per round
+//! carries every member's segment, so the per-sequence share of the
+//! cross-node sync cost is divided by the group width.
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::topology::Topology;
@@ -26,6 +36,11 @@ pub struct SimStats {
     pub compute_ns: Nanos,
     pub queue_ns: Nanos,
     pub sync_rounds: u64,
+    /// Fused group passes dispatched (each is ONE sync round serving
+    /// many sequences).
+    pub group_passes: u64,
+    /// Total member segments carried by fused group passes.
+    pub fused_segments: u64,
 }
 
 /// Timing of one pipeline pass.
@@ -52,6 +67,10 @@ pub struct PipelineSim {
     pub topo: Topology,
     /// Per-node time until which the node is busy.
     busy_until: Vec<Nanos>,
+    /// Per-link time until which the channel is occupied (indexed like
+    /// `Topology::links`; a message holds its hop for the full transfer
+    /// time — see the module docs).
+    link_busy_until: Vec<Nanos>,
     /// Per-node compute-time multiplier (1.0 = homogeneous; >1 models a
     /// straggler / weaker accelerator).
     compute_scale: Vec<f64>,
@@ -62,9 +81,11 @@ pub struct PipelineSim {
 impl PipelineSim {
     pub fn new(topo: Topology, seed: u64) -> PipelineSim {
         let n = topo.n_nodes;
+        let n_links = topo.links.len();
         PipelineSim {
             topo,
             busy_until: vec![0; n],
+            link_busy_until: vec![0; n_links],
             compute_scale: vec![1.0; n],
             rng: Rng::new(seed),
             stats: SimStats::default(),
@@ -130,8 +151,12 @@ impl PipelineSim {
             }
             if i + 1 < n {
                 let hop = self.topo.hop(i).transfer_time(msg_bytes, Some(&mut self.rng));
+                let li = i % self.link_busy_until.len();
+                let begin = t.max(self.link_busy_until[li]);
+                queue += begin - t;
+                t = begin + hop;
+                self.link_busy_until[li] = t;
                 comm += hop;
-                t += hop;
                 self.stats.messages += 1;
                 self.stats.bytes += msg_bytes as u64;
             }
@@ -141,8 +166,12 @@ impl PipelineSim {
                 .topo
                 .hop(n - 1)
                 .transfer_time(return_bytes, Some(&mut self.rng));
+            let li = (n - 1) % self.link_busy_until.len();
+            let begin = t.max(self.link_busy_until[li]);
+            queue += begin - t;
+            t = begin + hop;
+            self.link_busy_until[li] = t;
             comm += hop;
-            t += hop;
             self.stats.messages += 1;
             self.stats.bytes += return_bytes as u64;
         }
@@ -185,9 +214,31 @@ impl PipelineSim {
         )
     }
 
+    /// One **fused group pass**: the verify windows of several sequences
+    /// (segment widths in `widths`) ride ONE pipeline traversal — summed
+    /// compute and bytes, but a single message per hop and a single sync
+    /// round for the whole group. This is the accounting for fused
+    /// multi-sequence rounds: B solo windows would occupy every hop B
+    /// times ((B−1) extra `t1`s of channel time per hop); the group pays
+    /// the cross-node sync once per batch.
+    pub fn group_pass(
+        &mut self,
+        start: Nanos,
+        widths: &[usize],
+        per_token_stage: &[Nanos],
+        fwd_bytes_per_token: usize,
+        ret_bytes_per_token: usize,
+    ) -> PassTiming {
+        let width: usize = widths.iter().sum();
+        self.stats.group_passes += 1;
+        self.stats.fused_segments += widths.len() as u64;
+        self.window_pass(start, width, per_token_stage, fwd_bytes_per_token, ret_bytes_per_token)
+    }
+
     /// Reset busy times and stats (new experiment, same topology).
     pub fn reset(&mut self) {
         self.busy_until.iter_mut().for_each(|b| *b = 0);
+        self.link_busy_until.iter_mut().for_each(|b| *b = 0);
         self.stats = SimStats::default();
     }
 }
@@ -308,5 +359,51 @@ mod tests {
         assert_eq!(s.stats.messages, 0);
         let t = s.pipeline_pass(0, &[1, 1], 0, 0, false);
         assert_eq!(t.queue_ns, 0);
+    }
+
+    #[test]
+    fn concurrent_passes_queue_on_link_channels() {
+        // Two solo passes dispatched back to back on a 15ms chain: the
+        // second's forward hop waits for the channel, so its finish
+        // trails the first by a full link time — the per-sequence sync
+        // cost fused rounds amortize.
+        let mut s = sim(2, 15.0);
+        let a = s.pipeline_pass(0, &[1_000, 1_000], 0, 0, false);
+        let b = s.pipeline_pass(0, &[1_000, 1_000], 0, 0, false);
+        assert_eq!(a.finish, 1_000 + 15_000_000 + 1_000);
+        assert!(b.queue_ns >= 15_000_000 - 2_000, "queue {}", b.queue_ns);
+        assert!(b.finish >= a.finish + 15_000_000 - 2_000, "{} vs {}", b.finish, a.finish);
+        // sequential use never queues: a fresh pass after the wire drains
+        let c = s.pipeline_pass(b.finish + 40_000_000, &[1_000, 1_000], 0, 0, false);
+        assert_eq!(c.queue_ns, 0);
+    }
+
+    #[test]
+    fn group_pass_pays_one_sync_for_many_segments() {
+        // Four 5-wide solo windows vs one fused [5,5,5,5] group on 15ms
+        // links: same compute and bytes, one latency per hop instead of
+        // four, one sync round instead of four.
+        let mut solo = sim(4, 15.0);
+        let mut last = 0;
+        for _ in 0..4 {
+            last = solo.window_pass(0, 5, &[100_000; 4], 256, 2048).finish;
+        }
+        let mut fused = sim(4, 15.0);
+        let t = fused.group_pass(0, &[5, 5, 5, 5], &[100_000; 4], 256, 2048);
+        assert_eq!(fused.stats.sync_rounds, 1);
+        assert_eq!(fused.stats.group_passes, 1);
+        assert_eq!(fused.stats.fused_segments, 4);
+        assert_eq!(solo.stats.sync_rounds, 4);
+        assert_eq!(fused.stats.bytes, solo.stats.bytes, "fused ships the same payload");
+        assert_eq!(
+            fused.stats.compute_ns, solo.stats.compute_ns,
+            "fused pays the same compute"
+        );
+        assert!(
+            t.finish + 30_000_000 < last,
+            "fused group {} must finish well before the queued solo passes {}",
+            t.finish,
+            last
+        );
     }
 }

@@ -35,6 +35,19 @@ pub struct DeployConfig {
     pub decode: DecodeConfig,
     /// Max concurrent sequences (KV slot pool size).
     pub max_batch: usize,
+    /// Fused group rounds: pack concurrent sequences' verify windows
+    /// into one pipeline pass (one cross-node sync per group). `off`
+    /// runs the legacy per-sequence rounds. At a fixed config, token
+    /// streams are byte-identical across realized group compositions;
+    /// toggling `fuse` itself also changes nothing for the static
+    /// controller (the default), but is a pricing input for
+    /// `cost-optimal` (like `link_ms`), which may then pick different γ.
+    pub fuse: bool,
+    /// Max sequences per fused group round (>= 1; 1 ≡ fuse off).
+    pub max_fuse: usize,
+    /// Token budget of one fused group pass: summed member window
+    /// widths must fit (must cover the widest single window).
+    pub fuse_tokens: usize,
     /// Workload dataset name.
     pub dataset: String,
     /// Number of requests.
@@ -54,6 +67,9 @@ impl Default for DeployConfig {
             draft_variant: String::new(),
             decode: DecodeConfig::default(),
             max_batch: 8,
+            fuse: true,
+            max_fuse: 4,
+            fuse_tokens: 64,
             dataset: "humaneval".to_string(),
             requests: 8,
             seed: 20250710,
@@ -76,6 +92,24 @@ impl DeployConfig {
         }
         if !self.jitter.is_finite() || self.jitter < 0.0 {
             bail!("jitter must be a non-negative fraction, got {}", self.jitter);
+        }
+        if self.max_fuse == 0 {
+            bail!("max_fuse must be >= 1 (1 disables fusion; use fuse = off instead)");
+        }
+        // The budget bound applies where fusion can actually engage:
+        // speculative chain decoding (AR and tree rounds run solo).
+        if self.fuse
+            && self.max_fuse > 1
+            && self.decode.policy.is_speculative()
+            && self.decode.shape.is_chain()
+            && self.fuse_tokens < self.decode.max_window()
+        {
+            bail!(
+                "fuse_tokens ({}) must be >= the widest verify window ({} = gamma + 1); \
+                 raise fuse_tokens or lower gamma, or disable fusion with fuse = off",
+                self.fuse_tokens,
+                self.decode.max_window()
+            );
         }
         self.decode.validate()
     }
@@ -138,6 +172,12 @@ impl DeployConfig {
             "jitter" => self.jitter = value.parse()?,
             "draft_variant" | "draft" => self.draft_variant = value.to_string(),
             "max_batch" => self.max_batch = value.parse()?,
+            "fuse" => {
+                self.fuse = parse_on_off(value)
+                    .map_err(|_| anyhow::anyhow!("fuse expects on|off, got '{value}'"))?
+            }
+            "max_fuse" => self.max_fuse = value.parse()?,
+            "fuse_tokens" => self.fuse_tokens = value.parse()?,
             "dataset" => self.dataset = value.to_string(),
             "requests" => self.requests = value.parse()?,
             "seed" => self.seed = value.parse()?,
@@ -184,6 +224,9 @@ impl DeployConfig {
              jitter = {}\n\
              draft_variant = \"{}\"\n\
              max_batch = {}\n\
+             fuse = \"{}\"\n\
+             max_fuse = {}\n\
+             fuse_tokens = {}\n\
              dataset = \"{}\"\n\
              requests = {}\n\
              seed = {}\n\n\
@@ -206,6 +249,9 @@ impl DeployConfig {
             self.jitter,
             self.draft_variant,
             self.max_batch,
+            if self.fuse { "on" } else { "off" },
+            self.max_fuse,
+            self.fuse_tokens,
             self.dataset,
             self.requests,
             self.seed,
@@ -275,6 +321,9 @@ mod tests {
         cfg.set("draft_shape", "tree:4x3").unwrap();
         cfg.set("overlap", "off").unwrap();
         cfg.set("controller", "cost-optimal").unwrap();
+        cfg.set("fuse", "off").unwrap();
+        cfg.set("max_fuse", "6").unwrap();
+        cfg.set("fuse_tokens", "96").unwrap();
         let text = cfg.to_toml();
         let mut cfg2 = DeployConfig::default();
         let kv = parse_toml_lite(&text).unwrap();
@@ -287,6 +336,45 @@ mod tests {
         assert_eq!(cfg2.decode.shape, cfg.decode.shape);
         assert!(!cfg2.decode.overlap);
         assert_eq!(cfg2.decode.controller, ControllerKind::CostOptimal);
+        assert!(!cfg2.fuse);
+        assert_eq!(cfg2.max_fuse, 6);
+        assert_eq!(cfg2.fuse_tokens, 96);
+    }
+
+    #[test]
+    fn fuse_knobs_defaults_and_validation() {
+        let cfg = DeployConfig::default();
+        assert!(cfg.fuse, "fusion defaults on");
+        assert_eq!(cfg.max_fuse, 4);
+        assert!(cfg.fuse_tokens >= cfg.decode.max_window());
+        assert!(cfg.validate().is_ok());
+
+        // max_fuse = 0 is nonsense even with fuse off
+        let mut cfg = DeployConfig::default();
+        cfg.set("max_fuse", "0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_fuse"));
+
+        // the token budget must cover the widest single chain window
+        let mut cfg = DeployConfig::default();
+        cfg.set("fuse_tokens", "4").unwrap(); // gamma 8 -> window 9 > 4
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("fuse_tokens"), "{err}");
+        // ... unless fusion is off (legacy path never packs)
+        cfg.set("fuse", "off").unwrap();
+        assert!(cfg.validate().is_ok());
+        // ... and tree deployments run solo rounds, so no budget bound
+        cfg.set("fuse", "on").unwrap();
+        cfg.set("draft_shape", "tree:4x3").unwrap();
+        assert!(cfg.validate().is_ok());
+
+        // max_batch = 0 stays a config-time error, not a downstream panic
+        let mut cfg = DeployConfig::default();
+        cfg.set("max_batch", "0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("max_batch"));
+
+        // bad switch values surface
+        let mut cfg = DeployConfig::default();
+        assert!(cfg.set("fuse", "maybe").is_err());
     }
 
     #[test]

@@ -113,6 +113,23 @@ impl CostModel {
     /// draft nodes (+ the root slot), leader-local verification. Matches
     /// a fresh `PipelineSim` charging the same round exactly.
     pub fn round_time_ns(&self, window_nodes: usize, draft_steps: usize) -> Nanos {
+        self.round_time_fused_ns(window_nodes, draft_steps, 1)
+    }
+
+    /// [`Self::round_time_ns`] under fused group rounds of width `fuse`:
+    /// the cross-node sync is paid **once per group**, so this
+    /// sequence's share of the comm term — the channel time the hops
+    /// actually occupy, which is what multi-user traffic contends on —
+    /// is `comm / fuse` (Eq. 5's amortization taken one level further:
+    /// `(N−1)·t1` over `k` tokens *and* over `B` fused sequences).
+    /// Compute, drafting, and verification stay per-sequence. `fuse = 1`
+    /// reproduces the solo round exactly.
+    pub fn round_time_fused_ns(
+        &self,
+        window_nodes: usize,
+        draft_steps: usize,
+        fuse: usize,
+    ) -> Nanos {
         let width = window_nodes + 1;
         let per_stage = self.per_token_pass_ns / self.nodes as Nanos;
         let compute = per_stage * width as Nanos * self.nodes as Nanos;
@@ -123,7 +140,7 @@ impl CostModel {
         }
         let draft = draft_steps as Nanos * self.draft_step_ns;
         let verify = self.verify_base_ns + window_nodes as Nanos * self.verify_per_node_ns;
-        draft + compute + comm + verify
+        draft + compute + comm / fuse.max(1) as Nanos + verify
     }
 
     /// The in-flight gap after stage 0 releases the window — what the
@@ -206,16 +223,33 @@ impl CostModel {
 
     /// Expected round time at per-token acceptance `alpha`, including
     /// the speculate-ahead recovery term (modeled as always on — see the
-    /// module docs for why the runtime flag must not leak in here).
+    /// module docs for why the runtime flag must not leak in here), at
+    /// the fixed-prior guess-hit rate and solo (unfused) rounds.
     pub fn expected_round_ns(&self, shape: DraftShape, gamma: usize, alpha: f64) -> f64 {
+        self.expected_round_ns_at(shape, gamma, alpha, GUESS_HIT_PRIOR, 1)
+    }
+
+    /// [`Self::expected_round_ns`] parameterized by the measured
+    /// bonus-guess hit probability `p_guess` (the reuse-recovery term's
+    /// `p_reuse = α^γ · p_guess`; the estimator supplies the live value,
+    /// [`GUESS_HIT_PRIOR`] reproduces the fixed prior) and the fused
+    /// group width `fuse` the deployment runs rounds at.
+    pub fn expected_round_ns_at(
+        &self,
+        shape: DraftShape,
+        gamma: usize,
+        alpha: f64,
+        p_guess: f64,
+        fuse: usize,
+    ) -> f64 {
         let window_nodes = shape.max_nodes_or(gamma);
         let draft_steps = Self::draft_steps(shape, gamma);
-        let base = self.round_time_ns(window_nodes, draft_steps) as f64;
+        let base = self.round_time_fused_ns(window_nodes, draft_steps, fuse) as f64;
         match shape {
             DraftShape::Chain => {
                 let draft_cost = draft_steps as f64 * self.draft_step_ns as f64;
                 let hidden = draft_cost.min(self.inflight_gap_ns(window_nodes) as f64);
-                let p_reuse = alpha.clamp(0.0, 1.0).powi(gamma as i32) * GUESS_HIT_PRIOR;
+                let p_reuse = alpha.clamp(0.0, 1.0).powi(gamma as i32) * p_guess.clamp(0.0, 1.0);
                 base - p_reuse * hidden
             }
             // Tree rounds run the sequential schedule (no pre-draft path
@@ -236,6 +270,20 @@ impl CostModel {
     /// The controllers' objective: expected ns per committed token.
     pub fn expected_ns_per_token(&self, shape: DraftShape, gamma: usize, alpha: f64) -> f64 {
         self.expected_round_ns(shape, gamma, alpha) / Self::expected_committed(shape, gamma, alpha)
+    }
+
+    /// [`Self::expected_ns_per_token`] at a measured guess-hit rate and
+    /// fused group width — what the controllers actually minimize.
+    pub fn expected_ns_per_token_at(
+        &self,
+        shape: DraftShape,
+        gamma: usize,
+        alpha: f64,
+        p_guess: f64,
+        fuse: usize,
+    ) -> f64 {
+        self.expected_round_ns_at(shape, gamma, alpha, p_guess, fuse)
+            / Self::expected_committed(shape, gamma, alpha)
     }
 }
 
@@ -340,6 +388,39 @@ mod tests {
         assert!(with < base, "recovery term must discount the round: {with} vs {base}");
         // gap clamp: recovery never exceeds the draft cost itself
         assert!(base - with <= 5.0 * 600_000.0 + 1e-6);
+    }
+
+    #[test]
+    fn fused_rounds_amortize_only_the_comm_term() {
+        let m = model(15.0);
+        let solo = m.round_time_ns(4, 5);
+        let fused4 = m.round_time_fused_ns(4, 5, 4);
+        // comm = 4 hops at 15ms = 60ms; fused width 4 charges 15ms
+        assert_eq!(solo - fused4, 3 * 15_000_000);
+        assert_eq!(m.round_time_fused_ns(4, 5, 1), solo, "fuse=1 is the solo round");
+        // single node: nothing to amortize
+        let m1 = CostModel { nodes: 1, ..m };
+        assert_eq!(m1.round_time_fused_ns(4, 5, 8), m1.round_time_ns(4, 5));
+        // the per-token objective prefers longer γ less aggressively
+        // once fusion already pays the sync once per group
+        let solo_obj = m.expected_ns_per_token_at(DraftShape::Chain, 8, 0.85, 0.5, 1);
+        let fused_obj = m.expected_ns_per_token_at(DraftShape::Chain, 8, 0.85, 0.5, 8);
+        assert!(fused_obj < solo_obj);
+    }
+
+    #[test]
+    fn guess_rate_parameter_scales_recovery() {
+        let m = model(15.0);
+        let never = m.expected_round_ns_at(DraftShape::Chain, 4, 0.9, 0.0, 1);
+        let always = m.expected_round_ns_at(DraftShape::Chain, 4, 0.9, 1.0, 1);
+        let prior = m.expected_round_ns_at(DraftShape::Chain, 4, 0.9, GUESS_HIT_PRIOR, 1);
+        assert!(always < prior && prior < never);
+        assert_eq!(never, m.round_time_ns(4, 5) as f64, "p_guess=0 disables recovery");
+        assert_eq!(
+            prior,
+            m.expected_round_ns(DraftShape::Chain, 4, 0.9),
+            "the fixed-prior wrapper must match the parameterized form"
+        );
     }
 
     #[test]

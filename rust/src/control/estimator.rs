@@ -8,6 +8,17 @@
 //! fields, which differ between the overlap and sequential schedulers;
 //! this is what keeps controller decisions identical across scheduler
 //! modes and across sim/real deployments.
+//!
+//! The same contract governs the **guess-hit rate** feeding the cost
+//! model's reuse-recovery term: a "guess hit" is defined as *the draft
+//! head's argmax at the bonus position matching the committed bonus
+//! token after a fully accepted round* — a pure function of the
+//! committed stream and the draft model, observable in BOTH schedulers
+//! (the overlap path reads it off the pre-draft classification, the
+//! sequential path off the catch-up step's logits at the same position),
+//! so feeding it keeps decisions overlap-invariant.
+
+use crate::control::cost::GUESS_HIT_PRIOR;
 
 /// Discounted Beta posterior over per-token acceptance.
 ///
@@ -26,6 +37,10 @@ pub struct AcceptanceEstimator {
     key: f64,
     /// Discounted offered-token count (key-rate denominator).
     offered: f64,
+    /// Discounted bonus-guess hits (draft argmax == committed bonus).
+    guess_hits: f64,
+    /// Discounted bonus-guess observations.
+    guess_obs: f64,
     /// Per-round discount on old evidence.
     decay: f64,
     last_gamma: usize,
@@ -54,6 +69,8 @@ impl AcceptanceEstimator {
             rej: PRIOR_REJ,
             key: 0.0,
             offered: 0.0,
+            guess_hits: 0.0,
+            guess_obs: 0.0,
             decay: DEFAULT_DECAY,
             last_gamma: 0,
             last_accepted: 0,
@@ -80,6 +97,23 @@ impl AcceptanceEstimator {
     /// finite.
     pub fn rate(&self) -> f64 {
         (self.acc / (self.acc + self.rej)).clamp(0.01, 0.995)
+    }
+
+    /// Record one bonus-guess observation: after a fully accepted round,
+    /// did the draft head's argmax at the bonus position match the token
+    /// actually committed there? Both schedulers observe this at the
+    /// same point in the round stream (see the module docs), so it is
+    /// safe input for the cost model's reuse-recovery term.
+    pub fn observe_guess(&mut self, hit: bool) {
+        self.guess_hits = self.decay * self.guess_hits + if hit { 1.0 } else { 0.0 };
+        self.guess_obs = self.decay * self.guess_obs + 1.0;
+    }
+
+    /// Posterior mean of the bonus-guess hit probability, under a weak
+    /// prior at [`GUESS_HIT_PRIOR`] (~one observation's worth) so cold
+    /// sequences reproduce the old fixed-prior behavior.
+    pub fn guess_rate(&self) -> f64 {
+        ((self.guess_hits + GUESS_HIT_PRIOR) / (self.guess_obs + 1.0)).clamp(0.0, 1.0)
     }
 
     /// Fraction of drafted tokens flagged as key (Eq. 7 selectivity) —
@@ -171,6 +205,22 @@ mod tests {
         assert!(p8 < p1 && p8 > 0.0);
         assert_eq!(e.last_gamma(), 4);
         assert_eq!(e.last_accepted(), 4);
+    }
+
+    #[test]
+    fn guess_rate_starts_at_prior_and_tracks_observations() {
+        let mut e = AcceptanceEstimator::new();
+        assert!((e.guess_rate() - GUESS_HIT_PRIOR).abs() < 1e-9, "{}", e.guess_rate());
+        for _ in 0..100 {
+            e.observe_guess(true);
+        }
+        assert!(e.guess_rate() > 0.95, "{}", e.guess_rate());
+        for _ in 0..100 {
+            e.observe_guess(false);
+        }
+        assert!(e.guess_rate() < 0.1, "{}", e.guess_rate());
+        // guess observations never touch the acceptance posterior
+        assert!((e.rate() - 0.75).abs() < 1e-9);
     }
 
     #[test]

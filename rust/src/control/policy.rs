@@ -90,6 +90,13 @@ pub struct ControlConfig {
     /// accuracy budget; the controller may spend less, never more.
     pub taus: Vec<f32>,
     pub cost: CostModel,
+    /// Fused group width the deployment runs verify rounds at (the
+    /// `max_fuse` knob; 1 = solo rounds). A **config-time** constant —
+    /// never the realized per-round group size, which depends on
+    /// scheduling and would break the B-invariance of token streams —
+    /// that lets `cost-optimal` trade γ against the batch-amortized
+    /// sync cost (comm / fuse in the round-time model).
+    pub fuse: usize,
 }
 
 /// Relative tolerance for the argmin tie-break: among decisions within
@@ -132,7 +139,15 @@ impl ControlConfig {
             shapes: vec![base_shape],
             taus,
             cost,
+            fuse: 1,
         }
+    }
+
+    /// Set the fused group width the cost model amortizes the sync cost
+    /// over (the deployment's `max_fuse`; clamped to >= 1).
+    pub fn with_fuse(mut self, fuse: usize) -> ControlConfig {
+        self.fuse = fuse.max(1);
+        self
     }
 
     /// Widen the candidate shape grid (benches / sim-only deployments).
@@ -249,6 +264,20 @@ impl SeqController {
         self.cur = decide(&self.cfg, &self.est, &self.cur);
     }
 
+    /// Feed one bonus-guess observation (see
+    /// [`AcceptanceEstimator::observe_guess`]). Deliberately does NOT
+    /// recompute the decision — the next [`Self::observe`] folds it in,
+    /// keeping decision points identical across schedulers (both emit
+    /// the observation during the following round's draft phase).
+    pub fn observe_guess(&mut self, hit: bool) {
+        self.est.observe_guess(hit);
+    }
+
+    /// The controller specification this sequence runs under.
+    pub fn config(&self) -> &ControlConfig {
+        &self.cfg
+    }
+
     /// The decision this controller will make *if* the in-flight round
     /// accepts all `offered` drafts — what the speculate-ahead scheduler
     /// pre-drafts with. The hypothetical record assumes zero key tokens
@@ -302,7 +331,8 @@ fn with_regret(
     best_per_tok: f64,
 ) -> Decision {
     let alpha = alpha_at_tau(est.rate(), tau_measured, d.tau, est.key_rate());
-    let mine = cfg.cost.expected_ns_per_token(d.shape, d.gamma, alpha);
+    let p_guess = est.guess_rate();
+    let mine = cfg.cost.expected_ns_per_token_at(d.shape, d.gamma, alpha, p_guess, cfg.fuse);
     d.regret_ns = (mine - best_per_tok).max(0.0) as u64;
     d
 }
@@ -312,6 +342,7 @@ fn with_regret(
 fn grid_argmin(cfg: &ControlConfig, est: &AcceptanceEstimator, tau_measured: f32) -> (f64, Decision) {
     let alpha0 = est.rate();
     let key_rate = est.key_rate();
+    let p_guess = est.guess_rate();
     let mut candidates: Vec<(f64, usize, Decision)> = Vec::new();
     for &shape in &cfg.shapes {
         let gammas: Vec<usize> = match shape {
@@ -322,7 +353,7 @@ fn grid_argmin(cfg: &ControlConfig, est: &AcceptanceEstimator, tau_measured: f32
         for gamma in gammas {
             for &tau in &cfg.taus {
                 let alpha = alpha_at_tau(alpha0, tau_measured, tau, key_rate);
-                let t = cfg.cost.expected_ns_per_token(shape, gamma, alpha);
+                let t = cfg.cost.expected_ns_per_token_at(shape, gamma, alpha, p_guess, cfg.fuse);
                 let nodes = shape.max_nodes_or(gamma);
                 candidates
                     .push((t, nodes, Decision { gamma, shape, tau, regret_ns: 0 }));
@@ -510,6 +541,46 @@ mod tests {
             c.observe(g.max(2), if i % 2 == 0 { 1 } else { 0 }, 0);
         }
         assert_eq!(c.decision().shape, tree, "got {:?}", c.decision());
+    }
+
+    #[test]
+    fn fuse_width_shifts_cost_optimal_gamma() {
+        // With the sync cost amortized over a fused group, long windows
+        // buy less: at the same acceptance evidence the fused controller
+        // must never ask for a WIDER window than the solo one.
+        let mk = |fuse: usize| {
+            SeqController::new(config(ControllerKind::CostOptimal, 15.0).with_fuse(fuse))
+        };
+        let mut solo = mk(1);
+        let mut fused = mk(8);
+        for _ in 0..40 {
+            solo.observe(4, 3, 0);
+            fused.observe(4, 3, 0);
+        }
+        assert!(
+            fused.decision().gamma <= solo.decision().gamma,
+            "fused γ {} vs solo γ {}",
+            fused.decision().gamma,
+            solo.decision().gamma
+        );
+    }
+
+    #[test]
+    fn guess_observations_do_not_move_knobs_outside_decisions() {
+        // observe_guess updates the estimator only; the decision changes
+        // at the next observe() — identically for repeat streams.
+        let mut a = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        let mut b = SeqController::new(config(ControllerKind::CostOptimal, 15.0));
+        a.observe(4, 4, 0);
+        b.observe(4, 4, 0);
+        let before = a.decision();
+        a.observe_guess(true);
+        assert_eq!(a.decision(), before, "observe_guess must not recompute in place");
+        b.observe_guess(true);
+        a.observe(4, 4, 0);
+        b.observe(4, 4, 0);
+        assert_eq!(a.decision(), b.decision(), "same streams, same decisions");
+        assert!(a.estimator().guess_rate() > 0.5);
     }
 
     #[test]

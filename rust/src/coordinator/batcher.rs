@@ -8,6 +8,39 @@
 //! (earliest-ready-first keeps the pipeline maximally overlapped —
 //! microbatch interleaving falls out of the per-node busy times in the
 //! simulator).
+//!
+//! # Fused group selection ([`next_action_fused`])
+//!
+//! The paper's Eq. 5 amortizes one cross-node sync round, `(N−1)·t1`, over
+//! the `k` tokens a speculative round commits: the saving per token is
+//! `(N−1)·t1·(k−1)/k`. But a round loop that dispatches one verify window
+//! **per sequence** still pays that sync once per sequence per round —
+//! under B concurrent sequences, every link carries B messages per round
+//! wave and the per-sequence channel cost stays `(N−1)·t1`. Fusing the B
+//! windows into ONE ragged pipeline pass divides it again:
+//!
+//! ```text
+//! sync cost / (sequence · token)  =  (N−1)·t1 / (B · k)        (fused)
+//!                                 vs (N−1)·t1 / k              (solo)
+//! ```
+//!
+//! i.e. Eq. 5's saving becomes `(N−1)·t1·(1 − 1/(B·k))` of the
+//! autoregressive baseline's per-token sync cost — the batch dimension
+//! multiplies the speculation dimension instead of competing with it.
+//!
+//! Group selection policy: admission first (fill the batch), then
+//! prefill-priority (time-to-first-token under load), then pack
+//! decode-ready members **earliest-ready-first** — the order that leaves
+//! no member waiting long for the group to form — while the member count
+//! stays within `max_fuse` and the summed window widths fit the token
+//! budget (`fuse_tokens`; wider members are skipped, never split). The
+//! first member always packs regardless of budget so an over-wide window
+//! cannot starve. A group of one degrades to [`Action::Run`], which is
+//! the byte-identical legacy path (`--fuse off` ⇔ `max_fuse = 1`).
+//! Grouping changes only *when* work happens, never *what* is committed:
+//! every stochastic draw is position-keyed, so committed streams are
+//! byte-identical across group compositions (pinned by
+//! `tests/fused_differential.rs`).
 
 use crate::cluster::clock::Nanos;
 
@@ -17,15 +50,22 @@ pub struct SeqView {
     pub idx: usize,
     pub ready_at: Nanos,
     pub prefilled: bool,
+    /// Width of the verify window the next decode round ships (root slot
+    /// + drafted nodes) — what fused group packing budgets against.
+    pub window: usize,
 }
 
 /// What the coordinator should do next.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Action {
     /// Admit the next queued request (a slot is free and it has arrived).
     Admit,
     /// Run a prefill or decode round for active sequence `idx`.
     Run { idx: usize },
+    /// Run one fused group round for the listed sequences (ordered
+    /// earliest-ready-first): their verify windows ride ONE pipeline
+    /// pass and pay the cross-node sync once for the whole group.
+    RunGroup { idxs: Vec<usize> },
     /// Nothing runnable until `at` (advance the clock to the next arrival).
     WaitUntil { at: Nanos },
     /// Everything drained.
@@ -94,12 +134,75 @@ pub fn next_action_prefill_first(
     }
 }
 
+/// Fused group selection (see the module docs for policy + derivation):
+/// admission first, then prefill priority, then pack decode-ready
+/// members earliest-ready-first into one group round bounded by
+/// `max_fuse` members and `token_budget` summed window tokens. With
+/// `max_fuse <= 1` this IS [`next_action_prefill_first`] — the legacy
+/// per-sequence path.
+pub fn next_action_fused(
+    now: Nanos,
+    next_arrival: Option<Nanos>,
+    slots_free: bool,
+    active: &[SeqView],
+    max_fuse: usize,
+    token_budget: usize,
+) -> Action {
+    if max_fuse <= 1 {
+        return next_action_prefill_first(now, next_arrival, slots_free, active);
+    }
+    if slots_free {
+        if let Some(arr) = next_arrival {
+            if arr <= now || active.is_empty() {
+                return Action::Admit;
+            }
+        }
+    }
+    // Prefill rounds run solo (a prefill occupies the full prefill
+    // window; fusing it with decode windows buys nothing and would
+    // delay time-to-first-token behind the whole group).
+    if let Some(best) = active
+        .iter()
+        .filter(|s| !s.prefilled)
+        .min_by_key(|s| (s.ready_at, s.idx))
+    {
+        return Action::Run { idx: best.idx };
+    }
+    let mut order: Vec<&SeqView> = active.iter().collect();
+    order.sort_by_key(|s| (s.ready_at, s.idx));
+    let mut idxs: Vec<usize> = Vec::new();
+    let mut used = 0usize;
+    for s in order {
+        if idxs.len() >= max_fuse {
+            break;
+        }
+        // The head member always packs (an over-budget window must still
+        // run — solo); later members must fit the remaining budget.
+        if idxs.is_empty() || used + s.window <= token_budget {
+            idxs.push(s.idx);
+            used += s.window;
+        }
+    }
+    match idxs.len() {
+        0 => match next_arrival {
+            Some(arr) => Action::WaitUntil { at: arr.max(now) },
+            None => Action::Done,
+        },
+        1 => Action::Run { idx: idxs[0] },
+        _ => Action::RunGroup { idxs },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn v(idx: usize, ready_at: Nanos, prefilled: bool) -> SeqView {
-        SeqView { idx, ready_at, prefilled }
+        SeqView { idx, ready_at, prefilled, window: 5 }
+    }
+
+    fn vw(idx: usize, ready_at: Nanos, window: usize) -> SeqView {
+        SeqView { idx, ready_at, prefilled: true, window }
     }
 
     #[test]
@@ -153,6 +256,47 @@ mod tests {
     fn ties_break_by_index_for_determinism() {
         let a = next_action(0, None, false, &[v(2, 40, true), v(1, 40, true)]);
         assert_eq!(a, Action::Run { idx: 1 });
+    }
+
+    #[test]
+    fn fused_packs_earliest_ready_within_budget() {
+        // Four decode-ready sequences, budget 12, max_fuse 3: packing
+        // order is (ready_at, idx); member 3 (width 6) would blow the
+        // budget after [5, 5] and is skipped, member 0 (width 2) fits.
+        let active = [vw(0, 40, 2), vw(1, 10, 5), vw(2, 20, 5), vw(3, 30, 6)];
+        let a = next_action_fused(100, None, false, &active, 3, 12);
+        assert_eq!(a, Action::RunGroup { idxs: vec![1, 2, 0] });
+        // member cap binds before the budget does
+        let a = next_action_fused(100, None, false, &active, 2, 100);
+        assert_eq!(a, Action::RunGroup { idxs: vec![1, 2] });
+        // a group of one degrades to the legacy Run action
+        let a = next_action_fused(100, None, false, &active[..1], 4, 100);
+        assert_eq!(a, Action::Run { idx: 0 });
+        // an over-budget head still runs (solo), never starves
+        let wide = [vw(0, 0, 50), vw(1, 5, 50)];
+        let a = next_action_fused(100, None, false, &wide, 4, 12);
+        assert_eq!(a, Action::Run { idx: 0 });
+    }
+
+    #[test]
+    fn fused_keeps_admission_and_prefill_priority() {
+        // admission beats grouping
+        let active = [vw(0, 10, 5), vw(1, 20, 5)];
+        assert_eq!(next_action_fused(100, Some(50), true, &active, 4, 64), Action::Admit);
+        // an unprefilled sequence runs solo before any group forms
+        let mixed = [vw(0, 10, 5), v(1, 90, false), vw(2, 20, 5)];
+        assert_eq!(next_action_fused(0, None, false, &mixed, 4, 64), Action::Run { idx: 1 });
+        // max_fuse 1 is exactly the legacy scheduler
+        assert_eq!(
+            next_action_fused(0, None, false, &active, 1, 64),
+            next_action_prefill_first(0, None, false, &active)
+        );
+        // drained / waiting fall through unchanged
+        assert_eq!(next_action_fused(0, None, true, &[], 4, 64), Action::Done);
+        assert_eq!(
+            next_action_fused(100, Some(500), false, &[], 4, 64),
+            Action::WaitUntil { at: 500 }
+        );
     }
 
     #[test]

@@ -48,20 +48,37 @@
 //! outcome* (`peek_full_accept`) so reused windows always match the next
 //! round's request. The default `static` controller pins this config's
 //! values and reproduces the pre-controller scheduler byte for byte.
+//!
+//! **Fused group rounds** ([`DecodeEngine::round_group`]): the chain
+//! rounds of several sequences share ONE pipeline pass — each member
+//! runs its own draft phase (leader-local, per-sequence state only),
+//! the ragged group window ships through every stage as a single
+//! message per hop ([`StageInput::Group`]; KV rows scatter into each
+//! member's own pool slot), and each member verifies/commits off its
+//! logits segment. The cross-node sync is paid once per **group**
+//! instead of once per sequence — see `batcher` for the Eq. 5 batch
+//! amortization. Because every stochastic draw is position-keyed and
+//! controller decisions are pure functions of per-sequence committed
+//! outcomes, committed streams are **byte-identical across group
+//! compositions** (B=1 ≡ B=8 ≡ any partition); grouping moves only
+//! simulated time. AR rounds and tree-shaped decisions fall back to
+//! solo rounds inside a group.
 
 use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::clock::Nanos;
-use crate::cluster::sim::PipelineSim;
+use crate::cluster::sim::{PassTiming, PipelineSim};
 use crate::control::{clamp_gamma, ControlConfig, CostModel, Decision, SeqController};
 use crate::coordinator::overlap::{
     accept_uniform, draft_uniform, host_verify_cost, sample_uniform, stream_seed, PreDraft,
     HOST_VERIFY_BASE_NS, HOST_VERIFY_PER_NODE_NS,
 };
 use crate::coordinator::session::Sequence;
-use crate::model::{KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome};
+use crate::model::{
+    GroupSegment, GroupWindow, KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome,
+};
 use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::tree::{build_tree, host_verify_tree, DraftShape, TreeVerifyResult};
 use crate::spec::{DecodeConfig, Policy, RoundRecord};
@@ -101,6 +118,9 @@ pub struct RoundOutcome {
     pub tau: f32,
     /// Controller regret of this round's decision, ns/token.
     pub regret_ns: u64,
+    /// Fused group width this round's pipeline pass carried (1 = solo;
+    /// 0 in legacy default-constructed outcomes, treated as 1).
+    pub fuse_width: usize,
 }
 
 impl RoundOutcome {
@@ -120,8 +140,30 @@ impl RoundOutcome {
             recovered_ns: self.recovered_ns,
             tau: self.tau,
             regret_ns: self.regret_ns,
+            fuse_width: self.fuse_width.max(1),
         }
     }
+}
+
+/// Per-member intermediate state between the draft phase and the finish
+/// phase of a (possibly fused) chain round.
+struct ChainPrep {
+    /// The member's index in the serving loop's `active` vector.
+    idx: usize,
+    d: Decision,
+    gamma: usize,
+    /// Position of the last committed token at round start.
+    i: usize,
+    /// Verify window (last committed token + drafted chain), γ+1 wide.
+    window: Vec<i32>,
+    d_tokens: Vec<i32>,
+    d_logits: Vec<f32>,
+    draft_ns_total: Nanos,
+    /// Sim time the member's leader-local drafting finished.
+    draft_done: Nanos,
+    reused: usize,
+    wasted: usize,
+    recovered_ns: Nanos,
 }
 
 /// Drives decode rounds for sequences against one sharded model replica.
@@ -294,6 +336,10 @@ impl DecodeEngine {
     /// and τ come from the sequence controller's `Decision`; γ is
     /// re-clamped against the KV slot's remaining rows (an adaptive
     /// controller may ask for more than the near-full cache can hold).
+    ///
+    /// Split into [`Self::draft_phase`] → pipeline pass →
+    /// [`Self::finish_phase`] so fused group rounds can run many
+    /// members' phases around one shared pass.
     fn round_speculative(
         &mut self,
         seq: &mut Sequence,
@@ -301,6 +347,114 @@ impl DecodeEngine {
         sim: &mut PipelineSim,
         d: Decision,
     ) -> Result<RoundOutcome> {
+        let prep = self.draft_phase(seq, pool, sim, d, 0)?;
+        let (t_logits, stage_times, fwd_bytes, ret_bytes) =
+            self.pipeline_window(seq, pool, &prep.window, prep.i, prep.gamma + 1)?;
+        let timing = sim.pipeline_pass(prep.draft_done, &stage_times, fwd_bytes, ret_bytes, true);
+        self.finish_phase(seq, pool, sim, prep, t_logits, timing, 1)
+    }
+
+    /// One fused group round over `idxs` (indices into `active`, ordered
+    /// earliest-ready-first by the batcher): every member drafts
+    /// leader-locally, the chain windows ride ONE ragged pipeline pass
+    /// (one message per hop, one sync round for the whole group), then
+    /// every member pre-drafts/verifies/commits off its logits segment.
+    /// Members whose round cannot fuse (autoregressive policy, a
+    /// tree-shaped controller decision) run solo rounds in place.
+    /// Returns `(active index, outcome)` per member.
+    ///
+    /// Commits are byte-identical to running the members' solo rounds in
+    /// any order: all member state is per-sequence and every stochastic
+    /// draw is position-keyed, so fusion moves only simulated time.
+    pub fn round_group(
+        &mut self,
+        active: &mut [Sequence],
+        idxs: &[usize],
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+    ) -> Result<Vec<(usize, RoundOutcome)>> {
+        let mut outs: Vec<(usize, RoundOutcome)> = Vec::with_capacity(idxs.len());
+        let mut preps: Vec<ChainPrep> = Vec::with_capacity(idxs.len());
+        for &idx in idxs {
+            if self.cfg.policy == Policy::Autoregressive {
+                let o = self.round(&mut active[idx], pool, sim)?;
+                outs.push((idx, o));
+                continue;
+            }
+            let d = self.decision_for(&mut active[idx]);
+            if !matches!(d.shape, DraftShape::Chain) {
+                // ragged tree windows would need per-segment ancestor
+                // masks the stage artifacts don't take — run solo
+                let o = self.round(&mut active[idx], pool, sim)?;
+                outs.push((idx, o));
+                continue;
+            }
+            let prep = self.draft_phase(&mut active[idx], pool, sim, d, idx)?;
+            preps.push(prep);
+        }
+        match preps.len() {
+            0 => Ok(outs),
+            1 => {
+                // degenerate group: exactly the solo path
+                let prep = preps.pop().expect("len checked");
+                let idx = prep.idx;
+                let seq = &mut active[idx];
+                let (t_logits, stage_times, fwd_bytes, ret_bytes) =
+                    self.pipeline_window(seq, pool, &prep.window, prep.i, prep.gamma + 1)?;
+                let timing =
+                    sim.pipeline_pass(prep.draft_done, &stage_times, fwd_bytes, ret_bytes, true);
+                let o = self.finish_phase(seq, pool, sim, prep, t_logits, timing, 1)?;
+                outs.push((idx, o));
+                Ok(outs)
+            }
+            width => {
+                // --- ONE fused pass over every member's window ---
+                let segments: Vec<GroupSegment> = preps
+                    .iter()
+                    .map(|p| GroupSegment {
+                        tokens: p.window.clone(),
+                        pos: p.i,
+                        slot: active[p.idx].slot,
+                    })
+                    .collect();
+                let (member_logits, stage_times, fwd_bytes, ret_bytes) =
+                    self.pipeline_group(pool, GroupWindow { segments })?;
+                // the window ships when the slowest member's drafting is
+                // done (the group is packed earliest-ready-first, so the
+                // spread is small)
+                let start = preps.iter().map(|p| p.draft_done).max().unwrap_or(0);
+                let timing = sim.pipeline_pass(start, &stage_times, fwd_bytes, ret_bytes, true);
+                for (prep, t_logits) in preps.into_iter().zip(member_logits) {
+                    let idx = prep.idx;
+                    let o = self.finish_phase(
+                        &mut active[idx],
+                        pool,
+                        sim,
+                        prep,
+                        t_logits,
+                        timing,
+                        width,
+                    )?;
+                    outs.push((idx, o));
+                }
+                Ok(outs)
+            }
+        }
+    }
+
+    /// Decision + drafting for one chain-round member: consume or
+    /// discard the pre-draft (emitting the bonus-guess observation —
+    /// see below), replay catch-up positions, draft the window, charge
+    /// leader-local draft time. Touches per-sequence state only, so
+    /// group composition cannot change what is drafted.
+    fn draft_phase(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+        d: Decision,
+        idx: usize,
+    ) -> Result<ChainPrep> {
         let m = self.model.engine.manifest().model.clone();
         // KV-headroom re-clamp, snapped down to the γ grid so the window
         // width is one the stage artifacts exist for. Static decisions
@@ -320,17 +474,26 @@ impl DecodeEngine {
         if let Some(pd) = &pre {
             if i == pd.next_base {
                 // the previous round accepted all its drafts, so the
-                // pre-draft's catch-up row (input d_γ) is valid
+                // pre-draft's catch-up row (input d_γ) is valid — and
+                // whether the bonus guess matched the committed bonus is
+                // now a committed fact: feed the measured guess-hit rate
+                // (the sequential path reads the same value off its
+                // catch-up step's logits below, so the observation
+                // stream is scheduler-invariant)
+                let hit = pd.guess == seq.last_token();
+                if let Some(c) = seq.ctrl.as_mut() {
+                    c.observe_guess(hit);
+                }
                 seq.draft_frontier = seq.draft_frontier.max(pd.anchor_pos + 1);
                 recovered_ns = pd.draft_ns / (pd.tokens.len() as Nanos + 1);
-                if pd.guess == seq.last_token() && pd.tokens.len() >= gamma {
-                    // ... and the bonus-token guess matched, with at
-                    // least the window this round wants: every drafted
-                    // token is a pure function of its position, so a
-                    // longer pre-draft's γ-prefix IS this round's window
-                    // (the controller may have settled on a smaller γ
-                    // than the peek predicted — e.g. key-token counts
-                    // shifted the estimate).
+                if hit && pd.tokens.len() >= gamma {
+                    // ... and the guess matched, with at least the
+                    // window this round wants: every drafted token is a
+                    // pure function of its position, so a longer
+                    // pre-draft's γ-prefix IS this round's window (the
+                    // controller may have settled on a smaller γ than
+                    // the peek predicted — e.g. key-token counts shifted
+                    // the estimate).
                     full_reuse = true;
                     recovered_ns =
                         pd.draft_ns * (gamma as Nanos + 1) / (pd.tokens.len() as Nanos + 1);
@@ -353,13 +516,25 @@ impl DecodeEngine {
         } else {
             let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
             let mut d_logits: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
-            // catch-up positions: draft_frontier .. i-1 (logits unused)
+            // catch-up positions: draft_frontier .. i-1
             for pos in seq.draft_frontier..i {
                 let input = seq.committed[pos];
                 let u = draft_uniform(sseed, pos);
                 let dcache = pool.stage_cache(seq.slot, dstage)?;
-                let (_, _, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
+                let (_, logits, ns) = self.model.draft.step(input, dcache, pos, temp, u)?;
                 draft_ns_total += ns;
+                if pos + 1 == i {
+                    // replaying the position right before the frontier
+                    // means the previous round fully accepted: this
+                    // logits row is the draft's belief about the bonus
+                    // position, so its argmax vs the committed bonus IS
+                    // the guess-hit observation (same value the overlap
+                    // path reads off its pre-draft classification)
+                    let hit = argmax(&logits) as i32 == seq.committed[i];
+                    if let Some(c) = seq.ctrl.as_mut() {
+                        c.observe_guess(hit);
+                    }
+                }
             }
             // drafting: step at position i consumes the last committed
             // token and yields the distribution for position i+1, etc.
@@ -380,14 +555,56 @@ impl DecodeEngine {
         } else {
             sim.local_work(seq.ready_at, draft_ns_total)
         };
-
-        // --- one pipeline pass over the verify window ---
         let mut window = Vec::with_capacity(gamma + 1);
         window.push(seq.last_token());
         window.extend_from_slice(&d_tokens);
-        let (t_logits, stage_times, fwd_bytes, ret_bytes) =
-            self.pipeline_window(seq, pool, &window, i, gamma + 1)?;
-        let timing = sim.pipeline_pass(draft_done, &stage_times, fwd_bytes, ret_bytes, true);
+        Ok(ChainPrep {
+            idx,
+            d,
+            gamma,
+            i,
+            window,
+            d_tokens,
+            d_logits,
+            draft_ns_total,
+            draft_done,
+            reused,
+            wasted,
+            recovered_ns,
+        })
+    }
+
+    /// Speculate-ahead + verification + commit for one chain-round
+    /// member after its verify window returned. `fuse_width` is the
+    /// group size the pipeline pass carried (1 = solo); the pass's
+    /// comm/compute are attributed to members as equal shares.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_phase(
+        &mut self,
+        seq: &mut Sequence,
+        pool: &mut KvPool,
+        sim: &mut PipelineSim,
+        prep: ChainPrep,
+        t_logits: Vec<f32>,
+        timing: PassTiming,
+        fuse_width: usize,
+    ) -> Result<RoundOutcome> {
+        let m = self.model.engine.manifest().model.clone();
+        let ChainPrep {
+            d,
+            gamma,
+            i,
+            d_tokens,
+            d_logits,
+            draft_ns_total,
+            reused,
+            wasted,
+            recovered_ns,
+            ..
+        } = prep;
+        let temp = self.cfg.temp;
+        let dstage = self.model.n_shards();
+        let sseed = stream_seed(self.cfg.seed, seq.id);
 
         // --- speculate ahead: draft round r+1's window while this
         // round's verify window is in flight (the leader is idle from
@@ -476,6 +693,7 @@ impl DecodeEngine {
         if let Some(c) = seq.ctrl.as_mut() {
             c.observe(gamma, outcome.accepted, key_tokens);
         }
+        let share = fuse_width.max(1) as Nanos;
         Ok(RoundOutcome {
             committed: outcome.tokens.clone(),
             accepted: outcome.accepted,
@@ -483,8 +701,8 @@ impl DecodeEngine {
             draft_len: gamma,
             tree_nodes: gamma,
             finish,
-            comm_ns: timing.comm_ns,
-            compute_ns: timing.compute_ns + draft_ns_total + pre_draft_ns + verify_ns,
+            comm_ns: timing.comm_ns / share,
+            compute_ns: timing.compute_ns / share + draft_ns_total + pre_draft_ns + verify_ns,
             pre_drafted,
             reused,
             wasted,
@@ -493,7 +711,55 @@ impl DecodeEngine {
             recovered_ns,
             tau: d.tau,
             regret_ns: d.regret_ns,
+            fuse_width: fuse_width.max(1),
         })
+    }
+
+    /// Run a fused group window through all pipeline stages — ONE
+    /// [`StageExecutor::run_group`] call per node, every member's KV
+    /// rows scattered into its own pool slot — and split the last
+    /// stage's logits back into per-member segments. Returns
+    /// (per-member logits, per-stage compute times, hop payload bytes).
+    #[allow(clippy::type_complexity)]
+    fn pipeline_group(
+        &mut self,
+        pool: &mut KvPool,
+        window: GroupWindow,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Nanos>, usize, usize)> {
+        let window = Rc::new(window);
+        let slots: Vec<usize> = window.segments.iter().map(|s| s.slot).collect();
+        let m = self.model.engine.manifest().model.clone();
+        let n = self.model.n_shards();
+        let mut stage_times = Vec::with_capacity(n);
+        let mut fwd_bytes = 0usize;
+        let mut x = StageInput::Group { window: window.clone(), hidden: None };
+        let mut out_data: Option<Vec<f32>> = None;
+        for (si, stage) in self.model.stages.iter().enumerate() {
+            let mut caches = pool.stage_caches(&slots, si)?;
+            let hidden = match &x {
+                StageInput::Group { hidden, .. } => hidden.as_deref(),
+                _ => None,
+            };
+            let (out, ns) = stage.run_group(&window, hidden, &mut caches)?;
+            stage_times.push(ns);
+            if si + 1 < n {
+                let next = StageInput::Group { window: window.clone(), hidden: Some(out.data) };
+                fwd_bytes = next.size_bytes();
+                x = next;
+            } else {
+                out_data = Some(out.data);
+            }
+        }
+        let logits = out_data.expect("last stage emits logits");
+        let ret_bytes = logits.len() * 4;
+        let mut member_logits = Vec::with_capacity(window.segments.len());
+        let mut off = 0usize;
+        for seg in &window.segments {
+            let w = seg.tokens.len();
+            member_logits.push(logits[off * m.vocab..(off + w) * m.vocab].to_vec());
+            off += w;
+        }
+        Ok((member_logits, stage_times, fwd_bytes, ret_bytes))
     }
 
     fn commit_outcome(&self, seq: &mut Sequence, i: usize, gamma: usize, out: &VerifyOutcome) {

@@ -6,6 +6,17 @@
 //! decided by the pure logic in [`batcher`], execution happens on the
 //! PJRT engine, and all latency accounting flows through
 //! [`PipelineSim`](crate::cluster::PipelineSim).
+//!
+//! With fusion enabled (`DeployConfig::fuse`, on by default), the
+//! batcher packs concurrent chain-decode rounds into fused group rounds
+//! ([`Action::RunGroup`] → [`DecodeEngine::round_group`]): one pipeline
+//! pass and one cross-node sync per group instead of per sequence.
+//! At a fixed configuration, committed token streams are byte-identical
+//! across realized group compositions (B=1 ≡ B=8 ≡ any partition).
+//! `--fuse off` runs the legacy per-sequence path; it commits the same
+//! tokens for the static controller (the serving default), while for
+//! `cost-optimal` the fuse knob is a *pricing input* like `link_ms` —
+//! toggling it legitimately shifts the chosen γ.
 
 pub mod batcher;
 pub mod decode;
@@ -13,9 +24,11 @@ pub mod overlap;
 pub mod router;
 pub mod session;
 
-pub use batcher::{next_action, next_action_prefill_first, Action, SeqView};
+pub use batcher::{next_action, next_action_fused, next_action_prefill_first, Action, SeqView};
 pub use decode::{DecodeEngine, RoundOutcome, SequenceResult};
-pub use overlap::{OracleChainDecoder, OracleConfig, OracleRound, PreDraft};
+pub use overlap::{
+    FleetReport, OracleChainDecoder, OracleConfig, OracleFleet, OraclePrep, OracleRound, PreDraft,
+};
 pub use router::{RoutePolicy, Router};
 pub use session::{SeqState, Sequence};
 
@@ -81,6 +94,16 @@ impl Coordinator {
         // The γ grid is restricted to the manifest's exported window
         // widths — an adaptive controller must only ask for windows the
         // AOT artifacts can actually run.
+        // The cost model amortizes the sync term over the deployment's
+        // configured fused group width — a config-time constant (like
+        // link_ms), NOT the realized per-round group size, so decisions
+        // stay pure functions of (config, committed outcomes) and token
+        // streams stay invariant to actual group composition. Gated on
+        // the same conditions as the serving loop's fuse_cap: a
+        // deployment whose rounds can never fuse (AR, tree shapes, fuse
+        // off) must be priced at solo syncs.
+        let can_fuse =
+            cfg.fuse && decode_cfg.policy.is_speculative() && decode_cfg.shape.is_chain();
         let ctrl = ControlConfig::new(
             decode_cfg.controller,
             decode_cfg.gamma.max(1),
@@ -89,7 +112,8 @@ impl Coordinator {
             matches!(decode_cfg.policy, Policy::Dsd),
             cost,
         )
-        .with_gammas(engine.manifest().gammas.clone());
+        .with_gammas(engine.manifest().gammas.clone())
+        .with_fuse(if can_fuse { cfg.max_fuse.min(cfg.max_batch).max(1) } else { 1 });
         let decode = DecodeEngine::with_control(model, decode_cfg, ctrl);
         Ok(Coordinator { engine, cfg, decode, pool, sim })
     }
@@ -137,7 +161,21 @@ impl Coordinator {
         let mut now: u64 = 0;
         let mut accept = AcceptanceStats::default();
 
+        // Fused group rounds apply to speculative chain decoding; AR
+        // rounds and tree-shaped deployments run the per-sequence path
+        // (`max_fuse 1` ≡ the legacy scheduler).
+        let fuse_cap = if self.cfg.fuse
+            && self.cfg.decode.policy.is_speculative()
+            && self.cfg.decode.shape.is_chain()
+        {
+            self.cfg.max_fuse
+        } else {
+            1
+        };
+        let fallback_window = self.cfg.decode.max_window();
+
         loop {
+            let ar = self.cfg.decode.policy == Policy::Autoregressive;
             let views: Vec<SeqView> = active
                 .iter()
                 .enumerate()
@@ -145,13 +183,16 @@ impl Coordinator {
                     idx,
                     ready_at: s.ready_at,
                     prefilled: s.state != SeqState::Admitted,
+                    window: if ar { 1 } else { s.planned_window(fallback_window) },
                 })
                 .collect();
-            let action = next_action_prefill_first(
+            let action = next_action_fused(
                 now,
                 queue.front().map(|r| r.arrival_ns),
                 self.pool.in_use() < self.pool.capacity(),
                 &views,
+                fuse_cap,
+                self.cfg.fuse_tokens,
             );
             match action {
                 Action::Done => break,
@@ -170,39 +211,37 @@ impl Coordinator {
                     if seq.state == SeqState::Admitted {
                         self.decode.prefill(seq, &mut self.pool, &mut self.sim)?;
                         seq.state = SeqState::Decoding;
-                        now = now.max(seq.ready_at.min(now + 0)); // now advances via rounds
                     } else {
                         let out = self.decode.round(seq, &mut self.pool, &mut self.sim)?;
                         if self.cfg.decode.policy.is_speculative() {
                             accept.record(out.record());
                         }
-                        report.sync_rounds += 1;
                     }
                     now = now.max(active[idx].ready_at);
-                    // Completion check: token budget or cache window room.
-                    let seq = &mut active[idx];
-                    let window_room =
-                        seq.committed.len() + self.cfg.decode.max_window() < max_seq;
-                    if seq.generated() >= seq.max_new_tokens || !window_room {
-                        // Trim overshoot from the last speculative round.
-                        let excess = seq.generated().saturating_sub(seq.max_new_tokens);
-                        for _ in 0..excess {
-                            seq.committed.pop();
+                    self.retire_if_done(&mut active, idx, max_seq, &mut report, &mut results)?;
+                }
+                Action::RunGroup { idxs } => {
+                    let outs = self.decode.round_group(
+                        &mut active,
+                        &idxs,
+                        &mut self.pool,
+                        &mut self.sim,
+                    )?;
+                    // sync accounting comes from the simulator (one sync
+                    // per pass, fused or not): report.sync_rounds is set
+                    // from sim.stats after the loop.
+                    for (_, out) in &outs {
+                        if self.cfg.decode.policy.is_speculative() {
+                            accept.record(out.record());
                         }
-                        seq.state = SeqState::Finished;
-                        seq.finished_at = seq.ready_at;
-                        let latency = seq.finished_at - seq.arrival_ns;
-                        report.requests += 1;
-                        report.tokens += seq.generated() as u64;
-                        report.request_latency.record(latency);
-                        results.push(SequenceResult {
-                            id: seq.id,
-                            tokens: seq.generated_tokens().to_vec(),
-                            rounds: Vec::new(),
-                            latency_ns: latency,
-                        });
-                        self.pool.release(seq.slot)?;
-                        active.swap_remove(idx);
+                        now = now.max(out.finish);
+                    }
+                    // Retire finished members largest-index-first so
+                    // swap_remove never disturbs a smaller pending index.
+                    let mut members: Vec<usize> = outs.iter().map(|(i, _)| *i).collect();
+                    members.sort_unstable_by(|a, b| b.cmp(a));
+                    for idx in members {
+                        self.retire_if_done(&mut active, idx, max_seq, &mut report, &mut results)?;
                     }
                 }
             }
@@ -216,6 +255,46 @@ impl Coordinator {
         report.accept = accept;
         results.sort_by_key(|r| r.id);
         Ok((report, results))
+    }
+
+    /// Completion check for one active sequence (token budget or cache
+    /// window room): trims speculative overshoot, records the request,
+    /// releases the KV slot, and `swap_remove`s it. Returns whether the
+    /// sequence was retired. Callers retiring several indices must
+    /// process them largest-first (swap_remove moves the tail).
+    fn retire_if_done(
+        &mut self,
+        active: &mut Vec<Sequence>,
+        idx: usize,
+        max_seq: usize,
+        report: &mut RunReport,
+        results: &mut Vec<SequenceResult>,
+    ) -> Result<bool> {
+        let seq = &mut active[idx];
+        let window_room = seq.committed.len() + self.cfg.decode.max_window() < max_seq;
+        if seq.generated() < seq.max_new_tokens && window_room {
+            return Ok(false);
+        }
+        // Trim overshoot from the last speculative round.
+        let excess = seq.generated().saturating_sub(seq.max_new_tokens);
+        for _ in 0..excess {
+            seq.committed.pop();
+        }
+        seq.state = SeqState::Finished;
+        seq.finished_at = seq.ready_at;
+        let latency = seq.finished_at - seq.arrival_ns;
+        report.requests += 1;
+        report.tokens += seq.generated() as u64;
+        report.request_latency.record(latency);
+        results.push(SequenceResult {
+            id: seq.id,
+            tokens: seq.generated_tokens().to_vec(),
+            rounds: Vec::new(),
+            latency_ns: latency,
+        });
+        self.pool.release(seq.slot)?;
+        active.swap_remove(idx);
+        Ok(true)
     }
 
     /// Reset sim state between experiment runs (fresh topology clock).

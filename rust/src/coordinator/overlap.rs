@@ -69,9 +69,9 @@
 use anyhow::Result;
 
 use crate::cluster::clock::Nanos;
-use crate::cluster::sim::PipelineSim;
+use crate::cluster::sim::{PassTiming, PipelineSim};
 use crate::cluster::topology::{LinkModel, Topology};
-use crate::control::{ControlConfig, ControllerKind, CostModel, SeqController};
+use crate::control::{ControlConfig, ControllerKind, CostModel, Decision, SeqController};
 use crate::model::VerifyKnobs;
 use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::reference::host_verify;
@@ -194,6 +194,10 @@ pub struct OracleConfig {
     pub per_token_pass_ns: Nanos,
     /// Hidden width for per-hop payload accounting.
     pub d_model: usize,
+    /// Fused group width the controller's cost model amortizes the sync
+    /// term over (a config-time constant, like `link_ms` — never the
+    /// realized per-round group size). 1 = solo pricing.
+    pub fuse: usize,
 }
 
 impl Default for OracleConfig {
@@ -213,6 +217,7 @@ impl Default for OracleConfig {
             draft_step_ns: 600_000,
             per_token_pass_ns: 240_000,
             d_model: 256,
+            fuse: 1,
         }
     }
 }
@@ -242,6 +247,7 @@ impl OracleConfig {
             self.knobs.adaptive,
             cost,
         )
+        .with_fuse(self.fuse)
     }
 }
 
@@ -329,10 +335,19 @@ impl OracleChainDecoder {
         t.iter().map(|&x| c * x + noise * r.normal() as f32 * 2.0).collect()
     }
 
-    /// One speculative round, mirroring `DecodeEngine::round_speculative`
-    /// (controller decision, reuse classification, one verify pass,
-    /// speculate-ahead pre-draft with the peeked next-round window).
-    pub fn round(&mut self) -> OracleRound {
+    /// Width of the window the next round will ship (root slot + γ) —
+    /// what fused fleet packing budgets against.
+    pub fn next_window_width(&self) -> usize {
+        self.ctrl.decision().gamma.max(1) + 1
+    }
+
+    /// Draft phase of one round: controller decision, pre-draft
+    /// classification (emitting the bonus-guess observation — the
+    /// sequential branch reads the same value off the catch-up
+    /// position's draft row, so the observation stream is
+    /// scheduler-invariant), catch-up accounting, window drafting.
+    /// No simulator interaction; the caller charges `draft_ns`.
+    pub fn prep_round(&mut self) -> OraclePrep {
         let d = self.ctrl.decision();
         let gamma = d.gamma.max(1);
         let temp = self.cfg.temp;
@@ -345,9 +360,14 @@ impl OracleChainDecoder {
         let mut full_reuse = false;
         if let Some(pd) = &pre {
             if i == pd.next_base {
+                // previous round accepted everything: whether the bonus
+                // guess matched is now a committed fact — feed the
+                // measured guess-hit rate
+                let hit = pd.guess == *self.committed.last().unwrap();
+                self.ctrl.observe_guess(hit);
                 self.draft_frontier = self.draft_frontier.max(pd.anchor_pos + 1);
                 recovered_ns = pd.draft_ns / (pd.tokens.len() as Nanos + 1);
-                if pd.guess == *self.committed.last().unwrap() && pd.tokens.len() >= gamma {
+                if hit && pd.tokens.len() >= gamma {
                     // a longer pre-draft's γ-prefix is valid wholesale:
                     // every drafted token is a pure function of position
                     full_reuse = true;
@@ -371,7 +391,16 @@ impl OracleChainDecoder {
             (pd.tokens, pd.logits)
         } else {
             // catch-up replays cost time but produce no window tokens
-            // (the "cache" here is the committed prefix itself)
+            // (the "cache" here is the committed prefix itself);
+            // replaying the position right before the frontier means the
+            // previous round fully accepted — its draft row is the
+            // bonus-position belief, so its argmax vs the committed
+            // bonus IS the guess-hit observation
+            if self.draft_frontier < i {
+                let hit =
+                    argmax(&self.draft_row(&self.committed[..i])) as i32 == self.committed[i];
+                self.ctrl.observe_guess(hit);
+            }
             draft_ns_total += (i - self.draft_frontier) as Nanos * self.cfg.draft_step_ns;
             let mut toks: Vec<i32> = Vec::with_capacity(gamma);
             let mut rows: Vec<f32> = Vec::with_capacity(gamma * self.cfg.vocab);
@@ -386,20 +415,41 @@ impl OracleChainDecoder {
             }
             (toks, rows)
         };
-        let draft_done = if draft_ns_total == 0 {
-            self.ready_at
-        } else {
-            self.sim.local_work(self.ready_at, draft_ns_total)
-        };
+        OraclePrep {
+            d,
+            gamma,
+            i,
+            d_tokens,
+            d_logits,
+            draft_ns: draft_ns_total,
+            reused,
+            wasted,
+            recovered_ns,
+        }
+    }
 
-        // --- ONE verify pass over the flattened window ---
-        let timing = self.sim.window_pass(
-            draft_done,
-            gamma + 1,
-            &self.per_stage,
-            self.cfg.d_model * 4,
-            self.cfg.vocab * 4,
-        );
+    /// Finish phase of one round against `sim`, given the (possibly
+    /// fused) verify pass timing: speculate-ahead pre-draft inside the
+    /// in-flight gap, host verification, commit, observe.
+    pub fn finish_round(
+        &mut self,
+        sim: &mut PipelineSim,
+        prep: OraclePrep,
+        timing: PassTiming,
+    ) -> OracleRound {
+        let OraclePrep {
+            d,
+            gamma,
+            i,
+            d_tokens,
+            d_logits,
+            draft_ns: _,
+            reused,
+            wasted,
+            recovered_ns,
+        } = prep;
+        let temp = self.cfg.temp;
+        let sseed = stream_seed(self.cfg.seed, self.cfg.seq_id);
 
         // target logits per window slot (slot j predicts position i+j+1)
         let mut t_logits = self.target_row(&self.committed);
@@ -439,7 +489,7 @@ impl OracleChainDecoder {
                 chain.push(tok);
                 ns_total += self.cfg.draft_step_ns;
             }
-            let done = self.sim.local_work(timing.stage0_release, ns_total);
+            let done = sim.local_work(timing.stage0_release, ns_total);
             pre_draft_ns = ns_total;
             overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
             pre_drafted = g_next;
@@ -471,7 +521,7 @@ impl OracleChainDecoder {
             &u_sample,
             knobs,
         );
-        let finish = self.sim.local_work(timing.finish, host_verify_cost(gamma));
+        let finish = sim.local_work(timing.finish, host_verify_cost(gamma));
         self.draft_frontier = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
         self.committed.extend_from_slice(&out.tokens);
         self.ready_at = finish;
@@ -491,6 +541,196 @@ impl OracleChainDecoder {
             gamma,
             tau: d.tau,
             regret_ns: d.regret_ns,
+        }
+    }
+
+    /// One round against an external simulator (the fused-fleet entry
+    /// point; [`Self::round`] is the own-sim convenience wrapper).
+    pub fn round_on(&mut self, sim: &mut PipelineSim) -> OracleRound {
+        let prep = self.prep_round();
+        let draft_done = if prep.draft_ns == 0 {
+            self.ready_at
+        } else {
+            sim.local_work(self.ready_at, prep.draft_ns)
+        };
+        let timing = sim.window_pass(
+            draft_done,
+            prep.gamma + 1,
+            &self.per_stage,
+            self.cfg.d_model * 4,
+            self.cfg.vocab * 4,
+        );
+        self.finish_round(sim, prep, timing)
+    }
+
+    /// One speculative round, mirroring `DecodeEngine::round_speculative`
+    /// (controller decision, reuse classification, one verify pass,
+    /// speculate-ahead pre-draft with the peeked next-round window).
+    pub fn round(&mut self) -> OracleRound {
+        // swap the sim out so round_on can borrow self and the sim
+        // disjointly; the placeholder is never driven
+        let mut sim = std::mem::replace(
+            &mut self.sim,
+            PipelineSim::new(Topology::uniform(1, LinkModel::ideal()), 0),
+        );
+        let r = self.round_on(&mut sim);
+        self.sim = sim;
+        r
+    }
+}
+
+/// Intermediate state between an oracle round's draft phase and its
+/// finish phase (the engine-free twin of decode.rs's per-member prep).
+#[derive(Debug, Clone)]
+pub struct OraclePrep {
+    /// Controller decision the round runs under.
+    pub d: Decision,
+    /// Effective window length this round drafts/verifies.
+    pub gamma: usize,
+    /// Position of the last committed token at round start.
+    pub i: usize,
+    pub d_tokens: Vec<i32>,
+    pub d_logits: Vec<f32>,
+    /// Leader-local draft time to charge (0 on full reuse).
+    pub draft_ns: Nanos,
+    pub reused: usize,
+    pub wasted: usize,
+    pub recovered_ns: Nanos,
+}
+
+/// What one [`OracleFleet::serve`] run did.
+#[derive(Debug, Clone, Default)]
+pub struct FleetReport {
+    /// Fused group rounds dispatched (each is ONE sync round).
+    pub group_rounds: u64,
+    /// Mean members per group round.
+    pub mean_group_width: f64,
+    /// Sim time the slowest member finished at.
+    pub finish_ns: Nanos,
+    /// Total generated tokens across members.
+    pub tokens: u64,
+}
+
+/// Engine-free fused-group serving twin: B oracle sequences sharing ONE
+/// `PipelineSim`, decoded in fused group rounds of up to `group_cap`
+/// members. `group_cap = 1` is the per-sequence legacy path — same
+/// committed streams (every draw is position-keyed per sequence), one
+/// sync per sequence per round instead of one per group. Mirrors
+/// `DecodeEngine::round_group` + `batcher::next_action_fused` for the
+/// differential tests and `benches/ablation_batch.rs`.
+pub struct OracleFleet {
+    pub sim: PipelineSim,
+    pub seqs: Vec<OracleChainDecoder>,
+    per_stage: Vec<Nanos>,
+    d_model: usize,
+    vocab: usize,
+    prompt_len: usize,
+}
+
+impl OracleFleet {
+    /// Build `batch` member sequences from `base` (seq_id overridden per
+    /// member; everything else — calibration, controller spec, seed —
+    /// shared) over one simulator.
+    pub fn new(base: &OracleConfig, batch: usize, prompt: &[i32]) -> Result<OracleFleet> {
+        if batch == 0 {
+            anyhow::bail!("fleet needs at least one sequence");
+        }
+        let topo = Topology::uniform(base.nodes, LinkModel::wan(base.link_ms, 0.0));
+        let sim = PipelineSim::new(topo, base.seed ^ 0xF7);
+        let per_stage = vec![base.per_token_pass_ns / base.nodes as Nanos; base.nodes];
+        let mut seqs = Vec::with_capacity(batch);
+        for id in 0..batch {
+            let cfg = OracleConfig { seq_id: id as u64, ..base.clone() };
+            seqs.push(OracleChainDecoder::new(cfg, prompt)?);
+        }
+        Ok(OracleFleet {
+            sim,
+            seqs,
+            per_stage,
+            d_model: base.d_model,
+            vocab: base.vocab,
+            prompt_len: prompt.len(),
+        })
+    }
+
+    /// Generated tokens of member `s` (prompt excluded) — the
+    /// differential tests compare these across group caps.
+    pub fn generated(&self, s: usize) -> &[i32] {
+        &self.seqs[s].committed[self.prompt_len..]
+    }
+
+    /// Decode until every member committed >= `tokens_per_seq` generated
+    /// tokens, packing fused group rounds of up to `group_cap` members
+    /// whose summed window widths fit `token_budget`
+    /// (earliest-ready-first, like `batcher::next_action_fused`).
+    pub fn serve(
+        &mut self,
+        tokens_per_seq: usize,
+        group_cap: usize,
+        token_budget: usize,
+    ) -> FleetReport {
+        let cap = group_cap.max(1);
+        let mut group_rounds = 0u64;
+        let mut member_rounds = 0u64;
+        loop {
+            let mut pending: Vec<usize> = (0..self.seqs.len())
+                .filter(|&s| self.seqs[s].committed.len() - self.prompt_len < tokens_per_seq)
+                .collect();
+            if pending.is_empty() {
+                break;
+            }
+            pending.sort_by_key(|&s| (self.seqs[s].finish_time(), s));
+            let mut group: Vec<usize> = Vec::new();
+            let mut used = 0usize;
+            for &s in &pending {
+                if group.len() >= cap {
+                    break;
+                }
+                let w = self.seqs[s].next_window_width();
+                if group.is_empty() || used + w <= token_budget {
+                    group.push(s);
+                    used += w;
+                }
+            }
+            // per-member draft phases, serialized on the shared leader
+            let mut preps: Vec<(usize, OraclePrep, Nanos)> = Vec::with_capacity(group.len());
+            for &s in &group {
+                let ready = self.seqs[s].finish_time();
+                let prep = self.seqs[s].prep_round();
+                let draft_done = if prep.draft_ns == 0 {
+                    ready
+                } else {
+                    self.sim.local_work(ready, prep.draft_ns)
+                };
+                preps.push((s, prep, draft_done));
+            }
+            // ONE fused pass for the whole group
+            let start = preps.iter().map(|p| p.2).max().unwrap_or(0);
+            let widths: Vec<usize> = preps.iter().map(|(_, p, _)| p.gamma + 1).collect();
+            let timing = self.sim.group_pass(
+                start,
+                &widths,
+                &self.per_stage,
+                self.d_model * 4,
+                self.vocab * 4,
+            );
+            group_rounds += 1;
+            member_rounds += preps.len() as u64;
+            for (s, prep, _) in preps {
+                let _ = self.seqs[s].finish_round(&mut self.sim, prep, timing);
+            }
+        }
+        let finish_ns = self.seqs.iter().map(|s| s.finish_time()).max().unwrap_or(0);
+        let tokens = self
+            .seqs
+            .iter()
+            .map(|s| (s.committed.len() - self.prompt_len) as u64)
+            .sum();
+        FleetReport {
+            group_rounds,
+            mean_group_width: member_rounds as f64 / group_rounds.max(1) as f64,
+            finish_ns,
+            tokens,
         }
     }
 }

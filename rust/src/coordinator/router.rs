@@ -121,4 +121,65 @@ mod tests {
         r.complete(0, 5);
         assert_eq!(r.inflight(0), 0);
     }
+
+    #[test]
+    fn least_loaded_ties_break_to_lowest_index() {
+        // Deterministic placement under ties matters now that fused
+        // groups make per-replica cost depend on co-residency: equal
+        // loads must always pick the lowest replica id, regardless of
+        // the history that produced the tie.
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(1), 0);
+        assert_eq!(r.route(1), 1);
+        assert_eq!(r.route(1), 2);
+        // all tied at 1 -> index 0 again
+        assert_eq!(r.route(1), 0); // counts {0:2, 1:1, 2:1}
+        // release replica 1: {0:2, 1:0, 2:1} -> strict minimum 1
+        r.complete(1, 1);
+        assert_eq!(r.route(1), 1); // back to {0:2, 1:1, 2:1}
+        // drain replica 0: {0:0, 1:1, 2:1}; after it takes one, the
+        // 1-vs-2 tie (0 now holds 1 too) resolves to the lower index
+        r.complete(0, 1);
+        r.complete(0, 1);
+        assert_eq!(r.route(1), 0); // {0:1, 1:1, 2:1}
+        assert_eq!(r.route(1), 0); // full tie again -> lowest index
+    }
+
+    #[test]
+    fn least_tokens_ties_break_to_lowest_index() {
+        let mut r = Router::new(3, RoutePolicy::LeastTokens);
+        assert_eq!(r.route(10), 0);
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.route(10), 2);
+        // exact three-way tie at 10 -> 0
+        assert_eq!(r.route(5), 0);
+        // {0:15, 1:10, 2:10}: tie between 1 and 2 -> 1
+        assert_eq!(r.route(1), 1);
+    }
+
+    #[test]
+    fn release_accounting_under_mixed_lengths() {
+        // Mixed request lengths: LeastTokens must track the OUTSTANDING
+        // token budget through interleaved route/complete cycles — the
+        // quantity fused groups consume from a replica's fuse_tokens
+        // budget — and never go negative.
+        let mut r = Router::new(2, RoutePolicy::LeastTokens);
+        let a = r.route(200); // long request
+        assert_eq!(a, 0);
+        let b = r.route(20); // short
+        let c = r.route(20); // short
+        assert_eq!((b, c), (1, 1), "shorts pile on the light replica");
+        // short b completes: {0:200, 1:20} -> next short goes to 1
+        r.complete(b, 20);
+        assert_eq!(r.route(30), 1);
+        // the long one completes: {0:0, 1:50} -> long goes to 0
+        r.complete(a, 200);
+        assert_eq!(r.route(100), 0);
+        // inflight counts mirrored the cycle
+        assert_eq!(r.inflight(0), 1);
+        assert_eq!(r.inflight(1), 2);
+        // over-release saturates at zero rather than underflowing
+        r.complete(1, 1_000_000);
+        assert_eq!(r.route(1), 1, "saturated replica reads as empty");
+    }
 }

@@ -104,6 +104,21 @@ impl Sequence {
         self.committed.extend_from_slice(tokens);
     }
 
+    /// Width of the verify window this sequence's NEXT decode round will
+    /// ship (root slot + drafted nodes), from the live controller
+    /// decision when one exists, else `fallback` (the deployment's
+    /// configured widest window). The fused batcher packs group members
+    /// against this.
+    pub fn planned_window(&self, fallback: usize) -> usize {
+        match &self.ctrl {
+            Some(c) => {
+                let d = c.decision();
+                d.shape.max_nodes_or(d.gamma.max(1)) + 1
+            }
+            None => fallback,
+        }
+    }
+
     pub fn is_done(&self, max_seq: usize) -> bool {
         self.remaining_budget(max_seq) == 0
     }

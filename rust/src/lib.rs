@@ -47,6 +47,21 @@
 //! `benches/ablation_controller.rs` sweeps controller × link latency ×
 //! dataset profile, engine-free.
 //!
+//! ## Fused multi-sequence verification rounds
+//!
+//! Under multi-user traffic the per-sequence round loop pays the
+//! cross-node sync `(N−1)·t1` once per sequence per round; the batcher
+//! therefore packs concurrent chain rounds into **fused group rounds**
+//! ([`coordinator::DecodeEngine::round_group`], `--fuse on|off`,
+//! `--max_fuse`, `--fuse_tokens`): B verify windows ride ONE ragged
+//! pipeline pass ([`model::GroupWindow`], per-segment positions + KV
+//! scatter into each sequence's own slot), dividing the per-sequence
+//! sync cost by B on top of Eq. 5's per-token amortization.
+//! [`cluster::PipelineSim`] models links as occupied channels, so the
+//! contention fused rounds remove is physical; committed token streams
+//! are byte-identical across group compositions
+//! (`tests/fused_differential.rs`, `benches/ablation_batch.rs`).
+//!
 //! Start with [`coordinator::Coordinator`] (serving) or
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.

@@ -25,9 +25,9 @@ use dsd::workload::{dataset, WorkloadGen};
 
 const VALUED: &[&str] = &[
     "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
-    "draft", "draft_variant", "draft_shape", "max_batch", "dataset", "requests", "seed",
-    "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3", "max_new_tokens", "overlap",
-    "controller", "out", "sweep_nodes",
+    "draft", "draft_variant", "draft_shape", "max_batch", "fuse", "max_fuse", "fuse_tokens",
+    "dataset", "requests", "seed", "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3",
+    "max_new_tokens", "overlap", "controller", "out", "sweep_nodes",
 ];
 
 fn main() -> Result<()> {
@@ -64,6 +64,9 @@ Common options:
   --draft_shape S        chain | tree:<branching>x<depth>  [chain]
   --overlap S            speculate-ahead scheduler, on|off [on]
   --controller C         static|aimd|cost-optimal       [static]
+  --fuse S               fused multi-sequence rounds, on|off [on]
+  --max_fuse B           max sequences per fused round  [4]
+  --fuse_tokens T        token budget of one fused pass [64]
   --temp T               sampling temperature           [1.0]
   --tau T                relaxation coefficient         [0.2]
   --requests N           number of requests             [8]
@@ -124,6 +127,14 @@ fn serve(args: &cli::Args) -> Result<()> {
             report.accept.mean_gamma(),
             report.accept.mean_tau(),
             report.accept.mean_regret_ns() / 1e6,
+        );
+    }
+    if cfg.decode.policy.is_speculative() && cfg.fuse && cfg.max_fuse > 1 {
+        println!(
+            "  fused: {:.1}% of rounds shared a pass  mean group width {:.2} (cap {})",
+            report.accept.fused_round_rate() * 100.0,
+            report.accept.mean_fuse_width(),
+            cfg.max_fuse,
         );
     }
     Ok(())

@@ -70,6 +70,48 @@ impl TreeWindow {
     }
 }
 
+/// One member sequence's slice of a fused group window: its chain verify
+/// window (`tokens`), the base position its KV rows scatter at, and the
+/// KV-pool slot those rows belong to.
+#[derive(Debug, Clone)]
+pub struct GroupSegment {
+    /// Window tokens (last committed token + the drafted chain).
+    pub tokens: Vec<i32>,
+    /// Base position: the segment writes cache rows `pos..pos+len`.
+    pub pos: usize,
+    /// KV slot id of the owning sequence (host-side routing — the
+    /// scatter target; not wire payload).
+    pub slot: usize,
+}
+
+/// A fused multi-sequence verify window: the ragged concatenation of
+/// several sequences' chain windows, shipped through the pipeline as ONE
+/// message per hop. Per-segment boundaries + base positions ride as
+/// metadata (each node needs them to route rows into the right KV slot
+/// at the right positions); slot ids are host bookkeeping.
+#[derive(Debug, Clone)]
+pub struct GroupWindow {
+    pub segments: Vec<GroupSegment>,
+}
+
+impl GroupWindow {
+    /// Total token width across all segments.
+    pub fn width(&self) -> usize {
+        self.segments.iter().map(|s| s.tokens.len()).sum()
+    }
+
+    /// Bytes of segment metadata that ride every hop on top of the
+    /// payload tensor: per segment a (width, base position) i32 pair.
+    pub fn meta_bytes(&self) -> usize {
+        self.segments.len() * 8
+    }
+
+    /// Per-segment widths (the ragged boundaries).
+    pub fn widths(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.tokens.len()).collect()
+    }
+}
+
 /// Input to a pipeline stage.
 #[derive(Debug, Clone)]
 pub enum StageInput {
@@ -83,6 +125,10 @@ pub enum StageInput {
     /// (`Rc`-shared so the per-hop clone is O(1) — `size_bytes` still
     /// charges the full metadata per hop, since a real wire would).
     Tree { window: Rc<TreeWindow>, hidden: Option<Vec<f32>> },
+    /// Fused multi-sequence verify window (`hidden` follows the same
+    /// None-entering-stage-0 convention as `Tree`); dispatched through
+    /// [`StageExecutor::run_group`].
+    Group { window: Rc<GroupWindow>, hidden: Option<Vec<f32>> },
 }
 
 impl StageInput {
@@ -94,6 +140,13 @@ impl StageInput {
                 let payload = match hidden {
                     Some(h) => h.len() * 4,
                     None => window.tokens.len() * 4,
+                };
+                payload + window.meta_bytes()
+            }
+            StageInput::Group { window, hidden } => {
+                let payload = match hidden {
+                    Some(h) => h.len() * 4,
+                    None => window.width() * 4,
                 };
                 payload + window.meta_bytes()
             }
@@ -218,6 +271,64 @@ impl StageExecutor {
             _ => bail!("stage output must be f32"),
         };
         Ok(StageOutput { data, width: w, dim })
+    }
+
+    /// Dispatch a fused multi-sequence group window through this shard:
+    /// ONE stage call per node from the pipeline's point of view — every
+    /// member segment executes back to back on the node (per-segment
+    /// position ids; KV rows scatter into each member's own cache in
+    /// `caches`, ordered like `window.segments`) before the fused
+    /// activation ships downstream as a single message. Compute cost is
+    /// the sum of the real per-segment executions; the *sync* cost —
+    /// one hop per link — is what fusing amortizes (charged by
+    /// [`PipelineSim::group_pass`](crate::cluster::PipelineSim)).
+    ///
+    /// `hidden` is `None` entering stage 0 (tokens come from the window)
+    /// and the concatenated `[W_total, d_model]` activation thereafter.
+    pub fn run_group(
+        &self,
+        window: &GroupWindow,
+        hidden: Option<&[f32]>,
+        caches: &mut [&mut KvCache],
+    ) -> Result<(StageOutput, Nanos)> {
+        if caches.len() != window.segments.len() {
+            bail!(
+                "stage {}: group of {} segments got {} caches",
+                self.spec.stage_idx,
+                window.segments.len(),
+                caches.len()
+            );
+        }
+        let m = self.engine.manifest().model.clone();
+        let width = window.width();
+        if let Some(h) = hidden {
+            if h.len() != width * m.d_model {
+                bail!(
+                    "stage {}: group hidden len {} != {width}x{}",
+                    self.spec.stage_idx,
+                    h.len(),
+                    m.d_model
+                );
+            }
+        }
+        let dim = if self.spec.emits_logits() { m.vocab } else { m.d_model };
+        let mut data: Vec<f32> = Vec::with_capacity(width * dim);
+        let mut total_ns: Nanos = 0;
+        let mut off = 0usize; // rows consumed from the fused activation
+        for (seg, cache) in window.segments.iter().zip(caches.iter_mut()) {
+            let w = seg.tokens.len();
+            let x = match hidden {
+                None => StageInput::Tokens(seg.tokens.clone()),
+                Some(h) => {
+                    StageInput::Hidden(h[off * m.d_model..(off + w) * m.d_model].to_vec())
+                }
+            };
+            let (out, ns) = self.run(w, &x, cache, seg.pos)?;
+            total_ns += ns;
+            off += w;
+            data.extend_from_slice(&out.data);
+        }
+        Ok((StageOutput { data, width, dim }, total_ns))
     }
 
     /// Run a token-tree verify window through this shard. The tree

@@ -164,6 +164,35 @@ impl KvPool {
             .ok_or_else(|| anyhow!("no cache for slot {slot} stage {stage}"))
     }
 
+    /// Borrow one stage's cache for SEVERAL slots at once — the KV
+    /// scatter surface of a fused group round (every member segment
+    /// updates its own sequence's cache inside one stage call). Returned
+    /// in the order of `slots`; duplicate or free slots are errors.
+    pub fn stage_caches(&mut self, slots: &[usize], stage: usize) -> Result<Vec<&mut KvCache>> {
+        for (a, &s) in slots.iter().enumerate() {
+            if slots[..a].contains(&s) {
+                bail!("duplicate slot {s} in fused group");
+            }
+        }
+        // iter_mut yields disjoint &mut entries, so borrowing one cache
+        // per requested slot is safe without unsafe code.
+        let mut picked: Vec<(usize, &mut KvCache)> = Vec::with_capacity(slots.len());
+        for (si, entry) in self.slots.iter_mut().enumerate() {
+            if let Some(pos) = slots.iter().position(|&s| s == si) {
+                let cache = entry
+                    .as_mut()
+                    .and_then(|v| v.get_mut(stage))
+                    .ok_or_else(|| anyhow!("no cache for slot {si} stage {stage}"))?;
+                picked.push((pos, cache));
+            }
+        }
+        if picked.len() != slots.len() {
+            bail!("fused group names a slot outside the pool (capacity {})", self.capacity());
+        }
+        picked.sort_by_key(|&(pos, _)| pos);
+        Ok(picked.into_iter().map(|(_, c)| c).collect())
+    }
+
     /// Total bytes held by live caches (memory accounting metric).
     pub fn bytes_in_use(&self) -> usize {
         self.slots
@@ -265,6 +294,33 @@ mod tests {
         assert_eq!(p.bytes_in_use(), 0);
         let _ = p.alloc().unwrap();
         assert_eq!(p.bytes_in_use(), 2 * (2 * 8 * 2 * 4) * 4);
+    }
+
+    #[test]
+    fn stage_caches_borrows_many_slots_in_request_order() {
+        let mut p = KvPool::new(4, vec![[1, 8, 1, 1], [1, 8, 1, 1]]);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let c = p.alloc().unwrap();
+        // distinguish the caches through the frontier
+        p.stage_cache(a, 1).unwrap().commit(1).unwrap();
+        p.stage_cache(b, 1).unwrap().commit(2).unwrap();
+        p.stage_cache(c, 1).unwrap().commit(3).unwrap();
+        let got = p.stage_caches(&[c, a, b], 1).unwrap();
+        let pos: Vec<usize> = got.iter().map(|k| k.pos).collect();
+        assert_eq!(pos, vec![3, 1, 2], "order must follow the request, not slot ids");
+        // mutation through the group borrow sticks
+        let mut got = p.stage_caches(&[a, c], 1).unwrap();
+        got[0].commit(4).unwrap();
+        assert_eq!(p.stage_cache(a, 1).unwrap().pos, 5);
+        // errors: duplicate, free slot, bad stage
+        assert!(p.stage_caches(&[a, a], 0).is_err());
+        p.release(b).unwrap();
+        assert!(p.stage_caches(&[a, b], 0).is_err());
+        assert!(p.stage_caches(&[a], 7).is_err());
+        assert!(p.stage_caches(&[a, 99], 0).is_err());
+        // empty group is trivially fine
+        assert!(p.stage_caches(&[], 0).unwrap().is_empty());
     }
 
     #[test]

@@ -6,8 +6,8 @@ pub mod kv;
 pub mod shard;
 
 pub use executor::{
-    DraftExecutor, StageExecutor, StageInput, StageOutput, TreeWindow, VerifyExecutor,
-    VerifyKnobs, VerifyOutcome,
+    DraftExecutor, GroupSegment, GroupWindow, StageExecutor, StageInput, StageOutput,
+    TreeWindow, VerifyExecutor, VerifyKnobs, VerifyOutcome,
 };
 pub use kv::{KvCache, KvPool};
 pub use shard::{plan_shards, stage_cache_dims, ShardSpec};

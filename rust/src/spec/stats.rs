@@ -38,6 +38,9 @@ pub struct RoundRecord {
     /// Controller regret: expected ns/token of the chosen (γ, shape, τ)
     /// against the cost-model optimum at decision time (0 = optimal).
     pub regret_ns: u64,
+    /// Fused group width the round rode in (members sharing its pipeline
+    /// pass; 1 = solo round, 0 treated as 1 for legacy records).
+    pub fuse_width: usize,
 }
 
 impl RoundRecord {
@@ -95,6 +98,11 @@ pub struct AcceptanceStats {
     /// Histogram of the chosen per-round γ (index = γ) — shows how an
     /// adaptive controller actually moved the window length.
     pub gamma_hist: Vec<u64>,
+    /// Rounds that rode a fused group pass (width > 1).
+    pub fused_rounds: u64,
+    /// Sum of per-round fused group widths (1 per solo round) — the
+    /// numerator of [`AcceptanceStats::mean_fuse_width`].
+    pub fuse_width_sum: u64,
 }
 
 impl AcceptanceStats {
@@ -127,6 +135,11 @@ impl AcceptanceStats {
             self.gamma_hist.resize(r.gamma + 1, 0);
         }
         self.gamma_hist[r.gamma] += 1;
+        let fuse = r.fuse_width.max(1) as u64;
+        if fuse > 1 {
+            self.fused_rounds += 1;
+        }
+        self.fuse_width_sum += fuse;
     }
 
     /// Mean accepted draft tokens per round (k̄).
@@ -232,6 +245,23 @@ impl AcceptanceStats {
         self.regret_ns as f64 / self.rounds as f64
     }
 
+    /// Mean fused group width per round (1.0 = every round ran solo).
+    pub fn mean_fuse_width(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.fuse_width_sum as f64 / self.rounds as f64
+    }
+
+    /// Fraction of rounds that shared their pipeline pass with at least
+    /// one other sequence.
+    pub fn fused_round_rate(&self) -> f64 {
+        if self.rounds == 0 {
+            return 0.0;
+        }
+        self.fused_rounds as f64 / self.rounds as f64
+    }
+
     pub fn merge(&mut self, other: &AcceptanceStats) {
         self.rounds += other.rounds;
         self.draft_tokens += other.draft_tokens;
@@ -265,6 +295,8 @@ impl AcceptanceStats {
         for (i, &c) in other.gamma_hist.iter().enumerate() {
             self.gamma_hist[i] += c;
         }
+        self.fused_rounds += other.fused_rounds;
+        self.fuse_width_sum += other.fuse_width_sum;
     }
 }
 
@@ -392,6 +424,23 @@ mod tests {
         assert_eq!(t.overlap_ns, 6_000_000);
         assert_eq!(t.recovered_ns, 5_000_000);
         assert!((t.reuse_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fuse_width_telemetry_aggregates_and_merges() {
+        let mut s = AcceptanceStats::default();
+        s.record(RoundRecord { fuse_width: 4, ..rec(4, 2, 0) });
+        s.record(RoundRecord { fuse_width: 1, ..rec(4, 4, 0) });
+        s.record(rec(4, 3, 0)); // legacy record: width 0 counts as 1
+        assert_eq!(s.fused_rounds, 1);
+        assert_eq!(s.fuse_width_sum, 6);
+        assert!((s.mean_fuse_width() - 2.0).abs() < 1e-9);
+        assert!((s.fused_round_rate() - 1.0 / 3.0).abs() < 1e-9);
+        let mut t = AcceptanceStats::default();
+        t.merge(&s);
+        t.merge(&s);
+        assert_eq!(t.fused_rounds, 2);
+        assert_eq!(t.fuse_width_sum, 12);
     }
 
     #[test]

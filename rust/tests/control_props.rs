@@ -161,6 +161,78 @@ fn every_controller_is_overlap_invariant() {
 }
 
 #[test]
+fn measured_guess_rate_is_live_and_overlap_invariant() {
+    // The reuse-recovery term's p_guess is now measured: after enough
+    // full-accept rounds the estimator must have moved off the fixed
+    // prior, and — because the observation is defined on committed
+    // outcomes (draft argmax at the bonus position vs the committed
+    // bonus), not on scheduling — the sequential and overlap schedulers
+    // must accumulate EXACTLY the same estimate while committing the
+    // same tokens.
+    for kind in [ControllerKind::Static, ControllerKind::CostOptimal] {
+        for temp in [0.0f32, 1.0] {
+            let base = OracleConfig {
+                gamma: 2,
+                corr: 0.9,
+                temp,
+                knobs: knobs_for("dsd", temp),
+                controller: kind,
+                seed: 314,
+                link_ms: 15.0,
+                ..Default::default()
+            };
+            let run = |overlap: bool| {
+                let cfg = OracleConfig { overlap, ..base.clone() };
+                let mut dec = OracleChainDecoder::new(cfg, &[3, 141, 59, 26]).unwrap();
+                for _ in 0..80 {
+                    dec.round();
+                }
+                (dec.committed.clone(), dec.controller().estimator().guess_rate())
+            };
+            let (seq_tokens, seq_rate) = run(false);
+            let (ovl_tokens, ovl_rate) = run(true);
+            assert_eq!(seq_tokens, ovl_tokens, "{kind:?} temp {temp}");
+            assert!(
+                (seq_rate - ovl_rate).abs() < 1e-12,
+                "guess-rate estimate must be scheduler-invariant: {seq_rate} vs {ovl_rate} \
+                 ({kind:?} temp {temp})"
+            );
+            assert!(
+                (seq_rate - dsd::control::GUESS_HIT_PRIOR).abs() > 1e-6,
+                "corr 0.9 / γ 2 must produce full accepts, so the measured rate must \
+                 move off the prior (got {seq_rate}, {kind:?} temp {temp})"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_cost_config_is_a_config_constant_not_a_schedule() {
+    // ControlConfig::fuse shifts cost-optimal pricing like link_ms does
+    // — but for a FIXED config the decision stream must not depend on
+    // the scheduler. (B-invariance of the runtime grouping is pinned in
+    // tests/fused_differential.rs.)
+    let base = OracleConfig {
+        gamma: 2,
+        corr: 0.85,
+        knobs: knobs_for("dsd", 1.0),
+        controller: ControllerKind::CostOptimal,
+        seed: 77,
+        link_ms: 15.0,
+        fuse: 4,
+        ..Default::default()
+    };
+    let seq = run_stream(OracleConfig { overlap: false, ..base.clone() }, 24);
+    let ovl = run_stream(OracleConfig { overlap: true, ..base.clone() }, 24);
+    assert_eq!(seq.0, ovl.0, "fused pricing must stay overlap-invariant");
+    // and the fuse knob genuinely reaches the grid: solo-priced and
+    // fused-priced controllers may legitimately choose different γ
+    let solo = run_stream(OracleConfig { fuse: 1, overlap: true, ..base }, 24);
+    // both are valid token streams; just assert they decoded
+    assert!(solo.0.len() > 4 && ovl.0.len() > 4);
+}
+
+#[test]
 fn static_controller_reproduces_runs_exactly() {
     // Same config twice (fresh decoders): identical tokens AND identical
     // simulated times — and the controller field being Static means the

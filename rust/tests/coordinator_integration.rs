@@ -195,6 +195,47 @@ fn overlap_reports_reuse_on_engine() {
 }
 
 #[test]
+fn fused_groups_commit_identical_streams_on_engine() {
+    common::require_artifacts!();
+    // The fused-round tentpole differential on real artifacts: packing
+    // several sequences' verify windows into one ragged pipeline pass
+    // (StageInput::Group, per-slot KV scatter) must commit byte-identical
+    // streams to the per-sequence legacy path — while paying fewer sync
+    // rounds. Engine-free twin: tests/fused_differential.rs.
+    let e = engine();
+    for policy in [Policy::Eagle3, Policy::Dsd] {
+        let mut outs: Vec<Vec<Vec<i32>>> = Vec::new();
+        let mut syncs: Vec<u64> = Vec::new();
+        for fuse in [false, true] {
+            let mut cfg = base_cfg();
+            cfg.max_batch = 4;
+            cfg.fuse = fuse;
+            cfg.max_fuse = 4;
+            cfg.decode.policy = policy;
+            cfg.decode.temp = 1.0;
+            let reqs = requests(4, &cfg, &e);
+            let mut coord = Coordinator::with_engine(e.clone(), cfg).unwrap();
+            let (report, results) = coord.run_workload(reqs).unwrap();
+            outs.push(results.into_iter().map(|r| r.tokens).collect());
+            syncs.push(report.sync_rounds);
+            if fuse {
+                assert!(
+                    report.accept.fused_rounds > 0,
+                    "4 concurrent sequences must actually fuse ({policy:?})"
+                );
+            }
+        }
+        assert_eq!(outs[0], outs[1], "fused rounds diverged from solo rounds ({policy:?})");
+        assert!(
+            syncs[1] < syncs[0],
+            "fusing must reduce sync rounds: {} vs {} ({policy:?})",
+            syncs[1],
+            syncs[0]
+        );
+    }
+}
+
+#[test]
 fn harness_accuracy_protocol() {
     common::require_artifacts!();
     let e = engine();

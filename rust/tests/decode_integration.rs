@@ -236,8 +236,10 @@ fn real_interleaved_with_predraft_matches_sim_at_temperature() {
 }
 
 #[test]
-fn real_cluster_rejects_adaptive_controllers() {
+fn real_serve_one_rejects_adaptive_controllers() {
     common::require_artifacts!();
+    // serve_one stays sequential-and-static by design; adaptive
+    // controllers run on serve_interleaved (below) or the coordinator.
     let mut cfg = deploy(Policy::Dsd, 1.0, 2);
     cfg.decode.controller = dsd::control::ControllerKind::CostOptimal;
     let mut real = RealCluster::launch(
@@ -251,9 +253,73 @@ fn real_cluster_rejects_adaptive_controllers() {
         .serve_one(0, &[1, 2, 3], &cfg.decode)
         .err()
         .map(|e| e.to_string())
-        .expect("adaptive controller must be rejected on the real cluster");
+        .expect("serve_one must reject adaptive controllers");
     assert!(err.contains("static controller"), "{err}");
     real.shutdown().unwrap();
+}
+
+#[test]
+fn real_interleaved_adaptive_controllers_match_sim() {
+    common::require_artifacts!();
+    // The lifted restriction (ROADMAP leftover from the controller PR):
+    // serve_interleaved now runs aimd / cost-optimal, carrying one
+    // SeqController per run fed the same committed-outcome and
+    // bonus-guess observations as the simulated engine. With matching
+    // link settings and fusion off (the thread driver prices and runs
+    // solo rounds), the decision streams — and the committed token
+    // streams — must be byte-identical to the coordinator at sampling
+    // temperature across an interleaved multi-request batch.
+    let e = engine();
+    let prompts: Vec<(u64, Vec<i32>)> = vec![
+        (0, vec![42, 43, 44, 45, 46, 47]),
+        (1, vec![7, 8, 9, 10]),
+        (2, vec![100, 200, 300, 400, 500]),
+    ];
+    for kind in [
+        dsd::control::ControllerKind::Aimd,
+        dsd::control::ControllerKind::CostOptimal,
+    ] {
+        let mut cfg = deploy(Policy::Dsd, 1.0, 2);
+        cfg.max_batch = 3;
+        cfg.fuse = false; // the real driver runs per-sequence rounds
+        cfg.decode.seed = cfg.seed;
+        cfg.decode.controller = kind;
+        cfg.decode.max_new_tokens = 16;
+
+        let mut coord = Coordinator::with_engine(e.clone(), cfg.clone()).unwrap();
+        let reqs: Vec<Request> = prompts
+            .iter()
+            .map(|(id, p)| Request {
+                id: *id,
+                prompt: p.clone(),
+                max_new_tokens: cfg.decode.max_new_tokens,
+                arrival_ns: 0,
+            })
+            .collect();
+        let (_, sim_results) = coord.run_workload(reqs).unwrap();
+
+        // the real launch link must mirror the deploy link so the
+        // controllers' cost models agree (link_ms 1.0, link_gbps 1.0)
+        let mut real = RealCluster::launch(
+            artifacts().to_str().unwrap(),
+            2,
+            LinkModel::wan(cfg.link_ms, cfg.link_gbps),
+            "d6_s000",
+        )
+        .unwrap();
+        let real_results = real.serve_interleaved(&prompts, &cfg.decode, 2).unwrap();
+        real.shutdown().unwrap();
+
+        assert_eq!(sim_results.len(), real_results.len());
+        for (s, r) in sim_results.iter().zip(&real_results) {
+            assert_eq!(s.id, r.id);
+            assert_eq!(
+                s.tokens, r.tokens,
+                "adaptive ({kind:?}) real deployment diverged from sim for request {}",
+                s.id
+            );
+        }
+    }
 }
 
 #[test]

@@ -1,0 +1,150 @@
+//! The fused-round tentpole differential (engine-free).
+//!
+//! The hard invariant that makes fused multi-sequence verification a
+//! refactor rather than a fork: **committed token streams are
+//! byte-identical across fused group compositions** — serving B
+//! sequences with solo rounds (`group_cap = 1`, the legacy path), fully
+//! fused rounds (`group_cap = B`), or any partition in between commits
+//! exactly the same tokens per sequence, at temp 0 and at sampling
+//! temperature, with the speculate-ahead scheduler on or off, under the
+//! static and the adaptive controllers. Grouping moves only simulated
+//! time: one cross-node sync per group instead of per sequence.
+//!
+//! Holds because every stochastic draw is position-keyed per sequence
+//! (`util::rng::uniform_at`) and controller decisions are pure functions
+//! of per-sequence committed outcomes (`control_props.rs`); the
+//! engine-backed twin of this differential runs in
+//! `coordinator_integration.rs`.
+
+use dsd::control::ControllerKind;
+use dsd::coordinator::{OracleConfig, OracleFleet};
+use dsd::model::VerifyKnobs;
+
+const PROMPT: [i32; 4] = [3, 141, 59, 26];
+const BATCH: usize = 4;
+const TOKENS: usize = 32;
+const BUDGET: usize = 64;
+
+fn knobs_for(policy: &str, temp: f32) -> VerifyKnobs {
+    match policy {
+        "eagle3" => VerifyKnobs::strict(temp),
+        _ => VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp, adaptive: true },
+    }
+}
+
+/// Serve the fleet at one group cap; return (per-member generated
+/// streams, wall-clock finish, sync rounds).
+fn serve_at(base: &OracleConfig, cap: usize) -> (Vec<Vec<i32>>, u64, u64) {
+    let mut fleet = OracleFleet::new(base, BATCH, &PROMPT).unwrap();
+    let _ = fleet.serve(TOKENS, cap, BUDGET);
+    let streams = (0..BATCH).map(|s| fleet.generated(s).to_vec()).collect();
+    let finish = (0..BATCH).map(|s| fleet.seqs[s].finish_time()).max().unwrap();
+    (streams, finish, fleet.sim.stats.sync_rounds)
+}
+
+#[test]
+fn committed_streams_are_invariant_to_group_composition() {
+    let mut checked = 0usize;
+    for kind in [ControllerKind::Static, ControllerKind::CostOptimal] {
+        for policy in ["dsd", "eagle3"] {
+            for temp in [0.0f32, 1.0] {
+                for overlap in [false, true] {
+                    for link_ms in [2.0f64, 15.0] {
+                        let base = OracleConfig {
+                            gamma: 3,
+                            temp,
+                            knobs: knobs_for(policy, temp),
+                            controller: kind,
+                            overlap,
+                            seed: 0xFA5E ^ (link_ms as u64),
+                            link_ms,
+                            ..Default::default()
+                        };
+                        let (solo, _, solo_syncs) = serve_at(&base, 1);
+                        for cap in [2usize, 3, BATCH] {
+                            let (fused, _, fused_syncs) = serve_at(&base, cap);
+                            assert_eq!(
+                                solo, fused,
+                                "B-invariance broke: cap {cap} vs 1 ({kind:?} {policy} \
+                                 temp {temp} overlap {overlap} link {link_ms})"
+                            );
+                            assert!(
+                                fused_syncs < solo_syncs,
+                                "fusing must reduce sync rounds: {fused_syncs} vs \
+                                 {solo_syncs} (cap {cap})"
+                            );
+                            checked += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked >= 90, "sweep shrank — differential lost coverage ({checked})");
+}
+
+#[test]
+fn members_match_an_independent_solo_decoder() {
+    // A fleet member's stream must equal a standalone OracleChainDecoder
+    // with the same (seed, seq_id) — fusion must not leak one sequence's
+    // state into another's commits.
+    use dsd::coordinator::OracleChainDecoder;
+    let base = OracleConfig {
+        gamma: 3,
+        knobs: knobs_for("dsd", 1.0),
+        seed: 909,
+        link_ms: 15.0,
+        ..Default::default()
+    };
+    let mut fleet = OracleFleet::new(&base, BATCH, &PROMPT).unwrap();
+    let _ = fleet.serve(TOKENS, BATCH, BUDGET);
+    for s in 0..BATCH {
+        let cfg = OracleConfig { seq_id: s as u64, ..base.clone() };
+        let mut solo = OracleChainDecoder::new(cfg, &PROMPT).unwrap();
+        while solo.committed.len() - PROMPT.len() < TOKENS {
+            solo.round();
+        }
+        assert_eq!(
+            &solo.committed[PROMPT.len()..],
+            fleet.generated(s),
+            "fleet member {s} diverged from its standalone twin"
+        );
+    }
+}
+
+#[test]
+fn fused_rounds_amortize_channel_time_under_load() {
+    // The wall-clock mechanism, isolated with B well above N (where one
+    // generation of solo rounds costs each hop B·t1 of channel time but
+    // a fused wave's round trip costs only ~N·t1): on a 15ms chain the
+    // fused fleet must be decisively faster; on near-zero-latency links
+    // the win must vanish (fusing trades cross-round pipelining for
+    // channel efficiency — it cannot conjure compute out of thin air).
+    let heavy_batch = 8usize;
+    let base = OracleConfig {
+        gamma: 2,
+        corr: 0.85,
+        knobs: knobs_for("dsd", 1.0),
+        seed: 4242,
+        link_ms: 15.0,
+        ..Default::default()
+    };
+    let serve = |cfg: &OracleConfig, cap: usize| {
+        let mut fleet = OracleFleet::new(cfg, heavy_batch, &PROMPT).unwrap();
+        let _ = fleet.serve(TOKENS, cap, BUDGET);
+        (0..heavy_batch).map(|s| fleet.seqs[s].finish_time()).max().unwrap()
+    };
+    let solo_finish = serve(&base, 1);
+    let fused_finish = serve(&base, heavy_batch);
+    assert!(
+        (fused_finish as f64) < solo_finish as f64 * 0.75,
+        "fused {fused_finish} vs solo {solo_finish}: expected a >25% wall-clock win at 15ms"
+    );
+    let fast = OracleConfig { link_ms: 0.1, ..base };
+    let solo_fast = serve(&fast, 1);
+    let fused_fast = serve(&fast, heavy_batch);
+    assert!(
+        (fused_fast as f64) > solo_fast as f64 * 0.5,
+        "at negligible latency fusing must not conjure large wins: {fused_fast} vs {solo_fast}"
+    );
+}

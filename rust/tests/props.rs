@@ -259,7 +259,12 @@ fn prop_batcher_always_progresses() {
         let now = rng.below(1000);
         let n_active = rng.below(5) as usize;
         let active: Vec<SeqView> = (0..n_active)
-            .map(|idx| SeqView { idx, ready_at: rng.below(2000), prefilled: rng.f32() < 0.5 })
+            .map(|idx| SeqView {
+                idx,
+                ready_at: rng.below(2000),
+                prefilled: rng.f32() < 0.5,
+                window: 1 + rng.below(16) as usize,
+            })
             .collect();
         let next_arrival = if rng.f32() < 0.5 { Some(rng.below(2000)) } else { None };
         let slots_free = rng.f32() < 0.5;
@@ -275,9 +280,74 @@ fn prop_batcher_always_progresses() {
                 let min = active.iter().map(|s| s.ready_at).min().unwrap();
                 assert_eq!(active[idx].ready_at, min);
             }
+            Action::RunGroup { .. } => {
+                unreachable!("next_action never fuses (next_action_fused does)");
+            }
             Action::WaitUntil { at } => {
                 assert!(active.is_empty());
                 assert!(at >= now);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fused_batcher_always_progresses_and_respects_bounds() {
+    // The fused selector inherits the no-deadlock property and adds the
+    // packing bounds: member count <= max_fuse, summed windows <= budget
+    // (head member exempt), members ordered earliest-ready-first, all
+    // members prefilled and distinct.
+    forall2(300, |rng| {
+        let now = rng.below(1000);
+        let n_active = rng.below(6) as usize;
+        let active: Vec<SeqView> = (0..n_active)
+            .map(|idx| SeqView {
+                idx,
+                ready_at: rng.below(2000),
+                prefilled: rng.f32() < 0.7,
+                window: 1 + rng.below(16) as usize,
+            })
+            .collect();
+        let next_arrival = if rng.f32() < 0.5 { Some(rng.below(2000)) } else { None };
+        let slots_free = rng.f32() < 0.5;
+        let max_fuse = 1 + rng.below(6) as usize;
+        let budget = 4 + rng.below(40) as usize;
+        match dsd::coordinator::next_action_fused(
+            now,
+            next_arrival,
+            slots_free,
+            &active,
+            max_fuse,
+            budget,
+        ) {
+            Action::Done => assert!(active.is_empty() && next_arrival.is_none()),
+            Action::Admit => assert!(slots_free && next_arrival.is_some()),
+            Action::Run { idx } => assert!(idx < n_active),
+            Action::WaitUntil { at } => {
+                assert!(active.is_empty());
+                assert!(at >= now);
+            }
+            Action::RunGroup { idxs } => {
+                assert!(max_fuse > 1);
+                assert!(idxs.len() >= 2 && idxs.len() <= max_fuse);
+                let mut seen = std::collections::HashSet::new();
+                let mut used = 0usize;
+                let mut last_key = (0u64, 0usize);
+                for (k, &idx) in idxs.iter().enumerate() {
+                    assert!(idx < n_active);
+                    assert!(seen.insert(idx), "duplicate member {idx}");
+                    let s = &active[idx];
+                    assert!(s.prefilled, "groups contain decode-ready members only");
+                    let key = (s.ready_at, s.idx);
+                    if k > 0 {
+                        assert!(key > last_key, "members must be earliest-ready-first");
+                    }
+                    last_key = key;
+                    if k > 0 {
+                        assert!(used + s.window <= budget, "budget exceeded");
+                    }
+                    used += s.window;
+                }
             }
         }
     });
