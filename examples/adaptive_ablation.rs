@@ -13,7 +13,7 @@ use dsd::util::table::{fnum, Table};
 
 fn main() -> anyhow::Result<()> {
     let engine = Rc::new(Engine::from_dir("artifacts")?);
-    let m = engine.manifest().model.clone();
+    let m = engine.manifest().model;
     let model = ShardedModel::new(engine.clone(), 2, "d4_s000")?;
     let gamma = 8;
     let mut rng = Rng::new(11);
@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
         .collect();
     use dsd::model::StageInput;
-    let mut x = StageInput::Tokens(padded.clone());
+    let mut x = StageInput::Tokens(&padded);
     let mut prefill_logits = Vec::new();
     for (i, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(m.prefill_window, &x, &mut stage_caches[i], 0)?;
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     // target logits over the window
     let mut window = vec![committed[i]];
     window.extend_from_slice(&d_tokens);
-    let mut x = StageInput::Tokens(window);
+    let mut x = StageInput::Tokens(&window);
     let mut t_logits = Vec::new();
     for (si, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(gamma + 1, &x, &mut stage_caches[si], i)?;
@@ -82,15 +82,7 @@ fn main() -> anyhow::Result<()> {
     for tau in [0.0f32, 0.3, 0.6] {
         let knobs =
             VerifyKnobs { tau, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
-        let (out, _) = model.verify.run(
-            gamma,
-            t_logits.clone(),
-            d_logits.clone(),
-            d_tokens.clone(),
-            ua.clone(),
-            us.clone(),
-            knobs,
-        )?;
+        let (out, _) = model.verify.run(gamma, &t_logits, &d_logits, &d_tokens, &ua, &us, knobs)?;
         let mut t = Table::new(
             format!("τ = {tau} → accepted {} of {gamma}", out.accepted),
             &["pos", "draft tok", "key?", "H_d", "H_t", "|Pt-Pd|", "NormMatch", "P(accept)"],

@@ -21,7 +21,7 @@ use dsd::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let engine = Rc::new(Engine::from_dir(dir)?);
-    let dims = engine.manifest().model.clone();
+    let dims = engine.manifest().model;
 
     println!("# Figure 1 — roofline view (TPU-like accelerator model)");
     let roof = TpuLikeRoofline::default();
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         let mut total_ns = 0u64;
         let iters = 5;
         for it in 0..iters + 1 {
-            let mut x = StageInput::Tokens(tokens.clone());
+            let mut x = StageInput::Tokens(&tokens);
             let mut pass_ns = 0;
             for (i, stage) in model.stages.iter().enumerate() {
                 let (o, ns) = stage.run(w, &x, &mut caches[i], 0)?;

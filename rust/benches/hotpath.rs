@@ -1,91 +1,381 @@
 //! Hot-path micro-benchmarks (the criterion substitute; see Cargo.toml's
 //! offline note). These are the numbers the performance pass iterates on
-//! — EXPERIMENTS.md §Perf records before/after per change.
+//! — EXPERIMENTS.md §Perf records before/after per change, and the
+//! `legacy` module below keeps the pre-scratch kernels alive so every
+//! run measures old vs new side by side instead of trusting stale
+//! numbers.
 //!
 //! Run: `cargo bench --bench hotpath`
-
-use std::rc::Rc;
+//! With allocation counting (CI smoke, **blocking**):
+//!   `cargo bench --bench hotpath --features alloc-count`
+//!
+//! Under `alloc-count` every result line carries allocs/iter, and the
+//! bench exits nonzero if a steady-state engine-free decode round
+//! (chain, overlap-on chain, fused group, cost-optimal chain) performs
+//! more heap allocations than its budget — which is **zero** (see
+//! tests/alloc_budget.rs for the per-case pins and EXPERIMENTS.md for
+//! the sites deliberately left out of budget). Engine-backed sections
+//! run only when `artifacts/` exists; a bare checkout measures the
+//! engine-free substrate and the oracle round loop.
+//!
+//! Always writes `BENCH_hotpath.json` (uploaded as a CI artifact with
+//! the other `BENCH_*.json` files) before exiting, pass or fail.
 
 use dsd::cluster::{LinkModel, PipelineSim, Topology};
-use dsd::coordinator::{next_action, SeqView};
-use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs};
+use dsd::control::ControllerKind;
+use dsd::coordinator::{
+    next_action, OracleChainDecoder, OracleConfig, OracleFleet, OracleRound, SeqView,
+};
+use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs, VerifyOutcome};
 use dsd::runtime::Engine;
-use dsd::sampling::softmax;
+use dsd::sampling::{
+    sample_logits_into, sample_logits_with, softmax, top_k_filter_with, top_p_filter_with,
+};
 use dsd::spec::host_verify;
-use dsd::util::bench::bench;
+use dsd::spec::reference::host_verify_with;
+use dsd::util::alloc_counter;
+use dsd::util::bench::{bench, write_bench_json, BenchResult};
+use dsd::util::json::Value;
 use dsd::util::rng::Rng;
+use dsd::util::scratch::VerifyScratch;
+
+/// The pre-scratch kernels, kept verbatim so "before" is measured in the
+/// same binary as "after" (EXPERIMENTS.md §Perf) — reference only, the
+/// library no longer ships them.
+mod legacy {
+    use dsd::model::{VerifyKnobs, VerifyOutcome};
+    use dsd::sampling::{argmax, overlap, sample_cdf, softmax};
+
+    const EPS: f32 = 1e-9;
+
+    pub fn top_k_filter(logits: &mut [f32], k: usize) {
+        if k == 0 || k >= logits.len() {
+            return;
+        }
+        let mut sorted: Vec<f32> = logits.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = sorted[k - 1];
+        let mut kept = 0;
+        for x in logits.iter_mut() {
+            if *x >= threshold && kept < k {
+                kept += 1;
+            } else {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+
+    pub fn top_p_filter(probs: &mut [f32], p: f32) {
+        if p >= 1.0 {
+            return;
+        }
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut cum = 0f32;
+        let mut cut = probs.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            cum += probs[i];
+            if cum >= p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let keep: std::collections::HashSet<usize> = idx[..cut].iter().copied().collect();
+        let mut total = 0f32;
+        for (i, q) in probs.iter_mut().enumerate() {
+            if keep.contains(&i) {
+                total += *q;
+            } else {
+                *q = 0.0;
+            }
+        }
+        if total > 0.0 {
+            for q in probs.iter_mut() {
+                *q /= total;
+            }
+        }
+    }
+
+    /// The per-row-allocating host verifier (lt/ld/log_mix/mix `Vec`s
+    /// per slot, `Vec<Vec<f32>>` mix/pd row stores).
+    #[allow(clippy::too_many_arguments)]
+    pub fn host_verify(
+        gamma: usize,
+        vocab: usize,
+        t_logits: &[f32],
+        d_logits: &[f32],
+        d_tokens: &[i32],
+        u_accept: &[f32],
+        u_sample: &[f32],
+        knobs: VerifyKnobs,
+    ) -> VerifyOutcome {
+        let greedy = knobs.temp <= 0.0;
+        let inv_temp = if greedy { 1.0 } else { 1.0 / knobs.temp.max(EPS) };
+        let mut key_flags = Vec::with_capacity(gamma);
+        let mut stats = Vec::with_capacity(gamma * 6);
+        let mut tokens: Vec<i32> = Vec::with_capacity(gamma + 1);
+        let mut accepted = 0usize;
+        let mut rejected = false;
+        let mut mix_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        let mut pd_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
+        let mut p_t = Vec::new();
+        let mut p_d = Vec::new();
+        for j in 0..gamma {
+            let y = d_tokens[j] as usize;
+            let lt: Vec<f32> =
+                t_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp).collect();
+            let ld: Vec<f32> =
+                d_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp).collect();
+            softmax(&lt, &mut p_t);
+            softmax(&ld, &mut p_d);
+            let pt_y = p_t[y];
+            let pd_y = p_d[y];
+            let h_d = -(pd_y + EPS).ln();
+            let h_t = -(pt_y + EPS).ln();
+            let normmatch = overlap(&p_t, &p_d);
+            let is_key = knobs.adaptive
+                && (h_d / (h_t + EPS) > knobs.lam1
+                    || (pt_y - pd_y).abs() > knobs.lam2
+                    || normmatch < knobs.lam3);
+            let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
+            let log_mix: Vec<f32> = p_t
+                .iter()
+                .zip(&p_d)
+                .map(|(&a, &b)| (1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln())
+                .collect();
+            let mut mix = Vec::new();
+            softmax(&log_mix, &mut mix);
+            let (accept, accept_prob) = if greedy {
+                let blend: Vec<f32> = t_logits[j * vocab..(j + 1) * vocab]
+                    .iter()
+                    .zip(&d_logits[j * vocab..(j + 1) * vocab])
+                    .map(|(&a, &b)| (1.0 - tau_j) * a + tau_j * b)
+                    .collect();
+                let ok = argmax(&blend) == y;
+                (ok, if ok { 1.0 } else { 0.0 })
+            } else {
+                let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+                (u_accept[j] < ratio, ratio)
+            };
+            key_flags.push(is_key);
+            stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+            mix_rows.push(mix);
+            pd_rows.push(p_d.clone());
+            if accept && !rejected {
+                tokens.push(y as i32);
+                accepted += 1;
+            } else if !rejected {
+                rejected = true;
+            }
+        }
+        let corr = if accepted < gamma {
+            if greedy {
+                argmax(&t_logits[accepted * vocab..(accepted + 1) * vocab]) as i32
+            } else {
+                let mix = &mix_rows[accepted];
+                let pd = &pd_rows[accepted];
+                let mut resid: Vec<f32> =
+                    mix.iter().zip(pd).map(|(&m, &p)| (m - p).max(0.0)).collect();
+                let mass: f32 = resid.iter().sum();
+                if mass > EPS {
+                    resid.iter_mut().for_each(|r| *r /= mass);
+                    sample_cdf(&resid, u_sample[accepted]) as i32
+                } else {
+                    sample_cdf(mix, u_sample[accepted]) as i32
+                }
+            }
+        } else if greedy {
+            argmax(&t_logits[gamma * vocab..(gamma + 1) * vocab]) as i32
+        } else {
+            let lt: Vec<f32> = t_logits[gamma * vocab..(gamma + 1) * vocab]
+                .iter()
+                .map(|&x| x * inv_temp)
+                .collect();
+            let mut bonus = Vec::new();
+            softmax(&lt, &mut bonus);
+            sample_cdf(&bonus, u_sample[gamma]) as i32
+        };
+        tokens.push(corr);
+        VerifyOutcome { tokens, accepted, key_flags, stats }
+    }
+}
+
+/// Mean allocation events per call of `f` across `iters` runs — the one
+/// measurement protocol behind every round-budget gate below. `None`
+/// when counting is compiled out.
+fn allocs_per<F: FnMut()>(iters: u64, mut f: F) -> Option<f64> {
+    if !alloc_counter::enabled() {
+        return None;
+    }
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    Some(counts.allocs as f64 / iters as f64)
+}
 
 fn main() -> anyhow::Result<()> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = Rc::new(Engine::from_dir(dir)?);
-    let dims = engine.manifest().model.clone();
-    let vocab = dims.vocab;
     println!("# hot-path micro-benchmarks\n");
-
-    // --- engine stage calls per window size ---
-    let model = ShardedModel::new(engine.clone(), 2, "d6_s000")?;
-    model.warmup(&[4, 8])?;
-    let mut rng = Rng::new(1);
-    for w in [1usize, 5, 9, 64] {
-        let tokens: Vec<i32> = (0..w).map(|_| rng.below(vocab as u64) as i32).collect();
-        let mut cache = {
-            let [l, s, h, d] = model.stage_dims()[0];
-            KvCache::new(l, s, h, d)
-        };
-        let stage = &model.stages[0];
-        let r = bench(&format!("stage first4 w={w}"), 3, 20, || {
-            let _ = stage.run(w, &StageInput::Tokens(tokens.clone()), &mut cache, 0).unwrap();
-        });
+    let mut results: Vec<BenchResult> = Vec::new();
+    fn record(r: BenchResult, results: &mut Vec<BenchResult>) {
         println!("{}", r.line());
+        results.push(r);
     }
 
-    // --- draft step ---
-    {
-        let [l, s, h, d] = model.draft.cache_dims();
-        let mut cache = KvCache::new(l, s, h, d);
-        let r = bench("draft6 step", 3, 20, || {
-            let _ = model.draft.step(7, &mut cache, 0, 1.0, 0.5).unwrap();
-        });
-        println!("{}", r.line());
+    // ---------- engine-backed sections (skip on a bare checkout) ----------
+    match Engine::from_dir(&dir) {
+        Err(e) => {
+            println!("(artifacts/ not loadable — engine sections skipped: {e})\n");
+        }
+        Ok(engine) => {
+            let engine = std::rc::Rc::new(engine);
+            let dims = engine.manifest().model;
+            let vocab = dims.vocab;
+            let model = ShardedModel::new(engine.clone(), 2, "d6_s000")?;
+            model.warmup(&[4, 8])?;
+            let mut rng = Rng::new(1);
+            for w in [1usize, 5, 9, 64] {
+                let tokens: Vec<i32> = (0..w).map(|_| rng.below(vocab as u64) as i32).collect();
+                let mut cache = {
+                    let [l, s, h, d] = model.stage_dims()[0];
+                    KvCache::new(l, s, h, d)
+                };
+                let stage = &model.stages[0];
+                let r = bench(&format!("stage first4 w={w}"), 3, 20, || {
+                    let _ = stage.run(w, &StageInput::Tokens(&tokens), &mut cache, 0).unwrap();
+                });
+                record(r, &mut results);
+            }
+
+            {
+                let [l, s, h, d] = model.draft.cache_dims();
+                let mut cache = KvCache::new(l, s, h, d);
+                let r = bench("draft6 step", 3, 20, || {
+                    let _ = model.draft.step(7, &mut cache, 0, 1.0, 0.5).unwrap();
+                });
+                record(r, &mut results);
+            }
+
+            // verify kernel (engine): slice API — no caller-side clones
+            let gamma = 8;
+            let mut rng = Rng::new(2);
+            let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32).collect();
+            let d: Vec<f32> = (0..gamma * vocab).map(|_| rng.normal() as f32).collect();
+            let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
+            let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+            let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+            let knobs = VerifyKnobs {
+                tau: 0.2,
+                lam1: 4.0,
+                lam2: 0.4,
+                lam3: 0.25,
+                temp: 1.0,
+                adaptive: true,
+            };
+            let r = bench("verify kernel g=8 (engine)", 3, 30, || {
+                let _ = model.verify.run(gamma, &t, &d, &toks, &ua, &us, knobs).unwrap();
+            });
+            record(r, &mut results);
+
+            let s = engine.stats();
+            println!(
+                "engine totals: {} execs, exec {:.1}ms, upload {:.1}ms ({}MB), \
+                 download {:.1}ms ({}MB)\n",
+                s.executions,
+                s.exec_nanos as f64 / 1e6,
+                s.upload_nanos as f64 / 1e6,
+                s.bytes_uploaded / 1_000_000,
+                s.download_nanos as f64 / 1e6,
+                s.bytes_downloaded / 1_000_000,
+            );
+        }
     }
 
-    // --- verify kernel (engine) vs host reference ---
-    let gamma = 8;
+    // ---------- engine-free kernels: legacy vs scratch ----------
+    let vocab = 512usize;
+    let gamma = 8usize;
     let mut rng = Rng::new(2);
+    let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() as f32).collect();
     let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32).collect();
-    let d: Vec<f32> = (0..gamma * vocab).map(|_| rng.normal() as f32).collect();
+    let d: Vec<f32> = (0..gamma * vocab)
+        .enumerate()
+        .map(|(i, _)| 0.7 * t[i] + 0.3 * rng.normal() as f32)
+        .collect();
     let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
     let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
     let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
     let knobs =
         VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
-    let r = bench("verify kernel g=8 (engine)", 3, 30, || {
-        let _ = model
-            .verify
-            .run(gamma, t.clone(), d.clone(), toks.clone(), ua.clone(), us.clone(), knobs)
-            .unwrap();
-    });
-    println!("{}", r.line());
-    let r = bench("verify host reference g=8", 3, 30, || {
-        let _ = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
-    });
-    println!("{}", r.line());
 
-    // --- pure substrate paths ---
-    let logits: Vec<f32> = (0..vocab).map(|_| rng.normal() as f32).collect();
     let mut out = Vec::new();
     let r = bench("softmax 512", 10, 1000, || {
         let _ = softmax(&logits, &mut out);
     });
-    println!("{}", r.line());
+    record(r, &mut results);
 
+    let r = bench("sample_logits legacy (alloc)", 10, 1000, || {
+        let _ = sample_logits_with(&logits, 1.0, 0.37);
+    });
+    record(r, &mut results);
+    let mut probs = Vec::new();
+    let r = bench("sample_logits scratch", 10, 1000, || {
+        let _ = sample_logits_into(&logits, 1.0, 0.37, &mut probs);
+    });
+    record(r, &mut results);
+
+    let mut work = logits.clone();
+    let r = bench("top_k legacy clone+sort", 10, 1000, || {
+        work.copy_from_slice(&logits);
+        legacy::top_k_filter(&mut work, 50);
+    });
+    record(r, &mut results);
+    let mut sel = Vec::new();
+    let r = bench("top_k select_nth scratch", 10, 1000, || {
+        work.copy_from_slice(&logits);
+        top_k_filter_with(&mut work, 50, &mut sel);
+    });
+    record(r, &mut results);
+
+    let mut base_probs = Vec::new();
+    softmax(&logits, &mut base_probs);
+    let mut workp = base_probs.clone();
+    let r = bench("top_p legacy hashset", 10, 1000, || {
+        workp.copy_from_slice(&base_probs);
+        legacy::top_p_filter(&mut workp, 0.9);
+    });
+    record(r, &mut results);
+    let mut idx = Vec::new();
+    let r = bench("top_p mask scratch", 10, 1000, || {
+        workp.copy_from_slice(&base_probs);
+        top_p_filter_with(&mut workp, 0.9, &mut idx);
+    });
+    record(r, &mut results);
+
+    let r = bench("host_verify legacy g=8 (alloc)", 3, 200, || {
+        let _ = legacy::host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+    });
+    record(r, &mut results);
+    let r = bench("host_verify wrapper g=8", 3, 200, || {
+        let _ = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+    });
+    record(r, &mut results);
+    let mut vs = VerifyScratch::default();
+    let mut vout = VerifyOutcome::default();
+    let r = bench("host_verify scratch g=8", 3, 200, || {
+        host_verify_with(gamma, vocab, &t, &d, &toks, &ua, &us, knobs, &mut vs, &mut vout);
+    });
+    record(r, &mut results);
+
+    // ---------- substrate ----------
     let topo = Topology::uniform(8, LinkModel::wan(15.0, 1.0));
     let mut sim = PipelineSim::new(topo, 3);
     let stage = vec![500_000u64; 8];
     let r = bench("sim pipeline_pass N=8", 10, 1000, || {
         let _ = sim.pipeline_pass(0, &stage, 4608, 18432, true);
     });
-    println!("{}", r.line());
+    record(r, &mut results);
 
     let views: Vec<SeqView> = (0..16)
         .map(|idx| SeqView {
@@ -98,18 +388,117 @@ fn main() -> anyhow::Result<()> {
     let r = bench("batcher next_action 16 seqs", 10, 10_000, || {
         let _ = next_action(5, Some(100), true, &views);
     });
-    println!("{}", r.line());
+    record(r, &mut results);
 
-    // --- engine upload/download accounting summary ---
-    let s = engine.stats();
-    println!(
-        "\nengine totals: {} execs, exec {:.1}ms, upload {:.1}ms ({}MB), download {:.1}ms ({}MB)",
-        s.executions,
-        s.exec_nanos as f64 / 1e6,
-        s.upload_nanos as f64 / 1e6,
-        s.bytes_uploaded / 1_000_000,
-        s.download_nanos as f64 / 1e6,
-        s.bytes_downloaded / 1_000_000,
-    );
+    // ---------- steady-state decode rounds (engine-free oracle) ----------
+    const WARMUP_ROUNDS: usize = 40;
+    const ALLOC_ROUNDS: u64 = 64;
+    let prompt = [2i32, 7, 1, 8, 2, 8];
+    let mut budget_violations: Vec<String> = Vec::new();
+    let mut round_cases: Vec<(String, f64, Option<f64>)> = Vec::new();
+
+    for (label, overlap, controller) in [
+        ("chain round (overlap off, static)", false, ControllerKind::Static),
+        ("chain round (overlap on, static)", true, ControllerKind::Static),
+        ("chain round (overlap on, cost-optimal)", true, ControllerKind::CostOptimal),
+    ] {
+        let cfg = OracleConfig { overlap, controller, seed: 11, ..Default::default() };
+        let mut dec = OracleChainDecoder::new(cfg, &prompt)?;
+        let mut buf = OracleRound::default();
+        for _ in 0..WARMUP_ROUNDS {
+            dec.round_into(&mut buf);
+        }
+        dec.warm_capacity(64 * 1024);
+        buf.committed.reserve(64);
+        let allocs = allocs_per(ALLOC_ROUNDS, || dec.round_into(&mut buf));
+        let r = bench(label, 10, 300, || {
+            dec.round_into(&mut buf);
+        });
+        println!("{}", r.line());
+        if let Some(a) = allocs {
+            if a > 0.0 {
+                budget_violations.push(format!("{label}: {a:.2} allocs/round (budget 0)"));
+            }
+        }
+        round_cases.push((label.to_string(), r.mean_ns, allocs));
+        results.push(r);
+    }
+
+    // fused group round (B members, ONE sync): allocs for the whole
+    // group round, budget 0
+    {
+        let base = OracleConfig { seed: 13, ..Default::default() };
+        let batch = 4usize;
+        let mut fleet = OracleFleet::new(&base, batch, &prompt)?;
+        let horizon = 1_000_000usize; // never reached: rounds are driven manually
+        for _ in 0..WARMUP_ROUNDS {
+            fleet.serve_round(horizon, batch, 64);
+        }
+        fleet.warm_capacity(64 * 1024);
+        let label = format!("fused group round (B={batch})");
+        let allocs = allocs_per(ALLOC_ROUNDS, || {
+            fleet.serve_round(horizon, batch, 64);
+        });
+        let r = bench(&label, 10, 200, || {
+            fleet.serve_round(horizon, batch, 64);
+        });
+        println!("{}", r.line());
+        if let Some(a) = allocs {
+            if a > 0.0 {
+                budget_violations.push(format!("{label}: {a:.2} allocs/round (budget 0)"));
+            }
+        }
+        round_cases.push((label, r.mean_ns, allocs));
+        results.push(r);
+    }
+
+    // ---------- machine-readable output + budget gate ----------
+    let kernel_objs: Vec<Value> = results
+        .iter()
+        .map(|r| {
+            let mut pairs: Vec<(&str, Value)> = vec![
+                ("name", r.name.as_str().into()),
+                ("mean_ns", r.mean_ns.into()),
+                ("p50_ns", r.p50_ns.into()),
+            ];
+            if let Some(a) = r.allocs_per_iter {
+                pairs.push(("allocs_per_iter", a.into()));
+            }
+            Value::obj(&pairs)
+        })
+        .collect();
+    let round_objs: Vec<Value> = round_cases
+        .iter()
+        .map(|(name, ns, allocs)| {
+            let mut pairs: Vec<(&str, Value)> =
+                vec![("name", name.as_str().into()), ("mean_ns", (*ns).into())];
+            if let Some(a) = allocs {
+                pairs.push(("allocs_per_round", (*a).into()));
+            }
+            Value::obj(&pairs)
+        })
+        .collect();
+    let fields: Vec<(&str, Value)> = vec![
+        ("bench", "hotpath".into()),
+        ("alloc_count_enabled", alloc_counter::enabled().into()),
+        ("alloc_budget_per_round", 0u64.into()),
+        ("kernels", kernel_objs.into()),
+        ("rounds", round_objs.into()),
+        ("budget_violations", (budget_violations.len() as u64).into()),
+    ];
+    let path = write_bench_json("hotpath", &Value::obj(&fields))?;
+    println!("\nwrote {}", path.display());
+
+    if !alloc_counter::enabled() {
+        println!("(alloc-count feature off — allocation budget not enforced this run)");
+    } else if budget_violations.is_empty() {
+        println!("allocation budget OK: every steady-state round at 0 allocs/round");
+    } else {
+        eprintln!("ALLOCATION BUDGET REGRESSION:");
+        for v in &budget_violations {
+            eprintln!("  {v}");
+        }
+        std::process::exit(1);
+    }
     Ok(())
 }

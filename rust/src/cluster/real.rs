@@ -63,7 +63,7 @@ fn worker_loop(
     tx: Sender<Wire>,
 ) -> Result<()> {
     let engine = std::rc::Rc::new(Engine::from_dir(&artifacts_dir)?);
-    let m = engine.manifest().model.clone();
+    let m = engine.manifest().model;
     let stage = StageExecutor::new(engine.clone(), spec);
     let mut caches: HashMap<u64, KvCache> = HashMap::new();
     let lps = stage.spec.lps;
@@ -171,7 +171,7 @@ impl RealCluster {
     }
 
     fn dims(&self) -> crate::runtime::ModelDims {
-        self.engine.manifest().model.clone()
+        self.engine.manifest().model
     }
 
     /// Controller specification for this deployment — the same
@@ -223,7 +223,7 @@ impl RealCluster {
         });
         let (out, _) = self
             .leader_stage
-            .run(w, &StageInput::Tokens(tokens.to_vec()), cache, pos)?;
+            .run(w, &StageInput::Tokens(tokens), cache, pos)?;
         self.to_next
             .send(Wire::Window {
                 seq,
@@ -363,7 +363,7 @@ impl RealCluster {
         };
         let (out, _) = self
             .verify
-            .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
+            .run_owned(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
         // draft frontier: rows valid through position i + min(k, γ-1)
         if let Some(entry) = self.draft_caches.get_mut(&id) {
             entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
@@ -598,7 +598,7 @@ impl RealCluster {
                 });
                 let (out, _) = self
                     .leader_stage
-                    .run(gamma + 1, &StageInput::Tokens(window), cache, i)?;
+                    .run(gamma + 1, &StageInput::Tokens(&window), cache, i)?;
                 self.to_next
                     .send(Wire::Window {
                         seq: run.id,
@@ -666,7 +666,7 @@ impl RealCluster {
             let knobs = cfg.knobs_with_tau(tau);
             let (out, _) = self
                 .verify
-                .run(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
+                .run_owned(gamma, t_logits, d_logits, d_tokens, u_accept, u_sample, knobs)?;
             if let Some(entry) = self.draft_caches.get_mut(&run.id) {
                 entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
             }

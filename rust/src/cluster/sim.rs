@@ -76,6 +76,9 @@ pub struct PipelineSim {
     compute_scale: Vec<f64>,
     rng: Rng,
     pub stats: SimStats,
+    /// Reusable per-stage compute buffer for [`Self::window_pass`] (the
+    /// steady-state round loop must not allocate — see util::scratch).
+    stage_scratch: Vec<Nanos>,
 }
 
 impl PipelineSim {
@@ -89,6 +92,7 @@ impl PipelineSim {
             compute_scale: vec![1.0; n],
             rng: Rng::new(seed),
             stats: SimStats::default(),
+            stage_scratch: Vec::new(),
         }
     }
 
@@ -204,14 +208,21 @@ impl PipelineSim {
         fwd_bytes_per_token: usize,
         ret_bytes_per_token: usize,
     ) -> PassTiming {
-        let stage: Vec<Nanos> = per_token_stage.iter().map(|&d| d * width as Nanos).collect();
-        self.pipeline_pass(
+        // Width-scale into the reusable stage buffer (taken out so the
+        // &mut self call below can borrow freely; allocation-free after
+        // the first pass).
+        let mut stage = std::mem::take(&mut self.stage_scratch);
+        stage.clear();
+        stage.extend(per_token_stage.iter().map(|&d| d * width as Nanos));
+        let timing = self.pipeline_pass(
             start,
             &stage,
             width * fwd_bytes_per_token,
             width * ret_bytes_per_token,
             true,
-        )
+        );
+        self.stage_scratch = stage;
+        timing
     }
 
     /// One **fused group pass**: the verify windows of several sequences

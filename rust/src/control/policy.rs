@@ -337,56 +337,80 @@ fn with_regret(
     d
 }
 
+/// Visit every (shape, γ) of the candidate grid in the canonical order
+/// (shapes outer, chain γs from `cfg.gammas`, tree shapes contribute
+/// their own depth) — shared by both [`grid_argmin`] passes so the
+/// iteration order, and with it the deterministic tie-break, is
+/// identical to the old materialized candidate list.
+fn for_each_shape_gamma<F: FnMut(DraftShape, usize)>(cfg: &ControlConfig, mut f: F) {
+    for &shape in &cfg.shapes {
+        match shape {
+            DraftShape::Chain => {
+                for &gamma in &cfg.gammas {
+                    f(shape, gamma);
+                }
+            }
+            // tree shapes fix their own depth; γ only labels it
+            DraftShape::Tree { depth, .. } => f(shape, depth),
+        }
+    }
+}
+
 /// Argmin over the γ × shape × τ grid, with the ε tie-break. Returns
 /// (best expected ns/token, winning decision with regret 0).
+///
+/// Allocation-free: runs on every `observe` of every controller (the
+/// static controller prices its regret here too), i.e. once per
+/// committed round — two passes over the grid instead of a materialized
+/// candidate vector. Candidate costs are pure functions of the inputs,
+/// so evaluating them twice changes nothing.
 fn grid_argmin(cfg: &ControlConfig, est: &AcceptanceEstimator, tau_measured: f32) -> (f64, Decision) {
     let alpha0 = est.rate();
     let key_rate = est.key_rate();
     let p_guess = est.guess_rate();
-    let mut candidates: Vec<(f64, usize, Decision)> = Vec::new();
-    for &shape in &cfg.shapes {
-        let gammas: Vec<usize> = match shape {
-            DraftShape::Chain => cfg.gammas.clone(),
-            // tree shapes fix their own depth; γ only labels it
-            DraftShape::Tree { depth, .. } => vec![depth],
-        };
-        for gamma in gammas {
-            for &tau in &cfg.taus {
-                let alpha = alpha_at_tau(alpha0, tau_measured, tau, key_rate);
-                let t = cfg.cost.expected_ns_per_token_at(shape, gamma, alpha, p_guess, cfg.fuse);
-                let nodes = shape.max_nodes_or(gamma);
-                candidates
-                    .push((t, nodes, Decision { gamma, shape, tau, regret_ns: 0 }));
+    let cost_of = |shape: DraftShape, gamma: usize, tau: f32| -> f64 {
+        let alpha = alpha_at_tau(alpha0, tau_measured, tau, key_rate);
+        cfg.cost.expected_ns_per_token_at(shape, gamma, alpha, p_guess, cfg.fuse)
+    };
+    // Pass 1: the grid optimum.
+    let mut min_t = f64::INFINITY;
+    for_each_shape_gamma(cfg, |shape, gamma| {
+        for &tau in &cfg.taus {
+            min_t = min_t.min(cost_of(shape, gamma, tau));
+        }
+    });
+    // Pass 2: among near-ties, prefer the smallest τ, then the narrowest
+    // window, then the smallest γ — deterministic regardless of grid
+    // order.
+    let mut winner: Option<(f64, usize, Decision)> = None;
+    for_each_shape_gamma(cfg, |shape, gamma| {
+        for &tau in &cfg.taus {
+            let t = cost_of(shape, gamma, tau);
+            if t > min_t * (1.0 + TIE_EPS) {
+                continue;
             }
-        }
-    }
-    let min_t = candidates.iter().map(|c| c.0).fold(f64::INFINITY, f64::min);
-    // among near-ties, prefer the smallest τ, then the narrowest window,
-    // then the smallest γ — deterministic regardless of grid order
-    let mut winner: Option<&(f64, usize, Decision)> = None;
-    for c in &candidates {
-        if c.0 > min_t * (1.0 + TIE_EPS) {
-            continue;
-        }
-        let better = match winner {
-            None => true,
-            Some(w) => {
-                let (ct, wt) = (c.2.tau, w.2.tau);
-                if (ct - wt).abs() > 1e-9 {
-                    ct < wt
-                } else if c.1 != w.1 {
-                    c.1 < w.1
-                } else if c.2.gamma != w.2.gamma {
-                    c.2.gamma < w.2.gamma
-                } else {
-                    false
+            let nodes = shape.max_nodes_or(gamma);
+            let c = (t, nodes, Decision { gamma, shape, tau, regret_ns: 0 });
+            let better = match &winner {
+                None => true,
+                Some(w) => {
+                    let (ct, wt) = (c.2.tau, w.2.tau);
+                    if (ct - wt).abs() > 1e-9 {
+                        ct < wt
+                    } else if c.1 != w.1 {
+                        c.1 < w.1
+                    } else if c.2.gamma != w.2.gamma {
+                        c.2.gamma < w.2.gamma
+                    } else {
+                        false
+                    }
                 }
+            };
+            if better {
+                winner = Some(c);
             }
-        };
-        if better {
-            winner = Some(c);
         }
-    }
+    });
     let w = winner.expect("grid is never empty");
     (min_t, w.2)
 }

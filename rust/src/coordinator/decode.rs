@@ -64,8 +64,6 @@
 //! simulated time. AR rounds and tree-shaped decisions fall back to
 //! solo rounds inside a group.
 
-use std::rc::Rc;
-
 use anyhow::{bail, Result};
 
 use crate::cluster::clock::Nanos;
@@ -79,9 +77,11 @@ use crate::coordinator::session::Sequence;
 use crate::model::{
     GroupSegment, GroupWindow, KvCache, KvPool, ShardedModel, StageInput, VerifyOutcome,
 };
-use crate::sampling::{argmax, sample_logits_with};
+use crate::runtime::ModelDims;
+use crate::sampling::{argmax, sample_logits_into};
 use crate::spec::tree::{build_tree, host_verify_tree, DraftShape, TreeVerifyResult};
 use crate::spec::{DecodeConfig, Policy, RoundRecord};
+use crate::util::scratch::RoundScratch;
 
 /// Timing + acceptance outcome of one round.
 #[derive(Debug, Clone, Default)]
@@ -173,6 +173,12 @@ pub struct DecodeEngine {
     /// Controller specification instantiated per sequence (see
     /// [`crate::control`]); `DecodeConfig::controller` picks the policy.
     pub ctrl: ControlConfig,
+    /// Model dims cached at construction — the round loop reads these
+    /// every phase and must not touch the manifest (hot path).
+    dims: ModelDims,
+    /// Reusable round buffers (uniform vectors, sampling rows) shared by
+    /// all sequences this engine drives — see `util::scratch`.
+    scratch: RoundScratch,
 }
 
 impl DecodeEngine {
@@ -180,7 +186,7 @@ impl DecodeEngine {
     /// info): fine for the static controller; `with_control` supplies
     /// the deployment-aware model for adaptive controllers.
     pub fn new(model: ShardedModel, cfg: DecodeConfig) -> DecodeEngine {
-        let m = model.engine.manifest().model.clone();
+        let m = model.engine.manifest().model;
         let cost = CostModel {
             nodes: model.n_shards().max(1),
             link_ns: 0,
@@ -206,7 +212,8 @@ impl DecodeEngine {
     /// Build with an explicit controller specification (the coordinator
     /// derives one from the deployment's topology and calibration).
     pub fn with_control(model: ShardedModel, cfg: DecodeConfig, ctrl: ControlConfig) -> DecodeEngine {
-        DecodeEngine { model, cfg, ctrl }
+        let dims = model.engine.manifest().model;
+        DecodeEngine { model, cfg, ctrl, dims, scratch: RoundScratch::default() }
     }
 
     /// The per-round decision for a sequence, creating its controller on
@@ -233,7 +240,7 @@ impl DecodeEngine {
                 seq.id
             );
         }
-        let m = self.model.engine.manifest().model.clone();
+        let m = self.dims;
         let w = m.prefill_window;
         if seq.committed.len() > w {
             bail!("prompt of {} exceeds prefill window {w}", seq.committed.len());
@@ -258,7 +265,7 @@ impl DecodeEngine {
         let row = &logits[(plen - 1) * m.vocab..plen * m.vocab];
         let sseed = stream_seed(self.cfg.seed, seq.id);
         let u = sample_uniform(sseed, plen - 1, 0);
-        let tok = sample_logits_with(row, self.cfg.temp, u) as i32;
+        let tok = sample_logits_into(row, self.cfg.temp, u, &mut self.scratch.probs) as i32;
         seq.commit(&[tok]);
         seq.ready_at = finish;
         Ok(())
@@ -291,15 +298,16 @@ impl DecodeEngine {
         pool: &mut KvPool,
         sim: &mut PipelineSim,
     ) -> Result<RoundOutcome> {
-        let m = self.model.engine.manifest().model.clone();
-        let window = vec![seq.last_token()];
+        let m = self.dims;
+        let window = [seq.last_token()];
         let pos = seq.last_index();
         let (logits, stage_times, fwd_bytes, ret_bytes) =
             self.pipeline_window(seq, pool, &window, pos, 1)?;
         let timing = sim.pipeline_pass(seq.ready_at, &stage_times, fwd_bytes, ret_bytes, true);
         let sseed = stream_seed(self.cfg.seed, seq.id);
         let u = sample_uniform(sseed, pos, 0);
-        let tok = sample_logits_with(&logits[..m.vocab], self.cfg.temp, u) as i32;
+        let row = &logits[..m.vocab];
+        let tok = sample_logits_into(row, self.cfg.temp, u, &mut self.scratch.probs) as i32;
         seq.commit(&[tok]);
         seq.ready_at = timing.finish;
         Ok(RoundOutcome {
@@ -351,7 +359,7 @@ impl DecodeEngine {
         let (t_logits, stage_times, fwd_bytes, ret_bytes) =
             self.pipeline_window(seq, pool, &prep.window, prep.i, prep.gamma + 1)?;
         let timing = sim.pipeline_pass(prep.draft_done, &stage_times, fwd_bytes, ret_bytes, true);
-        self.finish_phase(seq, pool, sim, prep, t_logits, timing, 1)
+        self.finish_phase(seq, pool, sim, prep, &t_logits, timing, 1)
     }
 
     /// One fused group round over `idxs` (indices into `active`, ordered
@@ -403,35 +411,45 @@ impl DecodeEngine {
                     self.pipeline_window(seq, pool, &prep.window, prep.i, prep.gamma + 1)?;
                 let timing =
                     sim.pipeline_pass(prep.draft_done, &stage_times, fwd_bytes, ret_bytes, true);
-                let o = self.finish_phase(seq, pool, sim, prep, t_logits, timing, 1)?;
+                let o = self.finish_phase(seq, pool, sim, prep, &t_logits, timing, 1)?;
                 outs.push((idx, o));
                 Ok(outs)
             }
             width => {
                 // --- ONE fused pass over every member's window ---
+                // the segments take the members' window buffers (moved,
+                // not cloned — draft_phase built them for this pass and
+                // finish_phase never reads them again)
                 let segments: Vec<GroupSegment> = preps
-                    .iter()
+                    .iter_mut()
                     .map(|p| GroupSegment {
-                        tokens: p.window.clone(),
+                        tokens: std::mem::take(&mut p.window),
                         pos: p.i,
                         slot: active[p.idx].slot,
                     })
                     .collect();
-                let (member_logits, stage_times, fwd_bytes, ret_bytes) =
+                let (logits, stage_times, fwd_bytes, ret_bytes) =
                     self.pipeline_group(pool, GroupWindow { segments })?;
                 // the window ships when the slowest member's drafting is
                 // done (the group is packed earliest-ready-first, so the
                 // spread is small)
                 let start = preps.iter().map(|p| p.draft_done).max().unwrap_or(0);
                 let timing = sim.pipeline_pass(start, &stage_times, fwd_bytes, ret_bytes, true);
-                for (prep, t_logits) in preps.into_iter().zip(member_logits) {
+                // each member verifies off an offset view into the fused
+                // logits — no per-segment copies
+                let vocab = self.dims.vocab;
+                let mut off = 0usize;
+                for prep in preps {
                     let idx = prep.idx;
+                    let w = prep.gamma + 1;
+                    let seg_logits = &logits[off * vocab..(off + w) * vocab];
+                    off += w;
                     let o = self.finish_phase(
                         &mut active[idx],
                         pool,
                         sim,
                         prep,
-                        t_logits,
+                        seg_logits,
                         timing,
                         width,
                     )?;
@@ -455,7 +473,7 @@ impl DecodeEngine {
         d: Decision,
         idx: usize,
     ) -> Result<ChainPrep> {
-        let m = self.model.engine.manifest().model.clone();
+        let m = self.dims;
         // KV-headroom re-clamp, snapped down to the γ grid so the window
         // width is one the stage artifacts exist for. Static decisions
         // are never clamped (the serving loop's window-room check leaves
@@ -585,11 +603,11 @@ impl DecodeEngine {
         pool: &mut KvPool,
         sim: &mut PipelineSim,
         prep: ChainPrep,
-        t_logits: Vec<f32>,
+        t_logits: &[f32],
         timing: PassTiming,
         fuse_width: usize,
     ) -> Result<RoundOutcome> {
-        let m = self.model.engine.manifest().model.clone();
+        let m = self.dims;
         let ChainPrep {
             d,
             gamma,
@@ -674,15 +692,17 @@ impl DecodeEngine {
 
         // --- L1 adaptive verification (leader-local); queues behind a
         // pre-draft that spilled past the return hop ---
-        let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
-        let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
+        self.scratch.u_accept.clear();
+        self.scratch.u_accept.extend((0..gamma).map(|j| accept_uniform(sseed, i, j)));
+        self.scratch.u_sample.clear();
+        self.scratch.u_sample.extend((0..=gamma).map(|j| sample_uniform(sseed, i, j)));
         let (outcome, verify_ns) = self.model.verify.run(
             gamma,
             t_logits,
-            d_logits,
-            d_tokens.clone(),
-            u_accept,
-            u_sample,
+            &d_logits,
+            &d_tokens,
+            &self.scratch.u_accept,
+            &self.scratch.u_sample,
             self.cfg.knobs_with_tau(d.tau),
         )?;
         let finish = sim.local_work(timing.finish, verify_ns);
@@ -695,7 +715,7 @@ impl DecodeEngine {
         }
         let share = fuse_width.max(1) as Nanos;
         Ok(RoundOutcome {
-            committed: outcome.tokens.clone(),
+            committed: outcome.tokens,
             accepted: outcome.accepted,
             key_tokens,
             draft_len: gamma,
@@ -717,22 +737,21 @@ impl DecodeEngine {
 
     /// Run a fused group window through all pipeline stages — ONE
     /// [`StageExecutor::run_group`] call per node, every member's KV
-    /// rows scattered into its own pool slot — and split the last
-    /// stage's logits back into per-member segments. Returns
-    /// (per-member logits, per-stage compute times, hop payload bytes).
+    /// rows scattered into its own pool slot. Returns the **fused**
+    /// logits tensor (callers slice per-member offset views out of it —
+    /// no per-segment copies), per-stage compute times, and the hop
+    /// payload bytes.
     #[allow(clippy::type_complexity)]
     fn pipeline_group(
         &mut self,
         pool: &mut KvPool,
         window: GroupWindow,
-    ) -> Result<(Vec<Vec<f32>>, Vec<Nanos>, usize, usize)> {
-        let window = Rc::new(window);
+    ) -> Result<(Vec<f32>, Vec<Nanos>, usize, usize)> {
         let slots: Vec<usize> = window.segments.iter().map(|s| s.slot).collect();
-        let m = self.model.engine.manifest().model.clone();
         let n = self.model.n_shards();
         let mut stage_times = Vec::with_capacity(n);
         let mut fwd_bytes = 0usize;
-        let mut x = StageInput::Group { window: window.clone(), hidden: None };
+        let mut x = StageInput::Group { window: &window, hidden: None };
         let mut out_data: Option<Vec<f32>> = None;
         for (si, stage) in self.model.stages.iter().enumerate() {
             let mut caches = pool.stage_caches(&slots, si)?;
@@ -743,7 +762,7 @@ impl DecodeEngine {
             let (out, ns) = stage.run_group(&window, hidden, &mut caches)?;
             stage_times.push(ns);
             if si + 1 < n {
-                let next = StageInput::Group { window: window.clone(), hidden: Some(out.data) };
+                let next = StageInput::Group { window: &window, hidden: Some(out.data) };
                 fwd_bytes = next.size_bytes();
                 x = next;
             } else {
@@ -752,14 +771,7 @@ impl DecodeEngine {
         }
         let logits = out_data.expect("last stage emits logits");
         let ret_bytes = logits.len() * 4;
-        let mut member_logits = Vec::with_capacity(window.segments.len());
-        let mut off = 0usize;
-        for seg in &window.segments {
-            let w = seg.tokens.len();
-            member_logits.push(logits[off * m.vocab..(off + w) * m.vocab].to_vec());
-            off += w;
-        }
-        Ok((member_logits, stage_times, fwd_bytes, ret_bytes))
+        Ok((logits, stage_times, fwd_bytes, ret_bytes))
     }
 
     fn commit_outcome(&self, seq: &mut Sequence, i: usize, gamma: usize, out: &VerifyOutcome) {
@@ -794,7 +806,7 @@ impl DecodeEngine {
         shape: DraftShape,
         d: Decision,
     ) -> Result<RoundOutcome> {
-        let m = self.model.engine.manifest().model.clone();
+        let m = self.dims;
         let i = seq.last_index();
         let temp = self.cfg.temp;
         let sseed = stream_seed(self.cfg.seed, seq.id);
@@ -815,13 +827,17 @@ impl DecodeEngine {
         }
         seq.draft_frontier = i;
 
-        // --- grow the draft tree on scratch cache clones (a branching
-        // path is a different draft context, so each expanded node forks
-        // its parent's cache; the fork is host bookkeeping, not charged).
-        // Expansions arrive level by level and only ever fork the
-        // previous level's caches, so caches older than that are freed
-        // as each level opens — at most two levels are live at once.
-        let root_cache = pool.stage_cache(seq.slot, dstage)?.clone();
+        // --- grow the draft tree on scratch caches **leased from the
+        // pool** (a branching path is a different draft context, so each
+        // expanded node forks its parent's cache; the fork is host
+        // bookkeeping — a buffer-reusing `copy_from`, not a clone — and
+        // not charged). Expansions arrive level by level and only ever
+        // fork the previous level's caches, so leases older than that
+        // return to the pool as each level opens — at most two levels
+        // are live at once, and steady-state tree rounds stop allocating
+        // cache-sized buffers entirely.
+        let mut root_cache = pool.lease_scratch(dstage)?;
+        root_cache.copy_from(pool.stage_cache(seq.slot, dstage)?)?;
         let last_token = seq.last_token();
         let max_depth = shape.depth_or(d.gamma);
         let draft = &self.model.draft;
@@ -832,20 +848,24 @@ impl DecodeEngine {
         let (tree, d_logits) = build_tree(shape, d.gamma, temp, m.vocab, |e| {
             if e.child_depth > cur_level {
                 // entering a new level: rows before the previous level's
-                // start can never be forked again
+                // start can never be forked again — leases go home
                 for c in expansion_caches.iter_mut().take(cur_level_start) {
-                    *c = None;
+                    if let Some(cc) = c.take() {
+                        pool.return_scratch(dstage, cc)?;
+                    }
                 }
                 cur_level = e.child_depth;
                 cur_level_start = e.row;
             }
-            let mut cache = match e.parent_row {
-                None => root_cache.clone(),
-                Some(r) => expansion_caches[r]
-                    .as_ref()
-                    .expect("parent expansion cache freed too early")
-                    .clone(),
-            };
+            let mut cache = pool.lease_scratch(dstage)?;
+            match e.parent_row {
+                None => cache.copy_from(&root_cache)?,
+                Some(r) => cache.copy_from(
+                    expansion_caches[r]
+                        .as_ref()
+                        .expect("parent expansion cache freed too early"),
+                )?,
+            }
             let token = e.path.last().copied().unwrap_or(last_token);
             // the fused sample is unused for trees (children come from
             // top-k over the logits), so sibling expansions may share
@@ -855,11 +875,21 @@ impl DecodeEngine {
             tree_draft_ns += ns;
             // Keep the stepped cache only if its children can themselves
             // be expanded — final-level expansions produce leaves, which
-            // are never forked, so their clones drop immediately.
+            // are never forked, so their leases return immediately.
             let retain = e.child_depth < max_depth;
-            expansion_caches.push(if retain { Some(cache) } else { None }); // index == e.row
+            if retain {
+                expansion_caches.push(Some(cache)); // index == e.row
+            } else {
+                expansion_caches.push(None);
+                pool.return_scratch(dstage, cache)?;
+            }
             Ok(logits)
         })?;
+        // every outstanding lease (root + the last levels) returns home
+        pool.return_scratch(dstage, root_cache)?;
+        for c in expansion_caches.into_iter().flatten() {
+            pool.return_scratch(dstage, c)?;
+        }
         draft_ns_total += tree_draft_ns;
         let draft_done = sim.local_work(seq.ready_at, draft_ns_total);
 
@@ -898,7 +928,7 @@ impl DecodeEngine {
             c.observe(tree.depth(), outcome.accepted, key_tokens);
         }
         Ok(RoundOutcome {
-            committed: outcome.tokens.clone(),
+            committed: outcome.tokens,
             accepted: outcome.accepted,
             key_tokens,
             draft_len: tree.depth(),
@@ -954,20 +984,19 @@ impl DecodeEngine {
         pool: &mut KvPool,
         window: crate::model::TreeWindow,
     ) -> Result<(Vec<f32>, Vec<Nanos>, usize, usize)> {
-        let window = Rc::new(window);
         let w = window.width();
         let base = window.positions[0] as usize;
         let n = self.model.n_shards();
         let mut stage_times = Vec::with_capacity(n);
         let mut fwd_bytes = 0usize;
-        let mut x = StageInput::Tree { window: window.clone(), hidden: None };
+        let mut x = StageInput::Tree { window: &window, hidden: None };
         let mut out_data: Option<Vec<f32>> = None;
         for (si, stage) in self.model.stages.iter().enumerate() {
             let cache = pool.stage_cache(seq.slot, si)?;
             let (out, ns) = stage.run(w, &x, cache, base)?;
             stage_times.push(ns);
             if si + 1 < n {
-                let next = StageInput::Tree { window: window.clone(), hidden: Some(out.data) };
+                let next = StageInput::Tree { window: &window, hidden: Some(out.data) };
                 fwd_bytes = next.size_bytes();
                 x = next;
             } else {
@@ -994,7 +1023,7 @@ impl DecodeEngine {
         let n = self.model.n_shards();
         let mut stage_times = Vec::with_capacity(n);
         let mut fwd_bytes = 0usize;
-        let mut x = StageInput::Tokens(tokens.to_vec());
+        let mut x = StageInput::Tokens(tokens);
         let mut out_data: Option<Vec<f32>> = None;
         for (si, stage) in self.model.stages.iter().enumerate() {
             let cache = pool.stage_cache(seq.slot, si)?;

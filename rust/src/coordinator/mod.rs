@@ -89,7 +89,7 @@ impl Coordinator {
         // are the engine-free calibration constants, so decisions stay
         // pure functions of (config, recorded stats) — never of measured
         // wall-clock, which would break sim/real equivalence.
-        let m = engine.manifest().model.clone();
+        let m = engine.manifest().model;
         let cost = CostModel::from_deploy(&cfg, m.d_model, m.vocab);
         // The γ grid is restricted to the manifest's exported window
         // widths — an adaptive controller must only ask for windows the

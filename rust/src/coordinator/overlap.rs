@@ -72,11 +72,12 @@ use crate::cluster::clock::Nanos;
 use crate::cluster::sim::{PassTiming, PipelineSim};
 use crate::cluster::topology::{LinkModel, Topology};
 use crate::control::{ControlConfig, ControllerKind, CostModel, Decision, SeqController};
-use crate::model::VerifyKnobs;
-use crate::sampling::{argmax, sample_logits_with};
-use crate::spec::reference::host_verify;
+use crate::model::{VerifyKnobs, VerifyOutcome};
+use crate::sampling::{argmax, sample_logits_into};
+use crate::spec::reference::host_verify_with;
 use crate::spec::DraftShape;
 use crate::util::rng::{mix, uniform_at, Rng};
+use crate::util::scratch::RoundScratch;
 
 /// RNG stream tags (see [`crate::util::rng::uniform_at`]).
 const STREAM_DRAFT: u64 = 0xD4AF;
@@ -271,6 +272,15 @@ pub struct OracleChainDecoder {
     ready_at: Nanos,
     pre: Option<PreDraft>,
     per_stage: Vec<Nanos>,
+    /// Reusable round buffers — after warmup (or [`Self::warm_capacity`])
+    /// a steady-state round performs zero heap allocations, pinned by
+    /// `tests/alloc_budget.rs`.
+    scratch: RoundScratch,
+    /// Reusable verification outcome.
+    vout: VerifyOutcome,
+    /// Parked placeholder simulator for [`Self::round_into`]'s disjoint
+    /// borrow swap (never driven; allocated once at construction).
+    idle: Option<PipelineSim>,
 }
 
 impl OracleChainDecoder {
@@ -295,7 +305,57 @@ impl OracleChainDecoder {
             ready_at: 0,
             pre: None,
             per_stage,
+            scratch: RoundScratch::default(),
+            vout: VerifyOutcome::default(),
+            idle: Some(PipelineSim::new(Topology::uniform(1, LinkModel::ideal()), 0)),
         })
+    }
+
+    /// Pre-reserve every growth buffer for `extra_tokens` more committed
+    /// tokens so subsequent rounds perform **zero** heap allocations
+    /// (the organic warmup reaches the same state after a few rounds
+    /// for fixed-γ controllers; adaptive controllers can grow a buffer
+    /// the first time they pick a new widest γ, which this closes off).
+    pub fn warm_capacity(&mut self, extra_tokens: usize) {
+        let vocab = self.cfg.vocab;
+        let gmax = self
+            .ctrl
+            .config()
+            .gammas
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(self.cfg.gamma)
+            .max(self.cfg.gamma)
+            .max(1);
+        let margin = 2 * (gmax + 2);
+        self.committed.reserve(extra_tokens + margin);
+        let want_chain = self.committed.len() + extra_tokens + margin;
+        if self.scratch.chain.capacity() < want_chain {
+            self.scratch.chain.reserve(want_chain);
+        }
+        self.scratch.t_logits.reserve((gmax + 1) * vocab);
+        self.scratch.u_accept.reserve(gmax);
+        self.scratch.u_sample.reserve(gmax + 1);
+        self.scratch.row.reserve(vocab);
+        self.scratch.row2.reserve(vocab);
+        self.scratch.probs.reserve(vocab);
+        self.scratch.verify.reserve(gmax, vocab);
+        self.vout.tokens.reserve(gmax + 1);
+        self.vout.key_flags.reserve(gmax);
+        self.vout.stats.reserve(gmax * 6);
+        self.scratch.spare.reserve(RoundScratch::SPARE_CAP);
+        while self.scratch.spare.len() < 2 {
+            self.scratch.spare.push((Vec::new(), Vec::new()));
+        }
+        for (toks, rows) in self.scratch.spare.iter_mut() {
+            toks.reserve(gmax + 1);
+            rows.reserve((gmax + 1) * vocab);
+        }
+        if let Some(pd) = self.pre.as_mut() {
+            pd.tokens.reserve((gmax + 1).saturating_sub(pd.tokens.len()));
+            pd.logits.reserve(((gmax + 1) * vocab).saturating_sub(pd.logits.len()));
+        }
     }
 
     /// The controller's live state (telemetry for benches).
@@ -322,17 +382,42 @@ impl OracleChainDecoder {
     /// early or late sees the same distribution (the KV-cache-coherence
     /// property of the real models).
     pub fn target_row(&self, prefix: &[i32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.target_row_append(prefix, &mut out);
+        out
+    }
+
+    /// [`Self::target_row`] appended onto a caller-owned buffer (the
+    /// window-logits accumulator form; does NOT clear `out`).
+    fn target_row_append(&self, prefix: &[i32], out: &mut Vec<f32>) {
         let mut r = Rng::new(self.ctx_hash(prefix, 0));
-        (0..self.cfg.vocab).map(|_| r.normal() as f32 * 2.0).collect()
+        out.reserve(self.cfg.vocab);
+        for _ in 0..self.cfg.vocab {
+            out.push(r.normal() as f32 * 2.0);
+        }
     }
 
     /// Draft logits: a correlated corruption of the target's.
     pub fn draft_row(&self, prefix: &[i32]) -> Vec<f32> {
-        let t = self.target_row(prefix);
+        let mut t_buf = Vec::new();
+        let mut out = Vec::new();
+        self.draft_row_into(prefix, &mut t_buf, &mut out);
+        out
+    }
+
+    /// [`Self::draft_row`] into caller-owned buffers (`t_buf` holds the
+    /// correlated target row; both are cleared first).
+    fn draft_row_into(&self, prefix: &[i32], t_buf: &mut Vec<f32>, out: &mut Vec<f32>) {
+        t_buf.clear();
+        self.target_row_append(prefix, t_buf);
         let mut r = Rng::new(self.ctx_hash(prefix, 1));
         let c = self.cfg.corr;
         let noise = (1.0 - c * c).sqrt();
-        t.iter().map(|&x| c * x + noise * r.normal() as f32 * 2.0).collect()
+        out.clear();
+        out.reserve(t_buf.len());
+        for &x in t_buf.iter() {
+            out.push(c * x + noise * r.normal() as f32 * 2.0);
+        }
     }
 
     /// Width of the window the next round will ship (root slot + γ) —
@@ -383,6 +468,9 @@ impl OracleChainDecoder {
             _ => 0,
         };
 
+        // Round buffers are owned by the struct; take them so the row
+        // generators (&self) and the scratch borrows stay disjoint.
+        let mut s = std::mem::take(&mut self.scratch);
         let mut draft_ns_total: Nanos = 0;
         let (d_tokens, d_logits) = if full_reuse {
             let mut pd = pre.expect("checked above");
@@ -390,6 +478,10 @@ impl OracleChainDecoder {
             pd.logits.truncate(gamma * self.cfg.vocab);
             (pd.tokens, pd.logits)
         } else {
+            // a discarded pre-draft returns its buffers to the pool
+            if let Some(pd) = pre {
+                s.recycle_pair(pd.tokens, pd.logits);
+            }
             // catch-up replays cost time but produce no window tokens
             // (the "cache" here is the committed prefix itself);
             // replaying the position right before the frontier means the
@@ -397,24 +489,26 @@ impl OracleChainDecoder {
             // bonus-position belief, so its argmax vs the committed
             // bonus IS the guess-hit observation
             if self.draft_frontier < i {
-                let hit =
-                    argmax(&self.draft_row(&self.committed[..i])) as i32 == self.committed[i];
+                self.draft_row_into(&self.committed[..i], &mut s.row2, &mut s.row);
+                let hit = argmax(&s.row) as i32 == self.committed[i];
                 self.ctrl.observe_guess(hit);
             }
             draft_ns_total += (i - self.draft_frontier) as Nanos * self.cfg.draft_step_ns;
-            let mut toks: Vec<i32> = Vec::with_capacity(gamma);
-            let mut rows: Vec<f32> = Vec::with_capacity(gamma * self.cfg.vocab);
-            let mut chain = self.committed.clone();
+            let (mut toks, mut rows) = s.take_pair();
+            s.chain.clear();
+            s.chain.extend_from_slice(&self.committed);
             for j in 0..gamma {
-                let logits = self.draft_row(&chain);
-                let tok = sample_logits_with(&logits, temp, draft_uniform(sseed, i + j)) as i32;
-                rows.extend_from_slice(&logits);
+                self.draft_row_into(&s.chain, &mut s.row2, &mut s.row);
+                let u = draft_uniform(sseed, i + j);
+                let tok = sample_logits_into(&s.row, temp, u, &mut s.probs) as i32;
+                rows.extend_from_slice(&s.row);
                 toks.push(tok);
-                chain.push(tok);
+                s.chain.push(tok);
                 draft_ns_total += self.cfg.draft_step_ns;
             }
             (toks, rows)
         };
+        self.scratch = s;
         OraclePrep {
             d,
             gamma,
@@ -430,13 +524,29 @@ impl OracleChainDecoder {
 
     /// Finish phase of one round against `sim`, given the (possibly
     /// fused) verify pass timing: speculate-ahead pre-draft inside the
-    /// in-flight gap, host verification, commit, observe.
+    /// in-flight gap, host verification, commit, observe. Allocating
+    /// wrapper over [`Self::finish_round_into`].
     pub fn finish_round(
         &mut self,
         sim: &mut PipelineSim,
         prep: OraclePrep,
         timing: PassTiming,
     ) -> OracleRound {
+        let mut out = OracleRound::default();
+        self.finish_round_into(sim, prep, timing, &mut out);
+        out
+    }
+
+    /// [`Self::finish_round`] writing into a caller-owned round record —
+    /// the zero-allocation form (the record's `committed` buffer is
+    /// cleared and refilled, capacity reused).
+    pub fn finish_round_into(
+        &mut self,
+        sim: &mut PipelineSim,
+        prep: OraclePrep,
+        timing: PassTiming,
+        round_out: &mut OracleRound,
+    ) {
         let OraclePrep {
             d,
             gamma,
@@ -450,15 +560,18 @@ impl OracleChainDecoder {
         } = prep;
         let temp = self.cfg.temp;
         let sseed = stream_seed(self.cfg.seed, self.cfg.seq_id);
+        let mut s = std::mem::take(&mut self.scratch);
 
-        // target logits per window slot (slot j predicts position i+j+1)
-        let mut t_logits = self.target_row(&self.committed);
-        {
-            let mut chain = self.committed.clone();
-            for &t in &d_tokens {
-                chain.push(t);
-                t_logits.extend(self.target_row(&chain));
-            }
+        // target logits per window slot (slot j predicts position i+j+1);
+        // s.chain ends as committed ⊕ d_tokens — exactly the context the
+        // pre-draft continues from below
+        s.t_logits.clear();
+        self.target_row_append(&self.committed, &mut s.t_logits);
+        s.chain.clear();
+        s.chain.extend_from_slice(&self.committed);
+        for &t in &d_tokens {
+            s.chain.push(t);
+            self.target_row_append(&s.chain, &mut s.t_logits);
         }
 
         // --- speculate ahead inside the in-flight gap, drafting the
@@ -470,23 +583,20 @@ impl OracleChainDecoder {
         if self.cfg.overlap {
             let anchor_pos = i + gamma;
             let next_base = i + gamma + 1;
-            let mut chain = self.committed.clone();
-            chain.extend_from_slice(&d_tokens);
             // speculative catch-up step (input d_γ): its head is the
             // draft's belief about the bonus position
-            let head = self.draft_row(&chain);
-            let guess = argmax(&head) as i32;
+            self.draft_row_into(&s.chain, &mut s.row2, &mut s.row);
+            let guess = argmax(&s.row) as i32;
             let mut ns_total = self.cfg.draft_step_ns;
-            chain.push(guess);
-            let mut toks: Vec<i32> = Vec::with_capacity(g_next);
-            let mut rows: Vec<f32> = Vec::with_capacity(g_next * self.cfg.vocab);
+            s.chain.push(guess);
+            let (mut toks, mut rows) = s.take_pair();
             for j in 0..g_next {
-                let logits = self.draft_row(&chain);
-                let tok =
-                    sample_logits_with(&logits, temp, draft_uniform(sseed, next_base + j)) as i32;
-                rows.extend_from_slice(&logits);
+                self.draft_row_into(&s.chain, &mut s.row2, &mut s.row);
+                let u = draft_uniform(sseed, next_base + j);
+                let tok = sample_logits_into(&s.row, temp, u, &mut s.probs) as i32;
+                rows.extend_from_slice(&s.row);
                 toks.push(tok);
-                chain.push(tok);
+                s.chain.push(tok);
                 ns_total += self.cfg.draft_step_ns;
             }
             let done = sim.local_work(timing.stage0_release, ns_total);
@@ -504,49 +614,66 @@ impl OracleChainDecoder {
         }
 
         // --- host verification + commit ---
-        let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
-        let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
+        s.u_accept.clear();
+        s.u_accept.extend((0..gamma).map(|j| accept_uniform(sseed, i, j)));
+        s.u_sample.clear();
+        s.u_sample.extend((0..=gamma).map(|j| sample_uniform(sseed, i, j)));
         let knobs = if self.cfg.knobs.adaptive {
             VerifyKnobs { tau: d.tau, ..self.cfg.knobs }
         } else {
             self.cfg.knobs
         };
-        let out = host_verify(
+        let mut vout = std::mem::take(&mut self.vout);
+        host_verify_with(
             gamma,
             self.cfg.vocab,
-            &t_logits,
+            &s.t_logits,
             &d_logits,
             &d_tokens,
-            &u_accept,
-            &u_sample,
+            &s.u_accept,
+            &s.u_sample,
             knobs,
+            &mut s.verify,
+            &mut vout,
         );
         let finish = sim.local_work(timing.finish, host_verify_cost(gamma));
-        self.draft_frontier = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
-        self.committed.extend_from_slice(&out.tokens);
+        self.draft_frontier = i + vout.accepted.min(gamma.saturating_sub(1)) + 1;
+        self.committed.extend_from_slice(&vout.tokens);
         self.ready_at = finish;
-        let key_tokens = out.key_flags.iter().filter(|&&k| k).count();
-        self.ctrl.observe(gamma, out.accepted, key_tokens);
+        let key_tokens = vout.key_flags.iter().filter(|&&k| k).count();
+        self.ctrl.observe(gamma, vout.accepted, key_tokens);
 
-        OracleRound {
-            committed: out.tokens,
-            accepted: out.accepted,
-            finish,
-            pre_drafted,
-            reused,
-            wasted,
-            overlap_ns,
-            pre_draft_ns,
-            recovered_ns,
-            gamma,
-            tau: d.tau,
-            regret_ns: d.regret_ns,
-        }
+        round_out.committed.clear();
+        round_out.committed.extend_from_slice(&vout.tokens);
+        round_out.accepted = vout.accepted;
+        round_out.finish = finish;
+        round_out.pre_drafted = pre_drafted;
+        round_out.reused = reused;
+        round_out.wasted = wasted;
+        round_out.overlap_ns = overlap_ns;
+        round_out.pre_draft_ns = pre_draft_ns;
+        round_out.recovered_ns = recovered_ns;
+        round_out.gamma = gamma;
+        round_out.tau = d.tau;
+        round_out.regret_ns = d.regret_ns;
+
+        // the consumed draft window's buffers return to the pool
+        s.recycle_pair(d_tokens, d_logits);
+        self.vout = vout;
+        self.scratch = s;
     }
 
     /// One round against an external simulator (the fused-fleet entry
     /// point; [`Self::round`] is the own-sim convenience wrapper).
     pub fn round_on(&mut self, sim: &mut PipelineSim) -> OracleRound {
+        let mut out = OracleRound::default();
+        self.round_on_into(sim, &mut out);
+        out
+    }
+
+    /// [`Self::round_on`] into a caller-owned round record (the
+    /// zero-allocation form).
+    pub fn round_on_into(&mut self, sim: &mut PipelineSim, out: &mut OracleRound) {
         let prep = self.prep_round();
         let draft_done = if prep.draft_ns == 0 {
             self.ready_at
@@ -560,22 +687,27 @@ impl OracleChainDecoder {
             self.cfg.d_model * 4,
             self.cfg.vocab * 4,
         );
-        self.finish_round(sim, prep, timing)
+        self.finish_round_into(sim, prep, timing, out);
     }
 
     /// One speculative round, mirroring `DecodeEngine::round_speculative`
     /// (controller decision, reuse classification, one verify pass,
     /// speculate-ahead pre-draft with the peeked next-round window).
     pub fn round(&mut self) -> OracleRound {
-        // swap the sim out so round_on can borrow self and the sim
-        // disjointly; the placeholder is never driven
-        let mut sim = std::mem::replace(
-            &mut self.sim,
-            PipelineSim::new(Topology::uniform(1, LinkModel::ideal()), 0),
-        );
-        let r = self.round_on(&mut sim);
-        self.sim = sim;
-        r
+        let mut out = OracleRound::default();
+        self.round_into(&mut out);
+        out
+    }
+
+    /// [`Self::round`] into a caller-owned round record — the
+    /// zero-allocation form the alloc-budget tests drive. The owned sim
+    /// is swapped against the parked placeholder so `round_on_into` can
+    /// borrow self and the sim disjointly; neither swap allocates.
+    pub fn round_into(&mut self, out: &mut OracleRound) {
+        let idle = self.idle.take().expect("placeholder sim parked between rounds");
+        let mut sim = std::mem::replace(&mut self.sim, idle);
+        self.round_on_into(&mut sim, out);
+        self.idle = Some(std::mem::replace(&mut self.sim, sim));
     }
 }
 
@@ -625,6 +757,15 @@ pub struct OracleFleet {
     d_model: usize,
     vocab: usize,
     prompt_len: usize,
+    // Reusable round-loop state: after warmup a fused group round
+    // performs zero heap allocations (tests/alloc_budget.rs).
+    pending: Vec<usize>,
+    group: Vec<usize>,
+    preps: Vec<(usize, OraclePrep, Nanos)>,
+    widths: Vec<usize>,
+    round_buf: OracleRound,
+    group_rounds: u64,
+    member_rounds: u64,
 }
 
 impl OracleFleet {
@@ -650,6 +791,13 @@ impl OracleFleet {
             d_model: base.d_model,
             vocab: base.vocab,
             prompt_len: prompt.len(),
+            pending: Vec::new(),
+            group: Vec::new(),
+            preps: Vec::new(),
+            widths: Vec::new(),
+            round_buf: OracleRound::default(),
+            group_rounds: 0,
+            member_rounds: 0,
         })
     }
 
@@ -657,6 +805,98 @@ impl OracleFleet {
     /// differential tests compare these across group caps.
     pub fn generated(&self, s: usize) -> &[i32] {
         &self.seqs[s].committed[self.prompt_len..]
+    }
+
+    /// Pre-reserve every member's round buffers (see
+    /// [`OracleChainDecoder::warm_capacity`]).
+    pub fn warm_capacity(&mut self, extra_tokens_per_seq: usize) {
+        for s in self.seqs.iter_mut() {
+            s.warm_capacity(extra_tokens_per_seq);
+        }
+        let b = self.seqs.len();
+        self.pending.reserve(b);
+        self.group.reserve(b);
+        self.preps.reserve(b);
+        self.widths.reserve(b);
+        // past any grid γ + bonus, so the reused record never regrows
+        self.round_buf.committed.reserve(64);
+    }
+
+    /// One fused group round: pack up to `group_cap` unfinished members
+    /// (earliest-ready-first, summed window widths within
+    /// `token_budget`, like `batcher::next_action_fused`), run every
+    /// member's draft phase serialized on the shared leader, ship ONE
+    /// fused pass, finish every member. Returns false when every member
+    /// has committed >= `tokens_per_seq` generated tokens (no round ran).
+    pub fn serve_round(
+        &mut self,
+        tokens_per_seq: usize,
+        group_cap: usize,
+        token_budget: usize,
+    ) -> bool {
+        let cap = group_cap.max(1);
+        let mut pending = std::mem::take(&mut self.pending);
+        pending.clear();
+        for s in 0..self.seqs.len() {
+            if self.seqs[s].committed.len() - self.prompt_len < tokens_per_seq {
+                pending.push(s);
+            }
+        }
+        if pending.is_empty() {
+            self.pending = pending;
+            return false;
+        }
+        pending.sort_unstable_by_key(|&s| (self.seqs[s].finish_time(), s));
+        let mut group = std::mem::take(&mut self.group);
+        group.clear();
+        let mut used = 0usize;
+        for &s in &pending {
+            if group.len() >= cap {
+                break;
+            }
+            let w = self.seqs[s].next_window_width();
+            if group.is_empty() || used + w <= token_budget {
+                group.push(s);
+                used += w;
+            }
+        }
+        // per-member draft phases, serialized on the shared leader
+        let mut preps = std::mem::take(&mut self.preps);
+        preps.clear();
+        for &s in &group {
+            let ready = self.seqs[s].finish_time();
+            let prep = self.seqs[s].prep_round();
+            let draft_done = if prep.draft_ns == 0 {
+                ready
+            } else {
+                self.sim.local_work(ready, prep.draft_ns)
+            };
+            preps.push((s, prep, draft_done));
+        }
+        // ONE fused pass for the whole group
+        let start = preps.iter().map(|p| p.2).max().unwrap_or(0);
+        let mut widths = std::mem::take(&mut self.widths);
+        widths.clear();
+        widths.extend(preps.iter().map(|(_, p, _)| p.gamma + 1));
+        let timing = self.sim.group_pass(
+            start,
+            &widths,
+            &self.per_stage,
+            self.d_model * 4,
+            self.vocab * 4,
+        );
+        self.group_rounds += 1;
+        self.member_rounds += preps.len() as u64;
+        let mut round_buf = std::mem::take(&mut self.round_buf);
+        for (s, prep, _) in preps.drain(..) {
+            self.seqs[s].finish_round_into(&mut self.sim, prep, timing, &mut round_buf);
+        }
+        self.round_buf = round_buf;
+        self.pending = pending;
+        self.group = group;
+        self.preps = preps;
+        self.widths = widths;
+        true
     }
 
     /// Decode until every member committed >= `tokens_per_seq` generated
@@ -669,57 +909,9 @@ impl OracleFleet {
         group_cap: usize,
         token_budget: usize,
     ) -> FleetReport {
-        let cap = group_cap.max(1);
-        let mut group_rounds = 0u64;
-        let mut member_rounds = 0u64;
-        loop {
-            let mut pending: Vec<usize> = (0..self.seqs.len())
-                .filter(|&s| self.seqs[s].committed.len() - self.prompt_len < tokens_per_seq)
-                .collect();
-            if pending.is_empty() {
-                break;
-            }
-            pending.sort_by_key(|&s| (self.seqs[s].finish_time(), s));
-            let mut group: Vec<usize> = Vec::new();
-            let mut used = 0usize;
-            for &s in &pending {
-                if group.len() >= cap {
-                    break;
-                }
-                let w = self.seqs[s].next_window_width();
-                if group.is_empty() || used + w <= token_budget {
-                    group.push(s);
-                    used += w;
-                }
-            }
-            // per-member draft phases, serialized on the shared leader
-            let mut preps: Vec<(usize, OraclePrep, Nanos)> = Vec::with_capacity(group.len());
-            for &s in &group {
-                let ready = self.seqs[s].finish_time();
-                let prep = self.seqs[s].prep_round();
-                let draft_done = if prep.draft_ns == 0 {
-                    ready
-                } else {
-                    self.sim.local_work(ready, prep.draft_ns)
-                };
-                preps.push((s, prep, draft_done));
-            }
-            // ONE fused pass for the whole group
-            let start = preps.iter().map(|p| p.2).max().unwrap_or(0);
-            let widths: Vec<usize> = preps.iter().map(|(_, p, _)| p.gamma + 1).collect();
-            let timing = self.sim.group_pass(
-                start,
-                &widths,
-                &self.per_stage,
-                self.d_model * 4,
-                self.vocab * 4,
-            );
-            group_rounds += 1;
-            member_rounds += preps.len() as u64;
-            for (s, prep, _) in preps {
-                let _ = self.seqs[s].finish_round(&mut self.sim, prep, timing);
-            }
-        }
+        self.group_rounds = 0;
+        self.member_rounds = 0;
+        while self.serve_round(tokens_per_seq, group_cap, token_budget) {}
         let finish_ns = self.seqs.iter().map(|s| s.finish_time()).max().unwrap_or(0);
         let tokens = self
             .seqs
@@ -727,8 +919,8 @@ impl OracleFleet {
             .map(|s| (s.committed.len() - self.prompt_len) as u64)
             .sum();
         FleetReport {
-            group_rounds,
-            mean_group_width: member_rounds as f64 / group_rounds.max(1) as f64,
+            group_rounds: self.group_rounds,
+            mean_group_width: self.member_rounds as f64 / self.group_rounds.max(1) as f64,
             finish_ns,
             tokens,
         }
@@ -798,6 +990,37 @@ mod tests {
             consumed += r.reused + r.wasted;
         }
         assert!(consumed > 0);
+    }
+
+    #[test]
+    fn round_into_matches_round_with_reused_record() {
+        // The zero-allocation spelling must commit the same stream and
+        // report the same record as the allocating one, with one
+        // OracleRound reused across rounds.
+        let mut a = decoder(true, 21);
+        let mut b = decoder(true, 21);
+        b.warm_capacity(256);
+        let mut buf = OracleRound::default();
+        for _ in 0..30 {
+            let ra = a.round();
+            b.round_into(&mut buf);
+            assert_eq!(ra.committed, buf.committed);
+            assert_eq!(ra.accepted, buf.accepted);
+            assert_eq!(ra.finish, buf.finish);
+            assert_eq!(
+                (ra.pre_drafted, ra.reused, ra.wasted),
+                (buf.pre_drafted, buf.reused, buf.wasted)
+            );
+            assert_eq!(
+                (ra.overlap_ns, ra.pre_draft_ns, ra.recovered_ns),
+                (buf.overlap_ns, buf.pre_draft_ns, buf.recovered_ns)
+            );
+            assert_eq!(
+                (ra.gamma, ra.tau.to_bits(), ra.regret_ns),
+                (buf.gamma, buf.tau.to_bits(), buf.regret_ns)
+            );
+        }
+        assert_eq!(a.committed, b.committed);
     }
 
     #[test]

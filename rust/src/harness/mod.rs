@@ -125,7 +125,7 @@ impl Harness {
     /// Score one sequence: fraction of generated tokens equal to the
     /// target argmax in their own (teacher-forced) context.
     fn score_one(&self, prompt: &[i32], output: &[i32]) -> Result<(usize, usize)> {
-        let m = self.engine.manifest().model.clone();
+        let m = self.engine.manifest().model;
         let scorer = self.scorer.borrow_mut();
         let stage = &scorer.stages[0]; // single 'full' stage
         let [l, s, hd, dd] = scorer.stage_dims()[0];
@@ -140,7 +140,7 @@ impl Harness {
         let mut padded = seq.clone();
         padded.truncate(w);
         padded.resize(w, 0);
-        let (out0, _) = stage.run(w, &StageInput::Tokens(padded), &mut cache, 0)?;
+        let (out0, _) = stage.run(w, &StageInput::Tokens(&padded), &mut cache, 0)?;
         let mut hits = 0;
         let mut total = 0;
         // Row j of the prefill output predicts position j+1: score the
@@ -155,12 +155,8 @@ impl Harness {
         // W=1 steps for positions beyond the prefill window: feeding
         // seq[p-1] at pos p-1 yields the prediction for position p.
         for p in w..seq.len() {
-            let (o, _) = stage.run(
-                1,
-                &StageInput::Tokens(vec![seq[p - 1]]),
-                &mut cache,
-                p - 1,
-            )?;
+            let step = [seq[p - 1]];
+            let (o, _) = stage.run(1, &StageInput::Tokens(&step), &mut cache, p - 1)?;
             if p >= plen {
                 total += 1;
                 if argmax(o.row(0)) as i32 == seq[p] {

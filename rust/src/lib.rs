@@ -66,6 +66,14 @@
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.
 
+// With `--features alloc-count`, every binary linking this crate counts
+// allocation events (util::alloc_counter) — the hotpath bench reports
+// allocs/round and tests/alloc_budget.rs pins the zero-allocation
+// steady-state round budget.
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static COUNTING_ALLOC: util::alloc_counter::CountingAlloc = util::alloc_counter::CountingAlloc;
+
 pub mod analysis;
 pub mod cluster;
 pub mod config;

@@ -113,25 +113,29 @@ impl GroupWindow {
 }
 
 /// Input to a pipeline stage.
+///
+/// Window *metadata* (token windows, tree/group descriptors) is
+/// **borrowed** from the round owner — only the hidden activation tensor
+/// is owned and moves hop to hop, so stage hops copy nothing host-side.
+/// `size_bytes` still charges the full metadata per hop, since a real
+/// wire would ship it with every message.
 #[derive(Debug, Clone)]
-pub enum StageInput {
-    /// Token ids (first/full stages).
-    Tokens(Vec<i32>),
-    /// Hidden states [W, d_model] flattened (mid/last stages).
+pub enum StageInput<'a> {
+    /// Token ids (first/full stages), borrowed from the round's window.
+    Tokens(&'a [i32]),
+    /// Hidden states [W, d_model] flattened (mid/last stages) — owned,
+    /// produced by the previous stage and moved downstream.
     Hidden(Vec<f32>),
     /// Token-tree verify window. `hidden` is `None` entering the first
-    /// stage (tokens come from the window) and `Some` thereafter; the
-    /// window metadata travels with the activation on every hop
-    /// (`Rc`-shared so the per-hop clone is O(1) — `size_bytes` still
-    /// charges the full metadata per hop, since a real wire would).
-    Tree { window: Rc<TreeWindow>, hidden: Option<Vec<f32>> },
+    /// stage (tokens come from the window) and `Some` thereafter.
+    Tree { window: &'a TreeWindow, hidden: Option<Vec<f32>> },
     /// Fused multi-sequence verify window (`hidden` follows the same
     /// None-entering-stage-0 convention as `Tree`); dispatched through
     /// [`StageExecutor::run_group`].
-    Group { window: Rc<GroupWindow>, hidden: Option<Vec<f32>> },
+    Group { window: &'a GroupWindow, hidden: Option<Vec<f32>> },
 }
 
-impl StageInput {
+impl StageInput<'_> {
     pub fn size_bytes(&self) -> usize {
         match self {
             StageInput::Tokens(t) => t.len() * 4,
@@ -208,7 +212,7 @@ impl StageExecutor {
                 if t.len() != w {
                     bail!("stage {}: expected {w} tokens, got {}", self.spec.stage_idx, t.len());
                 }
-                HostTensor::i32(t.clone(), vec![w])
+                HostTensor::i32(t.to_vec(), vec![w])
             }
             (StageInput::Hidden(h), false) => {
                 if h.len() != w * m.d_model {
@@ -299,7 +303,7 @@ impl StageExecutor {
                 caches.len()
             );
         }
-        let m = self.engine.manifest().model.clone();
+        let m = self.engine.manifest().model;
         let width = window.width();
         if let Some(h) = hidden {
             if h.len() != width * m.d_model {
@@ -318,7 +322,7 @@ impl StageExecutor {
         for (seg, cache) in window.segments.iter().zip(caches.iter_mut()) {
             let w = seg.tokens.len();
             let x = match hidden {
-                None => StageInput::Tokens(seg.tokens.clone()),
+                None => StageInput::Tokens(&seg.tokens),
                 Some(h) => {
                     StageInput::Hidden(h[off * m.d_model..(off + w) * m.d_model].to_vec())
                 }
@@ -498,7 +502,9 @@ impl DraftExecutor {
 }
 
 /// Outcome of one verification round (mirrors the L1 kernel outputs).
-#[derive(Debug, Clone)]
+/// `Default` gives the empty outcome round loops keep and refill
+/// (`spec::reference::host_verify_with`).
+#[derive(Debug, Clone, Default)]
 pub struct VerifyOutcome {
     /// Committed tokens: the `k` accepted draft tokens then the
     /// correction/bonus token (`k+1` entries).
@@ -552,8 +558,38 @@ impl VerifyExecutor {
 
     /// Verify a window: target logits [gamma+1, V] (flattened), draft
     /// logits [gamma, V], drafted tokens, uniforms, knobs.
+    ///
+    /// Takes slices — callers whose buffers live on (reused scratch, a
+    /// fused group's shared logits tensor) borrow straight through and
+    /// one owned copy for the upload is made here. Callers whose buffers
+    /// end their life at verification keep the zero-copy path via
+    /// [`Self::run_owned`].
     #[allow(clippy::too_many_arguments)]
     pub fn run(
+        &self,
+        gamma: usize,
+        t_logits: &[f32],
+        d_logits: &[f32],
+        d_tokens: &[i32],
+        u_accept: &[f32],
+        u_sample: &[f32],
+        knobs: VerifyKnobs,
+    ) -> Result<(VerifyOutcome, Nanos)> {
+        self.run_owned(
+            gamma,
+            t_logits.to_vec(),
+            d_logits.to_vec(),
+            d_tokens.to_vec(),
+            u_accept.to_vec(),
+            u_sample.to_vec(),
+            knobs,
+        )
+    }
+
+    /// [`Self::run`] taking ownership — the inputs move into the upload
+    /// tensors with no copy (the real-cluster driver's form).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_owned(
         &self,
         gamma: usize,
         t_logits: Vec<f32>,

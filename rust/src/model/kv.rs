@@ -75,6 +75,23 @@ impl KvCache {
         (self.k.len() + self.v.len()) * 4
     }
 
+    /// Overwrite this cache with `other`'s contents (same declared
+    /// shape). Reuses the existing buffers — `clear` + `extend` instead
+    /// of reallocating — so a leased scratch cache absorbs a fork
+    /// without touching the heap once warm (the tree-expansion path used
+    /// to `clone()` the whole cache per expanded node).
+    pub fn copy_from(&mut self, other: &KvCache) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("KV copy_from: shape {:?} != {:?}", self.shape, other.shape);
+        }
+        self.k.clear();
+        self.k.extend_from_slice(&other.k);
+        self.v.clear();
+        self.v.extend_from_slice(&other.v);
+        self.pos = other.pos;
+        Ok(())
+    }
+
     /// Move cache rows (all layers/heads) from source to destination
     /// positions — the compaction step after tree verification, where the
     /// accepted root-path's rows (written at window-slot positions) are
@@ -115,15 +132,53 @@ pub struct KvPool {
     free: Vec<usize>,
     /// Template dims per stage: (layers, max_seq, heads, head_dim).
     stage_dims: Vec<[usize; 4]>,
+    /// Per-stage free lists of **scratch** caches for short-lived forks
+    /// (tree expansion leases) — returned caches keep their buffers, so
+    /// a lease after warmup allocates nothing.
+    scratch: Vec<Vec<KvCache>>,
 }
 
 impl KvPool {
     pub fn new(capacity: usize, stage_dims: Vec<[usize; 4]>) -> KvPool {
+        let n_stages = stage_dims.len();
         KvPool {
             slots: (0..capacity).map(|_| None).collect(),
             free: (0..capacity).rev().collect(),
             stage_dims,
+            scratch: (0..n_stages).map(|_| Vec::new()).collect(),
         }
+    }
+
+    /// Lease a scratch cache shaped like `stage`'s slot caches —
+    /// recycled from the stage's free list when available, freshly
+    /// allocated otherwise. The caller owns it until
+    /// [`Self::return_scratch`]; contents are unspecified (lessees
+    /// `copy_from` their source). Tree expansion forks draft contexts
+    /// through these instead of cloning caches per node.
+    pub fn lease_scratch(&mut self, stage: usize) -> Result<KvCache> {
+        let &[l, s, h, d] = self
+            .stage_dims
+            .get(stage)
+            .ok_or_else(|| anyhow!("no stage {stage} in pool (of {})", self.stage_dims.len()))?;
+        Ok(match self.scratch[stage].pop() {
+            Some(c) => c,
+            None => KvCache::new(l, s, h, d),
+        })
+    }
+
+    /// Return a leased scratch cache to `stage`'s free list (buffers
+    /// kept for the next lease). Caches of foreign shape are rejected —
+    /// they would poison later leases.
+    pub fn return_scratch(&mut self, stage: usize, cache: KvCache) -> Result<()> {
+        let &dims = self
+            .stage_dims
+            .get(stage)
+            .ok_or_else(|| anyhow!("no stage {stage} in pool (of {})", self.stage_dims.len()))?;
+        if cache.shape != dims {
+            bail!("scratch return: shape {:?} != stage {stage} dims {:?}", cache.shape, dims);
+        }
+        self.scratch[stage].push(cache);
+        Ok(())
     }
 
     pub fn capacity(&self) -> usize {
@@ -321,6 +376,39 @@ mod tests {
         assert!(p.stage_caches(&[a, 99], 0).is_err());
         // empty group is trivially fine
         assert!(p.stage_caches(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn copy_from_reuses_buffers_and_checks_shape() {
+        let mut a = KvCache::new(1, 4, 1, 2);
+        let mut b = KvCache::new(1, 4, 1, 2);
+        b.replace(vec![3.0; 8], vec![4.0; 8]).unwrap();
+        b.commit(2).unwrap();
+        let (pk, pv) = (a.k.as_ptr(), a.v.as_ptr());
+        a.copy_from(&b).unwrap();
+        assert_eq!(a.k, vec![3.0; 8]);
+        assert_eq!(a.v, vec![4.0; 8]);
+        assert_eq!(a.pos, 2);
+        assert_eq!(a.k.as_ptr(), pk, "copy_from must reuse the k buffer");
+        assert_eq!(a.v.as_ptr(), pv, "copy_from must reuse the v buffer");
+        let wrong = KvCache::new(2, 4, 1, 2);
+        assert!(a.copy_from(&wrong).is_err());
+    }
+
+    #[test]
+    fn scratch_leases_recycle_and_check_shape() {
+        let mut p = KvPool::new(1, vec![[1, 4, 1, 1], [2, 4, 1, 1]]);
+        let c0 = p.lease_scratch(0).unwrap();
+        assert_eq!(c0.shape, [1, 4, 1, 1]);
+        let c1 = p.lease_scratch(1).unwrap();
+        assert_eq!(c1.shape, [2, 4, 1, 1]);
+        // returning to the wrong stage is rejected; the right one parks it
+        assert!(p.return_scratch(0, c1).is_err());
+        let ptr = c0.k.as_ptr();
+        p.return_scratch(0, c0).unwrap();
+        let again = p.lease_scratch(0).unwrap();
+        assert_eq!(again.k.as_ptr(), ptr, "lease must recycle the returned cache");
+        assert!(p.lease_scratch(7).is_err());
     }
 
     #[test]

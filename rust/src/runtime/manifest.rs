@@ -7,8 +7,10 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::{self, Value};
 
-/// Architecture constants of the exported model.
-#[derive(Debug, Clone)]
+/// Architecture constants of the exported model. All-scalar, so `Copy`
+/// — the decode engine caches one per construction instead of re-reading
+/// the manifest every round.
+#[derive(Debug, Clone, Copy)]
 pub struct ModelDims {
     pub vocab: usize,
     pub d_model: usize,

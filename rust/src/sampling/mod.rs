@@ -5,6 +5,16 @@
 //! routines serve the *baselines*, the accuracy evaluator, and tests.
 //! They intentionally mirror the kernel semantics (same CDF convention:
 //! token = #{i : cdf_i <= u}) so cross-layer checks are exact.
+//!
+//! Every routine on a decode-round path has a **buffer-taking** form
+//! (`softmax` always had one; [`sample_logits_into`], [`top_k_filter_with`],
+//! [`top_p_filter_with`], [`top_k_indices_with`] extend the idiom): the
+//! caller owns the scratch (`util::scratch::RoundScratch`), the function
+//! only `clear()`s and refills it, so steady-state rounds allocate
+//! nothing. The allocating spellings remain as thin wrappers for tests
+//! and one-shot callers, and the filter kernels keep their exact legacy
+//! semantics (same keep-sets, same float arithmetic) — pinned by the
+//! equivalence property tests below.
 
 use crate::util::rng::Rng;
 
@@ -34,6 +44,9 @@ pub fn softmax(logits: &[f32], out: &mut Vec<f32>) -> f32 {
 }
 
 /// Softmax with temperature; `temp <= 0` produces a one-hot argmax.
+/// Allocation-free: the scaling is fused into the softmax loops (the
+/// intermediate values are exactly the old `x / temp` vector, so the
+/// output is bit-identical to scaling first and softmaxing after).
 pub fn softmax_with_temp(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
     if temp <= 0.0 {
         let am = argmax(logits);
@@ -42,8 +55,22 @@ pub fn softmax_with_temp(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
         out[am] = 1.0;
         return;
     }
-    let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
-    softmax(&scaled, out);
+    out.clear();
+    out.reserve(logits.len());
+    let mut max = f32::NEG_INFINITY;
+    for &x in logits {
+        max = max.max(x / temp);
+    }
+    let mut sum = 0f32;
+    for &x in logits {
+        let e = (x / temp - max).exp();
+        out.push(e);
+        sum += e;
+    }
+    let inv = 1.0 / sum;
+    for p in out.iter_mut() {
+        *p *= inv;
+    }
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -83,22 +110,41 @@ pub fn sample_logits(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
 /// form the decode engine uses, whose draws are keyed on position so
 /// they are independent of evaluation order (see `util::rng::uniform_at`).
 pub fn sample_logits_with(logits: &[f32], temp: f32, u: f32) -> usize {
+    let mut probs = Vec::new();
+    sample_logits_into(logits, temp, u, &mut probs)
+}
+
+/// [`sample_logits_with`] over a caller-owned probability buffer — the
+/// zero-allocation hot-path form (the decode round loops thread their
+/// `RoundScratch::probs` through here).
+pub fn sample_logits_into(logits: &[f32], temp: f32, u: f32, probs: &mut Vec<f32>) -> usize {
     if temp <= 0.0 {
         return argmax(logits);
     }
-    let mut probs = Vec::new();
-    softmax_with_temp(logits, temp, &mut probs);
-    sample_cdf(&probs, u)
+    softmax_with_temp(logits, temp, probs);
+    sample_cdf(probs, u)
 }
 
 /// Top-k filtering: keep the k largest logits, set the rest to -inf.
 pub fn top_k_filter(logits: &mut [f32], k: usize) {
+    let mut scratch = Vec::new();
+    top_k_filter_with(logits, k, &mut scratch);
+}
+
+/// [`top_k_filter`] over a caller-owned value buffer, with the
+/// clone-and-full-sort replaced by `select_nth_unstable_by` partial
+/// selection (O(V) expected instead of O(V log V)). The threshold is the
+/// k-th largest value — exactly what the full sort produced — and the
+/// keep-exactly-k-under-ties scan is unchanged, so the output is
+/// identical to the legacy kernel (property-tested below).
+pub fn top_k_filter_with(logits: &mut [f32], k: usize, scratch: &mut Vec<f32>) {
     if k == 0 || k >= logits.len() {
         return;
     }
-    let mut sorted: Vec<f32> = logits.to_vec();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-    let threshold = sorted[k - 1];
+    scratch.clear();
+    scratch.extend_from_slice(logits);
+    scratch.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    let threshold = scratch[k - 1];
     let mut kept = 0;
     for x in logits.iter_mut() {
         // Keep exactly k entries even under ties.
@@ -112,11 +158,25 @@ pub fn top_k_filter(logits: &mut [f32], k: usize) {
 
 /// Nucleus (top-p) filtering on a probability vector (renormalized).
 pub fn top_p_filter(probs: &mut [f32], p: f32) {
+    let mut idx = Vec::new();
+    top_p_filter_with(probs, p, &mut idx);
+}
+
+/// [`top_p_filter`] over a caller-owned index buffer. The legacy kernel
+/// built a `HashSet<usize>` of kept indices and probed it once per vocab
+/// entry (O(V) hashing per sampled token); the sorted prefix already IS
+/// the keep set, so the non-kept suffix is zeroed directly and the
+/// renormalizer sums in index order — the identical keep set and float
+/// totals (adding the zeroed entries contributes exact 0.0 terms), with
+/// no hashing and no allocation. The tie order matches the legacy stable
+/// sort because the comparator breaks prob-ties by ascending index.
+pub fn top_p_filter_with(probs: &mut [f32], p: f32, idx: &mut Vec<usize>) {
     if p >= 1.0 {
         return;
     }
-    let mut idx: Vec<usize> = (0..probs.len()).collect();
-    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    idx.clear();
+    idx.extend(0..probs.len());
+    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap().then(a.cmp(&b)));
     let mut cum = 0f32;
     let mut cut = probs.len();
     for (rank, &i) in idx.iter().enumerate() {
@@ -126,20 +186,42 @@ pub fn top_p_filter(probs: &mut [f32], p: f32) {
             break;
         }
     }
-    let keep: std::collections::HashSet<usize> = idx[..cut].iter().copied().collect();
+    for &i in &idx[cut..] {
+        probs[i] = 0.0;
+    }
     let mut total = 0f32;
-    for (i, q) in probs.iter_mut().enumerate() {
-        if keep.contains(&i) {
-            total += *q;
-        } else {
-            *q = 0.0;
-        }
+    for &q in probs.iter() {
+        total += q;
     }
     if total > 0.0 {
         for q in probs.iter_mut() {
             *q /= total;
         }
     }
+}
+
+/// Indices of the top-`k` values, descending (ties: lower index first),
+/// written into `idx` — the tree-expansion picker. Partial selection +
+/// a k-prefix sort instead of a full index sort; the comparator is a
+/// total order (index tie-break), so the result equals the first k
+/// entries of the legacy full stable sort.
+pub fn top_k_indices_with(values: &[f32], k: usize, idx: &mut Vec<usize>) {
+    idx.clear();
+    if k == 0 {
+        return;
+    }
+    idx.extend(0..values.len());
+    let cmp = |a: &usize, b: &usize| {
+        values[*b]
+            .partial_cmp(&values[*a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k - 1, cmp);
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(cmp);
 }
 
 /// Total-variation overlap `Σ min(p, q)` — the quantity the verify kernel
@@ -237,5 +319,168 @@ mod tests {
         assert!(kl_divergence(&p, &p).abs() < 1e-5);
         let q = [0.75f32, 0.25];
         assert!(kl_divergence(&p, &q) > 0.1);
+    }
+
+    // ----- equivalence pins: buffer-taking kernels == legacy kernels -----
+
+    /// The pre-scratch top-k (clone + full sort): the reference the
+    /// select_nth_unstable version must reproduce exactly.
+    fn legacy_top_k_filter(logits: &mut [f32], k: usize) {
+        if k == 0 || k >= logits.len() {
+            return;
+        }
+        let mut sorted: Vec<f32> = logits.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = sorted[k - 1];
+        let mut kept = 0;
+        for x in logits.iter_mut() {
+            if *x >= threshold && kept < k {
+                kept += 1;
+            } else {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+    }
+
+    /// The pre-scratch top-p (stable index sort + HashSet membership).
+    fn legacy_top_p_filter(probs: &mut [f32], p: f32) {
+        if p >= 1.0 {
+            return;
+        }
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let mut cum = 0f32;
+        let mut cut = probs.len();
+        for (rank, &i) in idx.iter().enumerate() {
+            cum += probs[i];
+            if cum >= p {
+                cut = rank + 1;
+                break;
+            }
+        }
+        let keep: std::collections::HashSet<usize> = idx[..cut].iter().copied().collect();
+        let mut total = 0f32;
+        for (i, q) in probs.iter_mut().enumerate() {
+            if keep.contains(&i) {
+                total += *q;
+            } else {
+                *q = 0.0;
+            }
+        }
+        if total > 0.0 {
+            for q in probs.iter_mut() {
+                *q /= total;
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_select_matches_legacy_sort_exactly() {
+        let mut rng = Rng::new(71);
+        let mut scratch = Vec::new();
+        for trial in 0..300 {
+            let n = 1 + (trial % 97);
+            let mut a: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            // force ties on a fraction of trials
+            if trial % 3 == 0 && n > 4 {
+                let v = a[0];
+                a[1] = v;
+                a[n / 2] = v;
+            }
+            let mut b = a.clone();
+            let k = (trial * 7) % (n + 2); // includes 0 and >= n edges
+            legacy_top_k_filter(&mut a, k);
+            top_k_filter_with(&mut b, k, &mut scratch);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn top_p_mask_matches_legacy_hashset_exactly() {
+        let mut rng = Rng::new(72);
+        let mut idx = Vec::new();
+        let mut probs_buf = Vec::new();
+        for trial in 0..300 {
+            let n = 2 + (trial % 63);
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 2.0).collect();
+            softmax(&logits, &mut probs_buf);
+            let mut a = probs_buf.clone();
+            let mut b = probs_buf.clone();
+            let p = [0.05f32, 0.3, 0.5, 0.8, 0.95, 0.999, 1.0][trial % 7];
+            legacy_top_p_filter(&mut a, p);
+            top_p_filter_with(&mut b, p, &mut idx);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} p={p}"
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_with_temp_matches_scale_then_softmax_exactly() {
+        let mut rng = Rng::new(73);
+        for trial in 0..100 {
+            let n = 1 + (trial % 40);
+            let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+            let temp = [0.25f32, 0.7, 1.0, 1.9][trial % 4];
+            // reference: materialize the scaled vector, then plain softmax
+            let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
+            let mut want = Vec::new();
+            softmax(&scaled, &mut want);
+            let mut got = Vec::new();
+            softmax_with_temp(&logits, temp, &mut got);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} temp={temp}"
+            );
+        }
+    }
+
+    #[test]
+    fn sample_logits_into_matches_allocating_form() {
+        let mut rng = Rng::new(74);
+        let mut buf = Vec::new();
+        for _ in 0..200 {
+            let logits: Vec<f32> = (0..32).map(|_| rng.normal() as f32).collect();
+            let u = rng.f32();
+            for temp in [0.0f32, 0.5, 1.0] {
+                assert_eq!(
+                    sample_logits_with(&logits, temp, u),
+                    sample_logits_into(&logits, temp, u, &mut buf)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_indices_match_full_sort_reference() {
+        let mut rng = Rng::new(75);
+        let mut idx = Vec::new();
+        for trial in 0..200 {
+            let n = 1 + (trial % 70);
+            let mut vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            if trial % 4 == 0 && n > 3 {
+                vals[n - 1] = vals[0]; // tie across distant indices
+            }
+            let k = (trial * 3) % (n + 2);
+            // reference: full stable sort, then truncate — the legacy
+            // spec::tree::top_k
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by(|&a, &b| {
+                vals[b]
+                    .partial_cmp(&vals[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b))
+            });
+            want.truncate(k);
+            top_k_indices_with(&vals, k, &mut idx);
+            assert_eq!(want, idx, "trial {trial} k={k}");
+        }
     }
 }

@@ -24,7 +24,7 @@ pub mod reference;
 pub mod stats;
 pub mod tree;
 
-pub use reference::{host_verify, HostVerifyResult};
+pub use reference::{host_verify, host_verify_with, HostVerifyResult};
 pub use stats::{AcceptanceStats, RoundRecord};
 pub use tree::{
     build_tree, host_verify_tree, DraftShape, DraftTree, Expansion, TreeVerifyResult,

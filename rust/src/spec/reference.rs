@@ -11,6 +11,7 @@
 
 use crate::model::{VerifyKnobs, VerifyOutcome};
 use crate::sampling::{argmax, overlap, sample_cdf, softmax};
+use crate::util::scratch::VerifyScratch;
 
 const EPS: f32 = 1e-9;
 
@@ -21,6 +22,11 @@ pub type HostVerifyResult = VerifyOutcome;
 ///
 /// * `t_logits`: [gamma+1, V] flattened; `d_logits`: [gamma, V] flattened.
 /// * `u_accept`: gamma uniforms; `u_sample`: gamma+1 uniforms.
+///
+/// Allocating wrapper around [`host_verify_with`] for tests and one-shot
+/// callers; round loops hold a [`VerifyScratch`] + [`VerifyOutcome`] and
+/// call the scratch form directly (zero allocations in steady state).
+#[allow(clippy::too_many_arguments)]
 pub fn host_verify(
     gamma: usize,
     vocab: usize,
@@ -31,38 +37,78 @@ pub fn host_verify(
     u_sample: &[f32],
     knobs: VerifyKnobs,
 ) -> HostVerifyResult {
+    let mut scratch = VerifyScratch::default();
+    let mut out = VerifyOutcome {
+        tokens: Vec::new(),
+        accepted: 0,
+        key_flags: Vec::new(),
+        stats: Vec::new(),
+    };
+    host_verify_with(
+        gamma,
+        vocab,
+        t_logits,
+        d_logits,
+        d_tokens,
+        u_accept,
+        u_sample,
+        knobs,
+        &mut scratch,
+        &mut out,
+    );
+    out
+}
+
+/// [`host_verify`] over caller-owned buffers: all per-row distributions
+/// live in `scratch` (flat `[gamma, vocab]` layouts replace the old
+/// per-row `Vec<Vec<f32>>`s) and the outcome is written into `out`
+/// (cleared first, capacity reused). Arithmetic is kept
+/// operation-for-operation identical to the allocating original, so the
+/// committed streams every differential test pins are unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn host_verify_with(
+    gamma: usize,
+    vocab: usize,
+    t_logits: &[f32],
+    d_logits: &[f32],
+    d_tokens: &[i32],
+    u_accept: &[f32],
+    u_sample: &[f32],
+    knobs: VerifyKnobs,
+    s: &mut VerifyScratch,
+    out: &mut VerifyOutcome,
+) {
     assert_eq!(t_logits.len(), (gamma + 1) * vocab);
     assert_eq!(d_logits.len(), gamma * vocab);
     let greedy = knobs.temp <= 0.0;
     let inv_temp = if greedy { 1.0 } else { 1.0 / knobs.temp.max(EPS) };
 
-    let mut key_flags = Vec::with_capacity(gamma);
-    let mut stats = Vec::with_capacity(gamma * 6);
-    let mut tokens: Vec<i32> = Vec::with_capacity(gamma + 1);
+    out.key_flags.clear();
+    out.key_flags.reserve(gamma);
+    out.stats.clear();
+    out.stats.reserve(gamma * 6);
+    out.tokens.clear();
+    out.tokens.reserve(gamma + 1);
+    s.mix_rows.clear();
+    s.mix_rows.reserve(gamma * vocab);
+    s.pd_rows.clear();
+    s.pd_rows.reserve(gamma * vocab);
     let mut accepted = 0usize;
     let mut rejected = false;
-    let mut mix_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
-    let mut pd_rows: Vec<Vec<f32>> = Vec::with_capacity(gamma);
 
-    let mut p_t = Vec::new();
-    let mut p_d = Vec::new();
     for j in 0..gamma {
         let y = d_tokens[j] as usize;
-        let lt: Vec<f32> = t_logits[j * vocab..(j + 1) * vocab]
-            .iter()
-            .map(|&x| x * inv_temp)
-            .collect();
-        let ld: Vec<f32> = d_logits[j * vocab..(j + 1) * vocab]
-            .iter()
-            .map(|&x| x * inv_temp)
-            .collect();
-        softmax(&lt, &mut p_t);
-        softmax(&ld, &mut p_d);
-        let pt_y = p_t[y];
-        let pd_y = p_d[y];
+        s.lt.clear();
+        s.lt.extend(t_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
+        s.ld.clear();
+        s.ld.extend(d_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
+        softmax(&s.lt, &mut s.p_t);
+        softmax(&s.ld, &mut s.p_d);
+        let pt_y = s.p_t[y];
+        let pd_y = s.p_d[y];
         let h_d = -(pd_y + EPS).ln();
         let h_t = -(pt_y + EPS).ln();
-        let normmatch = overlap(&p_t, &p_d);
+        let normmatch = overlap(&s.p_t, &s.p_d);
         let is_key = knobs.adaptive
             && (h_d / (h_t + EPS) > knobs.lam1
                 || (pt_y - pd_y).abs() > knobs.lam2
@@ -70,34 +116,33 @@ pub fn host_verify(
         let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
 
         // Eq. 8 in log space, renormalized.
-        let log_mix: Vec<f32> = p_t
-            .iter()
-            .zip(&p_d)
-            .map(|(&a, &b)| (1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln())
-            .collect();
-        let mut mix = Vec::new();
-        softmax(&log_mix, &mut mix);
+        s.log_mix.clear();
+        for (&a, &b) in s.p_t.iter().zip(&s.p_d) {
+            s.log_mix.push((1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln());
+        }
+        softmax(&s.log_mix, &mut s.mix);
 
         let (accept, accept_prob) = if greedy {
-            let blend: Vec<f32> = t_logits[j * vocab..(j + 1) * vocab]
-                .iter()
-                .zip(&d_logits[j * vocab..(j + 1) * vocab])
-                .map(|(&a, &b)| (1.0 - tau_j) * a + tau_j * b)
-                .collect();
-            let ok = argmax(&blend) == y;
+            s.blend.clear();
+            let tl = &t_logits[j * vocab..(j + 1) * vocab];
+            let dl = &d_logits[j * vocab..(j + 1) * vocab];
+            for (&a, &b) in tl.iter().zip(dl) {
+                s.blend.push((1.0 - tau_j) * a + tau_j * b);
+            }
+            let ok = argmax(&s.blend) == y;
             (ok, if ok { 1.0 } else { 0.0 })
         } else {
-            let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+            let ratio = (s.mix[y] / (pd_y + EPS)).min(1.0);
             (u_accept[j] < ratio, ratio)
         };
 
-        key_flags.push(is_key);
-        stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
-        mix_rows.push(mix);
-        pd_rows.push(p_d.clone());
+        out.key_flags.push(is_key);
+        out.stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+        s.mix_rows.extend_from_slice(&s.mix);
+        s.pd_rows.extend_from_slice(&s.p_d);
 
         if accept && !rejected {
-            tokens.push(y as i32);
+            out.tokens.push(y as i32);
             accepted += 1;
         } else if !rejected {
             rejected = true;
@@ -109,17 +154,14 @@ pub fn host_verify(
         if greedy {
             argmax(&t_logits[accepted * vocab..(accepted + 1) * vocab]) as i32
         } else {
-            let mix = &mix_rows[accepted];
-            let pd = &pd_rows[accepted];
-            let mut resid: Vec<f32> = mix
-                .iter()
-                .zip(pd)
-                .map(|(&m, &p)| (m - p).max(0.0))
-                .collect();
-            let mass: f32 = resid.iter().sum();
+            let mix = &s.mix_rows[accepted * vocab..(accepted + 1) * vocab];
+            let pd = &s.pd_rows[accepted * vocab..(accepted + 1) * vocab];
+            s.resid.clear();
+            s.resid.extend(mix.iter().zip(pd).map(|(&m, &p)| (m - p).max(0.0)));
+            let mass: f32 = s.resid.iter().sum();
             if mass > EPS {
-                resid.iter_mut().for_each(|r| *r /= mass);
-                sample_cdf(&resid, u_sample[accepted]) as i32
+                s.resid.iter_mut().for_each(|r| *r /= mass);
+                sample_cdf(&s.resid, u_sample[accepted]) as i32
             } else {
                 sample_cdf(mix, u_sample[accepted]) as i32
             }
@@ -127,17 +169,13 @@ pub fn host_verify(
     } else if greedy {
         argmax(&t_logits[gamma * vocab..(gamma + 1) * vocab]) as i32
     } else {
-        let lt: Vec<f32> = t_logits[gamma * vocab..(gamma + 1) * vocab]
-            .iter()
-            .map(|&x| x * inv_temp)
-            .collect();
-        let mut bonus = Vec::new();
-        softmax(&lt, &mut bonus);
-        sample_cdf(&bonus, u_sample[gamma]) as i32
+        s.lt.clear();
+        s.lt.extend(t_logits[gamma * vocab..(gamma + 1) * vocab].iter().map(|&x| x * inv_temp));
+        softmax(&s.lt, &mut s.p_t);
+        sample_cdf(&s.p_t, u_sample[gamma]) as i32
     };
-    tokens.push(corr);
-
-    VerifyOutcome { tokens, accepted, key_flags, stats }
+    out.tokens.push(corr);
+    out.accepted = accepted;
 }
 
 #[cfg(test)]
@@ -278,6 +316,50 @@ mod tests {
             worst = worst.max((c as f64 / trials as f64 - p_t[i] as f64).abs());
         }
         assert!(worst < 0.015, "max deviation {worst}");
+    }
+
+    #[test]
+    fn scratch_form_matches_allocating_form_with_reused_buffers() {
+        // One scratch + one outcome reused across many windows of
+        // varying γ/knobs must reproduce the allocating form exactly —
+        // the invariant that lets the round loop keep them for the
+        // sequence's whole lifetime.
+        let mut s = VerifyScratch::default();
+        let mut out = VerifyOutcome {
+            tokens: Vec::new(),
+            accepted: 0,
+            key_flags: Vec::new(),
+            stats: Vec::new(),
+        };
+        for seed in 0..40 {
+            let gamma = 1 + (seed as usize % 8);
+            let (t, d, toks, ua, us) = case(seed, gamma, 32, 0.5);
+            let adaptive = |temp: f32| VerifyKnobs {
+                tau: 0.4,
+                lam1: 2.5,
+                lam2: 0.25,
+                lam3: 0.45,
+                temp,
+                adaptive: true,
+            };
+            for knobs in [
+                VerifyKnobs::strict(1.0),
+                VerifyKnobs::strict(0.0),
+                adaptive(1.0),
+                adaptive(0.0),
+            ] {
+                let want = host_verify(gamma, 32, &t, &d, &toks, &ua, &us, knobs);
+                host_verify_with(gamma, 32, &t, &d, &toks, &ua, &us, knobs, &mut s, &mut out);
+                assert_eq!(want.tokens, out.tokens, "seed {seed}");
+                assert_eq!(want.accepted, out.accepted, "seed {seed}");
+                assert_eq!(want.key_flags, out.key_flags, "seed {seed}");
+                assert_eq!(
+                    want.stats.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out.stats.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "seed {seed}"
+                );
+            }
+        }
     }
 
     #[test]

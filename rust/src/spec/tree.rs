@@ -19,7 +19,7 @@
 use anyhow::{bail, Result};
 
 use crate::model::{TreeWindow, VerifyKnobs};
-use crate::sampling::{argmax, overlap, sample_cdf, softmax, softmax_with_temp};
+use crate::sampling::{argmax, overlap, sample_cdf, softmax, softmax_with_temp, top_k_indices_with};
 
 const EPS: f32 = 1e-9;
 
@@ -304,19 +304,6 @@ pub struct Expansion<'a> {
     pub child_depth: usize,
 }
 
-/// Indices of the top-`k` logits, descending (ties: lower index first).
-fn top_k(logits: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..logits.len()).collect();
-    idx.sort_by(|&a, &b| {
-        logits[b]
-            .partial_cmp(&logits[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
-    idx.truncate(k);
-    idx
-}
-
 /// Grow a [`DraftTree`] by top-k branching, level by level. `expand` is
 /// the draft model: it returns the logits row (length `vocab`) for each
 /// [`Expansion`], issued in row order. Returns the tree plus the stacked
@@ -355,6 +342,9 @@ where
     let mut frontier: Vec<(Option<usize>, Option<usize>, Vec<i32>)> =
         vec![(None, None, Vec::new())];
     let mut p = Vec::new();
+    // Top-k picks, reused across expansions (partial selection — see
+    // sampling::top_k_indices_with — replaces the old full index sort).
+    let mut picks: Vec<usize> = Vec::new();
     'levels: for level in 1..=depth {
         let mut next: Vec<(Option<usize>, Option<usize>, Vec<i32>)> = Vec::new();
         for (node, parent_row, path) in frontier {
@@ -368,10 +358,10 @@ where
                 bail!("draft expansion returned {} logits, expected vocab {vocab}", logits.len());
             }
             softmax_with_temp(&logits, temp, &mut p);
-            let picks = top_k(&logits, branching);
+            top_k_indices_with(&logits, branching, &mut picks);
             rows.extend_from_slice(&logits);
             n_expansions += 1;
-            for tok in picks {
+            for &tok in &picks {
                 if tokens.len() >= cap {
                     break;
                 }

@@ -1,0 +1,112 @@
+//! Counting global allocator behind the `alloc-count` feature — the
+//! instrumentation that makes the zero-allocation hot path *durable*:
+//! `benches/hotpath.rs` reports allocs/round next to ns/round and fails
+//! on budget regression, and `tests/alloc_budget.rs` pins the budget per
+//! round kind.
+//!
+//! With the feature enabled, `lib.rs` installs [`CountingAlloc`] as the
+//! `#[global_allocator]`; every `alloc`/`alloc_zeroed`/`realloc` bumps a
+//! relaxed atomic (deallocation is free — the budget tracks allocation
+//! *events*, the thing that stalls the round loop). Without the feature
+//! the module still compiles: [`enabled`] returns `false` and
+//! [`measure`] reports zero, so benches print "n/a" instead of lying.
+
+/// Allocation-event count observed by [`measure`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AllocCounts {
+    /// Number of allocation events (alloc + alloc_zeroed + realloc).
+    pub allocs: u64,
+    /// Total bytes requested by those events.
+    pub bytes: u64,
+}
+
+#[cfg(feature = "alloc-count")]
+mod imp {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+    pub static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// System allocator wrapper that counts allocation events.
+    pub struct CountingAlloc;
+
+    unsafe impl GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+}
+
+#[cfg(feature = "alloc-count")]
+pub use imp::CountingAlloc;
+
+/// Whether allocation counting is compiled in (the `alloc-count` feature).
+pub fn enabled() -> bool {
+    cfg!(feature = "alloc-count")
+}
+
+/// Current cumulative counts (zeros when counting is disabled).
+pub fn current() -> AllocCounts {
+    #[cfg(feature = "alloc-count")]
+    {
+        use std::sync::atomic::Ordering;
+        AllocCounts {
+            allocs: imp::ALLOCS.load(Ordering::Relaxed),
+            bytes: imp::BYTES.load(Ordering::Relaxed),
+        }
+    }
+    #[cfg(not(feature = "alloc-count"))]
+    {
+        AllocCounts::default()
+    }
+}
+
+/// Run `f` and report the allocation events it performed (zeros when
+/// counting is disabled — check [`enabled`] before asserting on it).
+pub fn measure<R, F: FnOnce() -> R>(f: F) -> (R, AllocCounts) {
+    let before = current();
+    let r = f();
+    let after = current();
+    let counts = AllocCounts {
+        allocs: after.allocs - before.allocs,
+        bytes: after.bytes - before.bytes,
+    };
+    (r, counts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_consistently_with_feature() {
+        let (v, counts) = measure(|| vec![1u64; 128]);
+        assert_eq!(v[0], 1);
+        assert_eq!(v.len(), 128);
+        if enabled() {
+            assert!(counts.allocs >= 1, "a fresh Vec must count: {counts:?}");
+            assert!(counts.bytes >= 128 * 8);
+        } else {
+            assert_eq!(counts, AllocCounts::default());
+        }
+    }
+}

@@ -33,6 +33,10 @@ pub struct BenchResult {
     pub min_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    /// Mean allocation events per iteration, measured across the whole
+    /// timed loop when the `alloc-count` feature is active; `None` when
+    /// counting is compiled out (printed as `n/a`, never as a fake 0).
+    pub allocs_per_iter: Option<f64>,
 }
 
 impl BenchResult {
@@ -46,31 +50,46 @@ impl BenchResult {
                 format!("{:.0} ns", ns)
             }
         }
+        let allocs = match self.allocs_per_iter {
+            Some(a) => format!("{a:.1}"),
+            None => "n/a".to_string(),
+        };
         format!(
-            "{:<36} iters={:<6} mean={:<10} min={:<10} p50={:<10} p95={}",
+            "{:<36} iters={:<6} mean={:<10} min={:<10} p50={:<10} p95={:<10} allocs/iter={}",
             self.name,
             self.iters,
             fmt(self.mean_ns),
             fmt(self.min_ns),
             fmt(self.p50_ns),
             fmt(self.p95_ns),
+            allocs,
         )
     }
 }
 
-/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs. With
+/// the `alloc-count` feature active, also reports the mean allocation
+/// events per iteration over the timed loop (timestamping itself does
+/// not allocate, so the count is the workload's own).
 pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> BenchResult {
     for _ in 0..warmup {
         f();
     }
     let mut samples = Vec::with_capacity(iters as usize);
+    let allocs_before = crate::util::alloc_counter::current().allocs;
     for _ in 0..iters {
         let t0 = Instant::now();
         f();
         samples.push(t0.elapsed().as_nanos() as f64);
     }
+    let allocs_after = crate::util::alloc_counter::current().allocs;
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let allocs_per_iter = if crate::util::alloc_counter::enabled() {
+        Some((allocs_after - allocs_before) as f64 / iters as f64)
+    } else {
+        None
+    };
     BenchResult {
         name: name.to_string(),
         iters,
@@ -78,6 +97,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: u64, iters: u64, mut f: F) -> Bench
         min_ns: samples[0],
         p50_ns: samples[samples.len() / 2],
         p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        allocs_per_iter,
     }
 }
 

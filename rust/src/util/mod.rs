@@ -1,8 +1,10 @@
 //! Self-contained substrates (the build environment is offline; no serde,
 //! clap, rand, or criterion in the crate cache — see Cargo.toml).
 
+pub mod alloc_counter;
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod scratch;
 pub mod table;

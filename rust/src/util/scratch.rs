@@ -1,0 +1,160 @@
+//! Reusable hot-path buffers: the steady-state round loop must not
+//! allocate (PAPER.md Eq. 4's t2/t3 terms — every `malloc` in
+//! `local_work` is drafting/verification throughput reclaimed from the
+//! link and thrown away again).
+//!
+//! A [`RoundScratch`] is an arena of growable buffers owned by whoever
+//! drives decode rounds (`OracleChainDecoder`, `DecodeEngine`) and
+//! threaded through the draft/verify/commit phases. Buffers are `clear()`ed
+//! per use, never dropped, so after a few warmup rounds every one has
+//! reached its high-water capacity and the round performs **zero** heap
+//! allocations — pinned by `tests/alloc_budget.rs` under the
+//! `alloc-count` feature and gated in CI by `benches/hotpath.rs`.
+//!
+//! Layering: this module holds plain `Vec` buffers only (no model/spec
+//! types), so every layer above `util` can take a scratch without a
+//! dependency cycle.
+
+/// Buffers for one host verification pass (`spec::reference::
+/// host_verify_with`, and the tree twin). Row buffers hold one
+/// vocab-length distribution; `mix_rows`/`pd_rows` hold the flattened
+/// `[gamma, vocab]` per-slot distributions the correction resample needs.
+#[derive(Debug, Clone, Default)]
+pub struct VerifyScratch {
+    /// Temperature-scaled target logits row.
+    pub lt: Vec<f32>,
+    /// Temperature-scaled draft logits row.
+    pub ld: Vec<f32>,
+    /// Target distribution row (softmax of `lt`).
+    pub p_t: Vec<f32>,
+    /// Draft distribution row (softmax of `ld`).
+    pub p_d: Vec<f32>,
+    /// Eq. 8 log-space mixture row before renormalization.
+    pub log_mix: Vec<f32>,
+    /// Renormalized mixture row.
+    pub mix: Vec<f32>,
+    /// All mixture rows, `[gamma, vocab]` flattened (correction input).
+    pub mix_rows: Vec<f32>,
+    /// All draft distribution rows, `[gamma, vocab]` flattened.
+    pub pd_rows: Vec<f32>,
+    /// Residual distribution for the correction resample.
+    pub resid: Vec<f32>,
+    /// Greedy-path blended logits row.
+    pub blend: Vec<f32>,
+}
+
+impl VerifyScratch {
+    /// Pre-reserve for windows up to `gamma` over a `vocab`-wide model,
+    /// so the first verification after this call does not grow anything.
+    pub fn reserve(&mut self, gamma: usize, vocab: usize) {
+        for b in [
+            &mut self.lt,
+            &mut self.ld,
+            &mut self.p_t,
+            &mut self.p_d,
+            &mut self.log_mix,
+            &mut self.mix,
+            &mut self.resid,
+            &mut self.blend,
+        ] {
+            b.reserve(vocab);
+        }
+        self.mix_rows.reserve(gamma * vocab);
+        self.pd_rows.reserve(gamma * vocab);
+    }
+}
+
+/// The full per-sequence round arena: sampling rows, uniform vectors,
+/// window/t_logits accumulators, and a small recycling pool for the
+/// draft-window `(tokens, logits)` pairs that circulate between the
+/// speculate-ahead pre-draft and the next round's draft phase.
+#[derive(Debug, Clone, Default)]
+pub struct RoundScratch {
+    /// Verification buffers (disjoint field so a caller can borrow the
+    /// round buffers immutably while verification writes).
+    pub verify: VerifyScratch,
+    /// Softmax/probability row for sampling.
+    pub probs: Vec<f32>,
+    /// Logits row (draft or target output of one step).
+    pub row: Vec<f32>,
+    /// Second logits row (e.g. the target row a synthetic draft row is
+    /// correlated against).
+    pub row2: Vec<f32>,
+    /// Target logits for the whole verify window, `[γ+1, vocab]`.
+    pub t_logits: Vec<f32>,
+    /// Acceptance uniforms for the round (γ entries).
+    pub u_accept: Vec<f32>,
+    /// Correction/bonus sampling uniforms (γ+1 entries).
+    pub u_sample: Vec<f32>,
+    /// Committed-prefix + drafted-continuation token buffer.
+    pub chain: Vec<i32>,
+    /// Recycled `(tokens, logits)` draft-window pairs. The overlap
+    /// scheduler keeps up to [`RoundScratch::SPARE_CAP`] pairs circulating:
+    /// one inside the pending `PreDraft`, one inside the in-flight round's
+    /// prep, the rest parked here.
+    pub spare: Vec<(Vec<i32>, Vec<f32>)>,
+}
+
+impl RoundScratch {
+    /// Cap on parked draft-window pairs (the overlap cycle needs 2; a
+    /// little headroom tolerates discard bursts without unbounded growth).
+    pub const SPARE_CAP: usize = 4;
+
+    /// Take a cleared `(tokens, logits)` pair, recycling a parked one
+    /// when available.
+    pub fn take_pair(&mut self) -> (Vec<i32>, Vec<f32>) {
+        match self.spare.pop() {
+            Some((mut a, mut b)) => {
+                a.clear();
+                b.clear();
+                (a, b)
+            }
+            None => (Vec::new(), Vec::new()),
+        }
+    }
+
+    /// Park a pair for reuse (dropped instead once the pool is full).
+    pub fn recycle_pair(&mut self, mut a: Vec<i32>, mut b: Vec<f32>) {
+        if self.spare.len() < Self::SPARE_CAP {
+            a.clear();
+            b.clear();
+            self.spare.push((a, b));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_pool_recycles_capacity() {
+        let mut s = RoundScratch::default();
+        let (mut a, mut b) = s.take_pair();
+        a.extend_from_slice(&[1, 2, 3]);
+        b.extend_from_slice(&[0.5; 64]);
+        let (cap_a, cap_b) = (a.capacity(), b.capacity());
+        s.recycle_pair(a, b);
+        let (a2, b2) = s.take_pair();
+        assert!(a2.is_empty() && b2.is_empty(), "recycled pairs come back cleared");
+        assert_eq!(a2.capacity(), cap_a);
+        assert_eq!(b2.capacity(), cap_b);
+    }
+
+    #[test]
+    fn pair_pool_is_bounded() {
+        let mut s = RoundScratch::default();
+        for _ in 0..(RoundScratch::SPARE_CAP + 3) {
+            s.recycle_pair(Vec::new(), Vec::new());
+        }
+        assert_eq!(s.spare.len(), RoundScratch::SPARE_CAP);
+    }
+
+    #[test]
+    fn verify_reserve_prevents_growth() {
+        let mut v = VerifyScratch::default();
+        v.reserve(8, 64);
+        assert!(v.lt.capacity() >= 64);
+        assert!(v.mix_rows.capacity() >= 8 * 64);
+    }
+}

@@ -1,0 +1,156 @@
+//! Allocation-budget regression pins (the durable half of the
+//! zero-allocation hot path): with the `alloc-count` feature's counting
+//! global allocator installed, a **steady-state** engine-free decode
+//! round must perform exactly **zero** heap allocations — chain rounds
+//! (overlap on and off, every controller) and fused group rounds alike.
+//!
+//! "Steady state" means after warmup + [`OracleChainDecoder::warm_capacity`]:
+//! every scratch buffer has reached its high-water capacity, the
+//! pre-draft pair pool is primed, and the committed-token vectors are
+//! reserved for the measured horizon. Out-of-budget by design (see
+//! EXPERIMENTS.md §Perf): prefill, sequence admission, buffer warmup
+//! itself, and engine-backed rounds (PJRT upload/download own the
+//! allocations there), plus tree rounds pending the tree-artifact
+//! export.
+//!
+//! Run: `cargo test --features alloc-count --test alloc_budget`
+//! (without the feature this file compiles to an empty test crate).
+#![cfg(feature = "alloc-count")]
+
+use std::sync::{Mutex, MutexGuard};
+
+use dsd::control::ControllerKind;
+use dsd::coordinator::{OracleChainDecoder, OracleConfig, OracleFleet, OracleRound};
+use dsd::util::alloc_counter;
+
+const PROMPT: [i32; 6] = [2, 7, 1, 8, 2, 8];
+const WARMUP_ROUNDS: usize = 40;
+const MEASURED_ROUNDS: usize = 50;
+
+/// The allocation counter is process-global, so the `== 0` assertions
+/// must not overlap another test's allocations — every test serializes
+/// on this lock (poisoning from an earlier failure is ignored: the
+/// counter itself carries no state worth protecting).
+static MEASURE_LOCK: Mutex<()> = Mutex::new(());
+
+fn measure_lock() -> MutexGuard<'static, ()> {
+    MEASURE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn warmed(
+    overlap: bool,
+    controller: ControllerKind,
+    seed: u64,
+) -> (OracleChainDecoder, OracleRound) {
+    let cfg = OracleConfig { overlap, controller, seed, ..Default::default() };
+    let mut dec = OracleChainDecoder::new(cfg, &PROMPT).unwrap();
+    let mut buf = OracleRound::default();
+    for _ in 0..WARMUP_ROUNDS {
+        dec.round_into(&mut buf);
+    }
+    dec.warm_capacity(16 * 1024);
+    // an adaptive controller may widen γ after warmup — reserve the
+    // reused record past any grid γ so its refill cannot grow it
+    buf.committed.reserve(64);
+    (dec, buf)
+}
+
+#[test]
+fn counting_allocator_is_live() {
+    let _serial = measure_lock();
+    assert!(alloc_counter::enabled());
+    let (v, counts) = alloc_counter::measure(|| vec![7u64; 64]);
+    assert_eq!(v[0], 7);
+    assert!(counts.allocs >= 1, "a fresh Vec must be counted: {counts:?}");
+}
+
+#[test]
+fn steady_chain_round_is_allocation_free() {
+    // The headline budget: a steady-state speculative chain round — the
+    // loop body the whole serving system spins in — touches the heap
+    // exactly zero times, for every scheduler × controller combination.
+    let _serial = measure_lock();
+    for (overlap, controller) in [
+        (false, ControllerKind::Static),
+        (true, ControllerKind::Static),
+        (true, ControllerKind::Aimd),
+        (true, ControllerKind::CostOptimal),
+    ] {
+        let (mut dec, mut buf) = warmed(overlap, controller, 11);
+        let (_, counts) = alloc_counter::measure(|| {
+            for _ in 0..MEASURED_ROUNDS {
+                dec.round_into(&mut buf);
+            }
+        });
+        assert_eq!(
+            counts.allocs,
+            0,
+            "overlap={overlap} controller={controller:?}: \
+             {MEASURED_ROUNDS} steady rounds performed {} allocations ({} bytes)",
+            counts.allocs,
+            counts.bytes
+        );
+    }
+}
+
+#[test]
+fn steady_overlap_round_pre_drafts_without_allocating() {
+    // The overlap-on case must actually exercise the pre-draft machinery
+    // (produce + consume/discard pre-drafted windows) while staying at
+    // zero — the recycled pair pool, not a quiet no-op path.
+    let _serial = measure_lock();
+    let (mut dec, mut buf) = warmed(true, ControllerKind::Static, 23);
+    let mut pre_drafted = 0usize;
+    let mut classified = 0usize;
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            dec.round_into(&mut buf);
+            pre_drafted += buf.pre_drafted;
+            classified += buf.reused + buf.wasted;
+        }
+    });
+    assert_eq!(counts.allocs, 0, "{counts:?}");
+    assert!(pre_drafted > 0, "overlap rounds must speculate ahead");
+    assert!(classified > 0, "pre-drafts must be consumed or discarded");
+}
+
+#[test]
+fn steady_fused_group_round_is_allocation_free() {
+    let _serial = measure_lock();
+    let base = OracleConfig { seed: 13, ..Default::default() };
+    let batch = 4usize;
+    let mut fleet = OracleFleet::new(&base, batch, &PROMPT).unwrap();
+    // horizon far beyond the measured rounds: every member stays active
+    let horizon = 1_000_000usize;
+    for _ in 0..WARMUP_ROUNDS {
+        assert!(fleet.serve_round(horizon, batch, 64));
+    }
+    fleet.warm_capacity(16 * 1024);
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            fleet.serve_round(horizon, batch, 64);
+        }
+    });
+    assert_eq!(
+        counts.allocs,
+        0,
+        "{MEASURED_ROUNDS} fused group rounds performed {} allocations ({} bytes)",
+        counts.allocs,
+        counts.bytes
+    );
+}
+
+#[test]
+fn warmup_itself_is_the_only_allocator() {
+    // Sanity for the budget's definition: the FIRST rounds do allocate
+    // (growing the scratch to its high-water marks) — the budget is a
+    // steady-state property, not a cold-start one.
+    let _serial = measure_lock();
+    let cfg = OracleConfig { seed: 31, ..Default::default() };
+    let mut dec = OracleChainDecoder::new(cfg, &PROMPT).unwrap();
+    let mut buf = OracleRound::default();
+    let (_, cold) = alloc_counter::measure(|| {
+        dec.round_into(&mut buf);
+    });
+    assert!(cold.allocs > 0, "cold rounds grow buffers; counting must see that");
+}

@@ -20,14 +20,14 @@ fn engine() -> Rc<Engine> {
 }
 
 fn run_pipeline(model: &ShardedModel, tokens: &[i32], pos: usize) -> Vec<f32> {
-    let m = model.engine.manifest().model.clone();
+    let m = model.engine.manifest().model;
     let w = tokens.len();
     let mut caches: Vec<KvCache> = model
         .stage_dims()
         .iter()
         .map(|&[l, s, h, d]| KvCache::new(l, s, h, d))
         .collect();
-    let mut x = StageInput::Tokens(tokens.to_vec());
+    let mut x = StageInput::Tokens(tokens);
     let mut out = Vec::new();
     for (i, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(w, &x, &mut caches[i], pos).unwrap();
@@ -66,7 +66,7 @@ fn incremental_windows_match_recompute() {
     // 21 tokens — the KV-frontier invariant end to end.
     let e = engine();
     let model = ShardedModel::new(e.clone(), 2, "d2_s000").unwrap();
-    let m = e.manifest().model.clone();
+    let m = e.manifest().model;
     let mut rng = Rng::new(2);
     let prompt: Vec<i32> = (0..16).map(|_| rng.below(512) as i32).collect();
     let win: Vec<i32> = (0..5).map(|_| rng.below(512) as i32).collect();
@@ -79,14 +79,14 @@ fn incremental_windows_match_recompute() {
         .collect();
     let mut padded = prompt.clone();
     padded.resize(m.prefill_window, 0);
-    let mut x = StageInput::Tokens(padded);
+    let mut x = StageInput::Tokens(&padded);
     for (i, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(m.prefill_window, &x, &mut caches[i], 0).unwrap();
         if i + 1 < model.n_shards() {
             x = StageInput::Hidden(o.data);
         }
     }
-    let mut x = StageInput::Tokens(win.clone());
+    let mut x = StageInput::Tokens(&win);
     let mut via_cache = Vec::new();
     for (i, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(5, &x, &mut caches[i], 16).unwrap();
@@ -107,7 +107,7 @@ fn incremental_windows_match_recompute() {
         .collect();
     let mut padded = all.clone();
     padded.resize(m.prefill_window, 0);
-    let mut x = StageInput::Tokens(padded);
+    let mut x = StageInput::Tokens(&padded);
     let mut direct = Vec::new();
     for (i, stage) in model.stages.iter().enumerate() {
         let (o, _) = stage.run(m.prefill_window, &x, &mut caches2[i], 0).unwrap();
@@ -133,7 +133,7 @@ fn draft_steps_chain_against_prefill() {
     // must reproduce the logits row a 5-token prefill puts at row 4.
     let e = engine();
     let model = ShardedModel::new(e.clone(), 2, "d2_s000").unwrap();
-    let m = e.manifest().model.clone();
+    let m = e.manifest().model;
     let toks: Vec<i32> = vec![11, 22, 33, 44, 55, 66];
 
     let [l, s, h, d] = model.draft.cache_dims();
@@ -181,7 +181,7 @@ fn verify_kernel_matches_host_reference() {
             let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
             let (kernel, _) = model
                 .verify
-                .run(gamma, t.clone(), d.clone(), toks.clone(), ua.clone(), us.clone(), knobs)
+                .run(gamma, &t, &d, &toks, &ua, &us, knobs)
                 .unwrap();
             let host = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
             assert_eq!(kernel.accepted, host.accepted, "gamma={gamma} knobs={knobs:?}");
