@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::cluster::clock::Nanos;
 use crate::cluster::topology::LinkModel;
 use crate::control::cost::{CAL_DRAFT_STEP_NS, CAL_PER_TOKEN_PASS_NS};
 use crate::control::{clamp_gamma, ControlConfig, ControllerKind, CostModel, SeqController};
@@ -30,6 +31,7 @@ use crate::model::{DraftExecutor, StageExecutor, StageInput, VerifyExecutor, Ver
 use crate::runtime::Engine;
 use crate::sampling::{argmax, sample_logits_with};
 use crate::spec::{AcceptanceStats, DecodeConfig, Policy, RoundRecord};
+use crate::trace::{NoopSink, SpanEvent, SpanKind, TraceKey, TraceSink, Track};
 
 /// Wire messages between node threads.
 enum Wire {
@@ -258,6 +260,24 @@ impl RealCluster {
         prompt: &[i32],
         cfg: &DecodeConfig,
     ) -> Result<(RealResult, AcceptanceStats)> {
+        self.serve_one_traced(id, prompt, cfg, &mut NoopSink)
+    }
+
+    /// [`serve_one`](Self::serve_one) with wall-clock span tracing: each
+    /// decode round emits decision/draft/link/verify/commit spans into
+    /// `sink`, timestamped in nanoseconds since the request started —
+    /// the real-transport twin of the simulated tracer (see
+    /// [`crate::trace`]). Predicted round times come from the same
+    /// engine-free cost model the sim path prices with, so exported
+    /// traces carry a wall-clock calibration-drift signal per round
+    /// (legitimately nonzero here, unlike the exact sim path).
+    pub fn serve_one_traced(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        cfg: &DecodeConfig,
+        sink: &mut dyn TraceSink,
+    ) -> Result<(RealResult, AcceptanceStats)> {
         cfg.validate()?;
         if !cfg.shape.is_chain() {
             bail!(
@@ -309,16 +329,30 @@ impl RealCluster {
             && committed.len() + cfg.gamma + 1 < m.max_seq
         {
             rounds += 1;
+            sink.set_key(TraceKey::new(id as u32, (rounds - 1) as u32, rounds as u32));
             match cfg.policy {
                 Policy::Autoregressive => {
+                    let r0 = t_start.elapsed().as_nanos() as Nanos;
                     let pos = committed.len() - 1;
                     let logits = self.window_pass(id, &committed[pos..=pos], pos)?;
                     let u = sample_uniform(sseed, pos, 0);
                     let tok = sample_logits_with(&logits[..m.vocab], cfg.temp, u);
                     committed.push(tok as i32);
+                    if sink.enabled() {
+                        let r1 = t_start.elapsed().as_nanos() as Nanos;
+                        let track = Track::Seq(id as u32);
+                        sink.record(SpanEvent::new(SpanKind::Commit, track, r1, 0).args(1, 0, 0));
+                        sink.record(SpanEvent::new(
+                            SpanKind::Round,
+                            track,
+                            r0,
+                            r1.saturating_sub(r0),
+                        ));
+                    }
                 }
                 Policy::Eagle3 | Policy::Dsd => {
-                    let out = self.speculative_round(id, &mut committed, cfg, sseed)?;
+                    let out =
+                        self.speculative_round(id, &mut committed, cfg, sseed, t_start, sink)?;
                     accept.record(RoundRecord::chain(cfg.gamma, out.0, out.1, out.2));
                 }
             }
@@ -336,21 +370,57 @@ impl RealCluster {
     }
 
     /// One speculative round; returns (accepted, committed, key_tokens).
+    /// Wall-clock spans (relative to `base`) go to `sink`; with the
+    /// no-op sink the timestamp reads are the only overhead.
     fn speculative_round(
         &mut self,
         id: u64,
         committed: &mut Vec<i32>,
         cfg: &DecodeConfig,
         sseed: u64,
+        base: Instant,
+        sink: &mut dyn TraceSink,
     ) -> Result<(usize, usize, usize)> {
         let m = self.dims();
         let gamma = cfg.gamma;
         let i = committed.len() - 1;
+        let track = Track::Seq(id as u32);
+        let r0 = base.elapsed().as_nanos() as Nanos;
+        let predicted = if sink.enabled() {
+            // Catch-up steps the draft replays + γ window steps: the
+            // same draft term the sim path prices.
+            let frontier = self.draft_caches.get(&id).map(|e| e.1).unwrap_or(i);
+            let draft_steps = (i - frontier) + gamma;
+            let p = self.control_config(cfg).cost.round_time_ns(gamma, draft_steps);
+            sink.record(
+                SpanEvent::new(SpanKind::Decision, track, r0, 0).args(
+                    gamma as u64,
+                    p,
+                    cfg.tau.to_bits() as u64,
+                ),
+            );
+            p
+        } else {
+            0
+        };
         let (d_tokens, d_logits) = self.draft_window(id, committed, gamma, cfg.temp, sseed)?;
+        let d1 = base.elapsed().as_nanos() as Nanos;
+        sink.record(
+            SpanEvent::new(SpanKind::Draft, track, r0, d1.saturating_sub(r0))
+                .args(gamma as u64, 0, 0),
+        );
         let mut window = Vec::with_capacity(gamma + 1);
         window.push(committed[i]);
         window.extend_from_slice(&d_tokens);
         let t_logits = self.window_pass(id, &window, i)?;
+        let w1 = base.elapsed().as_nanos() as Nanos;
+        sink.record(
+            SpanEvent::new(SpanKind::LinkBusy, Track::Link(0), d1, w1.saturating_sub(d1)).args(
+                ((gamma + 1) * m.d_model * 4) as u64,
+                self.return_link.base_ns,
+                0,
+            ),
+        );
         let u_accept: Vec<f32> = (0..gamma).map(|j| accept_uniform(sseed, i, j)).collect();
         let u_sample: Vec<f32> = (0..=gamma).map(|j| sample_uniform(sseed, i, j)).collect();
         let knobs = VerifyKnobs {
@@ -369,7 +439,25 @@ impl RealCluster {
             entry.1 = i + out.accepted.min(gamma.saturating_sub(1)) + 1;
         }
         committed.extend_from_slice(&out.tokens);
-        let _ = m;
+        if sink.enabled() {
+            let v1 = base.elapsed().as_nanos() as Nanos;
+            sink.record(
+                SpanEvent::new(SpanKind::Verify, track, w1, v1.saturating_sub(w1))
+                    .args(gamma as u64, 0, 0),
+            );
+            sink.record(SpanEvent::new(SpanKind::Commit, track, v1, 0).args(
+                out.tokens.len() as u64,
+                out.accepted as u64,
+                0,
+            ));
+            sink.record(
+                SpanEvent::new(SpanKind::Round, track, r0, v1.saturating_sub(r0)).args(
+                    gamma as u64,
+                    predicted,
+                    0,
+                ),
+            );
+        }
         Ok((
             out.accepted,
             out.tokens.len(),

@@ -25,6 +25,7 @@
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::topology::Topology;
+use crate::trace::{RingTracer, SpanEvent, SpanKind, TraceKey, TraceSink, Track};
 use crate::util::rng::Rng;
 
 /// Cumulative communication/computation accounting.
@@ -79,6 +80,13 @@ pub struct PipelineSim {
     /// Reusable per-stage compute buffer for [`Self::window_pass`] (the
     /// steady-state round loop must not allocate — see util::scratch).
     stage_scratch: Vec<Nanos>,
+    /// Optional span tracer (see [`crate::trace`]): when installed,
+    /// every pass records per-node compute and per-link occupancy
+    /// spans in sim time, and round drivers add the semantic
+    /// round/draft/verify spans via [`Self::trace_span`]. `None`
+    /// costs one branch per recording site; recording into the
+    /// preallocated ring never allocates.
+    tracer: Option<RingTracer>,
 }
 
 impl PipelineSim {
@@ -93,6 +101,42 @@ impl PipelineSim {
             rng: Rng::new(seed),
             stats: SimStats::default(),
             stage_scratch: Vec::new(),
+            tracer: None,
+        }
+    }
+
+    /// Install a span tracer; subsequent passes record into its ring.
+    pub fn set_tracer(&mut self, tracer: RingTracer) {
+        self.tracer = Some(tracer);
+    }
+
+    /// Remove and return the tracer (export time).
+    pub fn take_tracer(&mut self) -> Option<RingTracer> {
+        self.tracer.take()
+    }
+
+    pub fn tracer(&self) -> Option<&RingTracer> {
+        self.tracer.as_ref()
+    }
+
+    pub fn tracing(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Set the (sequence, round, group) key stamped onto every span
+    /// recorded until the next call — round drivers set it before
+    /// dispatching work for a sequence's round.
+    pub fn trace_key(&mut self, key: TraceKey) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.set_key(key);
+        }
+    }
+
+    /// Record a semantic span (round/draft/verify/… on a sequence
+    /// track) under the current key. No-op without a tracer.
+    pub fn trace_span(&mut self, ev: SpanEvent) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.record(ev);
         }
     }
 
@@ -119,6 +163,9 @@ impl PipelineSim {
         self.stats.compute_ns += d;
         let finish = begin + d;
         self.busy_until[0] = finish;
+        if let Some(t) = self.tracer.as_mut() {
+            t.record(SpanEvent::new(SpanKind::NodeCompute, Track::Node(0), begin, d));
+        }
         finish
     }
 
@@ -150,10 +197,14 @@ impl PipelineSim {
             t = begin + d;
             compute += d;
             self.busy_until[i] = t;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.record(SpanEvent::new(SpanKind::NodeCompute, Track::Node(i as u16), begin, d));
+            }
             if i == 0 {
                 stage0_release = t;
             }
             if i + 1 < n {
+                let base_ns = self.topo.hop(i).base_ns;
                 let hop = self.topo.hop(i).transfer_time(msg_bytes, Some(&mut self.rng));
                 let li = i % self.link_busy_until.len();
                 let begin = t.max(self.link_busy_until[li]);
@@ -163,9 +214,16 @@ impl PipelineSim {
                 comm += hop;
                 self.stats.messages += 1;
                 self.stats.bytes += msg_bytes as u64;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.record(
+                        SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
+                            .args(msg_bytes as u64, base_ns, 0),
+                    );
+                }
             }
         }
         if return_to_leader && n > 1 {
+            let base_ns = self.topo.hop(n - 1).base_ns;
             let hop = self
                 .topo
                 .hop(n - 1)
@@ -178,6 +236,12 @@ impl PipelineSim {
             comm += hop;
             self.stats.messages += 1;
             self.stats.bytes += return_bytes as u64;
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.record(
+                    SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
+                        .args(return_bytes as u64, base_ns, 0),
+                );
+            }
         }
         self.stats.comm_ns += comm;
         self.stats.compute_ns += compute;
@@ -246,11 +310,15 @@ impl PipelineSim {
         self.window_pass(start, width, per_token_stage, fwd_bytes_per_token, ret_bytes_per_token)
     }
 
-    /// Reset busy times and stats (new experiment, same topology).
+    /// Reset busy times, stats, and any recorded trace events (new
+    /// experiment, same topology; an installed tracer stays installed).
     pub fn reset(&mut self) {
         self.busy_until.iter_mut().for_each(|b| *b = 0);
         self.link_busy_until.iter_mut().for_each(|b| *b = 0);
         self.stats = SimStats::default();
+        if let Some(t) = self.tracer.as_mut() {
+            t.clear();
+        }
     }
 }
 
@@ -360,6 +428,28 @@ mod tests {
         let mut s1 = sim(1, 2.0);
         let t1 = s1.pipeline_pass(0, &[5_000], 0, 0, false);
         assert_eq!(t1.stage0_release, t1.finish);
+    }
+
+    #[test]
+    fn tracer_records_node_and_link_spans() {
+        let mut s = sim(3, 2.0);
+        s.set_tracer(RingTracer::with_capacity(64));
+        s.trace_key(TraceKey::new(1, 2, 3));
+        let t = s.pipeline_pass(0, &[1_000; 3], 64, 128, true);
+        let done = s.local_work(t.finish, 5_000);
+        let tr = s.take_tracer().unwrap();
+        let evs: Vec<SpanEvent> = tr.events().copied().collect();
+        let computes = evs.iter().filter(|e| e.kind == SpanKind::NodeCompute).count();
+        let links: Vec<&SpanEvent> =
+            evs.iter().filter(|e| e.kind == SpanKind::LinkBusy).collect();
+        assert_eq!(computes, 3 + 1, "3 stage computes + 1 local work");
+        assert_eq!(links.len(), 3, "2 forward hops + 1 return hop");
+        assert!(evs.iter().all(|e| e.key == TraceKey::new(1, 2, 3)), "key stamped on spans");
+        assert!(links.iter().all(|e| e.b == 2_000_000), "t1 recorded for decomposition");
+        assert_eq!(links.iter().map(|e| e.dur).sum::<Nanos>(), t.comm_ns);
+        assert_eq!(links[0].a, 64, "forward payload bytes");
+        assert_eq!(links[2].a, 128, "return payload bytes");
+        assert_eq!(evs.last().unwrap().end(), done);
     }
 
     #[test]

@@ -81,6 +81,7 @@ use crate::runtime::ModelDims;
 use crate::sampling::{argmax, sample_logits_into};
 use crate::spec::tree::{build_tree, host_verify_tree, DraftShape, TreeVerifyResult};
 use crate::spec::{DecodeConfig, Policy, RoundRecord};
+use crate::trace::{SpanEvent, SpanKind, TraceKey, Track};
 use crate::util::scratch::RoundScratch;
 
 /// Timing + acceptance outcome of one round.
@@ -121,6 +122,12 @@ pub struct RoundOutcome {
     /// Fused group width this round's pipeline pass carried (1 = solo;
     /// 0 in legacy default-constructed outcomes, treated as 1).
     pub fuse_width: usize,
+    /// Controller cost-model prediction for this round's latency (solo
+    /// pricing at the realized draft-step count; 0 = no prediction —
+    /// AR and tree rounds don't carry one).
+    pub predicted_ns: Nanos,
+    /// Actual round latency: commit time minus round start.
+    pub round_ns: Nanos,
 }
 
 impl RoundOutcome {
@@ -159,6 +166,11 @@ struct ChainPrep {
     d_tokens: Vec<i32>,
     d_logits: Vec<f32>,
     draft_ns_total: Nanos,
+    /// Draft-model steps behind `draft_ns_total` (catch-up replays +
+    /// window steps; 0 on full reuse) — what the cost model prices.
+    draft_steps: usize,
+    /// Sim time the member's round started at (`ready_at` when prepped).
+    start: Nanos,
     /// Sim time the member's leader-local drafting finished.
     draft_done: Nanos,
     reused: usize,
@@ -249,9 +261,16 @@ impl DecodeEngine {
         let mut padded = seq.committed.clone();
         padded.resize(w, 0);
 
-        // Target pipeline pass over the padded prompt.
+        // Target pipeline pass over the padded prompt. Prefill is not a
+        // decode round: its spans are keyed to the sentinel round index
+        // so the round-containment validator skips them.
         let (logits, stage_times, fwd_bytes, ret_bytes) =
             self.pipeline_window(seq, pool, &padded, 0, w)?;
+        sim.trace_key(TraceKey::new(
+            seq.id as u32,
+            u32::MAX,
+            (sim.stats.sync_rounds + 1) as u32,
+        ));
         let timing = sim.pipeline_pass(seq.ready_at, &stage_times, fwd_bytes, ret_bytes, true);
 
         // Draft prefill, local on the leader (overlappable in principle;
@@ -299,6 +318,12 @@ impl DecodeEngine {
         sim: &mut PipelineSim,
     ) -> Result<RoundOutcome> {
         let m = self.dims;
+        let start = seq.ready_at;
+        sim.trace_key(TraceKey::new(
+            seq.id as u32,
+            seq.round_idx,
+            (sim.stats.sync_rounds + 1) as u32,
+        ));
         let window = [seq.last_token()];
         let pos = seq.last_index();
         let (logits, stage_times, fwd_bytes, ret_bytes) =
@@ -310,11 +335,19 @@ impl DecodeEngine {
         let tok = sample_logits_into(row, self.cfg.temp, u, &mut self.scratch.probs) as i32;
         seq.commit(&[tok]);
         seq.ready_at = timing.finish;
+        let round_ns = timing.finish.saturating_sub(start);
+        let seq_track = Track::Seq(seq.id as u32);
+        sim.trace_span(SpanEvent::new(SpanKind::Commit, seq_track, timing.finish, 0).args(1, 0, 0));
+        // AR rounds carry no cost-model prediction (b = 0 skips them in
+        // the drift audit).
+        sim.trace_span(SpanEvent::new(SpanKind::Round, seq_track, start, round_ns).args(0, 0, 0));
+        seq.round_idx += 1;
         Ok(RoundOutcome {
             committed: vec![tok],
             finish: timing.finish,
             comm_ns: timing.comm_ns,
             compute_ns: timing.compute_ns,
+            round_ns,
             ..Default::default()
         })
     }
@@ -480,6 +513,14 @@ impl DecodeEngine {
         // base-γ room before scheduling a round).
         let gamma = self.ctrl.snap_gamma(clamp_gamma(d.gamma, seq.committed.len(), m.max_seq));
         let i = seq.last_index(); // position of last committed token
+        let start = seq.ready_at;
+        // Key the draft/pass spans to this member's round; the pass this
+        // draft feeds is sync round `sync_rounds + 1`.
+        sim.trace_key(TraceKey::new(
+            seq.id as u32,
+            seq.round_idx,
+            (sim.stats.sync_rounds + 1) as u32,
+        ));
         let temp = self.cfg.temp;
         let dstage = self.model.n_shards();
         let sseed = stream_seed(self.cfg.seed, seq.id);
@@ -526,12 +567,14 @@ impl DecodeEngine {
         };
 
         let mut draft_ns_total: Nanos = 0;
+        let mut draft_steps = 0usize;
         let (d_tokens, d_logits) = if full_reuse {
             let mut pd = pre.expect("checked above");
             pd.tokens.truncate(gamma);
             pd.logits.truncate(gamma * m.vocab);
             (pd.tokens, pd.logits)
         } else {
+            draft_steps = (i - seq.draft_frontier) + gamma;
             let mut d_tokens: Vec<i32> = Vec::with_capacity(gamma);
             let mut d_logits: Vec<f32> = Vec::with_capacity(gamma * m.vocab);
             // catch-up positions: draft_frontier .. i-1
@@ -585,6 +628,8 @@ impl DecodeEngine {
             d_tokens,
             d_logits,
             draft_ns_total,
+            draft_steps,
+            start,
             draft_done,
             reused,
             wasted,
@@ -615,6 +660,9 @@ impl DecodeEngine {
             d_tokens,
             d_logits,
             draft_ns_total,
+            draft_steps,
+            start,
+            draft_done,
             reused,
             wasted,
             recovered_ns,
@@ -623,6 +671,33 @@ impl DecodeEngine {
         let temp = self.cfg.temp;
         let dstage = self.model.n_shards();
         let sseed = stream_seed(self.cfg.seed, seq.id);
+
+        // Key every span from here on (pre-draft/verify leader work
+        // below) to this member's round, and price it the way the
+        // controller's cost model did — the drift auditor's reference.
+        let seq_track = Track::Seq(seq.id as u32);
+        sim.trace_key(TraceKey::new(
+            seq.id as u32,
+            seq.round_idx,
+            sim.stats.sync_rounds as u32,
+        ));
+        let predicted = self.ctrl.cost.round_time_ns(gamma, draft_steps);
+        sim.trace_span(SpanEvent::new(SpanKind::Decision, seq_track, start, 0).args(
+            gamma as u64,
+            predicted,
+            d.tau.to_bits() as u64,
+        ));
+        if draft_ns_total > 0 {
+            sim.trace_span(
+                SpanEvent::new(
+                    SpanKind::Draft,
+                    seq_track,
+                    draft_done.saturating_sub(draft_ns_total),
+                    draft_ns_total,
+                )
+                .args(draft_steps as u64, (reused > 0) as u64, wasted as u64),
+            );
+        }
 
         // --- speculate ahead: draft round r+1's window while this
         // round's verify window is in flight (the leader is idle from
@@ -680,6 +755,11 @@ impl DecodeEngine {
             pre_draft_ns = ns_total;
             overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
             pre_drafted = g_next;
+            let pre_t0 = done.saturating_sub(ns_total);
+            sim.trace_span(
+                SpanEvent::new(SpanKind::PreDraft, seq_track, pre_t0, ns_total)
+                    .args(g_next as u64, overlap_ns, 0),
+            );
             seq.pre_draft = Some(PreDraft {
                 next_base,
                 anchor_pos,
@@ -713,6 +793,21 @@ impl DecodeEngine {
         if let Some(c) = seq.ctrl.as_mut() {
             c.observe(gamma, outcome.accepted, key_tokens);
         }
+        let round_ns = finish.saturating_sub(start);
+        sim.trace_span(
+            SpanEvent::new(SpanKind::Verify, seq_track, finish.saturating_sub(verify_ns), verify_ns)
+                .args(gamma as u64, 0, 0),
+        );
+        sim.trace_span(SpanEvent::new(SpanKind::Commit, seq_track, finish, 0).args(
+            outcome.tokens.len() as u64,
+            outcome.accepted as u64,
+            0,
+        ));
+        sim.trace_span(
+            SpanEvent::new(SpanKind::Round, seq_track, start, round_ns)
+                .args(gamma as u64, predicted, 0),
+        );
+        seq.round_idx += 1;
         let share = fuse_width.max(1) as Nanos;
         Ok(RoundOutcome {
             committed: outcome.tokens,
@@ -732,6 +827,8 @@ impl DecodeEngine {
             tau: d.tau,
             regret_ns: d.regret_ns,
             fuse_width: fuse_width.max(1),
+            predicted_ns: predicted,
+            round_ns,
         })
     }
 
@@ -808,6 +905,12 @@ impl DecodeEngine {
     ) -> Result<RoundOutcome> {
         let m = self.dims;
         let i = seq.last_index();
+        let start = seq.ready_at;
+        sim.trace_key(TraceKey::new(
+            seq.id as u32,
+            seq.round_idx,
+            (sim.stats.sync_rounds + 1) as u32,
+        ));
         let temp = self.cfg.temp;
         let sseed = stream_seed(self.cfg.seed, seq.id);
 
@@ -927,6 +1030,25 @@ impl DecodeEngine {
         if let Some(c) = seq.ctrl.as_mut() {
             c.observe(tree.depth(), outcome.accepted, key_tokens);
         }
+        let round_ns = finish.saturating_sub(start);
+        let seq_track = Track::Seq(seq.id as u32);
+        sim.trace_span(
+            SpanEvent::new(SpanKind::Verify, seq_track, finish.saturating_sub(verify_ns), verify_ns)
+                .args(n as u64, 0, 0),
+        );
+        sim.trace_span(SpanEvent::new(SpanKind::Commit, seq_track, finish, 0).args(
+            outcome.tokens.len() as u64,
+            outcome.accepted as u64,
+            0,
+        ));
+        // Tree rounds carry no cost-model prediction yet (the drift
+        // audit skips b = 0 rounds).
+        sim.trace_span(SpanEvent::new(SpanKind::Round, seq_track, start, round_ns).args(
+            tree.depth() as u64,
+            0,
+            0,
+        ));
+        seq.round_idx += 1;
         Ok(RoundOutcome {
             committed: outcome.tokens,
             accepted: outcome.accepted,
@@ -938,6 +1060,7 @@ impl DecodeEngine {
             compute_ns: timing.compute_ns + draft_ns_total + verify_ns,
             tau: d.tau,
             regret_ns: d.regret_ns,
+            round_ns,
             ..Default::default()
         })
     }

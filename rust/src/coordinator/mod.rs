@@ -216,6 +216,9 @@ impl Coordinator {
                         if self.cfg.decode.policy.is_speculative() {
                             accept.record(out.record());
                         }
+                        if out.predicted_ns > 0 {
+                            report.drift.record(out.predicted_ns.abs_diff(out.round_ns));
+                        }
                     }
                     now = now.max(active[idx].ready_at);
                     self.retire_if_done(&mut active, idx, max_seq, &mut report, &mut results)?;
@@ -233,6 +236,9 @@ impl Coordinator {
                     for (_, out) in &outs {
                         if self.cfg.decode.policy.is_speculative() {
                             accept.record(out.record());
+                        }
+                        if out.predicted_ns > 0 {
+                            report.drift.record(out.predicted_ns.abs_diff(out.round_ns));
                         }
                         now = now.max(out.finish);
                     }

@@ -72,10 +72,12 @@ use crate::cluster::clock::Nanos;
 use crate::cluster::sim::{PassTiming, PipelineSim};
 use crate::cluster::topology::{LinkModel, Topology};
 use crate::control::{ControlConfig, ControllerKind, CostModel, Decision, SeqController};
+use crate::metrics::Histogram;
 use crate::model::{VerifyKnobs, VerifyOutcome};
 use crate::sampling::{argmax, sample_logits_into};
 use crate::spec::reference::host_verify_with;
-use crate::spec::DraftShape;
+use crate::spec::{AcceptanceStats, DraftShape, RoundRecord};
+use crate::trace::{SpanEvent, SpanKind, TraceKey, Track};
 use crate::util::rng::{mix, uniform_at, Rng};
 use crate::util::scratch::RoundScratch;
 
@@ -168,6 +170,36 @@ pub struct OracleRound {
     pub tau: f32,
     /// Controller regret of this round's decision, ns/token.
     pub regret_ns: u64,
+    /// Key tokens flagged in this round's verified window.
+    pub key_tokens: usize,
+    /// Controller cost-model prediction for this round's latency (solo
+    /// pricing at the realized draft-step count; 0 = none recorded).
+    pub predicted_ns: Nanos,
+    /// Actual round latency: commit time minus round start.
+    pub round_ns: Nanos,
+}
+
+impl OracleRound {
+    /// This round as the [`RoundRecord`] the acceptance stats
+    /// accumulate; `fuse_width` is the group size the round rode in.
+    pub fn record(&self, fuse_width: usize) -> RoundRecord {
+        RoundRecord {
+            gamma: self.gamma,
+            accepted: self.accepted,
+            committed: self.committed.len(),
+            key_tokens: self.key_tokens,
+            tree_nodes: self.gamma,
+            pre_drafted: self.pre_drafted,
+            reused: self.reused,
+            wasted: self.wasted,
+            overlap_ns: self.overlap_ns,
+            pre_draft_ns: self.pre_draft_ns,
+            recovered_ns: self.recovered_ns,
+            tau: self.tau,
+            regret_ns: self.regret_ns,
+            fuse_width,
+        }
+    }
 }
 
 /// Calibration + policy for [`OracleChainDecoder`].
@@ -281,6 +313,8 @@ pub struct OracleChainDecoder {
     /// Parked placeholder simulator for [`Self::round_into`]'s disjoint
     /// borrow swap (never driven; allocated once at construction).
     idle: Option<PipelineSim>,
+    /// Rounds this sequence has committed (the trace key's round index).
+    round_idx: u32,
 }
 
 impl OracleChainDecoder {
@@ -308,6 +342,7 @@ impl OracleChainDecoder {
             scratch: RoundScratch::default(),
             vout: VerifyOutcome::default(),
             idle: Some(PipelineSim::new(Topology::uniform(1, LinkModel::ideal()), 0)),
+            round_idx: 0,
         })
     }
 
@@ -433,6 +468,7 @@ impl OracleChainDecoder {
     /// scheduler-invariant), catch-up accounting, window drafting.
     /// No simulator interaction; the caller charges `draft_ns`.
     pub fn prep_round(&mut self) -> OraclePrep {
+        let start = self.ready_at;
         let d = self.ctrl.decision();
         let gamma = d.gamma.max(1);
         let temp = self.cfg.temp;
@@ -472,6 +508,7 @@ impl OracleChainDecoder {
         // generators (&self) and the scratch borrows stay disjoint.
         let mut s = std::mem::take(&mut self.scratch);
         let mut draft_ns_total: Nanos = 0;
+        let mut draft_steps = 0usize;
         let (d_tokens, d_logits) = if full_reuse {
             let mut pd = pre.expect("checked above");
             pd.tokens.truncate(gamma);
@@ -494,6 +531,7 @@ impl OracleChainDecoder {
                 self.ctrl.observe_guess(hit);
             }
             draft_ns_total += (i - self.draft_frontier) as Nanos * self.cfg.draft_step_ns;
+            draft_steps = (i - self.draft_frontier) + gamma;
             let (mut toks, mut rows) = s.take_pair();
             s.chain.clear();
             s.chain.extend_from_slice(&self.committed);
@@ -516,6 +554,8 @@ impl OracleChainDecoder {
             d_tokens,
             d_logits,
             draft_ns: draft_ns_total,
+            draft_steps,
+            start,
             reused,
             wasted,
             recovered_ns,
@@ -553,13 +593,40 @@ impl OracleChainDecoder {
             i,
             d_tokens,
             d_logits,
-            draft_ns: _,
+            draft_ns,
+            draft_steps,
+            start,
             reused,
             wasted,
             recovered_ns,
         } = prep;
         let temp = self.cfg.temp;
         let sseed = stream_seed(self.cfg.seed, self.cfg.seq_id);
+
+        // Round-trace bookkeeping: key every span recorded from here on
+        // (including the pre-draft / verify leader work below) to this
+        // (sequence, round, sync-group), and price the round the way the
+        // controller's cost model did — the drift auditor's reference.
+        let seq_track = Track::Seq(self.cfg.seq_id as u32);
+        sim.trace_key(TraceKey::new(
+            self.cfg.seq_id as u32,
+            self.round_idx,
+            sim.stats.sync_rounds as u32,
+        ));
+        let predicted = self.ctrl.config().cost.round_time_ns(gamma, draft_steps);
+        sim.trace_span(SpanEvent::new(SpanKind::Decision, seq_track, start, 0).args(
+            gamma as u64,
+            predicted,
+            d.tau.to_bits() as u64,
+        ));
+        if draft_ns > 0 {
+            sim.trace_span(SpanEvent::new(SpanKind::Draft, seq_track, start, draft_ns).args(
+                draft_steps as u64,
+                (reused > 0) as u64,
+                wasted as u64,
+            ));
+        }
+
         let mut s = std::mem::take(&mut self.scratch);
 
         // target logits per window slot (slot j predicts position i+j+1);
@@ -603,6 +670,11 @@ impl OracleChainDecoder {
             pre_draft_ns = ns_total;
             overlap_ns = ns_total.saturating_sub(done.saturating_sub(timing.finish));
             pre_drafted = g_next;
+            let pre_t0 = done.saturating_sub(ns_total);
+            sim.trace_span(
+                SpanEvent::new(SpanKind::PreDraft, seq_track, pre_t0, ns_total)
+                    .args(g_next as u64, overlap_ns, 0),
+            );
             self.pre = Some(PreDraft {
                 next_base,
                 anchor_pos,
@@ -636,12 +708,29 @@ impl OracleChainDecoder {
             &mut s.verify,
             &mut vout,
         );
-        let finish = sim.local_work(timing.finish, host_verify_cost(gamma));
+        let vcost = host_verify_cost(gamma);
+        let finish = sim.local_work(timing.finish, vcost);
         self.draft_frontier = i + vout.accepted.min(gamma.saturating_sub(1)) + 1;
         self.committed.extend_from_slice(&vout.tokens);
         self.ready_at = finish;
         let key_tokens = vout.key_flags.iter().filter(|&&k| k).count();
         self.ctrl.observe(gamma, vout.accepted, key_tokens);
+
+        let round_ns = finish.saturating_sub(start);
+        sim.trace_span(
+            SpanEvent::new(SpanKind::Verify, seq_track, finish.saturating_sub(vcost), vcost)
+                .args(gamma as u64, 0, 0),
+        );
+        sim.trace_span(SpanEvent::new(SpanKind::Commit, seq_track, finish, 0).args(
+            vout.tokens.len() as u64,
+            vout.accepted as u64,
+            0,
+        ));
+        sim.trace_span(
+            SpanEvent::new(SpanKind::Round, seq_track, start, round_ns)
+                .args(gamma as u64, predicted, 0),
+        );
+        self.round_idx += 1;
 
         round_out.committed.clear();
         round_out.committed.extend_from_slice(&vout.tokens);
@@ -656,6 +745,9 @@ impl OracleChainDecoder {
         round_out.gamma = gamma;
         round_out.tau = d.tau;
         round_out.regret_ns = d.regret_ns;
+        round_out.key_tokens = key_tokens;
+        round_out.predicted_ns = predicted;
+        round_out.round_ns = round_ns;
 
         // the consumed draft window's buffers return to the pool
         s.recycle_pair(d_tokens, d_logits);
@@ -675,6 +767,13 @@ impl OracleChainDecoder {
     /// zero-allocation form).
     pub fn round_on_into(&mut self, sim: &mut PipelineSim, out: &mut OracleRound) {
         let prep = self.prep_round();
+        // Key the draft/pass spans to this round before any sim work;
+        // the pass below is sync round `sync_rounds + 1`.
+        sim.trace_key(TraceKey::new(
+            self.cfg.seq_id as u32,
+            self.round_idx,
+            (sim.stats.sync_rounds + 1) as u32,
+        ));
         let draft_done = if prep.draft_ns == 0 {
             self.ready_at
         } else {
@@ -725,6 +824,12 @@ pub struct OraclePrep {
     pub d_logits: Vec<f32>,
     /// Leader-local draft time to charge (0 on full reuse).
     pub draft_ns: Nanos,
+    /// Draft-model steps behind `draft_ns` (catch-up replays + window
+    /// steps; 0 on full reuse) — what the cost model prices drafting by.
+    pub draft_steps: usize,
+    /// Sim time the round started at (`ready_at` when prepped) — the
+    /// round span's origin for tracing and drift auditing.
+    pub start: Nanos,
     pub reused: usize,
     pub wasted: usize,
     pub recovered_ns: Nanos,
@@ -766,6 +871,14 @@ pub struct OracleFleet {
     round_buf: OracleRound,
     group_rounds: u64,
     member_rounds: u64,
+    /// Acceptance/overlap stats accumulated across every member round.
+    stats: AcceptanceStats,
+    /// Cost-model drift per member round (`|predicted − actual|`, ns).
+    /// A single-member fleet over jitter-free links drifts exactly 0
+    /// (the cost model IS the simulator there); concurrent members add
+    /// leader queueing, and fused groups comm amortization, that the
+    /// solo pricing deliberately doesn't see.
+    drift: Histogram,
 }
 
 impl OracleFleet {
@@ -798,7 +911,19 @@ impl OracleFleet {
             round_buf: OracleRound::default(),
             group_rounds: 0,
             member_rounds: 0,
+            stats: AcceptanceStats::default(),
+            drift: Histogram::latency(),
         })
+    }
+
+    /// Acceptance/overlap stats over every member round served so far.
+    pub fn accept_stats(&self) -> &AcceptanceStats {
+        &self.stats
+    }
+
+    /// Cost-model drift histogram over every member round served so far.
+    pub fn drift(&self) -> &Histogram {
+        &self.drift
     }
 
     /// Generated tokens of member `s` (prompt excluded) — the
@@ -866,6 +991,11 @@ impl OracleFleet {
         for &s in &group {
             let ready = self.seqs[s].finish_time();
             let prep = self.seqs[s].prep_round();
+            self.sim.trace_key(TraceKey::new(
+                self.seqs[s].cfg.seq_id as u32,
+                self.seqs[s].round_idx,
+                (self.sim.stats.sync_rounds + 1) as u32,
+            ));
             let draft_done = if prep.draft_ns == 0 {
                 ready
             } else {
@@ -887,9 +1017,14 @@ impl OracleFleet {
         );
         self.group_rounds += 1;
         self.member_rounds += preps.len() as u64;
+        let fuse_width = widths.len();
         let mut round_buf = std::mem::take(&mut self.round_buf);
         for (s, prep, _) in preps.drain(..) {
             self.seqs[s].finish_round_into(&mut self.sim, prep, timing, &mut round_buf);
+            self.stats.record(round_buf.record(fuse_width));
+            if round_buf.predicted_ns > 0 {
+                self.drift.record(round_buf.predicted_ns.abs_diff(round_buf.round_ns));
+            }
         }
         self.round_buf = round_buf;
         self.pending = pending;
@@ -1019,8 +1154,42 @@ mod tests {
                 (ra.gamma, ra.tau.to_bits(), ra.regret_ns),
                 (buf.gamma, buf.tau.to_bits(), buf.regret_ns)
             );
+            assert_eq!(
+                (ra.key_tokens, ra.predicted_ns, ra.round_ns),
+                (buf.key_tokens, buf.predicted_ns, buf.round_ns)
+            );
         }
         assert_eq!(a.committed, b.committed);
+    }
+
+    #[test]
+    fn solo_rounds_match_cost_model_exactly() {
+        // The drift invariant behind `trace::drift`: on the jitter-free
+        // solo sim path the controller's cost model prices every round
+        // to the nanosecond (pre-draft fully hidden at this calibration,
+        // no queueing in steady state, realized draft steps charged).
+        let mut d = decoder(true, 7);
+        for r in 0..25 {
+            let out = d.round();
+            assert!(out.predicted_ns > 0);
+            assert_eq!(
+                out.predicted_ns, out.round_ns,
+                "round {r}: cost model must price the solo sim round exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn round_record_maps_fields() {
+        let mut d = decoder(true, 13);
+        let out = d.round();
+        let rec = out.record(3);
+        assert_eq!(rec.gamma, out.gamma);
+        assert_eq!(rec.committed, out.committed.len());
+        assert_eq!(rec.tree_nodes, out.gamma);
+        assert_eq!(rec.key_tokens, out.key_tokens);
+        assert_eq!(rec.fuse_width, 3);
+        assert_eq!(rec.overlap_ns, out.overlap_ns);
     }
 
     #[test]

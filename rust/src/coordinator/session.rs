@@ -52,6 +52,9 @@ pub struct Sequence {
     pub ready_at: Nanos,
     pub arrival_ns: Nanos,
     pub finished_at: Nanos,
+    /// Decode rounds committed so far — the round index trace spans are
+    /// keyed by (see [`crate::trace`]).
+    pub round_idx: u32,
 }
 
 impl Sequence {
@@ -70,6 +73,7 @@ impl Sequence {
             ready_at: arrival_ns,
             arrival_ns,
             finished_at: 0,
+            round_idx: 0,
         }
     }
 

@@ -62,6 +62,18 @@
 //! are byte-identical across group compositions
 //! (`tests/fused_differential.rs`, `benches/ablation_batch.rs`).
 //!
+//! ## Round-trace observability
+//!
+//! The [`trace`] subsystem records the decode timeline the paper's
+//! Eq. 5 argues about — per-round draft / per-hop link occupancy /
+//! verify / commit spans with the `t1 + bytes/bw` decomposition — into
+//! a preallocated ring ([`trace::RingTracer`], zero allocations in
+//! steady state), exports Chrome/Perfetto `trace.json` + per-round
+//! JSONL (`dsd serve --trace`), and audits the controller's cost-model
+//! prediction against the traced actual ([`trace::drift`]): exactly
+//! 0 ns drift on the deterministic engine-free sim path, a calibration
+//! histogram everywhere else.
+//!
 //! Start with [`coordinator::Coordinator`] (serving) or
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.
@@ -86,5 +98,6 @@ pub mod model;
 pub mod runtime;
 pub mod sampling;
 pub mod spec;
+pub mod trace;
 pub mod util;
 pub mod workload;

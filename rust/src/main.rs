@@ -13,13 +13,18 @@
 //!   dsd compare --dataset gsm8k --nodes 8 --link_ms 3
 //!   dsd inspect --artifacts_dir artifacts
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
 use dsd::config::DeployConfig;
-use dsd::coordinator::Coordinator;
+use dsd::coordinator::{Coordinator, OracleConfig, OracleFleet};
 use dsd::metrics::RunReport;
 use dsd::spec::Policy;
+use dsd::trace::{drift, export, RingTracer, SpanEvent};
+use dsd::util::bench::write_bench_json_in;
 use dsd::util::cli;
+use dsd::util::json::Value;
 use dsd::util::table::{fnum, Table};
 use dsd::workload::{dataset, WorkloadGen};
 
@@ -27,8 +32,12 @@ const VALUED: &[&str] = &[
     "config", "artifacts_dir", "nodes", "n_nodes", "link_ms", "link_gbps", "jitter",
     "draft", "draft_variant", "draft_shape", "max_batch", "fuse", "max_fuse", "fuse_tokens",
     "dataset", "requests", "seed", "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3",
-    "max_new_tokens", "overlap", "controller", "out", "sweep_nodes",
+    "max_new_tokens", "overlap", "controller", "out", "sweep_nodes", "trace", "json",
 ];
+
+/// Span ring capacity for `--trace` (~64 B/event: a few MB, tens of
+/// thousands of rounds before the ring wraps).
+const TRACE_RING_CAP: usize = 1 << 16;
 
 fn main() -> Result<()> {
     let args = cli::parse_env(VALUED)?;
@@ -72,6 +81,15 @@ Common options:
   --requests N           number of requests             [8]
   --max_batch B          KV slots / max concurrency     [8]
   --seed S               RNG seed
+
+Observability (serve):
+  --oracle               engine-free serve on the oracle sim twin (no
+                         artifacts needed; drift is exactly 0 on solo
+                         jitter-free rounds)
+  --trace FILE           write a Chrome/Perfetto trace (open in
+                         ui.perfetto.dev) plus a per-round FILE.jsonl,
+                         schema-validated after writing
+  --json DIR             write machine-readable BENCH_serve.json into DIR
 ";
 
 fn build_config(args: &cli::Args) -> Result<DeployConfig> {
@@ -98,16 +116,91 @@ fn run_once(cfg: &DeployConfig) -> Result<RunReport> {
 
 fn serve(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let json_dir = args.get("json").map(std::path::PathBuf::from);
+    if args.flag("oracle") {
+        return serve_oracle(&cfg, trace_path.as_deref(), json_dir.as_deref());
+    }
     eprintln!(
         "serving {} requests of '{}' on N={} nodes (t1={}ms, policy={})...",
         cfg.requests, cfg.dataset, cfg.n_nodes, cfg.link_ms, cfg.decode.policy.name()
     );
-    let report = run_once(&cfg)?;
+    let mut coord = Coordinator::new(cfg.clone())?;
+    coord.warmup()?;
+    let profile = dataset(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
+    let vocab = coord.engine.manifest().model.vocab;
+    let mut gen = WorkloadGen::new(profile, vocab, cfg.seed);
+    let requests = gen.batch(cfg.requests);
+    if trace_path.is_some() {
+        coord.sim.set_tracer(RingTracer::with_capacity(TRACE_RING_CAP));
+    }
+    let (report, _) = coord.run_workload(requests)?;
+    let events = coord.sim.take_tracer().map(|t| t.to_vec()).unwrap_or_default();
+    print_serve_report(&cfg, &report);
+    write_outputs(&cfg, &report, &events, trace_path.as_deref(), json_dir.as_deref())
+}
+
+/// Engine-free serve: B oracle sequences over the shared simulated
+/// pipeline — no AOT artifacts needed, so this is the CI smoke path for
+/// `--trace`. With `--requests 1 --fuse off` (one sequence, solo
+/// jitter-free rounds) the cost model reproduces the simulator exactly
+/// and the printed drift is 0; more sequences queue on the shared
+/// leader and fused groups amortize the sync, both of which the solo
+/// pricing deliberately doesn't see — the drift histogram is exactly
+/// that calibration-gap signal.
+fn serve_oracle(
+    cfg: &DeployConfig,
+    trace_path: Option<&Path>,
+    json_dir: Option<&Path>,
+) -> Result<()> {
+    let group_cap = if cfg.fuse { cfg.max_fuse.max(1) } else { 1 };
+    eprintln!(
+        "serving {} oracle sequences engine-free on N={} nodes (t1={}ms, fuse cap {})...",
+        cfg.requests, cfg.n_nodes, cfg.link_ms, group_cap
+    );
+    let ocfg = OracleConfig {
+        gamma: cfg.decode.gamma,
+        overlap: cfg.decode.overlap,
+        controller: cfg.decode.controller,
+        seed: cfg.seed,
+        nodes: cfg.n_nodes,
+        link_ms: cfg.link_ms,
+        fuse: group_cap,
+        ..Default::default()
+    };
+    let batch = cfg.requests.max(1);
+    let tokens_per_seq = cfg.decode.max_new_tokens;
+    let mut fleet = OracleFleet::new(&ocfg, batch, &[2, 7, 1, 8])?;
+    fleet.warm_capacity(tokens_per_seq + 64);
+    if trace_path.is_some() {
+        fleet.sim.set_tracer(RingTracer::with_capacity(TRACE_RING_CAP));
+    }
+    let fr = fleet.serve(tokens_per_seq, group_cap, cfg.fuse_tokens);
+    let mut report = RunReport::new(format!("oracle/N{}", cfg.n_nodes));
+    report.requests = batch as u64;
+    report.tokens = fr.tokens;
+    report.elapsed_ns = fr.finish_ns;
+    report.comm_ns = fleet.sim.stats.comm_ns;
+    report.compute_ns = fleet.sim.stats.compute_ns;
+    report.comm_bytes = fleet.sim.stats.bytes;
+    report.sync_rounds = fleet.sim.stats.sync_rounds;
+    report.accept = fleet.accept_stats().clone();
+    report.drift = fleet.drift().clone();
+    for s in &fleet.seqs {
+        report.request_latency.record(s.finish_time());
+    }
+    let events = fleet.sim.take_tracer().map(|t| t.to_vec()).unwrap_or_default();
+    print_serve_report(cfg, &report);
+    write_outputs(cfg, &report, &events, trace_path, json_dir)
+}
+
+fn print_serve_report(cfg: &DeployConfig, report: &RunReport) {
     println!("{}", report.summary_line());
     println!(
-        "  p50 latency {:.1}ms  p95 {:.1}ms  comm fraction {:.1}%  mean accepted {:.2}",
+        "  p50 latency {:.1}ms  p99 {:.1}ms  comm fraction {:.1}%  mean accepted {:.2}",
         report.request_latency.quantile(0.5) as f64 / 1e6,
-        report.request_latency.quantile(0.95) as f64 / 1e6,
+        report.request_latency.quantile(0.99) as f64 / 1e6,
         report.comm_fraction() * 100.0,
         report.accept.mean_accepted(),
     );
@@ -136,6 +229,76 @@ fn serve(args: &cli::Args) -> Result<()> {
             report.accept.mean_fuse_width(),
             cfg.max_fuse,
         );
+    }
+    if report.drift.count() > 0 {
+        println!(
+            "  drift: {} rounds  mean {:.4}ms  max {:.4}ms{}",
+            report.drift.count(),
+            report.drift.mean() / 1e6,
+            report.drift.max() as f64 / 1e6,
+            if report.drift.max() == 0 { "  (exact)" } else { "" },
+        );
+    }
+}
+
+/// `--trace` / `--json` side outputs, schema-validated right after
+/// writing so a malformed export fails the run (and the CI smoke).
+fn write_outputs(
+    cfg: &DeployConfig,
+    report: &RunReport,
+    events: &[SpanEvent],
+    trace_path: Option<&Path>,
+    json_dir: Option<&Path>,
+) -> Result<()> {
+    if let Some(path) = trace_path {
+        drift::validate_spans(events)?;
+        export::write_perfetto(path, events)?;
+        let jsonl = path.with_extension("jsonl");
+        export::write_jsonl(&jsonl, events)?;
+        let pairs = export::validate_perfetto(&std::fs::read_to_string(path)?)?;
+        let rounds = export::validate_jsonl(&std::fs::read_to_string(&jsonl)?)?;
+        let audit = drift::audit(events.iter());
+        println!(
+            "  trace: {} spans -> {} ({} B/E pairs) + {} ({} rounds)",
+            events.len(),
+            path.display(),
+            pairs,
+            jsonl.display(),
+            rounds,
+        );
+        println!(
+            "  trace drift: {}/{} rounds exact  max {}ns  mean {:.1}ns",
+            audit.exact,
+            audit.rounds,
+            audit.max_ns,
+            audit.mean_ns(),
+        );
+    }
+    if let Some(dir) = json_dir {
+        let v = Value::obj(&[
+            ("policy", cfg.decode.policy.name().into()),
+            ("nodes", cfg.n_nodes.into()),
+            ("link_ms", cfg.link_ms.into()),
+            ("gamma", cfg.decode.gamma.into()),
+            ("controller", cfg.decode.controller.name().into()),
+            ("requests", report.requests.into()),
+            ("tokens", report.tokens.into()),
+            ("throughput_tok_s", report.throughput().into()),
+            ("ms_per_token", report.ms_per_token().into()),
+            ("p50_ms", (report.request_latency.quantile(0.5) as f64 / 1e6).into()),
+            ("p99_ms", (report.request_latency.quantile(0.99) as f64 / 1e6).into()),
+            ("comm_fraction", report.comm_fraction().into()),
+            ("acceptance_rate", report.accept.acceptance_rate().into()),
+            ("mean_accepted", report.accept.mean_accepted().into()),
+            ("reuse_rate", report.accept.reuse_rate().into()),
+            ("fused_round_rate", report.accept.fused_round_rate().into()),
+            ("mean_fuse_width", report.accept.mean_fuse_width().into()),
+            ("drift_rounds", report.drift.count().into()),
+            ("drift_max_ns", report.drift.max().into()),
+            ("drift_mean_ns", report.drift.mean().into()),
+        ]);
+        let path = write_bench_json_in(dir, "serve", &v)?;
+        println!("  wrote {}", path.display());
     }
     Ok(())
 }

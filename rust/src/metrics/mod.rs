@@ -89,6 +89,23 @@ impl Histogram {
     pub fn max(&self) -> Nanos {
         self.max
     }
+
+    /// Merge another histogram's samples into this one (multi-shard /
+    /// multi-worker aggregation). Both sides must share the same bucket
+    /// layout — true for any pair built by the same constructor.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(
+            self.bounds, other.bounds,
+            "merging histograms with different bucket layouts"
+        );
+        for (c, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *c += o;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// End-to-end report for one experiment run (one policy, one workload).
@@ -111,6 +128,11 @@ pub struct RunReport {
     pub comm_bytes: u64,
     pub accept: AcceptanceStats,
     pub request_latency: Histogram,
+    /// Cost-model drift per speculative round: `|predicted − actual|`
+    /// round time, ns (see [`crate::trace::drift`]). Exactly zero on
+    /// the deterministic engine-free solo path; elsewhere the
+    /// calibration-error signal the controller's model carries.
+    pub drift: Histogram,
     /// Mean agreement with the target-greedy reference (accuracy proxy).
     pub accuracy: f64,
 }
@@ -199,6 +221,87 @@ mod tests {
         assert!(p50 > 400_000_000 && p50 < 700_000_000, "{p50}");
         assert!(h.mean() > 4.0e8 && h.mean() < 6.0e8);
         assert_eq!(h.min(), 1_000_000);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::latency();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_bucket_saturation() {
+        let mut h = Histogram::latency();
+        for _ in 0..100 {
+            h.record(5_000_000); // 5 ms, same bucket every time
+        }
+        let p1 = h.quantile(0.01);
+        let p99 = h.quantile(0.99);
+        assert_eq!(p1, p99, "one bucket holds every sample");
+        assert!(p1 >= 5_000_000, "{p1}");
+        assert_eq!(h.min(), 5_000_000);
+        assert_eq!(h.max(), 5_000_000);
+    }
+
+    #[test]
+    fn values_above_last_bound_land_in_overflow() {
+        let mut h = Histogram::latency();
+        h.record(250_000_000_000); // 250 s: beyond the ~100 s top bound
+        h.record(300_000_000_000);
+        assert_eq!(h.count(), 2);
+        // Overflow bucket reports the observed max, not a bound.
+        assert_eq!(h.quantile(0.99), 300_000_000_000);
+        assert_eq!(h.max(), 300_000_000_000);
+        assert_eq!(h.min(), 250_000_000_000);
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        let mut whole = Histogram::latency();
+        // Deterministic pseudo-random spread across several decades.
+        let mut x: u64 = 0x2545_f491_4f6c_dd1d;
+        for i in 0..500u64 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 10_000 + x % 10_000_000_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = Histogram::latency();
+        h.record(1_000_000);
+        h.record(2_000_000);
+        let empty = Histogram::latency();
+        h.merge(&empty);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.min(), 1_000_000);
+        assert_eq!(h.max(), 2_000_000);
+        let mut fresh = Histogram::latency();
+        fresh.merge(&h);
+        assert_eq!(fresh.count(), 2);
+        assert_eq!(fresh.min(), 1_000_000);
+        assert_eq!(fresh.quantile(1.0), h.quantile(1.0));
     }
 
     #[test]

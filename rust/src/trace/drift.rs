@@ -1,0 +1,180 @@
+//! Cost-model drift auditing over recorded traces.
+//!
+//! PR 3 pinned the closed form: `control::cost::CostModel::
+//! round_time_ns` matches a fresh `PipelineSim` charging the same
+//! round (`tests/control_props.rs`). This module extends that property
+//! from the formula to *recorded executions*: every `Round` span
+//! carries the controller's predicted round time (`b`) next to the
+//! traced actual (`dur`), so auditing a trace answers "did the model
+//! the controller optimizes against track what the cluster actually
+//! did?" — per round, not in expectation.
+//!
+//! On the engine-free sim path with solo (unfused) rounds the answer
+//! must be **exactly 0 ns**: the oracle's links are jitter-free, its
+//! calibration constants are the model's own, and steady-state rounds
+//! see no queueing — asserted by `tests/trace_schema.rs` and the CI
+//! serve-trace smoke. Fused and multi-sequence runs drift legitimately
+//! (queueing on shared links, fused comm amortization priced per
+//! group), and engine-backed rounds drift by the gap between measured
+//! kernel time and the calibration constants — that histogram is the
+//! calibration signal for the real-transport direction (ROADMAP).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::{SpanEvent, SpanKind};
+use crate::cluster::clock::Nanos;
+
+/// Aggregate prediction error over the `Round` spans of a trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DriftReport {
+    /// Rounds audited (a prediction was recorded — AR/tree rounds and
+    /// rounds without a controller decision are skipped).
+    pub rounds: usize,
+    /// Rounds whose predicted and actual times match exactly.
+    pub exact: usize,
+    pub max_ns: Nanos,
+    pub sum_ns: u128,
+}
+
+impl DriftReport {
+    pub fn mean_ns(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.rounds as f64
+        }
+    }
+
+    /// True when every audited round matched its prediction exactly —
+    /// the engine-free solo-path invariant.
+    pub fn is_exact(&self) -> bool {
+        self.rounds > 0 && self.exact == self.rounds
+    }
+}
+
+/// Audit a trace: per `Round` span with a recorded prediction,
+/// accumulate `|actual − predicted|`.
+pub fn audit<'a>(events: impl IntoIterator<Item = &'a SpanEvent>) -> DriftReport {
+    let mut r = DriftReport::default();
+    for ev in events {
+        if ev.kind == SpanKind::Round && ev.b > 0 {
+            let d = ev.dur.abs_diff(ev.b);
+            r.rounds += 1;
+            if d == 0 {
+                r.exact += 1;
+            }
+            r.max_ns = r.max_ns.max(d);
+            r.sum_ns += d as u128;
+        }
+    }
+    r
+}
+
+/// Structural containment check on raw span events: everything keyed
+/// to a round — link occupancy, node compute, draft, pre-draft,
+/// verify — must lie inside that round's span, and instants must fall
+/// within it. Spans keyed to a round the ring no longer retains are
+/// skipped (the ring drops oldest-first, so a retained child may
+/// outlive its round span).
+pub fn validate_spans(events: &[SpanEvent]) -> Result<()> {
+    let mut rounds: BTreeMap<(u32, u32), (Nanos, Nanos)> = BTreeMap::new();
+    for ev in events {
+        if ev.kind == SpanKind::Round {
+            rounds.insert((ev.key.seq, ev.key.round), (ev.t0, ev.end()));
+        }
+    }
+    for ev in events {
+        let Some(&(r0, r1)) = rounds.get(&(ev.key.seq, ev.key.round)) else {
+            continue;
+        };
+        match ev.kind {
+            SpanKind::Round => {}
+            SpanKind::Decision | SpanKind::Commit => {
+                ensure!(
+                    ev.t0 >= r0 && ev.t0 <= r1,
+                    "{} instant at {} outside round span [{r0}, {r1}] for {:?}",
+                    ev.kind.name(),
+                    ev.t0,
+                    ev.key
+                );
+            }
+            _ => {
+                ensure!(
+                    ev.t0 >= r0 && ev.end() <= r1,
+                    "{} span [{}, {}] escapes round span [{r0}, {r1}] for {:?}",
+                    ev.kind.name(),
+                    ev.t0,
+                    ev.end(),
+                    ev.key
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Track, TraceKey};
+    use super::*;
+
+    fn round(seq: u32, r: u32, t0: Nanos, dur: Nanos, predicted: u64) -> SpanEvent {
+        let mut ev =
+            SpanEvent::new(SpanKind::Round, Track::Seq(seq), t0, dur).args(4, predicted, 0);
+        ev.key = TraceKey::new(seq, r, r);
+        ev
+    }
+
+    fn child(seq: u32, r: u32, kind: SpanKind, t0: Nanos, dur: Nanos) -> SpanEvent {
+        let mut ev = SpanEvent::new(kind, Track::Link(0), t0, dur);
+        ev.key = TraceKey::new(seq, r, r);
+        ev
+    }
+
+    #[test]
+    fn audit_accumulates_abs_error() {
+        let evs = [
+            round(0, 0, 0, 1000, 1000),
+            round(0, 1, 1000, 1030, 1000),
+            round(0, 2, 2030, 990, 1000),
+            // no prediction recorded: skipped
+            round(0, 3, 3020, 500, 0),
+        ];
+        let r = audit(evs.iter());
+        assert_eq!(r.rounds, 3);
+        assert_eq!(r.exact, 1);
+        assert_eq!(r.max_ns, 30);
+        assert_eq!(r.sum_ns, 40);
+        assert!((r.mean_ns() - 40.0 / 3.0).abs() < 1e-9);
+        assert!(!r.is_exact());
+    }
+
+    #[test]
+    fn exact_report_requires_all_rounds_exact() {
+        let evs = [round(0, 0, 0, 1000, 1000), round(0, 1, 1000, 800, 800)];
+        assert!(audit(evs.iter()).is_exact());
+        assert!(!audit(std::iter::empty()).is_exact(), "empty trace is not a pass");
+    }
+
+    #[test]
+    fn containment_accepts_nested_spans() {
+        let evs = [
+            round(0, 0, 100, 1000, 0),
+            child(0, 0, SpanKind::LinkBusy, 200, 300),
+            child(0, 0, SpanKind::Verify, 1000, 100),
+            child(0, 0, SpanKind::Commit, 1100, 0),
+            // keyed to an unretained round: skipped, not an error
+            child(9, 9, SpanKind::LinkBusy, 0, 50),
+        ];
+        validate_spans(&evs).unwrap();
+    }
+
+    #[test]
+    fn containment_rejects_escaping_link_span() {
+        let evs = [round(0, 0, 100, 1000, 0), child(0, 0, SpanKind::LinkBusy, 900, 300)];
+        let err = validate_spans(&evs).unwrap_err().to_string();
+        assert!(err.contains("escapes"), "{err}");
+    }
+}

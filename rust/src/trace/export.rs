@@ -1,0 +1,498 @@
+//! Trace exporters and schema validators.
+//!
+//! Two formats, both written by `dsd serve --trace <path>`:
+//!
+//! * **Chrome/Perfetto `trace.json`** — the classic trace-event format
+//!   (`{"traceEvents": [...]}`), loadable at <https://ui.perfetto.dev>
+//!   or `chrome://tracing`. One track per pipeline node, per link, and
+//!   per sequence: node/link tracks show the physical occupancy
+//!   timeline (the paper's `(N−1)·t1` is literally visible as the
+//!   stair of link spans); sequence tracks show the semantic round →
+//!   draft/pre-draft/verify nesting with commit/decision instants.
+//! * **Per-round JSONL** — one self-contained JSON object per round
+//!   (timings, prediction, drift, acceptance), the grep/pandas-friendly
+//!   twin of the Perfetto view.
+//!
+//! The validators ([`validate_perfetto`], [`validate_jsonl`]) are the
+//! schema checks CI runs against emitted traces: every `ph` is one of
+//! `B`/`E`/`M`/`i`, per-track timestamps are monotone, begin/end pairs
+//! balance, and each JSONL line's `drift_ns` is consistent with its
+//! `round_ns`/`predicted_ns`. `serve` self-validates right after
+//! writing, so a malformed trace is a hard error, not a silent
+//! artifact. (Span-level containment — link spans inside their round
+//! span — is checked on the raw events by
+//! [`super::drift::validate_spans`].)
+//!
+//! Exporting allocates freely (strings, sort buffers) — it runs once
+//! at shutdown, outside the zero-allocation round loop.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::{SpanEvent, SpanKind, Track};
+use crate::util::json::{parse, Value};
+
+/// Perfetto (pid, tid) for a track: pid 1 is the cluster (nodes, then
+/// links offset by 1000), pid 2 the sequences.
+fn track_pid_tid(t: Track) -> (i64, i64) {
+    match t {
+        Track::Node(i) => (1, i as i64),
+        Track::Link(i) => (1, 1000 + i as i64),
+        Track::Seq(s) => (2, s as i64),
+    }
+}
+
+fn track_name(t: Track) -> String {
+    match t {
+        Track::Node(i) => format!("node {i}"),
+        Track::Link(i) => format!("link {i}"),
+        Track::Seq(s) => format!("seq {s}"),
+    }
+}
+
+/// Trace-event timestamps are microseconds; ours are ns.
+fn us(ns: u64) -> Value {
+    Value::from(ns as f64 / 1000.0)
+}
+
+fn tau_of_bits(bits: u64) -> f64 {
+    f32::from_bits(bits as u32) as f64
+}
+
+/// The kind-specific argument payload (see [`SpanKind`]'s table).
+fn span_args(ev: &SpanEvent) -> Value {
+    let mut pairs: Vec<(&str, Value)> = vec![
+        ("seq", (ev.key.seq as u64).into()),
+        ("round", (ev.key.round as u64).into()),
+        ("group", (ev.key.group as u64).into()),
+    ];
+    match ev.kind {
+        SpanKind::Round => {
+            pairs.push(("gamma", ev.a.into()));
+            pairs.push(("predicted_ns", ev.b.into()));
+        }
+        SpanKind::Decision => {
+            pairs.push(("gamma", ev.a.into()));
+            pairs.push(("predicted_ns", ev.b.into()));
+            pairs.push(("tau", tau_of_bits(ev.c).into()));
+        }
+        SpanKind::Draft => {
+            pairs.push(("steps", ev.a.into()));
+            pairs.push(("reused", ev.b.into()));
+            pairs.push(("wasted", ev.c.into()));
+        }
+        SpanKind::PreDraft => {
+            pairs.push(("tokens", ev.a.into()));
+            pairs.push(("overlap_ns", ev.b.into()));
+        }
+        SpanKind::NodeCompute => pairs.push(("window", ev.a.into())),
+        SpanKind::LinkBusy => {
+            pairs.push(("bytes", ev.a.into()));
+            pairs.push(("base_ns", ev.b.into()));
+            // the hop's t1 + bytes/bw decomposition: dur − t1 is the
+            // serialization (+queue-free occupancy) term
+            pairs.push(("serialize_ns", ev.dur.saturating_sub(ev.b).into()));
+        }
+        SpanKind::Verify => pairs.push(("window", ev.a.into())),
+        SpanKind::Commit => {
+            pairs.push(("committed", ev.a.into()));
+            pairs.push(("accepted", ev.b.into()));
+        }
+    }
+    Value::obj(&pairs)
+}
+
+/// Build the Chrome trace-event JSON for a batch of span events.
+pub fn perfetto_value(events: &[SpanEvent]) -> Value {
+    let mut out: Vec<Value> = Vec::new();
+    let tracks: BTreeSet<Track> = events.iter().map(|e| e.track).collect();
+    let pids: BTreeSet<i64> = tracks.iter().map(|t| track_pid_tid(*t).0).collect();
+    for pid in &pids {
+        let name = if *pid == 1 { "cluster" } else { "sequences" };
+        out.push(Value::obj(&[
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", (*pid).into()),
+            ("tid", 0i64.into()),
+            ("args", Value::obj(&[("name", name.into())])),
+        ]));
+    }
+    for t in &tracks {
+        let (pid, tid) = track_pid_tid(*t);
+        out.push(Value::obj(&[
+            ("ph", "M".into()),
+            ("name", "thread_name".into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+            ("args", Value::obj(&[("name", track_name(*t).into())])),
+        ]));
+    }
+
+    // Per track, emit properly nested B/E pairs (instants ride along as
+    // `ph:"i"`). Spans on one track either are disjoint or nest (node
+    // and link tracks serialize on busy-until; a sequence's round span
+    // contains its draft/pre-draft/verify), so a begin-sorted sweep
+    // with an end stack yields a balanced, monotone stream.
+    let mut per_track: BTreeMap<(i64, i64), Vec<&SpanEvent>> = BTreeMap::new();
+    for ev in events {
+        per_track.entry(track_pid_tid(ev.track)).or_default().push(ev);
+    }
+    for ((pid, tid), mut evs) in per_track {
+        evs.sort_by_key(|e| (e.t0, std::cmp::Reverse(e.end())));
+        // stack of (end_ns, name) for open spans
+        type OpenStack = Vec<(u64, &'static str)>;
+        let mut open: OpenStack = Vec::new();
+        let close_through = |open: &mut OpenStack, out: &mut Vec<Value>, t: u64, strict: bool| {
+            while let Some(&(end, name)) = open.last() {
+                if end < t || (!strict && end == t) {
+                    out.push(Value::obj(&[
+                        ("ph", "E".into()),
+                        ("name", name.into()),
+                        ("ts", us(end)),
+                        ("pid", pid.into()),
+                        ("tid", tid.into()),
+                    ]));
+                    open.pop();
+                } else {
+                    break;
+                }
+            }
+        };
+        for ev in evs {
+            if ev.kind.is_instant() {
+                // strict close: an instant at a span's exact end stays inside it
+                close_through(&mut open, &mut out, ev.t0, true);
+                out.push(Value::obj(&[
+                    ("ph", "i".into()),
+                    ("s", "t".into()),
+                    ("name", ev.kind.name().into()),
+                    ("ts", us(ev.t0)),
+                    ("pid", pid.into()),
+                    ("tid", tid.into()),
+                    ("args", span_args(ev)),
+                ]));
+            } else {
+                close_through(&mut open, &mut out, ev.t0, false);
+                out.push(Value::obj(&[
+                    ("ph", "B".into()),
+                    ("cat", "dsd".into()),
+                    ("name", ev.kind.name().into()),
+                    ("ts", us(ev.t0)),
+                    ("pid", pid.into()),
+                    ("tid", tid.into()),
+                    ("args", span_args(ev)),
+                ]));
+                open.push((ev.end(), ev.kind.name()));
+            }
+        }
+        close_through(&mut open, &mut out, u64::MAX, false);
+    }
+
+    Value::obj(&[("traceEvents", Value::from(out)), ("displayTimeUnit", "ms".into())])
+}
+
+/// Write the Perfetto trace to `path`.
+pub fn write_perfetto(path: &Path, events: &[SpanEvent]) -> io::Result<()> {
+    std::fs::write(path, format!("{}\n", perfetto_value(events)))
+}
+
+/// One aggregated round for the JSONL view.
+#[derive(Debug, Clone, Copy, Default)]
+struct RoundAgg {
+    group: u32,
+    start: u64,
+    round_ns: u64,
+    predicted_ns: u64,
+    gamma: u64,
+    tau_bits: u64,
+    draft_ns: u64,
+    draft_steps: u64,
+    pre_draft_ns: u64,
+    overlap_ns: u64,
+    verify_ns: u64,
+    committed: u64,
+    accepted: u64,
+    link_ns: u64,
+    link_bytes: u64,
+    link_hops: u64,
+    has_round: bool,
+}
+
+fn aggregate(events: &[SpanEvent]) -> BTreeMap<(u32, u32), RoundAgg> {
+    let mut rounds: BTreeMap<(u32, u32), RoundAgg> = BTreeMap::new();
+    for ev in events {
+        let agg = rounds.entry((ev.key.seq, ev.key.round)).or_default();
+        match ev.kind {
+            SpanKind::Round => {
+                agg.group = ev.key.group;
+                agg.start = ev.t0;
+                agg.round_ns = ev.dur;
+                agg.gamma = ev.a;
+                agg.predicted_ns = ev.b;
+                agg.has_round = true;
+            }
+            SpanKind::Decision => agg.tau_bits = ev.c,
+            SpanKind::Draft => {
+                agg.draft_ns += ev.dur;
+                agg.draft_steps += ev.a;
+            }
+            SpanKind::PreDraft => {
+                agg.pre_draft_ns += ev.dur;
+                agg.overlap_ns += ev.b;
+            }
+            SpanKind::Verify => agg.verify_ns += ev.dur,
+            SpanKind::Commit => {
+                agg.committed = ev.a;
+                agg.accepted = ev.b;
+            }
+            SpanKind::LinkBusy => {
+                agg.link_ns += ev.dur;
+                agg.link_bytes += ev.a;
+                agg.link_hops += 1;
+            }
+            SpanKind::NodeCompute => {}
+        }
+    }
+    // rounds truncated by the ring (no Round span retained) are dropped
+    rounds.retain(|_, a| a.has_round);
+    rounds
+}
+
+fn drift_ns(agg: &RoundAgg) -> u64 {
+    if agg.predicted_ns > 0 {
+        agg.round_ns.abs_diff(agg.predicted_ns)
+    } else {
+        0
+    }
+}
+
+/// Render the per-round JSONL (one JSON object per line, rounds in
+/// (seq, round) order).
+pub fn jsonl_string(events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for ((seq, round), agg) in aggregate(events) {
+        let line = Value::obj(&[
+            ("seq", (seq as u64).into()),
+            ("round", (round as u64).into()),
+            ("group", (agg.group as u64).into()),
+            ("start_ns", agg.start.into()),
+            ("round_ns", agg.round_ns.into()),
+            ("predicted_ns", agg.predicted_ns.into()),
+            ("drift_ns", drift_ns(&agg).into()),
+            ("gamma", agg.gamma.into()),
+            ("tau", tau_of_bits(agg.tau_bits).into()),
+            ("draft_ns", agg.draft_ns.into()),
+            ("draft_steps", agg.draft_steps.into()),
+            ("pre_draft_ns", agg.pre_draft_ns.into()),
+            ("overlap_ns", agg.overlap_ns.into()),
+            ("verify_ns", agg.verify_ns.into()),
+            ("committed", agg.committed.into()),
+            ("accepted", agg.accepted.into()),
+            ("link_ns", agg.link_ns.into()),
+            ("link_bytes", agg.link_bytes.into()),
+            ("link_hops", agg.link_hops.into()),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write the per-round JSONL to `path`.
+pub fn write_jsonl(path: &Path, events: &[SpanEvent]) -> io::Result<()> {
+    std::fs::write(path, jsonl_string(events))
+}
+
+/// Schema check for an emitted Perfetto trace: parses, every event's
+/// `ph` is `B`/`E`/`M`/`i`, per-track timestamps are monotone
+/// non-decreasing, and begin/end pairs balance. Returns the number of
+/// balanced B/E pairs.
+pub fn validate_perfetto(text: &str) -> Result<usize> {
+    let v = parse(text.trim())?;
+    let evs = v
+        .get("traceEvents")?
+        .as_array()
+        .ok_or_else(|| anyhow!("traceEvents is not an array"))?;
+    let mut open: BTreeMap<(i64, i64), Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut pairs = 0usize;
+    for e in evs {
+        let ph = e.str_field("ph")?;
+        if ph == "M" {
+            continue;
+        }
+        let pid = e.get("pid")?.as_i64().ok_or_else(|| anyhow!("pid is not an integer"))?;
+        let tid = e.get("tid")?.as_i64().ok_or_else(|| anyhow!("tid is not an integer"))?;
+        let ts = e.f64_field("ts")?;
+        let track = (pid, tid);
+        if let Some(prev) = last_ts.get(&track) {
+            ensure!(
+                ts >= *prev,
+                "timestamps not monotone on track pid={pid} tid={tid}: {ts} after {prev}"
+            );
+        }
+        last_ts.insert(track, ts);
+        match ph {
+            "B" => open.entry(track).or_default().push(e.str_field("name")?.to_string()),
+            "E" => {
+                let name = e.str_field("name")?;
+                let st = open.entry(track).or_default();
+                let Some(top) = st.pop() else {
+                    bail!("unbalanced E '{name}' on track pid={pid} tid={tid}");
+                };
+                ensure!(
+                    top == name,
+                    "mismatched E on track pid={pid} tid={tid}: closed '{name}', open '{top}'"
+                );
+                pairs += 1;
+            }
+            "i" => {}
+            other => bail!("unexpected ph '{other}'"),
+        }
+    }
+    for (track, st) in open {
+        ensure!(st.is_empty(), "unclosed span(s) {st:?} on track {track:?}");
+    }
+    ensure!(pairs > 0, "trace has no begin/end spans");
+    Ok(pairs)
+}
+
+/// Schema check for the per-round JSONL: every line parses, carries
+/// the required fields, and its `drift_ns` equals
+/// `|round_ns − predicted_ns|` (0 when no prediction was recorded).
+/// Returns the number of rounds.
+pub fn validate_jsonl(text: &str) -> Result<usize> {
+    let mut rounds = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse(line).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+        for field in ["seq", "round", "group", "gamma", "committed"] {
+            v.usize_field(field).map_err(|e| anyhow!("line {}: {e}", i + 1))?;
+        }
+        let round_ns = v.usize_field("round_ns")? as u64;
+        let predicted = v.usize_field("predicted_ns")? as u64;
+        let drift = v.usize_field("drift_ns")? as u64;
+        let expect = if predicted > 0 { round_ns.abs_diff(predicted) } else { 0 };
+        ensure!(
+            drift == expect,
+            "line {}: drift_ns {drift} inconsistent with |{round_ns} - {predicted}|",
+            i + 1
+        );
+        rounds += 1;
+    }
+    ensure!(rounds > 0, "JSONL trace has no rounds");
+    Ok(rounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SpanEvent, SpanKind, Track, TraceKey};
+    use super::*;
+
+    fn keyed(mut ev: SpanEvent, key: TraceKey) -> SpanEvent {
+        ev.key = key;
+        ev
+    }
+
+    /// One synthetic round: draft → node/link activity → verify,
+    /// wrapped in a round span with a decision/commit instant.
+    fn round_events(seq: u32, round: u32, t0: u64) -> Vec<SpanEvent> {
+        let k = TraceKey::new(seq, round, round + 1);
+        vec![
+            keyed(
+                SpanEvent::new(SpanKind::Round, Track::Seq(seq), t0, 1000).args(4, 990, 0),
+                k,
+            ),
+            keyed(SpanEvent::new(SpanKind::Decision, Track::Seq(seq), t0, 0).args(4, 990, 0), k),
+            keyed(SpanEvent::new(SpanKind::Draft, Track::Seq(seq), t0, 100).args(5, 0, 0), k),
+            keyed(
+                SpanEvent::new(SpanKind::NodeCompute, Track::Node(0), t0, 100).args(5, 0, 0),
+                k,
+            ),
+            keyed(
+                SpanEvent::new(SpanKind::LinkBusy, Track::Link(0), t0 + 100, 300).args(640, 250, 0),
+                k,
+            ),
+            keyed(
+                SpanEvent::new(SpanKind::Verify, Track::Seq(seq), t0 + 900, 100).args(4, 0, 0),
+                k,
+            ),
+            keyed(
+                SpanEvent::new(SpanKind::Commit, Track::Seq(seq), t0 + 1000, 0).args(3, 2, 0),
+                k,
+            ),
+        ]
+    }
+
+    #[test]
+    fn perfetto_roundtrip_validates() {
+        let mut evs = round_events(0, 0, 0);
+        evs.extend(round_events(0, 1, 1000));
+        evs.extend(round_events(1, 0, 500));
+        let text = format!("{}", perfetto_value(&evs));
+        let pairs = validate_perfetto(&text).unwrap();
+        // 3 rounds × (round + draft + verify + compute + link) spans
+        assert_eq!(pairs, 15);
+        assert!(text.contains("\"thread_name\""));
+        assert!(text.contains("node 0"));
+        assert!(text.contains("link 0"));
+        assert!(text.contains("seq 1"));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_validates() {
+        let mut evs = round_events(0, 0, 0);
+        evs.extend(round_events(0, 1, 1000));
+        let text = jsonl_string(&evs);
+        assert_eq!(validate_jsonl(&text).unwrap(), 2);
+        let first = parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.usize_field("round_ns").unwrap(), 1000);
+        assert_eq!(first.usize_field("predicted_ns").unwrap(), 990);
+        assert_eq!(first.usize_field("drift_ns").unwrap(), 10);
+        assert_eq!(first.usize_field("committed").unwrap(), 3);
+        assert_eq!(first.usize_field("link_hops").unwrap(), 1);
+    }
+
+    #[test]
+    fn validator_rejects_unbalanced_spans() {
+        let text = r#"{"traceEvents":[
+            {"ph":"B","name":"round","ts":0.0,"pid":2,"tid":0},
+            {"ph":"B","name":"draft","ts":1.0,"pid":2,"tid":0},
+            {"ph":"E","name":"draft","ts":2.0,"pid":2,"tid":0}
+        ]}"#;
+        let err = validate_perfetto(text).unwrap_err().to_string();
+        assert!(err.contains("unclosed"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_nonmonotone_timestamps() {
+        let text = r#"{"traceEvents":[
+            {"ph":"B","name":"round","ts":5.0,"pid":2,"tid":0},
+            {"ph":"E","name":"round","ts":1.0,"pid":2,"tid":0}
+        ]}"#;
+        let err = validate_perfetto(text).unwrap_err().to_string();
+        assert!(err.contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn validator_rejects_inconsistent_drift() {
+        let good = jsonl_string(&round_events(0, 0, 0));
+        let bad = good.replace("\"drift_ns\":10", "\"drift_ns\":11");
+        assert_ne!(good, bad, "fixture must actually tamper the line");
+        assert!(validate_jsonl(&bad).is_err());
+    }
+
+    #[test]
+    fn truncated_rounds_are_dropped_from_jsonl() {
+        // a ring that lost round 0's Round span keeps only round 1
+        let mut evs = round_events(0, 0, 0);
+        evs.remove(0);
+        evs.extend(round_events(0, 1, 1000));
+        assert_eq!(validate_jsonl(&jsonl_string(&evs)).unwrap(), 1);
+    }
+}

@@ -1,0 +1,327 @@
+//! Round-trace observability: zero-allocation span tracing for the
+//! decode hot path.
+//!
+//! The paper's claim is a statement about *where round time goes* —
+//! Eq. 5's `(N−1)·t1·(k−1)/k` saving lives on the comm/compute
+//! timeline — so the repo needs more than aggregates: per-round,
+//! per-hop spans showing draft → wire → verify → commit, from both the
+//! discrete-event simulator (sim time) and the socket transport (wall
+//! time).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocations in steady state** (the PR 5 invariant): the
+//!    tracer is a preallocated ring buffer of fixed-size POD
+//!    [`SpanEvent`]s. Recording is a bounds-checked store; when the
+//!    ring is full the oldest event is overwritten (and counted in
+//!    [`RingTracer::dropped`]), never reallocated. Pinned by the
+//!    tracing-enabled case in `tests/alloc_budget.rs`.
+//! 2. **Free when off**: producers hold an `Option<RingTracer>` (the
+//!    simulator) or a `&mut dyn TraceSink` (the socket transport);
+//!    the disabled impl ([`NoopSink`]) is a unit struct whose methods
+//!    compile to nothing.
+//! 3. **Keyed spans**: every event carries a [`TraceKey`] — which
+//!    sequence, which round of that sequence, and which fused group
+//!    pass — stamped by the sink from its current key so hot-path
+//!    call sites don't thread the key through every helper.
+//!
+//! Exporters ([`export`]) turn the ring into a Chrome/Perfetto
+//! `trace.json` (one track per node, link, and sequence) and a
+//! per-round JSONL log; the drift auditor ([`drift`]) compares each
+//! round's cost-model prediction against the traced actual —
+//! extending the PR 3 property (the closed form matches
+//! `PipelineSim`) from the formula to recorded executions.
+
+pub mod drift;
+pub mod export;
+
+use crate::cluster::clock::Nanos;
+
+/// Identifies what a span belongs to: the sequence, that sequence's
+/// round counter, and the fused-group pass id (`PipelineSim`'s
+/// `sync_rounds` serial — members of one fused round share it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceKey {
+    pub seq: u32,
+    pub round: u32,
+    pub group: u32,
+}
+
+impl TraceKey {
+    pub fn new(seq: u32, round: u32, group: u32) -> Self {
+        TraceKey { seq, round, group }
+    }
+}
+
+/// Which timeline row a span occupies in the exported trace: a
+/// pipeline node's compute timeline, a link's occupancy timeline, or a
+/// sequence's semantic round timeline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    Node(u16),
+    Link(u16),
+    Seq(u32),
+}
+
+/// Span kinds and the meaning of their `a`/`b`/`c` payload words:
+///
+/// | kind          | a                | b                    | c          |
+/// |---------------|------------------|----------------------|------------|
+/// | `Round`       | γ                | predicted round ns   | —          |
+/// | `Decision`    | γ                | predicted round ns   | τ f32 bits |
+/// | `Draft`       | draft steps      | reused (0/1)         | wasted     |
+/// | `PreDraft`    | pre-draft tokens | overlap ns           | —          |
+/// | `NodeCompute` | window tokens    | —                    | —          |
+/// | `LinkBusy`    | payload bytes    | link base ns (`t1`)  | —          |
+/// | `Verify`      | window nodes     | —                    | —          |
+/// | `Commit`      | committed        | accepted             | —          |
+///
+/// `Decision` and `Commit` are instants (`dur == 0` by convention);
+/// the rest are durations. A `LinkBusy` span's serialization term is
+/// `dur − b` — the `t1 + bytes/bw` decomposition of one hop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    Round,
+    Decision,
+    Draft,
+    PreDraft,
+    NodeCompute,
+    LinkBusy,
+    Verify,
+    Commit,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Round => "round",
+            SpanKind::Decision => "decision",
+            SpanKind::Draft => "draft",
+            SpanKind::PreDraft => "pre_draft",
+            SpanKind::NodeCompute => "compute",
+            SpanKind::LinkBusy => "link",
+            SpanKind::Verify => "verify",
+            SpanKind::Commit => "commit",
+        }
+    }
+
+    /// Instant markers (exported as Perfetto `ph:"i"`, not B/E pairs).
+    pub fn is_instant(self) -> bool {
+        matches!(self, SpanKind::Decision | SpanKind::Commit)
+    }
+}
+
+/// One fixed-size POD trace event. `Copy` by design: recording one is
+/// a store into the preallocated ring, nothing more.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub track: Track,
+    /// Stamped by the sink from its current key (see
+    /// [`TraceSink::set_key`]); the value passed in is ignored.
+    pub key: TraceKey,
+    pub t0: Nanos,
+    pub dur: Nanos,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+impl SpanEvent {
+    pub fn new(kind: SpanKind, track: Track, t0: Nanos, dur: Nanos) -> Self {
+        SpanEvent { kind, track, key: TraceKey::default(), t0, dur, a: 0, b: 0, c: 0 }
+    }
+
+    /// Attach the kind-specific payload words (see [`SpanKind`]).
+    pub fn args(mut self, a: u64, b: u64, c: u64) -> Self {
+        self.a = a;
+        self.b = b;
+        self.c = c;
+        self
+    }
+
+    pub fn end(&self) -> Nanos {
+        self.t0 + self.dur
+    }
+}
+
+/// Where producers send spans. The disabled impl ([`NoopSink`])
+/// compiles to no-ops; the enabled impl ([`RingTracer`]) stores into
+/// a preallocated ring.
+pub trait TraceSink {
+    /// Whether recording is live — producers may skip building events
+    /// entirely when this is false.
+    fn enabled(&self) -> bool;
+    /// Set the (sequence, round, group) stamped onto every following
+    /// [`TraceSink::record`] until the next `set_key`.
+    fn set_key(&mut self, key: TraceKey);
+    /// Record one span (the sink overwrites `ev.key` with its current
+    /// key).
+    fn record(&mut self, ev: SpanEvent);
+}
+
+/// The disabled sink: every method is an empty body the optimizer
+/// erases.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoopSink;
+
+impl TraceSink for NoopSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn set_key(&mut self, _key: TraceKey) {}
+    fn record(&mut self, _ev: SpanEvent) {}
+}
+
+/// The enabled sink: a ring buffer preallocated at construction.
+/// Recording never allocates — once full, the oldest event is
+/// overwritten and counted in [`RingTracer::dropped`].
+#[derive(Debug, Clone)]
+pub struct RingTracer {
+    buf: Vec<SpanEvent>,
+    /// Oldest event's index once the ring has wrapped (0 before).
+    head: usize,
+    dropped: u64,
+    key: TraceKey,
+}
+
+impl RingTracer {
+    /// Preallocate a ring of `cap` events (~64 B each; 64 Ki events is
+    /// a few MB and covers tens of thousands of rounds).
+    pub fn with_capacity(cap: usize) -> Self {
+        RingTracer {
+            buf: Vec::with_capacity(cap.max(1)),
+            head: 0,
+            dropped: 0,
+            key: TraceKey::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events overwritten after the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn key(&self) -> TraceKey {
+        self.key
+    }
+
+    /// Retained events, oldest first. Allocation-free iteration.
+    pub fn events(&self) -> impl Iterator<Item = &SpanEvent> {
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// Retained events, oldest first, as an owned vec (export-time
+    /// convenience — allocates, so not for the hot path).
+    pub fn to_vec(&self) -> Vec<SpanEvent> {
+        self.events().copied().collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.dropped = 0;
+    }
+}
+
+impl TraceSink for RingTracer {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn set_key(&mut self, key: TraceKey) {
+        self.key = key;
+    }
+
+    fn record(&mut self, mut ev: SpanEvent) {
+        ev.key = self.key;
+        let cap = self.buf.capacity();
+        if self.buf.len() < cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head += 1;
+            if self.head == cap {
+                self.head = 0;
+            }
+            self.dropped += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: SpanKind, t0: Nanos) -> SpanEvent {
+        SpanEvent::new(kind, Track::Node(0), t0, 10)
+    }
+
+    #[test]
+    fn ring_stamps_current_key() {
+        let mut t = RingTracer::with_capacity(8);
+        t.set_key(TraceKey::new(3, 7, 11));
+        t.record(ev(SpanKind::Draft, 0).args(5, 0, 0));
+        let e = t.events().next().unwrap();
+        assert_eq!(e.key, TraceKey::new(3, 7, 11));
+        assert_eq!(e.a, 5);
+        assert_eq!(e.kind.name(), "draft");
+    }
+
+    #[test]
+    fn ring_wraps_without_growing() {
+        let mut t = RingTracer::with_capacity(4);
+        let cap = t.capacity();
+        for i in 0..10u64 {
+            t.record(ev(SpanKind::NodeCompute, i).args(i, 0, 0));
+        }
+        assert_eq!(t.capacity(), cap, "ring must never grow");
+        assert_eq!(t.len(), cap);
+        assert_eq!(t.dropped(), 10 - cap as u64);
+        // oldest-first iteration across the wrap point
+        let order: Vec<u64> = t.events().map(|e| e.a).collect();
+        let expect: Vec<u64> = (10 - cap as u64..10).collect();
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn clear_resets_ring() {
+        let mut t = RingTracer::with_capacity(2);
+        for i in 0..5 {
+            t.record(ev(SpanKind::Verify, i));
+        }
+        t.clear();
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        t.record(ev(SpanKind::Verify, 9));
+        assert_eq!(t.events().next().unwrap().t0, 9);
+    }
+
+    #[test]
+    fn noop_sink_is_inert() {
+        let mut s = NoopSink;
+        assert!(!s.enabled());
+        s.set_key(TraceKey::new(1, 2, 3));
+        s.record(ev(SpanKind::Round, 0));
+    }
+
+    #[test]
+    fn instant_kinds() {
+        assert!(SpanKind::Decision.is_instant());
+        assert!(SpanKind::Commit.is_instant());
+        assert!(!SpanKind::Round.is_instant());
+        assert!(!SpanKind::LinkBusy.is_instant());
+    }
+}

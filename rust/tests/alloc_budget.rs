@@ -21,6 +21,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use dsd::control::ControllerKind;
 use dsd::coordinator::{OracleChainDecoder, OracleConfig, OracleFleet, OracleRound};
+use dsd::trace::RingTracer;
 use dsd::util::alloc_counter;
 
 const PROMPT: [i32; 6] = [2, 7, 1, 8, 2, 8];
@@ -138,6 +139,34 @@ fn steady_fused_group_round_is_allocation_free() {
         counts.allocs,
         counts.bytes
     );
+}
+
+#[test]
+fn steady_traced_round_is_allocation_free() {
+    // Tracing ON must not break the budget: recording a span is a store
+    // into the preallocated ring. The ring is sized to WRAP inside the
+    // measured window, so the overwrite path is pinned too.
+    let _serial = measure_lock();
+    let (mut dec, mut buf) = warmed(true, ControllerKind::Static, 17);
+    dec.sim.set_tracer(RingTracer::with_capacity(256));
+    for _ in 0..WARMUP_ROUNDS {
+        dec.round_into(&mut buf);
+    }
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            dec.round_into(&mut buf);
+        }
+    });
+    assert_eq!(
+        counts.allocs,
+        0,
+        "{MEASURED_ROUNDS} traced steady rounds performed {} allocations ({} bytes)",
+        counts.allocs,
+        counts.bytes
+    );
+    let t = dec.sim.tracer().expect("tracer still installed");
+    assert!(!t.is_empty(), "tracing was on; spans must have been captured");
+    assert!(t.dropped() > 0, "ring sized to wrap within the measured window");
 }
 
 #[test]
