@@ -8,6 +8,9 @@
 //! Run: `cargo run --release --example serve_bench -- \
 //!         [--nodes 4] [--link_ms 15] [--requests 4] [--tokens 32]`
 
+// End-to-end wall-clock driver: real serving latency is measured time.
+#![allow(clippy::disallowed_methods)]
+
 use dsd::cluster::real::RealCluster;
 use dsd::cluster::LinkModel;
 use dsd::spec::{DecodeConfig, DraftShape, Policy};

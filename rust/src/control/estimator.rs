@@ -27,7 +27,7 @@ use crate::control::cost::GUESS_HIT_PRIOR;
 /// a chain round; deeper slots carry no information). Old evidence is
 /// exponentially discounted so the estimate tracks drift within a
 /// sequence.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct AcceptanceEstimator {
     /// Discounted accepted-token pseudo-count (Beta α).
     acc: f64,

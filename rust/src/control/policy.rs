@@ -290,8 +290,9 @@ impl SeqController {
     pub fn peek_full_accept(&self, offered: usize) -> Decision {
         // Equivalent to cloning the whole controller and observing the
         // hypothetical record, without copying the (Vec-carrying) config:
-        // observe() is exactly est.observe + decide.
-        let mut est = self.est.clone();
+        // observe() is exactly est.observe + decide. The estimator is
+        // plain-old-data (`Copy`), so this peek stays heap-free.
+        let mut est = self.est;
         est.observe(offered, offered, 0);
         decide(&self.cfg, &est, &self.cur)
     }

@@ -109,6 +109,7 @@ pub fn sample_logits(logits: &[f32], temp: f32, rng: &mut Rng) -> usize {
 /// [`sample_logits`] with an explicit uniform — the counter-based-RNG
 /// form the decode engine uses, whose draws are keyed on position so
 /// they are independent of evaluation order (see `util::rng::uniform_at`).
+// dsd-lint: allow(hot-path-alloc): allocating wrapper for tests/one-shot callers; rounds use sample_logits_into
 pub fn sample_logits_with(logits: &[f32], temp: f32, u: f32) -> usize {
     let mut probs = Vec::new();
     sample_logits_into(logits, temp, u, &mut probs)

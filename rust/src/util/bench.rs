@@ -5,6 +5,9 @@
 //! [`write_bench_json`] so the perf trajectory is tracked across PRs
 //! (CI uploads the files as workflow artifacts).
 
+// On the sim-time allowlist (LINTS.md): benchmarking measures wall time.
+#![allow(clippy::disallowed_methods)]
+
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 

@@ -109,6 +109,7 @@ impl RoundScratch {
                 b.clear();
                 (a, b)
             }
+            // dsd-lint: allow(hot-path-alloc): pool miss only before the recycle cycle warms (first 2 rounds)
             None => (Vec::new(), Vec::new()),
         }
     }

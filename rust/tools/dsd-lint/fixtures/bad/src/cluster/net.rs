@@ -1,0 +1,14 @@
+//! Bad fixture: wall-clock reads outside the allowlist, plus a panic
+//! count above the committed baseline. Never compiled — lexed only.
+
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> u64 {
+    let t0 = Instant::now();
+    let _wall = SystemTime::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn risky(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    x.unwrap() + y.expect("boom")
+}

@@ -1,0 +1,11 @@
+//! Bad fixture: controller code naming a timing/overlap field. The
+//! controller must be a pure function of committed outcomes. Never
+//! compiled — lexed only.
+
+pub struct Plan {
+    pub overlap_ns: u64,
+}
+
+pub fn decide(plan: &Plan) -> bool {
+    plan.overlap_ns > 0
+}

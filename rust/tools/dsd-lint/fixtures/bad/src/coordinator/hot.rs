@@ -1,0 +1,17 @@
+//! Bad fixture: an allocating helper reachable from a round-loop root
+//! through one level of indirection, plus a reason-less waiver. Never
+//! compiled — lexed only.
+
+fn widen(buf: &mut Vec<u32>, n: usize) {
+    let extra = Vec::with_capacity(n);
+    buf.extend(extra);
+}
+
+pub fn commit_into(buf: &mut Vec<u32>, n: usize) {
+    widen(buf, n);
+}
+
+pub fn noted(buf: &mut Vec<u32>) {
+    // dsd-lint: allow(hot-path-alloc)
+    buf.push(0);
+}

@@ -1,0 +1,26 @@
+//! Bad fixture: hash-order iteration and ambient hash seeding inside a
+//! committed-stream module. Never compiled — lexed only.
+
+use std::collections::HashMap;
+
+pub fn sum_scores(scores: &HashMap<u32, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, v) in scores.iter() {
+        total += v;
+    }
+    total
+}
+
+pub fn count_keys(m: &HashMap<u32, f64>) -> usize {
+    let mut n = 0;
+    for _k in m {
+        n += 1;
+    }
+    n
+}
+
+pub fn seeded() -> u64 {
+    let state = std::collections::hash_map::RandomState::new();
+    let _ = &state;
+    0
+}

@@ -1,0 +1,9 @@
+//! Good fixture: wall-clock reads are fine on an allowlisted file
+//! (cluster/real.rs is the real-deployment timing path). Never
+//! compiled — lexed only.
+
+use std::time::Instant;
+
+pub fn stamp() -> u128 {
+    Instant::now().elapsed().as_nanos()
+}

@@ -1,0 +1,6 @@
+//! Good fixture: the controller decides from committed outcomes only.
+//! Never compiled — lexed only.
+
+pub fn decide(accepted: u64, proposed: u64) -> bool {
+    accepted * 2 >= proposed
+}

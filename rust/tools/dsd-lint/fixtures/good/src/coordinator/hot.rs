@@ -1,0 +1,25 @@
+//! Good fixture: the round loop reuses caller buffers; the cold-start
+//! allocation carries a reasoned waiver, and the allocating wrapper
+//! opts out of the walk with a fn-level waiver. Never compiled —
+//! lexed only.
+
+pub fn commit_into(buf: &mut Vec<u32>, n: usize) {
+    buf.clear();
+    for i in 0..n {
+        buf.push(i as u32);
+    }
+}
+
+pub fn warm_into(buf: &mut Vec<u32>) {
+    if buf.capacity() == 0 {
+        // dsd-lint: allow(hot-path-alloc): cold-start only, before the pool warms
+        *buf = Vec::with_capacity(64);
+    }
+}
+
+// dsd-lint: allow(hot-path-alloc): allocating wrapper for one-shot callers; rounds use commit_into
+pub fn commit_with(n: usize) -> Vec<u32> {
+    let mut buf = Vec::with_capacity(n);
+    commit_into(&mut buf, n);
+    buf
+}

@@ -1,0 +1,12 @@
+//! Good fixture: hash-map lookups are fine; ordered traversal goes
+//! through a caller-provided key list. Never compiled — lexed only.
+
+use std::collections::HashMap;
+
+pub fn score(m: &HashMap<u32, f64>, keys: &[u32]) -> f64 {
+    let mut total = 0.0;
+    for k in keys {
+        total += m.get(k).copied().unwrap_or(0.0);
+    }
+    total
+}

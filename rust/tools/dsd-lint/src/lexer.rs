@@ -1,0 +1,344 @@
+//! A minimal Rust lexer: just enough tokenization for the dsd-lint rule
+//! passes. Comments, string/char literals, and lifetimes are consumed so
+//! that rule patterns never fire inside them; `// dsd-lint: allow(...)`
+//! waiver comments are captured with their line numbers.
+//!
+//! This is intentionally NOT a full Rust lexer (no float-suffix
+//! pedantry, no nested-generic disambiguation) — the rule passes only
+//! need identifier/punct streams with accurate line numbers, and the
+//! fixture differential tests pin the behaviors the rules rely on.
+
+/// Token category. `Lit` covers string/char literals (text dropped),
+/// `Life` is a lifetime such as `'a`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Num,
+    Lit,
+    Life,
+}
+
+/// One token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// A parsed `// dsd-lint: allow(<rule>): <reason>` waiver comment.
+#[derive(Debug, Clone)]
+pub struct WaiverSite {
+    pub line: u32,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Lexer output for one file.
+pub struct LexOut {
+    pub toks: Vec<Tok>,
+    pub waivers: Vec<WaiverSite>,
+    /// Lines holding a `dsd-lint:` marker that failed to parse or is
+    /// missing its mandatory reason string.
+    pub bad_waivers: Vec<u32>,
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Does `src[i..]` start a (possibly raw/byte) string literal?
+fn starts_string(src: &[u8], i: usize) -> bool {
+    let mut j = i;
+    let mut seen_prefix = false;
+    while j < src.len() && (src[j] == b'r' || src[j] == b'b') {
+        // at most two prefix letters (r, b, rb, br)
+        if j - i >= 2 {
+            return false;
+        }
+        seen_prefix = true;
+        j += 1;
+    }
+    while j < src.len() && src[j] == b'#' {
+        if !seen_prefix {
+            return false;
+        }
+        j += 1;
+    }
+    j < src.len() && src[j] == b'"' && (seen_prefix || j == i)
+}
+
+/// Consume a string literal starting at `i`; returns (next index, lines
+/// consumed).
+fn skip_string(src: &[u8], i: usize) -> (usize, u32) {
+    let mut j = i;
+    let mut raw = false;
+    let mut hashes = 0usize;
+    let mut newlines = 0u32;
+    while j < src.len() && (src[j] == b'r' || src[j] == b'b') {
+        if src[j] == b'r' {
+            raw = true;
+        }
+        j += 1;
+    }
+    while j < src.len() && src[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    debug_assert!(j < src.len() && src[j] == b'"');
+    j += 1;
+    while j < src.len() {
+        match src[j] {
+            b'\n' => {
+                newlines += 1;
+                j += 1;
+            }
+            b'\\' if !raw => {
+                j += 2;
+            }
+            b'"' => {
+                if raw && hashes > 0 {
+                    if src[j + 1..].len() >= hashes
+                        && src[j + 1..j + 1 + hashes].iter().all(|&c| c == b'#')
+                    {
+                        return (j + 1 + hashes, newlines);
+                    }
+                    j += 1;
+                } else {
+                    return (j + 1, newlines);
+                }
+            }
+            _ => {
+                j += 1;
+            }
+        }
+    }
+    (j, newlines)
+}
+
+/// Parse a `dsd-lint: allow(<rule>): <reason>` marker out of a comment.
+/// Returns `Ok(Some(..))` on a well-formed waiver, `Ok(None)` when the
+/// comment has no marker, and `Err(())` on a malformed/reason-less one.
+fn parse_waiver(comment: &str, line: u32) -> Result<Option<WaiverSite>, ()> {
+    let Some(pos) = comment.find("dsd-lint:") else {
+        return Ok(None);
+    };
+    let rest = comment[pos + "dsd-lint:".len()..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else {
+        return Err(());
+    };
+    let Some(close) = rest.find(')') else {
+        return Err(());
+    };
+    let rule = &rest[..close];
+    if rule.is_empty() || !rule.bytes().all(|c| c.is_ascii_lowercase() || c == b'-') {
+        return Err(());
+    }
+    let after = rest[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix(':') else {
+        return Err(());
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return Err(());
+    }
+    Ok(Some(WaiverSite {
+        line,
+        rule: rule.to_string(),
+        reason: reason.to_string(),
+    }))
+}
+
+/// Tokenize one source file.
+pub fn lex(src: &str) -> LexOut {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut waivers = Vec::new();
+    let mut bad_waivers = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let end = src[i..].find('\n').map(|k| i + k).unwrap_or(n);
+            match parse_waiver(&src[i..end], line) {
+                Ok(Some(w)) => waivers.push(w),
+                Ok(None) => {}
+                Err(()) => bad_waivers.push(line),
+            }
+            i = end;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == b'\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+        } else if c == b'\'' {
+            // lifetime or char literal
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                if i + 2 < n && b[i + 2] == b'\'' {
+                    // 'x'
+                    toks.push(Tok { kind: TokKind::Lit, text: String::new(), line });
+                    i += 3;
+                } else {
+                    let mut j = i + 1;
+                    while j < n && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    toks.push(Tok {
+                        kind: TokKind::Life,
+                        text: src[i..j].to_string(),
+                        line,
+                    });
+                    i = j;
+                }
+            } else if i + 1 < n && b[i + 1] == b'\\' {
+                let close = src[i + 2..].find('\'').map(|k| i + 2 + k + 1).unwrap_or(n);
+                toks.push(Tok { kind: TokKind::Lit, text: String::new(), line });
+                i = close;
+            } else {
+                let close = src[i + 1..].find('\'').map(|k| i + 1 + k + 1).unwrap_or(i + 1);
+                toks.push(Tok { kind: TokKind::Lit, text: String::new(), line });
+                i = close;
+            }
+        } else if starts_string(b, i) {
+            let (j, newlines) = skip_string(b, i);
+            toks.push(Tok { kind: TokKind::Lit, text: String::new(), line });
+            line += newlines;
+            i = j;
+        } else if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(b[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+        } else if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident_cont(b[j]) || b[j] == b'.') {
+                // `0..x` / `1.max(..)`: the dot is not part of the number
+                if b[j] == b'.' && (j + 1 >= n || !b[j + 1].is_ascii_digit()) {
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: src[i..j].to_string(),
+                line,
+            });
+            i = j;
+        } else if c.is_ascii() {
+            toks.push(Tok {
+                kind: TokKind::Punct,
+                text: (c as char).to_string(),
+                line,
+            });
+            i += 1;
+        } else {
+            // non-ASCII outside comments/strings: skip the byte
+            i += 1;
+        }
+    }
+    LexOut { toks, waivers, bad_waivers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_skipped() {
+        let src = "let x = \"Instant::now()\"; // Instant::now()\n/* SystemTime */ let y = 1;";
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y"]);
+    }
+
+    #[test]
+    fn raw_strings_and_chars() {
+        let src = "let s = r#\"a \" b\"#; let c = 'x'; let l: &'a str = s;";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        assert!(!ids.contains(&"a".to_string()), "lifetime must not be an ident");
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let src = "a\nb\n  c";
+        let toks = lex(src).toks;
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn waiver_parses_rule_and_reason() {
+        let src = "// dsd-lint: allow(hot-path-alloc): warm-up only\nlet x = 1;";
+        let out = lex(src);
+        assert_eq!(out.waivers.len(), 1);
+        assert_eq!(out.waivers[0].rule, "hot-path-alloc");
+        assert_eq!(out.waivers[0].reason, "warm-up only");
+        assert_eq!(out.waivers[0].line, 1);
+        assert!(out.bad_waivers.is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_flagged() {
+        let out = lex("// dsd-lint: allow(sim-time)\nlet x = 1;");
+        assert!(out.waivers.is_empty());
+        assert_eq!(out.bad_waivers, vec![1]);
+    }
+
+    #[test]
+    fn multiline_string_advances_lines() {
+        let src = "let s = \"a\nb\nc\";\nlet t = 1;";
+        let toks = lex(src).toks;
+        let t_tok = toks.iter().find(|t| t.is_ident("t")).unwrap();
+        assert_eq!(t_tok.line, 4);
+    }
+}

@@ -1,0 +1,1105 @@
+//! dsd-lint: a zero-dependency static analyzer for the `dsd` crate's
+//! structural invariants. See LINTS.md at the repo root for the rule
+//! catalog, the invariant each rule protects, and the waiver syntax.
+//!
+//! Rule families (rule ids in brackets):
+//! - sim-time purity [`sim-time`]: `Instant::now()` / `SystemTime` are
+//!   forbidden outside the wall-time allowlist.
+//! - determinism [`rng-source`, `hash-iter`]: committed-stream modules
+//!   must draw randomness only through `util::rng` (no ambient entropy
+//!   sources) and must never *iterate* a `HashMap`/`HashSet` (seeded
+//!   hash order is run-to-run nondeterministic).
+//! - controller purity [`ctrl-purity`]: `control::` may not name
+//!   timing/overlap-scheduling/trace symbols.
+//! - hot-path allocation reachability [`hot-path-alloc`]: a call-graph
+//!   walk from the round-loop roots must reach no allocating construct.
+//! - panic hygiene [`panic-ratchet`]: `unwrap()`/`expect()` counts per
+//!   serving-path file may not grow past `lint-baseline.toml`.
+//! - waiver syntax [`waiver-syntax`]: every waiver carries a reason.
+//!
+//! Waivers: `// dsd-lint: allow(<rule>): <reason>` on the offending
+//! line or the line directly above it. A waiver on a `fn` definition
+//! line (or directly above it) excludes that function from the hot-path
+//! walk entirely — the spelling for intentionally-allocating wrappers.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+pub mod lexer;
+
+use lexer::{lex, Tok, TokKind, WaiverSite};
+
+/// Files (relative to the crate root) allowed to read the wall clock.
+const SIM_TIME_ALLOWLIST: &[&str] = &[
+    "src/runtime/engine.rs",
+    "src/model/executor.rs",
+    "src/cluster/real.rs",
+    "src/util/bench.rs",
+    "src/trace/",
+];
+
+/// Modules whose committed token streams must be deterministic.
+const COMMITTED_PREFIXES: &[&str] =
+    &["src/spec/", "src/sampling/", "src/coordinator/", "src/control/"];
+
+/// Modules the hot-path roots may live in.
+const HOT_ROOT_PREFIXES: &[&str] = &[
+    "src/sampling/",
+    "src/spec/",
+    "src/coordinator/",
+    "src/model/",
+    "src/cluster/",
+];
+
+/// Round-loop roots beyond the `*_into` / `*_with` naming pattern.
+const HOT_ROOT_EXTRA: &[&str] = &["serve_round"];
+
+/// Ambient-randomness identifiers forbidden in committed-stream modules.
+const RNG_FORBIDDEN: &[&str] =
+    &["thread_rng", "from_entropy", "RandomState", "DefaultHasher", "rand"];
+
+/// Timing / overlap-scheduling / trace symbols forbidden in `control::`.
+const CTRL_FORBIDDEN: &[&str] = &[
+    "Instant",
+    "SystemTime",
+    "Duration",
+    "elapsed",
+    "sent_at",
+    "SpanEvent",
+    "TraceSink",
+    "RingTracer",
+    "RealClock",
+    "overlap_ns",
+    "pre_draft_ns",
+    "recovered_ns",
+    "pre_drafted",
+    "reused",
+    "wasted",
+];
+
+/// Hash-container methods that expose the (seeded, nondeterministic)
+/// iteration order.
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "retain",
+];
+
+/// `Type::method` pairs that always construct a fresh heap allocation.
+const ALLOC_QUALIFIED: &[(&str, &str)] = &[
+    ("Vec", "new"),
+    ("Vec", "with_capacity"),
+    ("Box", "new"),
+    ("String", "new"),
+    ("String", "with_capacity"),
+    ("String", "from"),
+];
+
+/// Method names that allocate on every call.
+const ALLOC_METHODS: &[&str] = &["clone", "to_vec", "to_string", "to_owned", "collect"];
+
+/// Macros that allocate.
+const ALLOC_MACROS: &[&str] = &["vec", "format"];
+
+/// Directories whose per-file `unwrap()`/`expect()` counts are ratcheted.
+const RATCHET_PREFIXES: &[&str] = &["src/coordinator/", "src/cluster/"];
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "loop", "return", "let", "in", "as", "move", "ref", "mut",
+    "else", "unsafe", "break", "continue", "where", "impl", "fn", "pub", "use", "mod", "struct",
+    "enum", "trait", "type", "const", "static", "crate", "super", "self", "Self", "dyn", "await",
+];
+
+/// One reported violation.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub rule: String,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl Diag {
+    fn new(rule: &str, file: &str, line: u32, msg: String) -> Diag {
+        Diag { rule: rule.to_string(), file: file.to_string(), line, msg }
+    }
+}
+
+/// Full analysis result for one tree.
+pub struct Report {
+    pub diags: Vec<Diag>,
+    pub warnings: Vec<String>,
+    /// Non-test `unwrap()`/`expect()` counts per ratcheted file.
+    pub panic_counts: BTreeMap<String, usize>,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Rule ids with at least one violation.
+    pub fn rules_hit(&self) -> BTreeSet<String> {
+        self.diags.iter().map(|d| d.rule.clone()).collect()
+    }
+}
+
+/// A function definition with its impl context and body token slice.
+struct FnDef {
+    name: String,
+    impl_type: Option<String>,
+    file: String,
+    line: u32,
+    body: Vec<Tok>,
+}
+
+struct FileData {
+    toks: Vec<Tok>,
+    waivers: Vec<WaiverSite>,
+    /// Every identifier the file mentions (method-call receiver-type
+    /// heuristic for the call graph).
+    mentions: BTreeSet<String>,
+}
+
+fn has_prefix(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| file.starts_with(p) || file == *p)
+}
+
+fn is_keyword(s: &str) -> bool {
+    KEYWORDS.contains(&s)
+}
+
+// ---------------------------------------------------------------------
+// item structure: cfg(test) stripping, impl tracking, fn extraction
+// ---------------------------------------------------------------------
+
+fn find_matching(toks: &[Tok], start: usize, open: char, close: char) -> usize {
+    let mut depth = 0i32;
+    let mut i = start;
+    while i < toks.len() {
+        if toks[i].is_punct(open) {
+            depth += 1;
+        } else if toks[i].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// If `toks[i]` starts a `#[cfg(..test..)]` attribute, return the index
+/// of its closing `]`.
+fn cfg_test_attr_end(toks: &[Tok], i: usize) -> Option<usize> {
+    if !toks[i].is_punct('#') || i + 1 >= toks.len() || !toks[i + 1].is_punct('[') {
+        return None;
+    }
+    let end = find_matching(toks, i + 1, '[', ']');
+    let inner = &toks[i + 2..end];
+    if inner.first().is_some_and(|t| t.is_ident("cfg"))
+        && inner.iter().any(|t| t.is_ident("test"))
+    {
+        Some(end)
+    } else {
+        None
+    }
+}
+
+/// Skip one item starting at `i`: past its matching `}` or its `;`.
+fn skip_item(toks: &[Tok], mut i: usize) -> usize {
+    while i < toks.len() {
+        if toks[i].is_punct('{') {
+            return find_matching(toks, i, '{', '}') + 1;
+        }
+        if toks[i].is_punct(';') {
+            return i + 1;
+        }
+        if toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[') {
+            i = find_matching(toks, i + 1, '[', ']') + 1;
+            continue;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Drop every `#[cfg(test)]`-gated item (test modules, test-only fns).
+fn strip_cfg_test(toks: Vec<Tok>) -> Vec<Tok> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0usize;
+    while i < toks.len() {
+        if let Some(end) = cfg_test_attr_end(&toks, i) {
+            i = skip_item(&toks, end + 1);
+        } else {
+            out.push(toks[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `toks[i]` is `impl`: the Self type name of the impl block.
+fn impl_type_at(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i + 1;
+    if j < toks.len() && toks[j].is_punct('<') {
+        let mut depth = 0i32;
+        while j < toks.len() {
+            if toks[j].is_punct('<') {
+                depth += 1;
+            } else if toks[j].is_punct('>') {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            j += 1;
+        }
+    }
+    let mut names: Vec<String> = Vec::new();
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.is_punct('{') {
+            break;
+        }
+        if t.kind == TokKind::Ident {
+            if t.text == "for" {
+                names.clear();
+            } else if t.text == "where" {
+                break;
+            } else {
+                names.push(t.text.clone());
+            }
+        }
+        j += 1;
+    }
+    names.pop()
+}
+
+/// Extract every fn definition (with impl context) from a token stream
+/// that has already been cfg(test)-stripped.
+fn extract_fns(file: &str, toks: &[Tok]) -> Vec<FnDef> {
+    let mut fns = Vec::new();
+    // (impl Self type, index of the impl block's closing brace)
+    let mut stack: Vec<(Option<String>, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        while let Some(top) = stack.last() {
+            if i > top.1 {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if toks[i].is_ident("impl") {
+            let ty = impl_type_at(toks, i);
+            let mut j = i + 1;
+            while j < toks.len() && !toks[j].is_punct('{') {
+                j += 1;
+            }
+            if j < toks.len() {
+                let close = find_matching(toks, j, '{', '}');
+                stack.push((ty, close));
+                i = j + 1;
+                continue;
+            }
+        }
+        if toks[i].is_ident("fn") && i + 1 < toks.len() && toks[i + 1].kind == TokKind::Ident {
+            let name = toks[i + 1].text.clone();
+            let line = toks[i + 1].line;
+            let mut j = i + 2;
+            let mut body = Vec::new();
+            while j < toks.len() {
+                if toks[j].is_punct('{') {
+                    let close = find_matching(toks, j, '{', '}');
+                    body = toks[j + 1..close].to_vec();
+                    break;
+                }
+                if toks[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            let impl_type = stack.last().and_then(|t| t.0.clone());
+            fns.push(FnDef { name, impl_type, file: file.to_string(), line, body });
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    fns
+}
+
+// ---------------------------------------------------------------------
+// waivers
+// ---------------------------------------------------------------------
+
+/// A waiver covers its own line and the line directly below it.
+fn find_waiver<'a>(waivers: &'a [WaiverSite], rule: &str, line: u32) -> Option<&'a WaiverSite> {
+    waivers
+        .iter()
+        .find(|w| w.rule == rule && (w.line == line || w.line + 1 == line))
+}
+
+// ---------------------------------------------------------------------
+// analysis
+// ---------------------------------------------------------------------
+
+/// Analyze the crate rooted at `root` (expects `<root>/src/**.rs`; reads
+/// `<root>/lint-baseline.toml` for the panic ratchet when present).
+pub fn run_root(root: &Path) -> std::io::Result<Report> {
+    let mut sources = BTreeMap::new();
+    let src_dir = root.join("src");
+    for path in rs_files(&src_dir)? {
+        let rel = format!("src/{}", rel_slashes(&path, &src_dir));
+        sources.insert(rel, fs::read_to_string(&path)?);
+    }
+    let baseline = read_baseline(&root.join("lint-baseline.toml"));
+    Ok(analyze(&sources, baseline.as_ref()))
+}
+
+/// Recursively list `.rs` files under `dir`, sorted for determinism.
+fn rs_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    let mut entries = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            out.extend(rs_files(&p)?);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(out)
+}
+
+fn rel_slashes(path: &Path, base: &Path) -> String {
+    let rel = path.strip_prefix(base).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Core analysis over `(relative path -> source)` pairs. Separated from
+/// the filesystem walk so the fixture tests can drive it directly.
+pub fn analyze(
+    sources: &BTreeMap<String, String>,
+    baseline: Option<&BTreeMap<String, usize>>,
+) -> Report {
+    let mut files: BTreeMap<String, FileData> = BTreeMap::new();
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut used: BTreeSet<(String, u32)> = BTreeSet::new();
+    let mut fn_index: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+    let mut fns: Vec<FnDef> = Vec::new();
+
+    for (path, src) in sources {
+        let out = lex(src);
+        let toks = strip_cfg_test(out.toks);
+        for line in &out.bad_waivers {
+            diags.push(Diag::new(
+                "waiver-syntax",
+                path,
+                *line,
+                "malformed waiver or missing reason: use \
+                 `// dsd-lint: allow(<rule>): <reason>`"
+                    .to_string(),
+            ));
+        }
+        for f in extract_fns(path, &toks) {
+            fn_index.entry(f.name.clone()).or_default().push(fns.len());
+            fns.push(f);
+        }
+        let mentions: BTreeSet<String> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect();
+        files.insert(path.clone(), FileData { toks, waivers: out.waivers, mentions });
+    }
+
+    // Rule 1: sim-time purity.
+    for (path, data) in &files {
+        if has_prefix(path, SIM_TIME_ALLOWLIST) {
+            continue;
+        }
+        let toks = &data.toks;
+        for (k, t) in toks.iter().enumerate() {
+            if t.is_ident("Instant")
+                && k + 3 < toks.len()
+                && toks[k + 1].is_punct(':')
+                && toks[k + 2].is_punct(':')
+                && toks[k + 3].is_ident("now")
+            {
+                report_diag(
+                    &mut diags,
+                    &mut used,
+                    &files,
+                    "sim-time",
+                    path,
+                    t.line,
+                    "wall-clock `Instant::now()` outside the allowlist; sim-time \
+                     accounting must come from the engine/cluster timing paths"
+                        .to_string(),
+                );
+            }
+            if t.is_ident("SystemTime") {
+                report_diag(
+                    &mut diags,
+                    &mut used,
+                    &files,
+                    "sim-time",
+                    path,
+                    t.line,
+                    "`SystemTime` outside the allowlist".to_string(),
+                );
+            }
+        }
+    }
+
+    // Rule 2: determinism in committed-stream modules.
+    for (path, data) in &files {
+        if !has_prefix(path, COMMITTED_PREFIXES) {
+            continue;
+        }
+        let toks = &data.toks;
+        for t in toks {
+            if t.kind == TokKind::Ident && RNG_FORBIDDEN.contains(&t.text.as_str()) {
+                report_diag(
+                    &mut diags,
+                    &mut used,
+                    &files,
+                    "rng-source",
+                    path,
+                    t.line,
+                    format!(
+                        "nondeterministic randomness source `{}` in a committed-stream \
+                         module; draw through util::rng position-keyed streams",
+                        t.text
+                    ),
+                );
+            }
+        }
+        let bound = hash_bound_idents(toks);
+        for (k, t) in toks.iter().enumerate() {
+            if t.is_punct('.')
+                && k >= 1
+                && k + 2 < toks.len()
+                && toks[k + 1].kind == TokKind::Ident
+                && HASH_ITER_METHODS.contains(&toks[k + 1].text.as_str())
+                && toks[k + 2].is_punct('(')
+            {
+                let recv = &toks[k - 1];
+                if recv.kind == TokKind::Ident && bound.contains(&recv.text) {
+                    report_diag(
+                        &mut diags,
+                        &mut used,
+                        &files,
+                        "hash-iter",
+                        path,
+                        t.line,
+                        format!(
+                            "iteration over hash container `{}` (`.{}()`): seeded hash \
+                             order is run-to-run nondeterministic; use a BTreeMap/Vec \
+                             or sort first",
+                            recv.text,
+                            toks[k + 1].text
+                        ),
+                    );
+                }
+            }
+            if t.is_ident("for") {
+                if let Some((line, name)) = for_loop_over(toks, k, &bound) {
+                    report_diag(
+                        &mut diags,
+                        &mut used,
+                        &files,
+                        "hash-iter",
+                        path,
+                        line,
+                        format!("for-loop over hash container `{name}`"),
+                    );
+                }
+            }
+        }
+    }
+
+    // Rule 3: controller purity.
+    for (path, data) in &files {
+        if !path.starts_with("src/control/") {
+            continue;
+        }
+        for t in &data.toks {
+            if t.kind == TokKind::Ident && CTRL_FORBIDDEN.contains(&t.text.as_str()) {
+                report_diag(
+                    &mut diags,
+                    &mut used,
+                    &files,
+                    "ctrl-purity",
+                    path,
+                    t.line,
+                    format!(
+                        "controller code names timing/overlap/trace symbol `{}`; \
+                         decisions must be pure functions of (config, committed \
+                         outcomes)",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+
+    // Rule 4: hot-path allocation reachability.
+    hot_path_pass(&files, &fns, &fn_index, &mut diags, &mut used);
+
+    // Panic-hygiene ratchet.
+    let mut panic_counts = BTreeMap::new();
+    for (path, data) in &files {
+        if !has_prefix(path, RATCHET_PREFIXES) {
+            continue;
+        }
+        let toks = &data.toks;
+        let mut count = 0usize;
+        for (k, t) in toks.iter().enumerate() {
+            if t.kind == TokKind::Ident
+                && (t.text == "unwrap" || t.text == "expect")
+                && k + 1 < toks.len()
+                && toks[k + 1].is_punct('(')
+            {
+                count += 1;
+            }
+        }
+        panic_counts.insert(path.clone(), count);
+    }
+    let mut warnings = Vec::new();
+    if let Some(base) = baseline {
+        for (path, &count) in &panic_counts {
+            let allowed = base.get(path).copied().unwrap_or(0);
+            if count > allowed {
+                diags.push(Diag::new(
+                    "panic-ratchet",
+                    path,
+                    0,
+                    format!(
+                        "unwrap()/expect() count grew to {count} (baseline {allowed}); \
+                         handle the error or re-baseline with --update-baseline \
+                         after review"
+                    ),
+                ));
+            } else if count < allowed {
+                warnings.push(format!(
+                    "{path}: unwrap()/expect() count {count} is below baseline \
+                     {allowed}; tighten lint-baseline.toml"
+                ));
+            }
+        }
+    } else {
+        warnings.push("lint-baseline.toml not found; panic ratchet skipped".to_string());
+    }
+
+    // Unused waivers are kept honest (warning, not error).
+    for (path, data) in &files {
+        for w in &data.waivers {
+            if !used.contains(&(path.clone(), w.line)) {
+                warnings.push(format!(
+                    "{path}:{}: unused waiver allow({}) — delete it",
+                    w.line, w.rule
+                ));
+            }
+        }
+    }
+
+    diags.sort();
+    diags.dedup();
+    Report { diags, warnings, panic_counts }
+}
+
+/// Push a diagnostic unless a matching waiver covers its line (waiver
+/// on the same line or the line directly above); used waivers are
+/// recorded so leftover ones can be reported.
+fn report_diag(
+    diags: &mut Vec<Diag>,
+    used: &mut BTreeSet<(String, u32)>,
+    files: &BTreeMap<String, FileData>,
+    rule: &str,
+    path: &str,
+    line: u32,
+    msg: String,
+) {
+    if let Some(w) = find_waiver(&files[path].waivers, rule, line) {
+        used.insert((path.to_string(), w.line));
+    } else {
+        diags.push(Diag::new(rule, path, line, msg));
+    }
+}
+
+/// Identifiers in this file bound to a `HashMap`/`HashSet` (declared
+/// type ascription `x: [&][mut] HashMap<..>` anywhere — struct fields,
+/// fn params, lets — or `x = HashMap::new()` initializers).
+fn hash_bound_idents(toks: &[Tok]) -> BTreeSet<String> {
+    let mut bound = BTreeSet::new();
+    for (k, t) in toks.iter().enumerate() {
+        if !(t.is_ident("HashMap") || t.is_ident("HashSet")) {
+            continue;
+        }
+        if let Some(name) = binder_before(toks, k) {
+            bound.insert(name);
+        }
+    }
+    bound
+}
+
+/// Walk backwards from the `HashMap`/`HashSet` token to the identifier
+/// it is bound to, if any.
+fn binder_before(toks: &[Tok], k: usize) -> Option<String> {
+    // `name : [&][mut] [path ::] HashMap<..>`
+    let mut j = k as isize - 1;
+    while j >= 0 && (toks[j as usize].is_punct('&') || toks[j as usize].is_ident("mut")) {
+        j -= 1;
+    }
+    // skip a leading path such as `std :: collections ::`
+    loop {
+        if j >= 1 && toks[j as usize].is_punct(':') && toks[j as usize - 1].is_punct(':') {
+            j -= 2;
+            if j >= 0 && toks[j as usize].kind == TokKind::Ident {
+                j -= 1;
+                continue;
+            }
+        }
+        break;
+    }
+    if j >= 1 && toks[j as usize].is_punct(':') && !toks[j as usize - 1].is_punct(':') {
+        let b = &toks[j as usize - 1];
+        if b.kind == TokKind::Ident {
+            return Some(b.text.clone());
+        }
+    }
+    // `name = HashMap::new()`
+    let mut j = k as isize - 1;
+    while j >= 0 && (toks[j as usize].is_punct('&') || toks[j as usize].is_ident("mut")) {
+        j -= 1;
+    }
+    if j >= 1 && toks[j as usize].is_punct('=') && toks[j as usize - 1].kind == TokKind::Ident {
+        return Some(toks[j as usize - 1].text.clone());
+    }
+    None
+}
+
+/// Detect `for .. in [&][mut] [self.]name {` where `name` is a bound
+/// hash container. Returns the violation (line, name).
+fn for_loop_over(toks: &[Tok], k: usize, bound: &BTreeSet<String>) -> Option<(u32, String)> {
+    let mut j = k + 1;
+    while j < toks.len() && !toks[j].is_ident("in") {
+        if toks[j].is_punct('{') {
+            return None;
+        }
+        j += 1;
+    }
+    if j >= toks.len() {
+        return None;
+    }
+    j += 1;
+    let mut names: Vec<&Tok> = Vec::new();
+    let mut clean = true;
+    let mut steps = 0;
+    while j < toks.len() && !toks[j].is_punct('{') {
+        let t = &toks[j];
+        if t.kind == TokKind::Ident {
+            if t.text != "mut" && t.text != "self" {
+                names.push(t);
+            }
+        } else if !(t.is_punct('&') || t.is_punct('.')) {
+            clean = false;
+        }
+        j += 1;
+        steps += 1;
+        if steps > 5 {
+            return None;
+        }
+    }
+    if clean && names.len() == 1 && bound.contains(&names[0].text) {
+        return Some((toks[k].line, names[0].text.clone()));
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// hot-path reachability
+// ---------------------------------------------------------------------
+
+fn hot_path_pass(
+    files: &BTreeMap<String, FileData>,
+    fns: &[FnDef],
+    fn_index: &BTreeMap<String, Vec<usize>>,
+    diags: &mut Vec<Diag>,
+    used: &mut BTreeSet<(String, u32)>,
+) {
+    // Roots: `*_into` / `*_with` fns in hot modules + the explicit list,
+    // minus fns carrying a fn-level waiver (allocating wrappers).
+    let mut queue: Vec<usize> = Vec::new();
+    let mut seen: BTreeSet<usize> = BTreeSet::new();
+    let mut parent: BTreeMap<usize, usize> = BTreeMap::new();
+    for (idx, f) in fns.iter().enumerate() {
+        let rooty = f.name.ends_with("_into")
+            || f.name.ends_with("_with")
+            || HOT_ROOT_EXTRA.contains(&f.name.as_str());
+        if !(rooty && has_prefix(&f.file, HOT_ROOT_PREFIXES)) {
+            continue;
+        }
+        if let Some(w) = find_waiver(&files[&f.file].waivers, "hot-path-alloc", f.line) {
+            used.insert((f.file.clone(), w.line));
+            continue;
+        }
+        if seen.insert(idx) {
+            queue.push(idx);
+        }
+    }
+
+    let mut qi = 0usize;
+    while qi < queue.len() {
+        let caller = queue[qi];
+        qi += 1;
+        for callee in body_calls(&fns[caller], fns, fn_index, files) {
+            if seen.contains(&callee) {
+                continue;
+            }
+            let cf = &fns[callee];
+            if let Some(w) = find_waiver(&files[&cf.file].waivers, "hot-path-alloc", cf.line) {
+                used.insert((cf.file.clone(), w.line));
+                continue;
+            }
+            seen.insert(callee);
+            parent.insert(callee, caller);
+            queue.push(callee);
+        }
+    }
+
+    for &idx in &queue {
+        let f = &fns[idx];
+        for (line, what) in body_allocs(&f.body) {
+            let chain = chain_string(idx, &parent, fns);
+            if let Some(w) = find_waiver(&files[&f.file].waivers, "hot-path-alloc", line) {
+                used.insert((f.file.clone(), w.line));
+            } else {
+                diags.push(Diag::new(
+                    "hot-path-alloc",
+                    &f.file,
+                    line,
+                    format!(
+                        "allocating construct `{what}` reachable from a round-loop \
+                         root via {chain}; use the scratch/buffer-taking form or \
+                         waive with a reason"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// The `root -> .. -> fn` chain for diagnostics.
+fn chain_string(idx: usize, parent: &BTreeMap<usize, usize>, fns: &[FnDef]) -> String {
+    let mut chain = vec![idx];
+    let mut cur = idx;
+    while let Some(&p) = parent.get(&cur) {
+        chain.push(p);
+        cur = p;
+    }
+    chain.reverse();
+    let names: Vec<&str> = chain.iter().map(|&i| fns[i].name.as_str()).collect();
+    names.join(" -> ")
+}
+
+/// Resolve the call edges out of one fn body.
+///
+/// - `Type::name(..)` edges only to that impl's fn (`Self::` resolves to
+///   the enclosing impl); an unknown qualifier is std/foreign — no edge.
+/// - `recv.name(..)` edges to impl fns whose Self type the caller's file
+///   at least mentions (cheap receiver-type heuristic).
+/// - bare `name(..)` edges to free fns only.
+fn body_calls(
+    f: &FnDef,
+    fns: &[FnDef],
+    fn_index: &BTreeMap<String, Vec<usize>>,
+    files: &BTreeMap<String, FileData>,
+) -> Vec<usize> {
+    let toks = &f.body;
+    let mentions = &files[&f.file].mentions;
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident || is_keyword(&t.text) {
+            continue;
+        }
+        let Some(next) = toks.get(k + 1) else {
+            continue;
+        };
+        if next.is_punct('!') {
+            continue; // macro invocation
+        }
+        // allow a turbofish between the name and `(`
+        let mut j = k + 1;
+        if j + 1 < toks.len() && toks[j].is_punct(':') && toks[j + 1].is_punct(':') {
+            if j + 2 < toks.len() && toks[j + 2].is_punct('<') {
+                let mut depth = 0i32;
+                let mut j2 = j + 2;
+                while j2 < toks.len() {
+                    if toks[j2].is_punct('<') {
+                        depth += 1;
+                    } else if toks[j2].is_punct('>') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j2 += 1;
+                }
+                j = j2 + 1;
+            } else {
+                continue; // this ident is a path qualifier; name comes later
+            }
+        }
+        if j >= toks.len() || !toks[j].is_punct('(') {
+            continue;
+        }
+        let Some(cands) = fn_index.get(&t.text) else {
+            continue;
+        };
+        let qualified = k >= 2 && toks[k - 1].is_punct(':') && toks[k - 2].is_punct(':');
+        let method = k >= 1 && toks[k - 1].is_punct('.');
+        if qualified {
+            let mut qual: Option<&str> = if k >= 3 && toks[k - 3].kind == TokKind::Ident {
+                Some(toks[k - 3].text.as_str())
+            } else {
+                None
+            };
+            if qual == Some("Self") {
+                qual = f.impl_type.as_deref();
+            }
+            if let Some(q) = qual {
+                for &c in cands {
+                    if fns[c].impl_type.as_deref() == Some(q) {
+                        out.push(c);
+                    }
+                }
+            }
+            continue;
+        }
+        if method {
+            for &c in cands {
+                if let Some(ty) = fns[c].impl_type.as_deref() {
+                    if mentions.contains(ty) {
+                        out.push(c);
+                    }
+                }
+            }
+        } else {
+            for &c in cands {
+                if fns[c].impl_type.is_none() {
+                    out.push(c);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Allocating constructs in a fn body, as `(line, description)`.
+fn body_allocs(toks: &[Tok]) -> Vec<(u32, String)> {
+    let mut out = Vec::new();
+    for (k, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        let next = toks.get(k + 1);
+        if ALLOC_MACROS.contains(&t.text.as_str()) && next.is_some_and(|n| n.is_punct('!')) {
+            out.push((t.line, format!("{}!", t.text)));
+            continue;
+        }
+        let qualified = k >= 2 && toks[k - 1].is_punct(':') && toks[k - 2].is_punct(':');
+        if qualified && k >= 3 && toks[k - 3].kind == TokKind::Ident {
+            let pair = (toks[k - 3].text.as_str(), t.text.as_str());
+            if ALLOC_QUALIFIED.iter().any(|&(a, b)| (a, b) == pair) {
+                out.push((t.line, format!("{}::{}", pair.0, pair.1)));
+                continue;
+            }
+        }
+        if k >= 1 && toks[k - 1].is_punct('.') && ALLOC_METHODS.contains(&t.text.as_str()) {
+            // require a call: `(` directly or after a turbofish
+            let mut j = k + 1;
+            if j + 1 < toks.len() && toks[j].is_punct(':') && toks[j + 1].is_punct(':') {
+                j += 2;
+                if j < toks.len() && toks[j].is_punct('<') {
+                    let mut depth = 0i32;
+                    while j < toks.len() {
+                        if toks[j].is_punct('<') {
+                            depth += 1;
+                        } else if toks[j].is_punct('>') {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    j += 1;
+                }
+            }
+            if j < toks.len() && toks[j].is_punct('(') {
+                out.push((t.line, format!(".{}()", t.text)));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// baseline
+// ---------------------------------------------------------------------
+
+/// Parse `lint-baseline.toml`: `"<path>" = <count>` lines; sections and
+/// comments are ignored. Returns None when the file does not exist.
+pub fn read_baseline(path: &Path) -> Option<BTreeMap<String, usize>> {
+    let text = fs::read_to_string(path).ok()?;
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            continue;
+        };
+        let key = key.trim().trim_matches('"').to_string();
+        if let Ok(n) = val.trim().parse::<usize>() {
+            out.insert(key, n);
+        }
+    }
+    Some(out)
+}
+
+/// Serialize the ratchet baseline.
+pub fn format_baseline(counts: &BTreeMap<String, usize>) -> String {
+    let mut s = String::new();
+    s.push_str("# dsd-lint panic-hygiene baseline: non-test unwrap()/expect() counts\n");
+    s.push_str("# per serving-path file. CI fails when a count grows; shrink freely\n");
+    s.push_str("# (dsd-lint warns when a count drops below its baseline so this file\n");
+    s.push_str("# keeps ratcheting down). Regenerate: cargo run -p dsd-lint -- \\\n");
+    s.push_str("#   --update-baseline\n\n");
+    s.push_str("[panic-hygiene]\n");
+    for (path, count) in counts {
+        s.push_str(&format!("\"{path}\" = {count}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_file(path: &str, src: &str) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        m.insert(path.to_string(), src.to_string());
+        m
+    }
+
+    #[test]
+    fn cfg_test_modules_are_stripped() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn dead() {}\n}\n";
+        let out = lex(src);
+        let toks = strip_cfg_test(out.toks);
+        let fns = extract_fns("src/x.rs", &toks);
+        let names: Vec<&str> = fns.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["live"]);
+    }
+
+    #[test]
+    fn impl_context_is_tracked() {
+        let src = "impl Foo {\n    fn a(&self) {}\n}\nimpl Bar for Foo {\n    fn b(&self) {}\n}\nfn free() {}\n";
+        let out = lex(src);
+        let fns = extract_fns("src/x.rs", &strip_cfg_test(out.toks));
+        assert_eq!(fns[0].impl_type.as_deref(), Some("Foo"));
+        assert_eq!(fns[1].impl_type.as_deref(), Some("Foo"));
+        assert_eq!(fns[2].impl_type, None);
+    }
+
+    #[test]
+    fn sim_time_flags_and_allowlists() {
+        let bad = one_file("src/eval/mod.rs", "fn f() { let t = Instant::now(); }");
+        assert_eq!(analyze(&bad, None).rules_hit().len(), 1);
+        let ok = one_file("src/cluster/real.rs", "fn f() { let t = Instant::now(); }");
+        assert!(analyze(&ok, None).is_clean());
+    }
+
+    #[test]
+    fn hash_lookup_is_fine_iteration_is_not() {
+        let probe = one_file(
+            "src/spec/x.rs",
+            "fn f(m: &HashMap<u32, u32>) -> bool { m.contains_key(&1) }",
+        );
+        assert!(analyze(&probe, None).is_clean());
+        let iter = one_file(
+            "src/spec/x.rs",
+            "fn f(m: &HashMap<u32, u32>) -> usize { m.iter().count() }",
+        );
+        assert!(!analyze(&iter, None).is_clean());
+    }
+
+    #[test]
+    fn waiver_suppresses_and_unused_waiver_warns() {
+        let src = "fn f() {\n    // dsd-lint: allow(sim-time): test fixture\n    let t = Instant::now();\n}\n";
+        let r = analyze(&one_file("src/eval/mod.rs", src), None);
+        assert!(r.is_clean(), "{:?}", r.diags);
+        let unused = "// dsd-lint: allow(sim-time): nothing here\nfn f() {}\n";
+        let r = analyze(&one_file("src/eval/mod.rs", unused), None);
+        assert!(r.is_clean());
+        assert!(r.warnings.iter().any(|w| w.contains("unused waiver")));
+    }
+
+    #[test]
+    fn hot_path_walk_names_the_chain() {
+        let src = "fn helper(v: &mut Vec<u32>) { let x = Vec::new(); v.push(x.len() as u32); }\n\
+                   pub fn commit_into(v: &mut Vec<u32>) { helper(v); }\n";
+        let r = analyze(&one_file("src/coordinator/x.rs", src), None);
+        assert_eq!(r.diags.len(), 1);
+        assert!(r.diags[0].msg.contains("commit_into -> helper"), "{}", r.diags[0].msg);
+        assert!(r.diags[0].msg.contains("Vec::new"));
+    }
+
+    #[test]
+    fn ratchet_fails_only_on_growth() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let sources = one_file("src/coordinator/x.rs", src);
+        let mut base = BTreeMap::new();
+        base.insert("src/coordinator/x.rs".to_string(), 1usize);
+        let r = analyze(&sources, Some(&base));
+        assert!(r.is_clean());
+        base.insert("src/coordinator/x.rs".to_string(), 0usize);
+        let r = analyze(&sources, Some(&base));
+        assert_eq!(r.diags.len(), 1);
+        assert_eq!(r.diags[0].rule, "panic-ratchet");
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut counts = BTreeMap::new();
+        counts.insert("src/coordinator/x.rs".to_string(), 3usize);
+        let text = format_baseline(&counts);
+        let dir = std::env::temp_dir().join("dsd_lint_baseline_test.toml");
+        fs::write(&dir, &text).unwrap();
+        let back = read_baseline(&dir).unwrap();
+        assert_eq!(back.get("src/coordinator/x.rs"), Some(&3));
+        let _ = fs::remove_file(&dir);
+    }
+}

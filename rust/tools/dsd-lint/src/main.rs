@@ -1,0 +1,82 @@
+//! CLI for dsd-lint. Run from anywhere:
+//!
+//!   cargo run -p dsd-lint                     # lint the dsd crate
+//!   cargo run -p dsd-lint -- --root DIR       # lint another tree
+//!   cargo run -p dsd-lint -- --update-baseline
+//!
+//! Exit status: 0 clean, 1 violations, 2 usage/io error. Warnings
+//! (unused waivers, below-baseline counts) never fail the run.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use dsd_lint::{format_baseline, run_root};
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/../.."));
+    let mut update_baseline = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("error: --root needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--update-baseline" => update_baseline = true,
+            "--help" | "-h" => {
+                eprintln!("usage: dsd-lint [--root DIR] [--update-baseline]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("error: unknown flag `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let report = match run_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: failed to read {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    if update_baseline {
+        let path = root.join("lint-baseline.toml");
+        if let Err(e) = std::fs::write(&path, format_baseline(&report.panic_counts)) {
+            eprintln!("error: failed to write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        println!("wrote {} ({} files)", path.display(), report.panic_counts.len());
+    }
+
+    for w in &report.warnings {
+        eprintln!("warning: {w}");
+    }
+    for d in &report.diags {
+        if d.line == 0 {
+            eprintln!("error[{}]: {}\n  --> {}", d.rule, d.msg, d.file);
+        } else {
+            eprintln!("error[{}]: {}\n  --> {}:{}", d.rule, d.msg, d.file, d.line);
+        }
+    }
+
+    // Never let a stale baseline fail a tree that just got cleaner: the
+    // ratchet errors only on growth (handled in analyze), and the
+    // --update-baseline run rewrites the file to the current counts.
+    if report.diags.is_empty() {
+        println!(
+            "dsd-lint: clean ({} warnings, {} ratcheted files)",
+            report.warnings.len(),
+            report.panic_counts.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("dsd-lint: {} violation(s)", report.diags.len());
+        ExitCode::FAILURE
+    }
+}

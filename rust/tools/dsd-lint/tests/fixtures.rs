@@ -1,0 +1,116 @@
+//! Differential fixture tests: the known-bad tree must trip every rule
+//! family with file:line precision, and the known-good tree (same
+//! shapes, done right) must come back clean. These pin the linter's
+//! behavior so rule changes that silently stop firing are caught.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use dsd_lint::{analyze, run_root, Report};
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn has(report: &Report, rule: &str, file: &str, line: u32) -> bool {
+    report.diags.iter().any(|d| d.rule == rule && d.file == file && d.line == line)
+}
+
+#[test]
+fn bad_tree_trips_every_rule_family() {
+    let report = run_root(&fixture("bad")).unwrap();
+    let rules = report.rules_hit();
+    for rule in [
+        "sim-time",
+        "rng-source",
+        "hash-iter",
+        "ctrl-purity",
+        "hot-path-alloc",
+        "panic-ratchet",
+        "waiver-syntax",
+    ] {
+        assert!(rules.contains(rule), "rule `{rule}` did not trip: {:?}", report.diags);
+    }
+}
+
+#[test]
+fn bad_tree_diagnostics_carry_file_and_line() {
+    let r = run_root(&fixture("bad")).unwrap();
+    // the `use std::time::{...}` import line mentions SystemTime too
+    assert!(has(&r, "sim-time", "src/cluster/net.rs", 4), "{:?}", r.diags);
+    assert!(has(&r, "sim-time", "src/cluster/net.rs", 7));
+    assert!(has(&r, "sim-time", "src/cluster/net.rs", 8));
+    assert!(has(&r, "hash-iter", "src/spec/order.rs", 8));
+    assert!(has(&r, "hash-iter", "src/spec/order.rs", 16));
+    assert!(has(&r, "rng-source", "src/spec/order.rs", 23));
+    assert!(has(&r, "ctrl-purity", "src/control/sched.rs", 6));
+    assert!(has(&r, "ctrl-purity", "src/control/sched.rs", 10));
+    assert!(has(&r, "waiver-syntax", "src/coordinator/hot.rs", 15));
+}
+
+#[test]
+fn bad_tree_alloc_diag_names_the_call_chain() {
+    let r = run_root(&fixture("bad")).unwrap();
+    let d = r
+        .diags
+        .iter()
+        .find(|d| d.rule == "hot-path-alloc")
+        .expect("hot-path-alloc diagnostic");
+    assert_eq!(d.file, "src/coordinator/hot.rs");
+    assert_eq!(d.line, 6);
+    assert!(d.msg.contains("Vec::with_capacity"), "{}", d.msg);
+    assert!(d.msg.contains("commit_into -> widen"), "{}", d.msg);
+}
+
+#[test]
+fn bad_tree_ratchet_reports_growth_over_baseline() {
+    let r = run_root(&fixture("bad")).unwrap();
+    let d = r
+        .diags
+        .iter()
+        .find(|d| d.rule == "panic-ratchet")
+        .expect("panic-ratchet diagnostic");
+    assert_eq!(d.file, "src/cluster/net.rs");
+    assert!(d.msg.contains("grew to 2"), "{}", d.msg);
+    assert!(d.msg.contains("baseline 1"), "{}", d.msg);
+    assert_eq!(r.panic_counts.get("src/cluster/net.rs"), Some(&2));
+}
+
+#[test]
+fn good_tree_is_clean_and_all_waivers_are_used() {
+    let r = run_root(&fixture("good")).unwrap();
+    assert!(r.is_clean(), "{:?}", r.diags);
+    assert!(
+        !r.warnings.iter().any(|w| w.contains("unused waiver")),
+        "{:?}",
+        r.warnings
+    );
+}
+
+#[test]
+fn deleting_a_waiver_surfaces_the_chain() {
+    // Acceptance check from the issue: strip the waivers out of the good
+    // coordinator file and the walk must fail with a chain diagnostic.
+    let src =
+        std::fs::read_to_string(fixture("good").join("src").join("coordinator").join("hot.rs"))
+            .unwrap();
+    let stripped: String = src
+        .lines()
+        .filter(|l| !l.contains("dsd-lint:"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let mut sources = BTreeMap::new();
+    sources.insert("src/coordinator/hot.rs".to_string(), stripped);
+    let r = analyze(&sources, None);
+    let hits: Vec<_> = r.diags.iter().filter(|d| d.rule == "hot-path-alloc").collect();
+    assert!(
+        hits.iter().any(|d| d.msg.contains("warm_into")),
+        "cold-start alloc must surface: {:?}",
+        r.diags
+    );
+    assert!(
+        hits.iter().any(|d| d.msg.contains("commit_with")),
+        "wrapper alloc must surface once its fn-level waiver is gone: {:?}",
+        r.diags
+    );
+}
