@@ -25,6 +25,8 @@
 
 use crate::cluster::clock::Nanos;
 use crate::cluster::topology::Topology;
+use crate::control::LinkEstimate;
+use crate::telemetry::FleetMetrics;
 use crate::trace::{RingTracer, SpanEvent, SpanKind, TraceKey, TraceSink, Track};
 use crate::util::rng::Rng;
 
@@ -87,6 +89,11 @@ pub struct PipelineSim {
     /// costs one branch per recording site; recording into the
     /// preallocated ring never allocates.
     tracer: Option<RingTracer>,
+    /// Optional fleet-metrics registry (see [`crate::telemetry`]): a
+    /// second span sink that *aggregates* — per-node compute, per-link
+    /// occupancy, EWMA hop estimates — instead of ringing events.
+    /// Fixed-size POD; recording into it never allocates.
+    metrics: Option<FleetMetrics>,
 }
 
 impl PipelineSim {
@@ -102,6 +109,7 @@ impl PipelineSim {
             stats: SimStats::default(),
             stage_scratch: Vec::new(),
             tracer: None,
+            metrics: None,
         }
     }
 
@@ -123,6 +131,28 @@ impl PipelineSim {
         self.tracer.is_some()
     }
 
+    /// Install a fleet-metrics registry; subsequent passes aggregate
+    /// into it alongside any installed tracer.
+    pub fn set_metrics(&mut self, metrics: FleetMetrics) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Remove and return the metrics registry (export time).
+    pub fn take_metrics(&mut self) -> Option<FleetMetrics> {
+        self.metrics.take()
+    }
+
+    pub fn metrics(&self) -> Option<&FleetMetrics> {
+        self.metrics.as_ref()
+    }
+
+    /// Per-hop link estimate from the installed registry, once every
+    /// link slot has been observed (see
+    /// [`FleetMetrics::link_estimate`]). Allocation-free.
+    pub fn link_estimate(&self) -> Option<LinkEstimate> {
+        self.metrics.as_ref().and_then(|m| m.link_estimate())
+    }
+
     /// Set the (sequence, round, group) key stamped onto every span
     /// recorded until the next call — round drivers set it before
     /// dispatching work for a sequence's round.
@@ -130,13 +160,26 @@ impl PipelineSim {
         if let Some(t) = self.tracer.as_mut() {
             t.set_key(key);
         }
+        if let Some(m) = self.metrics.as_mut() {
+            m.set_key(key);
+        }
     }
 
     /// Record a semantic span (round/draft/verify/… on a sequence
-    /// track) under the current key. No-op without a tracer.
+    /// track) under the current key. No-op without a sink.
     pub fn trace_span(&mut self, ev: SpanEvent) {
+        self.sink_event(ev);
+    }
+
+    /// Fan one span out to every installed sink — the tracer ring and
+    /// the metrics registry. `SpanEvent` is `Copy`; with no sink
+    /// installed this is two predicted-not-taken branches.
+    fn sink_event(&mut self, ev: SpanEvent) {
         if let Some(t) = self.tracer.as_mut() {
             t.record(ev);
+        }
+        if let Some(m) = self.metrics.as_mut() {
+            m.record(ev);
         }
     }
 
@@ -163,9 +206,7 @@ impl PipelineSim {
         self.stats.compute_ns += d;
         let finish = begin + d;
         self.busy_until[0] = finish;
-        if let Some(t) = self.tracer.as_mut() {
-            t.record(SpanEvent::new(SpanKind::NodeCompute, Track::Node(0), begin, d));
-        }
+        self.sink_event(SpanEvent::new(SpanKind::NodeCompute, Track::Node(0), begin, d));
         finish
     }
 
@@ -197,9 +238,7 @@ impl PipelineSim {
             t = begin + d;
             compute += d;
             self.busy_until[i] = t;
-            if let Some(tr) = self.tracer.as_mut() {
-                tr.record(SpanEvent::new(SpanKind::NodeCompute, Track::Node(i as u16), begin, d));
-            }
+            self.sink_event(SpanEvent::new(SpanKind::NodeCompute, Track::Node(i as u16), begin, d));
             if i == 0 {
                 stage0_release = t;
             }
@@ -214,12 +253,10 @@ impl PipelineSim {
                 comm += hop;
                 self.stats.messages += 1;
                 self.stats.bytes += msg_bytes as u64;
-                if let Some(tr) = self.tracer.as_mut() {
-                    tr.record(
-                        SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
-                            .args(msg_bytes as u64, base_ns, 0),
-                    );
-                }
+                self.sink_event(
+                    SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
+                        .args(msg_bytes as u64, base_ns, 0),
+                );
             }
         }
         if return_to_leader && n > 1 {
@@ -236,12 +273,10 @@ impl PipelineSim {
             comm += hop;
             self.stats.messages += 1;
             self.stats.bytes += return_bytes as u64;
-            if let Some(tr) = self.tracer.as_mut() {
-                tr.record(
-                    SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
-                        .args(return_bytes as u64, base_ns, 0),
-                );
-            }
+            self.sink_event(
+                SpanEvent::new(SpanKind::LinkBusy, Track::Link(li as u16), begin, hop)
+                    .args(return_bytes as u64, base_ns, 0),
+            );
         }
         self.stats.comm_ns += comm;
         self.stats.compute_ns += compute;
@@ -310,14 +345,18 @@ impl PipelineSim {
         self.window_pass(start, width, per_token_stage, fwd_bytes_per_token, ret_bytes_per_token)
     }
 
-    /// Reset busy times, stats, and any recorded trace events (new
-    /// experiment, same topology; an installed tracer stays installed).
+    /// Reset busy times, stats, recorded trace events, and aggregated
+    /// metrics (new experiment, same topology; installed sinks stay
+    /// installed).
     pub fn reset(&mut self) {
         self.busy_until.iter_mut().for_each(|b| *b = 0);
         self.link_busy_until.iter_mut().for_each(|b| *b = 0);
         self.stats = SimStats::default();
         if let Some(t) = self.tracer.as_mut() {
             t.clear();
+        }
+        if let Some(m) = self.metrics.as_mut() {
+            m.clear();
         }
     }
 }
@@ -450,6 +489,33 @@ mod tests {
         assert_eq!(links[0].a, 64, "forward payload bytes");
         assert_eq!(links[2].a, 128, "return payload bytes");
         assert_eq!(evs.last().unwrap().end(), done);
+    }
+
+    #[test]
+    fn metrics_registry_aggregates_as_second_sink() {
+        let mut s = sim(3, 2.0);
+        s.set_tracer(RingTracer::with_capacity(64));
+        s.set_metrics(FleetMetrics::for_fleet(3, 3));
+        let t = s.pipeline_pass(0, &[1_000; 3], 64, 128, true);
+        s.local_work(t.finish, 5_000);
+        // every link observed once -> the calibrator can reprice
+        let est = s.link_estimate().expect("all hops observed");
+        assert_eq!(est.hop_ns_at(0), 2_000_000);
+        let m = s.take_metrics().unwrap();
+        assert_eq!(m.n_nodes(), 3);
+        assert_eq!(m.node_spans(0), 2, "stage compute + local work");
+        assert_eq!(m.link_msgs(0), 1);
+        assert_eq!(m.link_msgs(2), 1, "return hop lands on link 2");
+        // first jitter-free message initializes the estimate exactly
+        assert_eq!(m.hop_estimate_ns(1), 2_000_000);
+        assert_eq!((0..3).map(|i| m.link_busy_ns(i)).sum::<Nanos>(), t.comm_ns);
+        // the ring saw the same events (4 computes + 3 link spans)
+        assert_eq!(s.take_tracer().unwrap().len(), 7);
+        // reset clears the registry but keeps it installed
+        s.set_metrics(m);
+        s.reset();
+        assert_eq!(s.metrics().unwrap().link_msgs(0), 0);
+        assert!(s.link_estimate().is_none());
     }
 
     #[test]

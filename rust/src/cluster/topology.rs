@@ -76,6 +76,20 @@ impl Topology {
         Topology { links, n_nodes: n }
     }
 
+    /// Heterogeneous chain from the N−1 *forward* hop links (the
+    /// `--link_ms a,b,c` spelling: one value per pipeline hop). The
+    /// return hop (node N−1 back to the leader) reuses the last forward
+    /// link — the deterministic rule shared with
+    /// `control::cost::HopCosts::from_topology` so the sim and the cost
+    /// model price the same chain.
+    pub fn chain_from_forward(forward: Vec<LinkModel>) -> Topology {
+        assert!(!forward.is_empty());
+        let mut links = forward;
+        let ret = links[links.len() - 1].clone();
+        links.push(ret);
+        Topology::chain(links)
+    }
+
     /// Link for hop i -> i+1 (wrapping: last entry is the return hop).
     pub fn hop(&self, from: usize) -> &LinkModel {
         &self.links[from % self.links.len()]
@@ -142,6 +156,20 @@ mod tests {
         let topo = Topology::uniform(1, LinkModel::wan(2.0, 100.0));
         assert_eq!(topo.forward_hops(), 0);
         assert_eq!(topo.forward_pass_latency(1_000_000), 0);
+    }
+
+    #[test]
+    fn chain_from_forward_reuses_last_hop_for_return() {
+        let topo = Topology::chain_from_forward(vec![
+            LinkModel::wan(1.0, 0.0),
+            LinkModel::wan(10.0, 0.0),
+            LinkModel::wan(2.0, 0.0),
+        ]);
+        // 3 forward links => 4 nodes; return hop mirrors the last one
+        assert_eq!(topo.n_nodes, 4);
+        assert_eq!(topo.forward_hops(), 3);
+        assert_eq!(topo.forward_pass_latency(0), 13_000_000);
+        assert_eq!(topo.hop(3).base_ns, 2_000_000);
     }
 
     #[test]

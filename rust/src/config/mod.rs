@@ -23,8 +23,15 @@ pub struct DeployConfig {
     pub artifacts_dir: String,
     /// Pipeline stages = nodes.
     pub n_nodes: usize,
-    /// Per-link one-way latency, milliseconds (the paper's t1).
+    /// Per-link one-way latency, milliseconds (the paper's t1). When
+    /// `link_ms_hops` is set this holds the mean hop latency (kept for
+    /// reports and the analytic scalar model).
     pub link_ms: f64,
+    /// Per-hop one-way latencies, milliseconds: `link_ms = "a,b,c"`
+    /// gives one value per *forward* pipeline hop (N−1 entries for N
+    /// nodes; the return hop reuses the last value — see
+    /// `Topology::chain_from_forward`). Empty = uniform at `link_ms`.
+    pub link_ms_hops: Vec<f64>,
     /// Link bandwidth, Gbps (0 = infinite).
     pub link_gbps: f64,
     /// Link jitter fraction.
@@ -54,6 +61,14 @@ pub struct DeployConfig {
     pub requests: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Straggler threshold: a link whose calibrated per-hop estimate
+    /// exceeds `straggler_factor ×` the fleet median is flagged in the
+    /// serve report (see `telemetry::FleetMetrics::straggler_links`).
+    pub straggler_factor: f64,
+    /// Online per-link calibration: re-price the controller's cost
+    /// model each round from the telemetry EWMA hop estimates (off =
+    /// the controller trusts the configured `link_ms` forever).
+    pub calibrate: bool,
 }
 
 impl Default for DeployConfig {
@@ -62,6 +77,7 @@ impl Default for DeployConfig {
             artifacts_dir: "artifacts".to_string(),
             n_nodes: 4,
             link_ms: 15.0,
+            link_ms_hops: Vec::new(),
             link_gbps: 1.0,
             jitter: 0.0,
             draft_variant: String::new(),
@@ -73,6 +89,8 @@ impl Default for DeployConfig {
             dataset: "humaneval".to_string(),
             requests: 8,
             seed: 20250710,
+            straggler_factor: 3.0,
+            calibrate: false,
         }
     }
 }
@@ -90,8 +108,31 @@ impl DeployConfig {
         if !self.link_ms.is_finite() || self.link_ms < 0.0 {
             bail!("link_ms must be a non-negative number, got {}", self.link_ms);
         }
+        if !self.link_ms_hops.is_empty() {
+            if self.link_ms_hops.len() != self.n_nodes.saturating_sub(1) {
+                bail!(
+                    "link_ms lists one value per forward hop: got {} values for \
+                     n_nodes = {} (need {})",
+                    self.link_ms_hops.len(),
+                    self.n_nodes,
+                    self.n_nodes.saturating_sub(1)
+                );
+            }
+            for &ms in &self.link_ms_hops {
+                if !ms.is_finite() || ms < 0.0 {
+                    bail!("link_ms hop values must be non-negative numbers, got {ms}");
+                }
+            }
+        }
         if !self.jitter.is_finite() || self.jitter < 0.0 {
             bail!("jitter must be a non-negative fraction, got {}", self.jitter);
+        }
+        if !self.straggler_factor.is_finite() || self.straggler_factor <= 1.0 {
+            bail!(
+                "straggler_factor must be > 1 (a link is flagged when its estimate \
+                 exceeds factor x the fleet median), got {}",
+                self.straggler_factor
+            );
         }
         if self.max_fuse == 0 {
             bail!("max_fuse must be >= 1 (1 disables fusion; use fuse = off instead)");
@@ -115,16 +156,30 @@ impl DeployConfig {
     }
 
     pub fn topology(&self) -> Topology {
-        let link = LinkModel {
-            base_ns: (self.link_ms * 1e6) as u64,
-            bandwidth_bps: if self.link_gbps <= 0.0 {
-                0
-            } else {
-                (self.link_gbps * 1e9 / 8.0) as u64
-            },
-            jitter: self.jitter,
+        let bandwidth_bps = if self.link_gbps <= 0.0 {
+            0
+        } else {
+            (self.link_gbps * 1e9 / 8.0) as u64
         };
-        Topology::uniform(self.n_nodes, link)
+        if self.link_ms_hops.is_empty() {
+            let link = LinkModel {
+                base_ns: (self.link_ms * 1e6) as u64,
+                bandwidth_bps,
+                jitter: self.jitter,
+            };
+            Topology::uniform(self.n_nodes, link)
+        } else {
+            let forward = self
+                .link_ms_hops
+                .iter()
+                .map(|&ms| LinkModel {
+                    base_ns: (ms * 1e6) as u64,
+                    bandwidth_bps,
+                    jitter: self.jitter,
+                })
+                .collect();
+            Topology::chain_from_forward(forward)
+        }
     }
 
     /// Parse a TOML-lite config file into key/value pairs and apply.
@@ -167,7 +222,21 @@ impl DeployConfig {
         match key {
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "n_nodes" | "nodes" => self.n_nodes = value.parse()?,
-            "link_ms" => self.link_ms = value.parse()?,
+            "link_ms" => {
+                // `--link_ms 5,40,5` is the per-hop spelling (one value
+                // per forward hop); a scalar resets to uniform links.
+                if value.contains(',') {
+                    let hops: Vec<f64> = value
+                        .split(',')
+                        .map(|s| s.trim().parse::<f64>())
+                        .collect::<std::result::Result<_, _>>()?;
+                    self.link_ms = hops.iter().sum::<f64>() / hops.len().max(1) as f64;
+                    self.link_ms_hops = hops;
+                } else {
+                    self.link_ms = value.parse()?;
+                    self.link_ms_hops.clear();
+                }
+            }
             "link_gbps" => self.link_gbps = value.parse()?,
             "jitter" => self.jitter = value.parse()?,
             "draft_variant" | "draft" => self.draft_variant = value.to_string(),
@@ -181,6 +250,11 @@ impl DeployConfig {
             "dataset" => self.dataset = value.to_string(),
             "requests" => self.requests = value.parse()?,
             "seed" => self.seed = value.parse()?,
+            "straggler_factor" => self.straggler_factor = value.parse()?,
+            "calibrate" => {
+                self.calibrate = parse_on_off(value)
+                    .map_err(|_| anyhow::anyhow!("calibrate expects on|off, got '{value}'"))?
+            }
             "decode.policy" | "policy" => {
                 self.decode.policy = match value {
                     "baseline" | "autoregressive" | "ar" => Policy::Autoregressive,
@@ -215,6 +289,14 @@ impl DeployConfig {
 
     /// Render as a config file (round-trips through load_file).
     pub fn to_toml(&self) -> String {
+        // per-hop lists render quoted ("5,40,5") so parse_toml_lite
+        // hands the comma list back to set() intact
+        let link_ms_repr = if self.link_ms_hops.is_empty() {
+            self.link_ms.to_string()
+        } else {
+            let list: Vec<String> = self.link_ms_hops.iter().map(f64::to_string).collect();
+            format!("\"{}\"", list.join(","))
+        };
         format!(
             "# DSD deployment config\n\
              artifacts_dir = \"{}\"\n\
@@ -229,7 +311,9 @@ impl DeployConfig {
              fuse_tokens = {}\n\
              dataset = \"{}\"\n\
              requests = {}\n\
-             seed = {}\n\n\
+             seed = {}\n\
+             straggler_factor = {}\n\
+             calibrate = \"{}\"\n\n\
              [decode]\n\
              policy = \"{}\"\n\
              gamma = {}\n\
@@ -244,7 +328,7 @@ impl DeployConfig {
              controller = \"{}\"\n",
             self.artifacts_dir,
             self.n_nodes,
-            self.link_ms,
+            link_ms_repr,
             self.link_gbps,
             self.jitter,
             self.draft_variant,
@@ -255,6 +339,8 @@ impl DeployConfig {
             self.dataset,
             self.requests,
             self.seed,
+            self.straggler_factor,
+            if self.calibrate { "on" } else { "off" },
             self.decode.policy.name(),
             self.decode.gamma,
             self.decode.shape.name(),
@@ -472,5 +558,70 @@ mod tests {
         let topo = cfg.topology();
         assert_eq!(topo.n_nodes, 4);
         assert_eq!(topo.mean_t1(), 2_500_000);
+    }
+
+    #[test]
+    fn per_hop_link_ms_parses_validates_and_builds_a_chain() {
+        let mut cfg = DeployConfig::default();
+        cfg.set("nodes", "4").unwrap();
+        cfg.set("link_ms", "5,40,5").unwrap();
+        assert_eq!(cfg.link_ms_hops, vec![5.0, 40.0, 5.0]);
+        assert!((cfg.link_ms - 50.0 / 3.0).abs() < 1e-9, "scalar tracks the mean");
+        assert!(cfg.validate().is_ok());
+        let topo = cfg.topology();
+        assert_eq!(topo.n_nodes, 4);
+        assert_eq!(topo.hop(1).base_ns, 40_000_000);
+        // return hop reuses the last forward value
+        assert_eq!(topo.hop(3).base_ns, 5_000_000);
+
+        // wrong list length for the node count is a config-time error
+        cfg.set("nodes", "3").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("forward hop"), "{err}");
+        // negative hop values surface too
+        cfg.set("nodes", "4").unwrap();
+        cfg.set("link_ms", "5,-1,5").unwrap();
+        assert!(cfg.validate().is_err());
+        // a scalar resets to uniform links
+        cfg.set("link_ms", "15").unwrap();
+        assert!(cfg.link_ms_hops.is_empty());
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn calibration_knobs_parse_validate_and_roundtrip() {
+        let mut cfg = DeployConfig::default();
+        assert!(!cfg.calibrate, "calibration defaults off");
+        assert!((cfg.straggler_factor - 3.0).abs() < 1e-9);
+        cfg.set("calibrate", "on").unwrap();
+        cfg.set("straggler_factor", "2.5").unwrap();
+        assert!(cfg.validate().is_ok());
+        let text = cfg.to_toml();
+        assert!(text.contains("calibrate = \"on\""), "{text}");
+        let mut cfg2 = DeployConfig::default();
+        for (k, v) in &parse_toml_lite(&text).unwrap() {
+            cfg2.set(k, v).unwrap();
+        }
+        assert!(cfg2.calibrate);
+        assert!((cfg2.straggler_factor - 2.5).abs() < 1e-9);
+        // a factor <= 1 would flag every link — config-time error
+        cfg.set("straggler_factor", "1.0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("straggler_factor"), "{err}");
+        assert!(cfg.set("calibrate", "maybe").is_err());
+    }
+
+    #[test]
+    fn per_hop_link_ms_roundtrips_through_toml() {
+        let mut cfg = DeployConfig::default();
+        cfg.set("link_ms", "5,40,5").unwrap();
+        let text = cfg.to_toml();
+        assert!(text.contains("link_ms = \"5,40,5\""), "{text}");
+        let mut cfg2 = DeployConfig::default();
+        for (k, v) in &parse_toml_lite(&text).unwrap() {
+            cfg2.set(k, v).unwrap();
+        }
+        assert_eq!(cfg2.link_ms_hops, vec![5.0, 40.0, 5.0]);
+        assert_eq!(cfg2.link_ms, cfg.link_ms);
     }
 }

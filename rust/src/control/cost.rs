@@ -32,7 +32,93 @@
 //! overlap ≡ sequential differential would break.
 
 use crate::cluster::clock::Nanos;
+use crate::cluster::Topology;
 use crate::spec::DraftShape;
+
+/// Upper bound on the pipeline depth the per-hop tables size for. Fixed
+/// so [`HopCosts`] (and the telemetry layer's estimators) stay `Copy`
+/// PODs with no heap behind them — the paper's regime is 3 ≤ N ≤ 8, so
+/// 32 is generous.
+pub const MAX_HOPS: usize = 32;
+
+/// Per-hop link calibration: one `(t1, bandwidth)` pair per pipeline
+/// hop, indexed like `Topology::hop` (hops `0..N−1` forward, hop `N−1`
+/// the logits-return link). `n == 0` means "uniform": the model falls
+/// back to the scalar `link_ns`/`bandwidth_bps` fields, which keeps
+/// every pre-existing config byte-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HopCosts {
+    n: usize,
+    base_ns: [Nanos; MAX_HOPS],
+    bandwidth_bps: [u64; MAX_HOPS],
+}
+
+impl HopCosts {
+    /// The uniform (scalar-fallback) table.
+    pub fn uniform() -> HopCosts {
+        HopCosts { n: 0, base_ns: [0; MAX_HOPS], bandwidth_bps: [0; MAX_HOPS] }
+    }
+
+    /// Snapshot a topology's per-hop terms (jitter is not modeled — the
+    /// cost model is the jitter-free expectation).
+    pub fn from_topology(topo: &Topology) -> HopCosts {
+        let mut h = HopCosts::uniform();
+        h.n = topo.n_nodes.min(MAX_HOPS);
+        for i in 0..h.n {
+            let link = topo.hop(i);
+            h.base_ns[i] = link.base_ns;
+            h.bandwidth_bps[i] = link.bandwidth_bps;
+        }
+        h
+    }
+
+    /// Build from explicit per-hop base latencies (bandwidth infinite) —
+    /// the calibrator's spelling.
+    pub fn from_base_ns(base: &[Nanos]) -> HopCosts {
+        let mut h = HopCosts::uniform();
+        h.n = base.len().min(MAX_HOPS);
+        h.base_ns[..h.n].copy_from_slice(&base[..h.n]);
+        h
+    }
+
+    /// `n` identical hops at the given scalar terms — how an online
+    /// calibration seeds a per-hop table for a model configured uniform.
+    pub fn replicate(n: usize, base_ns: Nanos, bandwidth_bps: u64) -> HopCosts {
+        let mut h = HopCosts::uniform();
+        h.n = n.min(MAX_HOPS);
+        for i in 0..h.n {
+            h.base_ns[i] = base_ns;
+            h.bandwidth_bps[i] = bandwidth_bps;
+        }
+        h
+    }
+
+    /// True when a per-hop table is active (scalar fallback otherwise).
+    pub fn is_set(&self) -> bool {
+        self.n > 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Base latency of hop `i` (wrapping like `Topology::hop`).
+    pub fn base_ns_at(&self, hop: usize) -> Nanos {
+        self.base_ns[hop % self.n.max(1)]
+    }
+
+    /// Overwrite one hop's base latency in place (the online
+    /// calibrator's update path — no allocation).
+    pub fn set_base_ns(&mut self, hop: usize, ns: Nanos) {
+        if hop < self.n {
+            self.base_ns[hop] = ns;
+        }
+    }
+}
 
 /// Prior probability the pre-draft's bonus-token guess matches the
 /// committed bonus token. Deliberately a constant: the measured guess-hit
@@ -69,6 +155,21 @@ pub struct CostModel {
     pub fwd_bytes_per_token: usize,
     /// Return-hop payload per window token (logits), bytes.
     pub ret_bytes_per_token: usize,
+    /// Per-hop link table ([`HopCosts::uniform`] = fall back to the
+    /// scalar `link_ns`/`bandwidth_bps`). Sourced from `Topology` at
+    /// config time and from the telemetry calibrator online.
+    pub hops: HopCosts,
+}
+
+/// `bytes / bandwidth` in ns (`bw == 0` = infinite) — the serialization
+/// half of `LinkModel::transfer_time`, shared by the scalar and per-hop
+/// pricing paths.
+fn serialize_ns(bytes: usize, bandwidth_bps: u64) -> Nanos {
+    if bandwidth_bps == 0 {
+        0
+    } else {
+        (bytes as u128 * 1_000_000_000u128 / bandwidth_bps as u128) as Nanos
+    }
 }
 
 impl CostModel {
@@ -94,18 +195,40 @@ impl CostModel {
             verify_per_node_ns: crate::coordinator::overlap::HOST_VERIFY_PER_NODE_NS,
             fwd_bytes_per_token: d_model * 4,
             ret_bytes_per_token: vocab * 4,
+            hops: if cfg.link_ms_hops.is_empty() {
+                HopCosts::uniform()
+            } else {
+                HopCosts::from_topology(&cfg.topology())
+            },
         }
     }
 
     /// One link traversal for a message of `bytes` — the same arithmetic
-    /// as `LinkModel::transfer_time` with jitter off.
+    /// as `LinkModel::transfer_time` with jitter off — priced at the
+    /// *uniform* scalar terms.
     pub fn hop_ns(&self, bytes: usize) -> Nanos {
-        let bw = if self.bandwidth_bps == 0 {
-            0
+        serialize_ns(bytes, self.bandwidth_bps) + self.link_ns
+    }
+
+    /// [`Self::hop_ns`] for a specific hop: per-hop table terms when a
+    /// table is set, the uniform scalars otherwise.
+    pub fn hop_ns_at(&self, hop: usize, bytes: usize) -> Nanos {
+        if self.hops.is_set() {
+            let i = hop % self.hops.n;
+            serialize_ns(bytes, self.hops.bandwidth_bps[i]) + self.hops.base_ns[i]
         } else {
-            (bytes as u128 * 1_000_000_000u128 / self.bandwidth_bps as u128) as Nanos
-        };
-        self.link_ns + bw
+            self.hop_ns(bytes)
+        }
+    }
+
+    /// Sum of the round's comm terms: `N−1` forward hops of the window
+    /// activations plus the logits return hop — each priced per hop.
+    fn comm_ns(&self, width: usize) -> Nanos {
+        let mut comm: Nanos = 0;
+        for i in 0..self.nodes - 1 {
+            comm += self.hop_ns_at(i, width * self.fwd_bytes_per_token);
+        }
+        comm + self.hop_ns_at(self.nodes - 1, width * self.ret_bytes_per_token)
     }
 
     /// Deterministic single-round latency: `draft_steps` leader-local
@@ -133,11 +256,7 @@ impl CostModel {
         let width = window_nodes + 1;
         let per_stage = self.per_token_pass_ns / self.nodes as Nanos;
         let compute = per_stage * width as Nanos * self.nodes as Nanos;
-        let mut comm: Nanos = 0;
-        if self.nodes > 1 {
-            comm += (self.nodes as Nanos - 1) * self.hop_ns(width * self.fwd_bytes_per_token);
-            comm += self.hop_ns(width * self.ret_bytes_per_token);
-        }
+        let comm: Nanos = if self.nodes > 1 { self.comm_ns(width) } else { 0 };
         let draft = draft_steps as Nanos * self.draft_step_ns;
         let verify = self.verify_base_ns + window_nodes as Nanos * self.verify_per_node_ns;
         draft + compute + comm / fuse.max(1) as Nanos + verify
@@ -153,9 +272,7 @@ impl CostModel {
         let width = window_nodes + 1;
         let per_stage = self.per_token_pass_ns / self.nodes as Nanos;
         let downstream_compute = per_stage * width as Nanos * (self.nodes as Nanos - 1);
-        let comm = (self.nodes as Nanos - 1) * self.hop_ns(width * self.fwd_bytes_per_token)
-            + self.hop_ns(width * self.ret_bytes_per_token);
-        downstream_compute + comm
+        downstream_compute + self.comm_ns(width)
     }
 
     /// Expected committed tokens per round (accepted span + the
@@ -302,6 +419,7 @@ mod tests {
             verify_per_node_ns: 2_000,
             fwd_bytes_per_token: 1024,
             ret_bytes_per_token: 256,
+            hops: HopCosts::uniform(),
         }
     }
 
@@ -317,6 +435,58 @@ mod tests {
         let m1 = CostModel { nodes: 1, ..m };
         let t1 = m1.round_time_ns(4, 5);
         assert_eq!(t1, 5 * 600_000 + 5 * 240_000 + 100_000 + 4 * 2_000);
+    }
+
+    #[test]
+    fn per_hop_table_reprices_each_hop() {
+        let m = model(15.0);
+        // uniform table unset: hop_ns_at falls back to the scalar
+        assert_eq!(m.hop_ns_at(2, 100), m.hop_ns(100));
+        // 4 nodes, hops 5 / 40 / 5 ms forward + 5 ms return
+        let hops = CostModel {
+            hops: HopCosts::from_base_ns(&[5_000_000, 40_000_000, 5_000_000, 5_000_000]),
+            ..model(15.0)
+        };
+        assert_eq!(hops.hop_ns_at(1, 100), 40_000_000);
+        let t = hops.round_time_ns(4, 5);
+        let expect = 5 * 600_000
+            + 5 * 240_000
+            + (5 + 40 + 5 + 5) * 1_000_000
+            + 100_000
+            + 4 * 2_000;
+        assert_eq!(t, expect);
+        // uniform per-hop table at the scalar value is a no-op
+        let same = CostModel {
+            hops: HopCosts::from_base_ns(&[15_000_000; 4]),
+            ..model(15.0)
+        };
+        assert_eq!(same.round_time_ns(4, 5), m.round_time_ns(4, 5));
+        assert_eq!(same.inflight_gap_ns(4), m.inflight_gap_ns(4));
+    }
+
+    #[test]
+    fn hop_table_from_topology_mirrors_links() {
+        use crate::cluster::LinkModel;
+        let topo = Topology::chain_from_forward(vec![
+            LinkModel::wan(1.0, 0.0),
+            LinkModel::wan(10.0, 1.0),
+            LinkModel::wan(2.0, 0.0),
+        ]);
+        let h = HopCosts::from_topology(&topo);
+        assert!(h.is_set());
+        assert_eq!(h.len(), 4);
+        assert_eq!(h.base_ns_at(1), 10_000_000);
+        // return hop mirrors the last forward link
+        assert_eq!(h.base_ns_at(3), 2_000_000);
+        let m = CostModel { nodes: 4, hops: h, ..model(15.0) };
+        // the bandwidth term survives per hop: hop 1 carries 1 Gbps
+        let bw = m.hop_ns_at(1, 125_000_000) - m.hop_ns_at(1, 0);
+        assert_eq!(bw, 1_000_000_000, "1 Gbps serializes 125 MB in 1 s");
+        // online update path
+        let mut h2 = h;
+        h2.set_base_ns(1, 7_000_000);
+        assert_eq!(h2.base_ns_at(1), 7_000_000);
+        assert_eq!(h2.base_ns_at(0), h.base_ns_at(0));
     }
 
     #[test]

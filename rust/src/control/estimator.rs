@@ -18,7 +18,8 @@
 //! sequential path off the catch-up step's logits at the same position),
 //! so feeding it keeps decisions overlap-invariant.
 
-use crate::control::cost::GUESS_HIT_PRIOR;
+use crate::cluster::clock::Nanos;
+use crate::control::cost::{CostModel, HopCosts, GUESS_HIT_PRIOR, MAX_HOPS};
 
 /// Discounted Beta posterior over per-token acceptance.
 ///
@@ -144,6 +145,72 @@ impl AcceptanceEstimator {
     }
 }
 
+/// Calibrated per-hop link-latency estimates, handed to the policy as a
+/// pure input exactly like [`AcceptanceEstimator`]'s acceptance rate.
+///
+/// Purity contract: the *computation* of these estimates (EWMA over
+/// per-hop occupancy, `telemetry::FleetMetrics`) lives outside
+/// `control::` — the controller only consumes the resulting
+/// plain-old-data table, a deterministic function of committed round
+/// outcomes in simulation. That keeps controller decisions replayable
+/// (sim ≡ real, overlap ≡ sequential) exactly as with acceptance
+/// evidence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkEstimate {
+    n: usize,
+    hop_ns: [Nanos; MAX_HOPS],
+}
+
+impl Default for LinkEstimate {
+    fn default() -> Self {
+        LinkEstimate::empty()
+    }
+}
+
+impl LinkEstimate {
+    /// No evidence yet — applying this is a no-op.
+    pub fn empty() -> LinkEstimate {
+        LinkEstimate { n: 0, hop_ns: [0; MAX_HOPS] }
+    }
+
+    /// Build from per-hop latency estimates (indexed like
+    /// `Topology::hop`: `0..N−1` forward, `N−1` the return hop).
+    pub fn from_hop_ns(hops: &[Nanos]) -> LinkEstimate {
+        let mut e = LinkEstimate::empty();
+        e.n = hops.len().min(MAX_HOPS);
+        e.hop_ns[..e.n].copy_from_slice(&hops[..e.n]);
+        e
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn hop_ns_at(&self, hop: usize) -> Nanos {
+        self.hop_ns[hop % self.n.max(1)]
+    }
+
+    /// Write the estimates into a cost model's per-hop table in place
+    /// (no allocation). A model still priced at the uniform scalars gets
+    /// its table seeded from them first, so the bandwidth terms carry
+    /// over; an empty estimate changes nothing.
+    pub fn apply_to(&self, cost: &mut CostModel) {
+        if self.n == 0 {
+            return;
+        }
+        if !cost.hops.is_set() {
+            cost.hops = HopCosts::replicate(self.n, cost.link_ns, cost.bandwidth_bps);
+        }
+        for i in 0..self.n.min(cost.hops.len()) {
+            cost.hops.set_base_ns(i, self.hop_ns[i]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +288,39 @@ mod tests {
         assert!(e.guess_rate() < 0.1, "{}", e.guess_rate());
         // guess observations never touch the acceptance posterior
         assert!((e.rate() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_estimate_applies_in_place() {
+        let mut cost = CostModel {
+            nodes: 4,
+            link_ns: 15_000_000,
+            bandwidth_bps: 125_000_000,
+            per_token_pass_ns: 240_000,
+            draft_step_ns: 600_000,
+            verify_base_ns: 100_000,
+            verify_per_node_ns: 2_000,
+            fwd_bytes_per_token: 1024,
+            ret_bytes_per_token: 256,
+            hops: HopCosts::uniform(),
+        };
+        // empty estimate: nothing moves
+        LinkEstimate::empty().apply_to(&mut cost);
+        assert!(!cost.hops.is_set());
+        // estimates seed the table from the uniform scalars, so the
+        // bandwidth term carries over per hop
+        let est = LinkEstimate::from_hop_ns(&[5_000_000, 40_000_000, 5_000_000, 5_000_000]);
+        assert_eq!(est.len(), 4);
+        assert_eq!(est.hop_ns_at(1), 40_000_000);
+        est.apply_to(&mut cost);
+        assert!(cost.hops.is_set());
+        assert_eq!(cost.hops.base_ns_at(1), 40_000_000);
+        let serialize = cost.hop_ns_at(1, 125_000) - cost.hops.base_ns_at(1);
+        assert_eq!(serialize, 1_000_000, "seeded bandwidth term survives");
+        // re-applying tracks drift in place
+        let est2 = LinkEstimate::from_hop_ns(&[5_000_000, 7_000_000, 5_000_000, 5_000_000]);
+        est2.apply_to(&mut cost);
+        assert_eq!(cost.hops.base_ns_at(1), 7_000_000);
     }
 
     #[test]

@@ -69,6 +69,6 @@ pub mod cost;
 pub mod estimator;
 pub mod policy;
 
-pub use cost::{CostModel, GUESS_HIT_PRIOR};
-pub use estimator::AcceptanceEstimator;
+pub use cost::{CostModel, HopCosts, GUESS_HIT_PRIOR, MAX_HOPS};
+pub use estimator::{AcceptanceEstimator, LinkEstimate};
 pub use policy::{clamp_gamma, ControlConfig, ControllerKind, Decision, SeqController};

@@ -17,7 +17,7 @@
 use anyhow::{bail, Result};
 
 use crate::control::cost::CostModel;
-use crate::control::estimator::AcceptanceEstimator;
+use crate::control::estimator::{AcceptanceEstimator, LinkEstimate};
 use crate::spec::DraftShape;
 
 /// Which controller picks (γ, shape, τ) each round.
@@ -278,6 +278,18 @@ impl SeqController {
         &self.cfg
     }
 
+    /// Re-price the grid against calibrated per-hop link estimates — the
+    /// telemetry calibrator's handoff. Like [`Self::observe`]'s
+    /// acceptance evidence, the estimate is a pure function of committed
+    /// round outcomes (deterministic in simulation), so decisions stay
+    /// replayable. Writes the cost model's hop table in place (no
+    /// allocation) and leaves the current decision standing — the next
+    /// [`Self::observe`] folds the new pricing in, mirroring
+    /// [`Self::observe_guess`]'s deferred-recompute rule.
+    pub fn recalibrate(&mut self, link: &LinkEstimate) {
+        link.apply_to(&mut self.cfg.cost);
+    }
+
     /// The decision this controller will make *if* the in-flight round
     /// accepts all `offered` drafts — what the speculate-ahead scheduler
     /// pre-drafts with. The hypothetical record assumes zero key tokens
@@ -432,6 +444,7 @@ mod tests {
             verify_per_node_ns: 2_000,
             fwd_bytes_per_token: 1024,
             ret_bytes_per_token: 256,
+            hops: crate::control::cost::HopCosts::uniform(),
         }
     }
 
@@ -635,6 +648,39 @@ mod tests {
                 assert_eq!(a.decision(), b.decision());
             }
         }
+    }
+
+    #[test]
+    fn recalibration_widens_gamma_on_a_discovered_slow_hop() {
+        // A controller priced at uniform 1ms links vs its twin that
+        // learns (via LinkEstimate) that hop 1 actually costs 40ms: with
+        // comm a fixed per-round latency, the dearer round must be
+        // amortized over a longer window, so calibrated γ grows.
+        let mut uniform = SeqController::new(config(ControllerKind::CostOptimal, 1.0));
+        let mut calibrated = SeqController::new(config(ControllerKind::CostOptimal, 1.0));
+        calibrated.recalibrate(&LinkEstimate::from_hop_ns(&[
+            1_000_000, 40_000_000, 1_000_000, 1_000_000,
+        ]));
+        for _ in 0..40 {
+            uniform.observe(4, 3, 0);
+            calibrated.observe(4, 3, 0);
+        }
+        assert!(
+            calibrated.decision().gamma > uniform.decision().gamma,
+            "calibrated γ {} must exceed uniform-assumption γ {}",
+            calibrated.decision().gamma,
+            uniform.decision().gamma
+        );
+        // determinism: the same estimate applied to a replay twin yields
+        // the same decision stream
+        let mut twin = SeqController::new(config(ControllerKind::CostOptimal, 1.0));
+        twin.recalibrate(&LinkEstimate::from_hop_ns(&[
+            1_000_000, 40_000_000, 1_000_000, 1_000_000,
+        ]));
+        for _ in 0..40 {
+            twin.observe(4, 3, 0);
+        }
+        assert_eq!(twin.decision(), calibrated.decision());
     }
 
     #[test]

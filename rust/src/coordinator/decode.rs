@@ -209,6 +209,7 @@ impl DecodeEngine {
             verify_per_node_ns: HOST_VERIFY_PER_NODE_NS,
             fwd_bytes_per_token: m.d_model * 4,
             ret_bytes_per_token: m.vocab * 4,
+            hops: crate::control::HopCosts::uniform(),
         };
         let ctrl = ControlConfig::new(
             cfg.controller,
@@ -226,6 +227,24 @@ impl DecodeEngine {
     pub fn with_control(model: ShardedModel, cfg: DecodeConfig, ctrl: ControlConfig) -> DecodeEngine {
         let dims = model.engine.manifest().model;
         DecodeEngine { model, cfg, ctrl, dims, scratch: RoundScratch::default() }
+    }
+
+    /// Re-price the shared controller spec and every live sequence
+    /// controller from an online per-hop link estimate — the fleet
+    /// telemetry registry's pure-POD handoff into the policy layer
+    /// (`--calibrate on`). New sequences clone the updated spec, so the
+    /// whole deployment converges on the measured per-hop vector.
+    pub fn recalibrate<'a>(
+        &mut self,
+        est: &crate::control::LinkEstimate,
+        seqs: impl Iterator<Item = &'a mut Sequence>,
+    ) {
+        est.apply_to(&mut self.ctrl.cost);
+        for s in seqs {
+            if let Some(c) = s.ctrl.as_mut() {
+                c.recalibrate(est);
+            }
+        }
     }
 
     /// The per-round decision for a sequence, creating its controller on

@@ -78,7 +78,14 @@ impl Coordinator {
         let mut dims = model.stage_dims();
         dims.push(model.draft.cache_dims());
         let pool = KvPool::new(cfg.max_batch, dims);
-        let sim = PipelineSim::new(cfg.topology(), cfg.seed ^ 0xC1);
+        let topo = cfg.topology();
+        let n_links = topo.links.len();
+        let mut sim = PipelineSim::new(topo, cfg.seed ^ 0xC1);
+        if cfg.calibrate {
+            // `--calibrate on` needs the fleet registry's hop estimates;
+            // attach one up front (callers may still swap in their own).
+            sim.set_metrics(crate::telemetry::FleetMetrics::for_fleet(cfg.n_nodes, n_links));
+        }
         let mut decode_cfg = cfg.decode.clone();
         if decode_cfg.seed == 0 {
             // Inherit the deployment seed unless the decode seed was pinned.
@@ -222,6 +229,7 @@ impl Coordinator {
                     }
                     now = now.max(active[idx].ready_at);
                     self.retire_if_done(&mut active, idx, max_seq, &mut report, &mut results)?;
+                    self.recalibrate_if_enabled(&mut active);
                 }
                 Action::RunGroup { idxs } => {
                     let outs = self.decode.round_group(
@@ -249,6 +257,7 @@ impl Coordinator {
                     for idx in members {
                         self.retire_if_done(&mut active, idx, max_seq, &mut report, &mut results)?;
                     }
+                    self.recalibrate_if_enabled(&mut active);
                 }
             }
         }
@@ -261,6 +270,20 @@ impl Coordinator {
         report.accept = accept;
         results.sort_by_key(|r| r.id);
         Ok((report, results))
+    }
+
+    /// Online link calibration (`--calibrate on`): once the attached
+    /// fleet registry has observed every link, hand its EWMA hop
+    /// estimates to the controllers after each round. No-op without an
+    /// attached [`crate::telemetry::FleetMetrics`] or before full link
+    /// coverage; allocation-free either way.
+    fn recalibrate_if_enabled(&mut self, active: &mut [Sequence]) {
+        if !self.cfg.calibrate {
+            return;
+        }
+        if let Some(est) = self.sim.link_estimate() {
+            self.decode.recalibrate(&est, active.iter_mut());
+        }
     }
 
     /// Completion check for one active sequence (token budget or cache

@@ -71,8 +71,9 @@ use anyhow::Result;
 use crate::cluster::clock::Nanos;
 use crate::cluster::sim::{PassTiming, PipelineSim};
 use crate::cluster::topology::{LinkModel, Topology};
-use crate::control::{ControlConfig, ControllerKind, CostModel, Decision, SeqController};
+use crate::control::{ControlConfig, ControllerKind, CostModel, Decision, HopCosts, SeqController};
 use crate::metrics::Histogram;
+use crate::telemetry::FleetMetrics;
 use crate::model::{VerifyKnobs, VerifyOutcome};
 use crate::sampling::{argmax, sample_logits_into};
 use crate::spec::reference::host_verify_with;
@@ -220,6 +221,19 @@ pub struct OracleConfig {
     pub seq_id: u64,
     pub nodes: usize,
     pub link_ms: f64,
+    /// Per-forward-hop one-way latencies in ms (`nodes − 1` entries;
+    /// empty = the uniform `link_ms` everywhere). The return hop reuses
+    /// the last entry, matching [`Topology::chain_from_forward`].
+    pub link_ms_hops: Vec<f64>,
+    /// Price the controller's cost model at the uniform `link_ms`
+    /// scalar even when the deployed chain is heterogeneous — the
+    /// "operator misconfigured the fleet" baseline the straggler
+    /// ablation measures calibration against.
+    pub model_uniform: bool,
+    /// Online per-link calibration: attach a [`FleetMetrics`] registry
+    /// to the sim and hand its EWMA hop estimates to the controller
+    /// after every round ([`SeqController::recalibrate`]).
+    pub calibrate: bool,
     /// Leader-local cost of one draft step.
     pub draft_step_ns: Nanos,
     /// Full-pipeline marginal compute per window token (split evenly
@@ -247,6 +261,9 @@ impl Default for OracleConfig {
             seq_id: 0,
             nodes: 4,
             link_ms: 15.0,
+            link_ms_hops: Vec::new(),
+            model_uniform: false,
+            calibrate: false,
             draft_step_ns: 600_000,
             per_token_pass_ns: 240_000,
             d_model: 256,
@@ -256,11 +273,48 @@ impl Default for OracleConfig {
 }
 
 impl OracleConfig {
+    /// Per-hop spelling check: `link_ms_hops`, when set, must carry
+    /// exactly `nodes − 1` forward-hop entries.
+    pub fn validate_hops(&self) -> Result<()> {
+        if !self.link_ms_hops.is_empty()
+            && self.link_ms_hops.len() != self.nodes.saturating_sub(1)
+        {
+            anyhow::bail!(
+                "link_ms_hops needs exactly nodes-1 = {} entries, got {}",
+                self.nodes.saturating_sub(1),
+                self.link_ms_hops.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// The chain this config deploys: per-hop links when
+    /// `link_ms_hops` is set (return hop reuses the last forward link,
+    /// per [`Topology::chain_from_forward`]), the uniform `link_ms`
+    /// scalar otherwise. Latency-dominated (`bandwidth = 0`), matching
+    /// the controller's pricing convention.
+    pub fn topology(&self) -> Topology {
+        if self.link_ms_hops.is_empty() {
+            Topology::uniform(self.nodes, LinkModel::wan(self.link_ms, 0.0))
+        } else {
+            Topology::chain_from_forward(
+                self.link_ms_hops.iter().map(|&ms| LinkModel::wan(ms, 0.0)).collect(),
+            )
+        }
+    }
+
     /// The controller spec this oracle deployment implies: its cost
     /// model is the oracle's own calibration, so `cost-optimal`
     /// decisions are optimal with respect to the very simulator the
-    /// bench measures with.
+    /// bench measures with. A heterogeneous chain prices per hop
+    /// unless `model_uniform` forces the scalar-`link_ms` assumption
+    /// (the miscalibrated baseline online calibration repairs).
     pub fn control_config(&self) -> ControlConfig {
+        let hops = if self.model_uniform || self.link_ms_hops.is_empty() {
+            HopCosts::uniform()
+        } else {
+            HopCosts::from_topology(&self.topology())
+        };
         let cost = CostModel {
             nodes: self.nodes,
             link_ns: (self.link_ms * 1e6) as Nanos,
@@ -271,6 +325,7 @@ impl OracleConfig {
             verify_per_node_ns: HOST_VERIFY_PER_NODE_NS,
             fwd_bytes_per_token: self.d_model * 4,
             ret_bytes_per_token: self.vocab * 4,
+            hops,
         };
         ControlConfig::new(
             self.controller,
@@ -325,8 +380,13 @@ impl OracleChainDecoder {
         if cfg.gamma == 0 {
             anyhow::bail!("gamma must be >= 1 for speculative decoding");
         }
-        let topo = Topology::uniform(cfg.nodes, LinkModel::wan(cfg.link_ms, 0.0));
-        let sim = PipelineSim::new(topo, cfg.seed ^ 0xC1);
+        cfg.validate_hops()?;
+        let topo = cfg.topology();
+        let n_links = topo.links.len();
+        let mut sim = PipelineSim::new(topo, cfg.seed ^ 0xC1);
+        if cfg.calibrate {
+            sim.set_metrics(FleetMetrics::for_fleet(cfg.nodes, n_links));
+        }
         let per_stage = vec![cfg.per_token_pass_ns / cfg.nodes as Nanos; cfg.nodes];
         let frontier = prompt.len().saturating_sub(1);
         let ctrl = SeqController::new(cfg.control_config());
@@ -732,6 +792,17 @@ impl OracleChainDecoder {
         );
         self.round_idx += 1;
 
+        // Online link calibration: once every hop has been observed, the
+        // fleet registry's EWMA estimates re-price the controller's cost
+        // model — a pure POD handoff (`LinkEstimate`), so decisions stay
+        // functions of (config, committed outcomes) and the overlap and
+        // sim/real equivalences hold.
+        if self.cfg.calibrate {
+            if let Some(est) = sim.link_estimate() {
+                self.ctrl.recalibrate(&est);
+            }
+        }
+
         round_out.committed.clear();
         round_out.committed.extend_from_slice(&vout.tokens);
         round_out.accepted = vout.accepted;
@@ -889,8 +960,13 @@ impl OracleFleet {
         if batch == 0 {
             anyhow::bail!("fleet needs at least one sequence");
         }
-        let topo = Topology::uniform(base.nodes, LinkModel::wan(base.link_ms, 0.0));
-        let sim = PipelineSim::new(topo, base.seed ^ 0xF7);
+        base.validate_hops()?;
+        let topo = base.topology();
+        let n_links = topo.links.len();
+        let mut sim = PipelineSim::new(topo, base.seed ^ 0xF7);
+        if base.calibrate {
+            sim.set_metrics(FleetMetrics::for_fleet(base.nodes, n_links));
+        }
         let per_stage = vec![base.per_token_pass_ns / base.nodes as Nanos; base.nodes];
         let mut seqs = Vec::with_capacity(batch);
         for id in 0..batch {
@@ -1201,5 +1277,114 @@ mod tests {
             assert_eq!(r.pre_draft_ns, 0);
             assert_eq!(r.recovered_ns, 0);
         }
+    }
+
+    #[test]
+    fn rejects_wrong_hop_count() {
+        let cfg = OracleConfig { link_ms_hops: vec![5.0, 5.0], ..Default::default() };
+        // nodes = 4 needs exactly 3 forward hops
+        assert!(OracleChainDecoder::new(cfg, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn solo_rounds_on_heterogeneous_chain_price_exactly() {
+        // The drift-zero invariant must survive per-hop links: with the
+        // cost model priced from the same heterogeneous topology the sim
+        // deploys, every solo round is exact to the nanosecond.
+        let cfg = OracleConfig {
+            link_ms_hops: vec![20.0, 40.0, 20.0],
+            seed: 7,
+            ..Default::default()
+        };
+        let mut d = OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap();
+        for r in 0..25 {
+            let out = d.round();
+            assert!(out.predicted_ns > 0);
+            assert_eq!(
+                out.predicted_ns, out.round_ns,
+                "round {r}: heterogeneous chain must price exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_learns_heterogeneous_chain() {
+        // Uniform-assumption pricing on a chain with a 40ms straggler
+        // hop: after round 1 every link has been observed once, the
+        // EWMA initializes to the exact jitter-free occupancy, and the
+        // controller's cost model carries the true per-hop vector.
+        let cfg = OracleConfig {
+            link_ms_hops: vec![5.0, 40.0, 5.0],
+            link_ms: 5.0,
+            model_uniform: true,
+            calibrate: true,
+            controller: ControllerKind::CostOptimal,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut d = OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap();
+        assert!(!d.ctrl.config().cost.hops.is_set(), "uniform assumption at start");
+        for _ in 0..10 {
+            d.round();
+        }
+        let hops = &d.ctrl.config().cost.hops;
+        assert!(hops.is_set(), "calibration must install per-hop costs");
+        assert_eq!(hops.base_ns_at(0), 5_000_000);
+        assert_eq!(hops.base_ns_at(1), 40_000_000, "straggler hop learned exactly");
+        assert_eq!(hops.base_ns_at(2), 5_000_000);
+    }
+
+    #[test]
+    fn calibrated_drift_returns_to_zero_after_first_round() {
+        // Misconfigured uniform pricing on a heterogeneous chain drifts
+        // on round 1; online calibration repairs the model before round
+        // 2's decision, after which pricing is exact again.
+        let cfg = OracleConfig {
+            link_ms_hops: vec![20.0, 40.0, 20.0],
+            link_ms: 20.0,
+            model_uniform: true,
+            calibrate: true,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut d = OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap();
+        let first = d.round();
+        assert_ne!(
+            first.predicted_ns, first.round_ns,
+            "uniform assumption must misprice the straggler hop"
+        );
+        for r in 1..20 {
+            let out = d.round();
+            assert_eq!(
+                out.predicted_ns, out.round_ns,
+                "round {r}: calibrated model must price exactly"
+            );
+        }
+    }
+
+    #[test]
+    fn calibration_is_decision_invariant_on_uniform_chains() {
+        // On a chain that matches the configured scalar, calibration
+        // learns exactly what the model already assumed — decisions and
+        // committed streams are byte-identical with it on or off.
+        let mk = |calibrate: bool| {
+            let cfg = OracleConfig {
+                controller: ControllerKind::CostOptimal,
+                calibrate,
+                seed: 17,
+                ..Default::default()
+            };
+            OracleChainDecoder::new(cfg, &[2, 7, 1, 8]).unwrap()
+        };
+        let mut on = mk(true);
+        let mut off = mk(false);
+        for r in 0..30 {
+            let a = on.round();
+            let b = off.round();
+            assert_eq!(a.gamma, b.gamma, "round {r}: decisions must match");
+            assert_eq!(a.committed, b.committed, "round {r}: streams must match");
+            assert_eq!(a.round_ns, b.round_ns);
+        }
+        assert_eq!(on.committed, off.committed);
     }
 }

@@ -74,6 +74,21 @@
 //! 0 ns drift on the deterministic engine-free sim path, a calibration
 //! histogram everywhere else.
 //!
+//! ## Fleet health telemetry
+//!
+//! The [`telemetry`] subsystem aggregates the same span stream into a
+//! preallocated fleet-wide registry ([`telemetry::FleetMetrics`], a
+//! second [`trace::TraceSink`]): per-node compute, per-link channel
+//! occupancy, EWMA per-hop latency estimates, and drift accumulators —
+//! still zero allocations in steady state. The estimates feed two
+//! consumers: `dsd serve --metrics FILE` writes a self-validated
+//! Prometheus text-exposition snapshot with straggler flags, and
+//! `--calibrate on` hands them to the controller each round as a pure
+//! [`control::LinkEstimate`] so the cost-optimal grid reprices γ from
+//! *measured* per-hop latency instead of the configured scalars
+//! (`benches/ablation_straggler.rs` shows the win under asymmetric
+//! links).
+//!
 //! Start with [`coordinator::Coordinator`] (serving) or
 //! [`sim`](cluster::sim) (discrete-event sweeps); `examples/quickstart.rs`
 //! shows the five-line happy path.
@@ -98,6 +113,7 @@ pub mod model;
 pub mod runtime;
 pub mod sampling;
 pub mod spec;
+pub mod telemetry;
 pub mod trace;
 pub mod util;
 pub mod workload;

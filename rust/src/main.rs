@@ -21,6 +21,7 @@ use dsd::config::DeployConfig;
 use dsd::coordinator::{Coordinator, OracleConfig, OracleFleet};
 use dsd::metrics::RunReport;
 use dsd::spec::Policy;
+use dsd::telemetry::{self, FleetMetrics};
 use dsd::trace::{drift, export, RingTracer, SpanEvent};
 use dsd::util::bench::write_bench_json_in;
 use dsd::util::cli;
@@ -33,6 +34,7 @@ const VALUED: &[&str] = &[
     "draft", "draft_variant", "draft_shape", "max_batch", "fuse", "max_fuse", "fuse_tokens",
     "dataset", "requests", "seed", "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3",
     "max_new_tokens", "overlap", "controller", "out", "sweep_nodes", "trace", "json",
+    "metrics", "straggler_factor", "calibrate",
 ];
 
 /// Span ring capacity for `--trace` (~64 B/event: a few MB, tens of
@@ -65,7 +67,8 @@ Common options:
   --config FILE          layer a deploy.toml before CLI overrides
   --artifacts_dir DIR    AOT artifact directory (default: artifacts)
   --nodes N              pipeline nodes (2/4/8)         [4]
-  --link_ms MS           per-link one-way latency       [2.0]
+  --link_ms MS[,MS..]    per-link one-way latency; a comma list gives
+                         one value per forward hop (heterogeneous chain)
   --link_gbps G          link bandwidth, 0 = infinite   [1.0]
   --dataset NAME         humaneval|gsm8k|alpaca|mtbench|cnndm
   --policy P             baseline|eagle3|dsd            [dsd]
@@ -90,6 +93,12 @@ Observability (serve):
                          ui.perfetto.dev) plus a per-round FILE.jsonl,
                          schema-validated after writing
   --json DIR             write machine-readable BENCH_serve.json into DIR
+  --metrics FILE         write a Prometheus text-exposition snapshot of
+                         the fleet registry (validated after writing)
+  --calibrate S          online per-link EWMA calibration feeding the
+                         controller's cost model, on|off [off]
+  --straggler_factor F   flag links whose hop estimate exceeds the
+                         fleet median by Fx [3.0]
 ";
 
 fn build_config(args: &cli::Args) -> Result<DeployConfig> {
@@ -118,8 +127,14 @@ fn serve(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let json_dir = args.get("json").map(std::path::PathBuf::from);
+    let metrics_path = args.get("metrics").map(std::path::PathBuf::from);
     if args.flag("oracle") {
-        return serve_oracle(&cfg, trace_path.as_deref(), json_dir.as_deref());
+        return serve_oracle(
+            &cfg,
+            trace_path.as_deref(),
+            json_dir.as_deref(),
+            metrics_path.as_deref(),
+        );
     }
     eprintln!(
         "serving {} requests of '{}' on N={} nodes (t1={}ms, policy={})...",
@@ -135,9 +150,20 @@ fn serve(args: &cli::Args) -> Result<()> {
     if trace_path.is_some() {
         coord.sim.set_tracer(RingTracer::with_capacity(TRACE_RING_CAP));
     }
-    let (report, _) = coord.run_workload(requests)?;
+    if coord.sim.metrics().is_none() {
+        // Fleet registry: powers the per-node/per-link breakdown and
+        // `--metrics` even when `--calibrate` didn't attach one.
+        let n_links = cfg.topology().links.len();
+        coord.sim.set_metrics(FleetMetrics::for_fleet(cfg.n_nodes, n_links));
+    }
+    let (mut report, _) = coord.run_workload(requests)?;
     let events = coord.sim.take_tracer().map(|t| t.to_vec()).unwrap_or_default();
+    let fm = coord.sim.take_metrics();
+    if let Some(m) = fm.as_ref() {
+        report.attach_fleet(m, cfg.straggler_factor);
+    }
     print_serve_report(&cfg, &report);
+    write_metrics_snapshot(&cfg, fm.as_ref(), metrics_path.as_deref())?;
     write_outputs(&cfg, &report, &events, trace_path.as_deref(), json_dir.as_deref())
 }
 
@@ -153,6 +179,7 @@ fn serve_oracle(
     cfg: &DeployConfig,
     trace_path: Option<&Path>,
     json_dir: Option<&Path>,
+    metrics_path: Option<&Path>,
 ) -> Result<()> {
     let group_cap = if cfg.fuse { cfg.max_fuse.max(1) } else { 1 };
     eprintln!(
@@ -166,6 +193,8 @@ fn serve_oracle(
         seed: cfg.seed,
         nodes: cfg.n_nodes,
         link_ms: cfg.link_ms,
+        link_ms_hops: cfg.link_ms_hops.clone(),
+        calibrate: cfg.calibrate,
         fuse: group_cap,
         ..Default::default()
     };
@@ -175,6 +204,10 @@ fn serve_oracle(
     fleet.warm_capacity(tokens_per_seq + 64);
     if trace_path.is_some() {
         fleet.sim.set_tracer(RingTracer::with_capacity(TRACE_RING_CAP));
+    }
+    if fleet.sim.metrics().is_none() {
+        let n_links = ocfg.topology().links.len();
+        fleet.sim.set_metrics(FleetMetrics::for_fleet(cfg.n_nodes, n_links));
     }
     let fr = fleet.serve(tokens_per_seq, group_cap, cfg.fuse_tokens);
     let mut report = RunReport::new(format!("oracle/N{}", cfg.n_nodes));
@@ -191,8 +224,29 @@ fn serve_oracle(
         report.request_latency.record(s.finish_time());
     }
     let events = fleet.sim.take_tracer().map(|t| t.to_vec()).unwrap_or_default();
+    let fm = fleet.sim.take_metrics();
+    if let Some(m) = fm.as_ref() {
+        report.attach_fleet(m, cfg.straggler_factor);
+    }
     print_serve_report(cfg, &report);
+    write_metrics_snapshot(cfg, fm.as_ref(), metrics_path)?;
     write_outputs(cfg, &report, &events, trace_path, json_dir)
+}
+
+/// `--metrics FILE`: Prometheus text-exposition snapshot of the fleet
+/// registry, self-validated before it lands on disk (a malformed
+/// snapshot fails the run, like the trace exporters).
+fn write_metrics_snapshot(
+    cfg: &DeployConfig,
+    fm: Option<&FleetMetrics>,
+    metrics_path: Option<&Path>,
+) -> Result<()> {
+    let (Some(path), Some(m)) = (metrics_path, fm) else {
+        return Ok(());
+    };
+    let samples = telemetry::write_prometheus(path, m, cfg.straggler_factor)?;
+    println!("  metrics: {samples} samples -> {}", path.display());
+    Ok(())
 }
 
 fn print_serve_report(cfg: &DeployConfig, report: &RunReport) {
@@ -238,6 +292,35 @@ fn print_serve_report(cfg: &DeployConfig, report: &RunReport) {
             report.drift.max() as f64 / 1e6,
             if report.drift.max() == 0 { "  (exact)" } else { "" },
         );
+    }
+    if !report.node_compute_ns.is_empty() || !report.link_busy_ns.is_empty() {
+        let pct = |ns: u64| {
+            if report.elapsed_ns == 0 {
+                0.0
+            } else {
+                ns as f64 / report.elapsed_ns as f64 * 100.0
+            }
+        };
+        println!(
+            "  fleet: {} nodes / {} links  (straggler factor {}x, calibrate {})",
+            report.node_compute_ns.len(),
+            report.link_busy_ns.len(),
+            cfg.straggler_factor,
+            if cfg.calibrate { "on" } else { "off" },
+        );
+        for (i, &c) in report.node_compute_ns.iter().enumerate() {
+            println!("    node {i}: compute {:>9.1}ms  util {:>5.1}%", c as f64 / 1e6, pct(c));
+        }
+        for (i, &b) in report.link_busy_ns.iter().enumerate() {
+            let est = report.link_hop_est_ns.get(i).copied().unwrap_or(0);
+            println!(
+                "    link {i}: busy    {:>9.1}ms  occ  {:>5.1}%  hop est {:.2}ms{}",
+                b as f64 / 1e6,
+                pct(b),
+                est as f64 / 1e6,
+                if report.stragglers.contains(&i) { "  STRAGGLER" } else { "" },
+            );
+        }
     }
 }
 
@@ -296,6 +379,33 @@ fn write_outputs(
             ("drift_rounds", report.drift.count().into()),
             ("drift_max_ns", report.drift.max().into()),
             ("drift_mean_ns", report.drift.mean().into()),
+            ("straggler_factor", cfg.straggler_factor.into()),
+            (
+                "node_compute_ns",
+                report
+                    .node_compute_ns
+                    .iter()
+                    .map(|&v| Value::from(v))
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
+            (
+                "link_busy_ns",
+                report.link_busy_ns.iter().map(|&v| Value::from(v)).collect::<Vec<_>>().into(),
+            ),
+            (
+                "link_hop_est_ns",
+                report
+                    .link_hop_est_ns
+                    .iter()
+                    .map(|&v| Value::from(v))
+                    .collect::<Vec<_>>()
+                    .into(),
+            ),
+            (
+                "stragglers",
+                report.stragglers.iter().map(|&v| Value::from(v)).collect::<Vec<_>>().into(),
+            ),
         ]);
         let path = write_bench_json_in(dir, "serve", &v)?;
         println!("  wrote {}", path.display());

@@ -135,6 +135,17 @@ pub struct RunReport {
     pub drift: Histogram,
     /// Mean agreement with the target-greedy reference (accuracy proxy).
     pub accuracy: f64,
+    /// Per-node compute time from the fleet telemetry registry, ns
+    /// (empty when no [`crate::telemetry::FleetMetrics`] was attached).
+    pub node_compute_ns: Vec<Nanos>,
+    /// Per-link channel occupancy from the fleet registry, ns.
+    pub link_busy_ns: Vec<Nanos>,
+    /// Per-link EWMA hop-latency estimate, ns (0 until a link is
+    /// observed).
+    pub link_hop_est_ns: Vec<Nanos>,
+    /// Links whose hop estimate exceeds the fleet median ×
+    /// `straggler_factor` — the operator's "which box is slow" answer.
+    pub stragglers: Vec<usize>,
 }
 
 impl RunReport {
@@ -188,6 +199,16 @@ impl RunReport {
         let ours = self.comm_ns as f64 / self.tokens.max(1) as f64;
         let theirs = baseline.comm_ns as f64 / baseline.tokens.max(1) as f64;
         1.0 - ours / theirs
+    }
+
+    /// Fold a fleet telemetry registry into the report's per-node /
+    /// per-link breakdown (report-time; allocates, so callers do this
+    /// once after the run, never per round).
+    pub fn attach_fleet(&mut self, m: &crate::telemetry::FleetMetrics, straggler_factor: f64) {
+        self.node_compute_ns = (0..m.n_nodes()).map(|i| m.node_compute_ns(i)).collect();
+        self.link_busy_ns = (0..m.n_links()).map(|i| m.link_busy_ns(i)).collect();
+        self.link_hop_est_ns = (0..m.n_links()).map(|i| m.hop_estimate_ns(i)).collect();
+        self.stragglers = m.straggler_links(straggler_factor);
     }
 
     pub fn summary_line(&self) -> String {

@@ -1,0 +1,773 @@
+//! Fleet health telemetry: a preallocated per-node/per-link metrics
+//! registry, online per-link calibration, and straggler detection.
+//!
+//! Where [`crate::trace`] answers "what happened in this round" (a ring
+//! of individual spans for timeline export), this module answers "how is
+//! the fleet doing" — cumulative per-node compute, per-link channel
+//! occupancy, EWMA per-hop latency estimates, and prediction-drift
+//! accumulators, aggregated *online* from the same span stream. The two
+//! consumers share one producer: [`FleetMetrics`] is a second
+//! [`TraceSink`] that folds each span into fixed-size counters instead
+//! of ringing it.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocations in steady state** (the PR 5 invariant):
+//!    every slot is a fixed-size array indexed by node/link id;
+//!    recording is bounds-checked arithmetic on preallocated counters.
+//!    Out-of-range tracks are counted in [`FleetMetrics::overflow`],
+//!    never grown. Pinned by the metrics-attached case in
+//!    `tests/alloc_budget.rs` and by dsd-lint's hot-path walk (the
+//!    simulator's record sites reach [`FleetMetrics::record`]).
+//! 2. **Deterministic in simulation**: the EWMA per-hop estimate is a
+//!    pure fold over the simulator's span stream, so the same seed
+//!    yields bit-identical estimates. This is what makes *online
+//!    calibration* safe for the controller: the estimates are computed
+//!    HERE (outside `control::`, which dsd-lint forbids from naming
+//!    timing symbols) and handed to the policy as the plain-old-data
+//!    [`LinkEstimate`] — exactly the purity contract
+//!    [`AcceptanceEstimator`](crate::control::AcceptanceEstimator)
+//!    established for acceptance evidence.
+//! 3. **Operator-consumable**: [`write_prometheus`] renders the
+//!    registry in Prometheus text exposition format and self-validates
+//!    the output with [`validate_prometheus`] before writing (the same
+//!    write-then-check discipline as the Perfetto/JSONL exporters),
+//!    so a malformed snapshot is a hard error, not a silent scrape
+//!    failure.
+//!
+//! # Per-hop estimates and stragglers
+//!
+//! Each `LinkBusy` span carries the hop's full per-message channel time
+//! (`t1 + bytes/bandwidth`, the LogP-style occupancy the paper's t1
+//! stands for). The registry folds those durations into one EWMA per
+//! link: the first observation initializes the estimate directly (so a
+//! jitter-free simulated hop is *exact* after round 1), later ones move
+//! it by `β·(obs − est)`. Under the control model's latency-dominated
+//! convention (`bandwidth_bps = 0`) the estimate IS the hop price the
+//! cost model needs; [`FleetMetrics::link_estimate`] packages it for
+//! [`SeqController::recalibrate`](crate::control::SeqController).
+//!
+//! A link whose estimate exceeds the fleet median by a configurable
+//! factor is flagged as a **straggler** ([`FleetMetrics::is_straggler`])
+//! — the operator-facing symptom the calibrated controller prices in
+//! instead of stalling on.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::clock::Nanos;
+use crate::control::{LinkEstimate, MAX_HOPS};
+use crate::trace::{SpanEvent, SpanKind, TraceKey, TraceSink, Track};
+
+/// Fixed registry width: per-node and per-link slot count. Matches
+/// [`MAX_HOPS`] so a full fleet's hop table always fits the controller's
+/// per-hop cost vector.
+pub const MAX_SLOTS: usize = MAX_HOPS;
+
+/// Default EWMA step for per-hop latency estimates (≈ 5-round memory;
+/// the first observation initializes the estimate directly).
+pub const DEFAULT_EWMA_BETA: f64 = 0.2;
+
+/// Preallocated fleet-wide metrics registry. A second [`TraceSink`]:
+/// aggregates the span stream into fixed-size counters instead of
+/// ringing individual events. `Copy` POD by design — installing,
+/// swapping, and snapshotting it never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetMetrics {
+    n_nodes: usize,
+    n_links: usize,
+    node_compute_ns: [Nanos; MAX_SLOTS],
+    node_spans: [u64; MAX_SLOTS],
+    link_busy_ns: [Nanos; MAX_SLOTS],
+    link_bytes: [u64; MAX_SLOTS],
+    link_msgs: [u64; MAX_SLOTS],
+    /// Configured base latency (t1) of the last message per link, from
+    /// the span's `b` payload — the "what the config claims" side of
+    /// the calibration comparison.
+    link_base_ns: [Nanos; MAX_SLOTS],
+    /// EWMA per-hop channel-occupancy estimate ("what the fleet
+    /// measures"). f64 so fractional steps don't quantize to zero.
+    hop_est_ns: [f64; MAX_SLOTS],
+    hop_samples: [u64; MAX_SLOTS],
+    beta: f64,
+    rounds: u64,
+    drift_rounds: u64,
+    drift_exact: u64,
+    drift_sum_ns: u64,
+    drift_max_ns: u64,
+    committed: u64,
+    accepted: u64,
+    /// Latest span end time seen — the denominator for utilization and
+    /// occupancy fractions.
+    elapsed_ns: Nanos,
+    overflow: u64,
+    key: TraceKey,
+}
+
+impl Default for FleetMetrics {
+    fn default() -> Self {
+        FleetMetrics::new()
+    }
+}
+
+impl FleetMetrics {
+    pub fn new() -> FleetMetrics {
+        FleetMetrics {
+            n_nodes: 0,
+            n_links: 0,
+            node_compute_ns: [0; MAX_SLOTS],
+            node_spans: [0; MAX_SLOTS],
+            link_busy_ns: [0; MAX_SLOTS],
+            link_bytes: [0; MAX_SLOTS],
+            link_msgs: [0; MAX_SLOTS],
+            link_base_ns: [0; MAX_SLOTS],
+            hop_est_ns: [0.0; MAX_SLOTS],
+            hop_samples: [0; MAX_SLOTS],
+            beta: DEFAULT_EWMA_BETA,
+            rounds: 0,
+            drift_rounds: 0,
+            drift_exact: 0,
+            drift_sum_ns: 0,
+            drift_max_ns: 0,
+            committed: 0,
+            accepted: 0,
+            elapsed_ns: 0,
+            overflow: 0,
+            key: TraceKey::default(),
+        }
+    }
+
+    /// Registry sized for a known fleet shape, so per-node/per-link
+    /// rows render even before traffic reaches every slot.
+    pub fn for_fleet(n_nodes: usize, n_links: usize) -> FleetMetrics {
+        let mut m = FleetMetrics::new();
+        m.n_nodes = n_nodes.min(MAX_SLOTS);
+        m.n_links = n_links.min(MAX_SLOTS);
+        m
+    }
+
+    /// Reset all counters and estimates (new experiment, same shape).
+    pub fn clear(&mut self) {
+        let (n, l, beta) = (self.n_nodes, self.n_links, self.beta);
+        *self = FleetMetrics::new();
+        self.n_nodes = n;
+        self.n_links = l;
+        self.beta = beta;
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.n_links
+    }
+
+    /// Round spans observed (the fused-round count, not per-sequence).
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn committed(&self) -> u64 {
+        self.committed
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    pub fn elapsed_ns(&self) -> Nanos {
+        self.elapsed_ns
+    }
+
+    /// Spans whose track index exceeded [`MAX_SLOTS`] (counted, never
+    /// grown — the fixed-slot contract).
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    /// The (sequence, round, group) key most recently stamped by the
+    /// producer (see [`TraceSink::set_key`]).
+    pub fn key(&self) -> TraceKey {
+        self.key
+    }
+
+    pub fn node_compute_ns(&self, node: usize) -> Nanos {
+        if node < MAX_SLOTS {
+            self.node_compute_ns[node]
+        } else {
+            0
+        }
+    }
+
+    pub fn node_spans(&self, node: usize) -> u64 {
+        if node < MAX_SLOTS {
+            self.node_spans[node]
+        } else {
+            0
+        }
+    }
+
+    pub fn link_busy_ns(&self, link: usize) -> Nanos {
+        if link < MAX_SLOTS {
+            self.link_busy_ns[link]
+        } else {
+            0
+        }
+    }
+
+    pub fn link_bytes(&self, link: usize) -> u64 {
+        if link < MAX_SLOTS {
+            self.link_bytes[link]
+        } else {
+            0
+        }
+    }
+
+    pub fn link_msgs(&self, link: usize) -> u64 {
+        if link < MAX_SLOTS {
+            self.link_msgs[link]
+        } else {
+            0
+        }
+    }
+
+    pub fn link_base_ns(&self, link: usize) -> Nanos {
+        if link < MAX_SLOTS {
+            self.link_base_ns[link]
+        } else {
+            0
+        }
+    }
+
+    pub fn hop_samples(&self, link: usize) -> u64 {
+        if link < MAX_SLOTS {
+            self.hop_samples[link]
+        } else {
+            0
+        }
+    }
+
+    /// Current EWMA estimate of one hop's per-message channel time
+    /// (0 until the first observation).
+    pub fn hop_estimate_ns(&self, link: usize) -> Nanos {
+        if link < MAX_SLOTS {
+            self.hop_est_ns[link] as Nanos
+        } else {
+            0
+        }
+    }
+
+    /// Fraction of elapsed time node `node` spent computing.
+    pub fn node_utilization(&self, node: usize) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.node_compute_ns(node) as f64 / self.elapsed_ns as f64
+    }
+
+    /// Fraction of elapsed time link `link`'s channel was occupied.
+    pub fn link_occupancy(&self, link: usize) -> f64 {
+        if self.elapsed_ns == 0 {
+            return 0.0;
+        }
+        self.link_busy_ns(link) as f64 / self.elapsed_ns as f64
+    }
+
+    /// Rounds carrying a cost-model prediction (`Round` spans with a
+    /// nonzero `b` payload) audited for drift.
+    pub fn drift_rounds(&self) -> u64 {
+        self.drift_rounds
+    }
+
+    /// Audited rounds whose |actual − predicted| was exactly zero.
+    pub fn drift_exact(&self) -> u64 {
+        self.drift_exact
+    }
+
+    pub fn drift_max_ns(&self) -> u64 {
+        self.drift_max_ns
+    }
+
+    /// Mean |actual − predicted| over audited rounds.
+    pub fn drift_mean_ns(&self) -> f64 {
+        if self.drift_rounds == 0 {
+            return 0.0;
+        }
+        self.drift_sum_ns as f64 / self.drift_rounds as f64
+    }
+
+    /// Package the per-hop EWMA estimates for the controller. `None`
+    /// until every link slot has at least one observation — the policy
+    /// keeps pricing the configured scalars rather than repricing from
+    /// a half-seen fleet.
+    pub fn link_estimate(&self) -> Option<LinkEstimate> {
+        let n = self.n_links.min(MAX_SLOTS);
+        if n == 0 {
+            return None;
+        }
+        let mut hop = [0u64; MAX_HOPS];
+        let mut i = 0;
+        while i < n {
+            if self.hop_samples[i] == 0 {
+                return None;
+            }
+            hop[i] = self.hop_est_ns[i] as Nanos;
+            i += 1;
+        }
+        Some(LinkEstimate::from_hop_ns(&hop[..n]))
+    }
+
+    /// Median per-hop estimate across observed links (upper median on
+    /// even counts; `None` before any link reports).
+    pub fn median_hop_ns(&self) -> Option<Nanos> {
+        let n = self.n_links.min(MAX_SLOTS);
+        let mut vals = [0u64; MAX_SLOTS];
+        let mut k = 0usize;
+        for link in 0..n {
+            if self.hop_samples[link] > 0 {
+                vals[k] = self.hop_est_ns[link] as Nanos;
+                k += 1;
+            }
+        }
+        if k == 0 {
+            return None;
+        }
+        vals[..k].sort_unstable();
+        Some(vals[k / 2])
+    }
+
+    /// Whether one link's estimate exceeds the fleet median by `factor`
+    /// (the `straggler_factor` knob).
+    pub fn is_straggler(&self, link: usize, factor: f64) -> bool {
+        if link >= self.n_links.min(MAX_SLOTS) || self.hop_samples(link) == 0 {
+            return false;
+        }
+        match self.median_hop_ns() {
+            Some(med) if med > 0 => self.hop_est_ns[link] > med as f64 * factor,
+            _ => false,
+        }
+    }
+
+    /// Indices of flagged straggler links (report-time; allocates).
+    pub fn straggler_links(&self, factor: f64) -> Vec<usize> {
+        (0..self.n_links.min(MAX_SLOTS)).filter(|&i| self.is_straggler(i, factor)).collect()
+    }
+}
+
+impl TraceSink for FleetMetrics {
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn set_key(&mut self, key: TraceKey) {
+        self.key = key;
+    }
+
+    fn record(&mut self, ev: SpanEvent) {
+        let end = ev.end();
+        if end > self.elapsed_ns {
+            self.elapsed_ns = end;
+        }
+        match ev.kind {
+            SpanKind::NodeCompute => {
+                let Track::Node(node) = ev.track else { return };
+                let node = node as usize;
+                if node >= MAX_SLOTS {
+                    self.overflow += 1;
+                    return;
+                }
+                if node >= self.n_nodes {
+                    self.n_nodes = node + 1;
+                }
+                self.node_compute_ns[node] += ev.dur;
+                self.node_spans[node] += 1;
+            }
+            SpanKind::LinkBusy => {
+                let Track::Link(link) = ev.track else { return };
+                let link = link as usize;
+                if link >= MAX_SLOTS {
+                    self.overflow += 1;
+                    return;
+                }
+                if link >= self.n_links {
+                    self.n_links = link + 1;
+                }
+                self.link_busy_ns[link] += ev.dur;
+                self.link_bytes[link] += ev.a;
+                self.link_msgs[link] += 1;
+                self.link_base_ns[link] = ev.b;
+                let obs = ev.dur as f64;
+                if self.hop_samples[link] == 0 {
+                    self.hop_est_ns[link] = obs;
+                } else {
+                    self.hop_est_ns[link] += self.beta * (obs - self.hop_est_ns[link]);
+                }
+                self.hop_samples[link] += 1;
+            }
+            SpanKind::Round => {
+                self.rounds += 1;
+                if ev.b > 0 {
+                    let diff = ev.dur.abs_diff(ev.b);
+                    self.drift_rounds += 1;
+                    if diff == 0 {
+                        self.drift_exact += 1;
+                    }
+                    self.drift_sum_ns += diff;
+                    if diff > self.drift_max_ns {
+                        self.drift_max_ns = diff;
+                    }
+                }
+            }
+            SpanKind::Commit => {
+                self.committed += ev.a;
+                self.accepted += ev.b;
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------
+
+/// Render the registry in Prometheus text exposition format (one
+/// `# HELP` + `# TYPE` pair per metric family, then the samples).
+pub fn render_prometheus(m: &FleetMetrics, straggler_factor: f64) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(4096);
+    let family = |s: &mut String, name: &str, kind: &str, help: &str| {
+        let _ = writeln!(s, "# HELP {name} {help}");
+        let _ = writeln!(s, "# TYPE {name} {kind}");
+    };
+
+    family(&mut s, "dsd_node_compute_ns_total", "counter", "Cumulative compute time per node (ns).");
+    for node in 0..m.n_nodes() {
+        let _ = writeln!(s, "dsd_node_compute_ns_total{{node=\"{node}\"}} {}", m.node_compute_ns(node));
+    }
+    family(&mut s, "dsd_node_utilization", "gauge", "Fraction of elapsed time the node spent computing.");
+    for node in 0..m.n_nodes() {
+        let _ = writeln!(s, "dsd_node_utilization{{node=\"{node}\"}} {}", m.node_utilization(node));
+    }
+    family(&mut s, "dsd_link_busy_ns_total", "counter", "Cumulative channel-occupancy time per link (ns).");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_busy_ns_total{{link=\"{link}\"}} {}", m.link_busy_ns(link));
+    }
+    family(&mut s, "dsd_link_occupancy", "gauge", "Fraction of elapsed time the link channel was occupied.");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_occupancy{{link=\"{link}\"}} {}", m.link_occupancy(link));
+    }
+    family(&mut s, "dsd_link_bytes_total", "counter", "Payload bytes shipped per link.");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_bytes_total{{link=\"{link}\"}} {}", m.link_bytes(link));
+    }
+    family(&mut s, "dsd_link_messages_total", "counter", "Messages shipped per link.");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_messages_total{{link=\"{link}\"}} {}", m.link_msgs(link));
+    }
+    family(&mut s, "dsd_link_hop_estimate_ns", "gauge", "EWMA per-hop channel time estimate (ns).");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_hop_estimate_ns{{link=\"{link}\"}} {}", m.hop_estimate_ns(link));
+    }
+    family(&mut s, "dsd_link_configured_base_ns", "gauge", "Configured base latency t1 per link (ns).");
+    for link in 0..m.n_links() {
+        let _ = writeln!(s, "dsd_link_configured_base_ns{{link=\"{link}\"}} {}", m.link_base_ns(link));
+    }
+    family(&mut s, "dsd_link_straggler", "gauge", "1 when the link's estimate exceeds the fleet median by the straggler factor.");
+    for link in 0..m.n_links() {
+        let flag = u64::from(m.is_straggler(link, straggler_factor));
+        let _ = writeln!(s, "dsd_link_straggler{{link=\"{link}\"}} {flag}");
+    }
+    family(&mut s, "dsd_rounds_total", "counter", "Speculative rounds completed.");
+    let _ = writeln!(s, "dsd_rounds_total {}", m.rounds());
+    family(&mut s, "dsd_tokens_committed_total", "counter", "Tokens committed.");
+    let _ = writeln!(s, "dsd_tokens_committed_total {}", m.committed());
+    family(&mut s, "dsd_tokens_accepted_total", "counter", "Drafted tokens accepted.");
+    let _ = writeln!(s, "dsd_tokens_accepted_total {}", m.accepted());
+    family(&mut s, "dsd_drift_rounds_total", "counter", "Rounds audited against the cost-model prediction.");
+    let _ = writeln!(s, "dsd_drift_rounds_total {}", m.drift_rounds());
+    family(&mut s, "dsd_drift_exact_total", "counter", "Audited rounds with exactly zero prediction drift.");
+    let _ = writeln!(s, "dsd_drift_exact_total {}", m.drift_exact());
+    family(&mut s, "dsd_drift_max_ns", "gauge", "Largest |actual - predicted| round time (ns).");
+    let _ = writeln!(s, "dsd_drift_max_ns {}", m.drift_max_ns());
+    family(&mut s, "dsd_elapsed_ns", "gauge", "Latest span end time (ns since run start).");
+    let _ = writeln!(s, "dsd_elapsed_ns {}", m.elapsed_ns());
+    family(&mut s, "dsd_span_overflow_total", "counter", "Spans dropped for exceeding the fixed slot count.");
+    let _ = writeln!(s, "dsd_span_overflow_total {}", m.overflow());
+    s
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .enumerate()
+            .all(|(i, c)| c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit()))
+}
+
+/// Structural validation of a Prometheus text exposition snapshot:
+/// every sample's metric family must be declared by a preceding
+/// `# HELP` + `# TYPE` pair, names must be legal, label blocks must
+/// close, and values must parse as finite f64. Returns the sample
+/// count (> 0, or the snapshot is vacuous and rejected).
+pub fn validate_prometheus(text: &str) -> Result<usize> {
+    let mut helped: Vec<String> = Vec::new();
+    let mut typed: Vec<String> = Vec::new();
+    let mut samples = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap_or("");
+            if !valid_metric_name(name) {
+                bail!("line {lineno}: HELP for invalid metric name '{name}'");
+            }
+            helped.push(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next().unwrap_or("");
+            let kind = parts.next().unwrap_or("");
+            if !valid_metric_name(name) {
+                bail!("line {lineno}: TYPE for invalid metric name '{name}'");
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                bail!("line {lineno}: unknown metric type '{kind}'");
+            }
+            typed.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+        // sample: name[{labels}] value
+        let (name, rest) = match line.find(['{', ' ']) {
+            Some(i) => line.split_at(i),
+            None => bail!("line {lineno}: sample without a value: '{line}'"),
+        };
+        if !valid_metric_name(name) {
+            bail!("line {lineno}: invalid metric name '{name}'");
+        }
+        if !helped.iter().any(|h| h == name) || !typed.iter().any(|t| t == name) {
+            bail!("line {lineno}: sample for '{name}' without preceding # HELP and # TYPE");
+        }
+        let value_part = if let Some(labels_rest) = rest.strip_prefix('{') {
+            let Some(close) = labels_rest.find('}') else {
+                bail!("line {lineno}: unclosed label block");
+            };
+            &labels_rest[close + 1..]
+        } else {
+            rest
+        };
+        let value = value_part.trim();
+        let parsed: f64 = value
+            .parse()
+            .with_context(|| format!("line {lineno}: sample value '{value}' is not a number"))?;
+        if !parsed.is_finite() {
+            bail!("line {lineno}: non-finite sample value '{value}'");
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        bail!("snapshot contains no samples");
+    }
+    Ok(samples)
+}
+
+/// Render, **self-validate**, then write the snapshot — a malformed
+/// exposition is an error before any bytes hit disk. Returns the
+/// sample count.
+pub fn write_prometheus(path: &Path, m: &FleetMetrics, straggler_factor: f64) -> Result<usize> {
+    let text = render_prometheus(m, straggler_factor);
+    let samples = validate_prometheus(&text)
+        .context("internal error: generated Prometheus snapshot failed self-validation")?;
+    std::fs::write(path, &text)
+        .with_context(|| format!("writing metrics snapshot {}", path.display()))?;
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node_span(node: u16, t0: Nanos, dur: Nanos) -> SpanEvent {
+        SpanEvent::new(SpanKind::NodeCompute, Track::Node(node), t0, dur)
+    }
+
+    fn link_span(link: u16, t0: Nanos, dur: Nanos, bytes: u64, base: u64) -> SpanEvent {
+        SpanEvent::new(SpanKind::LinkBusy, Track::Link(link), t0, dur).args(bytes, base, 0)
+    }
+
+    #[test]
+    fn aggregates_node_and_link_spans() {
+        let mut m = FleetMetrics::for_fleet(2, 2);
+        m.record(node_span(0, 0, 1_000));
+        m.record(node_span(0, 2_000, 500));
+        m.record(node_span(1, 1_000, 2_000));
+        m.record(link_span(0, 1_000, 5_000, 64, 5_000));
+        m.record(link_span(1, 6_000, 4_000, 32, 4_000));
+        assert_eq!(m.node_compute_ns(0), 1_500);
+        assert_eq!(m.node_spans(0), 2);
+        assert_eq!(m.node_compute_ns(1), 2_000);
+        assert_eq!(m.link_busy_ns(0), 5_000);
+        assert_eq!(m.link_bytes(0), 64);
+        assert_eq!(m.link_msgs(1), 1);
+        assert_eq!(m.link_base_ns(1), 4_000);
+        assert_eq!(m.elapsed_ns(), 10_000);
+        assert!((m.link_occupancy(0) - 0.5).abs() < 1e-9);
+        assert!((m.node_utilization(1) - 0.2).abs() < 1e-9);
+        // commit + round accounting
+        m.record(SpanEvent::new(SpanKind::Commit, Track::Seq(0), 10_000, 0).args(5, 4, 0));
+        assert_eq!(m.committed(), 5);
+        assert_eq!(m.accepted(), 4);
+    }
+
+    #[test]
+    fn ewma_initializes_exactly_then_tracks() {
+        let mut m = FleetMetrics::new();
+        m.record(link_span(0, 0, 10_000, 0, 10_000));
+        // first observation initializes directly — exact after round 1
+        assert_eq!(m.hop_estimate_ns(0), 10_000);
+        m.record(link_span(0, 0, 20_000, 0, 10_000));
+        // est = 10_000 + 0.2 * (20_000 - 10_000) = 12_000
+        assert_eq!(m.hop_estimate_ns(0), 12_000);
+        for _ in 0..200 {
+            m.record(link_span(0, 0, 20_000, 0, 10_000));
+        }
+        assert!(m.hop_estimate_ns(0) > 19_900, "EWMA must converge: {}", m.hop_estimate_ns(0));
+    }
+
+    #[test]
+    fn ewma_is_deterministic_across_instances() {
+        let obs = [7_000u64, 9_500, 8_250, 12_000, 7_750, 8_000, 11_500];
+        let mut a = FleetMetrics::new();
+        let mut b = FleetMetrics::new();
+        for &d in &obs {
+            a.record(link_span(0, 0, d, 0, 8_000));
+        }
+        for &d in &obs {
+            b.record(link_span(0, 0, d, 0, 8_000));
+        }
+        assert_eq!(a.hop_est_ns[0].to_bits(), b.hop_est_ns[0].to_bits(), "same stream ⇒ bit-identical estimate");
+    }
+
+    #[test]
+    fn link_estimate_requires_full_coverage() {
+        let mut m = FleetMetrics::for_fleet(3, 3);
+        m.record(link_span(0, 0, 2_000_000, 0, 2_000_000));
+        m.record(link_span(2, 0, 2_000_000, 0, 2_000_000));
+        assert!(m.link_estimate().is_none(), "half-seen fleet must not reprice");
+        m.record(link_span(1, 0, 40_000_000, 0, 2_000_000));
+        let est = m.link_estimate().expect("all links observed");
+        assert_eq!(est.len(), 3);
+        assert_eq!(est.hop_ns_at(1), 40_000_000);
+        assert_eq!(est.hop_ns_at(2), 2_000_000);
+    }
+
+    #[test]
+    fn straggler_flagging_uses_fleet_median() {
+        let mut m = FleetMetrics::for_fleet(4, 4);
+        for (link, ns) in [(0u16, 2_000_000u64), (1, 2_100_000), (2, 20_000_000), (3, 1_900_000)] {
+            m.record(link_span(link, 0, ns, 0, 2_000_000));
+        }
+        assert!(m.is_straggler(2, 3.0));
+        assert!(!m.is_straggler(0, 3.0));
+        assert!(!m.is_straggler(1, 3.0));
+        assert_eq!(m.straggler_links(3.0), vec![2]);
+        // a tight factor can flag mild outliers too; a huge one flags none
+        assert!(m.straggler_links(20.0).is_empty());
+        // out-of-range / unobserved links are never stragglers
+        assert!(!m.is_straggler(7, 3.0));
+    }
+
+    #[test]
+    fn drift_accumulates_from_round_spans() {
+        let mut m = FleetMetrics::new();
+        m.record(SpanEvent::new(SpanKind::Round, Track::Seq(0), 0, 50_000).args(4, 50_000, 0));
+        m.record(SpanEvent::new(SpanKind::Round, Track::Seq(0), 0, 52_000).args(4, 50_000, 0));
+        // predicted == 0 means "no prediction attached": counted as a
+        // round but not audited
+        m.record(SpanEvent::new(SpanKind::Round, Track::Seq(0), 0, 10_000).args(4, 0, 0));
+        assert_eq!(m.rounds(), 3);
+        assert_eq!(m.drift_rounds(), 2);
+        assert_eq!(m.drift_exact(), 1);
+        assert_eq!(m.drift_max_ns(), 2_000);
+        assert!((m.drift_mean_ns() - 1_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overflow_is_counted_not_grown() {
+        let mut m = FleetMetrics::new();
+        m.record(node_span(200, 0, 1_000));
+        m.record(link_span(200, 0, 1_000, 0, 0));
+        assert_eq!(m.overflow(), 2);
+        assert_eq!(m.n_nodes(), 0);
+        assert_eq!(m.n_links(), 0);
+    }
+
+    #[test]
+    fn clear_keeps_shape_and_resets_counters() {
+        let mut m = FleetMetrics::for_fleet(4, 4);
+        m.record(node_span(1, 0, 9_000));
+        m.record(link_span(1, 0, 9_000, 9, 9_000));
+        m.clear();
+        assert_eq!(m.n_nodes(), 4);
+        assert_eq!(m.n_links(), 4);
+        assert_eq!(m.node_compute_ns(1), 0);
+        assert_eq!(m.hop_samples(1), 0);
+        assert_eq!(m.elapsed_ns(), 0);
+    }
+
+    #[test]
+    fn prometheus_snapshot_self_validates() {
+        let mut m = FleetMetrics::for_fleet(3, 3);
+        for link in 0..3u16 {
+            m.record(node_span(link, 0, 1_000));
+            m.record(link_span(link, 0, 2_000_000, 128, 2_000_000));
+        }
+        m.record(SpanEvent::new(SpanKind::Round, Track::Seq(0), 0, 9_000).args(4, 9_000, 0));
+        let text = render_prometheus(&m, 3.0);
+        let samples = validate_prometheus(&text).expect("generated snapshot must validate");
+        // 9 per-link/per-node families × 3 slots + 8 scalar samples
+        assert!(samples >= 30, "sample count {samples}");
+        assert!(text.contains("dsd_link_hop_estimate_ns{link=\"1\"} 2000000"));
+        assert!(text.contains("dsd_rounds_total 1"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_snapshots() {
+        assert!(validate_prometheus("").is_err(), "empty snapshot is vacuous");
+        assert!(
+            validate_prometheus("dsd_x 1\n").is_err(),
+            "sample without HELP/TYPE must fail"
+        );
+        let no_type = "# HELP dsd_x help\ndsd_x 1\n";
+        assert!(validate_prometheus(no_type).is_err());
+        let bad_value = "# HELP dsd_x h\n# TYPE dsd_x gauge\ndsd_x abc\n";
+        assert!(validate_prometheus(bad_value).is_err());
+        let unclosed = "# HELP dsd_x h\n# TYPE dsd_x gauge\ndsd_x{link=\"0\" 1\n";
+        assert!(validate_prometheus(unclosed).is_err());
+        let bad_name = "# HELP 9dsd h\n# TYPE 9dsd gauge\n9dsd 1\n";
+        assert!(validate_prometheus(bad_name).is_err());
+        let ok = "# HELP dsd_x h\n# TYPE dsd_x gauge\ndsd_x{link=\"0\"} 1.5\n";
+        assert_eq!(validate_prometheus(ok).unwrap(), 1);
+    }
+
+    #[test]
+    fn write_prometheus_round_trips_through_disk() {
+        let mut m = FleetMetrics::for_fleet(2, 2);
+        m.record(link_span(0, 0, 1_000, 8, 1_000));
+        m.record(link_span(1, 0, 1_000, 8, 1_000));
+        let path = std::env::temp_dir().join("dsd_telemetry_test_metrics.prom");
+        let samples = write_prometheus(&path, &m, 3.0).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(validate_prometheus(&back).unwrap(), samples);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -170,6 +170,45 @@ fn steady_traced_round_is_allocation_free() {
 }
 
 #[test]
+fn steady_metered_round_is_allocation_free() {
+    // Fleet telemetry ON must not break the budget either: the metrics
+    // registry is a fixed-slot POD that aggregates spans with pure
+    // arithmetic, and the per-round calibration handoff
+    // (link_estimate -> recalibrate) is stack-only. This is the
+    // "metrics cost nothing in steady state" guarantee the operator
+    // surface leans on.
+    let _serial = measure_lock();
+    let cfg = OracleConfig {
+        controller: ControllerKind::CostOptimal,
+        calibrate: true,
+        seed: 19,
+        ..Default::default()
+    };
+    let mut dec = OracleChainDecoder::new(cfg, &PROMPT).unwrap();
+    let mut buf = OracleRound::default();
+    for _ in 0..WARMUP_ROUNDS {
+        dec.round_into(&mut buf);
+    }
+    dec.warm_capacity(16 * 1024);
+    buf.committed.reserve(64);
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            dec.round_into(&mut buf);
+        }
+    });
+    assert_eq!(
+        counts.allocs,
+        0,
+        "{MEASURED_ROUNDS} metered steady rounds performed {} allocations ({} bytes)",
+        counts.allocs,
+        counts.bytes
+    );
+    let m = dec.sim.metrics().expect("calibrate attached a registry");
+    assert!(m.rounds() > 0, "registry must have aggregated the measured rounds");
+    assert!(m.link_estimate().is_some(), "every link observed after warmup");
+}
+
+#[test]
 fn warmup_itself_is_the_only_allocator() {
     // Sanity for the budget's definition: the FIRST rounds do allocate
     // (growing the scratch to its high-water marks) — the budget is a

@@ -15,7 +15,7 @@
 //!   slower end-to-end.
 
 use dsd::cluster::{LinkModel, PipelineSim, Topology};
-use dsd::control::{clamp_gamma, ControllerKind, CostModel};
+use dsd::control::{clamp_gamma, ControllerKind, CostModel, HopCosts};
 use dsd::coordinator::{OracleChainDecoder, OracleConfig};
 use dsd::model::{KvCache, VerifyKnobs};
 use dsd::spec::DraftShape;
@@ -31,21 +31,20 @@ fn cost_for(nodes: usize, link_ms: f64, gbps: f64) -> CostModel {
         verify_per_node_ns: 2_000,
         fwd_bytes_per_token: 1024,
         ret_bytes_per_token: 256,
+        hops: HopCosts::uniform(),
     }
 }
 
-/// Drive a fresh simulator through exactly the round the cost model
-/// prices: leader-local drafting, one flattened window pass, leader-local
-/// verification. Returns the absolute finish time.
-fn measure_round(
-    nodes: usize,
-    link_ms: f64,
-    gbps: f64,
+/// Drive a fresh simulator over `topo` through exactly the round the
+/// cost model prices: leader-local drafting, one flattened window pass,
+/// leader-local verification. Returns the absolute finish time.
+fn measure_round_on(
+    topo: Topology,
     cost: &CostModel,
     window_nodes: usize,
     draft_steps: usize,
 ) -> u64 {
-    let topo = Topology::uniform(nodes, LinkModel::wan(link_ms, gbps));
+    let nodes = topo.n_nodes;
     let mut sim = PipelineSim::new(topo, 7);
     let per_stage = vec![cost.per_token_pass_ns / nodes as u64; nodes];
     let draft_done = sim.local_work(0, draft_steps as u64 * cost.draft_step_ns);
@@ -60,6 +59,19 @@ fn measure_round(
         t.finish,
         cost.verify_base_ns + window_nodes as u64 * cost.verify_per_node_ns,
     )
+}
+
+/// [`measure_round_on`] over a uniform topology.
+fn measure_round(
+    nodes: usize,
+    link_ms: f64,
+    gbps: f64,
+    cost: &CostModel,
+    window_nodes: usize,
+    draft_steps: usize,
+) -> u64 {
+    let topo = Topology::uniform(nodes, LinkModel::wan(link_ms, gbps));
+    measure_round_on(topo, cost, window_nodes, draft_steps)
 }
 
 #[test]
@@ -97,6 +109,50 @@ fn cost_model_matches_pipeline_sim_exactly() {
                 );
             }
         }
+    }
+}
+
+#[test]
+fn cost_model_matches_pipeline_sim_on_heterogeneous_chains() {
+    // The per-hop extension of the property above: a chain whose hops
+    // differ (an edge-cloud asymmetry, a straggler link) must still be
+    // priced exactly when the model carries the topology's hop table —
+    // and must NOT be priced exactly by the uniform-mean fallback, or
+    // the table would be dead weight.
+    let chains: &[&[(f64, f64)]] = &[
+        &[(1.0, 0.0), (10.0, 0.0), (1.0, 0.0)],
+        &[(5.0, 0.0), (40.0, 0.0), (5.0, 0.0)],
+        &[(2.0, 1.0), (20.0, 0.5), (2.0, 1.0)],
+        &[(0.5, 0.0), (15.0, 2.0)],
+    ];
+    for fwd in chains {
+        let links: Vec<LinkModel> =
+            fwd.iter().map(|&(ms, gbps)| LinkModel::wan(ms, gbps)).collect();
+        let topo = Topology::chain_from_forward(links);
+        let nodes = topo.n_nodes;
+        let mean_ms = fwd.iter().map(|&(ms, _)| ms).sum::<f64>() / fwd.len() as f64;
+        let mut cost = cost_for(nodes, mean_ms, 0.0);
+        cost.hops = HopCosts::from_topology(&topo);
+        for gamma in 1usize..=8 {
+            let window_nodes = DraftShape::Chain.max_nodes_or(gamma);
+            let draft_steps = CostModel::draft_steps(DraftShape::Chain, gamma);
+            let analytic = cost.round_time_ns(window_nodes, draft_steps);
+            let measured =
+                measure_round_on(topo.clone(), &cost, window_nodes, draft_steps);
+            assert_eq!(
+                analytic, measured,
+                "per-hop cost model drifted from the heterogeneous sim: γ={gamma} {fwd:?}"
+            );
+        }
+        // the uniform-scalar fallback misprices an asymmetric chain
+        let uniform = cost_for(nodes, mean_ms, 0.0);
+        let w = DraftShape::Chain.max_nodes_or(4);
+        let d = CostModel::draft_steps(DraftShape::Chain, 4);
+        assert_ne!(
+            uniform.round_time_ns(w, d),
+            measure_round_on(topo.clone(), &uniform, w, d),
+            "uniform pricing must miss on {fwd:?} — otherwise the hop table is vacuous"
+        );
     }
 }
 

@@ -88,6 +88,30 @@ fn exports_validate_and_jsonl_drift_round_trips() {
 }
 
 #[test]
+fn solo_drift_is_exactly_zero_on_heterogeneous_chains() {
+    // The drift-zero invariant is not a uniform-chain accident: with the
+    // cost model priced per hop from the same heterogeneous topology the
+    // sim deploys (one slow middle link), every solo jitter-free round
+    // still predicts to the nanosecond.
+    let cfg = OracleConfig {
+        link_ms_hops: vec![20.0, 40.0, 20.0],
+        seed: 3,
+        ..Default::default()
+    };
+    let mut dec = OracleChainDecoder::new(cfg, &PROMPT).unwrap();
+    dec.sim.set_tracer(RingTracer::with_capacity(1 << 14));
+    for _ in 0..30 {
+        dec.round();
+    }
+    let events = dec.sim.tracer().unwrap().to_vec();
+    validate_spans(&events).unwrap();
+    let rep = audit(events.iter());
+    assert_eq!(rep.rounds, 30);
+    assert!(rep.is_exact(), "heterogeneous solo chain must be exact: {rep:?}");
+    assert_eq!(rep.max_ns, 0);
+}
+
+#[test]
 fn single_member_fleet_traces_exactly() {
     let base = OracleConfig { seed: 5, ..Default::default() };
     let mut fleet = OracleFleet::new(&base, 1, &PROMPT).unwrap();

@@ -40,16 +40,22 @@ const SIM_TIME_ALLOWLIST: &[&str] = &[
 ];
 
 /// Modules whose committed token streams must be deterministic.
+/// `telemetry/` is here because its EWMA link estimates feed controller
+/// decisions (`--calibrate on`): ambient entropy or hash-order iteration
+/// in the registry would leak nondeterminism into committed streams.
 const COMMITTED_PREFIXES: &[&str] =
-    &["src/spec/", "src/sampling/", "src/coordinator/", "src/control/"];
+    &["src/spec/", "src/sampling/", "src/coordinator/", "src/control/", "src/telemetry/"];
 
-/// Modules the hot-path roots may live in.
+/// Modules the hot-path roots may live in. `telemetry/` records a span
+/// per hot-path event (`FleetMetrics` is a `TraceSink`), so its
+/// recording methods are walked like any other round-loop callee.
 const HOT_ROOT_PREFIXES: &[&str] = &[
     "src/sampling/",
     "src/spec/",
     "src/coordinator/",
     "src/model/",
     "src/cluster/",
+    "src/telemetry/",
 ];
 
 /// Round-loop roots beyond the `*_into` / `*_with` naming pattern.
@@ -1075,6 +1081,34 @@ mod tests {
         assert_eq!(r.diags.len(), 1);
         assert!(r.diags[0].msg.contains("commit_into -> helper"), "{}", r.diags[0].msg);
         assert!(r.diags[0].msg.contains("Vec::new"));
+    }
+
+    #[test]
+    fn telemetry_is_a_committed_stream_module() {
+        // The registry's estimates feed controller decisions, so
+        // ambient entropy and hash-order iteration are violations there.
+        let rng = one_file("src/telemetry/mod.rs", "fn f() -> u64 { thread_rng() }");
+        assert!(!analyze(&rng, None).is_clean());
+        let iter = one_file(
+            "src/telemetry/mod.rs",
+            "fn f(m: &HashMap<u32, u32>) -> usize { m.iter().count() }",
+        );
+        assert!(!analyze(&iter, None).is_clean());
+    }
+
+    #[test]
+    fn telemetry_hot_roots_are_walked_for_allocations() {
+        // FleetMetrics records on the round loop's span path: an
+        // allocating construct reachable from a telemetry hot root must
+        // be flagged like one in coordinator/.
+        let src = "pub fn record_into(acc: &mut u64) { let v = Vec::new(); *acc += v.len() as u64; }\n";
+        let r = analyze(&one_file("src/telemetry/mod.rs", src), None);
+        assert_eq!(r.diags.len(), 1);
+        assert_eq!(r.diags[0].rule, "hot-path-alloc");
+        assert!(r.diags[0].msg.contains("Vec::new"), "{}", r.diags[0].msg);
+        // pure fixed-slot arithmetic (the real registry's shape) is clean
+        let ok = "pub fn record_into(acc: &mut [u64; 4], i: usize, v: u64) { acc[i % 4] += v; }\n";
+        assert!(analyze(&one_file("src/telemetry/mod.rs", ok), None).is_clean());
     }
 
     #[test]
