@@ -18,14 +18,25 @@
 //! run only when `artifacts/` exists; a bare checkout measures the
 //! engine-free substrate and the oracle round loop.
 //!
-//! Always writes `BENCH_hotpath.json` (uploaded as a CI artifact with
-//! the other `BENCH_*.json` files) before exiting, pass or fail.
+//! The **vectorized kernel suite** section benches the lane-chunked
+//! `dsd::kernels` forms against the pre-vectorization scalar kernels
+//! (kept verbatim in `legacy` below) across vocab sizes, reporting
+//! per-kernel ns AND effective GB/s (`analysis::roofline::host_row_bytes`
+//! task bytes / elapsed ns), and writes `BENCH_kernels.json`. It is a
+//! second **blocking** gate: the fused verify row must be ≥ 1.5× the
+//! legacy scalar path at vocab ≥ 32k.
+//!
+//! Always writes `BENCH_hotpath.json` and `BENCH_kernels.json` (uploaded
+//! as CI artifacts with the other `BENCH_*.json` files) before exiting,
+//! pass or fail.
 
+use dsd::analysis::roofline::{effective_gbps, host_row_bytes};
 use dsd::cluster::{LinkModel, PipelineSim, Topology};
 use dsd::control::ControllerKind;
 use dsd::coordinator::{
     next_action, OracleChainDecoder, OracleConfig, OracleFleet, OracleRound, SeqView,
 };
+use dsd::kernels;
 use dsd::model::{KvCache, ShardedModel, StageInput, VerifyKnobs, VerifyOutcome};
 use dsd::runtime::Engine;
 use dsd::sampling::{
@@ -38,15 +49,87 @@ use dsd::util::bench::{bench, write_bench_json, BenchResult};
 use dsd::util::json::Value;
 use dsd::util::rng::Rng;
 use dsd::util::scratch::VerifyScratch;
+use std::hint::black_box;
 
-/// The pre-scratch kernels, kept verbatim so "before" is measured in the
-/// same binary as "after" (EXPERIMENTS.md §Perf) — reference only, the
-/// library no longer ships them.
+/// The pre-vectorization kernels, kept verbatim so "before" is measured
+/// in the same binary as "after" (EXPERIMENTS.md §Perf) — reference
+/// only, the library no longer ships them. Everything here is the
+/// scalar form, including its own softmax/argmax/overlap/CDF copies:
+/// `dsd::sampling` now routes through `dsd::kernels`, so importing it
+/// would benchmark the new code against itself.
 mod legacy {
     use dsd::model::{VerifyKnobs, VerifyOutcome};
-    use dsd::sampling::{argmax, overlap, sample_cdf, softmax};
 
     const EPS: f32 = 1e-9;
+
+    /// Scalar sequential softmax (entropy fused), the pre-kernel
+    /// `sampling::softmax`.
+    pub fn softmax(logits: &[f32], out: &mut Vec<f32>) -> f32 {
+        out.clear();
+        out.reserve(logits.len());
+        let mut max = f32::NEG_INFINITY;
+        for &x in logits {
+            max = max.max(x);
+        }
+        let mut sum = 0f32;
+        for &x in logits {
+            let e = (x - max).exp();
+            out.push(e);
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        let mut entropy = 0f32;
+        for p in out.iter_mut() {
+            *p *= inv;
+            if *p > 0.0 {
+                entropy -= *p * p.ln();
+            }
+        }
+        entropy
+    }
+
+    pub fn argmax(xs: &[f32]) -> usize {
+        let mut best = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in xs.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn sample_cdf(probs: &[f32], u: f32) -> usize {
+        let mut cdf = 0f32;
+        let mut idx = 0usize;
+        for &p in probs {
+            cdf += p;
+            if cdf <= u {
+                idx += 1;
+            } else {
+                break;
+            }
+        }
+        idx.min(probs.len() - 1)
+    }
+
+    pub fn overlap(p: &[f32], q: &[f32]) -> f32 {
+        p.iter().zip(q).map(|(&a, &b)| a.min(b)).sum()
+    }
+
+    /// The scalar residual-correction resample: materialize the residual,
+    /// sum sequentially, normalize, then walk.
+    pub fn residual_sample(mix: &[f32], pd: &[f32], u: f32) -> usize {
+        let mut resid: Vec<f32> = mix.iter().zip(pd).map(|(&m, &p)| (m - p).max(0.0)).collect();
+        let mass: f32 = resid.iter().sum();
+        if mass > EPS {
+            resid.iter_mut().for_each(|r| *r /= mass);
+            sample_cdf(&resid, u)
+        } else {
+            sample_cdf(mix, u)
+        }
+    }
 
     pub fn top_k_filter(logits: &mut [f32], k: usize) {
         if k == 0 || k >= logits.len() {
@@ -368,6 +451,185 @@ fn main() -> anyhow::Result<()> {
     });
     record(r, &mut results);
 
+    // ---------- vectorized kernel suite: legacy scalar vs dsd::kernels ----------
+    // Per-kernel before/after at small and large vocabs, scored in both
+    // ns and effective GB/s over the task's byte footprint. The fused
+    // verify row is the gated kernel: >= 1.5x at vocab >= 32k, blocking.
+    const KERNEL_GATE_MIN_SPEEDUP: f64 = 1.5;
+    const KERNEL_GATE_MIN_VOCAB: usize = 32_768;
+    println!("\n# kernel suite (legacy scalar vs vectorized)\n");
+    let mut kernel_suite: Vec<Value> = Vec::new();
+    let mut kernel_gate_failures: Vec<String> = Vec::new();
+
+    #[allow(clippy::too_many_arguments)]
+    fn suite_record(
+        kernel: &str,
+        vocab: usize,
+        rows: f64,
+        bytes: f64,
+        legacy_r: &BenchResult,
+        new_r: &BenchResult,
+        suite: &mut Vec<Value>,
+    ) -> f64 {
+        let speedup = legacy_r.p50_ns / new_r.p50_ns;
+        println!(
+            "{kernel:<16} V={vocab:<7} legacy {:>10.0} ns ({:>6.2} GB/s)  vectorized \
+             {:>10.0} ns ({:>6.2} GB/s)  {speedup:.2}x",
+            legacy_r.p50_ns,
+            effective_gbps(bytes, legacy_r.p50_ns),
+            new_r.p50_ns,
+            effective_gbps(bytes, new_r.p50_ns),
+        );
+        suite.push(Value::obj(&[
+            ("kernel", kernel.into()),
+            ("vocab", (vocab as u64).into()),
+            ("legacy_p50_ns", legacy_r.p50_ns.into()),
+            ("vectorized_p50_ns", new_r.p50_ns.into()),
+            ("legacy_ns_per_row", (legacy_r.p50_ns / rows).into()),
+            ("vectorized_ns_per_row", (new_r.p50_ns / rows).into()),
+            ("task_bytes", bytes.into()),
+            ("legacy_gbps", effective_gbps(bytes, legacy_r.p50_ns).into()),
+            ("vectorized_gbps", effective_gbps(bytes, new_r.p50_ns).into()),
+            ("speedup", speedup.into()),
+        ]));
+        speedup
+    }
+
+    for (kvocab, kiters) in [(4096usize, 120u64), (KERNEL_GATE_MIN_VOCAB, 16), (131_072, 6)] {
+        let kgamma = 4usize;
+        let mut rng = Rng::new(5);
+        let kt: Vec<f32> = (0..(kgamma + 1) * kvocab).map(|_| rng.normal() as f32 * 2.0).collect();
+        let kd: Vec<f32> = (0..kgamma * kvocab)
+            .enumerate()
+            .map(|(i, _)| 0.7 * kt[i] + 0.3 * rng.normal() as f32 * 2.0)
+            .collect();
+        let ktoks: Vec<i32> = (0..kgamma).map(|_| rng.below(kvocab as u64) as i32).collect();
+        let kua: Vec<f32> = (0..kgamma).map(|_| rng.f32()).collect();
+        let kus: Vec<f32> = (0..=kgamma).map(|_| rng.f32()).collect();
+        let kknobs =
+            VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
+
+        // fused verify row (the gated kernel): per row, reads the target
+        // + draft logit rows, writes the mixture + draft distributions.
+        let legacy_r = bench(&format!("verify legacy V={kvocab}"), 1, kiters, || {
+            let _ = legacy::host_verify(kgamma, kvocab, &kt, &kd, &ktoks, &kua, &kus, kknobs);
+        });
+        let mut kvs = VerifyScratch::default();
+        let mut kvout = VerifyOutcome::default();
+        let new_r = bench(&format!("verify fused V={kvocab}"), 1, kiters, || {
+            host_verify_with(
+                kgamma,
+                kvocab,
+                &kt,
+                &kd,
+                &ktoks,
+                &kua,
+                &kus,
+                kknobs,
+                &mut kvs,
+                &mut kvout,
+            );
+        });
+        let verify_bytes = kgamma as f64 * host_row_bytes(kvocab, 2, 2);
+        let speedup = suite_record(
+            "verify_row",
+            kvocab,
+            kgamma as f64,
+            verify_bytes,
+            &legacy_r,
+            &new_r,
+            &mut kernel_suite,
+        );
+        if kvocab >= KERNEL_GATE_MIN_VOCAB && speedup < KERNEL_GATE_MIN_SPEEDUP {
+            kernel_gate_failures.push(format!(
+                "fused verify row at V={kvocab}: {speedup:.2}x < {KERNEL_GATE_MIN_SPEEDUP}x \
+                 over legacy scalar"
+            ));
+        }
+
+        // softmax row (entropy fused): one row read, one written.
+        let krow = &kt[..kvocab];
+        let mut kout = Vec::new();
+        let legacy_r = bench(&format!("softmax legacy V={kvocab}"), 1, kiters, || {
+            let _ = black_box(legacy::softmax(krow, &mut kout));
+        });
+        let mut kout2 = Vec::new();
+        let new_r = bench(&format!("softmax lanes V={kvocab}"), 1, kiters, || {
+            let _ = black_box(kernels::softmax_entropy_into(krow, 1.0, &mut kout2));
+        });
+        suite_record(
+            "softmax",
+            kvocab,
+            1.0,
+            host_row_bytes(kvocab, 1, 1),
+            &legacy_r,
+            &new_r,
+            &mut kernel_suite,
+        );
+
+        // argmax: one row read.
+        let legacy_r = bench(&format!("argmax legacy V={kvocab}"), 1, kiters * 4, || {
+            let _ = black_box(legacy::argmax(krow));
+        });
+        let new_r = bench(&format!("argmax lanes V={kvocab}"), 1, kiters * 4, || {
+            let _ = black_box(kernels::argmax(krow));
+        });
+        suite_record(
+            "argmax",
+            kvocab,
+            1.0,
+            host_row_bytes(kvocab, 1, 0),
+            &legacy_r,
+            &new_r,
+            &mut kernel_suite,
+        );
+
+        // top-k threshold selection + mask: one row read + rewritten.
+        let mut kwork = krow.to_vec();
+        let legacy_r = bench(&format!("top_k legacy V={kvocab}"), 1, kiters, || {
+            kwork.copy_from_slice(krow);
+            legacy::top_k_filter(&mut kwork, 50);
+        });
+        let mut ksel = Vec::new();
+        let new_r = bench(&format!("top_k select V={kvocab}"), 1, kiters, || {
+            kwork.copy_from_slice(krow);
+            top_k_filter_with(&mut kwork, 50, &mut ksel);
+        });
+        suite_record(
+            "top_k",
+            kvocab,
+            1.0,
+            host_row_bytes(kvocab, 1, 1),
+            &legacy_r,
+            &new_r,
+            &mut kernel_suite,
+        );
+
+        // residual-correction resample: reads mixture + draft rows,
+        // writes the residual row.
+        let mut kmix = Vec::new();
+        let mut kpd = Vec::new();
+        legacy::softmax(krow, &mut kmix);
+        legacy::softmax(&kd[..kvocab], &mut kpd);
+        let legacy_r = bench(&format!("residual legacy V={kvocab}"), 1, kiters, || {
+            let _ = black_box(legacy::residual_sample(&kmix, &kpd, 0.37));
+        });
+        let mut kresid = Vec::new();
+        let new_r = bench(&format!("residual fused V={kvocab}"), 1, kiters, || {
+            let _ = black_box(kernels::residual_sample(&kmix, &kpd, 0.37, 1e-9, &mut kresid));
+        });
+        suite_record(
+            "residual",
+            kvocab,
+            1.0,
+            host_row_bytes(kvocab, 2, 1),
+            &legacy_r,
+            &new_r,
+            &mut kernel_suite,
+        );
+    }
+    println!();
+
     // ---------- substrate ----------
     let topo = Topology::uniform(8, LinkModel::wan(15.0, 1.0));
     let mut sim = PipelineSim::new(topo, 3);
@@ -489,6 +751,18 @@ fn main() -> anyhow::Result<()> {
     let path = write_bench_json("hotpath", &Value::obj(&fields))?;
     println!("\nwrote {}", path.display());
 
+    // Kernel-suite JSON is written unconditionally BEFORE either gate can
+    // exit, so a failing run still uploads its evidence as a CI artifact.
+    let kfields: Vec<(&str, Value)> = vec![
+        ("bench", "kernels".into()),
+        ("gate_min_speedup", KERNEL_GATE_MIN_SPEEDUP.into()),
+        ("gate_min_vocab", (KERNEL_GATE_MIN_VOCAB as u64).into()),
+        ("kernels", kernel_suite.into()),
+        ("gate_failures", (kernel_gate_failures.len() as u64).into()),
+    ];
+    let kpath = write_bench_json("kernels", &Value::obj(&kfields))?;
+    println!("wrote {}", kpath.display());
+
     if !alloc_counter::enabled() {
         println!("(alloc-count feature off — allocation budget not enforced this run)");
     } else if budget_violations.is_empty() {
@@ -496,6 +770,19 @@ fn main() -> anyhow::Result<()> {
     } else {
         eprintln!("ALLOCATION BUDGET REGRESSION:");
         for v in &budget_violations {
+            eprintln!("  {v}");
+        }
+        std::process::exit(1);
+    }
+
+    if kernel_gate_failures.is_empty() {
+        println!(
+            "kernel gate OK: fused verify row >= {KERNEL_GATE_MIN_SPEEDUP}x legacy at \
+             vocab >= {KERNEL_GATE_MIN_VOCAB}"
+        );
+    } else {
+        eprintln!("KERNEL SPEEDUP REGRESSION:");
+        for v in &kernel_gate_failures {
             eprintln!("  {v}");
         }
         std::process::exit(1);

@@ -105,6 +105,26 @@ pub fn transformer_window_flops(dims: &ModelDims, w: usize, context: usize) -> f
     l * per_layer + w * 2.0 * d * v // unembed
 }
 
+/// Effective bytes one host distribution kernel touches: `rows_read`
+/// vocab-length f32 rows read plus `rows_written` written — the traffic
+/// the *task* requires, not the traffic an implementation happens to
+/// generate, so legacy and vectorized forms of the same kernel are
+/// scored against the same byte count (`benches/hotpath.rs` kernel
+/// suite).
+pub fn host_row_bytes(vocab: usize, rows_read: usize, rows_written: usize) -> f64 {
+    (vocab * 4 * (rows_read + rows_written)) as f64
+}
+
+/// Effective bandwidth in GB/s from bytes touched and elapsed
+/// nanoseconds (1 GB = 1e9 bytes, so bytes/ns IS GB/s exactly).
+pub fn effective_gbps(bytes: f64, ns: f64) -> f64 {
+    if ns <= 0.0 {
+        0.0
+    } else {
+        bytes / ns
+    }
+}
+
 /// Bytes moved: weights once per pass + KV history + activations.
 pub fn transformer_window_bytes(dims: &ModelDims, w: usize, context: usize) -> f64 {
     let d = dims.d_model as f64;
@@ -165,6 +185,17 @@ mod tests {
         for w in pts.windows(2) {
             assert!(w[1].intensity > w[0].intensity, "{w:?}");
         }
+    }
+
+    #[test]
+    fn host_row_bytes_and_gbps_are_exact() {
+        // one 32k-vocab row read + one written = 256 KiB
+        let b = host_row_bytes(32768, 1, 1);
+        assert_eq!(b, 262144.0);
+        // 256 KiB in 262144 ns = exactly 1 GB/s (bytes/ns)
+        assert_eq!(effective_gbps(b, 262144.0), 1.0);
+        assert_eq!(effective_gbps(b, 0.0), 0.0);
+        assert_eq!(host_row_bytes(100, 2, 1), 1200.0);
     }
 
     #[test]

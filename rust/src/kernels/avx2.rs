@@ -1,0 +1,246 @@
+//! AVX2 twins of the pure-arithmetic portable primitives
+//! (`simd-intrinsics` feature, runtime-detected by the dispatchers in
+//! `super`). Each function replays the portable lane structure exactly:
+//! the same eight per-lane accumulators in the same chunk order, the
+//! same scalar tail folded into lanes `0..tail_len`, the same fixed
+//! combine tree — and the tie conventions of `_mm256_max_ps`/
+//! `_mm256_min_ps` are what the portable `fmax`/`fmin` encode in the
+//! first place. mul+add is never contracted into an FMA. The result is
+//! bit-identical output (pinned by the gated differential test in
+//! `super::tests`), which is what lets the feature be flipped on
+//! without re-pinning a single committed stream.
+//!
+//! `exp`/`ln` passes have no twin here: transcendentals stay on the
+//! shared scalar `std` path in every backend (see `super::portable`).
+
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_min_ps, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+use super::portable::{fmax, fmin, tree8_max, tree8_sum};
+use super::LANES;
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scaled_max(xs: &[f32], inv_temp: f32) -> f32 {
+    let n = xs.len();
+    let main = n - n % LANES;
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    let ptr = xs.as_ptr();
+    let mut i = 0;
+    if inv_temp == 1.0 {
+        while i < main {
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(ptr.add(i)));
+            i += LANES;
+        }
+    } else {
+        let vt = _mm256_set1_ps(inv_temp);
+        while i < main {
+            acc = _mm256_max_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(ptr.add(i)), vt));
+            i += LANES;
+        }
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, &x) in xs[main..].iter().enumerate() {
+        let v = if inv_temp == 1.0 { x } else { x * inv_temp };
+        lanes[l] = fmax(lanes[l], v);
+    }
+    tree8_max(&lanes)
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scale_into(xs: &[f32], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let n = xs.len();
+    let main = n - n % LANES;
+    let vs = _mm256_set1_ps(scale);
+    let xp = xs.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        _mm256_storeu_ps(op.add(i), _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), vs));
+        i += LANES;
+    }
+    for (o, &x) in out[main..].iter_mut().zip(&xs[main..]) {
+        *o = x * scale;
+    }
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scale_inplace(xs: &mut [f32], scale: f32) {
+    let n = xs.len();
+    let main = n - n % LANES;
+    let vs = _mm256_set1_ps(scale);
+    let p = xs.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        _mm256_storeu_ps(p.add(i), _mm256_mul_ps(_mm256_loadu_ps(p.add(i)), vs));
+        i += LANES;
+    }
+    for x in &mut xs[main..] {
+        *x *= scale;
+    }
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn normalize_overlap(et: &[f32], ed: &mut [f32], inv_t: f32, inv_d: f32) -> f32 {
+    debug_assert_eq!(et.len(), ed.len());
+    let n = ed.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut acc = _mm256_set1_ps(0.0);
+    let vt = _mm256_set1_ps(inv_t);
+    let vd = _mm256_set1_ps(inv_d);
+    let ep = et.as_ptr();
+    let dp = ed.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        let p = _mm256_mul_ps(_mm256_loadu_ps(ep.add(i)), vt);
+        let q = _mm256_mul_ps(_mm256_loadu_ps(dp.add(i)), vd);
+        _mm256_storeu_ps(dp.add(i), q);
+        acc = _mm256_add_ps(acc, _mm256_min_ps(p, q));
+        i += LANES;
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, (&e, d)) in et[main..].iter().zip(ed[main..].iter_mut()).enumerate() {
+        let p = e * inv_t;
+        let q = *d * inv_d;
+        *d = q;
+        lanes[l] += fmin(p, q);
+    }
+    tree8_sum(&lanes)
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn blend_scaled_max(
+    ts: &[f32],
+    ds: &[f32],
+    inv_temp: f32,
+    tau: f32,
+    out: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(ts.len(), out.len());
+    debug_assert_eq!(ds.len(), out.len());
+    let w_t = 1.0 - tau;
+    let n = out.len();
+    let main = n - n % LANES;
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    let vw = _mm256_set1_ps(w_t);
+    let vtau = _mm256_set1_ps(tau);
+    let tp = ts.as_ptr();
+    let dp = ds.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut i = 0;
+    if inv_temp == 1.0 {
+        while i < main {
+            let b = _mm256_add_ps(
+                _mm256_mul_ps(vw, _mm256_loadu_ps(tp.add(i))),
+                _mm256_mul_ps(vtau, _mm256_loadu_ps(dp.add(i))),
+            );
+            _mm256_storeu_ps(op.add(i), b);
+            acc = _mm256_max_ps(acc, b);
+            i += LANES;
+        }
+    } else {
+        let vit = _mm256_set1_ps(inv_temp);
+        while i < main {
+            let b = _mm256_add_ps(
+                _mm256_mul_ps(vw, _mm256_mul_ps(_mm256_loadu_ps(tp.add(i)), vit)),
+                _mm256_mul_ps(vtau, _mm256_mul_ps(_mm256_loadu_ps(dp.add(i)), vit)),
+            );
+            _mm256_storeu_ps(op.add(i), b);
+            acc = _mm256_max_ps(acc, b);
+            i += LANES;
+        }
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, ((&t, &d), o)) in ts[main..]
+        .iter()
+        .zip(&ds[main..])
+        .zip(out[main..].iter_mut())
+        .enumerate()
+    {
+        let b = if inv_temp == 1.0 {
+            w_t * t + tau * d
+        } else {
+            w_t * (t * inv_temp) + tau * (d * inv_temp)
+        };
+        *o = b;
+        lanes[l] = fmax(lanes[l], b);
+    }
+    tree8_max(&lanes)
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn residual_mass_into(mix: &[f32], pd: &[f32], resid: &mut [f32]) -> f32 {
+    debug_assert_eq!(mix.len(), resid.len());
+    debug_assert_eq!(pd.len(), resid.len());
+    let n = resid.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut acc = _mm256_set1_ps(0.0);
+    let zero = _mm256_set1_ps(0.0);
+    let mp = mix.as_ptr();
+    let pp = pd.as_ptr();
+    let rp = resid.as_mut_ptr();
+    let mut i = 0;
+    while i < main {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(mp.add(i)), _mm256_loadu_ps(pp.add(i)));
+        let r = _mm256_max_ps(d, zero);
+        _mm256_storeu_ps(rp.add(i), r);
+        acc = _mm256_add_ps(acc, r);
+        i += LANES;
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, ((&m, &p), r)) in mix[main..]
+        .iter()
+        .zip(&pd[main..])
+        .zip(resid[main..].iter_mut())
+        .enumerate()
+    {
+        let rr = fmax(m - p, 0.0);
+        *r = rr;
+        lanes[l] += rr;
+    }
+    tree8_sum(&lanes)
+}
+
+/// # Safety
+/// AVX2 must be available (the dispatcher runtime-detects it).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn min_overlap(p: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(p.len(), q.len());
+    let n = p.len();
+    let main = n - n % LANES;
+    let mut lanes = [0.0f32; LANES];
+    let mut acc = _mm256_set1_ps(0.0);
+    let pp = p.as_ptr();
+    let qp = q.as_ptr();
+    let mut i = 0;
+    while i < main {
+        acc = _mm256_add_ps(
+            acc,
+            _mm256_min_ps(_mm256_loadu_ps(pp.add(i)), _mm256_loadu_ps(qp.add(i))),
+        );
+        i += LANES;
+    }
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for (l, (&a, &b)) in p[main..].iter().zip(&q[main..]).enumerate() {
+        lanes[l] += fmin(a, b);
+    }
+    tree8_sum(&lanes)
+}

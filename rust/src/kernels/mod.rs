@@ -1,0 +1,853 @@
+//! Lane-chunked vectorized host kernels — the ONE canonical
+//! implementation of the hot distribution ops: temperature-scaled
+//! softmax rows, the fused verify-row statistics (`p_t`/`p_d`/overlap/
+//! entropies), the Eq. 8 mixture blend, argmax / top-k masking, the
+//! residual-correction resample, and the CDF inversion walk.
+//! `spec::reference`, `spec::tree`, and `sampling` all route through
+//! this module, so every committed-stream differential (overlap ≡
+//! sequential, real ≡ sim, fused ≡ solo, chain ≡ tree) compares streams
+//! produced by the same arithmetic — determinism requires the kernel be
+//! everywhere the *same*, not everywhere scalar.
+//!
+//! ## Determinism policy
+//!
+//! * **Fixed width, fixed tree.** Reductions run `LANES` = 8
+//!   independent per-lane accumulators (tail folded into lanes
+//!   `0..len%8`) combined by the fixed tree
+//!   `((l0⊕l1)⊕(l2⊕l3)) ⊕ ((l4⊕l5)⊕(l6⊕l7))` — the association order
+//!   is part of the kernel contract, never a codegen accident.
+//! * **Bit-identical where nothing is reassociated**: argmax, top-k
+//!   keep-sets, max reductions, and element-wise passes reproduce the
+//!   scalar reference exactly (pinned in `tests`).
+//! * **Ulp-equivalent where sums are re-treed**: softmax/overlap/mass
+//!   sums change association once — from the historical sequential
+//!   order to the lane tree — and the accept/reject *decisions* driven
+//!   by them are pinned identical on the differential corpora. Byte
+//!   pins (e.g. chain ≡ branching-1 tree) stay byte pins because both
+//!   sides call the identical kernel sequence.
+//! * **Scalar transcendentals.** `exp`/`ln` always go through `std`;
+//!   the fused kernels issue *fewer* of them (the mixture uses softmax
+//!   shift-invariance to skip every per-element `ln`), not vectorized
+//!   approximations of them.
+//! * **Optional intrinsics, same bits.** The `simd-intrinsics` feature
+//!   adds runtime-detected AVX2 twins ([`avx2`]) for the pure-arithmetic
+//!   passes, bit-identical to the portable forms by construction
+//!   (same lane structure, `_mm256_max_ps`/`_mm256_min_ps` tie
+//!   conventions baked into the portable `fmax`/`fmin`, no FMA
+//!   contraction) and by gated differential test.
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod avx2;
+mod portable;
+
+/// Fixed vector width: 8 f32 lanes (one AVX2 register).
+pub const LANES: usize = 8;
+
+/// Epsilon guard for the verify-row entropy statistics
+/// (`h = −ln(p + ε)`), shared with `spec::reference`.
+const STAT_EPS: f32 = 1e-9;
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+#[inline]
+fn avx2_enabled() -> bool {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    static STATE: AtomicU8 = AtomicU8::new(0);
+    match STATE.load(Ordering::Relaxed) {
+        0 => {
+            let ok = std::is_x86_feature_detected!("avx2");
+            STATE.store(if ok { 2 } else { 1 }, Ordering::Relaxed);
+            ok
+        }
+        s => s == 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched primitives (portable everywhere; AVX2 twin when the
+// `simd-intrinsics` feature is on and the CPU has it — same bits).
+// ---------------------------------------------------------------------------
+
+/// Max of `xs[i] · inv_temp` under the fixed lane tree. The multiply is
+/// skipped when `inv_temp == 1.0` (`x · 1.0` is a bitwise identity for
+/// non-NaN inputs — pinned by `times_one_is_bitwise_identity`).
+pub fn scaled_max(xs: &[f32], inv_temp: f32) -> f32 {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::scaled_max(xs, inv_temp) };
+    }
+    portable::scaled_max(xs, inv_temp)
+}
+
+/// `out[i] = xs[i] · scale`.
+pub fn scale_into(xs: &[f32], scale: f32, out: &mut [f32]) {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::scale_into(xs, scale, out) };
+    }
+    portable::scale_into(xs, scale, out)
+}
+
+/// `xs[i] *= scale` in place.
+pub fn scale_inplace(xs: &mut [f32], scale: f32) {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::scale_inplace(xs, scale) };
+    }
+    portable::scale_inplace(xs, scale)
+}
+
+/// Fused `p_d` normalization + distribution overlap: `ed[i] *= inv_d`
+/// in place, returns `Σ min(et[i]·inv_t, ed[i]·inv_d)` under the lane
+/// tree. The target distribution is never materialized — `et` stays
+/// the raw exponential row.
+pub fn normalize_overlap(et: &[f32], ed: &mut [f32], inv_t: f32, inv_d: f32) -> f32 {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::normalize_overlap(et, ed, inv_t, inv_d) };
+    }
+    portable::normalize_overlap(et, ed, inv_t, inv_d)
+}
+
+/// `out[i] = (1−τ)·(ts[i]·inv_temp) + τ·(ds[i]·inv_temp)`; returns the
+/// lane-treed max (the Eq. 8 mixture in scaled-logit space).
+pub fn blend_scaled_max(ts: &[f32], ds: &[f32], inv_temp: f32, tau: f32, out: &mut [f32]) -> f32 {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::blend_scaled_max(ts, ds, inv_temp, tau, out) };
+    }
+    portable::blend_scaled_max(ts, ds, inv_temp, tau, out)
+}
+
+/// `resid[i] = max(mix[i] − pd[i], 0)`; returns the lane-treed mass.
+pub fn residual_mass_into(mix: &[f32], pd: &[f32], resid: &mut [f32]) -> f32 {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::residual_mass_into(mix, pd, resid) };
+    }
+    portable::residual_mass_into(mix, pd, resid)
+}
+
+/// `Σ min(p[i], q[i])` under the lane tree (`sampling::overlap`).
+pub fn min_overlap(p: &[f32], q: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    if avx2_enabled() {
+        // SAFETY: AVX2 presence runtime-detected above.
+        return unsafe { avx2::min_overlap(p, q) };
+    }
+    portable::min_overlap(p, q)
+}
+
+// ---------------------------------------------------------------------------
+// Selection kernels (portable only — no floating-point reassociation,
+// bit-identical to the scalar references by construction).
+// ---------------------------------------------------------------------------
+
+/// Lane-chunked first-index argmax over `f(0..n)`: per-lane best value
+/// + earliest achieving index, combined smallest-index-wins on ties —
+/// exactly the scalar first-wins strict-`>` scan for non-NaN rows.
+#[inline]
+fn argmax_of(n: usize, f: impl Fn(usize) -> f32) -> usize {
+    if n < LANES {
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for i in 0..n {
+            let x = f(i);
+            if x > bv {
+                bv = x;
+                best = i;
+            }
+        }
+        return best;
+    }
+    let main = n - n % LANES;
+    let mut bv = [0.0f32; LANES];
+    let mut bi = [0usize; LANES];
+    for (l, (v, s)) in bv.iter_mut().zip(bi.iter_mut()).enumerate() {
+        *v = f(l);
+        *s = l;
+    }
+    let mut base = LANES;
+    while base < main {
+        for l in 0..LANES {
+            let x = f(base + l);
+            if x > bv[l] {
+                bv[l] = x;
+                bi[l] = base + l;
+            }
+        }
+        base += LANES;
+    }
+    let mut best = bi[0];
+    let mut bvv = bv[0];
+    for l in 1..LANES {
+        if bv[l] > bvv || (bv[l] == bvv && bi[l] < best) {
+            bvv = bv[l];
+            best = bi[l];
+        }
+    }
+    for i in main..n {
+        let x = f(i);
+        if x > bvv {
+            bvv = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// First-index argmax (strict `>`), identical to the scalar reference
+/// for non-NaN rows; all-`-inf` rows return 0, like the scalar form.
+pub fn argmax(xs: &[f32]) -> usize {
+    argmax_of(xs.len(), |i| xs[i])
+}
+
+/// Greedy-path argmax of the raw-logit blend `(1−τ)·t + τ·d`, computed
+/// on the fly — the blended row is never materialized. τ = 0 reduces to
+/// `argmax(ts)`: the explicit `1·t + 0·d` blend can differ from `t`
+/// only in the sign of zeros, which argmax cannot observe.
+pub fn blend_argmax(ts: &[f32], ds: &[f32], tau: f32) -> usize {
+    debug_assert_eq!(ts.len(), ds.len());
+    if tau == 0.0 {
+        return argmax(ts);
+    }
+    let w_t = 1.0 - tau;
+    argmax_of(ts.len(), |i| w_t * ts[i] + tau * ds[i])
+}
+
+/// Masks `logits` to the top-`k` keep-set given the `k`-th largest
+/// value: entries `≥ threshold` survive in index order until `k` are
+/// kept, everything after is `-inf` — exactly the historical sequential
+/// scan (which can mask a late strictly-greater entry when earlier ties
+/// exhaust the budget; that quirk is pinned, so it is reproduced). The
+/// budget bookkeeping runs per 8-lane chunk so full chunks vectorize;
+/// NaN entries never survive (`x ≥ t` is false), matching the scalar
+/// comparison.
+pub fn top_k_mask(logits: &mut [f32], threshold: f32, k: usize) {
+    let n = logits.len();
+    let mut kept = 0usize;
+    let mut i = 0usize;
+    while i + LANES <= n {
+        let in_chunk = logits[i..i + LANES].iter().filter(|&&x| x >= threshold).count();
+        if kept + in_chunk > k {
+            break;
+        }
+        kept += in_chunk;
+        for x in &mut logits[i..i + LANES] {
+            let keep = *x >= threshold;
+            if !keep {
+                *x = f32::NEG_INFINITY;
+            }
+        }
+        i += LANES;
+    }
+    while i < n && kept < k {
+        let keep = logits[i] >= threshold;
+        if keep {
+            kept += 1;
+        } else {
+            logits[i] = f32::NEG_INFINITY;
+        }
+        i += 1;
+    }
+    for x in &mut logits[i..] {
+        *x = f32::NEG_INFINITY;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CDF inversion walks (scalar by nature; the committed streams depend
+// on the early-exit shape, so there is exactly one of each).
+// ---------------------------------------------------------------------------
+
+/// Inverse-CDF sample over a normalized row (`sampling::sample_cdf`).
+pub fn cdf_walk(probs: &[f32], u: f32) -> usize {
+    let mut cdf = 0f32;
+    let mut idx = 0usize;
+    for &p in probs {
+        cdf += p;
+        if cdf <= u {
+            idx += 1;
+        } else {
+            break;
+        }
+    }
+    idx.min(probs.len() - 1)
+}
+
+/// [`cdf_walk`] over unnormalized exponentials: each step adds
+/// `e · scale`, the exact value the scalar path produced by normalizing
+/// first — fusing drops the normalize pass.
+fn cdf_walk_scaled(es: &[f32], scale: f32, u: f32) -> usize {
+    let mut cdf = 0f32;
+    let mut idx = 0usize;
+    for &e in es {
+        cdf += e * scale;
+        if cdf <= u {
+            idx += 1;
+        } else {
+            break;
+        }
+    }
+    idx.min(es.len() - 1)
+}
+
+/// [`cdf_walk`] over an unnormalized residual row (`step = r / mass`).
+fn cdf_walk_div(rs: &[f32], mass: f32, u: f32) -> usize {
+    let mut cdf = 0f32;
+    let mut idx = 0usize;
+    for &r in rs {
+        cdf += r / mass;
+        if cdf <= u {
+            idx += 1;
+        } else {
+            break;
+        }
+    }
+    idx.min(rs.len() - 1)
+}
+
+// ---------------------------------------------------------------------------
+// Fused composite kernels — what the spec/sampling layers actually call.
+// ---------------------------------------------------------------------------
+
+/// Three-pass fused softmax with temperature (max, exp+sum, scale).
+/// Replaces the scalar scale-copy + 3-pass softmax (the temperature now
+/// enters as `x · inv_temp` inside the passes; the copy is gone).
+pub fn softmax_into(logits: &[f32], inv_temp: f32, out: &mut Vec<f32>) {
+    let n = logits.len();
+    if out.len() != n {
+        out.resize(n, 0.0);
+    }
+    let m = scaled_max(logits, inv_temp);
+    let s = portable::exp_scaled_sum_into(logits, inv_temp, m, out);
+    scale_inplace(out, 1.0 / s);
+}
+
+/// [`softmax_into`] that also returns the entropy `−Σ p ln p` (the
+/// `sampling::softmax` contract; the `ln` pass only runs here — the
+/// verify path computes its entropies from `p[y]` alone).
+pub fn softmax_entropy_into(logits: &[f32], inv_temp: f32, out: &mut Vec<f32>) -> f32 {
+    let n = logits.len();
+    if out.len() != n {
+        out.resize(n, 0.0);
+    }
+    let m = scaled_max(logits, inv_temp);
+    let s = portable::exp_scaled_sum_into(logits, inv_temp, m, out);
+    portable::normalize_entropy(out, 1.0 / s)
+}
+
+/// Per-token statistics of one fused verify row.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyRow {
+    /// Target probability of the drafted token.
+    pub pt_y: f32,
+    /// Draft probability of the drafted token.
+    pub pd_y: f32,
+    /// Draft surprisal `−ln(pd_y + ε)`.
+    pub h_d: f32,
+    /// Target surprisal `−ln(pt_y + ε)`.
+    pub h_t: f32,
+    /// Distribution overlap `Σ min(p_t, p_d)`.
+    pub normmatch: f32,
+    /// `1 / Σ exp(t·inv_temp − max_t)` — the τ=0 mixture row is
+    /// exactly `et · inv_sum_t` (see [`mix_row_into`]).
+    pub inv_sum_t: f32,
+}
+
+/// Fused verify-row statistics in three passes over the two logit rows
+/// (the scalar path took ~10: two scale-copies, two 3-pass softmaxes,
+/// an overlap pass, and two full-row `ln` entropy passes): (1) scaled
+/// max of each row, (2) raw exponentials — target into `et`, draft into
+/// `pd` — with lane-treed sums, (3) `p_d` normalization fused with the
+/// overlap reduction. `et` is left raw (the normalized target row is
+/// never stored); `pd` holds the normalized draft distribution the
+/// correction resample needs. 2 full-row `exp` calls, zero full-row
+/// `ln`.
+pub fn verify_row_stats(
+    t_row: &[f32],
+    d_row: &[f32],
+    inv_temp: f32,
+    y: usize,
+    et: &mut Vec<f32>,
+    pd: &mut [f32],
+) -> VerifyRow {
+    let v = t_row.len();
+    debug_assert_eq!(d_row.len(), v);
+    debug_assert_eq!(pd.len(), v);
+    if et.len() != v {
+        et.resize(v, 0.0);
+    }
+    let m_t = scaled_max(t_row, inv_temp);
+    let m_d = scaled_max(d_row, inv_temp);
+    let s_t = portable::exp_scaled_sum_into(t_row, inv_temp, m_t, et);
+    let s_d = portable::exp_scaled_sum_into(d_row, inv_temp, m_d, pd);
+    let inv_t = 1.0 / s_t;
+    let inv_d = 1.0 / s_d;
+    let normmatch = normalize_overlap(et, pd, inv_t, inv_d);
+    let pt_y = et[y] * inv_t;
+    let pd_y = pd[y];
+    VerifyRow {
+        pt_y,
+        pd_y,
+        h_d: -(pd_y + STAT_EPS).ln(),
+        h_t: -(pt_y + STAT_EPS).ln(),
+        normmatch,
+        inv_sum_t: inv_t,
+    }
+}
+
+/// The Eq. 8 mixture row `softmax((1−τ)·ln p_t + τ·ln p_d)`, computed
+/// without any per-element `ln` via softmax shift-invariance:
+/// `ln p_t,i = lt_i − max_t − ln Σe` is `lt_i` plus per-row constants,
+/// so the log-space blend renormalizes to
+/// `softmax((1−τ)·lt + τ·ld)` — a blend pass + one more softmax. τ = 0
+/// short-circuits further: the mixture IS the target distribution,
+/// `et · inv_sum_t` from [`verify_row_stats`], one scale pass and no
+/// `exp` at all. (The historical form guarded the logs with `+1e-45`;
+/// that guard only moves entries whose probability underflowed f32 —
+/// agreement is ulp-level on supported entries, ~1e-5 absolute on
+/// underflowed ones, and the accept/reject decisions are pinned
+/// identical by the differential corpus.)
+pub fn mix_row_into(
+    t_row: &[f32],
+    d_row: &[f32],
+    inv_temp: f32,
+    tau: f32,
+    et: &[f32],
+    inv_sum_t: f32,
+    mix: &mut [f32],
+) {
+    if tau == 0.0 {
+        scale_into(et, inv_sum_t, mix);
+        return;
+    }
+    let m = blend_scaled_max(t_row, d_row, inv_temp, tau, mix);
+    let s = portable::exp_sum_inplace(mix, m);
+    scale_inplace(mix, 1.0 / s);
+}
+
+/// Fused residual-correction resample: `r = max(mix − pd, 0)` + mass in
+/// one pass, then the CDF walk divides by the mass at step time (the
+/// same per-element values the scalar normalize-then-walk produced,
+/// minus the full normalization pass). A degenerate residual
+/// (`mass ≤ mass_eps`) falls back to sampling the mixture directly.
+pub fn residual_sample(
+    mix: &[f32],
+    pd: &[f32],
+    u: f32,
+    mass_eps: f32,
+    resid: &mut Vec<f32>,
+) -> usize {
+    let v = mix.len();
+    if resid.len() != v {
+        resid.resize(v, 0.0);
+    }
+    let mass = residual_mass_into(mix, pd, resid);
+    if mass > mass_eps {
+        cdf_walk_div(resid, mass, u)
+    } else {
+        cdf_walk(mix, u)
+    }
+}
+
+/// Fused softmax + CDF sample (the bonus-token path): max pass, exp+sum
+/// into `scratch`, then the walk adds `e · (1/Σe)` — the exact
+/// normalized steps, without the normalize pass.
+pub fn sample_scaled_softmax(
+    logits: &[f32],
+    inv_temp: f32,
+    u: f32,
+    scratch: &mut Vec<f32>,
+) -> usize {
+    let v = logits.len();
+    if scratch.len() != v {
+        scratch.resize(v, 0.0);
+    }
+    let m = scaled_max(logits, inv_temp);
+    let s = portable::exp_scaled_sum_into(logits, inv_temp, m, scratch);
+    cdf_walk_scaled(scratch, 1.0 / s, u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Shapes straddling the lane width: scalar-fallback, tail-only,
+    /// exact, one-over, mid, odd, and the issue's V = 8k+3.
+    const SHAPES: [usize; 7] = [1, 7, 8, 9, 64, 515, 8195];
+
+    fn row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 2.0).collect()
+    }
+
+    /// Values drawn from a 3-level grid so ties are everywhere.
+    fn tie_row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| ((rng.f32() * 3.0) as i32) as f32).collect()
+    }
+
+    fn scalar_softmax(logits: &[f32], inv_temp: f32) -> (f32, Vec<f32>) {
+        let mut m = f32::NEG_INFINITY;
+        for &x in logits {
+            m = m.max(x * inv_temp);
+        }
+        let mut e: Vec<f32> = logits.iter().map(|&x| (x * inv_temp - m).exp()).collect();
+        let s: f32 = e.iter().sum();
+        let inv = 1.0 / s;
+        for p in &mut e {
+            *p *= inv;
+        }
+        (m, e)
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let err = (x - y).abs();
+            let scale = y.abs().max(1e-20);
+            assert!(
+                err <= tol * scale || err <= tol * 1e-3,
+                "{what}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn lane_softmax_matches_scalar_reference() {
+        let mut rng = Rng::new(11);
+        for &n in &SHAPES {
+            for inv_temp in [1.0f32, 1.25, 0.5] {
+                let xs = row(&mut rng, n);
+                let (m_ref, p_ref) = scalar_softmax(&xs, inv_temp);
+                // Max reductions are not reassociated: bit-identical.
+                assert_eq!(scaled_max(&xs, inv_temp).to_bits(), m_ref.to_bits(), "max n={n}");
+                let mut p = Vec::new();
+                softmax_into(&xs, inv_temp, &mut p);
+                // Sums are re-treed: tight-ulp equivalence.
+                assert_close(&p, &p_ref, 1e-5, "softmax");
+                let total: f32 = p.iter().sum();
+                assert!((total - 1.0).abs() < 1e-4, "n={n} total={total}");
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_matches_scalar_reference() {
+        let mut rng = Rng::new(12);
+        for &n in &SHAPES {
+            let xs = row(&mut rng, n);
+            let (_, p_ref) = scalar_softmax(&xs, 1.0);
+            let mut h_ref = 0f32;
+            for &p in &p_ref {
+                if p > 0.0 {
+                    h_ref -= p * p.ln();
+                }
+            }
+            let mut p = Vec::new();
+            let h = softmax_entropy_into(&xs, 1.0, &mut p);
+            assert!((h - h_ref).abs() < 1e-4, "n={n}: {h} vs {h_ref}");
+        }
+    }
+
+    #[test]
+    fn argmax_matches_scalar_first_wins_exactly() {
+        let mut rng = Rng::new(13);
+        let scalar = |xs: &[f32]| {
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &x) in xs.iter().enumerate() {
+                if x > bv {
+                    bv = x;
+                    best = i;
+                }
+            }
+            best
+        };
+        for &n in &SHAPES {
+            for _ in 0..8 {
+                let xs = row(&mut rng, n);
+                assert_eq!(argmax(&xs), scalar(&xs), "random n={n}");
+                let ties = tie_row(&mut rng, n);
+                assert_eq!(argmax(&ties), scalar(&ties), "ties n={n}");
+            }
+            let ninf = vec![f32::NEG_INFINITY; n];
+            assert_eq!(argmax(&ninf), 0, "all -inf n={n}");
+        }
+    }
+
+    #[test]
+    fn blend_argmax_matches_materialized_blend() {
+        let mut rng = Rng::new(14);
+        for &n in &SHAPES {
+            for tau in [0.0f32, 0.3, 0.9] {
+                let t = row(&mut rng, n);
+                let d = row(&mut rng, n);
+                let blended: Vec<f32> =
+                    t.iter().zip(&d).map(|(&a, &b)| (1.0 - tau) * a + tau * b).collect();
+                assert_eq!(blend_argmax(&t, &d, tau), argmax(&blended), "n={n} tau={tau}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_neg_inf_rows_degenerate_identically() {
+        // exp(-inf − -inf) is NaN in the scalar reference and in the
+        // lane form alike — the kernels do not invent a saner answer.
+        for &n in &[1usize, 7, 9, 64] {
+            let xs = vec![f32::NEG_INFINITY; n];
+            let (_, p_ref) = scalar_softmax(&xs, 1.0);
+            let mut p = Vec::new();
+            softmax_into(&xs, 1.0, &mut p);
+            assert!(p_ref.iter().all(|x| x.is_nan()), "scalar n={n}");
+            assert!(p.iter().all(|x| x.is_nan()), "lane n={n}");
+        }
+    }
+
+    #[test]
+    fn top_k_mask_matches_sequential_scan_exactly() {
+        let mut rng = Rng::new(15);
+        let scan = |xs: &mut [f32], threshold: f32, k: usize| {
+            let mut kept = 0usize;
+            for x in xs.iter_mut() {
+                if *x >= threshold && kept < k {
+                    kept += 1;
+                } else {
+                    *x = f32::NEG_INFINITY;
+                }
+            }
+        };
+        for &n in &SHAPES {
+            for &k in &[1usize, 3, LANES, n.saturating_sub(1).max(1), n] {
+                if k > n {
+                    continue;
+                }
+                for ties in [false, true] {
+                    let base = if ties { tie_row(&mut rng, n) } else { row(&mut rng, n) };
+                    let mut sorted = base.clone();
+                    sorted.sort_unstable_by(|a, b| b.total_cmp(a));
+                    let threshold = sorted[k - 1];
+                    let mut a = base.clone();
+                    let mut b = base;
+                    top_k_mask(&mut a, threshold, k);
+                    scan(&mut b, threshold, k);
+                    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb, "n={n} k={k} ties={ties}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn times_one_is_bitwise_identity() {
+        // The inv_temp == 1.0 skip relies on `x * 1.0` being a bitwise
+        // no-op for every non-NaN f32 — including denormals, ±0, ±inf.
+        let mut rng = Rng::new(16);
+        let mut specials = vec![
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 64.0, // denormal
+            -f32::MIN_POSITIVE / 64.0,
+            f32::MAX,
+            f32::MIN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+        ];
+        for _ in 0..1000 {
+            specials.push(rng.normal() as f32 * 1e10);
+        }
+        for &x in &specials {
+            assert_eq!((x * 1.0f32).to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn verify_row_stats_matches_scalar_composition() {
+        let mut rng = Rng::new(17);
+        for &n in &SHAPES {
+            for inv_temp in [1.0f32, 0.8] {
+                let t = row(&mut rng, n);
+                let d = row(&mut rng, n);
+                let y = (rng.f32() * n as f32) as usize % n;
+                let (_, pt_ref) = scalar_softmax(&t, inv_temp);
+                let (_, pd_ref) = scalar_softmax(&d, inv_temp);
+                let overlap_ref: f32 =
+                    pt_ref.iter().zip(&pd_ref).map(|(&a, &b)| a.min(b)).sum();
+                let mut et = Vec::new();
+                let mut pd = vec![0.0f32; n];
+                let r = verify_row_stats(&t, &d, inv_temp, y, &mut et, &mut pd);
+                assert!((r.pt_y - pt_ref[y]).abs() < 1e-5, "pt_y n={n}");
+                assert!((r.pd_y - pd_ref[y]).abs() < 1e-5, "pd_y n={n}");
+                assert!((r.normmatch - overlap_ref).abs() < 1e-4, "overlap n={n}");
+                assert!((r.h_d + (pd_ref[y] + 1e-9).ln()).abs() < 1e-4, "h_d n={n}");
+                assert_close(&pd, &pd_ref, 1e-5, "pd row");
+                // et is raw: normalizing it reproduces p_t.
+                let pt: Vec<f32> = et.iter().map(|&e| e * r.inv_sum_t).collect();
+                assert_close(&pt, &pt_ref, 1e-5, "et row");
+            }
+        }
+    }
+
+    #[test]
+    fn mix_row_matches_log_space_reference() {
+        // The historical Eq. 8 form: softmax of the guarded log blend.
+        let log_mix_ref = |pt: &[f32], pd: &[f32], tau: f32| -> Vec<f32> {
+            let lm: Vec<f32> = pt
+                .iter()
+                .zip(pd)
+                .map(|(&a, &b)| (1.0 - tau) * (a + 1e-45).ln() + tau * (b + 1e-45).ln())
+                .collect();
+            scalar_softmax(&lm, 1.0).1
+        };
+        let mut rng = Rng::new(18);
+        for &n in &SHAPES {
+            for tau in [0.0f32, 0.3, 0.9] {
+                for inv_temp in [1.0f32, 0.7] {
+                    let t = row(&mut rng, n);
+                    let d = row(&mut rng, n);
+                    let (_, pt_ref) = scalar_softmax(&t, inv_temp);
+                    let (_, pd_ref) = scalar_softmax(&d, inv_temp);
+                    let want = log_mix_ref(&pt_ref, &pd_ref, tau);
+                    let mut et = Vec::new();
+                    let mut pd = vec![0.0f32; n];
+                    let r = verify_row_stats(&t, &d, inv_temp, 0, &mut et, &mut pd);
+                    let mut mix = vec![0.0f32; n];
+                    mix_row_into(&t, &d, inv_temp, tau, &et, r.inv_sum_t, &mut mix);
+                    for (i, (&a, &b)) in mix.iter().zip(&want).enumerate() {
+                        assert!(
+                            (a - b).abs() < 2e-5,
+                            "n={n} tau={tau} it={inv_temp} [{i}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_sample_matches_scalar_reference() {
+        let mut rng = Rng::new(19);
+        for &n in &SHAPES {
+            let t = row(&mut rng, n);
+            let d = row(&mut rng, n);
+            let (_, mix) = scalar_softmax(&t, 1.0);
+            let (_, pd) = scalar_softmax(&d, 1.0);
+            let mut scratch = Vec::new();
+            for _ in 0..16 {
+                let u = rng.f32();
+                // Scalar reference: materialize, normalize, then walk.
+                let mut resid: Vec<f32> =
+                    mix.iter().zip(&pd).map(|(&m, &p)| (m - p).max(0.0)).collect();
+                let mass: f32 = resid.iter().sum();
+                let want = if mass > 1e-9 {
+                    resid.iter_mut().for_each(|r| *r /= mass);
+                    cdf_walk(&resid, u)
+                } else {
+                    cdf_walk(&mix, u)
+                };
+                assert_eq!(residual_sample(&mix, &pd, u, 1e-9, &mut scratch), want, "n={n}");
+            }
+            // Degenerate residual (mix == pd): falls back to the mixture.
+            let u = rng.f32();
+            assert_eq!(
+                residual_sample(&mix, &mix, u, 1e-9, &mut scratch),
+                cdf_walk(&mix, u),
+                "degenerate n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn cdf_walks_agree_on_normalized_and_fused_forms() {
+        let mut rng = Rng::new(20);
+        for &n in &SHAPES {
+            let xs = row(&mut rng, n);
+            let m = scaled_max(&xs, 1.0);
+            let mut es = vec![0.0f32; n];
+            let s = portable::exp_scaled_sum_into(&xs, 1.0, m, &mut es);
+            let inv = 1.0 / s;
+            let probs: Vec<f32> = es.iter().map(|&e| e * inv).collect();
+            for _ in 0..16 {
+                let u = rng.f32();
+                assert_eq!(
+                    cdf_walk(&probs, u),
+                    cdf_walk_scaled(&es, inv, u),
+                    "n={n} u={u}"
+                );
+            }
+        }
+    }
+
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    #[test]
+    fn avx2_twins_are_bit_identical_to_portable() {
+        if !std::is_x86_feature_detected!("avx2") {
+            return; // nothing to differentiate on this machine
+        }
+        let mut rng = Rng::new(21);
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for &n in &SHAPES {
+            for inv_temp in [1.0f32, 0.75] {
+                let t = row(&mut rng, n);
+                let d = row(&mut rng, n);
+                // scaled_max
+                // SAFETY: gated on is_x86_feature_detected above.
+                let a = unsafe { avx2::scaled_max(&t, inv_temp) };
+                assert_eq!(a.to_bits(), portable::scaled_max(&t, inv_temp).to_bits());
+                // scale_into / scale_inplace
+                let mut o1 = vec![0.0f32; n];
+                let mut o2 = vec![0.0f32; n];
+                // SAFETY: as above.
+                unsafe { avx2::scale_into(&t, 0.37, &mut o1) };
+                portable::scale_into(&t, 0.37, &mut o2);
+                assert_eq!(bits(&o1), bits(&o2));
+                let mut p1 = t.clone();
+                let mut p2 = t.clone();
+                // SAFETY: as above.
+                unsafe { avx2::scale_inplace(&mut p1, 1.618) };
+                portable::scale_inplace(&mut p2, 1.618);
+                assert_eq!(bits(&p1), bits(&p2));
+                // normalize_overlap over raw exponentials
+                let m_t = portable::scaled_max(&t, inv_temp);
+                let m_d = portable::scaled_max(&d, inv_temp);
+                let mut et = vec![0.0f32; n];
+                let mut ed1 = vec![0.0f32; n];
+                let s_t = portable::exp_scaled_sum_into(&t, inv_temp, m_t, &mut et);
+                let s_d = portable::exp_scaled_sum_into(&d, inv_temp, m_d, &mut ed1);
+                let mut ed2 = ed1.clone();
+                // SAFETY: as above.
+                let v1 = unsafe { avx2::normalize_overlap(&et, &mut ed1, 1.0 / s_t, 1.0 / s_d) };
+                let v2 = portable::normalize_overlap(&et, &mut ed2, 1.0 / s_t, 1.0 / s_d);
+                assert_eq!(v1.to_bits(), v2.to_bits());
+                assert_eq!(bits(&ed1), bits(&ed2));
+                // blend_scaled_max
+                let mut b1 = vec![0.0f32; n];
+                let mut b2 = vec![0.0f32; n];
+                // SAFETY: as above.
+                let m1 = unsafe { avx2::blend_scaled_max(&t, &d, inv_temp, 0.4, &mut b1) };
+                let m2 = portable::blend_scaled_max(&t, &d, inv_temp, 0.4, &mut b2);
+                assert_eq!(m1.to_bits(), m2.to_bits());
+                assert_eq!(bits(&b1), bits(&b2));
+                // residual_mass_into
+                let mut r1 = vec![0.0f32; n];
+                let mut r2 = vec![0.0f32; n];
+                // SAFETY: as above.
+                let ms1 = unsafe { avx2::residual_mass_into(&ed1, &et, &mut r1) };
+                let ms2 = portable::residual_mass_into(&ed2, &et, &mut r2);
+                assert_eq!(ms1.to_bits(), ms2.to_bits());
+                assert_eq!(bits(&r1), bits(&r2));
+                // min_overlap
+                // SAFETY: as above.
+                let ov1 = unsafe { avx2::min_overlap(&ed1, &et) };
+                assert_eq!(ov1.to_bits(), portable::min_overlap(&ed2, &et).to_bits());
+            }
+        }
+    }
+}

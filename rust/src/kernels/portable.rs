@@ -1,0 +1,341 @@
+//! Portable W=8 lane-chunked primitives — the canonical arithmetic.
+//!
+//! Every reduction runs eight independent lane accumulators over the
+//! full chunks, folds the tail (`len % 8` elements) into lanes
+//! `0..tail_len`, and combines with the fixed tree
+//! `((l0⊕l1)⊕(l2⊕l3)) ⊕ ((l4⊕l5)⊕(l6⊕l7))` — one platform-independent
+//! association order, so a committed stream does not depend on which
+//! backend produced it. The optional AVX2 twins ([`super::avx2`],
+//! behind the `simd-intrinsics` feature) replay exactly this lane
+//! structure with `_mm256` arithmetic and must stay bit-identical
+//! (gated differential in `super::tests`).
+//!
+//! Tie conventions are chosen to match the x86 vector instructions:
+//! `fmax(a, b) = if a > b { a } else { b }` (second operand wins ties
+//! and NaN, as `_mm256_max_ps`), `fmin` mirrored. For the non-NaN
+//! inputs the kernels assume, these agree with `f32::max`/`f32::min`
+//! everywhere except the sign of ±0.0 ties — which the exp/compare
+//! consumers cannot observe.
+//!
+//! `exp`/`ln` always go through the scalar `std` calls, in every
+//! backend: transcendental vector approximations would fork the
+//! streams, and the fused kernels win their time back by issuing
+//! *fewer* transcendentals (see `spec::reference`), not faster ones.
+
+use super::LANES;
+
+/// `_mm256_max_ps` semantics: `b` wins ties (and when either is NaN).
+#[inline(always)]
+pub(super) fn fmax(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// `_mm256_min_ps` semantics: `b` wins ties (and when either is NaN).
+#[inline(always)]
+pub(super) fn fmin(a: f32, b: f32) -> f32 {
+    if a < b {
+        a
+    } else {
+        b
+    }
+}
+
+/// The fixed combine tree for sums. Never reassociate this.
+#[inline(always)]
+pub(super) fn tree8_sum(a: &[f32; LANES]) -> f32 {
+    ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+}
+
+/// The fixed combine tree for maxima.
+#[inline(always)]
+pub(super) fn tree8_max(a: &[f32; LANES]) -> f32 {
+    fmax(
+        fmax(fmax(a[0], a[1]), fmax(a[2], a[3])),
+        fmax(fmax(a[4], a[5]), fmax(a[6], a[7])),
+    )
+}
+
+/// Max of `xs[i] · inv_temp`. The multiply is skipped entirely when
+/// `inv_temp == 1.0`: `x * 1.0` is a bitwise identity for the non-NaN
+/// logits the kernel assumes, so the skip is unobservable in the
+/// streams (pinned by `scaling_by_one_is_bitwise_identity`).
+pub(super) fn scaled_max(xs: &[f32], inv_temp: f32) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    let chunks = xs.chunks_exact(LANES);
+    let tail = chunks.remainder();
+    if inv_temp == 1.0 {
+        for ch in chunks {
+            for l in 0..LANES {
+                acc[l] = fmax(acc[l], ch[l]);
+            }
+        }
+        for (l, &x) in tail.iter().enumerate() {
+            acc[l] = fmax(acc[l], x);
+        }
+    } else {
+        for ch in chunks {
+            for l in 0..LANES {
+                acc[l] = fmax(acc[l], ch[l] * inv_temp);
+            }
+        }
+        for (l, &x) in tail.iter().enumerate() {
+            acc[l] = fmax(acc[l], x * inv_temp);
+        }
+    }
+    tree8_max(&acc)
+}
+
+/// `out[i] = exp(xs[i] · inv_temp − max)`; returns the lane-treed sum.
+/// No intrinsics twin: `exp` is scalar in every backend.
+pub(super) fn exp_scaled_sum_into(xs: &[f32], inv_temp: f32, max: f32, out: &mut [f32]) -> f32 {
+    debug_assert_eq!(xs.len(), out.len());
+    let n = xs.len();
+    let main = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    if inv_temp == 1.0 {
+        for (xc, oc) in xs[..main]
+            .chunks_exact(LANES)
+            .zip(out[..main].chunks_exact_mut(LANES))
+        {
+            for l in 0..LANES {
+                let e = (xc[l] - max).exp();
+                oc[l] = e;
+                acc[l] += e;
+            }
+        }
+        for (l, (&x, o)) in xs[main..].iter().zip(out[main..].iter_mut()).enumerate() {
+            let e = (x - max).exp();
+            *o = e;
+            acc[l] += e;
+        }
+    } else {
+        for (xc, oc) in xs[..main]
+            .chunks_exact(LANES)
+            .zip(out[..main].chunks_exact_mut(LANES))
+        {
+            for l in 0..LANES {
+                let e = (xc[l] * inv_temp - max).exp();
+                oc[l] = e;
+                acc[l] += e;
+            }
+        }
+        for (l, (&x, o)) in xs[main..].iter().zip(out[main..].iter_mut()).enumerate() {
+            let e = (x * inv_temp - max).exp();
+            *o = e;
+            acc[l] += e;
+        }
+    }
+    tree8_sum(&acc)
+}
+
+/// `xs[i] = exp(xs[i] − max)` in place; returns the lane-treed sum.
+pub(super) fn exp_sum_inplace(xs: &mut [f32], max: f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = xs.chunks_exact_mut(LANES);
+    for ch in &mut chunks {
+        for l in 0..LANES {
+            let e = (ch[l] - max).exp();
+            ch[l] = e;
+            acc[l] += e;
+        }
+    }
+    for (l, x) in chunks.into_remainder().iter_mut().enumerate() {
+        let e = (*x - max).exp();
+        *x = e;
+        acc[l] += e;
+    }
+    tree8_sum(&acc)
+}
+
+/// `out[i] = xs[i] · scale` (element-wise, no reduction).
+pub(super) fn scale_into(xs: &[f32], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = x * scale;
+    }
+}
+
+/// `xs[i] *= scale` in place.
+pub(super) fn scale_inplace(xs: &mut [f32], scale: f32) {
+    for x in xs {
+        *x *= scale;
+    }
+}
+
+/// Normalizes the raw draft exponentials in place (`ed[i] *= inv_d`)
+/// and returns `Σ min(et[i]·inv_t, ed[i]·inv_d)` under the lane tree —
+/// the verify row's distribution-overlap statistic, fused with the
+/// `p_d` normalization so both exponential rows are loaded exactly
+/// once. `et` stays raw; the target distribution is only ever
+/// materialized in registers.
+pub(super) fn normalize_overlap(et: &[f32], ed: &mut [f32], inv_t: f32, inv_d: f32) -> f32 {
+    debug_assert_eq!(et.len(), ed.len());
+    let n = ed.len();
+    let main = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (ec, dc) in et[..main]
+        .chunks_exact(LANES)
+        .zip(ed[..main].chunks_exact_mut(LANES))
+    {
+        for l in 0..LANES {
+            let p = ec[l] * inv_t;
+            let q = dc[l] * inv_d;
+            dc[l] = q;
+            acc[l] += fmin(p, q);
+        }
+    }
+    for (l, (&e, d)) in et[main..].iter().zip(ed[main..].iter_mut()).enumerate() {
+        let p = e * inv_t;
+        let q = *d * inv_d;
+        *d = q;
+        acc[l] += fmin(p, q);
+    }
+    tree8_sum(&acc)
+}
+
+/// `out[i] = (1−τ)·(ts[i]·inv_temp) + τ·(ds[i]·inv_temp)`; returns the
+/// lane-treed max. This is the Eq. 8 mixture in scaled-logit space —
+/// softmax shift-invariance makes `softmax(out)` equal the log-space
+/// blend of the two normalized distributions (see
+/// [`super::mix_row_into`]). Kept as mul+mul+add, never an FMA, so the
+/// intrinsics twin matches bit for bit.
+pub(super) fn blend_scaled_max(
+    ts: &[f32],
+    ds: &[f32],
+    inv_temp: f32,
+    tau: f32,
+    out: &mut [f32],
+) -> f32 {
+    debug_assert_eq!(ts.len(), out.len());
+    debug_assert_eq!(ds.len(), out.len());
+    let w_t = 1.0 - tau;
+    let n = out.len();
+    let main = n - n % LANES;
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    if inv_temp == 1.0 {
+        for ((tc, dc), oc) in ts[..main]
+            .chunks_exact(LANES)
+            .zip(ds[..main].chunks_exact(LANES))
+            .zip(out[..main].chunks_exact_mut(LANES))
+        {
+            for l in 0..LANES {
+                let b = w_t * tc[l] + tau * dc[l];
+                oc[l] = b;
+                acc[l] = fmax(acc[l], b);
+            }
+        }
+        for (l, ((&t, &d), o)) in ts[main..]
+            .iter()
+            .zip(&ds[main..])
+            .zip(out[main..].iter_mut())
+            .enumerate()
+        {
+            let b = w_t * t + tau * d;
+            *o = b;
+            acc[l] = fmax(acc[l], b);
+        }
+    } else {
+        for ((tc, dc), oc) in ts[..main]
+            .chunks_exact(LANES)
+            .zip(ds[..main].chunks_exact(LANES))
+            .zip(out[..main].chunks_exact_mut(LANES))
+        {
+            for l in 0..LANES {
+                let b = w_t * (tc[l] * inv_temp) + tau * (dc[l] * inv_temp);
+                oc[l] = b;
+                acc[l] = fmax(acc[l], b);
+            }
+        }
+        for (l, ((&t, &d), o)) in ts[main..]
+            .iter()
+            .zip(&ds[main..])
+            .zip(out[main..].iter_mut())
+            .enumerate()
+        {
+            let b = w_t * (t * inv_temp) + tau * (d * inv_temp);
+            *o = b;
+            acc[l] = fmax(acc[l], b);
+        }
+    }
+    tree8_max(&acc)
+}
+
+/// `resid[i] = max(mix[i] − pd[i], 0)`; returns the lane-treed mass.
+pub(super) fn residual_mass_into(mix: &[f32], pd: &[f32], resid: &mut [f32]) -> f32 {
+    debug_assert_eq!(mix.len(), resid.len());
+    debug_assert_eq!(pd.len(), resid.len());
+    let n = resid.len();
+    let main = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    for ((mc, pc), rc) in mix[..main]
+        .chunks_exact(LANES)
+        .zip(pd[..main].chunks_exact(LANES))
+        .zip(resid[..main].chunks_exact_mut(LANES))
+    {
+        for l in 0..LANES {
+            let r = fmax(mc[l] - pc[l], 0.0);
+            rc[l] = r;
+            acc[l] += r;
+        }
+    }
+    for (l, ((&m, &p), r)) in mix[main..]
+        .iter()
+        .zip(&pd[main..])
+        .zip(resid[main..].iter_mut())
+        .enumerate()
+    {
+        let rr = fmax(m - p, 0.0);
+        *r = rr;
+        acc[l] += rr;
+    }
+    tree8_sum(&acc)
+}
+
+/// `Σ min(p[i], q[i])` under the lane tree (`sampling::overlap`).
+pub(super) fn min_overlap(p: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(p.len(), q.len());
+    let n = p.len();
+    let main = n - n % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (pc, qc) in p[..main]
+        .chunks_exact(LANES)
+        .zip(q[..main].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            acc[l] += fmin(pc[l], qc[l]);
+        }
+    }
+    for (l, (&a, &b)) in p[main..].iter().zip(&q[main..]).enumerate() {
+        acc[l] += fmin(a, b);
+    }
+    tree8_sum(&acc)
+}
+
+/// Normalization + entropy pass: `out[i] *= inv`, returning `−Σ p·ln p`
+/// (zero-probability entries contribute nothing, matching the scalar
+/// form). `ln` is scalar like `exp`; no intrinsics twin.
+pub(super) fn normalize_entropy(out: &mut [f32], inv: f32) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut chunks = out.chunks_exact_mut(LANES);
+    for ch in &mut chunks {
+        for l in 0..LANES {
+            let p = ch[l] * inv;
+            ch[l] = p;
+            if p > 0.0 {
+                acc[l] += p * p.ln();
+            }
+        }
+    }
+    for (l, x) in chunks.into_remainder().iter_mut().enumerate() {
+        let p = *x * inv;
+        *x = p;
+        if p > 0.0 {
+            acc[l] += p * p.ln();
+        }
+    }
+    -tree8_sum(&acc)
+}

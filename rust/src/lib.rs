@@ -108,6 +108,7 @@ pub mod control;
 pub mod coordinator;
 pub mod eval;
 pub mod harness;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

@@ -16,37 +16,22 @@
 //! semantics (same keep-sets, same float arithmetic) — pinned by the
 //! equivalence property tests below.
 
+use crate::kernels;
 use crate::util::rng::Rng;
 
-/// Numerically stable in-place softmax; returns the entropy (nats).
+/// Numerically stable softmax into `out`; returns the entropy (nats).
+/// Delegates to the canonical lane-chunked kernel
+/// ([`kernels::softmax_entropy_into`]) — the max is bit-identical to the
+/// scalar scan, the exp sum is lane-treed (tight-ulp).
 pub fn softmax(logits: &[f32], out: &mut Vec<f32>) -> f32 {
-    out.clear();
-    out.reserve(logits.len());
-    let mut max = f32::NEG_INFINITY;
-    for &x in logits {
-        max = max.max(x);
-    }
-    let mut sum = 0f32;
-    for &x in logits {
-        let e = (x - max).exp();
-        out.push(e);
-        sum += e;
-    }
-    let inv = 1.0 / sum;
-    let mut entropy = 0f32;
-    for p in out.iter_mut() {
-        *p *= inv;
-        if *p > 0.0 {
-            entropy -= *p * p.ln();
-        }
-    }
-    entropy
+    kernels::softmax_entropy_into(logits, 1.0, out)
 }
 
 /// Softmax with temperature; `temp <= 0` produces a one-hot argmax.
-/// Allocation-free: the scaling is fused into the softmax loops (the
-/// intermediate values are exactly the old `x / temp` vector, so the
-/// output is bit-identical to scaling first and softmaxing after).
+/// The scaling is fused into the kernel passes as `x · (1/temp)` — the
+/// output is bit-identical to materializing the scaled vector first and
+/// softmaxing after (pinned below), and the entropy `ln` pass of
+/// [`softmax`] is skipped entirely.
 pub fn softmax_with_temp(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
     if temp <= 0.0 {
         let am = argmax(logits);
@@ -55,50 +40,19 @@ pub fn softmax_with_temp(logits: &[f32], temp: f32, out: &mut Vec<f32>) {
         out[am] = 1.0;
         return;
     }
-    out.clear();
-    out.reserve(logits.len());
-    let mut max = f32::NEG_INFINITY;
-    for &x in logits {
-        max = max.max(x / temp);
-    }
-    let mut sum = 0f32;
-    for &x in logits {
-        let e = (x / temp - max).exp();
-        out.push(e);
-        sum += e;
-    }
-    let inv = 1.0 / sum;
-    for p in out.iter_mut() {
-        *p *= inv;
-    }
+    kernels::softmax_into(logits, 1.0 / temp, out);
 }
 
+/// First-index argmax ([`kernels::argmax`]: lane-chunked, exactly the
+/// scalar first-wins strict-`>` scan for non-NaN rows).
 pub fn argmax(xs: &[f32]) -> usize {
-    let mut best = 0;
-    let mut bv = f32::NEG_INFINITY;
-    for (i, &x) in xs.iter().enumerate() {
-        if x > bv {
-            bv = x;
-            best = i;
-        }
-    }
-    best
+    kernels::argmax(xs)
 }
 
 /// Inverse-CDF categorical sample matching the kernel convention
 /// (token = #{i : cdf_i <= u}, clamped to V-1).
 pub fn sample_cdf(probs: &[f32], u: f32) -> usize {
-    let mut cdf = 0f32;
-    let mut idx = 0usize;
-    for &p in probs {
-        cdf += p;
-        if cdf <= u {
-            idx += 1;
-        } else {
-            break;
-        }
-    }
-    idx.min(probs.len() - 1)
+    kernels::cdf_walk(probs, u)
 }
 
 /// Sample from logits at a temperature (temp <= 0 → greedy argmax).
@@ -134,27 +88,23 @@ pub fn top_k_filter(logits: &mut [f32], k: usize) {
 
 /// [`top_k_filter`] over a caller-owned value buffer, with the
 /// clone-and-full-sort replaced by `select_nth_unstable_by` partial
-/// selection (O(V) expected instead of O(V log V)). The threshold is the
-/// k-th largest value — exactly what the full sort produced — and the
-/// keep-exactly-k-under-ties scan is unchanged, so the output is
-/// identical to the legacy kernel (property-tested below).
+/// selection (O(V) expected instead of O(V log V)). The comparator is
+/// `f32::total_cmp` — a total order, so NaN inputs select a threshold
+/// deterministically instead of panicking (a NaN threshold keeps
+/// nothing: `x >= NaN` is always false) — and it picks the identical
+/// threshold on non-NaN rows (`-0.0 < +0.0` under total order, but both
+/// compare equal under `>=`, so the keep-set cannot differ). The masking
+/// scan is the chunked [`kernels::top_k_mask`], pinned bit-identical to
+/// the historical sequential keep-exactly-k scan.
 pub fn top_k_filter_with(logits: &mut [f32], k: usize, scratch: &mut Vec<f32>) {
     if k == 0 || k >= logits.len() {
         return;
     }
     scratch.clear();
     scratch.extend_from_slice(logits);
-    scratch.select_nth_unstable_by(k - 1, |a, b| b.partial_cmp(a).unwrap());
+    scratch.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
     let threshold = scratch[k - 1];
-    let mut kept = 0;
-    for x in logits.iter_mut() {
-        // Keep exactly k entries even under ties.
-        if *x >= threshold && kept < k {
-            kept += 1;
-        } else {
-            *x = f32::NEG_INFINITY;
-        }
-    }
+    kernels::top_k_mask(logits, threshold, k);
 }
 
 /// Nucleus (top-p) filtering on a probability vector (renormalized).
@@ -170,14 +120,17 @@ pub fn top_p_filter(probs: &mut [f32], p: f32) {
 /// renormalizer sums in index order — the identical keep set and float
 /// totals (adding the zeroed entries contributes exact 0.0 terms), with
 /// no hashing and no allocation. The tie order matches the legacy stable
-/// sort because the comparator breaks prob-ties by ascending index.
+/// sort because the comparator breaks prob-ties by ascending index; it
+/// uses `f32::total_cmp`, so a NaN probability yields a deterministic
+/// order instead of a comparator panic, and on NaN-free rows (softmax
+/// output, the only caller) the order is the one `partial_cmp` produced.
 pub fn top_p_filter_with(probs: &mut [f32], p: f32, idx: &mut Vec<usize>) {
     if p >= 1.0 {
         return;
     }
     idx.clear();
     idx.extend(0..probs.len());
-    idx.sort_unstable_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_unstable_by(|&a, &b| probs[b].total_cmp(&probs[a]).then(a.cmp(&b)));
     let mut cum = 0f32;
     let mut cut = probs.len();
     for (rank, &i) in idx.iter().enumerate() {
@@ -227,9 +180,10 @@ pub fn top_k_indices_with(values: &[f32], k: usize, idx: &mut Vec<usize>) {
 
 /// Total-variation overlap `Σ min(p, q)` — the quantity the verify kernel
 /// calls NormMatch, and the expected single-token acceptance probability
-/// of lossless speculative decoding.
+/// of lossless speculative decoding ([`kernels::min_overlap`], lane-treed
+/// sum).
 pub fn overlap(p: &[f32], q: &[f32]) -> f32 {
-    p.iter().zip(q).map(|(&a, &b)| a.min(b)).sum()
+    kernels::min_overlap(p, q)
 }
 
 /// KL(p || q) in nats, with epsilon smoothing on q.
@@ -429,8 +383,9 @@ mod tests {
             let n = 1 + (trial % 40);
             let logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
             let temp = [0.25f32, 0.7, 1.0, 1.9][trial % 4];
-            // reference: materialize the scaled vector, then plain softmax
-            let scaled: Vec<f32> = logits.iter().map(|&x| x / temp).collect();
+            // reference: materialize the scaled vector, then plain
+            // softmax (the kernel fuses `x * (1/temp)` into its passes)
+            let scaled: Vec<f32> = logits.iter().map(|&x| x * (1.0 / temp)).collect();
             let mut want = Vec::new();
             softmax(&scaled, &mut want);
             let mut got = Vec::new();
@@ -482,6 +437,69 @@ mod tests {
             want.truncate(k);
             top_k_indices_with(&vals, k, &mut idx);
             assert_eq!(want, idx, "trial {trial} k={k}");
+        }
+    }
+
+    #[test]
+    fn filters_tolerate_nan_without_panicking() {
+        // The historical comparators were `partial_cmp().unwrap()` — a
+        // single NaN logit panicked the sampler. `total_cmp` orders NaN
+        // deterministically instead: positive NaN sorts largest, so
+        // top-k either never keeps one (NaN-free threshold; `NaN >= t`
+        // is false) or keeps nothing at all (NaN threshold), and top-p
+        // completes without touching the comparator's unwrap.
+        let mut rng = Rng::new(76);
+        let mut scratch = Vec::new();
+        let mut idx = Vec::new();
+        for trial in 0..100 {
+            let n = 4 + (trial % 60);
+            let mut logits: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            logits[trial % n] = f32::NAN;
+            if trial % 2 == 0 {
+                logits[(trial / 2) % n] = f32::NAN;
+            }
+            let k = 1 + (trial % (n - 1));
+            let mut l = logits.clone();
+            top_k_filter_with(&mut l, k, &mut scratch);
+            assert!(
+                l.iter().all(|x| !x.is_nan()),
+                "trial {trial}: NaN survived top-k"
+            );
+            assert!(l.iter().filter(|x| x.is_finite()).count() <= k);
+
+            // top-p on a NaN-poisoned row: must not panic; the row is
+            // left deterministic (NaN propagates through the cum/renorm
+            // arithmetic, exactly as it would have before the sort).
+            let mut probs = logits;
+            top_p_filter_with(&mut probs, 0.6, &mut idx);
+            assert_eq!(probs.len(), n, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn total_cmp_keeps_identical_sets_on_non_nan_inputs() {
+        // On NaN-free rows the total_cmp comparators must reproduce the
+        // partial_cmp behavior exactly — including ±0.0 rows, where the
+        // orders differ but the masks cannot (0.0 >= -0.0 both ways).
+        let mut rng = Rng::new(77);
+        let mut scratch = Vec::new();
+        for trial in 0..200 {
+            let n = 2 + (trial % 50);
+            let mut vals: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            if trial % 3 == 0 {
+                vals[0] = 0.0;
+                vals[n / 2] = -0.0;
+            }
+            let k = 1 + (trial % n);
+            let mut want = vals.clone();
+            legacy_top_k_filter(&mut want, k);
+            let mut got = vals;
+            top_k_filter_with(&mut got, k, &mut scratch);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "trial {trial} k={k}"
+            );
         }
     }
 }

@@ -8,9 +8,22 @@
 //! 2. a host fallback path so the coordinator logic can be exercised
 //!    without artifacts;
 //! 3. cross-validation against the kernel in the integration tests.
+//!
+//! The per-row arithmetic lives in [`crate::kernels`] (lane-chunked,
+//! fixed reduction tree): [`kernels::verify_row_stats`] fuses both
+//! softmaxes + overlap + entropies into three passes over the two logit
+//! rows, [`kernels::mix_row_into`] builds the Eq. 8 mixture without a
+//! single per-element `ln` (softmax shift-invariance), and the
+//! correction/bonus resamples fuse their normalization into the CDF
+//! walk. The old scalar form (~10 passes, 3 `exp` + 5 `ln` per element)
+//! survives verbatim as the differential reference in `tests::legacy`
+//! and in `benches/hotpath.rs`; decisions are pinned identical, stats
+//! tight-ulp (only sum reductions were re-treed).
 
+use crate::kernels::{
+    argmax, blend_argmax, mix_row_into, residual_sample, sample_scaled_softmax, verify_row_stats,
+};
 use crate::model::{VerifyKnobs, VerifyOutcome};
-use crate::sampling::{argmax, overlap, sample_cdf, softmax};
 use crate::util::scratch::VerifyScratch;
 
 const EPS: f32 = 1e-9;
@@ -59,12 +72,14 @@ pub fn host_verify(
     out
 }
 
-/// [`host_verify`] over caller-owned buffers: all per-row distributions
-/// live in `scratch` (flat `[gamma, vocab]` layouts replace the old
-/// per-row `Vec<Vec<f32>>`s) and the outcome is written into `out`
-/// (cleared first, capacity reused). Arithmetic is kept
-/// operation-for-operation identical to the allocating original, so the
-/// committed streams every differential test pins are unchanged.
+/// [`host_verify`] over caller-owned buffers: per-slot distributions
+/// land directly in the flat `[gamma, vocab]` stores of `scratch`
+/// (no row-copy passes at all — the scaled `lt`/`ld` copies of the
+/// scalar form are gone entirely, and `temp == 1` rows skip even the
+/// scale multiply), and the outcome is written into `out` (cleared
+/// first, capacity reused). Greedy windows never materialize the Eq. 8
+/// mixture — their accept/correction/bonus decisions are raw-logit
+/// argmaxes, so the row is computed only where something reads it.
 #[allow(clippy::too_many_arguments)]
 pub fn host_verify_with(
     gamma: usize,
@@ -89,57 +104,47 @@ pub fn host_verify_with(
     out.stats.reserve(gamma * 6);
     out.tokens.clear();
     out.tokens.reserve(gamma + 1);
-    s.mix_rows.clear();
-    s.mix_rows.reserve(gamma * vocab);
-    s.pd_rows.clear();
-    s.pd_rows.reserve(gamma * vocab);
+    // Row stores only ever grow (stale rows past `gamma` are dead).
+    if s.mix_rows.len() < gamma * vocab {
+        s.mix_rows.resize(gamma * vocab, 0.0);
+    }
+    if s.pd_rows.len() < gamma * vocab {
+        s.pd_rows.resize(gamma * vocab, 0.0);
+    }
     let mut accepted = 0usize;
     let mut rejected = false;
 
     for j in 0..gamma {
         let y = d_tokens[j] as usize;
-        s.lt.clear();
-        s.lt.extend(t_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
-        s.ld.clear();
-        s.ld.extend(d_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
-        softmax(&s.lt, &mut s.p_t);
-        softmax(&s.ld, &mut s.p_d);
-        let pt_y = s.p_t[y];
-        let pd_y = s.p_d[y];
-        let h_d = -(pd_y + EPS).ln();
-        let h_t = -(pt_y + EPS).ln();
-        let normmatch = overlap(&s.p_t, &s.p_d);
+        let t_row = &t_logits[j * vocab..(j + 1) * vocab];
+        let d_row = &d_logits[j * vocab..(j + 1) * vocab];
+        let pd = &mut s.pd_rows[j * vocab..(j + 1) * vocab];
+        let row = verify_row_stats(t_row, d_row, inv_temp, y, &mut s.p_t, pd);
         let is_key = knobs.adaptive
-            && (h_d / (h_t + EPS) > knobs.lam1
-                || (pt_y - pd_y).abs() > knobs.lam2
-                || normmatch < knobs.lam3);
+            && (row.h_d / (row.h_t + EPS) > knobs.lam1
+                || (row.pt_y - row.pd_y).abs() > knobs.lam2
+                || row.normmatch < knobs.lam3);
         let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
 
-        // Eq. 8 in log space, renormalized.
-        s.log_mix.clear();
-        for (&a, &b) in s.p_t.iter().zip(&s.p_d) {
-            s.log_mix.push((1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln());
-        }
-        softmax(&s.log_mix, &mut s.mix);
-
         let (accept, accept_prob) = if greedy {
-            s.blend.clear();
-            let tl = &t_logits[j * vocab..(j + 1) * vocab];
-            let dl = &d_logits[j * vocab..(j + 1) * vocab];
-            for (&a, &b) in tl.iter().zip(dl) {
-                s.blend.push((1.0 - tau_j) * a + tau_j * b);
-            }
-            let ok = argmax(&s.blend) == y;
+            let ok = blend_argmax(t_row, d_row, tau_j) == y;
             (ok, if ok { 1.0 } else { 0.0 })
         } else {
-            let ratio = (s.mix[y] / (pd_y + EPS)).min(1.0);
+            let mix = &mut s.mix_rows[j * vocab..(j + 1) * vocab];
+            mix_row_into(t_row, d_row, inv_temp, tau_j, &s.p_t, row.inv_sum_t, mix);
+            let ratio = (mix[y] / (row.pd_y + EPS)).min(1.0);
             (u_accept[j] < ratio, ratio)
         };
 
         out.key_flags.push(is_key);
-        out.stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
-        s.mix_rows.extend_from_slice(&s.mix);
-        s.pd_rows.extend_from_slice(&s.p_d);
+        out.stats.extend_from_slice(&[
+            row.h_d,
+            row.h_t,
+            row.pt_y,
+            row.pd_y,
+            row.normmatch,
+            accept_prob,
+        ]);
 
         if accept && !rejected {
             out.tokens.push(y as i32);
@@ -156,23 +161,17 @@ pub fn host_verify_with(
         } else {
             let mix = &s.mix_rows[accepted * vocab..(accepted + 1) * vocab];
             let pd = &s.pd_rows[accepted * vocab..(accepted + 1) * vocab];
-            s.resid.clear();
-            s.resid.extend(mix.iter().zip(pd).map(|(&m, &p)| (m - p).max(0.0)));
-            let mass: f32 = s.resid.iter().sum();
-            if mass > EPS {
-                s.resid.iter_mut().for_each(|r| *r /= mass);
-                sample_cdf(&s.resid, u_sample[accepted]) as i32
-            } else {
-                sample_cdf(mix, u_sample[accepted]) as i32
-            }
+            residual_sample(mix, pd, u_sample[accepted], EPS, &mut s.resid) as i32
         }
     } else if greedy {
         argmax(&t_logits[gamma * vocab..(gamma + 1) * vocab]) as i32
     } else {
-        s.lt.clear();
-        s.lt.extend(t_logits[gamma * vocab..(gamma + 1) * vocab].iter().map(|&x| x * inv_temp));
-        softmax(&s.lt, &mut s.p_t);
-        sample_cdf(&s.p_t, u_sample[gamma]) as i32
+        sample_scaled_softmax(
+            &t_logits[gamma * vocab..(gamma + 1) * vocab],
+            inv_temp,
+            u_sample[gamma],
+            &mut s.p_t,
+        ) as i32
     };
     out.tokens.push(corr);
     out.accepted = accepted;
@@ -181,7 +180,180 @@ pub fn host_verify_with(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sampling::{sample_cdf, softmax};
     use crate::util::rng::Rng;
+
+    /// The pre-vectorization scalar verification path, kept verbatim
+    /// (own scalar softmax/argmax/overlap/CDF copies, per-row scaled
+    /// `lt`/`ld` buffers, guarded log-space mixture) as the differential
+    /// reference for the kernel rewire.
+    mod legacy {
+        use crate::model::{VerifyKnobs, VerifyOutcome};
+
+        const EPS: f32 = 1e-9;
+
+        fn softmax(logits: &[f32], out: &mut Vec<f32>) -> f32 {
+            out.clear();
+            let mut max = f32::NEG_INFINITY;
+            for &x in logits {
+                max = max.max(x);
+            }
+            let mut sum = 0f32;
+            for &x in logits {
+                let e = (x - max).exp();
+                out.push(e);
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            let mut entropy = 0f32;
+            for p in out.iter_mut() {
+                *p *= inv;
+                if *p > 0.0 {
+                    entropy -= *p * p.ln();
+                }
+            }
+            entropy
+        }
+
+        fn argmax(xs: &[f32]) -> usize {
+            let mut best = 0usize;
+            let mut bv = f32::NEG_INFINITY;
+            for (i, &x) in xs.iter().enumerate() {
+                if x > bv {
+                    bv = x;
+                    best = i;
+                }
+            }
+            best
+        }
+
+        fn sample_cdf(probs: &[f32], u: f32) -> usize {
+            let mut cdf = 0f32;
+            let mut idx = 0usize;
+            for &p in probs {
+                cdf += p;
+                if cdf <= u {
+                    idx += 1;
+                } else {
+                    break;
+                }
+            }
+            idx.min(probs.len() - 1)
+        }
+
+        fn overlap(p: &[f32], q: &[f32]) -> f32 {
+            p.iter().zip(q).map(|(&a, &b)| a.min(b)).sum()
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        pub fn host_verify(
+            gamma: usize,
+            vocab: usize,
+            t_logits: &[f32],
+            d_logits: &[f32],
+            d_tokens: &[i32],
+            u_accept: &[f32],
+            u_sample: &[f32],
+            knobs: VerifyKnobs,
+        ) -> VerifyOutcome {
+            let greedy = knobs.temp <= 0.0;
+            let inv_temp = if greedy { 1.0 } else { 1.0 / knobs.temp.max(EPS) };
+            let mut out = VerifyOutcome {
+                tokens: Vec::new(),
+                accepted: 0,
+                key_flags: Vec::new(),
+                stats: Vec::new(),
+            };
+            let (mut lt, mut ld) = (Vec::new(), Vec::new());
+            let (mut p_t, mut p_d) = (Vec::new(), Vec::new());
+            let (mut log_mix, mut mix, mut blend) = (Vec::new(), Vec::new(), Vec::new());
+            let (mut mix_rows, mut pd_rows) = (Vec::new(), Vec::new());
+            let mut accepted = 0usize;
+            let mut rejected = false;
+
+            for j in 0..gamma {
+                let y = d_tokens[j] as usize;
+                lt.clear();
+                lt.extend(t_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
+                ld.clear();
+                ld.extend(d_logits[j * vocab..(j + 1) * vocab].iter().map(|&x| x * inv_temp));
+                softmax(&lt, &mut p_t);
+                softmax(&ld, &mut p_d);
+                let pt_y = p_t[y];
+                let pd_y = p_d[y];
+                let h_d = -(pd_y + EPS).ln();
+                let h_t = -(pt_y + EPS).ln();
+                let normmatch = overlap(&p_t, &p_d);
+                let is_key = knobs.adaptive
+                    && (h_d / (h_t + EPS) > knobs.lam1
+                        || (pt_y - pd_y).abs() > knobs.lam2
+                        || normmatch < knobs.lam3);
+                let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
+
+                log_mix.clear();
+                for (&a, &b) in p_t.iter().zip(&p_d) {
+                    log_mix.push((1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln());
+                }
+                softmax(&log_mix, &mut mix);
+
+                let (accept, accept_prob) = if greedy {
+                    blend.clear();
+                    let tl = &t_logits[j * vocab..(j + 1) * vocab];
+                    let dl = &d_logits[j * vocab..(j + 1) * vocab];
+                    for (&a, &b) in tl.iter().zip(dl) {
+                        blend.push((1.0 - tau_j) * a + tau_j * b);
+                    }
+                    let ok = argmax(&blend) == y;
+                    (ok, if ok { 1.0 } else { 0.0 })
+                } else {
+                    let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+                    (u_accept[j] < ratio, ratio)
+                };
+
+                out.key_flags.push(is_key);
+                out.stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+                mix_rows.extend_from_slice(&mix);
+                pd_rows.extend_from_slice(&p_d);
+
+                if accept && !rejected {
+                    out.tokens.push(y as i32);
+                    accepted += 1;
+                } else if !rejected {
+                    rejected = true;
+                }
+            }
+
+            let corr = if accepted < gamma {
+                if greedy {
+                    argmax(&t_logits[accepted * vocab..(accepted + 1) * vocab]) as i32
+                } else {
+                    let mix = &mix_rows[accepted * vocab..(accepted + 1) * vocab];
+                    let pd = &pd_rows[accepted * vocab..(accepted + 1) * vocab];
+                    let mut resid: Vec<f32> =
+                        mix.iter().zip(pd).map(|(&m, &p)| (m - p).max(0.0)).collect();
+                    let mass: f32 = resid.iter().sum();
+                    if mass > EPS {
+                        resid.iter_mut().for_each(|r| *r /= mass);
+                        sample_cdf(&resid, u_sample[accepted]) as i32
+                    } else {
+                        sample_cdf(mix, u_sample[accepted]) as i32
+                    }
+                }
+            } else if greedy {
+                argmax(&t_logits[gamma * vocab..(gamma + 1) * vocab]) as i32
+            } else {
+                lt.clear();
+                lt.extend(
+                    t_logits[gamma * vocab..(gamma + 1) * vocab].iter().map(|&x| x * inv_temp),
+                );
+                softmax(&lt, &mut p_t);
+                sample_cdf(&p_t, u_sample[gamma]) as i32
+            };
+            out.tokens.push(corr);
+            out.accepted = accepted;
+            out
+        }
+    }
 
     #[allow(clippy::type_complexity)]
     fn case(
@@ -206,6 +378,60 @@ mod tests {
         let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
         let us: Vec<f32> = (0..gamma + 1).map(|_| rng.f32()).collect();
         (t, d, toks, ua, us)
+    }
+
+    #[test]
+    fn vectorized_kernels_match_legacy_scalar_path() {
+        // The kernel rewire's contract: accept/reject decisions, tokens,
+        // and key flags identical to the scalar path on the pinned
+        // corpus; stats tight-ulp (sum reductions re-treed, the mixture
+        // `ln`s eliminated algebraically). temp == 1.0 rows additionally
+        // pin the `inv_temp == 1.0` multiply-skip against the legacy
+        // form's explicit `x * 1.0` row copies.
+        let adaptive = |temp: f32| VerifyKnobs {
+            tau: 0.4,
+            lam1: 2.5,
+            lam2: 0.25,
+            lam3: 0.45,
+            temp,
+            adaptive: true,
+        };
+        // Every row relaxed: exercises the τ>0 blend path throughout.
+        let relaxed = |temp: f32| VerifyKnobs {
+            tau: 0.5,
+            lam1: f32::INFINITY,
+            lam2: f32::INFINITY,
+            lam3: -1.0,
+            temp,
+            adaptive: true,
+        };
+        for seed in 0..30 {
+            let gamma = 1 + (seed as usize % 8);
+            for &vocab in &[33usize, 64] {
+                let (t, d, toks, ua, us) = case(seed, gamma, vocab, 0.6);
+                for knobs in [
+                    VerifyKnobs::strict(1.0),
+                    VerifyKnobs::strict(0.0),
+                    VerifyKnobs::strict(0.8),
+                    adaptive(1.0),
+                    adaptive(0.0),
+                    relaxed(1.0),
+                    relaxed(0.8),
+                ] {
+                    let want = legacy::host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+                    let got = host_verify(gamma, vocab, &t, &d, &toks, &ua, &us, knobs);
+                    assert_eq!(want.tokens, got.tokens, "seed {seed} vocab {vocab}");
+                    assert_eq!(want.accepted, got.accepted, "seed {seed}");
+                    assert_eq!(want.key_flags, got.key_flags, "seed {seed}");
+                    for (i, (&a, &b)) in want.stats.iter().zip(&got.stats).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 2e-4 * a.abs().max(1.0),
+                            "seed {seed} vocab {vocab} stat[{i}]: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,8 +18,11 @@
 
 use anyhow::{bail, Result};
 
+use crate::kernels::{
+    argmax, blend_argmax, mix_row_into, residual_sample, sample_scaled_softmax, verify_row_stats,
+};
 use crate::model::{TreeWindow, VerifyKnobs};
-use crate::sampling::{argmax, overlap, sample_cdf, softmax, softmax_with_temp, top_k_indices_with};
+use crate::sampling::{softmax_with_temp, top_k_indices_with};
 
 const EPS: f32 = 1e-9;
 
@@ -422,8 +425,11 @@ pub struct TreeVerifyResult {
 ///   indexed by accepted-path length.
 ///
 /// With a chain-shaped tree (branching 1) this reproduces `host_verify`
-/// byte-for-byte — the per-node arithmetic is kept operation-for-
-/// operation identical to `reference.rs`.
+/// byte-for-byte — the per-node arithmetic calls the exact
+/// [`crate::kernels`] sequence of `reference.rs` in the exact same order
+/// (fused `verify_row_stats`, `ln`-free `mix_row_into`, fused residual/
+/// bonus resamples), which is what keeps `tests/props.rs`'s bitwise
+/// chain ≡ tree pin green.
 pub fn host_verify_tree(
     tree: &DraftTree,
     vocab: usize,
@@ -444,63 +450,47 @@ pub fn host_verify_tree(
     let mut key_flags = Vec::with_capacity(n);
     let mut stats = Vec::with_capacity(n * 6);
     let mut accepts = Vec::with_capacity(n);
-    let mut mix_rows: Vec<Vec<f32>> = Vec::with_capacity(n);
-    let mut pd_rows: Vec<Vec<f32>> = Vec::with_capacity(n);
+    let mut mix_rows = vec![0.0f32; n * vocab];
+    let mut pd_rows = vec![0.0f32; n * vocab];
+    let mut et = Vec::new();
+    let mut resid = Vec::new();
 
-    let mut p_t = Vec::new();
-    let mut p_d = Vec::new();
     for j in 0..n {
         let y = tree.token(j) as usize;
         let tslot = tree.parent(j).map_or(0, |p| p + 1);
         let qrow = tree.q_row(j);
-        let lt: Vec<f32> = t_logits[tslot * vocab..(tslot + 1) * vocab]
-            .iter()
-            .map(|&x| x * inv_temp)
-            .collect();
-        let ld: Vec<f32> = d_logits[qrow * vocab..(qrow + 1) * vocab]
-            .iter()
-            .map(|&x| x * inv_temp)
-            .collect();
-        softmax(&lt, &mut p_t);
-        softmax(&ld, &mut p_d);
-        let pt_y = p_t[y];
-        let pd_y = p_d[y];
-        let h_d = -(pd_y + EPS).ln();
-        let h_t = -(pt_y + EPS).ln();
-        let normmatch = overlap(&p_t, &p_d);
+        let t_row = &t_logits[tslot * vocab..(tslot + 1) * vocab];
+        let d_row = &d_logits[qrow * vocab..(qrow + 1) * vocab];
+        let pd = &mut pd_rows[j * vocab..(j + 1) * vocab];
+        let row = verify_row_stats(t_row, d_row, inv_temp, y, &mut et, pd);
         let is_key = knobs.adaptive
-            && (h_d / (h_t + EPS) > knobs.lam1
-                || (pt_y - pd_y).abs() > knobs.lam2
-                || normmatch < knobs.lam3);
+            && (row.h_d / (row.h_t + EPS) > knobs.lam1
+                || (row.pt_y - row.pd_y).abs() > knobs.lam2
+                || row.normmatch < knobs.lam3);
         let tau_j = if knobs.adaptive && !is_key { knobs.tau } else { 0.0 };
 
-        // Eq. 8 in log space, renormalized.
-        let log_mix: Vec<f32> = p_t
-            .iter()
-            .zip(&p_d)
-            .map(|(&a, &b)| (1.0 - tau_j) * (a + 1e-45).ln() + tau_j * (b + 1e-45).ln())
-            .collect();
-        let mut mix = Vec::new();
-        softmax(&log_mix, &mut mix);
-
         let (accept, accept_prob) = if greedy {
-            let blend: Vec<f32> = t_logits[tslot * vocab..(tslot + 1) * vocab]
-                .iter()
-                .zip(&d_logits[qrow * vocab..(qrow + 1) * vocab])
-                .map(|(&a, &b)| (1.0 - tau_j) * a + tau_j * b)
-                .collect();
-            let ok = argmax(&blend) == y;
+            let ok = blend_argmax(t_row, d_row, tau_j) == y;
             (ok, if ok { 1.0 } else { 0.0 })
         } else {
-            let ratio = (mix[y] / (pd_y + EPS)).min(1.0);
+            // Eq. 8 mixture in scaled-logit space (softmax
+            // shift-invariance; no per-element ln).
+            let mix = &mut mix_rows[j * vocab..(j + 1) * vocab];
+            mix_row_into(t_row, d_row, inv_temp, tau_j, &et, row.inv_sum_t, mix);
+            let ratio = (mix[y] / (row.pd_y + EPS)).min(1.0);
             (u_accept[j] < ratio, ratio)
         };
 
         key_flags.push(is_key);
-        stats.extend_from_slice(&[h_d, h_t, pt_y, pd_y, normmatch, accept_prob]);
+        stats.extend_from_slice(&[
+            row.h_d,
+            row.h_t,
+            row.pt_y,
+            row.pd_y,
+            row.normmatch,
+            accept_prob,
+        ]);
         accepts.push(accept);
-        mix_rows.push(mix);
-        pd_rows.push(p_d.clone());
     }
 
     // Longest accepted root-path: descend through the first accepted
@@ -535,33 +525,21 @@ pub fn host_verify_tree(
             if greedy {
                 argmax(&t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]) as i32
             } else {
-                let mix = &mix_rows[rej];
-                let pd = &pd_rows[rej];
-                let mut resid: Vec<f32> = mix
-                    .iter()
-                    .zip(pd)
-                    .map(|(&m, &p)| (m - p).max(0.0))
-                    .collect();
-                let mass: f32 = resid.iter().sum();
-                if mass > EPS {
-                    resid.iter_mut().for_each(|r| *r /= mass);
-                    sample_cdf(&resid, u_sample[accepted]) as i32
-                } else {
-                    sample_cdf(mix, u_sample[accepted]) as i32
-                }
+                let mix = &mix_rows[rej * vocab..(rej + 1) * vocab];
+                let pd = &pd_rows[rej * vocab..(rej + 1) * vocab];
+                residual_sample(mix, pd, u_sample[accepted], EPS, &mut resid) as i32
             }
         }
         None => {
             if greedy {
                 argmax(&t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]) as i32
             } else {
-                let lt: Vec<f32> = t_logits[cur_slot * vocab..(cur_slot + 1) * vocab]
-                    .iter()
-                    .map(|&x| x * inv_temp)
-                    .collect();
-                let mut bonus = Vec::new();
-                softmax(&lt, &mut bonus);
-                sample_cdf(&bonus, u_sample[accepted]) as i32
+                sample_scaled_softmax(
+                    &t_logits[cur_slot * vocab..(cur_slot + 1) * vocab],
+                    inv_temp,
+                    u_sample[accepted],
+                    &mut et,
+                ) as i32
             }
         }
     };

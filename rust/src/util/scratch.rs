@@ -16,49 +16,32 @@
 //! dependency cycle.
 
 /// Buffers for one host verification pass (`spec::reference::
-/// host_verify_with`, and the tree twin). Row buffers hold one
-/// vocab-length distribution; `mix_rows`/`pd_rows` hold the flattened
-/// `[gamma, vocab]` per-slot distributions the correction resample needs.
+/// host_verify_with`). The vectorized kernel rewire
+/// (`crate::kernels`) eliminated the scaled-row copies (`lt`/`ld`), the
+/// materialized target row (`p_t` now holds the *raw exponential* row),
+/// the log-mixture staging rows, and the greedy blend row — per-slot
+/// mixtures and draft distributions land directly in the flat
+/// `[gamma, vocab]` stores the correction resample reads.
 #[derive(Debug, Clone, Default)]
 pub struct VerifyScratch {
-    /// Temperature-scaled target logits row.
-    pub lt: Vec<f32>,
-    /// Temperature-scaled draft logits row.
-    pub ld: Vec<f32>,
-    /// Target distribution row (softmax of `lt`).
+    /// Raw target exponential row `exp(t·inv_temp − max)` (also the
+    /// bonus-token softmax scratch). The normalized target distribution
+    /// is never materialized — only `et[y]·inv_sum_t` is read.
     pub p_t: Vec<f32>,
-    /// Draft distribution row (softmax of `ld`).
-    pub p_d: Vec<f32>,
-    /// Eq. 8 log-space mixture row before renormalization.
-    pub log_mix: Vec<f32>,
-    /// Renormalized mixture row.
-    pub mix: Vec<f32>,
     /// All mixture rows, `[gamma, vocab]` flattened (correction input).
     pub mix_rows: Vec<f32>,
     /// All draft distribution rows, `[gamma, vocab]` flattened.
     pub pd_rows: Vec<f32>,
     /// Residual distribution for the correction resample.
     pub resid: Vec<f32>,
-    /// Greedy-path blended logits row.
-    pub blend: Vec<f32>,
 }
 
 impl VerifyScratch {
     /// Pre-reserve for windows up to `gamma` over a `vocab`-wide model,
     /// so the first verification after this call does not grow anything.
     pub fn reserve(&mut self, gamma: usize, vocab: usize) {
-        for b in [
-            &mut self.lt,
-            &mut self.ld,
-            &mut self.p_t,
-            &mut self.p_d,
-            &mut self.log_mix,
-            &mut self.mix,
-            &mut self.resid,
-            &mut self.blend,
-        ] {
-            b.reserve(vocab);
-        }
+        self.p_t.reserve(vocab);
+        self.resid.reserve(vocab);
         self.mix_rows.reserve(gamma * vocab);
         self.pd_rows.reserve(gamma * vocab);
     }
@@ -155,7 +138,9 @@ mod tests {
     fn verify_reserve_prevents_growth() {
         let mut v = VerifyScratch::default();
         v.reserve(8, 64);
-        assert!(v.lt.capacity() >= 64);
+        assert!(v.p_t.capacity() >= 64);
+        assert!(v.resid.capacity() >= 64);
         assert!(v.mix_rows.capacity() >= 8 * 64);
+        assert!(v.pd_rows.capacity() >= 8 * 64);
     }
 }

@@ -21,8 +21,12 @@ use std::sync::{Mutex, MutexGuard};
 
 use dsd::control::ControllerKind;
 use dsd::coordinator::{OracleChainDecoder, OracleConfig, OracleFleet, OracleRound};
+use dsd::model::{VerifyKnobs, VerifyOutcome};
+use dsd::spec::reference::host_verify_with;
 use dsd::trace::RingTracer;
 use dsd::util::alloc_counter;
+use dsd::util::rng::Rng;
+use dsd::util::scratch::VerifyScratch;
 
 const PROMPT: [i32; 6] = [2, 7, 1, 8, 2, 8];
 const WARMUP_ROUNDS: usize = 40;
@@ -206,6 +210,54 @@ fn steady_metered_round_is_allocation_free() {
     let m = dec.sim.metrics().expect("calibrate attached a registry");
     assert!(m.rounds() > 0, "registry must have aggregated the measured rounds");
     assert!(m.link_estimate().is_some(), "every link observed after warmup");
+}
+
+#[test]
+fn steady_host_verify_is_allocation_free() {
+    // The vectorized verify kernels (`dsd::kernels`) land every row
+    // directly in `VerifyScratch`'s flat stores — after one warming call
+    // per input the whole verification pass (fused row stats, mixing,
+    // correction resample or bonus sample) is heap-silent. This pins the
+    // kernel rewire specifically, independent of the round loop above.
+    let _serial = measure_lock();
+    let (gamma, vocab) = (4usize, 515usize);
+    let knobs =
+        VerifyKnobs { tau: 0.2, lam1: 4.0, lam2: 0.4, lam3: 0.25, temp: 1.0, adaptive: true };
+    let mut cases = Vec::new();
+    for seed in [41u64, 42, 43] {
+        let mut rng = Rng::new(seed);
+        let t: Vec<f32> = (0..(gamma + 1) * vocab).map(|_| rng.normal() as f32 * 2.0).collect();
+        let d: Vec<f32> = (0..gamma * vocab)
+            .enumerate()
+            .map(|(i, _)| 0.7 * t[i] + 0.3 * rng.normal() as f32 * 2.0)
+            .collect();
+        let toks: Vec<i32> = (0..gamma).map(|_| rng.below(vocab as u64) as i32).collect();
+        let ua: Vec<f32> = (0..gamma).map(|_| rng.f32()).collect();
+        let us: Vec<f32> = (0..=gamma).map(|_| rng.f32()).collect();
+        cases.push((t, d, toks, ua, us));
+    }
+    let mut s = VerifyScratch::default();
+    let mut out = VerifyOutcome::default();
+    // warmup: identical deterministic calls, so whatever accept/reject
+    // path each case takes in measurement has already grown its buffers
+    for (t, d, toks, ua, us) in &cases {
+        host_verify_with(gamma, vocab, t, d, toks, ua, us, knobs, &mut s, &mut out);
+    }
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            for (t, d, toks, ua, us) in &cases {
+                host_verify_with(gamma, vocab, t, d, toks, ua, us, knobs, &mut s, &mut out);
+            }
+        }
+    });
+    assert_eq!(
+        counts.allocs,
+        0,
+        "{} warmed verify passes performed {} allocations ({} bytes)",
+        MEASURED_ROUNDS * cases.len(),
+        counts.allocs,
+        counts.bytes
+    );
 }
 
 #[test]

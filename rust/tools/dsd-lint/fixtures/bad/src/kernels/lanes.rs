@@ -1,0 +1,13 @@
+//! Bad fixture: the vectorized kernel module allocates on a round-loop
+//! root's call chain and draws ambient entropy. Never compiled — lexed
+//! only.
+fn lanes_scratch(n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    v.push(thread_rng() as f32);
+    v
+}
+
+pub fn softmax_into(out: &mut Vec<f32>, n: usize) {
+    let lanes = lanes_scratch(n);
+    out.extend(lanes);
+}

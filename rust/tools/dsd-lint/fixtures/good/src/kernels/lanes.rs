@@ -1,0 +1,22 @@
+//! Good fixture: the vectorized kernel writes into a caller buffer with
+//! clear/reserve/push — nothing allocating on the walk, randomness
+//! threaded in as a uniform. Never compiled — lexed only.
+
+pub fn softmax_into(logits: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(logits.len());
+    for &x in logits {
+        out.push(x);
+    }
+}
+
+pub fn cdf_walk_into(probs: &[f32], u: f32, out: &mut usize) {
+    let mut cdf = 0.0f32;
+    *out = 0;
+    for &p in probs {
+        cdf += p;
+        if cdf <= u {
+            *out += 1;
+        }
+    }
+}

@@ -43,12 +43,22 @@ const SIM_TIME_ALLOWLIST: &[&str] = &[
 /// `telemetry/` is here because its EWMA link estimates feed controller
 /// decisions (`--calibrate on`): ambient entropy or hash-order iteration
 /// in the registry would leak nondeterminism into committed streams.
-const COMMITTED_PREFIXES: &[&str] =
-    &["src/spec/", "src/sampling/", "src/coordinator/", "src/control/", "src/telemetry/"];
+/// `kernels/` is the canonical implementation of every committed-stream
+/// distribution op (softmax/verify/argmax/top-k), so the same rules bind.
+const COMMITTED_PREFIXES: &[&str] = &[
+    "src/spec/",
+    "src/sampling/",
+    "src/coordinator/",
+    "src/control/",
+    "src/telemetry/",
+    "src/kernels/",
+];
 
 /// Modules the hot-path roots may live in. `telemetry/` records a span
 /// per hot-path event (`FleetMetrics` is a `TraceSink`), so its
 /// recording methods are walked like any other round-loop callee.
+/// `kernels/` holds the vectorized `*_into` distribution kernels every
+/// verify/sampling round runs, so its roots are walked too.
 const HOT_ROOT_PREFIXES: &[&str] = &[
     "src/sampling/",
     "src/spec/",
@@ -56,6 +66,7 @@ const HOT_ROOT_PREFIXES: &[&str] = &[
     "src/model/",
     "src/cluster/",
     "src/telemetry/",
+    "src/kernels/",
 ];
 
 /// Round-loop roots beyond the `*_into` / `*_with` naming pattern.

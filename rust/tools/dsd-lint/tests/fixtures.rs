@@ -77,6 +77,22 @@ fn bad_tree_ratchet_reports_growth_over_baseline() {
 }
 
 #[test]
+fn kernels_tree_is_linted_like_a_committed_hot_module() {
+    // `src/kernels/` joined both prefix lists with the vectorized-kernel
+    // rewire: its `*_into` roots are walked for allocation reachability
+    // and it is bound by the committed-stream determinism rules.
+    let r = run_root(&fixture("bad")).unwrap();
+    assert!(has(&r, "hot-path-alloc", "src/kernels/lanes.rs", 5), "{:?}", r.diags);
+    assert!(has(&r, "rng-source", "src/kernels/lanes.rs", 6), "{:?}", r.diags);
+    let d = r
+        .diags
+        .iter()
+        .find(|d| d.rule == "hot-path-alloc" && d.file == "src/kernels/lanes.rs")
+        .expect("kernels hot-path-alloc diagnostic");
+    assert!(d.msg.contains("softmax_into -> lanes_scratch"), "{}", d.msg);
+}
+
+#[test]
 fn good_tree_is_clean_and_all_waivers_are_used() {
     let r = run_root(&fixture("good")).unwrap();
     assert!(r.is_clean(), "{:?}", r.diags);
