@@ -1,0 +1,289 @@
+//! Serving-tier ablation: shards × arrival rate × KV page size,
+//! engine-free, under the open-loop MMPP workload.
+//!
+//! Every cell serves the SAME request set (ids, prompts, heavy-tailed
+//! generation targets are drawn once per rate from a fixed seed)
+//! through a [`ShardTier`], varying only the serving arm:
+//!
+//! * **single** — one coordinator: 1 shard, worst-case slot KV, holding
+//!   the tier's entire KV capacity (`shards * slots` slots) on its one
+//!   pipeline. The pre-sharding baseline.
+//! * **independent** — M shards under [`Placement::Hash`] (a static
+//!   partition by request id: M independent coordinators that never
+//!   rebalance), worst-case slot KV, `slots` slots each.
+//! * **sharded+paged** — M shards under [`Placement::LeastLoaded`] with
+//!   a [`PagedKvPool`](dsd::model::PagedKvPool) per shard (one cell per
+//!   swept page size). Same pipelines as *independent*, same KV tokens
+//!   as both baselines: `shards * slots * slot_tokens` — equal simulated
+//!   hardware, different admission and placement only.
+//!
+//! The bench asserts, and exits nonzero otherwise:
+//! * **differential** — every arm and every page size commits
+//!   byte-identical per-request token streams at every rate (placement,
+//!   paging, eviction, and arrival timing move time, never tokens);
+//! * **win criterion** — at the highest (saturating) arrival rate,
+//!   every sharded+paged cell beats BOTH baselines on p99 TTFT and
+//!   matches-or-beats both on sustained generated tokens/s. Working-set
+//!   admission widens the fused groups (Eq. 5 gets its `B`), and
+//!   weighted least-loaded placement keeps the heavy tail from piling
+//!   onto one pipeline the way the static partition does.
+//!
+//! A machine-readable `BENCH_shard.json` (config + per-cell rows) is
+//! written next to the crate; CI uploads it with the other BENCH_*
+//! artifacts.
+//!
+//! Run: `cargo bench --bench ablation_shard` \
+//!      `-- [--requests 48] [--rates 25,100,800] [--pages 16,64] [--shards 4]`
+
+use std::collections::BTreeMap;
+
+use dsd::control::ControllerKind;
+use dsd::coordinator::{OracleConfig, Placement, ShardTier, TierConfig, TierReport};
+use dsd::model::VerifyKnobs;
+use dsd::util::bench::write_bench_json;
+use dsd::util::cli;
+use dsd::util::json::Value;
+use dsd::util::table::{fnum, Table};
+use dsd::workload::{dataset, Request, WorkloadGen};
+
+/// One serving arm: a TierConfig delta over the shared oracle config.
+struct Arm {
+    label: &'static str,
+    shards: usize,
+    placement: Placement,
+    paged: bool,
+    page_tokens: usize,
+}
+
+struct CellRun {
+    report: TierReport,
+    streams: BTreeMap<u64, Vec<i32>>,
+}
+
+fn run_arm(
+    arm: &Arm,
+    base: &TierConfig,
+    total_slots: usize,
+    reqs: &[Request],
+) -> anyhow::Result<CellRun> {
+    let mut cfg = base.clone();
+    cfg.shards = arm.shards;
+    cfg.placement = arm.placement;
+    cfg.paged = arm.paged;
+    cfg.page_tokens = arm.page_tokens;
+    // Equal hardware: the same total KV tokens in every arm. The single
+    // coordinator concentrates them on its one pipeline; sharded arms
+    // split them evenly.
+    cfg.slots = total_slots / arm.shards;
+    // Paged thrash guard: at most 2x the worst-case slot count resident.
+    cfg.max_members = 2 * cfg.slots;
+    let mut tier = ShardTier::new(cfg)?;
+    let report = tier.run(reqs)?;
+    Ok(CellRun { report, streams: tier.generated().clone() })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::parse_with(
+        &[
+            "requests", "rates", "pages", "shards", "slots", "slot_tokens", "nodes", "link_ms",
+            "vocab", "gamma", "seed", "profile",
+        ],
+        std::env::args().skip(1).filter(|a| a != "--bench"),
+    )?;
+    let n = args.usize_or("requests", 48)?;
+    let rates = args.f64_list_or("rates", &[25.0, 100.0, 800.0])?;
+    let pages = args.usize_list_or("pages", &[16, 64])?;
+    let shards = args.usize_or("shards", 4)?;
+    let slots = args.usize_or("slots", 4)?;
+    let slot_tokens = args.usize_or("slot_tokens", 192)?;
+    let nodes = args.usize_or("nodes", 4)?;
+    let link_ms = args.f64_or("link_ms", 5.0)?;
+    let vocab = args.usize_or("vocab", 64)?;
+    let gamma = args.usize_or("gamma", 2)?;
+    let seed = args.u64_or("seed", 20250808)?;
+    let profile_name = args.str_or("profile", "humaneval");
+    let profile = dataset(&profile_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset profile '{profile_name}'"))?;
+    anyhow::ensure!(shards >= 1 && slots >= 1, "--shards and --slots must be >= 1");
+    anyhow::ensure!(!rates.is_empty() && !pages.is_empty(), "rates and pages must be non-empty");
+
+    let knobs =
+        VerifyKnobs { tau: 0.2, lam1: 2.5, lam2: 0.25, lam3: 0.45, temp: 1.0, adaptive: true };
+    let oracle = OracleConfig {
+        vocab,
+        corr: 0.9,
+        gamma,
+        knobs,
+        controller: ControllerKind::Static,
+        seed,
+        nodes,
+        link_ms,
+        ..Default::default()
+    };
+    let mut base = TierConfig::new(oracle);
+    base.slot_tokens = slot_tokens;
+    let total_slots = shards * slots;
+
+    let mut arms: Vec<Arm> = vec![
+        Arm {
+            label: "single",
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            paged: false,
+            page_tokens: base.page_tokens,
+        },
+        Arm {
+            label: "independent",
+            shards,
+            placement: Placement::Hash,
+            paged: false,
+            page_tokens: base.page_tokens,
+        },
+    ];
+    for &p in &pages {
+        arms.push(Arm {
+            label: "sharded+paged",
+            shards,
+            placement: Placement::LeastLoaded,
+            paged: true,
+            page_tokens: p,
+        });
+    }
+
+    println!(
+        "# Serving-tier ablation (dsd; {n} requests, {profile_name}, M={shards}, \
+         {total_slots}x{slot_tokens}-token KV total, N={nodes}, t1={link_ms}ms, γ={gamma})"
+    );
+
+    let top_rate = rates.iter().copied().fold(f64::MIN, f64::max);
+    let mut all_identical = true;
+    let mut win_ok = true;
+    let mut win_cells = 0usize;
+    let mut json_cells: Vec<Value> = Vec::new();
+
+    for &rate in &rates {
+        let mut gen = WorkloadGen::new(profile.clone(), vocab, seed);
+        let reqs = gen.open_loop(n, rate, 4.0, 4);
+        let mut table = Table::new(
+            format!("{profile_name} @ {rate} req/s (open-loop MMPP, burst 4x)"),
+            &[
+                "arm", "page", "ttft p50 ms", "ttft p99 ms", "p99 lat ms", "tok/s", "preempt",
+                "readmit", "peak B", "identical",
+            ],
+        );
+        let mut baseline: Option<CellRun> = None; // the `single` arm
+        let mut indep_p99 = 0u64;
+        let mut indep_tps = 0.0f64;
+        for arm in &arms {
+            let cell = run_arm(arm, &base, total_slots, &reqs)?;
+            let identical = match baseline.as_ref() {
+                None => true,
+                Some(b) => cell.streams == b.streams,
+            };
+            all_identical &= identical;
+            let r = &cell.report;
+            let p99_ttft = r.ttft.quantile(0.99);
+            let tps = r.tokens_per_s();
+            if arm.label == "independent" {
+                indep_p99 = p99_ttft;
+                indep_tps = tps;
+            }
+            if arm.paged && rate == top_rate {
+                let single = baseline.as_ref().expect("single arm runs first");
+                let s_p99 = single.report.ttft.quantile(0.99);
+                let s_tps = single.report.tokens_per_s();
+                let won =
+                    p99_ttft < s_p99 && p99_ttft < indep_p99 && tps >= s_tps && tps >= indep_tps;
+                win_ok &= won;
+                win_cells += 1;
+            }
+            let preempted: u64 = r.shards.iter().map(|s| s.preempted).sum();
+            let readmits: u64 = r.shards.iter().map(|s| s.readmits).sum();
+            let peak_b = r.shards.iter().map(|s| s.peak_members).max().unwrap_or(0);
+            table.row(vec![
+                arm.label.to_string(),
+                if arm.paged { arm.page_tokens.to_string() } else { "-".into() },
+                fnum(r.ttft.quantile(0.5) as f64 / 1e6, 1),
+                fnum(p99_ttft as f64 / 1e6, 1),
+                fnum(r.latency.quantile(0.99) as f64 / 1e6, 1),
+                fnum(tps, 1),
+                preempted.to_string(),
+                readmits.to_string(),
+                peak_b.to_string(),
+                if identical { "yes".into() } else { "DIVERGED".into() },
+            ]);
+            json_cells.push(Value::obj(&[
+                ("arm", arm.label.into()),
+                ("rate_rps", rate.into()),
+                ("shards", arm.shards.into()),
+                ("paged", arm.paged.into()),
+                ("page_tokens", if arm.paged { arm.page_tokens.into() } else { 0usize.into() }),
+                ("ttft_p50_ms", (r.ttft.quantile(0.5) as f64 / 1e6).into()),
+                ("ttft_p99_ms", (p99_ttft as f64 / 1e6).into()),
+                ("latency_p99_ms", (r.latency.quantile(0.99) as f64 / 1e6).into()),
+                ("tokens_per_s", tps.into()),
+                ("tokens", r.tokens.into()),
+                ("finish_ms", (r.finish_ns as f64 / 1e6).into()),
+                ("preempted", preempted.into()),
+                ("readmits", readmits.into()),
+                ("peak_members", peak_b.into()),
+                ("streams_identical_to_single", identical.into()),
+            ]));
+            if baseline.is_none() {
+                baseline = Some(cell);
+            }
+        }
+        table.print();
+        println!();
+    }
+
+    println!(
+        "differential     {}",
+        if all_identical {
+            "PASS (every arm and page size committed byte-identical per-request streams)"
+        } else {
+            "FAIL (placement or paging leaked into commits — determinism bug)"
+        }
+    );
+    let win_ok = win_ok && win_cells > 0;
+    println!(
+        "win criterion    {}",
+        if win_ok {
+            "PASS (sharded+paged beat single and independent on p99 TTFT and tokens/s \
+             at the saturating rate)"
+        } else {
+            "FAIL (sharding + paged admission did not pay at saturation — \
+             check placement weights and paged admission)"
+        }
+    );
+
+    let json = Value::obj(&[
+        (
+            "config",
+            Value::obj(&[
+                ("requests", n.into()),
+                ("profile", profile_name.as_str().into()),
+                ("rates_rps", Value::Array(rates.iter().map(|&r| r.into()).collect())),
+                ("pages", Value::Array(pages.iter().map(|&p| p.into()).collect())),
+                ("shards", shards.into()),
+                ("slots_per_shard", slots.into()),
+                ("slot_tokens", slot_tokens.into()),
+                ("nodes", nodes.into()),
+                ("link_ms", link_ms.into()),
+                ("vocab", vocab.into()),
+                ("gamma", gamma.into()),
+                ("seed", seed.into()),
+            ]),
+        ),
+        ("cells", Value::Array(json_cells)),
+        ("differential_pass", all_identical.into()),
+        ("win_criterion_pass", win_ok.into()),
+    ]);
+    let path = write_bench_json("shard", &json)?;
+    println!("wrote {}", path.display());
+
+    if !all_identical || !win_ok {
+        anyhow::bail!("ablation_shard smoke criteria failed");
+    }
+    Ok(())
+}

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::{LinkModel, Topology};
 use crate::control::ControllerKind;
+use crate::coordinator::router::Placement;
 use crate::spec::{DecodeConfig, DraftShape, Policy};
 use crate::util::cli::{parse_on_off, Args};
 
@@ -69,6 +70,18 @@ pub struct DeployConfig {
     /// model each round from the telemetry EWMA hop estimates (off =
     /// the controller trusts the configured `link_ms` forever).
     pub calibrate: bool,
+    /// Coordinator shards in the serving tier (each a full pipeline
+    /// replica; 1 = the classic single coordinator).
+    pub shards: usize,
+    /// Request placement across shards (`least-loaded` through the
+    /// id-keyed router, `hash` = static id partition).
+    pub placement: Placement,
+    /// Tokens per KV page for the paged admission pool (bounded by the
+    /// per-sequence slot capacity, see [`DeployConfig::slot_tokens`]).
+    pub kv_page_tokens: usize,
+    /// Open-loop arrival rate, requests/second (0 = closed-loop: every
+    /// request available at t=0, the pre-serving-tier behavior).
+    pub arrival_rps: f64,
 }
 
 impl Default for DeployConfig {
@@ -91,6 +104,10 @@ impl Default for DeployConfig {
             seed: 20250710,
             straggler_factor: 3.0,
             calibrate: false,
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            kv_page_tokens: 16,
+            arrival_rps: 0.0,
         }
     }
 }
@@ -152,7 +169,32 @@ impl DeployConfig {
                 self.decode.max_window()
             );
         }
+        if self.shards == 0 {
+            bail!("shards must be >= 1 (1 is the classic single coordinator)");
+        }
+        if self.kv_page_tokens == 0 || self.kv_page_tokens > self.slot_tokens() {
+            bail!(
+                "kv_page_tokens must be in [1, {}] (the per-sequence slot capacity \
+                 for dataset '{}' at max_new_tokens {}), got {}",
+                self.slot_tokens(),
+                self.dataset,
+                self.decode.max_new_tokens,
+                self.kv_page_tokens
+            );
+        }
+        if !self.arrival_rps.is_finite() || self.arrival_rps < 0.0 {
+            bail!("arrival_rps must be a non-negative rate, got {}", self.arrival_rps);
+        }
         self.decode.validate()
+    }
+
+    /// Worst-case tokens one sequence can occupy in the serving tier's
+    /// KV pool: longest dataset prompt + the generation budget + the
+    /// speculation overshoot margin. Slot admission reserves exactly
+    /// this; paged admission only bounds page sizes by it.
+    pub fn slot_tokens(&self) -> usize {
+        let prompt_hi = crate::workload::dataset(&self.dataset).map_or(64, |d| d.prompt_len.1);
+        prompt_hi + self.decode.max_new_tokens + crate::coordinator::shard::KV_MARGIN
     }
 
     pub fn topology(&self) -> Topology {
@@ -255,6 +297,10 @@ impl DeployConfig {
                 self.calibrate = parse_on_off(value)
                     .map_err(|_| anyhow::anyhow!("calibrate expects on|off, got '{value}'"))?
             }
+            "shards" => self.shards = value.parse()?,
+            "placement" => self.placement = Placement::parse(value)?,
+            "kv_page_tokens" => self.kv_page_tokens = value.parse()?,
+            "arrival_rps" => self.arrival_rps = value.parse()?,
             "decode.policy" | "policy" => {
                 self.decode.policy = match value {
                     "baseline" | "autoregressive" | "ar" => Policy::Autoregressive,
@@ -313,7 +359,11 @@ impl DeployConfig {
              requests = {}\n\
              seed = {}\n\
              straggler_factor = {}\n\
-             calibrate = \"{}\"\n\n\
+             calibrate = \"{}\"\n\
+             shards = {}\n\
+             placement = \"{}\"\n\
+             kv_page_tokens = {}\n\
+             arrival_rps = {}\n\n\
              [decode]\n\
              policy = \"{}\"\n\
              gamma = {}\n\
@@ -341,6 +391,10 @@ impl DeployConfig {
             self.seed,
             self.straggler_factor,
             if self.calibrate { "on" } else { "off" },
+            self.shards,
+            self.placement.name(),
+            self.kv_page_tokens,
+            self.arrival_rps,
             self.decode.policy.name(),
             self.decode.gamma,
             self.decode.shape.name(),
@@ -609,6 +663,60 @@ mod tests {
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("straggler_factor"), "{err}");
         assert!(cfg.set("calibrate", "maybe").is_err());
+    }
+
+    #[test]
+    fn serving_tier_knobs_parse_validate_and_roundtrip() {
+        let cfg = DeployConfig::default();
+        assert_eq!(cfg.shards, 1, "single coordinator by default");
+        assert_eq!(cfg.placement, Placement::LeastLoaded);
+        assert_eq!(cfg.kv_page_tokens, 16);
+        assert_eq!(cfg.arrival_rps, 0.0, "closed-loop by default");
+        assert!(cfg.validate().is_ok());
+
+        // shards = 0 is a config-time error
+        let mut cfg = DeployConfig::default();
+        cfg.set("shards", "0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("shards"));
+
+        // kv_page_tokens bounded by the per-sequence slot capacity
+        let mut cfg = DeployConfig::default();
+        cfg.set("kv_page_tokens", "0").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("kv_page_tokens"));
+        let too_big = cfg.slot_tokens() + 1;
+        cfg.set("kv_page_tokens", &too_big.to_string()).unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("slot capacity"), "{err}");
+        cfg.set("kv_page_tokens", &cfg.slot_tokens().to_string()).unwrap();
+        assert!(cfg.validate().is_ok(), "page = slot capacity is the degenerate 1-page pool");
+
+        // placement parse errors are config errors, not panics
+        let mut cfg = DeployConfig::default();
+        let err = cfg.set("placement", "round-robin").unwrap_err().to_string();
+        assert!(err.contains("least-loaded"), "{err}");
+        cfg.set("placement", "hash").unwrap();
+        assert_eq!(cfg.placement, Placement::Hash);
+
+        // arrival_rps must be a non-negative rate
+        let mut cfg = DeployConfig::default();
+        cfg.set("arrival_rps", "-5").unwrap();
+        assert!(cfg.validate().unwrap_err().to_string().contains("arrival_rps"));
+
+        // round-trip through the TOML-lite renderer
+        let mut cfg = DeployConfig::default();
+        cfg.set("shards", "4").unwrap();
+        cfg.set("placement", "hash").unwrap();
+        cfg.set("kv_page_tokens", "32").unwrap();
+        cfg.set("arrival_rps", "250").unwrap();
+        let text = cfg.to_toml();
+        let mut cfg2 = DeployConfig::default();
+        for (k, v) in &parse_toml_lite(&text).unwrap() {
+            cfg2.set(k, v).unwrap();
+        }
+        assert_eq!(cfg2.shards, 4);
+        assert_eq!(cfg2.placement, Placement::Hash);
+        assert_eq!(cfg2.kv_page_tokens, 32);
+        assert!((cfg2.arrival_rps - 250.0).abs() < 1e-9);
     }
 
     #[test]

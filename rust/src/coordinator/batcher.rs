@@ -193,6 +193,37 @@ pub fn next_action_fused(
     }
 }
 
+/// The fused-group packing core, factored out for callers that manage
+/// their own member state: walk `order` (candidate indices, **already
+/// sorted** earliest-ready-first), taking up to `cap` members whose
+/// summed window widths (`widths[i]` for candidate `i`) fit
+/// `token_budget`. The head always packs so an over-wide window cannot
+/// starve; later members are skipped, never split — the same rule
+/// [`next_action_fused`] applies through `SeqView`s. Writes into a
+/// caller-owned buffer so the sharded tier's round loop
+/// ([`crate::coordinator::shard`]) stays allocation-free.
+pub fn pack_earliest_ready(
+    order: &[usize],
+    widths: &[usize],
+    cap: usize,
+    token_budget: usize,
+    group: &mut Vec<usize>,
+) {
+    group.clear();
+    let cap = cap.max(1);
+    let mut used = 0usize;
+    for &m in order {
+        if group.len() >= cap {
+            break;
+        }
+        let w = widths[m];
+        if group.is_empty() || used + w <= token_budget {
+            group.push(m);
+            used += w;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +262,27 @@ mod tests {
     #[test]
     fn done_when_drained() {
         assert_eq!(next_action(0, None, true, &[]), Action::Done);
+    }
+
+    #[test]
+    fn pack_earliest_ready_mirrors_fused_selection() {
+        // widths indexed by candidate id; order already sorted by
+        // (ready, id) as the tier's round loop maintains it
+        let widths = [5usize, 5, 9, 5];
+        let mut group = Vec::new();
+        // budget 10: head + one more 5-wide; the 9-wide is skipped, the
+        // next 5-wide is NOT (skipped-never-split, same as SeqView path)
+        pack_earliest_ready(&[0, 2, 3, 1], &widths, 4, 10, &mut group);
+        assert_eq!(group, vec![0, 3]);
+        // cap truncates before budget does
+        pack_earliest_ready(&[0, 1, 3], &widths, 2, 100, &mut group);
+        assert_eq!(group, vec![0, 1]);
+        // the head always packs even over budget
+        pack_earliest_ready(&[2], &widths, 4, 4, &mut group);
+        assert_eq!(group, vec![2]);
+        // empty candidates -> empty group (buffer reused, not grown)
+        pack_earliest_ready(&[], &widths, 4, 10, &mut group);
+        assert!(group.is_empty());
     }
 
     #[test]

@@ -23,14 +23,16 @@ pub mod decode;
 pub mod overlap;
 pub mod router;
 pub mod session;
+pub mod shard;
 
 pub use batcher::{next_action, next_action_fused, next_action_prefill_first, Action, SeqView};
 pub use decode::{DecodeEngine, RoundOutcome, SequenceResult};
 pub use overlap::{
     FleetReport, OracleChainDecoder, OracleConfig, OracleFleet, OraclePrep, OracleRound, PreDraft,
 };
-pub use router::{RoutePolicy, Router};
+pub use router::{Placement, RoutePolicy, Router};
 pub use session::{SeqState, Sequence};
+pub use shard::{Retired, Shard, ShardRow, ShardTier, TierConfig, TierReport};
 
 use std::collections::VecDeque;
 use std::rc::Rc;

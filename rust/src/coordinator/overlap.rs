@@ -463,6 +463,19 @@ impl OracleChainDecoder {
         self.ready_at
     }
 
+    /// Delay the next round until at least `t` (admission prefill,
+    /// queueing, or a readmission recompute pass finishing at `t`).
+    /// Time-shifting a round start never changes what it commits: every
+    /// stochastic draw is position-keyed, not time-keyed.
+    pub fn schedule_at(&mut self, t: Nanos) {
+        self.ready_at = self.ready_at.max(t);
+    }
+
+    /// Rounds committed so far (the trace key's round component).
+    pub fn round_index(&self) -> u32 {
+        self.round_idx
+    }
+
     fn ctx_hash(&self, prefix: &[i32], salt: u64) -> u64 {
         let tail = &prefix[prefix.len().saturating_sub(8)..];
         let mut h = (self.cfg.seed ^ 0x0AC1E) ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
@@ -940,6 +953,9 @@ pub struct OracleFleet {
     preps: Vec<(usize, OraclePrep, Nanos)>,
     widths: Vec<usize>,
     round_buf: OracleRound,
+    /// Per-member absolute sim time of the FIRST committed decode round
+    /// (0 = none yet): the closed-loop TTFT the serve report exposes.
+    first_commit: Vec<Nanos>,
     group_rounds: u64,
     member_rounds: u64,
     /// Acceptance/overlap stats accumulated across every member round.
@@ -985,11 +1001,19 @@ impl OracleFleet {
             preps: Vec::new(),
             widths: Vec::new(),
             round_buf: OracleRound::default(),
+            first_commit: vec![0; batch],
             group_rounds: 0,
             member_rounds: 0,
             stats: AcceptanceStats::default(),
             drift: Histogram::latency(),
         })
+    }
+
+    /// Absolute sim time member `s` committed its first decode round
+    /// (0 until it has) — time-to-first-token for a batch arriving at
+    /// t = 0.
+    pub fn first_commit(&self, s: usize) -> Nanos {
+        self.first_commit[s]
     }
 
     /// Acceptance/overlap stats over every member round served so far.
@@ -1097,6 +1121,9 @@ impl OracleFleet {
         let mut round_buf = std::mem::take(&mut self.round_buf);
         for (s, prep, _) in preps.drain(..) {
             self.seqs[s].finish_round_into(&mut self.sim, prep, timing, &mut round_buf);
+            if self.first_commit[s] == 0 {
+                self.first_commit[s] = round_buf.finish;
+            }
             self.stats.record(round_buf.record(fuse_width));
             if round_buf.predicted_ns > 0 {
                 self.drift.record(round_buf.predicted_ns.abs_diff(round_buf.round_ns));

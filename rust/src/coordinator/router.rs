@@ -3,8 +3,21 @@
 //! A deployment may run several independent pipeline replicas (each a
 //! chain of N nodes with its own KV pool). The router is the serving
 //! front door: it tracks per-replica load and places each request,
-//! vllm-router-style. Pure decision logic; the multi-replica harness in
-//! the benches drives it.
+//! vllm-router-style. Pure decision logic; the sharded tier in
+//! [`crate::coordinator::shard`] and the multi-replica benches drive it.
+//!
+//! Two release APIs coexist. The original pair-keyed
+//! [`Router::complete`]`(replica, weight)` trusts the caller to replay
+//! the exact placement pair; the id-keyed [`Router::place`] /
+//! [`Router::finish`] pair remembers the placement per sequence id, so
+//! a finish that lands while the tier is mid-way through another
+//! member's preemption releases exactly its own slot, exactly once —
+//! the pair-keyed form stranded counts under that interleaving (see
+//! the regression test below).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
 
 /// Routing policies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -16,6 +29,44 @@ pub enum RoutePolicy {
     LeastTokens,
 }
 
+/// Shard placement policy for the serving tier (`--placement`).
+///
+/// Distinct from [`RoutePolicy`], which picks among interchangeable
+/// replicas: placement decides which coordinator *shard* owns a
+/// sequence for its whole lifetime (a sequence's KV never migrates).
+/// Both policies are pure functions of config + arrival order, so a
+/// fixed placement yields byte-identical committed streams run-to-run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Shared router with a global load view: each arrival goes to the
+    /// shard with the fewest live sequences (lowest index on ties).
+    #[default]
+    LeastLoaded,
+    /// Static partition by request id (`id % shards`) — equivalent to M
+    /// independent coordinators with no shared state; the ablation
+    /// baseline.
+    Hash,
+}
+
+impl Placement {
+    /// Parse a `--placement` value. Unknown names are an `Err` so the
+    /// config layer can surface them as config errors, not panics.
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s {
+            "least-loaded" | "least_loaded" => Ok(Placement::LeastLoaded),
+            "hash" => Ok(Placement::Hash),
+            other => bail!("unknown placement '{other}' (expected least-loaded|hash)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::LeastLoaded => "least-loaded",
+            Placement::Hash => "hash",
+        }
+    }
+}
+
 /// Router state.
 #[derive(Debug)]
 pub struct Router {
@@ -25,6 +76,10 @@ pub struct Router {
     /// Outstanding token budget per replica.
     tokens: Vec<u64>,
     rr_next: usize,
+    /// Live id-keyed placements: id -> (replica, token_weight).
+    /// BTreeMap so any future iteration is deterministic (dsd-lint
+    /// forbids hash-order iteration on serving paths).
+    placed: BTreeMap<u64, (usize, u64)>,
 }
 
 impl Router {
@@ -35,6 +90,7 @@ impl Router {
             inflight: vec![0; replicas],
             tokens: vec![0; replicas],
             rr_next: 0,
+            placed: BTreeMap::new(),
         }
     }
 
@@ -71,10 +127,48 @@ impl Router {
         r
     }
 
-    /// Mark a request complete on its replica.
+    /// Mark a request complete on its replica (pair-keyed legacy form:
+    /// the caller replays the placement pair). Prefer [`Router::place`]
+    /// + [`Router::finish`] anywhere preemption can interleave with
+    /// completion — this form has no memory, so a wrong or repeated
+    /// pair silently strands counts.
     pub fn complete(&mut self, replica: usize, token_weight: u64) {
         self.inflight[replica] = self.inflight[replica].saturating_sub(1);
         self.tokens[replica] = self.tokens[replica].saturating_sub(token_weight);
+    }
+
+    /// Id-keyed placement: route the request and remember its
+    /// (replica, weight) under `id` so [`Router::finish`] can release
+    /// it without the caller bookkeeping the pair. Re-placing a live id
+    /// moves it (the old placement is released first) — counts can
+    /// never double.
+    pub fn place(&mut self, id: u64, token_weight: u64) -> usize {
+        if self.placed.contains_key(&id) {
+            self.finish(id);
+        }
+        let r = self.route(token_weight);
+        self.placed.insert(id, (r, token_weight));
+        r
+    }
+
+    /// Release the placement recorded for `id`, exactly once. Returns
+    /// the replica it was on, or `None` if the id is unknown or already
+    /// finished (a repeated finish is a no-op, never a second
+    /// decrement).
+    pub fn finish(&mut self, id: u64) -> Option<usize> {
+        let (replica, weight) = self.placed.remove(&id)?;
+        self.complete(replica, weight);
+        Some(replica)
+    }
+
+    /// Replica a live id is placed on (`None` once finished).
+    pub fn placed_on(&self, id: u64) -> Option<usize> {
+        self.placed.get(&id).map(|&(r, _)| r)
+    }
+
+    /// Number of live id-keyed placements.
+    pub fn live(&self) -> usize {
+        self.placed.len()
     }
 
     pub fn inflight(&self, replica: usize) -> usize {
@@ -181,5 +275,88 @@ mod tests {
         // over-release saturates at zero rather than underflowing
         r.complete(1, 1_000_000);
         assert_eq!(r.route(1), 1, "saturated replica reads as empty");
+    }
+
+    #[test]
+    fn finish_during_preemption_never_strands_a_slot() {
+        // Regression for the sharded tier: with pair-keyed release
+        // (`complete(replica, weight)`), a sequence finishing while the
+        // tier was mid-way through ANOTHER member's preemption could be
+        // released with the preempted member's pair — saturating_sub
+        // hides the underflow on the wrong replica while the finisher's
+        // replica keeps a stranded inflight count forever, permanently
+        // skewing least-loaded placement. Id-keyed release makes the
+        // interleaving safe by construction.
+        let mut r = Router::new(3, RoutePolicy::LeastLoaded);
+        assert_eq!(r.place(1, 40), 0);
+        assert_eq!(r.place(2, 64), 1);
+        assert_eq!(r.place(3, 40), 2);
+        // Sequence 2 finishes during sequence 3's preemption. The
+        // preemption itself must not touch the router (the sequence
+        // stays placed on its shard; only its KV pages are evicted) —
+        // and the finish releases id 2's own placement, even though
+        // the caller no longer has the (replica, weight) pair in hand.
+        assert_eq!(r.finish(2), Some(1));
+        // A replayed finish (the preemption scan re-observing the
+        // completed member) is a no-op, not a second decrement.
+        assert_eq!(r.finish(2), None);
+        assert_eq!([r.inflight(0), r.inflight(1), r.inflight(2)], [1, 0, 1]);
+        // The freed capacity is immediately routable again...
+        assert_eq!(r.place(4, 40), 1);
+        // ...and full drain leaves nothing stranded on any replica.
+        for id in [1u64, 3, 4] {
+            assert!(r.finish(id).is_some());
+        }
+        assert_eq!(r.live(), 0);
+        for rep in 0..3 {
+            assert_eq!(r.inflight(rep), 0, "replica {rep} stranded a slot");
+        }
+    }
+
+    #[test]
+    fn id_keyed_release_balances_under_mixed_shard_counts() {
+        // Same invariant swept across shard counts with scrambled
+        // finish orders and doubled finishes: all counts must return to
+        // zero — the exact property the single-coordinator era never
+        // exercised.
+        for shards in [1usize, 2, 3, 5] {
+            let mut r = Router::new(shards, RoutePolicy::LeastLoaded);
+            let ids: Vec<u64> = (0..17).collect();
+            for &id in &ids {
+                r.place(id, 8 + id * 3);
+            }
+            // finish in a scrambled (but deterministic) order, each id
+            // twice — the second must be a no-op
+            for &id in ids.iter().rev() {
+                assert!(r.finish(id).is_some());
+                assert_eq!(r.finish(id), None);
+            }
+            assert_eq!(r.live(), 0);
+            for rep in 0..shards {
+                assert_eq!(r.inflight(rep), 0, "shards={shards} replica {rep} stranded");
+            }
+        }
+    }
+
+    #[test]
+    fn replacing_a_live_id_moves_it_without_double_counting() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        assert_eq!(r.place(7, 10), 0);
+        // re-place (e.g. a retry) releases the old placement first
+        let moved = r.place(7, 10);
+        assert_eq!(r.inflight(0) + r.inflight(1), 1, "exactly one live count");
+        assert_eq!(r.placed_on(7), Some(moved));
+        r.finish(7);
+        assert_eq!(r.inflight(0) + r.inflight(1), 0);
+    }
+
+    #[test]
+    fn placement_parses_known_names_and_rejects_unknown() {
+        assert_eq!(Placement::parse("least-loaded").unwrap(), Placement::LeastLoaded);
+        assert_eq!(Placement::parse("least_loaded").unwrap(), Placement::LeastLoaded);
+        assert_eq!(Placement::parse("hash").unwrap(), Placement::Hash);
+        assert_eq!(Placement::parse("hash").unwrap().name(), "hash");
+        let err = Placement::parse("random").unwrap_err().to_string();
+        assert!(err.contains("least-loaded|hash"), "error names the accepted forms: {err}");
     }
 }

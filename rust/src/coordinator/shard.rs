@@ -1,0 +1,906 @@
+//! Sharded serving tier: M coordinator shards behind one router, each a
+//! full pipeline replica, with paged-KV admission.
+//!
+//! This is the layer between requests and rounds. One [`Shard`] owns one
+//! [`PipelineSim`] pipeline (the same per-pipeline hardware every prior
+//! subsystem models) plus its KV capacity, and serves its resident
+//! sequences with fused group rounds exactly like
+//! [`OracleFleet`](super::OracleFleet) — earliest-ready-first packing
+//! via [`batcher::pack_earliest_ready`], one [`PipelineSim::group_pass`]
+//! per round. [`ShardTier`] places each arriving request on a shard
+//! ([`Placement::LeastLoaded`] through the id-keyed [`Router`], or
+//! [`Placement::Hash`] — a static partition equivalent to M independent
+//! coordinators) and advances every shard event-by-event in arrival
+//! order, so the whole run is a pure function of (config, arrival
+//! order): committed streams are byte-identical run-to-run for a fixed
+//! placement — and in fact placement-independent outright, because every
+//! stochastic draw is keyed by (seed, request id, position), never by
+//! which shard or when it ran.
+//!
+//! # KV admission: slots vs pages
+//!
+//! In slot mode a shard admits at most `slots` sequences — the
+//! worst-case reservation the engine-backed [`KvPool`](crate::model::KvPool)
+//! makes. In paged mode ([`TierConfig::paged`]) the same token capacity
+//! backs a [`PagedKvPool`]: admission needs only the *working-set* pages
+//! of the prompt, growth allocates one page at a time, and a page fault
+//! evicts the least-recently-scheduled resident sequence outside the
+//! current group (its pages free; its host state — committed tokens,
+//! controller, pre-draft pool — stays). Readmission re-allocates pages
+//! for the committed prefix and charges one recompute pass replaying it
+//! through the pipeline. More admitted sequences ⇒ wider fused groups ⇒
+//! the paper's Eq. 5 sync amortization actually gets its `B` — that is
+//! the p99-TTFT / throughput win `benches/ablation_shard.rs` pins.
+//!
+//! # Hot-path contract
+//!
+//! [`Shard::serve_round`] is a round-loop root for dsd-lint's
+//! allocation walk and for `tests/alloc_budget.rs`: a steady-state round
+//! with no page fault performs zero heap allocations (packing buffers
+//! are reused, page growth pops a pre-sized free list into a
+//! pre-reserved table). Admission, eviction, and readmission are
+//! documented budget exceptions, like prefill.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::clock::Nanos;
+use crate::cluster::sim::PipelineSim;
+use crate::coordinator::batcher::pack_earliest_ready;
+use crate::coordinator::overlap::{OracleChainDecoder, OracleConfig, OraclePrep, OracleRound};
+use crate::coordinator::router::{Placement, Router, RoutePolicy};
+use crate::metrics::Histogram;
+use crate::model::kv_paged::{Grow, PagedKvPool};
+use crate::spec::AcceptanceStats;
+use crate::trace::TraceKey;
+use crate::workload::Request;
+
+/// Extra tokens of KV coverage a sequence may need past
+/// `prompt + target`: the widest grid γ plus the bonus token of its
+/// final (possibly overshooting) round. Generation targets are clamped
+/// so `prompt + target + KV_MARGIN <= slot_tokens`, which is what makes
+/// a single sequence always fit its shard's pool (the eviction
+/// fallback's termination guarantee).
+pub const KV_MARGIN: usize = 16;
+
+/// Serving-tier configuration (engine-free path).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    /// Coordinator shards; each is a full pipeline replica.
+    pub shards: usize,
+    pub placement: Placement,
+    /// Paged KV admission (false = worst-case slot reservation).
+    pub paged: bool,
+    /// Tokens per KV page.
+    pub page_tokens: usize,
+    /// Worst-case slots per shard; both modes size their capacity from
+    /// this (`slots * slot_tokens` tokens of KV per shard) so every
+    /// ablation arm runs equal simulated hardware.
+    pub slots: usize,
+    /// Worst-case tokens one sequence may occupy (prompt + generation
+    /// budget + [`KV_MARGIN`]).
+    pub slot_tokens: usize,
+    /// Paged mode still bounds concurrent residents (thrash guard);
+    /// slot mode is bounded by `slots` regardless.
+    pub max_members: usize,
+    /// Fused group cap per round (`max_fuse`).
+    pub group_cap: usize,
+    /// Summed window-width budget per fused round (`fuse_tokens`).
+    pub token_budget: usize,
+    /// Per-member decode config; `seq_id` is overridden with the
+    /// request id so streams are placement-independent.
+    pub oracle: OracleConfig,
+}
+
+impl TierConfig {
+    /// Defaults mirroring one `OracleFleet` coordinator per shard.
+    pub fn new(oracle: OracleConfig) -> TierConfig {
+        TierConfig {
+            shards: 1,
+            placement: Placement::LeastLoaded,
+            paged: true,
+            page_tokens: 16,
+            slots: 8,
+            slot_tokens: 256,
+            max_members: 32,
+            group_cap: 8,
+            token_budget: 64,
+            oracle,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("tier needs at least one shard");
+        }
+        if self.slots == 0 || self.slot_tokens == 0 {
+            bail!("tier needs slots >= 1 and slot_tokens >= 1");
+        }
+        if self.page_tokens == 0 || self.page_tokens > self.slot_tokens {
+            bail!(
+                "page_tokens must be in [1, slot_tokens={}], got {}",
+                self.slot_tokens,
+                self.page_tokens
+            );
+        }
+        if self.slot_tokens <= KV_MARGIN {
+            bail!("slot_tokens must exceed the {KV_MARGIN}-token KV margin");
+        }
+        if self.max_members == 0 || self.group_cap == 0 || self.token_budget == 0 {
+            bail!("max_members, group_cap and token_budget must be >= 1");
+        }
+        self.oracle.validate_hops()?;
+        Ok(())
+    }
+}
+
+/// One sequence resident on (or preempted from) a shard.
+struct Member {
+    id: u64,
+    dec: OracleChainDecoder,
+    arrival_ns: Nanos,
+    prompt_len: usize,
+    /// Clamped generation target (see [`KV_MARGIN`]).
+    target: usize,
+    /// Absolute sim time of the first committed decode round (0 = none).
+    first_commit: Nanos,
+    /// Paged-KV handle (`usize::MAX` in slot mode).
+    kv: usize,
+    /// True while preempted: pages evicted, host state intact.
+    evicted: bool,
+    /// Eviction order stamp — readmission is FIFO over these.
+    evict_stamp: u64,
+}
+
+impl Member {
+    fn done(&self) -> bool {
+        self.dec.committed.len() - self.prompt_len >= self.target
+    }
+}
+
+/// A finished sequence, handed from shard to tier at retirement.
+pub struct Retired {
+    pub id: u64,
+    pub arrival_ns: Nanos,
+    pub first_commit: Nanos,
+    pub finish: Nanos,
+    pub generated: Vec<i32>,
+}
+
+/// Per-shard counters for the fleet table and `BENCH_shard.json`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardRow {
+    pub placed: u64,
+    pub admitted: u64,
+    pub retired: u64,
+    pub preempted: u64,
+    pub readmits: u64,
+    pub faults: u64,
+    pub pages_total: usize,
+    pub pages_hwm: usize,
+    pub peak_members: usize,
+    pub peak_queue: usize,
+    pub tokens: u64,
+    pub group_rounds: u64,
+    pub member_rounds: u64,
+    pub sync_rounds: u64,
+    pub comm_ns: Nanos,
+    pub finish_ns: Nanos,
+}
+
+/// One coordinator shard: a pipeline replica + its KV capacity + the
+/// fused-group round loop over its resident sequences.
+pub struct Shard {
+    pub sim: PipelineSim,
+    cfg: TierConfig,
+    members: Vec<Member>,
+    queue: VecDeque<Request>,
+    pool: Option<PagedKvPool>,
+    slots_free: usize,
+    per_stage: Vec<Nanos>,
+    /// Sim time the most recent capacity release happened (admissions
+    /// blocked on capacity start here, not at their arrival).
+    cap_free_at: Nanos,
+    next_stamp: u64,
+    // Reusable round-loop buffers (zero-alloc steady state).
+    pending: Vec<usize>,
+    group: Vec<usize>,
+    kept: Vec<usize>,
+    kept_kv: Vec<usize>,
+    group_kv: Vec<usize>,
+    widths: Vec<usize>,
+    gwidths: Vec<usize>,
+    preps: Vec<(usize, OraclePrep, Nanos)>,
+    round_buf: OracleRound,
+    stats: AcceptanceStats,
+    row: ShardRow,
+}
+
+impl Shard {
+    /// Build shard `idx` of a tier (per-shard sim seed; identical
+    /// topology and KV capacity across shards).
+    pub fn new(cfg: &TierConfig, idx: usize) -> Result<Shard> {
+        cfg.validate()?;
+        let topo = cfg.oracle.topology();
+        let sim_seed = cfg.oracle.seed ^ 0xF7 ^ (idx as u64).wrapping_mul(0x9E37);
+        let sim = PipelineSim::new(topo, sim_seed);
+        let per_stage =
+            vec![cfg.oracle.per_token_pass_ns / cfg.oracle.nodes as Nanos; cfg.oracle.nodes];
+        let pool = if cfg.paged {
+            let pages_per_slot = cfg.slot_tokens.div_ceil(cfg.page_tokens);
+            Some(PagedKvPool::new(cfg.slots * pages_per_slot, cfg.page_tokens))
+        } else {
+            None
+        };
+        Ok(Shard {
+            sim,
+            slots_free: cfg.slots,
+            cfg: cfg.clone(),
+            members: Vec::new(),
+            queue: VecDeque::new(),
+            pool,
+            per_stage,
+            cap_free_at: 0,
+            next_stamp: 0,
+            pending: Vec::new(),
+            group: Vec::new(),
+            kept: Vec::new(),
+            kept_kv: Vec::new(),
+            group_kv: Vec::new(),
+            widths: Vec::new(),
+            gwidths: Vec::new(),
+            preps: Vec::new(),
+            round_buf: OracleRound::default(),
+            stats: AcceptanceStats::default(),
+            row: ShardRow::default(),
+        })
+    }
+
+    /// Queue a placed request (FIFO admission; no head-of-line bypass,
+    /// so backpressure is deterministic).
+    pub fn enqueue(&mut self, req: Request) {
+        self.queue.push_back(req);
+        self.row.placed += 1;
+        self.row.peak_queue = self.row.peak_queue.max(self.queue.len());
+    }
+
+    /// Live sequences this shard owns (resident + preempted + queued).
+    pub fn load(&self) -> usize {
+        self.members.iter().filter(|m| !m.done()).count() + self.queue.len()
+    }
+
+    /// Earliest time a resident unfinished member could start a round.
+    pub fn next_ready(&self) -> Option<Nanos> {
+        self.members
+            .iter()
+            .filter(|m| !m.evicted && !m.done())
+            .map(|m| m.dec.finish_time())
+            .min()
+    }
+
+    /// Any sequence still owed tokens (resident, preempted, or queued)?
+    pub fn draining(&self) -> bool {
+        !self.queue.is_empty() || self.members.iter().any(|m| !m.done())
+    }
+
+    fn clamp_target(&self, prompt_len: usize, want: usize) -> usize {
+        let cap = self.cfg.slot_tokens.saturating_sub(prompt_len + KV_MARGIN);
+        want.min(cap).max(1)
+    }
+
+    /// Readmit preempted members (FIFO by eviction stamp) and admit
+    /// queued requests whose arrival is <= `t`, while capacity allows.
+    /// Readmission charges a recompute pass over the committed prefix;
+    /// admission charges a prefill pass over the prompt. Both paths
+    /// allocate — they are outside the round loop's zero-alloc budget
+    /// by design.
+    pub fn pump(&mut self, t: Nanos) {
+        // Readmits take priority over new admissions (they already hold
+        // a router placement and their latency clock is running).
+        loop {
+            let mut pick: Option<(u64, usize)> = None;
+            for (i, m) in self.members.iter().enumerate() {
+                if m.evicted && !m.done() {
+                    let key = (m.evict_stamp, i);
+                    if pick.map_or(true, |p| (p.0, p.1) > key) {
+                        pick = Some(key);
+                    }
+                }
+            }
+            let Some((_, i)) = pick else { break };
+            let committed = self.members[i].dec.committed.len();
+            let Some(pool) = self.pool.as_mut() else { break };
+            if !pool.readmit(self.members[i].kv, committed) {
+                break;
+            }
+            self.row.readmits += 1;
+            // Recompute: replay the committed prefix through the
+            // pipeline (one pass of width = prefix), then decode from
+            // its finish. Bit-identical KV falls out of purity: oracle
+            // rows are functions of the prefix, draws are
+            // position-keyed.
+            let start = self.members[i].dec.finish_time().max(self.cap_free_at);
+            let timing = self.sim.window_pass(
+                start,
+                committed,
+                &self.per_stage,
+                self.cfg.oracle.d_model * 4,
+                self.cfg.oracle.vocab * 4,
+            );
+            self.members[i].dec.schedule_at(timing.finish);
+            self.members[i].evicted = false;
+        }
+        // FIFO admissions.
+        while let Some(front) = self.queue.front() {
+            if front.arrival_ns > t {
+                break;
+            }
+            let prompt_len = front.prompt.len().max(1);
+            let has_capacity = match self.pool.as_ref() {
+                Some(pool) => {
+                    self.members.iter().filter(|m| !m.done()).count() < self.cfg.max_members
+                        && pool.can_admit(prompt_len)
+                }
+                None => self.slots_free > 0,
+            };
+            if !has_capacity {
+                break;
+            }
+            let req = match self.queue.pop_front() {
+                Some(r) => r,
+                None => break,
+            };
+            if self.admit(req, t).is_err() {
+                break;
+            }
+        }
+    }
+
+    fn admit(&mut self, req: Request, _t: Nanos) -> Result<()> {
+        let prompt: &[i32] = if req.prompt.is_empty() { &[1] } else { &req.prompt };
+        let prompt_len = prompt.len();
+        let target = self.clamp_target(prompt_len, req.max_new_tokens);
+        let horizon = prompt_len + target + KV_MARGIN;
+        let kv = match self.pool.as_mut() {
+            Some(pool) => match pool.admit(req.id, prompt_len, horizon) {
+                Some(h) => h,
+                None => bail!("admission raced capacity away"),
+            },
+            None => {
+                self.slots_free -= 1;
+                usize::MAX
+            }
+        };
+        let cfg = OracleConfig { seq_id: req.id, ..self.cfg.oracle.clone() };
+        let mut dec = OracleChainDecoder::new(cfg, prompt)?;
+        // Prefill: one pipeline pass over the prompt, starting when the
+        // request arrived or when capacity last freed, whichever is
+        // later. TTFT = queueing + prefill + first decode round.
+        let start = req.arrival_ns.max(self.cap_free_at);
+        let timing = self.sim.window_pass(
+            start,
+            prompt_len,
+            &self.per_stage,
+            self.cfg.oracle.d_model * 4,
+            self.cfg.oracle.vocab * 4,
+        );
+        dec.schedule_at(timing.finish);
+        self.members.push(Member {
+            id: req.id,
+            dec,
+            arrival_ns: req.arrival_ns,
+            prompt_len,
+            target,
+            first_commit: 0,
+            kv,
+            evicted: false,
+            evict_stamp: 0,
+        });
+        self.row.admitted += 1;
+        self.row.peak_members = self.row.peak_members.max(self.members.len());
+        // Keep round-loop buffers sized for the member count so the
+        // steady state never grows them mid-round.
+        let n = self.members.len();
+        self.pending.reserve(n);
+        self.group.reserve(n);
+        self.kept.reserve(n);
+        self.kept_kv.reserve(n + 1);
+        self.group_kv.reserve(n);
+        self.widths.reserve(n);
+        self.gwidths.reserve(n);
+        self.preps.reserve(n);
+        Ok(())
+    }
+
+    /// Ensure `m`'s page table covers its next verify window, evicting
+    /// LRU residents on faults. Victims are preferred OUTSIDE the whole
+    /// packed group (`self.group_kv` — evicting a group-mate costs a
+    /// recompute next round); when only group-mates remain, the
+    /// fallback excludes just `self.kept_kv` ("kept so far + the member
+    /// being ensured"), so a grower can never evict itself or an
+    /// already-kept peer — the head's exclusion list is then exactly
+    /// itself, which is the progress guarantee. Returns false if the
+    /// growth cannot be satisfied this round (the member is deferred).
+    /// No-fault calls are allocation-free.
+    fn ensure_kv(&mut self, m: usize, width: usize) -> bool {
+        if self.pool.is_none() {
+            return true;
+        }
+        let need = self.members[m].dec.committed.len() + width;
+        let handle = self.members[m].kv;
+        loop {
+            let Some(pool) = self.pool.as_mut() else { return true };
+            match pool.grow(handle, need) {
+                Grow::Held | Grow::Allocated(_) => {
+                    pool.touch(handle);
+                    return true;
+                }
+                Grow::Fault => {
+                    self.row.faults += 1;
+                    let vh = match pool.lru_resident_except(&self.group_kv) {
+                        Some(h) => h,
+                        None => match pool.lru_resident_except(&self.kept_kv) {
+                            Some(h) => h,
+                            None => return false,
+                        },
+                    };
+                    pool.evict(vh);
+                    self.row.preempted += 1;
+                    self.next_stamp += 1;
+                    let stamp = self.next_stamp;
+                    for mem in self.members.iter_mut() {
+                        if mem.kv == vh {
+                            mem.evicted = true;
+                            mem.evict_stamp = stamp;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One fused group round over the resident unfinished members
+    /// (earliest-ready-first within `group_cap` / `token_budget`, page
+    /// growth with LRU preemption, ONE group pass, per-member finish).
+    /// Returns false (and does nothing) when no member can run.
+    pub fn serve_round(&mut self) -> bool {
+        let mut pending = std::mem::take(&mut self.pending);
+        pending.clear();
+        for i in 0..self.members.len() {
+            if !self.members[i].evicted && !self.members[i].done() {
+                pending.push(i);
+            }
+        }
+        if pending.is_empty() {
+            self.pending = pending;
+            return false;
+        }
+        pending.sort_unstable_by_key(|&i| (self.members[i].dec.finish_time(), self.members[i].id));
+        let mut widths = std::mem::take(&mut self.widths);
+        widths.clear();
+        widths.resize(self.members.len(), 0);
+        for &i in &pending {
+            widths[i] = self.members[i].dec.next_window_width();
+        }
+        let mut group = std::mem::take(&mut self.group);
+        let (cap, budget) = (self.cfg.group_cap, self.cfg.token_budget);
+        pack_earliest_ready(&pending, &widths, cap, budget, &mut group);
+        // Page growth before any prep: members whose growth faults with
+        // no victim left are deferred to a later round; the head always
+        // survives (it may evict any other resident, and a single
+        // sequence always fits the pool by slot_tokens sizing).
+        let mut kept = std::mem::take(&mut self.kept);
+        kept.clear();
+        self.kept_kv.clear();
+        self.group_kv.clear();
+        for &m in &group {
+            self.group_kv.push(self.members[m].kv);
+        }
+        for &m in &group {
+            // An earlier grower may have evicted this very member as a
+            // last-resort victim (see ensure_kv); its pages are gone,
+            // so it defers to readmission instead of running.
+            if self.members[m].evicted {
+                continue;
+            }
+            // A grower may never evict itself or an already-kept peer;
+            // the head's fallback exclusion list is then exactly
+            // itself, so it can evict any other resident and always
+            // succeeds (one sequence always fits the pool by
+            // slot_tokens sizing).
+            self.kept_kv.push(self.members[m].kv);
+            if self.ensure_kv(m, widths[m]) {
+                kept.push(m);
+            } else {
+                self.kept_kv.pop();
+            }
+        }
+        if kept.is_empty() {
+            self.pending = pending;
+            self.widths = widths;
+            self.group = group;
+            self.kept = kept;
+            return false;
+        }
+        // Draft phases serialized on the shared leader, then ONE fused
+        // pass — the OracleFleet round shape on this shard's pipeline.
+        let mut preps = std::mem::take(&mut self.preps);
+        preps.clear();
+        for &m in &kept {
+            let ready = self.members[m].dec.finish_time();
+            let prep = self.members[m].dec.prep_round();
+            self.sim.trace_key(TraceKey::new(
+                self.members[m].dec.cfg.seq_id as u32,
+                self.members[m].dec.round_index(),
+                (self.sim.stats.sync_rounds + 1) as u32,
+            ));
+            let draft_done = if prep.draft_ns == 0 {
+                ready
+            } else {
+                self.sim.local_work(ready, prep.draft_ns)
+            };
+            preps.push((m, prep, draft_done));
+        }
+        let start = preps.iter().map(|p| p.2).max().unwrap_or(0);
+        let mut gwidths = std::mem::take(&mut self.gwidths);
+        gwidths.clear();
+        gwidths.extend(preps.iter().map(|(_, p, _)| p.gamma + 1));
+        let timing = self.sim.group_pass(
+            start,
+            &gwidths,
+            &self.per_stage,
+            self.cfg.oracle.d_model * 4,
+            self.cfg.oracle.vocab * 4,
+        );
+        self.row.group_rounds += 1;
+        self.row.member_rounds += preps.len() as u64;
+        let fuse_width = gwidths.len();
+        let mut round_buf = std::mem::take(&mut self.round_buf);
+        for (m, prep, _) in preps.drain(..) {
+            self.members[m].dec.finish_round_into(&mut self.sim, prep, timing, &mut round_buf);
+            if self.members[m].first_commit == 0 {
+                self.members[m].first_commit = round_buf.finish;
+            }
+            self.stats.record(round_buf.record(fuse_width));
+        }
+        self.round_buf = round_buf;
+        self.pending = pending;
+        self.widths = widths;
+        self.group = group;
+        self.kept = kept;
+        self.preps = preps;
+        self.gwidths = gwidths;
+        true
+    }
+
+    /// Move finished members out (capacity released at each member's
+    /// finish time, in ascending finish order so admissions unblock
+    /// deterministically).
+    pub fn take_retired(&mut self, out: &mut Vec<Retired>) {
+        loop {
+            let mut pick: Option<(Nanos, u64, usize)> = None;
+            for (i, m) in self.members.iter().enumerate() {
+                if m.done() {
+                    let key = (m.dec.finish_time(), m.id, i);
+                    if pick.map_or(true, |p| (p.0, p.1, p.2) > key) {
+                        pick = Some(key);
+                    }
+                }
+            }
+            let Some((finish, _, i)) = pick else { break };
+            let m = self.members.swap_remove(i);
+            match self.pool.as_mut() {
+                Some(pool) => pool.release(m.kv),
+                None => self.slots_free += 1,
+            }
+            self.cap_free_at = self.cap_free_at.max(finish);
+            self.row.retired += 1;
+            self.row.tokens += (m.dec.committed.len() - m.prompt_len) as u64;
+            self.row.finish_ns = self.row.finish_ns.max(finish);
+            out.push(Retired {
+                id: m.id,
+                arrival_ns: m.arrival_ns,
+                first_commit: m.first_commit,
+                finish,
+                generated: m.dec.committed[m.prompt_len..].to_vec(),
+            });
+        }
+    }
+
+    /// Pre-reserve every member's round buffers (alloc-budget warmup).
+    pub fn warm_capacity(&mut self, extra_tokens_per_seq: usize) {
+        for m in self.members.iter_mut() {
+            m.dec.warm_capacity(extra_tokens_per_seq);
+        }
+        self.round_buf.committed.reserve(64);
+    }
+
+    /// Snapshot of this shard's counters (pool + sim stats folded in).
+    pub fn row(&self) -> ShardRow {
+        let mut row = self.row;
+        if let Some(pool) = self.pool.as_ref() {
+            row.pages_total = pool.total_pages();
+            row.pages_hwm = pool.stats.hwm_pages;
+        }
+        row.sync_rounds = self.sim.stats.sync_rounds;
+        row.comm_ns = self.sim.stats.comm_ns;
+        row
+    }
+
+    /// Acceptance/overlap stats across every member round so far.
+    pub fn accept_stats(&self) -> &AcceptanceStats {
+        &self.stats
+    }
+}
+
+/// Aggregate result of a tier run.
+#[derive(Debug, Clone)]
+pub struct TierReport {
+    pub requests: u64,
+    pub tokens: u64,
+    /// Makespan: last retirement (ns since the first arrival epoch).
+    pub finish_ns: Nanos,
+    pub ttft: Histogram,
+    pub latency: Histogram,
+    pub accept: AcceptanceStats,
+    pub shards: Vec<ShardRow>,
+}
+
+impl TierReport {
+    /// Sustained generated-token throughput over the makespan.
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.finish_ns == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.finish_ns as f64 / 1e9)
+    }
+}
+
+/// The serving tier: placement over M shards + per-shard round loops,
+/// advanced in global arrival order.
+pub struct ShardTier {
+    pub cfg: TierConfig,
+    shards: Vec<Shard>,
+    router: Router,
+    ttft: Histogram,
+    latency: Histogram,
+    /// Generated tokens per request id — the differential tests compare
+    /// these across placements, page sizes, and evict/readmit cycles.
+    generated: BTreeMap<u64, Vec<i32>>,
+    retired: Vec<Retired>,
+    finish_ns: Nanos,
+    requests: u64,
+}
+
+impl ShardTier {
+    pub fn new(cfg: TierConfig) -> Result<ShardTier> {
+        cfg.validate()?;
+        let mut shards = Vec::with_capacity(cfg.shards);
+        for i in 0..cfg.shards {
+            shards.push(Shard::new(&cfg, i)?);
+        }
+        let router = Router::new(cfg.shards, RoutePolicy::LeastLoaded);
+        Ok(ShardTier {
+            cfg,
+            shards,
+            router,
+            ttft: Histogram::latency(),
+            latency: Histogram::latency(),
+            generated: BTreeMap::new(),
+            retired: Vec::new(),
+            finish_ns: 0,
+            requests: 0,
+        })
+    }
+
+    /// Serve `requests` (must be in arrival order) to completion.
+    pub fn run(&mut self, requests: &[Request]) -> Result<TierReport> {
+        for w in requests.windows(2) {
+            if w[1].arrival_ns < w[0].arrival_ns {
+                bail!("requests must be sorted by arrival time");
+            }
+        }
+        for req in requests {
+            let t = req.arrival_ns;
+            for s in 0..self.shards.len() {
+                self.advance(s, t);
+            }
+            let weight = (req.prompt.len() + req.max_new_tokens) as u64;
+            let shard = match self.cfg.placement {
+                Placement::Hash => (req.id % self.cfg.shards as u64) as usize,
+                Placement::LeastLoaded => self.router.place(req.id, weight),
+            };
+            self.shards[shard].enqueue(req.clone());
+            self.requests += 1;
+        }
+        // Drain: shards are independent after placement, so one full
+        // pass per shard completes everything it owns.
+        for s in 0..self.shards.len() {
+            self.advance(s, Nanos::MAX);
+            debug_assert!(!self.shards[s].draining(), "shard {s} failed to drain");
+        }
+        let mut accept = AcceptanceStats::default();
+        let mut tokens = 0u64;
+        let mut rows = Vec::with_capacity(self.shards.len());
+        for sh in &self.shards {
+            accept.merge(sh.accept_stats());
+            let row = sh.row();
+            tokens += row.tokens;
+            rows.push(row);
+        }
+        Ok(TierReport {
+            requests: self.requests,
+            tokens,
+            finish_ns: self.finish_ns,
+            ttft: self.ttft.clone(),
+            latency: self.latency.clone(),
+            accept,
+            shards: rows,
+        })
+    }
+
+    /// Generated tokens per request id, recorded at retirement.
+    pub fn generated(&self) -> &BTreeMap<u64, Vec<i32>> {
+        &self.generated
+    }
+
+    /// Process shard `s` up to time `t`: admissions/readmits, then
+    /// rounds whose earliest-ready member is due, retiring after each.
+    fn advance(&mut self, s: usize, t: Nanos) {
+        loop {
+            self.shards[s].pump(t);
+            let Some(next) = self.shards[s].next_ready() else { break };
+            if next > t {
+                break;
+            }
+            if !self.shards[s].serve_round() {
+                break;
+            }
+            self.retire(s);
+        }
+    }
+
+    fn retire(&mut self, s: usize) {
+        let mut retired = std::mem::take(&mut self.retired);
+        self.shards[s].take_retired(&mut retired);
+        for r in retired.drain(..) {
+            self.ttft.record(r.first_commit.saturating_sub(r.arrival_ns));
+            self.latency.record(r.finish.saturating_sub(r.arrival_ns));
+            self.finish_ns = self.finish_ns.max(r.finish);
+            if self.cfg.placement == Placement::LeastLoaded {
+                self.router.finish(r.id);
+            }
+            self.generated.insert(r.id, r.generated);
+        }
+        self.retired = retired;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{dataset, WorkloadGen};
+
+    fn small_oracle(seed: u64) -> OracleConfig {
+        OracleConfig { seed, nodes: 3, link_ms: 2.0, vocab: 32, ..Default::default() }
+    }
+
+    fn tier_cfg(seed: u64) -> TierConfig {
+        let mut cfg = TierConfig::new(small_oracle(seed));
+        cfg.slots = 4;
+        cfg.slot_tokens = 96;
+        cfg.group_cap = 4;
+        cfg.token_budget = 40;
+        cfg
+    }
+
+    fn requests(n: usize, rate: f64, seed: u64) -> Vec<Request> {
+        let profile = dataset("humaneval").expect("profile");
+        let mut gen = WorkloadGen::new(profile, 32, seed);
+        let mut reqs = gen.open_loop(n, rate, 2.0, 4);
+        for r in reqs.iter_mut() {
+            r.max_new_tokens = r.max_new_tokens.min(24);
+            r.prompt.truncate(12);
+        }
+        reqs
+    }
+
+    fn run_tier(mut cfg: TierConfig, reqs: &[Request]) -> (TierReport, BTreeMap<u64, Vec<i32>>) {
+        cfg.oracle.seq_id = 0;
+        let mut tier = ShardTier::new(cfg).expect("tier");
+        let report = tier.run(reqs).expect("run");
+        (report, tier.generated().clone())
+    }
+
+    #[test]
+    fn tier_serves_every_request_exactly_once() {
+        let reqs = requests(12, 400.0, 7);
+        let (report, gen) = run_tier(tier_cfg(7), &reqs);
+        assert_eq!(report.requests, 12);
+        assert_eq!(gen.len(), 12);
+        assert_eq!(report.ttft.count(), 12);
+        assert_eq!(report.latency.count(), 12);
+        assert!(report.tokens > 0);
+        assert!(report.finish_ns > 0);
+        for r in &reqs {
+            let toks = gen.get(&r.id).expect("every id served");
+            assert!(!toks.is_empty());
+        }
+    }
+
+    #[test]
+    fn streams_are_placement_independent() {
+        // Every draw is keyed by (seed, request id, position): hash
+        // partitioning, least-loaded sharding, and a single coordinator
+        // must commit byte-identical streams per request.
+        let reqs = requests(10, 600.0, 11);
+        let mut single = tier_cfg(11);
+        single.shards = 1;
+        let (_, g1) = run_tier(single, &reqs);
+        let mut hash = tier_cfg(11);
+        hash.shards = 3;
+        hash.placement = Placement::Hash;
+        let (_, g2) = run_tier(hash, &reqs);
+        let mut ll = tier_cfg(11);
+        ll.shards = 3;
+        ll.placement = Placement::LeastLoaded;
+        let (_, g3) = run_tier(ll, &reqs);
+        assert_eq!(g1, g2, "hash partition must not change streams");
+        assert_eq!(g1, g3, "least-loaded sharding must not change streams");
+    }
+
+    #[test]
+    fn streams_are_page_size_invariant_under_preemption_pressure() {
+        // A pool tight enough to preempt constantly must still commit
+        // identical streams across page sizes (timing changes, tokens
+        // never do).
+        let reqs = requests(10, 2000.0, 13);
+        let mut baseline = tier_cfg(13);
+        baseline.paged = false;
+        let (_, gs) = run_tier(baseline, &reqs);
+        let mut evictions_seen = 0u64;
+        for page in [1usize, 16, 64] {
+            let mut cfg = tier_cfg(13);
+            cfg.slots = 2; // tight: force faults + evictions
+            cfg.page_tokens = page;
+            let (report, gp) = run_tier(cfg, &reqs);
+            evictions_seen += report.shards.iter().map(|r| r.preempted).sum::<u64>();
+            assert_eq!(gs, gp, "page size {page} changed committed streams");
+        }
+        assert!(evictions_seen > 0, "pressure config must actually preempt");
+    }
+
+    #[test]
+    fn paged_admission_beats_slot_admission_on_concurrency() {
+        // Same KV bytes: working-set admission must reach a higher peak
+        // of concurrently admitted members than worst-case slots.
+        let reqs = requests(16, 4000.0, 17);
+        let mut slot = tier_cfg(17);
+        slot.paged = false;
+        let (rs, _) = run_tier(slot, &reqs);
+        let mut paged = tier_cfg(17);
+        paged.paged = true;
+        let (rp, _) = run_tier(paged, &reqs);
+        let slot_peak: usize = rs.shards.iter().map(|r| r.peak_members).max().unwrap_or(0);
+        let paged_peak: usize = rp.shards.iter().map(|r| r.peak_members).max().unwrap_or(0);
+        assert!(
+            paged_peak > slot_peak,
+            "paged peak {paged_peak} must exceed slot peak {slot_peak}"
+        );
+        assert!(slot_peak <= 4, "slot mode cannot exceed its slot count");
+    }
+
+    #[test]
+    fn tier_validates_its_knobs() {
+        let mut cfg = tier_cfg(1);
+        cfg.shards = 0;
+        assert!(ShardTier::new(cfg).is_err());
+        let mut cfg = tier_cfg(1);
+        cfg.page_tokens = 0;
+        assert!(ShardTier::new(cfg).is_err());
+        let mut cfg = tier_cfg(1);
+        cfg.page_tokens = cfg.slot_tokens + 1;
+        assert!(ShardTier::new(cfg).is_err());
+    }
+}

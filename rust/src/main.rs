@@ -18,7 +18,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use dsd::config::DeployConfig;
-use dsd::coordinator::{Coordinator, OracleConfig, OracleFleet};
+use dsd::coordinator::{Coordinator, OracleConfig, OracleFleet, ShardTier, TierConfig};
 use dsd::metrics::RunReport;
 use dsd::spec::Policy;
 use dsd::telemetry::{self, FleetMetrics};
@@ -34,7 +34,8 @@ const VALUED: &[&str] = &[
     "draft", "draft_variant", "draft_shape", "max_batch", "fuse", "max_fuse", "fuse_tokens",
     "dataset", "requests", "seed", "policy", "gamma", "temp", "tau", "lam1", "lam2", "lam3",
     "max_new_tokens", "overlap", "controller", "out", "sweep_nodes", "trace", "json",
-    "metrics", "straggler_factor", "calibrate",
+    "metrics", "straggler_factor", "calibrate", "shards", "placement", "kv_page_tokens",
+    "arrival_rps",
 ];
 
 /// Span ring capacity for `--trace` (~64 B/event: a few MB, tens of
@@ -99,6 +100,14 @@ Observability (serve):
                          controller's cost model, on|off [off]
   --straggler_factor F   flag links whose hop estimate exceeds the
                          fleet median by Fx [3.0]
+
+Serving tier (engine-free, with --oracle):
+  --shards M             coordinator shards, each a full pipeline
+                         replica [1]
+  --placement P          least-loaded | hash (static id partition) [least-loaded]
+  --kv_page_tokens T     tokens per KV page for paged admission [16]
+  --arrival_rps R        open-loop arrival rate, req/s; 0 = closed
+                         loop (all requests at t=0) [0]
 ";
 
 fn build_config(args: &cli::Args) -> Result<DeployConfig> {
@@ -129,6 +138,15 @@ fn serve(args: &cli::Args) -> Result<()> {
     let json_dir = args.get("json").map(std::path::PathBuf::from);
     let metrics_path = args.get("metrics").map(std::path::PathBuf::from);
     if args.flag("oracle") {
+        if cfg.shards > 1 || cfg.arrival_rps > 0.0 {
+            if trace_path.is_some() || metrics_path.is_some() {
+                eprintln!(
+                    "note: --trace/--metrics apply to single-shard closed-loop serves; \
+                     the sharded tier reports per-shard rows instead"
+                );
+            }
+            return serve_tier(&cfg, json_dir.as_deref());
+        }
         return serve_oracle(
             &cfg,
             trace_path.as_deref(),
@@ -223,6 +241,11 @@ fn serve_oracle(
     for s in &fleet.seqs {
         report.request_latency.record(s.finish_time());
     }
+    for s in 0..batch {
+        // Closed loop: every sequence arrives at t=0, so TTFT is the
+        // absolute time of its first committed round.
+        report.ttft.record(fleet.first_commit(s));
+    }
     let events = fleet.sim.take_tracer().map(|t| t.to_vec()).unwrap_or_default();
     let fm = fleet.sim.take_metrics();
     if let Some(m) = fm.as_ref() {
@@ -231,6 +254,94 @@ fn serve_oracle(
     print_serve_report(cfg, &report);
     write_metrics_snapshot(cfg, fm.as_ref(), metrics_path)?;
     write_outputs(cfg, &report, &events, trace_path, json_dir)
+}
+
+/// Sharded serving tier (engine-free): M coordinator shards behind the
+/// placement router, paged-KV admission, open-loop arrivals. This is
+/// the `--shards M` / `--arrival_rps R` path; its tail-latency wins are
+/// pinned by `benches/ablation_shard.rs`.
+fn serve_tier(cfg: &DeployConfig, json_dir: Option<&Path>) -> Result<()> {
+    let group_cap = if cfg.fuse { cfg.max_fuse.max(1) } else { 1 };
+    eprintln!(
+        "serving {} requests on {} shard(s) ({} placement, {} KV, N={} nodes/shard, \
+         t1={}ms, arrival {} req/s)...",
+        cfg.requests,
+        cfg.shards,
+        cfg.placement.name(),
+        "paged",
+        cfg.n_nodes,
+        cfg.link_ms,
+        cfg.arrival_rps,
+    );
+    let ocfg = OracleConfig {
+        gamma: cfg.decode.gamma,
+        overlap: cfg.decode.overlap,
+        controller: cfg.decode.controller,
+        seed: cfg.seed,
+        nodes: cfg.n_nodes,
+        link_ms: cfg.link_ms,
+        link_ms_hops: cfg.link_ms_hops.clone(),
+        calibrate: cfg.calibrate,
+        fuse: group_cap,
+        ..Default::default()
+    };
+    let mut tier_cfg = TierConfig::new(ocfg);
+    tier_cfg.shards = cfg.shards;
+    tier_cfg.placement = cfg.placement;
+    tier_cfg.page_tokens = cfg.kv_page_tokens;
+    tier_cfg.slots = cfg.max_batch;
+    tier_cfg.slot_tokens = cfg.slot_tokens();
+    tier_cfg.max_members = cfg.max_batch * 4;
+    tier_cfg.group_cap = group_cap;
+    tier_cfg.token_budget = cfg.fuse_tokens;
+    let profile = dataset(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{}'", cfg.dataset))?;
+    let mut gen = WorkloadGen::new(profile, tier_cfg.oracle.vocab, cfg.seed);
+    let requests = if cfg.arrival_rps > 0.0 {
+        gen.open_loop(cfg.requests, cfg.arrival_rps, 4.0, 4)
+    } else {
+        gen.batch(cfg.requests)
+    };
+    let mut tier = ShardTier::new(tier_cfg)?;
+    let tr = tier.run(&requests)?;
+    let mut report = RunReport::new(format!("tier/{}x N{}", cfg.shards, cfg.n_nodes));
+    report.requests = tr.requests;
+    report.tokens = tr.tokens;
+    report.elapsed_ns = tr.finish_ns;
+    report.comm_ns = tr.shards.iter().map(|r| r.comm_ns).sum();
+    report.sync_rounds = tr.shards.iter().map(|r| r.sync_rounds).sum();
+    report.accept = tr.accept.clone();
+    report.request_latency = tr.latency.clone();
+    report.ttft = tr.ttft.clone();
+    print_serve_report(cfg, &report);
+    let mut t = Table::new(
+        format!(
+            "per-shard rows | {} placement, page {} tok",
+            cfg.placement.name(),
+            cfg.kv_page_tokens
+        ),
+        &[
+            "shard", "placed", "admitted", "preempt", "readmit", "faults", "pages hwm/total",
+            "peak B", "tokens", "rounds", "finish ms",
+        ],
+    );
+    for (i, row) in tr.shards.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            row.placed.to_string(),
+            row.admitted.to_string(),
+            row.preempted.to_string(),
+            row.readmits.to_string(),
+            row.faults.to_string(),
+            format!("{}/{}", row.pages_hwm, row.pages_total),
+            row.peak_members.to_string(),
+            row.tokens.to_string(),
+            row.group_rounds.to_string(),
+            fnum(row.finish_ns as f64 / 1e6, 1),
+        ]);
+    }
+    t.print();
+    write_outputs(cfg, &report, &[], None, json_dir)
 }
 
 /// `--metrics FILE`: Prometheus text-exposition snapshot of the fleet
@@ -258,6 +369,13 @@ fn print_serve_report(cfg: &DeployConfig, report: &RunReport) {
         report.comm_fraction() * 100.0,
         report.accept.mean_accepted(),
     );
+    if report.ttft.count() > 0 {
+        println!(
+            "  ttft p50 {:.1}ms  p99 {:.1}ms  (arrival -> first committed round)",
+            report.ttft.quantile(0.5) as f64 / 1e6,
+            report.ttft.quantile(0.99) as f64 / 1e6,
+        );
+    }
     if cfg.decode.policy.is_speculative() && cfg.decode.overlap {
         println!(
             "  overlap: reuse {:.1}%  hidden {:.1}%  recovered {:.2}ms  wasted/rnd {:.2}",
@@ -370,6 +488,8 @@ fn write_outputs(
             ("ms_per_token", report.ms_per_token().into()),
             ("p50_ms", (report.request_latency.quantile(0.5) as f64 / 1e6).into()),
             ("p99_ms", (report.request_latency.quantile(0.99) as f64 / 1e6).into()),
+            ("ttft_p50_ms", (report.ttft.quantile(0.5) as f64 / 1e6).into()),
+            ("ttft_p99_ms", (report.ttft.quantile(0.99) as f64 / 1e6).into()),
             ("comm_fraction", report.comm_fraction().into()),
             ("acceptance_rate", report.accept.acceptance_rate().into()),
             ("mean_accepted", report.accept.mean_accepted().into()),

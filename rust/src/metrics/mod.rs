@@ -128,6 +128,11 @@ pub struct RunReport {
     pub comm_bytes: u64,
     pub accept: AcceptanceStats,
     pub request_latency: Histogram,
+    /// Time-to-first-token per request: arrival → first committed
+    /// decode round (queueing + prefill + one round). The serving
+    /// tier's tail-latency claims are made on this histogram's p99,
+    /// not on per-token latency, which admission stalls never touch.
+    pub ttft: Histogram,
     /// Cost-model drift per speculative round: `|predicted − actual|`
     /// round time, ns (see [`crate::trace::drift`]). Exactly zero on
     /// the deterministic engine-free solo path; elsewhere the
@@ -153,6 +158,7 @@ impl RunReport {
         RunReport {
             label: label.into(),
             request_latency: Histogram::latency(),
+            ttft: Histogram::latency(),
             ..Default::default()
         }
     }

@@ -1,0 +1,476 @@
+//! Paged KV pool: working-set admission instead of worst-case slots.
+//!
+//! The slot pool in [`crate::model::kv`] reserves a full `max_seq`-deep
+//! cache per admitted sequence, so admission capacity is bounded by the
+//! *worst-case* sequence length even though most sequences spend most
+//! of their life far shorter (heavy-tailed output lengths make the gap
+//! large). This module is the vllm-style alternative: KV capacity is a
+//! pool of fixed-size token **pages**; each sequence holds a page table
+//! that grows one page at a time as its committed prefix crosses a page
+//! boundary. Admission is bounded by the pages a sequence *currently*
+//! needs, so the same token capacity admits more concurrent sequences —
+//! which is exactly what the fused-group sync amortization (paper
+//! Eq. 5) wants: wider groups per pipeline pass.
+//!
+//! When the pool runs dry mid-growth (a **page fault**), the serving
+//! tier evicts the least-recently-scheduled resident sequence that is
+//! not in the current group: its pages return to the free list but its
+//! host-side state (committed tokens, controller, pre-draft pool) stays
+//! intact. Readmission re-allocates pages for the committed prefix and
+//! charges one recompute pass replaying it — because every draft /
+//! accept / sample draw is position-keyed ([`crate::util::rng`]) and
+//! the oracle rows are pure functions of the committed prefix, the
+//! recomputed KV is bit-identical to what was evicted, so committed
+//! streams are byte-identical across page sizes and across
+//! evict/readmit cycles (pinned by `tests/paged_kv.rs`).
+//!
+//! Hot-path contract: a steady-state round with no fault — including
+//! growth that lands inside an already-held or freshly popped page —
+//! performs **zero** heap allocations ([`PageTable::pages`] capacity is
+//! reserved at admission for the sequence's full horizon, and the free
+//! list only pops). Admission, eviction, and readmission may allocate;
+//! they are documented budget exceptions like prefill
+//! (`tests/alloc_budget.rs`).
+
+/// Outcome of [`PagedKvPool::grow`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grow {
+    /// The new frontier fits in pages already held.
+    Held,
+    /// One or more pages were allocated from the free list.
+    Allocated(usize),
+    /// The free list cannot cover the growth; nothing changed. The
+    /// caller decides whom to evict (the pool only ranks victims).
+    Fault,
+}
+
+/// Per-sequence page table: the ordered pages backing one sequence's
+/// committed prefix (plus draft window), and the LRU bookkeeping the
+/// eviction policy ranks by.
+#[derive(Debug)]
+struct PageTable {
+    /// External sequence id (diagnostics only; handles are the key).
+    seq: u64,
+    /// Pages held, in prefix order. Capacity is reserved at admission
+    /// for the declared horizon so steady growth never reallocates.
+    pages: Vec<u32>,
+    /// Token frontier this table currently covers.
+    len_tokens: usize,
+    /// Logical LRU stamp: bumped by [`PagedKvPool::touch`] each time
+    /// the sequence is scheduled into a group.
+    last_touch: u64,
+    /// False while evicted (pages returned to the pool, host state
+    /// elsewhere intact) until readmitted.
+    resident: bool,
+}
+
+/// Counters for the serving report and the shard telemetry rows.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PagedStats {
+    /// Sequences ever admitted (first admission, not readmits).
+    pub admitted: u64,
+    /// Pages allocated on growth (excludes admission/readmit refills).
+    pub grown_pages: u64,
+    /// Growth attempts the free list could not cover.
+    pub faults: u64,
+    /// Evictions performed (pages returned wholesale).
+    pub evictions: u64,
+    /// Successful readmissions after eviction.
+    pub readmits: u64,
+    /// High-water mark of pages in use.
+    pub hwm_pages: usize,
+}
+
+/// Fixed-capacity pool of KV pages with per-sequence page tables.
+///
+/// Purely host-side accounting (the engine-free tier charges the
+/// recompute cost through [`crate::cluster::PipelineSim`]); the
+/// engine-backed path keeps the slot pool until paged attention lands
+/// on the artifact side.
+#[derive(Debug)]
+pub struct PagedKvPool {
+    page_tokens: usize,
+    total_pages: usize,
+    /// LIFO free list of page ids — pop/push only, never grows past
+    /// its initial capacity.
+    free: Vec<u32>,
+    /// Handle-indexed tables (`None` = slot free for reuse). Dense
+    /// handles keep victim scans deterministic and hash-free.
+    tables: Vec<Option<PageTable>>,
+    free_tables: Vec<usize>,
+    /// Logical clock feeding `last_touch`.
+    clock: u64,
+    pub stats: PagedStats,
+}
+
+impl PagedKvPool {
+    /// Pool with `total_pages` pages of `page_tokens` tokens each.
+    pub fn new(total_pages: usize, page_tokens: usize) -> PagedKvPool {
+        assert!(page_tokens >= 1, "page_tokens must be >= 1");
+        assert!(total_pages >= 1, "total_pages must be >= 1");
+        // LIFO initialized high-to-low so the first pop is page 0.
+        let free: Vec<u32> = (0..total_pages as u32).rev().collect();
+        PagedKvPool {
+            page_tokens,
+            total_pages,
+            free,
+            tables: Vec::new(),
+            free_tables: Vec::new(),
+            clock: 0,
+            stats: PagedStats::default(),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn pages_in_use(&self) -> usize {
+        self.total_pages - self.free.len()
+    }
+
+    /// Pages needed to cover `tokens` committed tokens (at least one:
+    /// an admitted sequence always holds a page for its frontier).
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.page_tokens)
+    }
+
+    /// Would an admission for `tokens` tokens succeed right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.pages_for(tokens) <= self.free.len()
+    }
+
+    /// Admit a sequence: allocate pages covering `tokens` (its prompt)
+    /// and reserve table capacity for `horizon_tokens` so later
+    /// [`PagedKvPool::grow`] calls never reallocate the table. Returns
+    /// the handle, or `None` (state unchanged) if the free list cannot
+    /// cover the working set.
+    pub fn admit(&mut self, seq: u64, tokens: usize, horizon_tokens: usize) -> Option<usize> {
+        let need = self.pages_for(tokens);
+        if need > self.free.len() {
+            return None;
+        }
+        let cap = self.pages_for(horizon_tokens.max(tokens));
+        let mut pages = Vec::with_capacity(cap);
+        for _ in 0..need {
+            // free list verified above; defensive default keeps the
+            // panic ratchet at zero
+            pages.push(self.free.pop().unwrap_or_default());
+        }
+        self.clock += 1;
+        let table = PageTable {
+            seq,
+            pages,
+            len_tokens: tokens,
+            last_touch: self.clock,
+            resident: true,
+        };
+        let handle = match self.free_tables.pop() {
+            Some(h) => {
+                self.tables[h] = Some(table);
+                h
+            }
+            None => {
+                self.tables.push(Some(table));
+                self.tables.len() - 1
+            }
+        };
+        self.stats.admitted += 1;
+        self.note_hwm();
+        Some(handle)
+    }
+
+    /// Grow `handle`'s table to cover `new_len` tokens. Zero-alloc when
+    /// no fault occurs: page pushes land in capacity reserved at
+    /// admission and the free list only pops. On [`Grow::Fault`] the
+    /// table is unchanged — the caller evicts a victim and retries.
+    pub fn grow(&mut self, handle: usize, new_len: usize) -> Grow {
+        let page_tokens = self.page_tokens;
+        let free_len = self.free.len();
+        let Some(table) = self.table_mut(handle) else {
+            return Grow::Fault;
+        };
+        debug_assert!(table.resident, "grow on an evicted sequence");
+        let need = new_len.max(1).div_ceil(page_tokens);
+        let held = table.pages.len();
+        if need <= held {
+            table.len_tokens = table.len_tokens.max(new_len);
+            return Grow::Held;
+        }
+        let missing = need - held;
+        if missing > free_len {
+            self.stats.faults += 1;
+            return Grow::Fault;
+        }
+        for _ in 0..missing {
+            let page = self.free.pop().unwrap_or_default();
+            // re-borrow: split borrows of free/tables are not expressible
+            // through the helper, so index directly
+            if let Some(Some(t)) = self.tables.get_mut(handle) {
+                t.pages.push(page);
+            }
+        }
+        if let Some(Some(t)) = self.tables.get_mut(handle) {
+            t.len_tokens = t.len_tokens.max(new_len);
+        }
+        self.stats.grown_pages += missing as u64;
+        self.note_hwm();
+        Grow::Allocated(missing)
+    }
+
+    /// Bump the LRU stamp: call when the sequence is scheduled into a
+    /// group so eviction prefers sequences idle the longest.
+    pub fn touch(&mut self, handle: usize) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(t) = self.table_mut(handle) {
+            t.last_touch = clock;
+        }
+    }
+
+    /// Evict: return every page to the free list, keep the table (the
+    /// handle stays valid for readmission). Returns pages freed.
+    pub fn evict(&mut self, handle: usize) -> usize {
+        let Some(table) = self.tables.get_mut(handle).and_then(Option::as_mut) else {
+            return 0;
+        };
+        if !table.resident {
+            return 0;
+        }
+        table.resident = false;
+        let freed = table.pages.len();
+        // drain preserves the reserved capacity for readmission
+        while let Some(p) = table.pages.pop() {
+            self.free.push(p);
+        }
+        table.len_tokens = 0;
+        self.stats.evictions += 1;
+        freed
+    }
+
+    /// Readmit an evicted sequence: allocate pages covering its
+    /// committed prefix (`tokens`). The caller charges the recompute
+    /// pass through the sim. Returns false (state unchanged) if the
+    /// free list cannot cover it yet.
+    pub fn readmit(&mut self, handle: usize, tokens: usize) -> bool {
+        let need = self.pages_for(tokens);
+        if need > self.free.len() {
+            return false;
+        }
+        let mut popped = 0usize;
+        while popped < need {
+            let page = self.free.pop().unwrap_or_default();
+            let Some(Some(t)) = self.tables.get_mut(handle) else {
+                self.free.push(page);
+                return false;
+            };
+            t.pages.push(page);
+            popped += 1;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(t) = self.table_mut(handle) {
+            debug_assert!(!t.resident, "readmit of a resident sequence");
+            t.resident = true;
+            t.len_tokens = tokens;
+            t.last_touch = clock;
+        }
+        self.stats.readmits += 1;
+        self.note_hwm();
+        true
+    }
+
+    /// Release a finished sequence: free its pages and recycle the
+    /// handle.
+    pub fn release(&mut self, handle: usize) {
+        let Some(slot) = self.tables.get_mut(handle) else {
+            return;
+        };
+        let Some(mut table) = slot.take() else {
+            return;
+        };
+        while let Some(p) = table.pages.pop() {
+            self.free.push(p);
+        }
+        self.free_tables.push(handle);
+    }
+
+    /// Least-recently-touched *resident* sequence whose handle is not
+    /// in `exclude` (the current group must not evict itself). Dense
+    /// handle scan: deterministic victim order, no hash iteration.
+    pub fn lru_resident_except(&self, exclude: &[usize]) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (h, slot) in self.tables.iter().enumerate() {
+            let Some(t) = slot.as_ref() else { continue };
+            if !t.resident || exclude.contains(&h) {
+                continue;
+            }
+            let key = (t.last_touch, h);
+            if best.map_or(true, |(bt, bh)| key < (bt, bh)) {
+                best = Some(key);
+            }
+        }
+        best.map(|(_, h)| h)
+    }
+
+    pub fn resident(&self, handle: usize) -> bool {
+        self.table(handle).is_some_and(|t| t.resident)
+    }
+
+    /// Pages currently held by `handle`.
+    pub fn held_pages(&self, handle: usize) -> usize {
+        self.table(handle).map_or(0, |t| t.pages.len())
+    }
+
+    /// Token frontier covered by `handle`'s table.
+    pub fn covered_tokens(&self, handle: usize) -> usize {
+        self.table(handle).map_or(0, |t| t.len_tokens)
+    }
+
+    /// External sequence id recorded at admission.
+    pub fn seq_of(&self, handle: usize) -> Option<u64> {
+        self.table(handle).map(|t| t.seq)
+    }
+
+    fn table(&self, handle: usize) -> Option<&PageTable> {
+        self.tables.get(handle).and_then(Option::as_ref)
+    }
+
+    fn table_mut(&mut self, handle: usize) -> Option<&mut PageTable> {
+        self.tables.get_mut(handle).and_then(Option::as_mut)
+    }
+
+    fn note_hwm(&mut self) {
+        let used = self.pages_in_use();
+        if used > self.stats.hwm_pages {
+            self.stats.hwm_pages = used;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_is_working_set_not_worst_case() {
+        // 8 pages of 16 tokens = 128 tokens of capacity. Worst-case
+        // slots of 64 tokens would admit 2 sequences; working-set
+        // admission of 10-token prompts admits 8.
+        let mut p = PagedKvPool::new(8, 16);
+        let mut handles = Vec::new();
+        for s in 0..8u64 {
+            let h = p.admit(s, 10, 64).expect("working set fits");
+            handles.push(h);
+        }
+        assert_eq!(p.free_pages(), 0);
+        assert!(p.admit(99, 10, 64).is_none(), "pool exhausted");
+        for h in handles {
+            p.release(h);
+        }
+        assert_eq!(p.free_pages(), 8, "release returns every page");
+    }
+
+    #[test]
+    fn grow_allocates_only_on_page_boundaries() {
+        let mut p = PagedKvPool::new(4, 16);
+        let h = p.admit(0, 10, 64).unwrap();
+        assert_eq!(p.held_pages(h), 1);
+        assert_eq!(p.grow(h, 16), Grow::Held, "frontier still inside page 0");
+        assert_eq!(p.grow(h, 17), Grow::Allocated(1));
+        assert_eq!(p.grow(h, 30), Grow::Held);
+        assert_eq!(p.grow(h, 33), Grow::Allocated(1));
+        assert_eq!(p.held_pages(h), 3);
+        assert_eq!(p.covered_tokens(h), 33);
+    }
+
+    #[test]
+    fn fault_leaves_state_unchanged_until_eviction_frees_pages() {
+        let mut p = PagedKvPool::new(3, 8);
+        let a = p.admit(0, 8, 32).unwrap(); // 1 page
+        let b = p.admit(1, 16, 32).unwrap(); // 2 pages
+        assert_eq!(p.free_pages(), 0);
+        assert_eq!(p.grow(a, 9), Grow::Fault);
+        assert_eq!(p.held_pages(a), 1, "fault must not partially grow");
+        assert_eq!(p.stats.faults, 1);
+        // evict b (the LRU victim excluding a), then the growth fits
+        assert_eq!(p.lru_resident_except(&[a]), Some(b));
+        assert_eq!(p.evict(b), 2);
+        assert!(!p.resident(b));
+        assert_eq!(p.grow(a, 9), Grow::Allocated(1));
+        // readmit b once a finishes
+        p.release(a);
+        assert!(p.readmit(b, 16));
+        assert!(p.resident(b));
+        assert_eq!(p.covered_tokens(b), 16);
+        assert_eq!(p.stats.evictions, 1);
+        assert_eq!(p.stats.readmits, 1);
+    }
+
+    #[test]
+    fn lru_ranks_by_touch_order_with_handle_tiebreak() {
+        let mut p = PagedKvPool::new(8, 8);
+        let a = p.admit(0, 8, 8).unwrap();
+        let b = p.admit(1, 8, 8).unwrap();
+        let c = p.admit(2, 8, 8).unwrap();
+        // admission order is touch order: a is LRU
+        assert_eq!(p.lru_resident_except(&[]), Some(a));
+        p.touch(a);
+        assert_eq!(p.lru_resident_except(&[]), Some(b));
+        assert_eq!(p.lru_resident_except(&[b]), Some(c));
+        p.touch(b);
+        p.touch(c);
+        assert_eq!(p.lru_resident_except(&[]), Some(a));
+        // evicted sequences are never victims again
+        p.evict(a);
+        assert_eq!(p.lru_resident_except(&[]), Some(b));
+    }
+
+    #[test]
+    fn page_size_one_degenerates_to_per_token_accounting() {
+        let mut p = PagedKvPool::new(16, 1);
+        let h = p.admit(0, 3, 16).unwrap();
+        assert_eq!(p.held_pages(h), 3);
+        assert_eq!(p.grow(h, 4), Grow::Allocated(1));
+        assert_eq!(p.grow(h, 4), Grow::Held);
+        assert_eq!(p.pages_in_use(), 4);
+    }
+
+    #[test]
+    fn handles_recycle_after_release() {
+        let mut p = PagedKvPool::new(4, 8);
+        let a = p.admit(0, 8, 8).unwrap();
+        p.release(a);
+        let b = p.admit(1, 8, 8).unwrap();
+        assert_eq!(a, b, "released handle is reused");
+        assert_eq!(p.seq_of(b), Some(1));
+    }
+
+    #[test]
+    fn hwm_tracks_peak_pages() {
+        let mut p = PagedKvPool::new(6, 8);
+        let a = p.admit(0, 24, 24).unwrap(); // 3 pages
+        let b = p.admit(1, 16, 16).unwrap(); // 2 pages
+        assert_eq!(p.stats.hwm_pages, 5);
+        p.release(a);
+        p.release(b);
+        let _ = p.admit(2, 8, 8).unwrap();
+        assert_eq!(p.stats.hwm_pages, 5, "hwm is a peak, not a level");
+    }
+
+    #[test]
+    fn zero_token_admission_still_holds_a_frontier_page() {
+        let mut p = PagedKvPool::new(2, 16);
+        let h = p.admit(0, 0, 16).unwrap();
+        assert_eq!(p.held_pages(h), 1);
+        assert_eq!(p.pages_for(0), 1);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod executor;
 pub mod kv;
+pub mod kv_paged;
 pub mod shard;
 
 pub use executor::{
@@ -10,6 +11,7 @@ pub use executor::{
     TreeWindow, VerifyExecutor, VerifyKnobs, VerifyOutcome,
 };
 pub use kv::{KvCache, KvPool};
+pub use kv_paged::{Grow, PagedKvPool, PagedStats};
 pub use shard::{plan_shards, stage_cache_dims, ShardSpec};
 
 use std::rc::Rc;

@@ -94,6 +94,8 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival time (ns since workload start).
     pub arrival_ns: Nanos,
+    /// Originating tenant stream (0 for single-tenant workloads).
+    pub tenant: u32,
 }
 
 /// Zipf-distributed token sampler with a per-profile random permutation
@@ -140,7 +142,7 @@ impl WorkloadGen {
         let prompt = (0..plen).map(|_| self.sampler.sample(&mut self.rng)).collect();
         let id = self.next_id;
         self.next_id += 1;
-        Request { id, prompt, max_new_tokens: self.profile.gen_len, arrival_ns }
+        Request { id, prompt, max_new_tokens: self.profile.gen_len, arrival_ns, tenant: 0 }
     }
 
     /// A closed-loop batch: all requests available at t=0.
@@ -157,6 +159,47 @@ impl WorkloadGen {
                 self.request_at((t * 1e9) as Nanos)
             })
             .collect()
+    }
+
+    /// A bounded-Pareto length factor in [1/4, 4]: most requests stay
+    /// near the profile's nominal lengths, a heavy tail runs 4× longer.
+    /// Serving-tier tails (p99 TTFT under preemption) come from exactly
+    /// these outliers, which closed-loop means hide.
+    fn heavy_tail_factor(&mut self) -> f64 {
+        // Inverse-CDF of Pareto(α=1.5), scaled so the median factor is
+        // ~1.0, clamped to [1/4, 4].
+        let u = self.rng.f64().max(1e-9);
+        (0.63 / u.powf(1.0 / 1.5)).clamp(0.25, 4.0)
+    }
+
+    /// Open-loop serving workload: a two-state Markov-modulated Poisson
+    /// process (calm at `rate` req/s, bursts at `rate * burst`) with
+    /// heavy-tailed generation lengths, fanned across `tenants`
+    /// round-robin tenant streams. This is the arrival process the
+    /// sharded serving tier is benchmarked under: bursts saturate a
+    /// single coordinator's admission long before the mean rate does.
+    pub fn open_loop(&mut self, n: usize, rate: f64, burst: f64, tenants: u32) -> Vec<Request> {
+        let tenants = tenants.max(1);
+        let burst = burst.max(1.0);
+        let mut t = 0f64;
+        let mut bursting = false;
+        let mut reqs = Vec::with_capacity(n);
+        for i in 0..n {
+            // Flip state with p=1/8 per arrival: geometric dwell times,
+            // ~12% of arrivals land inside a burst episode.
+            if self.rng.below(8) == 0 {
+                bursting = !bursting;
+            }
+            let lambda = if bursting { rate * burst } else { rate };
+            t += self.rng.exponential(lambda);
+            let factor = self.heavy_tail_factor();
+            let mut req = self.request_at((t * 1e9) as Nanos);
+            req.max_new_tokens =
+                ((self.profile.gen_len as f64 * factor) as usize).max(1);
+            req.tenant = i as u32 % tenants;
+            reqs.push(req);
+        }
+        reqs
     }
 }
 
@@ -207,6 +250,45 @@ mod tests {
         let max = *counts.iter().max().unwrap();
         // heaviest token should dominate noticeably under zipf 1.5
         assert!(max > 20_000 / 8, "{max}");
+    }
+
+    #[test]
+    fn open_loop_is_bursty_heavy_tailed_and_multi_tenant() {
+        let mut g = WorkloadGen::new(dataset("humaneval").unwrap(), 512, 9);
+        let reqs = g.open_loop(400, 200.0, 4.0, 4);
+        assert_eq!(reqs.len(), 400);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ns >= w[0].arrival_ns);
+        }
+        // Tenants round-robin across all streams.
+        for t in 0..4u32 {
+            assert!(reqs.iter().any(|r| r.tenant == t));
+        }
+        // Heavy tail: some requests well past nominal, none past 4x,
+        // none below the floor.
+        let nominal = 96usize;
+        assert!(reqs.iter().any(|r| r.max_new_tokens > nominal * 2));
+        assert!(reqs.iter().all(|r| r.max_new_tokens <= nominal * 4));
+        assert!(reqs.iter().all(|r| r.max_new_tokens >= 1));
+        // Burstiness: the coefficient of variation of inter-arrival
+        // gaps must exceed a plain Poisson process's (CV ~ 1).
+        let gaps: Vec<f64> = reqs
+            .windows(2)
+            .map(|w| (w[1].arrival_ns - w[0].arrival_ns) as f64)
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!(cv > 1.1, "MMPP should be over-dispersed, cv={cv}");
+        // Determinism.
+        let mut g2 = WorkloadGen::new(dataset("humaneval").unwrap(), 512, 9);
+        let reqs2 = g2.open_loop(400, 200.0, 4.0, 4);
+        assert_eq!(reqs.len(), reqs2.len());
+        for (a, b) in reqs.iter().zip(&reqs2) {
+            let ka = (a.arrival_ns, a.max_new_tokens, a.tenant);
+            assert_eq!(ka, (b.arrival_ns, b.max_new_tokens, b.tenant));
+            assert_eq!(a.prompt, b.prompt);
+        }
     }
 
     #[test]

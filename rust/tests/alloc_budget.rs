@@ -20,8 +20,11 @@
 use std::sync::{Mutex, MutexGuard};
 
 use dsd::control::ControllerKind;
-use dsd::coordinator::{OracleChainDecoder, OracleConfig, OracleFleet, OracleRound};
+use dsd::coordinator::{
+    OracleChainDecoder, OracleConfig, OracleFleet, OracleRound, Shard, TierConfig,
+};
 use dsd::model::{VerifyKnobs, VerifyOutcome};
+use dsd::workload::Request;
 use dsd::spec::reference::host_verify_with;
 use dsd::trace::RingTracer;
 use dsd::util::alloc_counter;
@@ -143,6 +146,55 @@ fn steady_fused_group_round_is_allocation_free() {
         counts.allocs,
         counts.bytes
     );
+}
+
+#[test]
+fn steady_paged_shard_round_is_allocation_free() {
+    // The serving tier's round loop rides the same budget: a
+    // steady-state fused group round on a paged-KV shard — page growth
+    // included, as long as no page FAULTS — is heap-silent. The pool is
+    // sized generously here so growth always pops the pre-sized free
+    // list into page tables reserved at admission; faults, eviction,
+    // readmission, and admission remain documented exceptions
+    // (EXPERIMENTS.md §Serving tier).
+    let _serial = measure_lock();
+    let oracle = OracleConfig { seed: 37, ..Default::default() };
+    let mut cfg = TierConfig::new(oracle);
+    cfg.slots = 8;
+    cfg.slot_tokens = 1024; // ample: no member finishes or faults in-window
+    cfg.group_cap = 4;
+    cfg.token_budget = 64;
+    let mut shard = Shard::new(&cfg, 0).unwrap();
+    for id in 0..4u64 {
+        shard.enqueue(Request {
+            id,
+            prompt: PROMPT.to_vec(),
+            max_new_tokens: 1 << 20,
+            arrival_ns: 0,
+            tenant: 0,
+        });
+    }
+    shard.pump(0);
+    for _ in 0..WARMUP_ROUNDS {
+        assert!(shard.serve_round(), "warmup rounds must run");
+    }
+    shard.warm_capacity(16 * 1024);
+    let (_, counts) = alloc_counter::measure(|| {
+        for _ in 0..MEASURED_ROUNDS {
+            shard.serve_round();
+        }
+    });
+    assert_eq!(
+        counts.allocs,
+        0,
+        "{MEASURED_ROUNDS} steady paged shard rounds performed {} allocations ({} bytes)",
+        counts.allocs,
+        counts.bytes
+    );
+    let row = shard.row();
+    assert_eq!(row.faults, 0, "steady-state pin requires a fault-free window");
+    assert!(row.pages_hwm > 0, "paged mode must actually be holding pages");
+    assert_eq!(row.group_rounds, (WARMUP_ROUNDS + MEASURED_ROUNDS) as u64);
 }
 
 #[test]

@@ -130,7 +130,13 @@ fn empty_prompt_fails_with_clear_error() {
     let e = engine();
     let cfg = base_cfg();
     let mut coord = Coordinator::with_engine(e, cfg).unwrap();
-    let req = dsd::workload::Request { id: 0, prompt: vec![], max_new_tokens: 8, arrival_ns: 0 };
+    let req = dsd::workload::Request {
+        id: 0,
+        prompt: vec![],
+        max_new_tokens: 8,
+        arrival_ns: 0,
+        tenant: 0,
+    };
     let err = coord.run_workload(vec![req]).unwrap_err().to_string();
     assert!(err.contains("empty prompt"), "{err}");
 }

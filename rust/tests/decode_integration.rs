@@ -46,7 +46,8 @@ fn deploy(policy: Policy, temp: f32, n_nodes: usize) -> DeployConfig {
 
 fn run(engine: Rc<Engine>, cfg: DeployConfig, prompt: &[i32]) -> Vec<i32> {
     let mut coord = Coordinator::with_engine(engine, cfg).unwrap();
-    let req = Request { id: 0, prompt: prompt.to_vec(), max_new_tokens: 24, arrival_ns: 0 };
+    let req =
+        Request { id: 0, prompt: prompt.to_vec(), max_new_tokens: 24, arrival_ns: 0, tenant: 0 };
     let (_, results) = coord.run_workload(vec![req]).unwrap();
     results[0].tokens.clone()
 }
@@ -100,7 +101,8 @@ fn speculation_commits_at_least_one_token_per_round() {
     let mut cfg = deploy(Policy::Dsd, 1.0, 2);
     cfg.decode.max_new_tokens = 16;
     let mut coord = Coordinator::with_engine(e, cfg).unwrap();
-    let req = Request { id: 0, prompt: vec![1, 2, 3], max_new_tokens: 16, arrival_ns: 0 };
+    let req =
+        Request { id: 0, prompt: vec![1, 2, 3], max_new_tokens: 16, arrival_ns: 0, tenant: 0 };
     let (report, results) = coord.run_workload(vec![req]).unwrap();
     assert_eq!(results[0].tokens.len(), 16);
     // rounds <= tokens (each round commits >= 1)
@@ -121,7 +123,13 @@ fn dsd_accepts_more_than_strict_at_temperature() {
 
     let run_stats = |cfg: DeployConfig| {
         let mut coord = Coordinator::with_engine(e.clone(), cfg).unwrap();
-        let req = Request { id: 0, prompt: prompt.clone(), max_new_tokens: 48, arrival_ns: 0 };
+        let req = Request {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new_tokens: 48,
+            arrival_ns: 0,
+            tenant: 0,
+        };
         let (report, _) = coord.run_workload(vec![req]).unwrap();
         report.accept.mean_accepted()
     };
@@ -209,6 +217,7 @@ fn real_interleaved_with_predraft_matches_sim_at_temperature() {
             prompt: p.clone(),
             max_new_tokens: cfg.decode.max_new_tokens,
             arrival_ns: 0,
+            tenant: 0,
         })
         .collect();
     let (_, sim_results) = coord.run_workload(reqs).unwrap();
@@ -294,6 +303,7 @@ fn real_interleaved_adaptive_controllers_match_sim() {
                 prompt: p.clone(),
                 max_new_tokens: cfg.decode.max_new_tokens,
                 arrival_ns: 0,
+                tenant: 0,
             })
             .collect();
         let (_, sim_results) = coord.run_workload(reqs).unwrap();
@@ -351,7 +361,7 @@ fn autoregressive_comm_cost_matches_eq3() {
     cfg.link_gbps = 0.0; // infinite bandwidth: pure base latency
     cfg.decode.max_new_tokens = 8;
     let mut coord = Coordinator::with_engine(e, cfg).unwrap();
-    let req = Request { id: 0, prompt: vec![5, 6, 7], max_new_tokens: 8, arrival_ns: 0 };
+    let req = Request { id: 0, prompt: vec![5, 6, 7], max_new_tokens: 8, arrival_ns: 0, tenant: 0 };
     let (report, _) = coord.run_workload(vec![req]).unwrap();
     // prefill (yields token 1) + 7 decode passes, each (3 fwd + 1 ret)
     // hops at 10ms

@@ -1,0 +1,147 @@
+//! Paged-KV differential + property tests: eviction, readmission, and
+//! recompute must be invisible at the token level.
+//!
+//! The serving tier's paged pool frees a preempted sequence's KV pages
+//! but keeps its host state; readmission replays the committed prefix
+//! through the pipeline. Because every draft/accept/sample draw is
+//! keyed by (seed, request id, position) and the oracle rows are pure
+//! functions of the committed prefix, an evict → readmit → recompute
+//! cycle must yield byte-identical committed streams AND identical
+//! stream-level acceptance statistics vs a run that was never evicted —
+//! across page sizes {1, 16, 64} and at temp 0 (greedy) and temp > 0
+//! (stochastic). Only the *schedule* may differ: fused group widths and
+//! overlap nanoseconds measure timing, not tokens, and are excluded
+//! from the comparison by design.
+
+use std::collections::BTreeMap;
+
+use dsd::coordinator::{OracleConfig, ShardTier, TierConfig, TierReport};
+use dsd::spec::AcceptanceStats;
+use dsd::workload::{dataset, Request, WorkloadGen};
+
+fn oracle(seed: u64, temp: f32) -> OracleConfig {
+    // `temp` is the sampling temperature (0 = greedy argmax); the
+    // verify-threshold knobs keep their defaults.
+    OracleConfig { seed, nodes: 3, link_ms: 2.0, vocab: 32, temp, ..Default::default() }
+}
+
+fn tier_cfg(seed: u64, temp: f32) -> TierConfig {
+    let mut cfg = TierConfig::new(oracle(seed, temp));
+    cfg.slots = 4;
+    cfg.slot_tokens = 96;
+    cfg.group_cap = 4;
+    cfg.token_budget = 40;
+    cfg
+}
+
+/// A fast arrival burst that overcommits the pressured configs below.
+fn requests(n: usize, seed: u64) -> Vec<Request> {
+    let profile = dataset("humaneval").expect("profile");
+    let mut gen = WorkloadGen::new(profile, 32, seed);
+    let mut reqs = gen.open_loop(n, 2000.0, 2.0, 4);
+    for r in reqs.iter_mut() {
+        r.max_new_tokens = r.max_new_tokens.min(24);
+        r.prompt.truncate(12);
+    }
+    reqs
+}
+
+fn run(cfg: TierConfig, reqs: &[Request]) -> (TierReport, BTreeMap<u64, Vec<i32>>) {
+    let mut tier = ShardTier::new(cfg).expect("tier");
+    let report = tier.run(reqs).expect("run");
+    (report, tier.generated().clone())
+}
+
+/// The stream-pure projection of [`AcceptanceStats`].
+type TokenLevel = (u64, u64, u64, u64, u64, u64, Vec<u64>, Vec<u64>, Vec<u64>);
+
+/// Everything in [`AcceptanceStats`] that is a function of the
+/// committed token streams alone. Fuse widths and overlap/pre-draft
+/// nanoseconds are deliberately absent — they measure the schedule,
+/// which eviction is allowed (expected!) to change.
+fn token_level(s: &AcceptanceStats) -> TokenLevel {
+    (
+        s.rounds,
+        s.draft_tokens,
+        s.accepted_tokens,
+        s.committed_tokens,
+        s.key_tokens,
+        s.tree_nodes,
+        s.accept_hist.clone(),
+        s.depth_hist.clone(),
+        s.gamma_hist.clone(),
+    )
+}
+
+#[test]
+fn evict_readmit_recompute_is_invisible_at_token_level() {
+    for &temp in &[0.0f32, 0.8] {
+        let reqs = requests(10, 23);
+        // Never-evicted baseline: worst-case slot admission, ample slots.
+        let mut baseline = tier_cfg(23, temp);
+        baseline.paged = false;
+        let (base_report, base_streams) = run(baseline, &reqs);
+        let base_stats = token_level(&base_report.accept);
+
+        let mut evictions = 0u64;
+        let mut readmits = 0u64;
+        for &page in &[1usize, 16, 64] {
+            // Pressured: half the slot capacity as pages, so growth
+            // faults constantly and preemption actually happens.
+            let mut cfg = tier_cfg(23, temp);
+            cfg.slots = 2;
+            cfg.page_tokens = page;
+            let (report, streams) = run(cfg, &reqs);
+            evictions += report.shards.iter().map(|r| r.preempted).sum::<u64>();
+            readmits += report.shards.iter().map(|r| r.readmits).sum::<u64>();
+            assert_eq!(
+                base_streams, streams,
+                "temp {temp}, page size {page}: evict/readmit changed committed streams"
+            );
+            assert_eq!(
+                base_stats,
+                token_level(&report.accept),
+                "temp {temp}, page size {page}: evict/readmit changed acceptance statistics"
+            );
+            assert_eq!(base_report.tokens, report.tokens, "generated token totals must match");
+        }
+        assert!(evictions > 0, "temp {temp}: pressure config must actually preempt");
+        assert!(readmits > 0, "temp {temp}: preempted sequences must be readmitted");
+    }
+}
+
+#[test]
+fn greedy_and_stochastic_streams_differ() {
+    // Sanity check on the property test itself: temp is live on this
+    // path (otherwise the temp sweep above would test one regime twice).
+    let reqs = requests(6, 29);
+    let (_, greedy) = run(tier_cfg(29, 0.0), &reqs);
+    let (_, sampled) = run(tier_cfg(29, 0.8), &reqs);
+    assert_eq!(greedy.len(), sampled.len());
+    assert_ne!(greedy, sampled, "temperature should change sampled streams");
+}
+
+#[test]
+fn admission_is_bounded_by_working_set_pages() {
+    // With the same KV tokens, paged admission must admit strictly more
+    // concurrent sequences than worst-case slots, and never more than
+    // its page budget allows: peak resident working sets fit the pool.
+    let reqs = requests(16, 31);
+    let mut slot = tier_cfg(31, 1.0);
+    slot.paged = false;
+    let (rs, _) = run(slot, &reqs);
+    let paged = tier_cfg(31, 1.0);
+    let pages_total = paged.slots * paged.slot_tokens.div_ceil(paged.page_tokens);
+    let (rp, _) = run(paged, &reqs);
+    let slot_peak = rs.shards.iter().map(|r| r.peak_members).max().unwrap_or(0);
+    let paged_peak = rp.shards.iter().map(|r| r.peak_members).max().unwrap_or(0);
+    assert!(paged_peak > slot_peak, "paged peak {paged_peak} vs slot peak {slot_peak}");
+    for row in &rp.shards {
+        assert!(
+            row.pages_hwm <= pages_total,
+            "pages high-water {} exceeded the pool {}",
+            row.pages_hwm,
+            pages_total
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Bad fixture: a serving-tier shard whose round loop allocates its
+//! packing scratch per round and whose retirement scan iterates a
+//! HashMap (hash-order nondeterminism). Never compiled — lexed only.
+
+use std::collections::HashMap;
+
+fn widths_scratch(n: usize) -> Vec<usize> {
+    let mut w = Vec::with_capacity(n);
+    w.push(n);
+    w
+}
+
+pub fn serve_round(members: &mut Vec<usize>) {
+    let widths = widths_scratch(members.len());
+    members.extend(widths);
+}
+
+pub fn retire_scan(first_commit: &HashMap<u64, u64>) -> u64 {
+    let mut last = 0;
+    for (_, v) in first_commit.iter() {
+        last = *v;
+    }
+    last
+}

@@ -1,0 +1,18 @@
+//! Bad fixture: a paged-KV pool that allocates a fresh page list on the
+//! growth path (reachable from the round loop) and ranks eviction
+//! victims by HashMap iteration order. Never compiled — lexed only.
+
+use std::collections::HashMap;
+
+pub fn grow_into(table: &mut Vec<u32>, need: usize) {
+    let fresh: Vec<u32> = vec![0; need];
+    table.extend(fresh);
+}
+
+pub fn lru_victim(stamps: &HashMap<usize, u64>) -> usize {
+    let mut best = 0;
+    for (h, _) in stamps.iter() {
+        best = *h;
+    }
+    best
+}

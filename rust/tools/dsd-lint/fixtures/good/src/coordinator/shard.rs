@@ -1,0 +1,21 @@
+//! Good fixture: the shard round loop reuses its packing buffers
+//! (clear + push into retained capacity) and scans retirement in
+//! BTreeMap order — allocation-free walk, deterministic iteration.
+//! Never compiled — lexed only.
+
+use std::collections::BTreeMap;
+
+pub fn serve_round(widths: &mut Vec<usize>, members: usize) {
+    widths.clear();
+    for m in 0..members {
+        widths.push(m);
+    }
+}
+
+pub fn retire_scan(first_commit: &BTreeMap<u64, u64>) -> u64 {
+    let mut last = 0;
+    for (_, v) in first_commit.iter() {
+        last = *v;
+    }
+    last
+}

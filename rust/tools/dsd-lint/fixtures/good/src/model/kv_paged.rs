@@ -1,0 +1,23 @@
+//! Good fixture: page growth pops a pre-sized free list into a page
+//! table whose capacity was reserved at admission — nothing allocating
+//! is reachable from the round loop's growth path, and victim ranking
+//! walks dense handles in index order. Never compiled — lexed only.
+
+pub fn grow_into(table: &mut Vec<u32>, free: &mut Vec<u32>, need: usize) {
+    while table.len() < need {
+        match free.pop() {
+            Some(p) => table.push(p),
+            None => break,
+        }
+    }
+}
+
+pub fn lru_victim(stamps: &[u64]) -> usize {
+    let mut best = 0;
+    for (h, &s) in stamps.iter().enumerate() {
+        if s < stamps[best] {
+            best = h;
+        }
+    }
+    best
+}

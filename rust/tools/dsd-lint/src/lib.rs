@@ -45,6 +45,11 @@ const SIM_TIME_ALLOWLIST: &[&str] = &[
 /// in the registry would leak nondeterminism into committed streams.
 /// `kernels/` is the canonical implementation of every committed-stream
 /// distribution op (softmax/verify/argmax/top-k), so the same rules bind.
+/// `model/kv_paged.rs` is listed file-precise: its eviction/readmission
+/// ordering decides WHICH sequence recomputes when, so hash-order
+/// iteration there would leak nondeterminism into serving schedules
+/// (the serving tier `src/coordinator/shard.rs` rides the directory
+/// prefix above).
 const COMMITTED_PREFIXES: &[&str] = &[
     "src/spec/",
     "src/sampling/",
@@ -52,6 +57,7 @@ const COMMITTED_PREFIXES: &[&str] = &[
     "src/control/",
     "src/telemetry/",
     "src/kernels/",
+    "src/model/kv_paged.rs",
 ];
 
 /// Modules the hot-path roots may live in. `telemetry/` records a span

@@ -93,6 +93,34 @@ fn kernels_tree_is_linted_like_a_committed_hot_module() {
 }
 
 #[test]
+fn serving_tier_tree_is_linted_like_a_committed_hot_module() {
+    // The sharded serving tier joined both coverage sets: `serve_round`
+    // is a named hot root (coordinator/shard.rs rides the existing
+    // `src/coordinator/` prefixes) and `src/model/kv_paged.rs` is a
+    // file-precise committed-stream entry, so per-round allocation and
+    // hash-order iteration must be flagged in both files.
+    let r = run_root(&fixture("bad")).unwrap();
+    assert!(has(&r, "hot-path-alloc", "src/coordinator/shard.rs", 8), "{:?}", r.diags);
+    assert!(has(&r, "hash-iter", "src/coordinator/shard.rs", 20), "{:?}", r.diags);
+    assert!(has(&r, "hot-path-alloc", "src/model/kv_paged.rs", 8), "{:?}", r.diags);
+    assert!(has(&r, "hash-iter", "src/model/kv_paged.rs", 14), "{:?}", r.diags);
+    let d = r
+        .diags
+        .iter()
+        .find(|d| d.rule == "hot-path-alloc" && d.file == "src/coordinator/shard.rs")
+        .expect("shard hot-path-alloc diagnostic");
+    assert!(d.msg.contains("serve_round -> widths_scratch"), "{}", d.msg);
+    assert!(d.msg.contains("Vec::with_capacity"), "{}", d.msg);
+    let d = r
+        .diags
+        .iter()
+        .find(|d| d.rule == "hot-path-alloc" && d.file == "src/model/kv_paged.rs")
+        .expect("paged-kv hot-path-alloc diagnostic");
+    assert!(d.msg.contains("grow_into"), "{}", d.msg);
+    assert!(d.msg.contains("vec!"), "{}", d.msg);
+}
+
+#[test]
 fn good_tree_is_clean_and_all_waivers_are_used() {
     let r = run_root(&fixture("good")).unwrap();
     assert!(r.is_clean(), "{:?}", r.diags);
